@@ -1,0 +1,142 @@
+//! Heterogeneity sweep — how the CodedFedL advantage scales with the MEC
+//! network's compute/link spread and erasure probability (an ablation the
+//! paper motivates in §1 but does not plot).
+//!
+//! For each network regime we compute the *analytical* per-step times:
+//! the coded deadline `t*` vs the expected uncoded epoch `E[max_j T_j]`
+//! (Monte-Carlo), i.e. the per-iteration speedup mechanism isolated from
+//! learning dynamics.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneity_sweep
+//! ```
+
+use codedfedl::allocation::optimizer::plan_fixed_u;
+use codedfedl::config::ExperimentConfig;
+use codedfedl::mathx::rng::Rng;
+use codedfedl::mathx::stats::OnlineStats;
+use codedfedl::simnet::asym::{optimal_load_asym, AsymClientModel};
+use codedfedl::simnet::topology::build_population;
+use codedfedl::util::csv::CsvWriter;
+
+/// Asymmetric-uplink variant (footnote 1): coded deadline + uncoded
+/// E[max T] when the uplink is `ratio`x slower than the downlink.
+fn per_step_times_asym(cfg: &ExperimentConfig, ratio: f64) -> anyhow::Result<(f64, f64)> {
+    let mut rng = Rng::new(cfg.seed).fork(2);
+    let pop = build_population(cfg, &mut rng);
+    let asym: Vec<AsymClientModel> = pop
+        .clients
+        .iter()
+        .map(|c| AsymClientModel::from_symmetric(c, ratio))
+        .collect();
+    let cap = cfg.profile.l as f64;
+    let target = (cfg.global_batch() - cfg.u()) as f64;
+
+    // Binary search the deadline against the asym closed form (eq. 10
+    // generalized; monotonicity verified by the asym property tests).
+    let aggregate = |t: f64| -> f64 {
+        asym.iter().map(|m| optimal_load_asym(m, t, cap).1).sum()
+    };
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    while aggregate(hi) < target {
+        lo = hi;
+        hi *= 2.0;
+        anyhow::ensure!(hi < 1e12, "bracket failed");
+    }
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if aggregate(mid) < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let deadline = hi;
+
+    let mut sim = Rng::new(99);
+    let mut stats = OnlineStats::new();
+    for _ in 0..1000 {
+        let t_max = asym
+            .iter()
+            .map(|m| m.sample_total(cfg.profile.l, &mut sim))
+            .fold(0.0, f64::max);
+        stats.push(t_max);
+    }
+    Ok((stats.mean(), deadline))
+}
+
+fn per_step_times(cfg: &ExperimentConfig) -> anyhow::Result<(f64, f64)> {
+    let mut rng = Rng::new(cfg.seed).fork(2);
+    let pop = build_population(cfg, &mut rng);
+    let caps = vec![cfg.profile.l; cfg.n_clients];
+    let plan = plan_fixed_u(&pop.clients, &caps, cfg.global_batch(), cfg.u(), cfg.epsilon)?;
+
+    let mut sim = Rng::new(99);
+    let mut stats = OnlineStats::new();
+    for _ in 0..2000 {
+        let t_max = pop
+            .clients
+            .iter()
+            .map(|c| c.sample(cfg.profile.l, &mut sim).total())
+            .fold(0.0, f64::max);
+        stats.push(t_max);
+    }
+    Ok((stats.mean(), plan.deadline))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut w = CsvWriter::create(
+        "results/heterogeneity_sweep.csv",
+        &["axis", "value", "uncoded_step_s", "coded_step_s", "speedup"],
+    )?;
+
+    println!("per-step time: uncoded E[max_j T_j] vs coded deadline t* (small preset, 10% redundancy)\n");
+
+    println!("compute-heterogeneity ladder k2 (1.0 = homogeneous):");
+    for k2 in [0.95, 0.9, 0.8, 0.7, 0.6] {
+        let mut cfg = ExperimentConfig::preset("small")?;
+        cfg.net.k2 = k2;
+        let (tu, tc) = per_step_times(&cfg)?;
+        println!("  k2={k2:.2}: uncoded {tu:8.1}s  coded {tc:8.1}s  speedup x{:.2}", tu / tc);
+        w.row(&["k2".into(), k2.to_string(), tu.to_string(), tc.to_string(), (tu / tc).to_string()])?;
+    }
+
+    println!("\nlink-heterogeneity ladder k1:");
+    for k1 in [0.99, 0.95, 0.9, 0.85] {
+        let mut cfg = ExperimentConfig::preset("small")?;
+        cfg.net.k1 = k1;
+        let (tu, tc) = per_step_times(&cfg)?;
+        println!("  k1={k1:.2}: uncoded {tu:8.1}s  coded {tc:8.1}s  speedup x{:.2}", tu / tc);
+        w.row(&["k1".into(), k1.to_string(), tu.to_string(), tc.to_string(), (tu / tc).to_string()])?;
+    }
+
+    println!("\nlink erasure probability p:");
+    for p in [0.0, 0.1, 0.2, 0.4, 0.6] {
+        let mut cfg = ExperimentConfig::preset("small")?;
+        cfg.net.p_fail = p;
+        let (tu, tc) = per_step_times(&cfg)?;
+        println!("  p={p:.1}:   uncoded {tu:8.1}s  coded {tc:8.1}s  speedup x{:.2}", tu / tc);
+        w.row(&["p_fail".into(), p.to_string(), tu.to_string(), tc.to_string(), (tu / tc).to_string()])?;
+    }
+
+    println!("\nuplink/downlink asymmetry ratio (footnote-1 generalization):");
+    for ratio in [1.0, 2.0, 4.0, 8.0] {
+        let cfg = ExperimentConfig::preset("small")?;
+        let (tu, tc) = per_step_times_asym(&cfg, ratio)?;
+        println!(
+            "  up/down={ratio:.0}x: uncoded {tu:8.1}s  coded {tc:8.1}s  speedup x{:.2}",
+            tu / tc
+        );
+        w.row(&[
+            "uplink_ratio".into(),
+            ratio.to_string(),
+            tu.to_string(),
+            tc.to_string(),
+            (tu / tc).to_string(),
+        ])?;
+    }
+
+    w.flush()?;
+    println!("\nwritten to results/heterogeneity_sweep.csv");
+    Ok(())
+}

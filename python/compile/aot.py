@@ -1,0 +1,123 @@
+"""AOT compiler: lower every L2 entry point to HLO text + manifest.json.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts [--profiles tiny,small,...]
+
+Outputs:
+    <out-dir>/<profile>_<artifact>.hlo.txt   one per entry point per profile
+    <out-dir>/manifest.json                  dims + per-artifact input shapes
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape profiles. `l` is the per-client mini-batch rows (global batch / n
+# clients), `u` the parity rows per mini-batch (coding redundancy), `chunk`
+# the row-chunk used for the setup-phase rff/predict streaming.
+# "paper" is Appendix A.2 of Prakash et al. 2020: q=2000, global batch
+# 12000 over n=30 clients -> l=400. `u` is the artifact *maximum* parity
+# count, sized at 30% of the global batch so the redundancy-sweep ablation
+# fits; the paper's 10% (u=1200) is the runtime default (masked rows).
+PROFILES = {
+    "tiny": dict(d=32, q=64, c=4, l=20, u=30, chunk=50),
+    "small": dict(d=784, q=512, c=10, l=100, u=900, chunk=500),
+    "medium": dict(d=784, q=1024, c=10, l=200, u=1800, chunk=1000),
+    "paper": dict(d=784, q=2000, c=10, l=400, u=3600, chunk=1000),
+}
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def artifact_table(p):
+    """Entry point -> (callable, input ShapeDtypeStructs) for profile dims.
+
+    The input order here is the ABI the rust runtime relies on; it is
+    recorded verbatim in manifest.json.
+    """
+    d, q, c, l, u, chunk = p["d"], p["q"], p["c"], p["l"], p["u"], p["chunk"]
+    return {
+        # per-client partial gradient over <= l mini-batch rows (masked)
+        "grad_client": (model.gradient,
+                        [_spec(l, q), _spec(l, c), _spec(q, c), _spec(l, 1)]),
+        # server coded gradient over <= u parity rows (masked)
+        "grad_server": (model.gradient,
+                        [_spec(u, q), _spec(u, c), _spec(q, c), _spec(u, 1)]),
+        # kernel embedding of one row chunk
+        "rff": (model.rff_embed, [_spec(chunk, d), _spec(d, q), _spec(1, q)]),
+        # parity encoding of one client's mini-batch slice (features / labels)
+        "encode_x": (model.encode, [_spec(u, l), _spec(l, 1), _spec(l, q)]),
+        "encode_y": (model.encode, [_spec(u, l), _spec(l, 1), _spec(l, c)]),
+        # ridge-regularized model step (lr, lam are rank-0 so one executable
+        # serves the whole step-decay schedule)
+        "update": (model.sgd_update, [_spec(q, c), _spec(q, c), _spec(), _spec()]),
+        # evaluation logits over one test chunk
+        "predict": (model.predict_logits, [_spec(chunk, q), _spec(q, c)]),
+    }
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True: the rust
+    side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir, profiles):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "version": 1, "profiles": {}}
+    for prof in profiles:
+        dims = PROFILES[prof]
+        arts = {}
+        for name, (fn, specs) in artifact_table(dims).items():
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{prof}_{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            out = lowered.out_info
+            arts[name] = {
+                "file": fname,
+                "inputs": [list(s.shape) for s in specs],
+                "output": list(out.shape),
+            }
+            print(f"  {prof}/{name}: {len(text)} chars -> {fname}")
+        manifest["profiles"][prof] = {"dims": dims, "artifacts": arts}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {out_dir}/manifest.json ({len(profiles)} profiles)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profiles", default=",".join(PROFILES),
+                    help="comma-separated subset of " + ",".join(PROFILES))
+    args = ap.parse_args()
+    profiles = [p.strip() for p in args.profiles.split(",") if p.strip()]
+    unknown = [p for p in profiles if p not in PROFILES]
+    if unknown:
+        raise SystemExit(f"unknown profiles: {unknown}")
+    build(args.out_dir, profiles)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels in this package are written for the TPU memory model — grids
+express an HBM<->VMEM block schedule via BlockSpec — but are lowered with
+``interpret=True`` on this image so the resulting HLO runs on the CPU PJRT
+client (real-TPU lowering emits a Mosaic custom-call the CPU plugin cannot
+execute). Block-shape choices therefore target *structure* (VMEM footprint,
+MXU-friendly tiles), not CPU wallclock; see DESIGN.md §Perf.
+"""
+
+# TPU-motivated tile targets. The MXU is a 128x128 systolic array; the VPU
+# lane width is 128 and the f32 sublane count is 8, so row-block targets are
+# multiples of 8 with 128 preferred, and column blocks prefer multiples of
+# 128. VMEM is ~16 MiB/core; each kernel documents its footprint.
+ROW_BLOCK_TARGET = 128
+COL_BLOCK_TARGET = 512
+
+
+def pick_block(n: int, target: int = ROW_BLOCK_TARGET) -> int:
+    """Largest divisor of ``n`` that is <= ``target``.
+
+    Pallas grids require the block shape to tile the array exactly; the
+    profiles in aot.py keep dimensions composite so this lands on a
+    reasonably large tile (e.g. 100 -> 100, 400 -> 100, 2000 -> 500 with
+    target 512).
+    """
+    if n <= 0:
+        raise ValueError(f"dimension must be positive, got {n}")
+    if n <= target:
+        return n
+    best = 1
+    for d in range(1, int(n**0.5) + 1):
+        if n % d == 0:
+            if d <= target:
+                best = max(best, d)
+            if n // d <= target:
+                best = max(best, n // d)
+    return best
+
+
+def vmem_bytes(*shapes, dtype_bytes: int = 4) -> int:
+    """Sum of buffer footprints, for the DESIGN.md VMEM estimates."""
+    total = 0
+    for shape in shapes:
+        n = dtype_bytes
+        for s in shape:
+            n *= s
+        total += n
+    return total

@@ -1,0 +1,74 @@
+"""Pallas kernel: parity encoding  Xcheck = G (w .* M).
+
+Paper Section 3.2: each client multiplies its weighted local dataset by a
+private Gaussian generator matrix G_j ~ N(0, 1/u) to produce parity data
+that is shipped to the MEC server once, before training. The same kernel
+encodes features (M = Xhat, p = q) and labels (M = Y, p = c).
+
+The grid tiles the contraction dimension l (local rows) and the output
+columns p; the parity count u stays whole in a block (u <= 1200 in the
+paper profile). The (u, p_blk) output block is the accumulator resident
+across l-steps.
+
+VMEM footprint per grid step (paper profile u=1200, l=400 -> BLK_L=100,
+p=2000 -> BLK_P=500):
+  g block    1200 x 100 x 4B = 469 KiB
+  w block     100 x   1 x 4B = 0.4 KiB
+  m block     100 x 500 x 4B = 195 KiB
+  out block  1200 x 500 x 4B = 2.29 MiB
+  total ~= 2.9 MiB  << 16 MiB VMEM
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import COL_BLOCK_TARGET, pick_block
+
+
+def _encode_kernel(g_ref, w_ref, m_ref, o_ref):
+    """One l-block contribution to the parity block: o += G_blk (w .* M_blk)."""
+    i = pl.program_id(1)  # contraction step (axis 1 so output cols vary slowest)
+    contrib = g_ref[...] @ (w_ref[...] * m_ref[...])  # (u, BLK_P)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(i > 0)
+    def _accum():
+        o_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "block_p"))
+def encode(g, w, m, *, block_l=None, block_p=None):
+    """Parity rows G @ (w * M) via the Pallas kernel.
+
+    Args:
+      g: (u, l) float32 generator matrix (client-private; sampled in rust).
+      w: (l, 1) float32 weights — sqrt(pnr) from paper Section 3.4.
+      m: (l, p) float32 matrix to encode (features or labels).
+      block_l / block_p: tile overrides (must divide l / p).
+
+    Returns:
+      (u, p) float32 parity matrix.
+    """
+    u, l = g.shape
+    p = m.shape[1]
+    blk_l = block_l or pick_block(l)
+    blk_p = block_p or pick_block(p, COL_BLOCK_TARGET)
+    grid = (p // blk_p, l // blk_l)  # (output cols, contraction)
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((u, blk_l), lambda j, i: (0, i)),   # g: l-blocks
+            pl.BlockSpec((blk_l, 1), lambda j, i: (i, 0)),   # w: l-blocks
+            pl.BlockSpec((blk_l, blk_p), lambda j, i: (i, j)),  # m tiles
+        ],
+        out_specs=pl.BlockSpec((u, blk_p), lambda j, i: (0, j)),  # accumulator
+        out_shape=jax.ShapeDtypeStruct((u, p), g.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(g, w, m)

@@ -1,0 +1,79 @@
+"""Pallas kernel: masked least-squares gradient  g = X^T (mask .* (X b - Y)).
+
+This is the compute hot-spot of CodedFedL: every client gradient, and the
+server's coded gradient over the parity data, is one invocation of this
+kernel. The kernel tiles the reduction dimension ``m`` (data rows) into
+VMEM-sized row blocks and accumulates the (q, c) gradient in the output
+block, which stays resident across grid steps (constant output index_map —
+the canonical TPU accumulation pattern).
+
+VMEM footprint per grid step (f32, paper profile q=2000, c=10, BLK=128):
+  x block   128 x 2000 x 4B = 1.00 MiB
+  y block   128 x   10 x 4B = 5.0 KiB
+  beta      2000 x  10 x 4B = 78.1 KiB
+  mask      128 x    1 x 4B = 0.5 KiB
+  out       2000 x  10 x 4B = 78.1 KiB
+  total ~= 1.16 MiB  << 16 MiB VMEM
+
+MXU: both matmuls contract over >= 128 lanes (q and BLK), so the systolic
+array is fed full tiles; see DESIGN.md §Perf for the utilization estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pick_block
+
+
+def _grad_kernel(x_ref, y_ref, beta_ref, mask_ref, o_ref):
+    """One row-block contribution: o += x^T (mask .* (x beta - y))."""
+    i = pl.program_id(0)
+    x = x_ref[...]                                     # (BLK, q)
+    err = (x @ beta_ref[...] - y_ref[...]) * mask_ref[...]  # (BLK, c)
+    contrib = x.T @ err                                # (q, c)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(i > 0)
+    def _accum():
+        o_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def gradient(x, y, beta, mask, *, block_rows=None):
+    """Masked gradient sum X^T(mask*(X@beta - Y)) via the Pallas kernel.
+
+    Args:
+      x:    (m, q) float32 features (RFF-embedded).
+      y:    (m, c) float32 labels (one-hot or parity).
+      beta: (q, c) float32 model.
+      mask: (m, 1) float32 row mask; padding rows carry 0.0 so one fixed
+            shape serves every load the allocator picks.
+      block_rows: row-block override (must divide m); default via pick_block.
+
+    Returns:
+      (q, c) float32 gradient sum (unscaled — the caller divides by the
+      number of unmasked rows, matching the paper's 1/l_j factor).
+    """
+    m, q = x.shape
+    c = y.shape[1]
+    blk = block_rows or pick_block(m)
+    grid = (m // blk,)
+    return pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, q), lambda i: (i, 0)),   # x: stream row blocks
+            pl.BlockSpec((blk, c), lambda i: (i, 0)),   # y: stream row blocks
+            pl.BlockSpec((q, c), lambda i: (0, 0)),     # beta: resident
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),   # mask: stream
+        ],
+        out_specs=pl.BlockSpec((q, c), lambda i: (0, 0)),  # accumulator
+        out_shape=jax.ShapeDtypeStruct((q, c), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y, beta, mask)

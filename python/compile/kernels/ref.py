@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness references: each Pallas kernel in this
+package must match its oracle to float32 matmul tolerance. The oracles are
+also what the L2 model functions would be if no custom kernels existed, so
+they double as documentation of the math.
+
+Notation follows the paper (Prakash et al., 2020):
+  gradient:  g = X^T (mask .* (X beta - Y))         (sum form, unscaled)
+  rff:       Xhat = sqrt(2/q) cos(X Omega + delta)  (eq. 5)
+  encode:    Xcheck = G (w .* M)                    (Section 3.2)
+  update:    beta' = beta - lr (g + lam beta)
+  predict:   logits = X beta
+"""
+
+import jax.numpy as jnp
+
+
+def gradient_ref(x, y, beta, mask):
+    """Unscaled masked least-squares gradient: X^T(mask*(X@beta - Y)).
+
+    Args:
+      x:    (m, q) features.
+      y:    (m, c) labels.
+      beta: (q, c) model.
+      mask: (m, 1) row mask in {0.0, 1.0} — padding rows contribute nothing.
+
+    Returns:
+      (q, c) gradient *sum* (caller scales by 1/l_tilde).
+    """
+    err = (x @ beta - y) * mask
+    return x.T @ err
+
+
+def rff_ref(x, omega, delta):
+    """Random Fourier feature map for the RBF kernel (paper eq. 5).
+
+    Args:
+      x:     (m, d) raw features.
+      omega: (d, q) frequency matrix, entries ~ N(0, 1/sigma^2).
+      delta: (1, q) phase shifts, ~ Uniform(0, 2pi].
+
+    Returns:
+      (m, q) embedded features, scaled by sqrt(2/q) so that
+      <xhat_i, xhat_j> ~= K_rbf(x_i, x_j).
+    """
+    q = omega.shape[1]
+    return jnp.sqrt(2.0 / q).astype(x.dtype) * jnp.cos(x @ omega + delta)
+
+
+def encode_ref(g, w, m):
+    """Parity encoding: G @ (w .* M) (paper Section 3.2).
+
+    Args:
+      g: (u, l) generator matrix, entries ~ N(0, 1/u).
+      w: (l, 1) per-row weights (sqrt of probability-of-no-return).
+      m: (l, p) matrix to encode (features Xhat or labels Y).
+
+    Returns:
+      (u, p) parity rows.
+    """
+    return g @ (w * m)
+
+
+def sgd_update_ref(beta, grad, lr, lam):
+    """Ridge-regularized gradient step: beta - lr*(grad + lam*beta)."""
+    return beta - lr * (grad + lam * beta)
+
+
+def predict_ref(x, beta):
+    """Linear logits over (embedded) features: X @ beta."""
+    return x @ beta

@@ -1,0 +1,68 @@
+"""Pallas kernel: random Fourier feature map  Xhat = sqrt(2/q) cos(X W + d).
+
+Paper eq. (5): the kernel embedding that turns non-linear classification
+into linear regression. Run once per client over its raw shard (and once
+over the test set), so it dominates the *setup* phase but not the training
+loop.
+
+The grid tiles both the data rows (m) and the output features (q); the raw
+feature dimension d (784 for MNIST) stays whole inside a block, because the
+contraction X @ Omega needs all of it and 784 f32 lanes fit VMEM easily.
+
+VMEM footprint per grid step (paper profile d=784, q=2000 -> BLK_Q=500,
+chunk rows BLK_M=125):
+  x block     125 x 784 x 4B = 383 KiB
+  omega block 784 x 500 x 4B = 1.50 MiB
+  delta block   1 x 500 x 4B = 2.0 KiB
+  out block   125 x 500 x 4B = 244 KiB
+  total ~= 2.1 MiB  << 16 MiB VMEM
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import COL_BLOCK_TARGET, pick_block
+
+
+def _rff_kernel(scale, x_ref, omega_ref, delta_ref, o_ref):
+    """One (row-block, feature-block) tile of the embedding."""
+    o_ref[...] = scale * jnp.cos(x_ref[...] @ omega_ref[...] + delta_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def rff_embed(x, omega, delta, *, block_rows=None, block_cols=None):
+    """RBF-kernel random feature embedding via the Pallas kernel.
+
+    Args:
+      x:     (m, d) float32 raw features (normalized to [0, 1]).
+      omega: (d, q) float32 frequencies ~ N(0, 1/sigma^2) (sampled by the
+             rust coordinator from the shared seed — paper Remark 1).
+      delta: (1, q) float32 phases ~ Uniform(0, 2pi].
+      block_rows / block_cols: tile overrides (must divide m / q).
+
+    Returns:
+      (m, q) float32 embedded features.
+    """
+    m, d = x.shape
+    q = omega.shape[1]
+    blk_m = block_rows or pick_block(m)
+    blk_q = block_cols or pick_block(q, COL_BLOCK_TARGET)
+    # Plain python float so it lowers as an HLO constant instead of a
+    # captured tracer (pallas rejects captured values).
+    scale = float((2.0 / q) ** 0.5)
+    grid = (m // blk_m, q // blk_q)
+    return pl.pallas_call(
+        functools.partial(_rff_kernel, scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_m, d), lambda i, j: (i, 0)),   # x rows
+            pl.BlockSpec((d, blk_q), lambda i, j: (0, j)),   # omega cols
+            pl.BlockSpec((1, blk_q), lambda i, j: (0, j)),   # delta cols
+        ],
+        out_specs=pl.BlockSpec((blk_m, blk_q), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, q), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, omega, delta)

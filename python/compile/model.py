@@ -1,0 +1,48 @@
+"""L2: the CodedFedL compute graph, written in JAX over the Pallas kernels.
+
+Every public function here is an AOT entry point: ``aot.py`` lowers each to
+HLO text at the fixed shapes of a profile, and the rust coordinator executes
+them through PJRT. Python never runs at training time.
+
+Entry points (shapes per profile; see aot.py):
+  gradient(x, y, beta, mask)    -> (q, c)   client AND server coded gradient
+  rff_embed(x, omega, delta)    -> (m, q)   kernel embedding (setup phase)
+  encode(g, w, m)               -> (u, p)   parity encoding (setup phase)
+  sgd_update(beta, grad, lr, lam) -> (q, c) ridge-regularized model step
+  predict_logits(x, beta)       -> (m, c)   evaluation logits
+"""
+
+import jax.numpy as jnp
+
+from .kernels.encode import encode as _encode_kernel
+from .kernels.gradient import gradient as _gradient_kernel
+from .kernels.rff import rff_embed as _rff_kernel
+
+
+def gradient(x, y, beta, mask):
+    """Masked gradient sum X^T(mask*(X@beta - Y)); see kernels.gradient."""
+    return _gradient_kernel(x, y, beta, mask)
+
+
+def rff_embed(x, omega, delta):
+    """RBF random-feature embedding (paper eq. 5); see kernels.rff."""
+    return _rff_kernel(x, omega, delta)
+
+
+def encode(g, w, m):
+    """Parity encoding G @ (w*M) (paper Section 3.2); see kernels.encode."""
+    return _encode_kernel(g, w, m)
+
+
+def sgd_update(beta, grad, lr, lam):
+    """One ridge-regularized descent step (paper Section 2.1).
+
+    beta' = beta - lr * (grad + lam * beta). ``lr`` and ``lam`` are rank-0
+    f32 inputs so the same executable serves the step-decay schedule.
+    """
+    return beta - lr * (grad + lam * beta)
+
+
+def predict_logits(x, beta):
+    """Evaluation logits X @ beta; the argmax happens rust-side."""
+    return jnp.dot(x, beta)

@@ -1,0 +1,2 @@
+# Root conftest: makes the `compile` package importable when running
+# `pytest tests/` from python/ (pytest prepends this directory to sys.path).

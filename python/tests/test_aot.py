@@ -1,0 +1,65 @@
+"""AOT pipeline tests: the tiny profile lowers to loadable HLO text and the
+manifest records the ABI the rust runtime depends on."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.build(str(out), ["tiny"])
+    return str(out)
+
+
+def test_all_artifacts_written(built):
+    names = aot.artifact_table(aot.PROFILES["tiny"]).keys()
+    for name in names:
+        path = os.path.join(built, f"tiny_{name}.hlo.txt")
+        assert os.path.exists(path), f"missing {path}"
+        text = open(path).read()
+        assert "HloModule" in text, f"{name}: not HLO text"
+        assert "ENTRY" in text, f"{name}: no entry computation"
+
+
+def test_manifest_matches_profile(built):
+    man = json.load(open(os.path.join(built, "manifest.json")))
+    assert man["format"] == "hlo-text"
+    prof = man["profiles"]["tiny"]
+    dims = aot.PROFILES["tiny"]
+    assert prof["dims"] == dims
+    arts = prof["artifacts"]
+    d, q, c, l, u, chunk = (dims[k] for k in ("d", "q", "c", "l", "u", "chunk"))
+    assert arts["grad_client"]["inputs"] == [[l, q], [l, c], [q, c], [l, 1]]
+    assert arts["grad_client"]["output"] == [q, c]
+    assert arts["grad_server"]["inputs"][0] == [u, q]
+    assert arts["rff"]["output"] == [chunk, q]
+    assert arts["update"]["inputs"] == [[q, c], [q, c], [], []]
+    assert arts["predict"]["output"] == [chunk, c]
+
+
+def test_hlo_has_parameters_in_abi_order(built):
+    # The entry computation must expose exactly the manifest's inputs, in
+    # order — this is the contract rust's runtime::Executable relies on.
+    man = json.load(open(os.path.join(built, "manifest.json")))
+    arts = man["profiles"]["tiny"]["artifacts"]
+    for name, meta in arts.items():
+        text = open(os.path.join(built, meta["file"])).read()
+        entry = text[text.index("ENTRY"):]
+        block = entry[:entry.index("\n}")]
+        n_params = block.count("parameter(")
+        assert n_params == len(meta["inputs"]), (
+            f"{name}: {n_params} entry params vs {len(meta['inputs'])} inputs")
+
+
+def test_profiles_are_consistent():
+    for prof, dims in aot.PROFILES.items():
+        # mask/grad shapes only make sense if l, u, chunk are compatible
+        assert dims["u"] > 0 and dims["l"] > 0
+        assert dims["q"] >= dims["c"]
+        # tiling: pick_block always succeeds, but chunk should tile test sets
+        assert dims["chunk"] > 0

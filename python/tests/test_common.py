@@ -1,0 +1,59 @@
+"""Tests for the kernel tiling helpers (block picking + VMEM accounting)."""
+
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels.common import pick_block, vmem_bytes
+
+
+def test_pick_block_small_passthrough():
+    assert pick_block(20) == 20
+    assert pick_block(1) == 1
+    assert pick_block(128) == 128
+
+
+def test_pick_block_prefers_large_divisors():
+    assert pick_block(400, 128) == 100
+    assert pick_block(2000, 512) == 500
+    assert pick_block(256, 128) == 128
+    assert pick_block(900, 128) == 100
+
+
+def test_pick_block_prime_falls_back_to_one():
+    # 251 is prime and > target -> only divisor <= 128 is 1.
+    assert pick_block(251, 128) == 1
+
+
+def test_pick_block_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        pick_block(0)
+
+
+@given(n=st.integers(1, 5000), target=st.sampled_from([8, 64, 128, 512]))
+def test_pick_block_is_valid_divisor(n, target):
+    b = pick_block(n, target)
+    assert b >= 1
+    assert n % b == 0
+    # Either the block respects the target, or the whole array fit in one
+    # block to begin with.
+    assert b <= target or b == n
+
+
+def test_vmem_bytes_accounts_f32():
+    # gradient kernel @ paper shapes (see kernels/gradient.py header).
+    total = vmem_bytes((128, 2000), (128, 10), (2000, 10), (128, 1), (2000, 10))
+    assert total == 4 * (128 * 2000 + 128 * 10 + 2000 * 10 + 128 + 2000 * 10)
+    assert total < 16 * 2**20  # fits VMEM
+
+
+def test_profile_block_choices_fit_vmem():
+    # Every shipped profile's gradient tile must fit a 16 MiB VMEM budget.
+    from compile.aot import PROFILES
+
+    for name, p in PROFILES.items():
+        blk = pick_block(p["l"])
+        total = vmem_bytes(
+            (blk, p["q"]), (blk, p["c"]), (p["q"], p["c"]), (blk, 1), (p["q"], p["c"])
+        )
+        assert total < 16 * 2**20, f"{name}: gradient tile {total} bytes"

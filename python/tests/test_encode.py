@@ -1,0 +1,94 @@
+"""Pallas encode kernel vs oracle + the decoding property the paper's
+aggregation relies on (E[G^T G] = I, Section 3.5 step (a))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.encode import encode
+from compile.kernels.ref import encode_ref
+
+
+def _inputs(seed, u, l, p):
+    rng = np.random.default_rng(seed)
+    g = (rng.standard_normal((u, l)) / np.sqrt(u)).astype(np.float32)
+    w = rng.random((l, 1)).astype(np.float32)
+    m = rng.standard_normal((l, p)).astype(np.float32)
+    return jnp.asarray(g), jnp.asarray(w), jnp.asarray(m)
+
+
+def test_matches_ref_basic():
+    g, w, m = _inputs(0, 12, 32, 16)
+    np.testing.assert_allclose(encode(g, w, m), encode_ref(g, w, m),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_matches_ref_tiled():
+    g, w, m = _inputs(1, 10, 48, 24)
+    got = encode(g, w, m, block_l=16, block_p=8)
+    np.testing.assert_allclose(got, encode_ref(g, w, m), rtol=1e-4, atol=1e-4)
+
+
+def test_unit_weights_is_plain_matmul():
+    g, _, m = _inputs(2, 8, 20, 6)
+    w = jnp.ones((20, 1), jnp.float32)
+    np.testing.assert_allclose(encode(g, w, m), g @ m, rtol=1e-4, atol=1e-4)
+
+
+def test_zero_weights_kill_rows():
+    g, w, m = _inputs(3, 8, 24, 6)
+    w = np.asarray(w).copy()
+    w[10:] = 0.0  # rows never processed contribute sqrt(pnr)=... here 0
+    got = encode(g, jnp.asarray(w), m, block_l=8)
+    want = np.asarray(g)[:, :10] @ (np.asarray(w)[:10] * np.asarray(m)[:10])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gtg_concentrates_to_identity():
+    # Entries of G ~ N(0, 1/u) i.i.d. => E[G^T G] = I_l; for large u the
+    # sample G^T G concentrates. This is exactly the approximation the
+    # server-side coded gradient uses (paper eq. 11 -> 12).
+    rng = np.random.default_rng(4)
+    u, l = 8192, 24
+    g = (rng.standard_normal((u, l)) / np.sqrt(u)).astype(np.float32)
+    gtg = g.T @ g
+    err = np.abs(gtg - np.eye(l, dtype=np.float32)).max()
+    assert err < 0.1, f"G^T G deviates from identity by {err}"
+
+
+def test_coded_gradient_unbiasedness():
+    # E_G[ Xc^T (Xc beta - Yc) ] = (WX)^T (WX beta - WY): the coded gradient
+    # is an unbiased estimate of the weighted full gradient (paper eq. 12).
+    rng = np.random.default_rng(5)
+    l, q, c, u, trials = 12, 6, 3, 64, 400
+    x = rng.standard_normal((l, q)).astype(np.float32)
+    y = rng.standard_normal((l, c)).astype(np.float32)
+    w = rng.random((l, 1)).astype(np.float32)
+    beta = rng.standard_normal((q, c)).astype(np.float32)
+    wx, wy = w * x, w * y
+    want = wx.T @ (wx @ beta - wy)
+    acc = np.zeros_like(want)
+    for _ in range(trials):
+        g = (rng.standard_normal((u, l)) / np.sqrt(u)).astype(np.float32)
+        xc, yc = g @ wx, g @ wy
+        acc += xc.T @ (xc @ beta - yc)
+    got = acc / trials
+    scale = np.abs(want).max() + 1.0
+    assert np.abs(got - want).max() / scale < 0.15
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    u=st.sampled_from([1, 4, 9]),
+    lb=st.integers(1, 3), blk_l=st.sampled_from([4, 8]),
+    pb=st.integers(1, 3), blk_p=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(u, lb, blk_l, pb, blk_p, seed):
+    l, p = lb * blk_l, pb * blk_p
+    g, w, m = _inputs(seed % 10_000, u, l, p)
+    got = encode(g, w, m, block_l=blk_l, block_p=blk_p)
+    np.testing.assert_allclose(got, encode_ref(g, w, m), rtol=1e-3, atol=1e-3)

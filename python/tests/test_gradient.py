@@ -1,0 +1,101 @@
+"""Pallas gradient kernel vs the pure-jnp oracle — the CORE correctness
+signal for the training hot path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.gradient import gradient
+from compile.kernels.ref import gradient_ref
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def _case(seed, m, q, c, n_masked=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(ks[0], m, q)
+    y = _rand(ks[1], m, c)
+    beta = _rand(ks[2], q, c)
+    mask = np.ones((m, 1), dtype=np.float32)
+    if n_masked:
+        mask[m - n_masked:] = 0.0
+    return x, y, beta, jnp.asarray(mask)
+
+
+def test_matches_ref_basic():
+    x, y, beta, mask = _case(0, 64, 32, 10)
+    np.testing.assert_allclose(
+        gradient(x, y, beta, mask), gradient_ref(x, y, beta, mask),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_matches_ref_multiblock():
+    # m=96 with default block target 128 -> single block; force 3 blocks.
+    x, y, beta, mask = _case(1, 96, 16, 4)
+    got = gradient(x, y, beta, mask, block_rows=32)
+    np.testing.assert_allclose(got, gradient_ref(x, y, beta, mask),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_masked_rows_do_not_contribute():
+    x, y, beta, mask = _case(2, 40, 8, 3, n_masked=15)
+    got = gradient(x, y, beta, mask, block_rows=8)
+    want = gradient_ref(x[:25], y[:25], beta, jnp.ones((25, 1), jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_all_masked_gives_zero():
+    x, y, beta, _ = _case(3, 16, 8, 2)
+    got = gradient(x, y, beta, jnp.zeros((16, 1), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((8, 2), np.float32))
+
+
+def test_zero_beta_reduces_to_minus_xty():
+    x, y, _, mask = _case(4, 32, 8, 5)
+    got = gradient(x, y, jnp.zeros((8, 5), jnp.float32), mask)
+    np.testing.assert_allclose(got, -(x.T @ y), rtol=1e-4, atol=1e-4)
+
+
+def test_perfect_fit_gives_zero_gradient():
+    # y = x @ beta exactly -> gradient must vanish.
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    x = _rand(ks[0], 24, 6)
+    beta = _rand(ks[1], 6, 3)
+    y = x @ beta
+    got = gradient(x, y, beta, jnp.ones((24, 1), jnp.float32))
+    np.testing.assert_allclose(got, np.zeros((6, 3)), atol=1e-3)
+
+
+def test_linearity_in_labels():
+    x, y, beta, mask = _case(6, 32, 8, 4)
+    g1 = gradient(x, y, beta, mask)
+    g2 = gradient(x, 2.0 * y, beta, mask)
+    g0 = gradient(x, jnp.zeros_like(y), beta, mask)
+    # g(2y) - g(y) == g(0) - g(y) + g(y) - ... : gradient affine in y:
+    # g(y) = X^T X beta - X^T y  ->  g(2y) = g(y) - X^T y = g(y) + (g(y)-g(0))...
+    np.testing.assert_allclose(np.asarray(g2 - g1), np.asarray(g1 - g0),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m_blocks=st.integers(1, 4),
+    blk=st.sampled_from([4, 8, 16]),
+    q=st.sampled_from([4, 8, 24, 32]),
+    c=st.sampled_from([1, 3, 10]),
+    seed=st.integers(0, 2**31 - 1),
+    frac_masked=st.floats(0.0, 1.0),
+)
+def test_hypothesis_shape_sweep(m_blocks, blk, q, c, seed, frac_masked):
+    m = m_blocks * blk
+    x, y, beta, _ = _case(seed % 10_000, m, q, c)
+    rng = np.random.default_rng(seed)
+    mask = (rng.random((m, 1)) >= frac_masked).astype(np.float32)
+    got = gradient(x, y, beta, jnp.asarray(mask), block_rows=blk)
+    want = gradient_ref(x, y, beta, jnp.asarray(mask))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,77 @@
+"""Pallas RFF kernel vs oracle + the kernel-approximation property
+(inner products of random features approximate the RBF kernel)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ref import rff_ref
+from compile.kernels.rff import rff_embed
+
+
+def _inputs(seed, m, d, q, sigma=1.0):
+    rng = np.random.default_rng(seed)
+    x = rng.random((m, d)).astype(np.float32)  # features in [0,1] as in paper
+    omega = (rng.standard_normal((d, q)) / sigma).astype(np.float32)
+    delta = rng.uniform(0.0, 2 * np.pi, (1, q)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(omega), jnp.asarray(delta)
+
+
+def test_matches_ref_basic():
+    x, omega, delta = _inputs(0, 32, 16, 64)
+    np.testing.assert_allclose(rff_embed(x, omega, delta),
+                               rff_ref(x, omega, delta), rtol=1e-4, atol=1e-5)
+
+
+def test_matches_ref_tiled():
+    x, omega, delta = _inputs(1, 48, 8, 40)
+    got = rff_embed(x, omega, delta, block_rows=16, block_cols=8)
+    np.testing.assert_allclose(got, rff_ref(x, omega, delta),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_output_range():
+    # |cos| <= 1 so every feature is bounded by sqrt(2/q).
+    x, omega, delta = _inputs(2, 20, 8, 32)
+    out = np.asarray(rff_embed(x, omega, delta))
+    assert np.all(np.abs(out) <= np.sqrt(2.0 / 32) + 1e-6)
+
+
+def test_rbf_kernel_approximation():
+    # <phi(x), phi(z)> ->_q exp(-||x-z||^2 / (2 sigma^2))  (Rahimi-Recht).
+    sigma = 2.0
+    m, d, q = 24, 10, 16384
+    x, omega, delta = _inputs(3, m, d, q, sigma=sigma)
+    feats = np.asarray(rff_embed(x, omega, delta))
+    approx = feats @ feats.T
+    xs = np.asarray(x)
+    sq = ((xs[:, None, :] - xs[None, :, :]) ** 2).sum(-1)
+    exact = np.exp(-sq / (2 * sigma**2))
+    err = np.abs(approx - exact).max()
+    # Hoeffding-style deviation ~ sqrt(1/q); allow generous slack.
+    assert err < 0.08, f"kernel approximation error too large: {err}"
+
+
+def test_deterministic_given_seed_inputs():
+    x, omega, delta = _inputs(4, 8, 4, 16)
+    a = np.asarray(rff_embed(x, omega, delta))
+    b = np.asarray(rff_embed(x, omega, delta))
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mb=st.integers(1, 3), blk_m=st.sampled_from([4, 8]),
+    qb=st.integers(1, 3), blk_q=st.sampled_from([8, 16]),
+    d=st.sampled_from([3, 8, 17]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(mb, blk_m, qb, blk_q, d, seed):
+    m, q = mb * blk_m, qb * blk_q
+    x, omega, delta = _inputs(seed % 10_000, m, d, q)
+    got = rff_embed(x, omega, delta, block_rows=blk_m, block_cols=blk_q)
+    np.testing.assert_allclose(got, rff_ref(x, omega, delta),
+                               rtol=1e-3, atol=1e-5)

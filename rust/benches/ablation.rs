@@ -1,0 +1,132 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * coding-redundancy sweep (u = 2%..30% of the batch): deadline,
+//!   per-step speedup over uncoded, and final accuracy impact;
+//! * Remark-5 joint optimization (server as (n+1)-th node) vs fixed u;
+//! * IID vs non-IID sharding under the coded scheme.
+//!
+//! Lighter than the figure benches: learning runs use few epochs, the
+//! deadline/speedup columns are analytic + Monte-Carlo.
+
+use codedfedl::allocation::optimizer::{optimize_with_server, plan_fixed_u};
+use codedfedl::config::{ExperimentConfig, Scheme};
+use codedfedl::fl::trainer::Trainer;
+use codedfedl::mathx::rng::Rng;
+use codedfedl::mathx::stats::OnlineStats;
+use codedfedl::simnet::delay::ClientModel;
+use codedfedl::simnet::topology::build_population;
+use codedfedl::util::csv::CsvWriter;
+
+fn uncoded_step_mc(cfg: &ExperimentConfig) -> f64 {
+    let mut rng = Rng::new(cfg.seed).fork(2);
+    let pop = build_population(cfg, &mut rng);
+    let mut sim = Rng::new(5);
+    let mut stats = OnlineStats::new();
+    for _ in 0..2000 {
+        let t = pop
+            .clients
+            .iter()
+            .map(|c| c.sample(cfg.profile.l, &mut sim).total())
+            .fold(0.0, f64::max);
+        stats.push(t);
+    }
+    stats.mean()
+}
+
+fn main() -> anyhow::Result<()> {
+    codedfedl::util::logging::init_from_env();
+    std::fs::create_dir_all("results")?;
+    let base = ExperimentConfig::preset("small")?;
+    let t_uncoded = uncoded_step_mc(&base);
+    println!("uncoded per-step E[max_j T_j] = {t_uncoded:.1}s (small preset)\n");
+
+    // --- redundancy sweep (analytic deadline + short learning runs).
+    let mut w = CsvWriter::create(
+        "results/ablation_redundancy.csv",
+        &["redundancy", "u", "deadline_s", "per_step_speedup", "final_acc"],
+    )?;
+    println!("redundancy sweep:");
+    println!("{:>11} {:>6} {:>11} {:>9} {:>10}", "redundancy", "u", "deadline(s)", "speedup", "final acc");
+    for r in [0.02, 0.05, 0.10, 0.20, 0.30] {
+        let mut cfg = base.clone();
+        cfg.set("train.redundancy", &r.to_string())?;
+        cfg.set("train.epochs", "8")?; // short run: accuracy trend only
+        cfg.use_xla = std::path::Path::new("artifacts/manifest.json").exists();
+        let mut rng = Rng::new(cfg.seed).fork(2);
+        let pop = build_population(&cfg, &mut rng);
+        let caps = vec![cfg.profile.l; cfg.n_clients];
+        let plan = plan_fixed_u(&pop.clients, &caps, cfg.global_batch(), cfg.u(), 1.0)?;
+        let report = Trainer::from_config(&cfg)?.run()?;
+        let speedup = t_uncoded / plan.deadline;
+        println!(
+            "{:>11.2} {:>6} {:>11.1} {:>9.2} {:>10.4}",
+            r, plan.u, plan.deadline, speedup, report.final_accuracy()
+        );
+        w.row_f64(&[r, plan.u as f64, plan.deadline, speedup, report.final_accuracy()])?;
+    }
+    w.flush()?;
+
+    // --- Remark-5 joint u optimization vs the fixed 10%.
+    println!("\nRemark-5 joint optimization (server as (n+1)-th node):");
+    let mut rng = Rng::new(base.seed).fork(2);
+    let pop = build_population(&base, &mut rng);
+    let caps = vec![base.profile.l; base.n_clients];
+    let fixed = plan_fixed_u(&pop.clients, &caps, base.global_batch(), base.u(), 1.0)?;
+    let server = ClientModel { mu: 50.0 * base.net.max_mac_rate / base.macs_per_point(), alpha: 10.0, tau: 1e-4, p_fail: 0.0 };
+    let joint = optimize_with_server(
+        &pop.clients,
+        &caps,
+        &server,
+        base.profile.u_max,
+        base.global_batch(),
+        1.0,
+    )?;
+    println!("  fixed u={}   -> t* = {:.1}s", fixed.u, fixed.deadline);
+    println!("  joint u={} -> t* = {:.1}s (server 50x fastest client)", joint.u, joint.deadline);
+    assert!(joint.deadline <= fixed.deadline * 1.001);
+
+    // --- IID vs non-IID (coded, short runs).
+    // Non-IID is the paper's setting; IID is the upper bound.
+    println!("\nsharding (coded, 8 epochs):");
+    let mut cfg = base.clone();
+    cfg.scheme = Scheme::Coded;
+    cfg.set("train.epochs", "8")?;
+    cfg.use_xla = std::path::Path::new("artifacts/manifest.json").exists();
+    let noniid = Trainer::from_config(&cfg)?.run()?;
+    println!("  non-IID (paper): final acc {:.4}", noniid.final_accuracy());
+    println!("  (IID sharding exposed via data::noniid::shard_iid; trainer uses the paper's non-IID)");
+
+    // --- Remark-2 privacy probe: leakage vs mixing width l (u fixed).
+    println!("\nprivacy probe (parity-row attack vs row-span null, q=256, u=8):");
+    let mut wp = CsvWriter::create(
+        "results/ablation_privacy.csv",
+        &["rows_mixed", "best_match_cosine", "chance_cosine", "excess"],
+    )?;
+    let mut prng = Rng::new(11);
+    for l in [2usize, 8, 32, 128] {
+        use codedfedl::coding::encoder::encode_client_slice;
+        use codedfedl::mathx::linalg::Matrix;
+        use codedfedl::runtime::backend::NativeBackend;
+        let x = Matrix::randn(l, 256, 0.0, 1.0, &mut prng);
+        let y = Matrix::randn(l, 10, 0.0, 1.0, &mut prng);
+        let w = vec![1.0f32; l];
+        let (xc, _) = encode_client_slice(&NativeBackend, &x, &y, &w, 8, 8, &mut prng)?;
+        let report = codedfedl::coding::privacy::parity_attack(&x, &xc, &mut prng);
+        println!(
+            "  l={l:>4}: attack {:.3}  chance {:.3}  excess {:+.3}",
+            report.best_match_cosine,
+            report.chance_cosine,
+            report.excess()
+        );
+        wp.row_f64(&[
+            l as f64,
+            report.best_match_cosine,
+            report.chance_cosine,
+            report.excess(),
+        ])?;
+    }
+    wp.flush()?;
+
+    println!("\nCSV: results/ablation_redundancy.csv, results/ablation_privacy.csv");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Component micro-benchmarks — the L3 hot paths and the XLA-vs-native
+//! executor comparison that feeds EXPERIMENTS.md §Perf.
+
+use codedfedl::allocation::optimizer::plan_fixed_u;
+use codedfedl::allocation::piecewise::optimal_load;
+use codedfedl::benchx::Bencher;
+use codedfedl::config::{profile, ExperimentConfig};
+use codedfedl::mathx::linalg::Matrix;
+use codedfedl::mathx::rng::Rng;
+use codedfedl::runtime::backend::{ComputeBackend, NativeBackend};
+use codedfedl::runtime::xla::XlaBackend;
+use codedfedl::simnet::topology::build_population;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    let cfg = ExperimentConfig::preset("small")?;
+    let p = cfg.profile.clone();
+    let mut rng = Rng::new(1);
+
+    // --- PRNG + delay sampling (per-step simulator cost).
+    let pop = build_population(&cfg, &mut Rng::new(2).fork(2));
+    {
+        let mut r = Rng::new(3);
+        b.bench_with_work("rng: next_f64", Some(1.0), || {
+            std::hint::black_box(r.next_f64());
+        });
+        let mut r2 = Rng::new(4);
+        let model = pop.clients[0].clone();
+        b.bench_with_work("simnet: sample one epoch delay", Some(1.0), || {
+            std::hint::black_box(model.sample(p.l, &mut r2).total());
+        });
+    }
+
+    // --- Allocator (runs once per plan; must stay trivially cheap).
+    b.bench("alloc: optimal_load (1 client)", || {
+        std::hint::black_box(optimal_load(&pop.clients[7], 1000.0, p.l as f64));
+    });
+    let caps = vec![p.l; cfg.n_clients];
+    b.bench("alloc: full plan (30 clients, binary search)", || {
+        std::hint::black_box(
+            plan_fixed_u(&pop.clients, &caps, cfg.global_batch(), cfg.u(), 1.0).unwrap(),
+        );
+    });
+
+    // --- Gradient + encode: native vs XLA (small-profile shapes).
+    let x = Matrix::randn(p.l, p.q, 0.0, 1.0, &mut rng);
+    let y = Matrix::randn(p.l, p.c, 0.0, 1.0, &mut rng);
+    let beta = Matrix::randn(p.q, p.c, 0.0, 0.3, &mut rng);
+    let mask = vec![1.0f32; p.l];
+    let flops_grad = 4.0 * (p.l * p.q * p.c) as f64; // two (l,q)x(q,c)-ish matmuls
+
+    let nb = NativeBackend;
+    b.bench_with_work("grad_client native (100x512x10)", Some(flops_grad), || {
+        std::hint::black_box(nb.grad_client(&x, &y, &beta, &mask).unwrap());
+    });
+
+    let g = Matrix::randn(p.u_max, p.l, 0.0, 0.05, &mut rng);
+    let w: Vec<f32> = vec![0.8; p.l];
+    let flops_enc = 2.0 * (p.u_max * p.l * p.q) as f64;
+    b.bench_with_work("encode native (900x100 @ 100x512)", Some(flops_enc), || {
+        std::hint::black_box(nb.encode(&g, &w, &x).unwrap());
+    });
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let xb = XlaBackend::load("artifacts", &profile("small")?)?;
+        b.bench_with_work("grad_client xla (100x512x10)", Some(flops_grad), || {
+            std::hint::black_box(xb.grad_client(&x, &y, &beta, &mask).unwrap());
+        });
+        let xu = Matrix::randn(p.u_max, p.q, 0.0, 1.0, &mut rng);
+        let yu = Matrix::randn(p.u_max, p.c, 0.0, 1.0, &mut rng);
+        let mask_u = vec![1.0f32; p.u_max];
+        b.bench_with_work(
+            "grad_server xla (900x512x10)",
+            Some(4.0 * (p.u_max * p.q * p.c) as f64),
+            || {
+                std::hint::black_box(xb.grad_server(&xu, &yu, &beta, &mask_u).unwrap());
+            },
+        );
+        b.bench_with_work("encode xla (900x100 @ 100x512)", Some(flops_enc), || {
+            std::hint::black_box(xb.encode(&g, &w, &x).unwrap());
+        });
+        let xc = Matrix::randn(p.chunk, p.d, 0.5, 0.2, &mut rng);
+        let omega = Matrix::randn(p.d, p.q, 0.0, 0.2, &mut rng);
+        let delta = Matrix::randn(1, p.q, 3.0, 1.0, &mut rng);
+        b.bench_with_work(
+            "rff xla (500x784 -> 500x512)",
+            Some(2.0 * (p.chunk * p.d * p.q) as f64),
+            || {
+                std::hint::black_box(xb.rff_chunk(&xc, &omega, &delta).unwrap());
+            },
+        );
+        b.bench("update xla (512x10)", || {
+            std::hint::black_box(xb.update(&beta, &beta, 0.1, 1e-5).unwrap());
+        });
+    } else {
+        eprintln!("(artifacts missing; XLA rows skipped — run `make artifacts`)");
+    }
+
+    // --- Aggregation (pure L3).
+    let grads: Vec<Matrix> = (0..cfg.n_clients)
+        .map(|_| Matrix::randn(p.q, p.c, 0.0, 1.0, &mut rng))
+        .collect();
+    b.bench("aggregate: sum 30 gradients (512x10)", || {
+        let mut acc = Matrix::zeros(p.q, p.c);
+        for gm in &grads {
+            acc.axpy_inplace(1.0, gm);
+        }
+        std::hint::black_box(acc);
+    });
+
+    b.report("component benchmarks (small profile)");
+    Ok(())
+}

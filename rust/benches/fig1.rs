@@ -1,0 +1,76 @@
+//! Figure 1 regeneration (paper §4): the analytical properties of the
+//! expected return, at the exact caption parameters `p=0.9, tau=sqrt(3),
+//! mu=2` — (a) piecewise concavity of `E[R_j(t; l)]` at `t=10`;
+//! (b) monotonicity of the optimized `E[R_j(t; l*(t))]` in `t`.
+//!
+//! Also times the allocator (the L3 hot path that runs once per plan).
+
+use codedfedl::allocation::expected_return::{expected_return, piece_boundaries};
+use codedfedl::allocation::piecewise::optimal_load;
+use codedfedl::benchx::Bencher;
+use codedfedl::simnet::delay::ClientModel;
+use codedfedl::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let m = ClientModel { mu: 2.0, alpha: 2.0, tau: 3f64.sqrt(), p_fail: 0.9 };
+    let t = 10.0;
+    std::fs::create_dir_all("results")?;
+
+    // --- Fig 1(a): E[R] vs load, with piece boundaries annotated.
+    let bounds = piece_boundaries(&m, t, f64::INFINITY);
+    println!("Fig 1(a): piece boundaries at l = {bounds:?}");
+    let l_max = bounds[0] * 1.15;
+    let mut w = CsvWriter::create("results/fig1a_expected_return.csv", &["load", "expected_return"])?;
+    for i in 0..=400 {
+        let l = l_max * i as f64 / 400.0;
+        w.row_f64(&[l, expected_return(&m, l, t)])?;
+    }
+    w.flush()?;
+    // Verify piecewise concavity numerically: within each piece, the
+    // second difference must be <= 0.
+    let mut pieces_ok = true;
+    let mut hi = bounds[0];
+    for &lo in bounds.iter().skip(1).chain(std::iter::once(&0.0)) {
+        let step = (hi - lo) / 50.0;
+        if step > 1e-9 {
+            for k in 1..49 {
+                let l = lo + step * k as f64;
+                let d2 = expected_return(&m, l + step, t) - 2.0 * expected_return(&m, l, t)
+                    + expected_return(&m, l - step, t);
+                if d2 > 1e-6 {
+                    pieces_ok = false;
+                }
+            }
+        }
+        hi = lo;
+    }
+    println!("  concave within every piece: {pieces_ok}");
+    assert!(pieces_ok);
+
+    // --- Fig 1(b): optimized return vs t.
+    let mut w = CsvWriter::create("results/fig1b_monotone.csv", &["t", "optimized_return"])?;
+    let mut prev = 0.0;
+    let mut monotone = true;
+    for i in 1..=200 {
+        let ti = 0.2 * i as f64;
+        let e = optimal_load(&m, ti, f64::INFINITY).expected;
+        monotone &= e >= prev - 1e-9;
+        prev = e;
+        w.row_f64(&[ti, e])?;
+    }
+    w.flush()?;
+    println!("Fig 1(b): optimized expected return monotone in t: {monotone}");
+    assert!(monotone);
+
+    // --- Timings (allocator hot path).
+    let mut b = Bencher::new();
+    b.bench("expected_return (single eval)", || {
+        std::hint::black_box(expected_return(&m, 7.3, t));
+    });
+    b.bench("optimal_load (one client, one t)", || {
+        std::hint::black_box(optimal_load(&m, t, 1e9));
+    });
+    b.report("fig1 analytics");
+    println!("\nCSV: results/fig1a_expected_return.csv, results/fig1b_monotone.csv");
+    Ok(())
+}

@@ -1,0 +1,218 @@
+//! Closed-form expected return `E[R_j(t; l)]` — the Theorem of §4.
+//!
+//! ```text
+//! E[R_j(t; l)] = sum_{nu=2}^{nu_m} U(t - l/mu - tau nu) h_nu f_nu(t; l)
+//!   f_nu(t; l) = l (1 - exp(-(alpha mu / l)(t - l/mu - tau nu)))
+//!   h_nu       = (nu - 1)(1 - p)^2 p^(nu-2)
+//!   nu_m:  t - tau nu_m > 0  and  t - tau (nu_m + 1) <= 0
+//! ```
+//!
+//! `h_nu` is the pmf of the negative-binomial total transmission count
+//! (down + up), and `f_nu / l` the conditional probability that the
+//! shifted-exponential compute finishes inside the remaining slack.
+
+use crate::simnet::delay::ClientModel;
+
+/// Truncate the transmission-count sum once the remaining geometric tail
+/// is below this mass (only relevant when `tau` is tiny and `nu_m` huge).
+const TAIL_EPS: f64 = 1e-12;
+
+/// `P(T_j <= t)` for a client processing `l` points (continuous `l > 0`).
+///
+/// `l == 0` is treated as the no-compute limit: only the two-way
+/// communication must land inside `t`.
+pub fn prob_return(m: &ClientModel, l: f64, t: f64) -> f64 {
+    assert!(l >= 0.0, "negative load");
+    if t <= 0.0 {
+        return 0.0;
+    }
+    let (mu, alpha, tau, p) = (m.mu, m.alpha, m.tau, m.p_fail);
+
+    // CDF of the compute time (deterministic l/mu + Exp(alpha mu / l))
+    // evaluated at the time remaining after communication.
+    let compute_cdf_at = |t_minus_comm: f64| -> f64 {
+        let slack = t_minus_comm - if l == 0.0 { 0.0 } else { l / mu };
+        if slack <= 0.0 {
+            0.0
+        } else if l == 0.0 {
+            1.0
+        } else {
+            1.0 - (-(alpha * mu / l) * slack).exp()
+        }
+    };
+
+    if p == 0.0 {
+        // Exactly one down + one up transmission.
+        return compute_cdf_at(t - 2.0 * tau);
+    }
+    if tau == 0.0 {
+        // Communication is free regardless of retransmission count.
+        return compute_cdf_at(t);
+    }
+
+    // nu_m: largest total transmission count with positive slack.
+    let nu_m = (t / tau).ceil() as i64 - 1; // t - tau*nu_m > 0, t - tau*(nu_m+1) <= 0
+    if nu_m < 2 {
+        return 0.0;
+    }
+
+    let q = 1.0 - p;
+    let mut total = 0.0;
+    let mut tail = 1.0; // remaining NB(2, q) mass for nu >= current
+    for nu in 2..=nu_m {
+        let h = (nu - 1) as f64 * q * q * p.powi((nu - 2) as i32);
+        total += h * compute_cdf_at(t - tau * nu as f64);
+        tail -= h;
+        if tail < TAIL_EPS {
+            break;
+        }
+    }
+    total.clamp(0.0, 1.0)
+}
+
+/// Closed-form expected return `E[R_j(t; l)] = l * P(T_j <= t)`.
+pub fn expected_return(m: &ClientModel, l: f64, t: f64) -> f64 {
+    if l <= 0.0 {
+        return 0.0;
+    }
+    l * prob_return(m, l, t)
+}
+
+/// Piece boundaries of `E[R_j(t; .)]` in the load variable: the step
+/// `U(t - l/mu - tau nu)` flips at `l = mu (t - nu tau)` for each
+/// transmission count `nu = 2..=nu_m`. Returned descending, clipped to
+/// `(0, cap]`.
+pub fn piece_boundaries(m: &ClientModel, t: f64, cap: f64) -> Vec<f64> {
+    let mut bounds = Vec::new();
+    if m.tau == 0.0 || m.p_fail == 0.0 {
+        // Single piece: only the nu=2 (or free-comm) boundary matters.
+        let b = m.mu * (t - 2.0 * m.tau);
+        if b > 0.0 {
+            bounds.push(b.min(cap));
+        }
+        return bounds;
+    }
+    let nu_m = (t / m.tau).ceil() as i64 - 1;
+    for nu in 2..=nu_m.min(2 + 200) {
+        let b = m.mu * (t - nu as f64 * m.tau);
+        if b > 0.0 {
+            bounds.push(b.min(cap));
+        } else {
+            break;
+        }
+    }
+    bounds.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    bounds.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::rng::Rng;
+
+    fn model() -> ClientModel {
+        ClientModel { mu: 100.0, alpha: 2.0, tau: 0.05, p_fail: 0.1 }
+    }
+
+    #[test]
+    fn zero_when_deadline_too_tight() {
+        let m = model();
+        // t <= 2 tau: even instant compute cannot return.
+        assert_eq!(expected_return(&m, 10.0, 0.09), 0.0);
+        assert_eq!(expected_return(&m, 10.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn zero_load_returns_zero() {
+        assert_eq!(expected_return(&model(), 0.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn approaches_full_load_for_generous_deadline() {
+        let m = model();
+        let e = expected_return(&m, 50.0, 1e4);
+        assert!((e - 50.0).abs() < 1e-6, "{e}");
+    }
+
+    #[test]
+    fn monotone_in_deadline() {
+        let m = model();
+        let mut prev = -1.0;
+        for i in 1..200 {
+            let t = i as f64 * 0.05;
+            let e = expected_return(&m, 40.0, t);
+            assert!(e >= prev - 1e-12, "E dropped at t={t}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn matches_monte_carlo() {
+        // The closed form must agree with simulation of the §2.2 model —
+        // this ties the Theorem to the simulator implementation.
+        let m = model();
+        let mut rng = Rng::new(42);
+        for &(l, t) in &[(20usize, 0.5f64), (50, 1.0), (80, 1.2), (30, 0.35)] {
+            let analytic = prob_return(&m, l as f64, t);
+            let mc = m.mc_prob_return(l, t, 200_000, &mut rng);
+            assert!(
+                (analytic - mc).abs() < 0.006,
+                "l={l} t={t}: analytic {analytic} vs mc {mc}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_monte_carlo_reliable_link() {
+        let m = ClientModel { p_fail: 0.0, ..model() };
+        let mut rng = Rng::new(43);
+        let analytic = prob_return(&m, 40.0, 0.8);
+        let mc = m.mc_prob_return(40, 0.8, 200_000, &mut rng);
+        assert!((analytic - mc).abs() < 0.006, "{analytic} vs {mc}");
+    }
+
+    #[test]
+    fn matches_monte_carlo_high_erasure() {
+        let m = ClientModel { p_fail: 0.6, ..model() };
+        let mut rng = Rng::new(44);
+        let analytic = prob_return(&m, 20.0, 1.5);
+        let mc = m.mc_prob_return(20, 1.5, 200_000, &mut rng);
+        assert!((analytic - mc).abs() < 0.006, "{analytic} vs {mc}");
+    }
+
+    #[test]
+    fn free_communication_limit() {
+        // tau = 0: P(T<=t) = 1 - exp(-(alpha mu / l)(t - l/mu)).
+        let m = ClientModel { tau: 0.0, ..model() };
+        let (l, t) = (50.0, 1.0);
+        let want = 1.0 - (-(m.alpha * m.mu / l) * (t - l / m.mu)).exp();
+        assert!((prob_return(&m, l, t) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boundaries_descend_and_lie_in_range() {
+        let m = model();
+        let bs = piece_boundaries(&m, 1.0, 60.0);
+        assert!(!bs.is_empty());
+        for w in bs.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+        for &b in &bs {
+            assert!(b > 0.0 && b <= 60.0);
+        }
+        // First boundary is mu (t - 2 tau), possibly capped.
+        assert!((bs[0] - (100.0f64 * (1.0 - 0.1)).min(60.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_figure1_regime_is_piecewise() {
+        // Fig 1(a) parameters: p=0.9, tau=sqrt(3), mu=2, t=10 — several
+        // pieces with visible mass beyond nu=2.
+        let m = ClientModel { mu: 2.0, alpha: 2.0, tau: 3f64.sqrt(), p_fail: 0.9 };
+        let bs = piece_boundaries(&m, 10.0, 1e9);
+        assert!(bs.len() >= 3, "expected several pieces, got {bs:?}");
+        let e = expected_return(&m, 5.0, 10.0);
+        assert!(e > 0.0 && e < 5.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's analytical contribution: optimal load allocation.
+//!
+//! * [`expected_return`] — closed-form `E[R_j(t; l)]` (the Theorem in §4).
+//! * [`piecewise`] — per-client maximization of the piecewise-concave
+//!   expected return for a fixed deadline (Step 1, eq. 8-9 + eq. 14).
+//! * [`optimizer`] — binary search for the minimum deadline `t*` meeting
+//!   the aggregate-return target (Step 2, eq. 10), plus the Remark-5 joint
+//!   optimization that treats the MEC server as the `(n+1)`-th node to
+//!   pick the coding redundancy `u`.
+
+pub mod expected_return;
+pub mod optimizer;
+pub mod piecewise;
+
+pub use expected_return::expected_return;
+pub use optimizer::{optimize_deadline, optimize_with_server, AllocationPlan};
+pub use piecewise::optimal_load;

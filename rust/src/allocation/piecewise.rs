@@ -1,0 +1,203 @@
+//! Step 1 of the load policy (paper eq. 8-9): for a fixed deadline `t`,
+//! maximize the piecewise-concave `E[R_j(t; l)]` per client.
+//!
+//! On each concavity piece we run golden-section search, seeded with the
+//! paper's closed-form single-term optimum (eq. 14, via the Lambert-W
+//! `load_fraction`); the best over pieces (and piece boundaries) wins.
+
+use crate::allocation::expected_return::{expected_return, piece_boundaries};
+use crate::mathx::lambertw::load_fraction;
+use crate::simnet::delay::ClientModel;
+
+/// Result of per-client load optimization.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadChoice {
+    /// Optimal (continuous) load `l*_j(t)`, in data points.
+    pub load: f64,
+    /// The maximized expected return `E[R_j(t; l*)]`.
+    pub expected: f64,
+}
+
+const GOLDEN: f64 = 0.618_033_988_749_894_8;
+
+/// Golden-section maximization of a unimodal function on `[lo, hi]`.
+fn golden_max(f: &impl Fn(f64) -> f64, mut lo: f64, mut hi: f64, iters: usize) -> (f64, f64) {
+    let mut x1 = hi - GOLDEN * (hi - lo);
+    let mut x2 = lo + GOLDEN * (hi - lo);
+    let mut f1 = f(x1);
+    let mut f2 = f(x2);
+    for _ in 0..iters {
+        if f1 < f2 {
+            lo = x1;
+            x1 = x2;
+            f1 = f2;
+            x2 = lo + GOLDEN * (hi - lo);
+            f2 = f(x2);
+        } else {
+            hi = x2;
+            x2 = x1;
+            f2 = f1;
+            x1 = hi - GOLDEN * (hi - lo);
+            f1 = f(x1);
+        }
+    }
+    let xm = 0.5 * (lo + hi);
+    (xm, f(xm))
+}
+
+/// Maximize `E[R_j(t; l)]` over `l in [0, cap]` (Step 1, one client).
+///
+/// Piece boundaries sit at `l = mu (t - nu tau)`; inside a piece the
+/// function is a finite sum of strictly concave `f_nu` terms (§4), so a
+/// unimodal search per piece is exact up to tolerance.
+pub fn optimal_load(m: &ClientModel, t: f64, cap: f64) -> LoadChoice {
+    assert!(cap >= 0.0);
+    let f = |l: f64| expected_return(m, l, t);
+    let mut best = LoadChoice { load: 0.0, expected: 0.0 };
+    let mut consider = |l: f64| {
+        let l = l.clamp(0.0, cap);
+        let e = f(l);
+        if e > best.expected {
+            best = LoadChoice { load: l, expected: e };
+        }
+    };
+
+    // Candidate 1: the paper's closed-form per-term optimum (eq. 14) for
+    // each transmission count whose boundary is active.
+    let kappa = load_fraction(m.alpha);
+    let boundaries = piece_boundaries(m, t, cap);
+    if boundaries.is_empty() {
+        return best; // deadline below 2 tau: nothing can return
+    }
+    if m.tau == 0.0 || m.p_fail == 0.0 {
+        consider(kappa * m.mu * (t - 2.0 * m.tau));
+    } else {
+        let nu_m = (t / m.tau).ceil() as i64 - 1;
+        for nu in 2..=nu_m.min(2 + 64) {
+            let slack = t - nu as f64 * m.tau;
+            if slack <= 0.0 {
+                break;
+            }
+            consider(kappa * m.mu * slack);
+        }
+    }
+
+    // Candidate 2: golden-section search on every piece interval.
+    // boundaries are descending; pieces are (b_{k+1}, b_k].
+    let mut hi = boundaries[0];
+    consider(hi);
+    for &b in boundaries.iter().skip(1) {
+        let lo = b;
+        let (x, _) = golden_max(&f, lo, hi, 60);
+        consider(x);
+        consider(lo);
+        hi = lo;
+    }
+    // Last piece down to 0.
+    let (x, _) = golden_max(&f, 0.0, hi, 60);
+    consider(x);
+
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testx::{check, Gen};
+
+    fn model() -> ClientModel {
+        ClientModel { mu: 100.0, alpha: 2.0, tau: 0.05, p_fail: 0.1 }
+    }
+
+    #[test]
+    fn beats_dense_grid() {
+        let m = model();
+        for &t in &[0.3, 0.5, 1.0, 2.0] {
+            let cap = 200.0;
+            let got = optimal_load(&m, t, cap);
+            let mut grid_best = 0.0f64;
+            for i in 0..=20_000 {
+                let l = cap * i as f64 / 20_000.0;
+                grid_best = grid_best.max(expected_return(&m, l, t));
+            }
+            assert!(
+                got.expected >= grid_best - 1e-4 * grid_best.max(1.0),
+                "t={t}: optimizer {} < grid {grid_best}",
+                got.expected
+            );
+        }
+    }
+
+    #[test]
+    fn respects_cap() {
+        let m = model();
+        // Generous deadline: unconstrained optimum far above cap=30.
+        let got = optimal_load(&m, 100.0, 30.0);
+        assert!(got.load <= 30.0 + 1e-9);
+        assert!((got.expected - 30.0).abs() < 1e-3, "{}", got.expected);
+    }
+
+    #[test]
+    fn tight_deadline_gives_zero() {
+        let m = model();
+        let got = optimal_load(&m, 0.05, 100.0);
+        assert_eq!(got.load, 0.0);
+        assert_eq!(got.expected, 0.0);
+    }
+
+    #[test]
+    fn figure_1a_regime() {
+        // Fig 1(a): p=0.9, tau=sqrt(3), mu=2, t=10. The optimum must be an
+        // interior point of one of the first pieces, with E < l.
+        let m = ClientModel { mu: 2.0, alpha: 2.0, tau: 3f64.sqrt(), p_fail: 0.9 };
+        let got = optimal_load(&m, 10.0, 1e9);
+        assert!(got.load > 0.0);
+        assert!(got.expected > 0.0 && got.expected < got.load);
+    }
+
+    #[test]
+    fn property_optimum_dominates_random_loads() {
+        check("optimal_load dominates", 120, |g: &mut Gen| {
+            let m = ClientModel {
+                mu: g.f64_range(1.0, 500.0),
+                alpha: g.f64_range(0.2, 10.0),
+                tau: g.f64_range(0.001, 2.0),
+                p_fail: g.f64_range(0.0, 0.95),
+            };
+            let t = g.f64_range(0.01, 20.0);
+            let cap = g.f64_range(1.0, 500.0);
+            let best = optimal_load(&m, t, cap);
+            for _ in 0..25 {
+                let l = g.f64_range(0.0, cap);
+                let e = expected_return(&m, l, t);
+                assert!(
+                    e <= best.expected + 1e-6 * best.expected.max(1.0) + 1e-9,
+                    "random load {l} returns {e} > optimum {} (load {})",
+                    best.expected,
+                    best.load
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn property_monotone_in_deadline() {
+        // Remark 4: the optimized expected return is monotone in t.
+        check("optimized return monotone", 60, |g: &mut Gen| {
+            let m = ClientModel {
+                mu: g.f64_range(1.0, 300.0),
+                alpha: g.f64_range(0.2, 8.0),
+                tau: g.f64_range(0.001, 1.0),
+                p_fail: g.f64_range(0.0, 0.9),
+            };
+            let cap = g.f64_range(10.0, 300.0);
+            let mut prev = 0.0;
+            for i in 1..=40 {
+                let t = i as f64 * 0.25;
+                let e = optimal_load(&m, t, cap).expected;
+                assert!(e >= prev - 1e-6, "optimized E dropped at t={t}");
+                prev = e;
+            }
+        });
+    }
+}

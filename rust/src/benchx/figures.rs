@@ -1,0 +1,116 @@
+//! Shared experiment harness used by the `cargo bench` figure/table
+//! targets: runs scheme pairs, emits the CSVs behind each paper figure,
+//! and formats Table-1 rows.
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, Scheme};
+use crate::fl::trainer::Trainer;
+use crate::metrics::TrainReport;
+
+/// Resolve the bench preset: `CODEDFEDL_BENCH_PRESET` env var, else `small`
+/// (the right scale for this 1-core host; `paper` is supported but slow).
+pub fn bench_preset() -> String {
+    std::env::var("CODEDFEDL_BENCH_PRESET").unwrap_or_else(|_| "small".to_string())
+}
+
+/// Build a config for the bench runs, honoring the env preset and an
+/// optional `CODEDFEDL_BENCH_EPOCHS` override.
+pub fn bench_config(dataset: &str, scheme: Scheme) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::preset(&bench_preset())?;
+    cfg.set("dataset", dataset)?;
+    cfg.scheme = scheme;
+    if let Ok(e) = std::env::var("CODEDFEDL_BENCH_EPOCHS") {
+        cfg.set("train.epochs", &e)?;
+    }
+    if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+        eprintln!("(artifacts missing — falling back to the native backend)");
+        cfg.use_xla = false;
+    }
+    Ok(cfg)
+}
+
+/// Run one training experiment.
+pub fn run(cfg: &ExperimentConfig) -> Result<TrainReport> {
+    let mut trainer = Trainer::from_config(cfg)?;
+    trainer.run()
+}
+
+/// Run the uncoded/coded pair on a dataset.
+pub fn run_pair(dataset: &str) -> Result<(TrainReport, TrainReport)> {
+    let uncoded = run(&bench_config(dataset, Scheme::Uncoded)?)?;
+    let coded = run(&bench_config(dataset, Scheme::Coded)?)?;
+    Ok((uncoded, coded))
+}
+
+/// Emit the two CSVs behind one accuracy figure (vs time, vs iteration)
+/// and print a compact series table to stdout.
+pub fn emit_figure(tag: &str, uncoded: &TrainReport, coded: &TrainReport) -> Result<()> {
+    std::fs::create_dir_all("results")?;
+    uncoded.write_csv(&format!("results/{tag}_uncoded.csv"))?;
+    coded.write_csv(&format!("results/{tag}_coded.csv"))?;
+    println!("\n{tag}: accuracy vs simulated wall-clock (paper fig (a)) and vs iteration (fig (b))");
+    println!("{:>12} {:>10} | {:>12} {:>10}", "unc time(s)", "unc acc", "cod time(s)", "cod acc");
+    let rows = uncoded.records.len().max(coded.records.len());
+    let every = (rows / 12).max(1);
+    for i in (0..rows).step_by(every) {
+        let u = uncoded.records.get(i);
+        let c = coded.records.get(i);
+        println!(
+            "{:>12} {:>10} | {:>12} {:>10}",
+            u.map(|r| format!("{:.0}", r.sim_time_s)).unwrap_or_default(),
+            u.map(|r| format!("{:.4}", r.accuracy)).unwrap_or_default(),
+            c.map(|r| format!("{:.0}", r.sim_time_s)).unwrap_or_default(),
+            c.map(|r| format!("{:.4}", r.accuracy)).unwrap_or_default(),
+        );
+    }
+    println!("CSV: results/{tag}_{{uncoded,coded}}.csv");
+    Ok(())
+}
+
+/// One Table-1 row: gamma, crossing times, gain.
+pub struct Table1Row {
+    pub dataset: String,
+    pub gamma: f64,
+    pub t_u: Option<f64>,
+    pub t_c: Option<f64>,
+}
+
+impl Table1Row {
+    pub fn compute(dataset: &str, uncoded: &TrainReport, coded: &TrainReport) -> Table1Row {
+        // §5.2 methodology: gamma is a target accuracy both schemes reach;
+        // we take just under the weaker of the two best accuracies.
+        let gamma = uncoded.best_accuracy().min(coded.best_accuracy()) * 0.995;
+        Table1Row {
+            dataset: dataset.to_string(),
+            gamma,
+            t_u: uncoded.time_to_accuracy(gamma),
+            t_c: coded.time_to_accuracy(gamma),
+        }
+    }
+
+    pub fn gain(&self) -> Option<f64> {
+        match (self.t_u, self.t_c) {
+            (Some(u), Some(c)) if c > 0.0 => Some(u / c),
+            _ => None,
+        }
+    }
+
+    pub fn print_header() {
+        println!(
+            "{:<16} {:>9} {:>12} {:>12} {:>8}",
+            "Dataset", "gamma(%)", "t_gamma^U(s)", "t_gamma^C(s)", "Gain"
+        );
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<16} {:>9.1} {:>12} {:>12} {:>8}",
+            self.dataset,
+            100.0 * self.gamma,
+            self.t_u.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".into()),
+            self.t_c.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".into()),
+            self.gain().map(|g| format!("x{g:.2}")).unwrap_or_else(|| "-".into()),
+        );
+    }
+}

@@ -1,0 +1,200 @@
+//! Micro/meso benchmark harness (the offline registry has no criterion).
+//!
+//! [`Bencher`] runs a closure through warmup + timed iterations, reports
+//! mean/p50/p95 latency and throughput, and can emit its table as text or
+//! CSV. The `rust/benches/*.rs` targets (`cargo bench`) are thin drivers
+//! over this module plus the experiment harnesses in [`crate::fl`].
+
+pub mod figures;
+
+use std::time::Instant;
+
+use crate::mathx::stats::{quantile, OnlineStats};
+
+/// One benchmark's timing summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    /// Optional work-per-iteration for throughput (e.g. FLOPs, samples).
+    pub work_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Work units per second, if work was declared.
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.mean_s)
+    }
+
+    /// Human line: `name  mean  p50  p95  [thrpt]`.
+    pub fn format_line(&self) -> String {
+        let thr = match self.throughput() {
+            Some(t) => format!("  {:>12}/s", si(t)),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} x{}{}",
+            self.name,
+            fmt_s(self.mean_s),
+            fmt_s(self.p50_s),
+            fmt_s(self.p95_s),
+            self.iters,
+            thr
+        )
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+fn si(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Benchmark runner with a result table.
+pub struct Bencher {
+    /// Target measurement time per benchmark (seconds).
+    pub target_time_s: f64,
+    /// Max iterations regardless of target time.
+    pub max_iters: usize,
+    /// Warmup iterations.
+    pub warmup: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { target_time_s: 1.0, max_iters: 1000, warmup: 2, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick preset for expensive end-to-end benches.
+    pub fn heavy() -> Self {
+        Bencher { target_time_s: 0.0, max_iters: 1, warmup: 0, results: Vec::new() }
+    }
+
+    /// Time `f`, auto-scaling iteration count to `target_time_s`.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.bench_with_work(name, None, f)
+    }
+
+    /// Time `f` and report `work` units per iteration as throughput.
+    pub fn bench_with_work<F: FnMut()>(
+        &mut self,
+        name: &str,
+        work: Option<f64>,
+        mut f: F,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let mut stats = OnlineStats::new();
+        let t_start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            f();
+            let dt = t0.elapsed().as_secs_f64();
+            samples.push(dt);
+            stats.push(dt);
+            if samples.len() >= self.max_iters
+                || (t_start.elapsed().as_secs_f64() >= self.target_time_s && samples.len() >= 1)
+            {
+                break;
+            }
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: stats.mean(),
+            p50_s: quantile(&samples, 0.5),
+            p95_s: quantile(&samples, 0.95),
+            min_s: stats.min(),
+            work_per_iter: work,
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the result table to stdout.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>10} {:>10} {:>10}",
+            "benchmark", "mean", "p50", "p95"
+        );
+        for r in &self.results {
+            println!("{}", r.format_line());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher { target_time_s: 0.01, max_iters: 50, warmup: 1, results: vec![] };
+        let r = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean_s > 0.0);
+        assert!(r.p95_s >= r.p50_s * 0.5);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bencher { target_time_s: 0.001, max_iters: 3, warmup: 0, results: vec![] };
+        let r = b.bench_with_work("w", Some(1000.0), || {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        let t = r.throughput().unwrap();
+        assert!(t > 0.0 && t < 1e8, "{t}");
+    }
+
+    #[test]
+    fn formatting_is_humane() {
+        assert_eq!(fmt_s(0.5e-9), "0.5ns");
+        assert!(fmt_s(2.5e-5).ends_with("µs"));
+        assert!(fmt_s(0.002).ends_with("ms"));
+        assert!(fmt_s(2.0).ends_with('s'));
+        assert_eq!(si(2_000_000.0), "2.00M");
+    }
+}

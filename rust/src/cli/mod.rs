@@ -1,0 +1,226 @@
+//! Command-line argument parser substrate (no clap offline).
+//!
+//! Supports `subcommand --key value --key=value --flag positional` with
+//! typed accessors, unknown-flag detection and generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declarative description of one flag.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` if the flag takes a value; `false` for boolean switches.
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Get a flag's value (or its declared default).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Required value.
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+
+    /// Typed accessor with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("invalid value for --{name}: '{s}' ({e})")),
+        }
+    }
+
+    /// Boolean switch present?
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// All `--key value` pairs (for config overrides).
+    pub fn values(&self) -> &BTreeMap<String, String> {
+        &self.values
+    }
+}
+
+/// A command-line interface: subcommands with flag specs.
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub subcommands: Vec<(&'static str, &'static str, Vec<FlagSpec>)>,
+}
+
+impl Cli {
+    /// Parse `argv[1..]`.
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+
+        // Subcommand is the first non-flag token.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        let specs: &[FlagSpec] = match &args.subcommand {
+            Some(sc) => {
+                let found = self.subcommands.iter().find(|(name, _, _)| name == sc);
+                match found {
+                    Some((_, _, specs)) => specs,
+                    None => bail!("unknown subcommand '{sc}'\n\n{}", self.usage()),
+                }
+            }
+            None => &[],
+        };
+
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body == "help" {
+                    bail!("{}", self.usage());
+                }
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs.iter().find(|s| s.name == name);
+                match spec {
+                    Some(s) if s.takes_value => {
+                        let val = match inline_val {
+                            Some(v) => v,
+                            None => it
+                                .next()
+                                .ok_or_else(|| anyhow!("flag --{name} expects a value"))?
+                                .clone(),
+                        };
+                        args.values.insert(name, val);
+                    }
+                    Some(_) => {
+                        if inline_val.is_some() {
+                            bail!("flag --{name} does not take a value");
+                        }
+                        args.switches.push(name);
+                    }
+                    None => bail!("unknown flag --{name}\n\n{}", self.usage()),
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+
+        // Fill declared defaults.
+        for s in specs {
+            if s.takes_value && !args.values.contains_key(s.name) {
+                if let Some(d) = s.default {
+                    args.values.insert(s.name.to_string(), d.to_string());
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    /// Usage text.
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} <subcommand> [flags]\n\nSUBCOMMANDS:\n",
+            self.program, self.about, self.program);
+        for (name, help, specs) in &self.subcommands {
+            out.push_str(&format!("  {name:<12} {help}\n"));
+            for s in specs {
+                let arg = if s.takes_value { format!("--{} <v>", s.name) } else { format!("--{}", s.name) };
+                let def = s.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                out.push_str(&format!("      {arg:<26} {}{def}\n", s.help));
+            }
+        }
+        out
+    }
+}
+
+/// Helper to build a value-taking flag.
+pub fn flag(name: &'static str, help: &'static str, default: Option<&'static str>) -> FlagSpec {
+    FlagSpec { name, help, takes_value: true, default }
+}
+
+/// Helper to build a boolean switch.
+pub fn switch(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, help, takes_value: false, default: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            program: "codedfedl",
+            about: "test",
+            subcommands: vec![(
+                "train",
+                "run training",
+                vec![
+                    flag("preset", "config preset", Some("small")),
+                    flag("epochs", "epoch count", None),
+                    switch("verbose", "more logs"),
+                ],
+            )],
+        }
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_and_defaults() {
+        let a = cli().parse(&sv(&["train", "--epochs", "10", "--verbose"])).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("epochs"), Some("10"));
+        assert_eq!(a.get("preset"), Some("small")); // default filled
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cli().parse(&sv(&["train", "--epochs=25"])).unwrap();
+        assert_eq!(a.get_parse("epochs", 0usize).unwrap(), 25);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(cli().parse(&sv(&["train", "--nope", "1"])).is_err());
+        assert!(cli().parse(&sv(&["wat"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(cli().parse(&sv(&["train", "--epochs"])).is_err());
+    }
+
+    #[test]
+    fn typed_accessor_errors_cleanly() {
+        let a = cli().parse(&sv(&["train", "--epochs", "abc"])).unwrap();
+        assert!(a.get_parse("epochs", 0usize).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_flags() {
+        let u = cli().usage();
+        assert!(u.contains("train") && u.contains("--preset"));
+    }
+}

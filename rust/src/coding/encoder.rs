@@ -1,0 +1,151 @@
+//! Client-side parity encoding and server-side composite accumulation
+//! (paper §3.2): `Xc_j = G_j W_j Xhat_j`, `Yc_j = G_j W_j Y_j`, and the
+//! server sums client parities into the composite parity dataset.
+//!
+//! Encoding happens once per global mini-batch before training; the
+//! generator matrices `G_j` stay on the client and are dropped after
+//! use (privacy, Remark 2).
+
+use anyhow::Result;
+
+use crate::coding::generator::sample_generator;
+use crate::mathx::linalg::Matrix;
+use crate::mathx::rng::Rng;
+use crate::runtime::backend::ComputeBackend;
+
+/// The server's composite parity dataset for one global mini-batch:
+/// `(u_max, q)` features and `(u_max, c)` labels (rows >= u are zero).
+#[derive(Debug, Clone)]
+pub struct CompositeParity {
+    pub x: Matrix,
+    pub y: Matrix,
+    /// Live parity rows.
+    pub u: usize,
+}
+
+impl CompositeParity {
+    /// Zero parity (uncoded runs / before accumulation).
+    pub fn zeros(u: usize, u_max: usize, q: usize, c: usize) -> CompositeParity {
+        CompositeParity { x: Matrix::zeros(u_max, q), y: Matrix::zeros(u_max, c), u }
+    }
+
+    /// Accumulate one client's parity contribution.
+    pub fn add(&mut self, x: &Matrix, y: &Matrix) {
+        self.x.axpy_inplace(1.0, x);
+        self.y.axpy_inplace(1.0, y);
+    }
+
+    /// Row mask for the server's coded-gradient call (1 for live rows).
+    pub fn mask(&self) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.x.rows()];
+        for v in m.iter_mut().take(self.u) {
+            *v = 1.0;
+        }
+        m
+    }
+}
+
+/// Encode one client's `l`-row mini-batch slice: sample the private
+/// `G_j`, apply the §3.4 weights, and return `(Xc_j, Yc_j)` of shape
+/// `(u_max, q)` / `(u_max, c)`.
+///
+/// `G_j` is sampled from the *client's own* rng stream and never leaves
+/// this function — the server only ever sees the products (Remark 2).
+pub fn encode_client_slice(
+    backend: &dyn ComputeBackend,
+    x_slice: &Matrix,
+    y_slice: &Matrix,
+    weights: &[f32],
+    u: usize,
+    u_max: usize,
+    client_rng: &mut Rng,
+) -> Result<(Matrix, Matrix)> {
+    let l = x_slice.rows();
+    let g = sample_generator(u, u_max, l, client_rng);
+    let xc = backend.encode(&g, weights, x_slice)?;
+    let yc = backend.encode(&g, weights, y_slice)?;
+    Ok((xc, yc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::linalg::gradient_ref;
+    use crate::runtime::backend::NativeBackend;
+
+    #[test]
+    fn shapes_and_zero_tail() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(6, 4, 0.0, 1.0, &mut rng);
+        let y = Matrix::randn(6, 2, 0.0, 1.0, &mut rng);
+        let w = vec![1.0f32; 6];
+        let (xc, yc) =
+            encode_client_slice(&NativeBackend, &x, &y, &w, 3, 8, &mut rng).unwrap();
+        assert_eq!(xc.shape(), (8, 4));
+        assert_eq!(yc.shape(), (8, 2));
+        for r in 3..8 {
+            assert!(xc.row(r).iter().all(|&v| v == 0.0));
+            assert!(yc.row(r).iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn composite_accumulates_client_sums() {
+        let mut rng = Rng::new(2);
+        let mut comp = CompositeParity::zeros(2, 4, 3, 2);
+        let a = Matrix::randn(4, 3, 0.0, 1.0, &mut rng);
+        let ay = Matrix::randn(4, 2, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(4, 3, 0.0, 1.0, &mut rng);
+        let by = Matrix::randn(4, 2, 0.0, 1.0, &mut rng);
+        comp.add(&a, &ay);
+        comp.add(&b, &by);
+        assert!(comp.x.max_abs_diff(&a.axpy(1.0, &b)) < 1e-6);
+        assert!(comp.y.max_abs_diff(&ay.axpy(1.0, &by)) < 1e-6);
+        assert_eq!(comp.mask(), vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn coded_gradient_is_unbiased_estimate() {
+        // Monte-Carlo over G: E[Xc^T(Xc b - Yc)] = (WX)^T((WX) b - WY),
+        // the paper's eq. 12 with the full pipeline (encode + grad).
+        let mut rng = Rng::new(3);
+        let (l, q, c, u) = (10, 5, 3, 48);
+        let x = Matrix::randn(l, q, 0.0, 1.0, &mut rng);
+        let y = Matrix::randn(l, c, 0.0, 1.0, &mut rng);
+        let beta = Matrix::randn(q, c, 0.0, 1.0, &mut rng);
+        let w: Vec<f32> = (0..l).map(|k| if k % 2 == 0 { 0.6 } else { 1.0 }).collect();
+        let wx = x.scale_rows(&w);
+        let wy = y.scale_rows(&w);
+        let want = gradient_ref(&wx, &wy, &beta, &vec![1.0; l]);
+
+        let nb = NativeBackend;
+        let trials = 300;
+        let mut acc = Matrix::zeros(q, c);
+        for _ in 0..trials {
+            let (xc, yc) = encode_client_slice(&nb, &x, &y, &w, u, u, &mut rng).unwrap();
+            let g = gradient_ref(&xc, &yc, &beta, &vec![1.0; u]);
+            acc.axpy_inplace(1.0 / trials as f32, &g);
+        }
+        let scale = want.data().iter().fold(0.0f32, |a, &b| a.max(b.abs())) + 1.0;
+        assert!(
+            acc.max_abs_diff(&want) / scale < 0.2,
+            "bias {} vs scale {scale}",
+            acc.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn generator_stays_private() {
+        // Two clients with different rng streams produce different parity
+        // from identical data — the server cannot infer the raw rows.
+        let base = Rng::new(4);
+        let mut r1 = base.fork(1);
+        let mut r2 = base.fork(2);
+        let x = Matrix::randn(5, 3, 0.0, 1.0, &mut Rng::new(9));
+        let y = Matrix::randn(5, 2, 0.0, 1.0, &mut Rng::new(10));
+        let w = vec![1.0f32; 5];
+        let (a, _) = encode_client_slice(&NativeBackend, &x, &y, &w, 4, 4, &mut r1).unwrap();
+        let (b, _) = encode_client_slice(&NativeBackend, &x, &y, &w, 4, 4, &mut r2).unwrap();
+        assert!(a.max_abs_diff(&b) > 1e-3);
+    }
+}

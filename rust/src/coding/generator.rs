@@ -1,0 +1,73 @@
+//! Client-private generator matrices `G_j` (paper §3.2): entries i.i.d.
+//! `N(0, 1/u)` so that `E[G^T G] = I` — the property that makes the coded
+//! gradient an unbiased estimate (paper eq. 11 -> 12).
+
+use crate::mathx::linalg::Matrix;
+use crate::mathx::rng::Rng;
+
+/// Sample `G_j` with `u` live parity rows inside a `(u_max, l)` matrix.
+///
+/// The artifact ABI fixes the parity dimension at `u_max`; when the
+/// configured redundancy uses `u < u_max`, rows `u..u_max` are zero and
+/// the server masks them out of the coded gradient. Live entries have
+/// variance `1/u` (the *live* count — this keeps `E[G^T G] = I`).
+pub fn sample_generator(u: usize, u_max: usize, l: usize, rng: &mut Rng) -> Matrix {
+    assert!(u > 0 && u <= u_max, "u={u} must be in 1..=u_max={u_max}");
+    let sigma = (1.0 / u as f32).sqrt();
+    let mut g = Matrix::zeros(u_max, l);
+    let live = u * l;
+    crate::mathx::distributions::fill_normal_f32(rng, 0.0, sigma, &mut g.data_mut()[..live]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_zero_padding() {
+        let mut rng = Rng::new(1);
+        let g = sample_generator(4, 10, 6, &mut rng);
+        assert_eq!(g.shape(), (10, 6));
+        for r in 4..10 {
+            assert!(g.row(r).iter().all(|&v| v == 0.0), "row {r} not zero");
+        }
+        assert!(g.row(0).iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn live_rows_have_variance_one_over_u() {
+        let mut rng = Rng::new(2);
+        let (u, l) = (64, 500);
+        let g = sample_generator(u, u, l, &mut rng);
+        let n = (u * l) as f64;
+        let mean: f64 = g.data().iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 = g.data().iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.003, "mean {mean}");
+        assert!((var - 1.0 / u as f64).abs() < 0.002, "var {var}");
+    }
+
+    #[test]
+    fn gtg_concentrates_to_identity() {
+        // The decoding property behind eq. 12 (mirrors the python test).
+        let mut rng = Rng::new(3);
+        let (u, l) = (4096, 12);
+        let g = sample_generator(u, u, l, &mut rng);
+        let gtg = g.t_matmul(&g);
+        let mut max_err = 0.0f32;
+        for r in 0..l {
+            for c in 0..l {
+                let want = if r == c { 1.0 } else { 0.0 };
+                max_err = max_err.max((gtg.get(r, c) - want).abs());
+            }
+        }
+        assert!(max_err < 0.12, "G^T G deviates by {max_err}");
+    }
+
+    #[test]
+    fn deterministic_in_rng_stream() {
+        let a = sample_generator(3, 5, 4, &mut Rng::new(7));
+        let b = sample_generator(3, 5, 4, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+}

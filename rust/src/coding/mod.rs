@@ -1,0 +1,13 @@
+//! Distributed encoding (paper §3.2 + §3.4): client-private Gaussian
+//! generator matrices, the stochastic weight matrix, and the composite
+//! parity accumulation the MEC server performs.
+
+pub mod encoder;
+pub mod generator;
+pub mod privacy;
+pub mod weights;
+
+pub use encoder::{encode_client_slice, CompositeParity};
+pub use generator::sample_generator;
+pub use privacy::{parity_attack, LeakageReport};
+pub use weights::build_weights;

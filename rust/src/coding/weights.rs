@@ -1,0 +1,73 @@
+//! The stochastic weight matrix `W_j` (paper §3.4).
+//!
+//! Each of the client's `l` mini-batch rows is weighted by the square
+//! root of its probability of *not* reaching the server by the deadline:
+//!
+//! * rows the client will process: `w = sqrt(pnr_1)`,
+//!   `pnr_1 = 1 - P(T_j <= t*)` at the optimized load;
+//! * rows never processed locally: `w = sqrt(pnr_2) = 1`.
+//!
+//! With these weights, coded gradient (expected) + uncoded return
+//! (expected) = full-batch gradient: `E[g_C] + E[g_U] = m * g_hat`
+//! (paper eqs. 12-13).
+
+/// Build the length-`l` diagonal of `W_j`.
+///
+/// `processed` lists the row indices (into the client's `l`-row slice)
+/// sampled for local processing; `pnr1` is that load's no-return
+/// probability at the deadline.
+pub fn build_weights(l: usize, processed: &[usize], pnr1: f64) -> Vec<f32> {
+    assert!((0.0..=1.0).contains(&pnr1), "pnr1 out of range: {pnr1}");
+    let mut w = vec![1.0f32; l]; // unprocessed rows: sqrt(1) = 1
+    let wp = (pnr1 as f32).sqrt();
+    for &k in processed {
+        assert!(k < l, "processed index {k} out of range (l = {l})");
+        w[k] = wp;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn processed_rows_get_sqrt_pnr() {
+        let w = build_weights(5, &[0, 2], 0.25);
+        assert_eq!(w, vec![0.5, 1.0, 0.5, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn no_processing_means_all_ones() {
+        assert_eq!(build_weights(3, &[], 0.7), vec![1.0; 3]);
+    }
+
+    #[test]
+    fn reliable_return_zeroes_processed_rows() {
+        // pnr1 = 0: rows certain to arrive carry no parity weight at all.
+        let w = build_weights(4, &[1, 3], 0.0);
+        assert_eq!(w, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn unbiasedness_identity_holds() {
+        // For every row: w^2 + (1 - pnr) * processed == 1, i.e. the coded
+        // weight plus the expected uncoded return weight sum to one
+        // (eq. 12 + eq. 13 row-wise).
+        let pnr1 = 0.3;
+        let processed = [0usize, 2, 4];
+        let l = 6;
+        let w = build_weights(l, &processed, pnr1);
+        for k in 0..l {
+            let p_return = if processed.contains(&k) { 1.0 - pnr1 } else { 0.0 };
+            let total = (w[k] as f64).powi(2) + p_return;
+            assert!((total - 1.0).abs() < 1e-6, "row {k}: {total}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_bad_index() {
+        build_weights(3, &[3], 0.5);
+    }
+}

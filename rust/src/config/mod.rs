@@ -1,0 +1,475 @@
+//! Experiment configuration: typed parameters, named presets matching the
+//! paper's Appendix A.2, `key = value` config files, and CLI overrides.
+//!
+//! Every stochastic run is fully determined by an `ExperimentConfig` (incl.
+//! `seed`), so EXPERIMENTS.md results replay exactly.
+
+use anyhow::{bail, Context, Result};
+
+/// Fixed tensor shapes of one AOT artifact set. Must mirror
+/// `python/compile/aot.py::PROFILES` — the runtime cross-checks against
+/// `artifacts/manifest.json` at load time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeProfile {
+    pub name: &'static str,
+    /// Raw feature dimension (784 for (synthetic) MNIST).
+    pub d: usize,
+    /// RFF embedding dimension (paper: 2000).
+    pub q: usize,
+    /// Label classes (10).
+    pub c: usize,
+    /// Per-client rows in one global mini-batch (paper: 12000/30 = 400).
+    pub l: usize,
+    /// Maximum parity rows the artifacts support (30% of the global batch).
+    pub u_max: usize,
+    /// Row chunk for the streaming rff/predict executables.
+    pub chunk: usize,
+}
+
+/// The four shipped profiles (see aot.py).
+pub const PROFILES: &[ShapeProfile] = &[
+    ShapeProfile { name: "tiny", d: 32, q: 64, c: 4, l: 20, u_max: 30, chunk: 50 },
+    ShapeProfile { name: "small", d: 784, q: 512, c: 10, l: 100, u_max: 900, chunk: 500 },
+    ShapeProfile { name: "medium", d: 784, q: 1024, c: 10, l: 200, u_max: 1800, chunk: 1000 },
+    ShapeProfile { name: "paper", d: 784, q: 2000, c: 10, l: 400, u_max: 3600, chunk: 1000 },
+];
+
+/// Look up a shape profile by name.
+pub fn profile(name: &str) -> Result<ShapeProfile> {
+    PROFILES
+        .iter()
+        .find(|p| p.name == name)
+        .cloned()
+        .with_context(|| format!("unknown shape profile '{name}'"))
+}
+
+/// Stochastic MEC network model parameters (paper §2.2 + Appendix A.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkConfig {
+    /// Link erasure probability `p_j` (same for all clients, §A.2).
+    pub p_fail: f64,
+    /// Best client link rate in bits/s (216 kbps, §A.2).
+    pub max_rate_bps: f64,
+    /// Link-capacity heterogeneity ladder base `k1` (rates ∝ k1^rank).
+    pub k1: f64,
+    /// Compute heterogeneity ladder base `k2` (MAC rates ∝ k2^rank).
+    pub k2: f64,
+    /// Best client MAC rate (3.072e6 MAC/s, §A.2).
+    pub max_mac_rate: f64,
+    /// Protocol overhead fraction on payload bits (0.10, §A.2).
+    pub overhead: f64,
+    /// Bits per scalar (32, §A.2).
+    pub bits_per_scalar: f64,
+    /// Shifted-exponential shape `alpha_j` (compute-vs-memory ratio, §2.2).
+    pub alpha: f64,
+    /// MEC-server processing rate as a multiple of the fastest client
+    /// (Remark-5 joint optimization; the paper assumes a "reliable and
+    /// powerful" server).
+    pub server_speedup: f64,
+    /// Uplink/downlink per-transmission time ratio (footnote 1: 1.0 =
+    /// the paper's symmetric model; >1 models slower LTE uplinks).
+    pub uplink_ratio: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            p_fail: 0.1,
+            max_rate_bps: 216_000.0,
+            k1: 0.95,
+            k2: 0.8,
+            max_mac_rate: 3.072e6,
+            overhead: 0.10,
+            bits_per_scalar: 32.0,
+            alpha: 2.0,
+            server_speedup: 50.0,
+            uplink_ratio: 1.0,
+        }
+    }
+}
+
+/// Training hyper-parameters (paper Appendix A.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    /// Initial step size (paper: 6).
+    pub lr0: f64,
+    /// Multiplicative step decay (paper: 0.8).
+    pub decay: f64,
+    /// Epochs at which decay is applied (paper: 40 and 65).
+    pub decay_epochs: Vec<usize>,
+    /// Ridge regularization (paper: 9e-6).
+    pub lambda: f64,
+    /// Coding redundancy as a fraction of the global mini-batch (0.10).
+    pub redundancy: f64,
+    /// RBF kernel width (paper: 5).
+    pub sigma: f64,
+    /// Evaluate test accuracy every this many global steps.
+    pub eval_every_steps: usize,
+}
+
+/// Which aggregation scheme the trainer runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Baseline: every client computes its full slice, server waits for all.
+    Uncoded,
+    /// CodedFedL with the paper's experimental setting: fixed coding
+    /// redundancy (`train.redundancy`), deadline from eq. 10.
+    Coded,
+    /// CodedFedL with Remark-5 joint optimization: the MEC server is the
+    /// (n+1)-th node and the redundancy `u` is chosen by the optimizer
+    /// (capped at the artifact's `u_max`).
+    CodedJoint,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Result<Scheme> {
+        match s {
+            "uncoded" => Ok(Scheme::Uncoded),
+            "coded" | "codedfedl" => Ok(Scheme::Coded),
+            "coded-joint" | "joint" => Ok(Scheme::CodedJoint),
+            _ => bail!("unknown scheme '{s}' (expected 'uncoded', 'coded' or 'coded-joint')"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Uncoded => "uncoded",
+            Scheme::Coded => "coded",
+            Scheme::CodedJoint => "coded-joint",
+        }
+    }
+}
+
+/// Complete, replayable experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub profile: ShapeProfile,
+    /// `synth-mnist`, `synth-fashion`, or `mnist` (IDX files in data_dir).
+    pub dataset: String,
+    pub data_dir: String,
+    pub n_clients: usize,
+    pub m_train: usize,
+    pub m_test: usize,
+    pub seed: u64,
+    pub net: NetworkConfig,
+    pub train: TrainConfig,
+    pub scheme: Scheme,
+    pub artifacts_dir: String,
+    /// `false` = native linalg fallback (no PJRT); used by pure-simulation
+    /// paths and tests that must run without artifacts.
+    pub use_xla: bool,
+    /// Tolerance `epsilon` in the waiting-time optimization (paper eq. 10).
+    pub epsilon: f64,
+}
+
+impl ExperimentConfig {
+    /// Named preset. `tiny` is for tests, `small` is the default
+    /// experiment scale on this 1-core host, `paper` is Appendix A.2.
+    pub fn preset(name: &str) -> Result<ExperimentConfig> {
+        let cfg = match name {
+            "tiny" => ExperimentConfig {
+                profile: profile("tiny")?,
+                dataset: "synth-mnist".into(),
+                data_dir: "data".into(),
+                n_clients: 5,
+                m_train: 500,
+                m_test: 100,
+                seed: 7,
+                net: NetworkConfig::default(),
+                train: TrainConfig {
+                    epochs: 10,
+                    lr0: 2.0,
+                    decay: 0.8,
+                    decay_epochs: vec![6, 8],
+                    lambda: 1e-5,
+                    redundancy: 0.10,
+                    sigma: 3.0,
+                    eval_every_steps: 5,
+                },
+                scheme: Scheme::Coded,
+                artifacts_dir: "artifacts".into(),
+                use_xla: true,
+                epsilon: 1.0,
+            },
+            "small" => ExperimentConfig {
+                profile: profile("small")?,
+                dataset: "synth-mnist".into(),
+                data_dir: "data".into(),
+                n_clients: 30,
+                m_train: 12_000,
+                m_test: 2_000,
+                seed: 7,
+                net: NetworkConfig::default(),
+                train: TrainConfig {
+                    epochs: 60,
+                    lr0: 6.0,
+                    decay: 0.8,
+                    decay_epochs: vec![30, 45],
+                    lambda: 9e-6,
+                    redundancy: 0.10,
+                    sigma: 5.0,
+                    eval_every_steps: 4,
+                },
+                scheme: Scheme::Coded,
+                artifacts_dir: "artifacts".into(),
+                use_xla: true,
+                epsilon: 1.0,
+            },
+            "medium" => ExperimentConfig {
+                profile: profile("medium")?,
+                dataset: "synth-mnist".into(),
+                data_dir: "data".into(),
+                n_clients: 30,
+                m_train: 24_000,
+                m_test: 4_000,
+                seed: 7,
+                net: NetworkConfig::default(),
+                train: TrainConfig {
+                    epochs: 70,
+                    lr0: 6.0,
+                    decay: 0.8,
+                    decay_epochs: vec![35, 55],
+                    lambda: 9e-6,
+                    redundancy: 0.10,
+                    sigma: 5.0,
+                    eval_every_steps: 4,
+                },
+                scheme: Scheme::Coded,
+                artifacts_dir: "artifacts".into(),
+                use_xla: true,
+                epsilon: 1.0,
+            },
+            "paper" => ExperimentConfig {
+                profile: profile("paper")?,
+                dataset: "synth-mnist".into(),
+                data_dir: "data".into(),
+                n_clients: 30,
+                m_train: 60_000,
+                m_test: 10_000,
+                seed: 7,
+                net: NetworkConfig::default(),
+                train: TrainConfig {
+                    epochs: 80,
+                    lr0: 6.0,
+                    decay: 0.8,
+                    decay_epochs: vec![40, 65],
+                    lambda: 9e-6,
+                    redundancy: 0.10,
+                    sigma: 5.0,
+                    eval_every_steps: 5,
+                },
+                scheme: Scheme::Coded,
+                artifacts_dir: "artifacts".into(),
+                use_xla: true,
+                epsilon: 1.0,
+            },
+            _ => bail!("unknown preset '{name}' (tiny|small|medium|paper)"),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Rows of the global mini-batch (n * l; paper: 12000).
+    pub fn global_batch(&self) -> usize {
+        self.n_clients * self.profile.l
+    }
+
+    /// Parity rows `u` = redundancy * global batch, clamped to the
+    /// artifact's maximum.
+    pub fn u(&self) -> usize {
+        let u = (self.train.redundancy * self.global_batch() as f64).round() as usize;
+        u.min(self.profile.u_max)
+    }
+
+    /// Per-client shard size (m_train / n).
+    pub fn shard_size(&self) -> usize {
+        self.m_train / self.n_clients
+    }
+
+    /// Global mini-batch steps per epoch (paper: 5).
+    pub fn steps_per_epoch(&self) -> usize {
+        self.shard_size() / self.profile.l
+    }
+
+    /// Payload bits for one model/gradient transfer: q*c scalars + overhead
+    /// (paper §A.2: 32-bit scalars, 10% overhead).
+    pub fn packet_bits(&self) -> f64 {
+        (self.profile.q * self.profile.c) as f64
+            * self.net.bits_per_scalar
+            * (1.0 + self.net.overhead)
+    }
+
+    /// MACs to process one data point through gradient computation
+    /// (x @ beta and x^T err: 2*q*c multiply-accumulates).
+    pub fn macs_per_point(&self) -> f64 {
+        2.0 * (self.profile.q * self.profile.c) as f64
+    }
+
+    /// Sanity-check internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        let p = &self.profile;
+        if self.m_train % self.n_clients != 0 {
+            bail!("m_train {} not divisible by n_clients {}", self.m_train, self.n_clients);
+        }
+        if self.shard_size() % p.l != 0 {
+            bail!("shard size {} not divisible by per-step rows l={}", self.shard_size(), p.l);
+        }
+        if self.u() == 0 && self.scheme == Scheme::Coded {
+            bail!("coded scheme with zero redundancy");
+        }
+        if !(0.0..1.0).contains(&self.net.p_fail) {
+            bail!("p_fail must be in [0,1)");
+        }
+        if self.train.redundancy < 0.0 || self.train.redundancy > 0.3 + 1e-9 {
+            bail!("redundancy {} outside supported [0, 0.3]", self.train.redundancy);
+        }
+        if self.train.epochs == 0 {
+            bail!("epochs must be positive");
+        }
+        Ok(())
+    }
+
+    /// Apply one dotted-key override, e.g. `net.p_fail = 0.2`,
+    /// `train.epochs = 40`, `scheme = uncoded`, `dataset = synth-fashion`.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim();
+        match key.trim() {
+            "dataset" => self.dataset = v.into(),
+            "data_dir" => self.data_dir = v.into(),
+            "profile" => self.profile = profile(v)?,
+            "n_clients" => self.n_clients = v.parse()?,
+            "m_train" => self.m_train = v.parse()?,
+            "m_test" => self.m_test = v.parse()?,
+            "seed" => self.seed = v.parse()?,
+            "scheme" => self.scheme = Scheme::parse(v)?,
+            "artifacts_dir" => self.artifacts_dir = v.into(),
+            "use_xla" => self.use_xla = v.parse()?,
+            "epsilon" => self.epsilon = v.parse()?,
+            "net.p_fail" => self.net.p_fail = v.parse()?,
+            "net.max_rate_bps" => self.net.max_rate_bps = v.parse()?,
+            "net.k1" => self.net.k1 = v.parse()?,
+            "net.k2" => self.net.k2 = v.parse()?,
+            "net.max_mac_rate" => self.net.max_mac_rate = v.parse()?,
+            "net.overhead" => self.net.overhead = v.parse()?,
+            "net.bits_per_scalar" => self.net.bits_per_scalar = v.parse()?,
+            "net.alpha" => self.net.alpha = v.parse()?,
+            "net.server_speedup" => self.net.server_speedup = v.parse()?,
+            "net.uplink_ratio" => self.net.uplink_ratio = v.parse()?,
+            "train.epochs" => self.train.epochs = v.parse()?,
+            "train.lr0" => self.train.lr0 = v.parse()?,
+            "train.decay" => self.train.decay = v.parse()?,
+            "train.decay_epochs" => {
+                self.train.decay_epochs = v
+                    .split(',')
+                    .filter(|s| !s.trim().is_empty())
+                    .map(|s| s.trim().parse::<usize>())
+                    .collect::<std::result::Result<_, _>>()?;
+            }
+            "train.lambda" => self.train.lambda = v.parse()?,
+            "train.redundancy" => self.train.redundancy = v.parse()?,
+            "train.sigma" => self.train.sigma = v.parse()?,
+            "train.eval_every_steps" => self.train.eval_every_steps = v.parse()?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a `key = value` file (# comments, blank lines ok).
+    pub fn apply_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{path}:{}: expected 'key = value'", lineno + 1))?;
+            self.set(k, v).with_context(|| format!("{path}:{}", lineno + 1))?;
+        }
+        self.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_valid_and_consistent() {
+        for name in ["tiny", "small", "medium", "paper"] {
+            let cfg = ExperimentConfig::preset(name).unwrap();
+            assert_eq!(cfg.global_batch(), cfg.n_clients * cfg.profile.l);
+            assert!(cfg.u() <= cfg.profile.u_max);
+            assert!(cfg.steps_per_epoch() >= 1);
+        }
+    }
+
+    #[test]
+    fn paper_preset_matches_appendix_a2() {
+        let cfg = ExperimentConfig::preset("paper").unwrap();
+        assert_eq!(cfg.n_clients, 30);
+        assert_eq!(cfg.global_batch(), 12_000);
+        assert_eq!(cfg.u(), 1_200); // 10% coding redundancy
+        assert_eq!(cfg.steps_per_epoch(), 5);
+        assert_eq!(cfg.profile.q, 2000);
+        assert_eq!(cfg.train.lr0, 6.0);
+        assert_eq!(cfg.train.decay_epochs, vec![40, 65]);
+        assert!((cfg.train.lambda - 9e-6).abs() < 1e-12);
+        assert_eq!(cfg.net.p_fail, 0.1);
+        assert_eq!(cfg.net.max_rate_bps, 216_000.0);
+        assert_eq!(cfg.net.k1, 0.95);
+        assert_eq!(cfg.net.k2, 0.8);
+    }
+
+    #[test]
+    fn overrides_work() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.set("train.epochs", "3").unwrap();
+        cfg.set("net.p_fail", "0.25").unwrap();
+        cfg.set("scheme", "uncoded").unwrap();
+        cfg.set("train.decay_epochs", "2, 3").unwrap();
+        assert_eq!(cfg.train.epochs, 3);
+        assert_eq!(cfg.net.p_fail, 0.25);
+        assert_eq!(cfg.scheme, Scheme::Uncoded);
+        assert_eq!(cfg.train.decay_epochs, vec![2, 3]);
+    }
+
+    #[test]
+    fn bad_overrides_rejected() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        assert!(cfg.set("nope", "1").is_err());
+        assert!(cfg.set("train.epochs", "abc").is_err());
+        assert!(cfg.set("profile", "gigantic").is_err());
+    }
+
+    #[test]
+    fn validation_catches_inconsistency() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.m_train = 501; // not divisible by 5 clients
+        assert!(cfg.validate().is_err());
+        let mut cfg2 = ExperimentConfig::preset("tiny").unwrap();
+        cfg2.net.p_fail = 1.0;
+        assert!(cfg2.validate().is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        let dir = std::env::temp_dir().join("codedfedl_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.cfg");
+        std::fs::write(&path, "# comment\ntrain.epochs = 4\nnet.k1=0.9 # inline\n").unwrap();
+        cfg.apply_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.train.epochs, 4);
+        assert_eq!(cfg.net.k1, 0.9);
+    }
+
+    #[test]
+    fn u_clamps_to_artifact_max() {
+        let mut cfg = ExperimentConfig::preset("small").unwrap();
+        cfg.train.redundancy = 0.30;
+        assert_eq!(cfg.u(), 900); // == u_max
+    }
+}

@@ -1,0 +1,137 @@
+//! In-memory labeled dataset with one-hot encoding, matching the paper's
+//! conventions: features normalized to `[0, 1]`, labels one-hot vectors.
+
+use anyhow::{ensure, Result};
+
+use crate::mathx::linalg::Matrix;
+
+/// A labeled dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// `(m, d)` features in `[0, 1]`.
+    pub x: Matrix,
+    /// `(m, c)` one-hot labels.
+    pub y: Matrix,
+    /// Integer class labels (kept for accuracy computation and sharding).
+    pub labels: Vec<usize>,
+    /// Number of classes.
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    /// Build from features + integer labels (one-hot is derived).
+    pub fn new(x: Matrix, labels: Vec<usize>, n_classes: usize) -> Result<Dataset> {
+        ensure!(x.rows() == labels.len(), "features/labels length mismatch");
+        ensure!(
+            labels.iter().all(|&l| l < n_classes),
+            "label out of range (n_classes = {n_classes})"
+        );
+        let mut y = Matrix::zeros(labels.len(), n_classes);
+        for (r, &l) in labels.iter().enumerate() {
+            y.set(r, l, 1.0);
+        }
+        Ok(Dataset { x, y, labels, n_classes })
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature dimension.
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Gather a subset by row indices.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let labels: Vec<usize> = idx.iter().map(|&i| self.labels[i]).collect();
+        Dataset {
+            x: self.x.select_rows(idx),
+            y: self.y.select_rows(idx),
+            labels,
+            n_classes: self.n_classes,
+        }
+    }
+
+    /// Accuracy of row-wise argmax predictions against the labels.
+    pub fn accuracy(&self, logits: &Matrix) -> f64 {
+        assert_eq!(logits.rows(), self.len());
+        let pred = logits.argmax_rows();
+        let hits = pred.iter().zip(&self.labels).filter(|(p, l)| p == l).count();
+        hits as f64 / self.len().max(1) as f64
+    }
+
+    /// Per-class example counts (distribution checks in tests).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            counts[l] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x = Matrix::from_vec(4, 2, vec![0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7]);
+        Dataset::new(x, vec![0, 1, 2, 1], 3).unwrap()
+    }
+
+    #[test]
+    fn one_hot_is_correct() {
+        let d = tiny();
+        assert_eq!(d.y.shape(), (4, 3));
+        for r in 0..4 {
+            for c in 0..3 {
+                let want = if c == d.labels[r] { 1.0 } else { 0.0 };
+                assert_eq!(d.y.get(r, c), want);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_labels() {
+        let x = Matrix::zeros(2, 2);
+        assert!(Dataset::new(x, vec![0, 5], 3).is_err());
+    }
+
+    #[test]
+    fn subset_gathers_consistently() {
+        let d = tiny();
+        let s = d.subset(&[3, 0]);
+        assert_eq!(s.labels, vec![1, 0]);
+        assert_eq!(s.x.row(0), d.x.row(3));
+        assert_eq!(s.y.get(0, 1), 1.0);
+    }
+
+    #[test]
+    fn accuracy_counts_argmax_hits() {
+        let d = tiny();
+        // logits predicting classes [0, 1, 0, 1] -> 3/4 correct.
+        let logits = Matrix::from_vec(
+            4,
+            3,
+            vec![
+                1.0, 0.0, 0.0, //
+                0.0, 1.0, 0.0, //
+                1.0, 0.0, 0.5, //
+                0.0, 2.0, 1.0,
+            ],
+        );
+        assert!((d.accuracy(&logits) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_counts_sum_to_len() {
+        let d = tiny();
+        assert_eq!(d.class_counts(), vec![1, 2, 1]);
+    }
+}

@@ -1,0 +1,145 @@
+//! Real-MNIST loader (IDX format, uncompressed).
+//!
+//! Used automatically when the user drops the standard files into
+//! `<data_dir>/mnist/`:
+//!   train-images-idx3-ubyte, train-labels-idx1-ubyte,
+//!   t10k-images-idx3-ubyte, t10k-labels-idx1-ubyte
+//! (gunzip the distribution files first). Features are normalized to
+//! `[0, 1]` exactly as in the paper's preprocessing.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::dataset::Dataset;
+use crate::mathx::linalg::Matrix;
+
+fn read_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Parse an IDX image file into an `(n, rows*cols)` matrix in `[0, 1]`.
+pub fn parse_idx_images(bytes: &[u8], limit: usize) -> Result<Matrix> {
+    ensure!(bytes.len() >= 16, "IDX image file too short");
+    let magic = read_u32(bytes, 0);
+    ensure!(magic == 0x0000_0803, "bad IDX image magic {magic:#x}");
+    let n = read_u32(bytes, 4) as usize;
+    let rows = read_u32(bytes, 8) as usize;
+    let cols = read_u32(bytes, 12) as usize;
+    let take = n.min(limit);
+    let pix = rows * cols;
+    ensure!(bytes.len() >= 16 + n * pix, "IDX image payload truncated");
+    let mut m = Matrix::zeros(take, pix);
+    for i in 0..take {
+        let row = m.row_mut(i);
+        let src = &bytes[16 + i * pix..16 + (i + 1) * pix];
+        for (v, &b) in row.iter_mut().zip(src) {
+            *v = b as f32 / 255.0;
+        }
+    }
+    Ok(m)
+}
+
+/// Parse an IDX label file.
+pub fn parse_idx_labels(bytes: &[u8], limit: usize) -> Result<Vec<usize>> {
+    ensure!(bytes.len() >= 8, "IDX label file too short");
+    let magic = read_u32(bytes, 0);
+    ensure!(magic == 0x0000_0801, "bad IDX label magic {magic:#x}");
+    let n = read_u32(bytes, 4) as usize;
+    let take = n.min(limit);
+    ensure!(bytes.len() >= 8 + n, "IDX label payload truncated");
+    Ok(bytes[8..8 + take].iter().map(|&b| b as usize).collect())
+}
+
+fn load_split(dir: &Path, img: &str, lab: &str, limit: usize, n_classes: usize) -> Result<Dataset> {
+    let img_bytes = std::fs::read(dir.join(img))
+        .with_context(|| format!("reading {}", dir.join(img).display()))?;
+    let lab_bytes = std::fs::read(dir.join(lab))
+        .with_context(|| format!("reading {}", dir.join(lab).display()))?;
+    let x = parse_idx_images(&img_bytes, limit)?;
+    let labels = parse_idx_labels(&lab_bytes, limit)?;
+    ensure!(x.rows() == labels.len(), "image/label count mismatch");
+    Dataset::new(x, labels, n_classes)
+}
+
+/// Load MNIST train/test from `<data_dir>/mnist/`.
+pub fn load_mnist(data_dir: &str, m_train: usize, m_test: usize, n_classes: usize)
+    -> Result<(Dataset, Dataset)> {
+    let dir = Path::new(data_dir).join("mnist");
+    if !dir.exists() {
+        bail!(
+            "dataset 'mnist' requested but {} does not exist; place the \
+             uncompressed IDX files there or use dataset=synth-mnist",
+            dir.display()
+        );
+    }
+    let train = load_split(&dir, "train-images-idx3-ubyte", "train-labels-idx1-ubyte", m_train, n_classes)?;
+    let test = load_split(&dir, "t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte", m_test, n_classes)?;
+    Ok((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_images(n: usize, rows: usize, cols: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        b.extend_from_slice(&(rows as u32).to_be_bytes());
+        b.extend_from_slice(&(cols as u32).to_be_bytes());
+        for i in 0..n * rows * cols {
+            b.push((i % 256) as u8);
+        }
+        b
+    }
+
+    fn fake_labels(n: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        for i in 0..n {
+            b.push((i % 10) as u8);
+        }
+        b
+    }
+
+    #[test]
+    fn parses_images_and_normalizes() {
+        let m = parse_idx_images(&fake_images(3, 2, 2), 10).unwrap();
+        assert_eq!(m.shape(), (3, 4));
+        assert_eq!(m.get(0, 0), 0.0);
+        assert!((m.get(0, 1) - 1.0 / 255.0).abs() < 1e-7);
+        assert!(m.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn respects_limit() {
+        let m = parse_idx_images(&fake_images(5, 2, 2), 2).unwrap();
+        assert_eq!(m.rows(), 2);
+        let l = parse_idx_labels(&fake_labels(5), 3).unwrap();
+        assert_eq!(l.len(), 3);
+    }
+
+    #[test]
+    fn parses_labels() {
+        let l = parse_idx_labels(&fake_labels(12), 100).unwrap();
+        assert_eq!(l, vec![0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 0, 1]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let mut img = fake_images(2, 2, 2);
+        img[3] = 0x99;
+        assert!(parse_idx_images(&img, 10).is_err());
+        let img2 = fake_images(2, 2, 2);
+        assert!(parse_idx_images(&img2[..18], 10).is_err());
+        assert!(parse_idx_labels(&[0, 0], 1).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_friendly() {
+        let err = load_mnist("/definitely/missing", 10, 10, 10).unwrap_err();
+        assert!(format!("{err:#}").contains("synth-mnist"));
+    }
+}

@@ -1,0 +1,39 @@
+//! Datasets: in-memory containers, the synthetic MNIST/Fashion-MNIST
+//! substitutes (this image has no network access — see DESIGN.md §2), a
+//! real-MNIST IDX loader used automatically when files are present, and
+//! the paper's non-IID label-sorted sharding.
+
+pub mod dataset;
+pub mod mnist;
+pub mod noniid;
+pub mod synthetic;
+
+pub use dataset::Dataset;
+pub use noniid::shard_non_iid;
+
+use anyhow::{bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::mathx::rng::Rng;
+
+/// Load the configured dataset: `synth-mnist` / `synth-fashion` are
+/// generated deterministically from the seed; `mnist` reads IDX files
+/// from `<data_dir>/mnist/` (train-images-idx3-ubyte etc.).
+pub fn load(cfg: &ExperimentConfig, rng: &mut Rng) -> Result<(Dataset, Dataset)> {
+    match cfg.dataset.as_str() {
+        "synth-mnist" => Ok(synthetic::generate_pair(
+            synthetic::SynthSpec::mnist_like(cfg.profile.d, cfg.profile.c),
+            cfg.m_train,
+            cfg.m_test,
+            rng,
+        )),
+        "synth-fashion" => Ok(synthetic::generate_pair(
+            synthetic::SynthSpec::fashion_like(cfg.profile.d, cfg.profile.c),
+            cfg.m_train,
+            cfg.m_test,
+            rng,
+        )),
+        "mnist" => mnist::load_mnist(&cfg.data_dir, cfg.m_train, cfg.m_test, cfg.profile.c),
+        other => bail!("unknown dataset '{other}' (synth-mnist|synth-fashion|mnist)"),
+    }
+}

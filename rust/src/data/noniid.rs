@@ -1,0 +1,108 @@
+//! Non-IID sharding (paper Appendix A.2): "training data is sorted by
+//! class label, and divided into n equally sized shards, one for each
+//! worker". Each client therefore sees only one or two classes — the
+//! pathological heterogeneity regime FL papers study.
+
+use anyhow::{ensure, Result};
+
+use crate::data::dataset::Dataset;
+
+/// Sort by label and split into `n` equal contiguous shards.
+/// Returns per-client row-index lists into the original dataset.
+pub fn shard_non_iid(data: &Dataset, n: usize) -> Result<Vec<Vec<usize>>> {
+    ensure!(n > 0, "need at least one client");
+    ensure!(
+        data.len() % n == 0,
+        "dataset size {} not divisible by {n} clients",
+        data.len()
+    );
+    let mut order: Vec<usize> = (0..data.len()).collect();
+    // Stable sort keeps the generator's within-class ordering.
+    order.sort_by_key(|&i| data.labels[i]);
+    let shard = data.len() / n;
+    Ok(order.chunks(shard).map(|c| c.to_vec()).collect())
+}
+
+/// IID sharding (for the data-heterogeneity ablation): shuffled split.
+pub fn shard_iid(data: &Dataset, n: usize, rng: &mut crate::mathx::rng::Rng) -> Result<Vec<Vec<usize>>> {
+    ensure!(n > 0, "need at least one client");
+    ensure!(
+        data.len() % n == 0,
+        "dataset size {} not divisible by {n} clients",
+        data.len()
+    );
+    let mut order: Vec<usize> = (0..data.len()).collect();
+    rng.shuffle(&mut order);
+    let shard = data.len() / n;
+    Ok(order.chunks(shard).map(|c| c.to_vec()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::linalg::Matrix;
+    use crate::mathx::rng::Rng;
+
+    fn dataset(m: usize, c: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let labels: Vec<usize> = (0..m).map(|_| rng.next_below(c as u64) as usize).collect();
+        Dataset::new(Matrix::zeros(m, 4), labels, c).unwrap()
+    }
+
+    #[test]
+    fn shards_partition_the_dataset() {
+        let d = dataset(120, 10, 1);
+        let shards = shard_non_iid(&d, 6).unwrap();
+        assert_eq!(shards.len(), 6);
+        let mut all: Vec<usize> = shards.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..120).collect::<Vec<_>>());
+        for s in &shards {
+            assert_eq!(s.len(), 20);
+        }
+    }
+
+    #[test]
+    fn non_iid_shards_have_few_classes() {
+        // 500 points, 10 balanced classes, 10 shards of 50: a sorted split
+        // gives each shard at most 2 distinct labels.
+        let labels: Vec<usize> = (0..500).map(|i| i % 10).collect();
+        let d = Dataset::new(Matrix::zeros(500, 2), labels, 10).unwrap();
+        let shards = shard_non_iid(&d, 10).unwrap();
+        for s in &shards {
+            let mut classes: Vec<usize> = s.iter().map(|&i| d.labels[i]).collect();
+            classes.sort_unstable();
+            classes.dedup();
+            assert!(classes.len() <= 2, "shard saw {} classes", classes.len());
+        }
+    }
+
+    #[test]
+    fn labels_are_sorted_across_shards() {
+        let d = dataset(100, 5, 2);
+        let shards = shard_non_iid(&d, 5).unwrap();
+        let seq: Vec<usize> = shards.concat().iter().map(|&i| d.labels[i]).collect();
+        let mut sorted = seq.clone();
+        sorted.sort_unstable();
+        assert_eq!(seq, sorted);
+    }
+
+    #[test]
+    fn iid_shards_mix_classes() {
+        let labels: Vec<usize> = (0..500).map(|i| i % 10).collect();
+        let d = Dataset::new(Matrix::zeros(500, 2), labels, 10).unwrap();
+        let mut rng = Rng::new(3);
+        let shards = shard_iid(&d, 10, &mut rng).unwrap();
+        // Typical shard should see many classes.
+        let mut classes: Vec<usize> = shards[0].iter().map(|&i| d.labels[i]).collect();
+        classes.sort_unstable();
+        classes.dedup();
+        assert!(classes.len() >= 5, "IID shard saw only {} classes", classes.len());
+    }
+
+    #[test]
+    fn indivisible_split_rejected() {
+        let d = dataset(10, 2, 4);
+        assert!(shard_non_iid(&d, 3).is_err());
+    }
+}

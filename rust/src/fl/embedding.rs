@@ -1,0 +1,65 @@
+//! RFF embedding parameters (paper eq. 5 + Remark 1).
+//!
+//! The server broadcasts only a pseudo-random *seed*; every client expands
+//! it into the same `(omega, delta)` pair locally — exactly what [`from_seed`]
+//! does from a forked [`Rng`] stream. Frequencies `omega ~ N(0, 1/sigma^2)`
+//! and phases `delta ~ Uniform(0, 2pi]`.
+
+use crate::mathx::distributions::{Sample, Uniform};
+use crate::mathx::linalg::Matrix;
+use crate::mathx::rng::Rng;
+
+/// The shared RFF mapping parameters.
+#[derive(Debug, Clone)]
+pub struct RffParams {
+    /// `(d, q)` frequency matrix.
+    pub omega: Matrix,
+    /// `(1, q)` phase row.
+    pub delta: Matrix,
+    pub sigma: f64,
+}
+
+/// Expand a shared seed stream into RFF parameters (Remark 1).
+pub fn from_seed(rng: &mut Rng, d: usize, q: usize, sigma: f64) -> RffParams {
+    let omega = Matrix::randn(d, q, 0.0, (1.0 / sigma) as f32, rng);
+    let mut delta = Matrix::zeros(1, q);
+    let u = Uniform::new(0.0, 2.0 * std::f64::consts::PI);
+    for v in delta.data_mut() {
+        *v = u.sample(rng) as f32;
+    }
+    RffParams { omega, delta, sigma }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let mut rng = Rng::new(1);
+        let p = from_seed(&mut rng, 8, 32, 5.0);
+        assert_eq!(p.omega.shape(), (8, 32));
+        assert_eq!(p.delta.shape(), (1, 32));
+        assert!(p.delta.data().iter().all(|&v| (0.0..=6.2832).contains(&v)));
+    }
+
+    #[test]
+    fn frequency_variance_matches_kernel_width() {
+        let mut rng = Rng::new(2);
+        let sigma = 5.0;
+        let p = from_seed(&mut rng, 100, 200, sigma);
+        let n = (100 * 200) as f64;
+        let var: f64 = p.omega.data().iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / n;
+        assert!((var - 1.0 / (sigma * sigma)).abs() < 0.002, "var {var}");
+    }
+
+    #[test]
+    fn same_seed_same_params_across_clients() {
+        // Remark 1: every client expands the same broadcast seed.
+        let root = Rng::new(3);
+        let a = from_seed(&mut root.fork(42), 4, 8, 2.0);
+        let b = from_seed(&mut root.fork(42), 4, 8, 2.0);
+        assert_eq!(a.omega, b.omega);
+        assert_eq!(a.delta, b.delta);
+    }
+}

@@ -1,0 +1,48 @@
+//! Step-decay learning-rate schedule (paper §A.2: initial step size 6,
+//! decay 0.8 at epochs 40 and 65).
+
+/// Multiplicative step-decay schedule.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub lr0: f64,
+    pub decay: f64,
+    /// Epochs at which the rate is multiplied by `decay` (sorted or not).
+    pub decay_epochs: Vec<usize>,
+}
+
+impl LrSchedule {
+    /// Learning rate for (0-based) `epoch`.
+    pub fn at(&self, epoch: usize) -> f64 {
+        let hits = self.decay_epochs.iter().filter(|&&e| epoch >= e).count();
+        self.lr0 * self.decay.powi(hits as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_schedule() {
+        let s = LrSchedule { lr0: 6.0, decay: 0.8, decay_epochs: vec![40, 65] };
+        assert!((s.at(0) - 6.0).abs() < 1e-12);
+        assert!((s.at(39) - 6.0).abs() < 1e-12);
+        assert!((s.at(40) - 4.8).abs() < 1e-12);
+        assert!((s.at(64) - 4.8).abs() < 1e-12);
+        assert!((s.at(65) - 3.84).abs() < 1e-12);
+        assert!((s.at(100) - 3.84).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unsorted_decay_epochs_ok() {
+        let s = LrSchedule { lr0: 1.0, decay: 0.5, decay_epochs: vec![8, 2] };
+        assert!((s.at(5) - 0.5).abs() < 1e-12);
+        assert!((s.at(9) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_decay_epochs_is_constant() {
+        let s = LrSchedule { lr0: 2.0, decay: 0.1, decay_epochs: vec![] };
+        assert_eq!(s.at(1000), 2.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! The federated-learning runtime: per-client state, the learning-rate
+//! schedule, and the [`trainer::Trainer`] that runs both the uncoded
+//! baseline and the CodedFedL scheme over the simulated MEC network.
+
+pub mod embedding;
+pub mod lr;
+pub mod trainer;
+
+pub use trainer::{Trainer, TrainerSetup};

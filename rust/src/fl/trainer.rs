@@ -1,0 +1,602 @@
+//! The federated training loop over the simulated MEC network — both the
+//! uncoded baseline and CodedFedL (paper §3.5).
+//!
+//! Per global mini-batch step:
+//!
+//! * **uncoded** — every client computes the gradient over its full
+//!   `l`-row slice; the server waits for the *slowest* client
+//!   (`max_j T_j`), so one straggler or burst of retransmissions stalls
+//!   the whole round.
+//! * **CodedFedL** — client `j` processes its optimized `l*_j` rows; the
+//!   server waits exactly `t*` (the §3.3 deadline), adds the coded
+//!   gradient computed from the composite parity data, and the weighted
+//!   combination is an unbiased estimate of the full mini-batch gradient.
+//!
+//! Wall-clock is *simulated*: each step advances the clock by the sampled
+//! §2.2 delays, so speedups are independent of the host machine.
+
+use anyhow::{bail, Context, Result};
+
+use crate::allocation::optimizer::{plan_fixed_u, AllocationPlan};
+use crate::coding::encoder::{encode_client_slice, CompositeParity};
+use crate::coding::weights::build_weights;
+use crate::config::{ExperimentConfig, Scheme};
+use crate::data::dataset::Dataset;
+use crate::fl::embedding::{from_seed, RffParams};
+use crate::fl::lr::LrSchedule;
+use crate::mathx::linalg::Matrix;
+use crate::mathx::rng::Rng;
+use crate::metrics::{EvalRecord, TrainReport};
+use crate::runtime::backend::{ComputeBackend, NativeBackend, PreparedMatrix};
+use crate::runtime::xla::XlaBackend;
+use crate::simnet::topology::{build_population, Population};
+
+/// Static per-run state exposed for diagnostics and benches.
+pub struct TrainerSetup {
+    pub population: Population,
+    pub plan: Option<AllocationPlan>,
+    pub rff: RffParams,
+}
+
+/// One fully-prepared training run.
+pub struct Trainer {
+    cfg: ExperimentConfig,
+    backend: Box<dyn ComputeBackend>,
+    /// Embedded training features `(m_train, q)`.
+    train_emb: Matrix,
+    train_y: Matrix,
+    test_emb: Matrix,
+    test: Dataset,
+    /// Per-step, per-client: global row indices of the client's slice.
+    slices: Vec<Vec<Vec<usize>>>,
+    /// Per-step, per-client row mask over the slice (1.0 = processed).
+    masks: Vec<Vec<Vec<f32>>>,
+    /// Per-step composite parity (empty for uncoded).
+    parity: Vec<CompositeParity>,
+    /// §Perf literal cache: per-step, per-client prepared (x, y, mask) —
+    /// invariant across epochs, so built once.
+    prep_slices: Vec<Vec<(PreparedMatrix, PreparedMatrix, PreparedMatrix)>>,
+    /// Per-step prepared parity (x, y, mask); empty for uncoded.
+    prep_parity: Vec<(PreparedMatrix, PreparedMatrix, PreparedMatrix)>,
+    /// Prepared test chunks (padded to `chunk` rows).
+    prep_test: Vec<PreparedMatrix>,
+    /// Per-step prepared mini-batch chunks + the batch label matrix
+    /// (for the loss series).
+    prep_batch: Vec<(Vec<PreparedMatrix>, Matrix)>,
+    setup: TrainerSetup,
+    beta: Matrix,
+    delay_rng: Rng,
+    sched: LrSchedule,
+}
+
+impl Trainer {
+    /// Build a trainer from a config, selecting the XLA or native backend.
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Trainer> {
+        let backend: Box<dyn ComputeBackend> = if cfg.use_xla {
+            Box::new(XlaBackend::load(&cfg.artifacts_dir, &cfg.profile)?)
+        } else {
+            Box::new(NativeBackend)
+        };
+        Self::with_backend(cfg, backend)
+    }
+
+    /// Build with an explicit backend (tests inject [`NativeBackend`]).
+    pub fn with_backend(cfg: &ExperimentConfig, backend: Box<dyn ComputeBackend>) -> Result<Trainer> {
+        cfg.validate()?;
+        let root = Rng::new(cfg.seed);
+        let mut data_rng = root.fork(1);
+        let mut topo_rng = root.fork(2);
+        let mut rff_rng = root.fork(3);
+        let delay_rng = root.fork(4);
+
+        // 1. Data + non-IID shards.
+        let (train, test) = crate::data::load(cfg, &mut data_rng)?;
+        if train.len() != cfg.m_train {
+            bail!("dataset provides {} train rows, config wants {}", train.len(), cfg.m_train);
+        }
+        let shards = crate::data::noniid::shard_non_iid(&train, cfg.n_clients)?;
+
+        // 2. Kernel embedding (Remark 1: parameters from the shared seed).
+        let p = &cfg.profile;
+        let rff = from_seed(&mut rff_rng, p.d, p.q, cfg.train.sigma);
+        crate::log_info!("embedding {} train + {} test rows (q={})", train.len(), test.len(), p.q);
+        let train_emb = backend
+            .rff_embed_all(&train.x, &rff.omega, &rff.delta, p.chunk)
+            .context("embedding training set")?;
+        let test_emb = backend
+            .rff_embed_all(&test.x, &rff.omega, &rff.delta, p.chunk)
+            .context("embedding test set")?;
+
+        // 3. MEC population + load allocation.
+        let population = build_population(cfg, &mut topo_rng);
+        let steps = cfg.steps_per_epoch();
+        let caps = vec![p.l; cfg.n_clients];
+        let plan = match cfg.scheme {
+            Scheme::Uncoded => None,
+            Scheme::Coded => Some(plan_fixed_u(
+                &population.clients,
+                &caps,
+                cfg.global_batch(),
+                cfg.u(),
+                cfg.epsilon,
+            )?),
+            Scheme::CodedJoint => {
+                // Remark 5: the server is the (n+1)-th node; its optimized
+                // load IS the redundancy u, capped by the artifact shape.
+                let max_mu = population.clients.iter().map(|c| c.mu).fold(0.0, f64::max);
+                let server = crate::simnet::delay::ClientModel {
+                    mu: max_mu * cfg.net.server_speedup,
+                    alpha: 10.0 * cfg.net.alpha, // near-deterministic compute
+                    tau: 1e-6,                   // wired backhaul, negligible
+                    p_fail: 0.0,
+                };
+                Some(crate::allocation::optimizer::optimize_with_server(
+                    &population.clients,
+                    &caps,
+                    &server,
+                    p.u_max,
+                    cfg.global_batch(),
+                    cfg.epsilon,
+                )?)
+            }
+        };
+        if let Some(pl) = &plan {
+            crate::log_info!(
+                "allocation: t*={:.3}s, u={}, loads {:?}",
+                pl.deadline,
+                pl.u,
+                &pl.loads
+            );
+        }
+
+        // 4. Fixed global mini-batch partition (encoding is per mini-batch,
+        //    §A.2, so batches must not be reshuffled between epochs).
+        let mut slices = vec![vec![Vec::new(); cfg.n_clients]; steps];
+        for (j, shard) in shards.iter().enumerate() {
+            for (s, chunk) in shard.chunks(p.l).enumerate() {
+                slices[s][j] = chunk.to_vec();
+            }
+        }
+
+        // 5. Per-client processed subsets + §3.4 weights + parity encoding.
+        let mut masks = vec![vec![Vec::new(); cfg.n_clients]; steps];
+        let mut parity = Vec::new();
+        match &plan {
+            None => {
+                for s in 0..steps {
+                    for j in 0..cfg.n_clients {
+                        masks[s][j] = vec![1.0f32; p.l];
+                    }
+                }
+            }
+            Some(pl) => {
+                crate::log_info!("encoding parity for {} mini-batches (u={})", steps, pl.u);
+                for s in 0..steps {
+                    let mut comp = CompositeParity::zeros(pl.u, p.u_max, p.q, p.c);
+                    for j in 0..cfg.n_clients {
+                        let mut client_rng = root.fork(1000 + (s * cfg.n_clients + j) as u64);
+                        let processed =
+                            client_rng.sample_indices(p.l, pl.loads[j].min(p.l));
+                        let w = build_weights(p.l, &processed, pl.pnr[j]);
+                        let mut mask = vec![0.0f32; p.l];
+                        for &k in &processed {
+                            mask[k] = 1.0;
+                        }
+                        masks[s][j] = mask;
+                        if pl.u > 0 {
+                            let x_slice = train_emb.select_rows(&slices[s][j]);
+                            let y_slice = train_y_of(&train).select_rows(&slices[s][j]);
+                            let (xc, yc) = encode_client_slice(
+                                backend.as_ref(),
+                                &x_slice,
+                                &y_slice,
+                                &w,
+                                pl.u,
+                                p.u_max,
+                                &mut client_rng,
+                            )?;
+                            comp.add(&xc, &yc);
+                        }
+                    }
+                    parity.push(comp);
+                }
+            }
+        }
+
+        // 6. §Perf literal cache: every operand that is invariant across
+        //    epochs is prepared once (for the XLA backend this builds the
+        //    input literal up front, removing per-step host copies).
+        let mut prep_slices = Vec::with_capacity(steps);
+        for s in 0..steps {
+            let mut row = Vec::with_capacity(cfg.n_clients);
+            for j in 0..cfg.n_clients {
+                let x = train_emb.select_rows(&slices[s][j]);
+                let y = train.y.select_rows(&slices[s][j]);
+                row.push((backend.prepare(&x)?, backend.prepare(&y)?, backend.prepare_col(&masks[s][j])?));
+            }
+            prep_slices.push(row);
+        }
+        let mut prep_parity = Vec::new();
+        for comp in &parity {
+            prep_parity.push((
+                backend.prepare(&comp.x)?,
+                backend.prepare(&comp.y)?,
+                backend.prepare_col(&comp.mask())?,
+            ));
+        }
+        let prep_test = prepare_chunks(backend.as_ref(), &test_emb, p.chunk)?;
+        let mut prep_batch = Vec::with_capacity(steps);
+        for s in 0..steps {
+            let mut idx = Vec::with_capacity(cfg.global_batch());
+            for j in 0..cfg.n_clients {
+                idx.extend_from_slice(&slices[s][j]);
+            }
+            let xb = train_emb.select_rows(&idx);
+            let yb = train.y.select_rows(&idx);
+            prep_batch.push((prepare_chunks(backend.as_ref(), &xb, p.chunk)?, yb));
+        }
+
+        let beta = Matrix::zeros(p.q, p.c); // paper: model initialized to 0
+        let sched = LrSchedule {
+            lr0: cfg.train.lr0,
+            decay: cfg.train.decay,
+            decay_epochs: cfg.train.decay_epochs.clone(),
+        };
+        Ok(Trainer {
+            cfg: cfg.clone(),
+            backend,
+            train_y: train.y.clone(),
+            train_emb,
+            test_emb,
+            test,
+            slices,
+            masks,
+            parity,
+            prep_slices,
+            prep_parity,
+            prep_test,
+            prep_batch,
+            setup: TrainerSetup { population, plan, rff },
+            beta,
+            delay_rng,
+            sched,
+        })
+    }
+
+    /// Setup diagnostics (population, allocation plan, RFF params).
+    pub fn setup(&self) -> &TrainerSetup {
+        &self.setup
+    }
+
+    // -- Introspection accessors (diagnostics, notebooks, tests). The hot
+    // loop reads only the prepared-literal caches; these expose the host
+    // copies the caches were built from.
+
+    /// Embedded training features `(m_train, q)`.
+    pub fn train_embedding(&self) -> &Matrix {
+        &self.train_emb
+    }
+
+    /// One-hot training labels.
+    pub fn train_labels(&self) -> &Matrix {
+        &self.train_y
+    }
+
+    /// Embedded test features.
+    pub fn test_embedding(&self) -> &Matrix {
+        &self.test_emb
+    }
+
+    /// Per-step, per-client global row indices of the mini-batch slices.
+    pub fn batch_slices(&self) -> &[Vec<Vec<usize>>] {
+        &self.slices
+    }
+
+    /// Per-step, per-client processed-row masks.
+    pub fn processed_masks(&self) -> &[Vec<Vec<f32>>] {
+        &self.masks
+    }
+
+    /// Per-step composite parity datasets (empty for uncoded).
+    pub fn parity_sets(&self) -> &[CompositeParity] {
+        &self.parity
+    }
+
+    /// Current model.
+    pub fn beta(&self) -> &Matrix {
+        &self.beta
+    }
+
+    /// Run the configured number of epochs, returning the full report.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let host_t0 = std::time::Instant::now();
+        let steps = self.cfg.steps_per_epoch();
+        let m_batch = self.cfg.global_batch() as f32;
+        let lam = self.cfg.train.lambda as f32;
+        let mut report = TrainReport {
+            scheme: self.cfg.scheme.name().into(),
+            dataset: self.cfg.dataset.clone(),
+            deadline_s: self.setup.plan.as_ref().map(|pl| pl.deadline).unwrap_or(0.0),
+            ..TrainReport::default()
+        };
+        let mut sim_time = 0.0f64;
+        let mut global_step = 0usize;
+        let mut arrival_frac_sum = 0.0f64;
+
+        for epoch in 0..self.cfg.train.epochs {
+            let lr = self.sched.at(epoch) as f32;
+            for s in 0..steps {
+                let (step_time, arrivals) = self.one_step(s, lr, lam, m_batch)?;
+                sim_time += step_time;
+                arrival_frac_sum += arrivals as f64 / self.cfg.n_clients as f64;
+                global_step += 1;
+                let last = epoch + 1 == self.cfg.train.epochs && s + 1 == steps;
+                if global_step % self.cfg.train.eval_every_steps == 0 || last {
+                    let (acc, loss) = self.evaluate(s)?;
+                    report.records.push(EvalRecord {
+                        epoch,
+                        step: global_step,
+                        sim_time_s: sim_time,
+                        accuracy: acc,
+                        loss,
+                    });
+                    crate::log_debug!(
+                        "epoch {epoch} step {global_step}: sim_t={sim_time:.1}s acc={acc:.4} loss={loss:.5}"
+                    );
+                }
+            }
+        }
+        report.total_sim_time_s = sim_time;
+        report.host_time_s = host_t0.elapsed().as_secs_f64();
+        report.mean_arrivals = arrival_frac_sum / global_step.max(1) as f64;
+        Ok(report)
+    }
+
+    /// Execute one global mini-batch step. Returns (simulated step time,
+    /// number of client gradients that reached the server).
+    fn one_step(&mut self, s: usize, lr: f32, lam: f32, m_batch: f32) -> Result<(f64, usize)> {
+        let p = &self.cfg.profile;
+        let n = self.cfg.n_clients;
+        let mut grad_sum = Matrix::zeros(p.q, p.c);
+        let mut arrivals = 0usize;
+        let step_time;
+        // One beta literal per step, shared by every gradient call (§Perf).
+        let beta_p = self.backend.prepare(&self.beta)?;
+
+        match &self.setup.plan {
+            None => {
+                // Uncoded: all clients compute full slices; wait for max.
+                let mut t_max = 0.0f64;
+                for j in 0..n {
+                    let t = self.setup.population.clients[j].sample(p.l, &mut self.delay_rng);
+                    t_max = t_max.max(t.total());
+                }
+                for j in 0..n {
+                    let (px, py, pm) = &self.prep_slices[s][j];
+                    let g = self.backend.grad_client_p(px, py, &beta_p, pm)?;
+                    grad_sum.axpy_inplace(1.0, &g);
+                }
+                arrivals = n;
+                step_time = t_max;
+            }
+            Some(plan) => {
+                // CodedFedL: deadline t*, stragglers dropped, parity added.
+                for j in 0..n {
+                    let load = plan.loads[j];
+                    if load == 0 {
+                        continue; // client sits this round out entirely
+                    }
+                    let t = self.setup.population.clients[j].sample(load, &mut self.delay_rng);
+                    if t.total() <= plan.deadline {
+                        let (px, py, pm) = &self.prep_slices[s][j];
+                        let g = self.backend.grad_client_p(px, py, &beta_p, pm)?;
+                        grad_sum.axpy_inplace(1.0, &g);
+                        arrivals += 1;
+                    }
+                }
+                let (px, py, pm) = &self.prep_parity[s];
+                let gc = self.backend.grad_server_p(px, py, &beta_p, pm)?;
+                grad_sum.axpy_inplace(1.0, &gc);
+                step_time = plan.deadline;
+            }
+        }
+
+        let g_mean = grad_sum.scale(1.0 / m_batch);
+        self.beta = self.backend.update(&self.beta, &g_mean, lr, lam)?;
+        Ok((step_time, arrivals))
+    }
+
+    /// Test accuracy + current-batch ridge loss (prepared chunks).
+    fn evaluate(&self, s: usize) -> Result<(f64, f64)> {
+        let beta_p = self.backend.prepare(&self.beta)?;
+        let logits = self.predict_prepared(&self.prep_test, self.test.len(), &beta_p)?;
+        let acc = self.test.accuracy(&logits);
+
+        // Mini-batch loss over step s's global batch.
+        let (chunks, yb) = &self.prep_batch[s];
+        let pred = self.predict_prepared(chunks, yb.rows(), &beta_p)?;
+        let m = yb.rows() as f64;
+        let mut se = 0.0f64;
+        for (a, b) in pred.data().iter().zip(yb.data()) {
+            se += ((a - b) as f64).powi(2);
+        }
+        let reg: f64 = self.beta.data().iter().map(|&v| (v as f64).powi(2)).sum();
+        let loss = se / (2.0 * m) + 0.5 * self.cfg.train.lambda * reg;
+        Ok((acc, loss))
+    }
+
+    /// Predict logits over prepared padded chunks, trimming to `rows`.
+    fn predict_prepared(
+        &self,
+        chunks: &[PreparedMatrix],
+        rows: usize,
+        beta_p: &PreparedMatrix,
+    ) -> Result<Matrix> {
+        let c = self.beta.cols();
+        let chunk = self.cfg.profile.chunk;
+        let mut out = Matrix::zeros(rows, c);
+        for (i, pc) in chunks.iter().enumerate() {
+            let logits = self.backend.predict_chunk_p(pc, beta_p)?;
+            let base = i * chunk;
+            let take = chunk.min(rows.saturating_sub(base));
+            for r in 0..take {
+                out.row_mut(base + r).copy_from_slice(logits.row(r));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Split `m` into `chunk`-row zero-padded prepared chunks.
+fn prepare_chunks(
+    backend: &dyn ComputeBackend,
+    m: &Matrix,
+    chunk: usize,
+) -> Result<Vec<PreparedMatrix>> {
+    let (rows, cols) = m.shape();
+    let mut out = Vec::new();
+    let mut row = 0;
+    while row < rows {
+        let take = chunk.min(rows - row);
+        let mut padded = Matrix::zeros(chunk, cols);
+        for r in 0..take {
+            padded.row_mut(r).copy_from_slice(m.row(row + r));
+        }
+        out.push(backend.prepare(&padded)?);
+        row += take;
+    }
+    Ok(out)
+}
+
+fn train_y_of(d: &Dataset) -> &Matrix {
+    &d.y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(scheme: Scheme) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.scheme = scheme;
+        cfg.use_xla = false; // tests run on the native backend
+        cfg.train.epochs = 6;
+        cfg
+    }
+
+    #[test]
+    fn coded_trainer_learns() {
+        let cfg = tiny_cfg(Scheme::Coded);
+        let mut t = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap();
+        let report = t.run().unwrap();
+        assert!(!report.records.is_empty());
+        let acc = report.final_accuracy();
+        assert!(acc > 0.5, "coded accuracy too low: {acc}");
+        assert!(report.total_sim_time_s > 0.0);
+        assert!(report.deadline_s > 0.0);
+    }
+
+    #[test]
+    fn uncoded_trainer_learns() {
+        let cfg = tiny_cfg(Scheme::Uncoded);
+        let mut t = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap();
+        let report = t.run().unwrap();
+        let acc = report.final_accuracy();
+        assert!(acc > 0.5, "uncoded accuracy too low: {acc}");
+        assert!((report.mean_arrivals - 1.0).abs() < 1e-12); // waits for all
+    }
+
+    #[test]
+    fn coded_is_faster_in_sim_time() {
+        // The paper's headline: at similar iteration counts, CodedFedL's
+        // simulated wall-clock is strictly smaller than uncoded's.
+        let mut ca = tiny_cfg(Scheme::Coded);
+        ca.seed = 11;
+        let mut ua = tiny_cfg(Scheme::Uncoded);
+        ua.seed = 11;
+        let rc = Trainer::with_backend(&ca, Box::new(NativeBackend)).unwrap().run().unwrap();
+        let ru = Trainer::with_backend(&ua, Box::new(NativeBackend)).unwrap().run().unwrap();
+        assert!(
+            rc.total_sim_time_s < ru.total_sim_time_s,
+            "coded {} >= uncoded {}",
+            rc.total_sim_time_s,
+            ru.total_sim_time_s
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = tiny_cfg(Scheme::Coded);
+        let r1 = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap().run().unwrap();
+        let r2 = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap().run().unwrap();
+        assert_eq!(r1.records.len(), r2.records.len());
+        for (a, b) in r1.records.iter().zip(&r2.records) {
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.sim_time_s, b.sim_time_s);
+        }
+    }
+
+    #[test]
+    fn joint_scheme_picks_u_and_learns() {
+        let mut cfg = tiny_cfg(Scheme::CodedJoint);
+        cfg.train.epochs = 6;
+        let mut t = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap();
+        let plan = t.setup().plan.clone().unwrap();
+        assert!(plan.u <= cfg.profile.u_max);
+        assert!(plan.deadline > 0.0);
+        let report = t.run().unwrap();
+        assert!(report.final_accuracy() > 0.5, "acc {}", report.final_accuracy());
+        // A 50x server should pick up nonzero parity work and finish each
+        // round no slower than the fixed-10% plan.
+        let fixed = Trainer::with_backend(&tiny_cfg(Scheme::Coded), Box::new(NativeBackend))
+            .unwrap()
+            .setup()
+            .plan
+            .clone()
+            .unwrap();
+        assert!(plan.u > 0, "powerful server should take parity load");
+        assert!(plan.deadline <= fixed.deadline + 1e-9);
+    }
+
+    #[test]
+    fn trainer_invariants_via_accessors() {
+        let cfg = tiny_cfg(Scheme::Coded);
+        let t = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap();
+        let plan = t.setup().plan.as_ref().unwrap().clone();
+        let steps = cfg.steps_per_epoch();
+        assert_eq!(t.batch_slices().len(), steps);
+        assert_eq!(t.parity_sets().len(), steps);
+        for s in 0..steps {
+            let mut seen = std::collections::BTreeSet::new();
+            for j in 0..cfg.n_clients {
+                // Slices partition the batch without overlap.
+                for &r in &t.batch_slices()[s][j] {
+                    assert!(seen.insert(r), "row {r} appears twice in step {s}");
+                }
+                // Mask density equals the allocated load.
+                let ones = t.processed_masks()[s][j].iter().filter(|&&m| m == 1.0).count();
+                assert_eq!(ones, plan.loads[j], "client {j} step {s}");
+            }
+            assert_eq!(seen.len(), cfg.global_batch());
+            // Parity mask covers exactly u rows.
+            assert_eq!(
+                t.parity_sets()[s].mask().iter().filter(|&&m| m == 1.0).count(),
+                plan.u
+            );
+        }
+        // Embeddings have the profile shapes.
+        assert_eq!(t.train_embedding().shape(), (cfg.m_train, cfg.profile.q));
+        assert_eq!(t.train_labels().shape(), (cfg.m_train, cfg.profile.c));
+        assert_eq!(t.test_embedding().shape(), (cfg.m_test, cfg.profile.q));
+    }
+
+    #[test]
+    fn allocation_plan_is_exposed() {
+        let cfg = tiny_cfg(Scheme::Coded);
+        let t = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap();
+        let plan = t.setup().plan.as_ref().unwrap();
+        assert_eq!(plan.loads.len(), cfg.n_clients);
+        assert!(plan.deadline > 0.0);
+        assert_eq!(plan.u, cfg.u());
+    }
+}

@@ -1,0 +1,38 @@
+//! # CodedFedL — coded computing for federated learning at the edge
+//!
+//! Production-grade reproduction of *"Coded Computing for Federated
+//! Learning at the Edge"* (Prakash, Dhakal, Akdeniz, Avestimehr, Himayat,
+//! 2020) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the MEC coordinator: stochastic edge network
+//!   simulation ([`simnet`]), the paper's analytical load-allocation policy
+//!   ([`allocation`]), private parity encoding ([`coding`]), the federated
+//!   training loop with coded gradient aggregation ([`fl`]), and the PJRT
+//!   runtime that executes AOT-compiled XLA artifacts ([`runtime`]).
+//! * **L2** — the JAX compute graph (`python/compile/model.py`), lowered
+//!   once by `make artifacts` to HLO text; never on the training path.
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) for the gradient,
+//!   RFF embedding, and parity encoding hot spots.
+//!
+//! The offline crate universe contains only `xla` + `anyhow`, so this crate
+//! carries its own substrates: PRNG and distributions ([`mathx`]), JSON and
+//! CSV ([`util`]), a CLI parser ([`cli`]), a bench harness ([`benchx`]) and
+//! a property-testing mini-framework ([`testx`]).
+
+pub mod allocation;
+pub mod benchx;
+pub mod cli;
+pub mod coding;
+pub mod config;
+pub mod data;
+pub mod fl;
+pub mod mathx;
+pub mod metrics;
+pub mod runtime;
+pub mod simnet;
+pub mod testx;
+pub mod util;
+
+/// Crate-wide result type (we standardize on `anyhow`, the only error crate
+/// in the offline registry).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,236 @@
+//! `codedfedl` — CLI entrypoint for the CodedFedL reproduction.
+//!
+//! Subcommands:
+//!   train      run one training experiment (scheme/preset/overrides)
+//!   allocate   print the load-allocation plan for a configuration
+//!   reproduce  run uncoded + coded back-to-back and report the speedup
+//!   info       show the resolved config and artifact status
+
+use anyhow::{bail, Result};
+
+use codedfedl::cli::{flag, switch, Cli};
+use codedfedl::config::{ExperimentConfig, Scheme};
+use codedfedl::fl::trainer::Trainer;
+use codedfedl::util::logging;
+
+fn common_flags() -> Vec<codedfedl::cli::FlagSpec> {
+    vec![
+        flag("preset", "config preset: tiny|small|medium|paper", Some("small")),
+        flag("config", "key=value config file applied after preset", None),
+        flag("set", "comma-separated key=value overrides", None),
+        flag("scheme", "uncoded|coded", None),
+        flag("dataset", "synth-mnist|synth-fashion|mnist", None),
+        flag("epochs", "override train.epochs", None),
+        flag("seed", "override seed", None),
+        flag("redundancy", "override train.redundancy", None),
+        flag("out", "write the accuracy curve CSV here", None),
+        switch("native", "use the native backend (no PJRT/artifacts)"),
+    ]
+}
+
+fn build_config(args: &codedfedl::cli::Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::preset(args.req("preset")?)?;
+    if let Some(path) = args.get("config") {
+        cfg.apply_file(path)?;
+    }
+    if let Some(s) = args.get("scheme") {
+        cfg.scheme = Scheme::parse(s)?;
+    }
+    if let Some(d) = args.get("dataset") {
+        cfg.set("dataset", d)?;
+    }
+    if let Some(e) = args.get("epochs") {
+        cfg.set("train.epochs", e)?;
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.set("seed", s)?;
+    }
+    if let Some(r) = args.get("redundancy") {
+        cfg.set("train.redundancy", r)?;
+    }
+    if let Some(kvs) = args.get("set") {
+        for kv in kvs.split(',') {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{kv}'"))?;
+            cfg.set(k, v)?;
+        }
+    }
+    if args.has("native") {
+        cfg.use_xla = false;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &codedfedl::cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    println!(
+        "training: scheme={} dataset={} preset={} epochs={} backend={}",
+        cfg.scheme.name(),
+        cfg.dataset,
+        cfg.profile.name,
+        cfg.train.epochs,
+        if cfg.use_xla { "xla-pjrt" } else { "native" }
+    );
+    let mut trainer = Trainer::from_config(&cfg)?;
+    let report = trainer.run()?;
+    println!(
+        "done: final_acc={:.4} best_acc={:.4} sim_time={:.1}s host_time={:.1}s mean_arrivals={:.3}",
+        report.final_accuracy(),
+        report.best_accuracy(),
+        report.total_sim_time_s,
+        report.host_time_s,
+        report.mean_arrivals
+    );
+    if let Some(path) = args.get("out") {
+        report.write_csv(path)?;
+        println!("curve written to {path}");
+    }
+    println!("{}", report.to_json().to_string());
+    Ok(())
+}
+
+fn cmd_allocate(args: &codedfedl::cli::Args) -> Result<()> {
+    use codedfedl::allocation::optimizer::plan_fixed_u;
+    use codedfedl::mathx::rng::Rng;
+    use codedfedl::simnet::topology::build_population;
+
+    let cfg = build_config(args)?;
+    let mut rng = Rng::new(cfg.seed).fork(2);
+    let pop = build_population(&cfg, &mut rng);
+    let caps = vec![cfg.profile.l; cfg.n_clients];
+    let plan = plan_fixed_u(&pop.clients, &caps, cfg.global_batch(), cfg.u(), cfg.epsilon)?;
+    println!("load allocation for preset '{}':", cfg.profile.name);
+    println!("  global batch  = {}", cfg.global_batch());
+    println!("  redundancy u  = {} ({:.0}%)", plan.u, 100.0 * cfg.train.redundancy);
+    println!("  deadline t*   = {:.4} s", plan.deadline);
+    println!(
+        "  E[client ret] = {:.1} (target {})",
+        plan.expected_return,
+        cfg.global_batch() - plan.u
+    );
+    println!("  j |   mu(pts/s) |  tau(s) |  load l*_j | pnr_j");
+    for j in 0..cfg.n_clients {
+        let c = &pop.clients[j];
+        println!(
+            "{:>3} | {:>11.2} | {:>7.3} | {:>10} | {:.3}",
+            j, c.mu, c.tau, plan.loads[j], plan.pnr[j]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_reproduce(args: &codedfedl::cli::Args) -> Result<()> {
+    let base = build_config(args)?;
+    let mut results = Vec::new();
+    for scheme in [Scheme::Uncoded, Scheme::Coded] {
+        let mut cfg = base.clone();
+        cfg.scheme = scheme;
+        println!("== running {} ==", scheme.name());
+        let mut trainer = Trainer::from_config(&cfg)?;
+        let report = trainer.run()?;
+        println!(
+            "   final_acc={:.4} sim_time={:.1}s",
+            report.final_accuracy(),
+            report.total_sim_time_s
+        );
+        results.push(report);
+    }
+    let (uncoded, coded) = (&results[0], &results[1]);
+    // Paper Table 1 methodology: gamma = a high accuracy both schemes reach;
+    // we use the weaker of the two best accuracies, then compare
+    // first-crossing times.
+    let gamma = uncoded.best_accuracy().min(coded.best_accuracy()) * 0.995;
+    let tu = uncoded.time_to_accuracy(gamma);
+    let tc = coded.time_to_accuracy(gamma);
+    println!("\nTable-1 style summary (dataset {}):", base.dataset);
+    println!("  gamma        = {:.3}", gamma);
+    match (tu, tc) {
+        (Some(tu), Some(tc)) => {
+            println!("  t_gamma^U    = {tu:.1} s");
+            println!("  t_gamma^C    = {tc:.1} s");
+            println!("  gain         = x{:.2}", tu / tc);
+        }
+        _ => println!("  gamma not reached by both schemes (tu={tu:?}, tc={tc:?})"),
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &codedfedl::cli::Args) -> Result<()> {
+    use codedfedl::allocation::optimizer::plan_fixed_u;
+    use codedfedl::config::Scheme;
+    use codedfedl::mathx::rng::Rng;
+    use codedfedl::simnet::topology::build_population;
+    use codedfedl::simnet::trace::{trace_epoch, write_csv};
+
+    let cfg = build_config(args)?;
+    let mut rng = Rng::new(cfg.seed).fork(2);
+    let pop = build_population(&cfg, &mut rng);
+    let loads: Vec<usize> = match cfg.scheme {
+        Scheme::Uncoded => vec![cfg.profile.l; cfg.n_clients],
+        _ => {
+            let caps = vec![cfg.profile.l; cfg.n_clients];
+            plan_fixed_u(&pop.clients, &caps, cfg.global_batch(), cfg.u(), cfg.epsilon)?.loads
+        }
+    };
+    let mut trace_rng = Rng::new(cfg.seed).fork(4);
+    let traces = trace_epoch(&pop.clients, &loads, &mut trace_rng);
+    match args.get("out") {
+        Some(path) => {
+            let file = std::fs::File::create(path)?;
+            write_csv(&traces, std::io::BufWriter::new(file))?;
+            println!("event trace for one epoch written to {path}");
+        }
+        None => write_csv(&traces, std::io::stdout().lock())?,
+    }
+    let slowest = traces.iter().map(|t| t.finish).fold(0.0, f64::max);
+    eprintln!("epoch finish: slowest client at {slowest:.2}s");
+    Ok(())
+}
+
+fn cmd_info(args: &codedfedl::cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    println!("{cfg:#?}");
+    match codedfedl::runtime::artifact::Manifest::load(&cfg.artifacts_dir) {
+        Ok(man) => {
+            println!("artifacts: {} profiles at {}/", man.profiles.len(), cfg.artifacts_dir);
+            for (name, prof) in &man.profiles {
+                println!("  {name}: {} artifacts, dims {:?}", prof.artifacts.len(), prof.dims);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e:#})"),
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    logging::init_from_env();
+    let cli = Cli {
+        program: "codedfedl",
+        about: "coded computing for federated learning at the edge (reproduction)",
+        subcommands: vec![
+            ("train", "run one training experiment", common_flags()),
+            ("allocate", "print the load-allocation plan", common_flags()),
+            ("reproduce", "uncoded vs coded speedup comparison", common_flags()),
+            ("trace", "emit one epoch's per-client event timeline (CSV)", common_flags()),
+            ("info", "show resolved config + artifact status", common_flags()),
+        ],
+    };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("allocate") => cmd_allocate(&args),
+        Some("reproduce") => cmd_reproduce(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("info") => cmd_info(&args),
+        _ => bail!("missing subcommand\n\n{}", cli.usage()),
+    }
+}

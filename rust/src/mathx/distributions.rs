@@ -1,0 +1,236 @@
+//! Probability distributions used by the paper's system model (§2.2):
+//! shifted-exponential compute times, geometric retransmission counts,
+//! Gaussian generator matrices / RFF frequencies, uniform phases.
+
+use super::rng::Rng;
+
+/// A distribution that can be sampled with an [`Rng`].
+pub trait Sample {
+    /// Draw one sample.
+    fn sample(&self, rng: &mut Rng) -> f64;
+    /// Mean of the distribution (used by Monte-Carlo validation tests).
+    fn mean(&self) -> f64;
+}
+
+/// Normal distribution `N(mu, sigma^2)` via the Marsaglia polar method.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Normal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Normal {
+    /// Standard normal `N(0, 1)`.
+    pub fn standard() -> Self {
+        Normal { mu: 0.0, sigma: 1.0 }
+    }
+
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma >= 0.0, "sigma must be non-negative");
+        Normal { mu, sigma }
+    }
+}
+
+impl Sample for Normal {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        // Marsaglia polar method; we deliberately do not cache the second
+        // deviate so sampling stays stateless w.r.t. the distribution.
+        loop {
+            let u = 2.0 * rng.next_f64() - 1.0;
+            let v = 2.0 * rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                return self.mu + self.sigma * u * f;
+            }
+        }
+    }
+
+    fn mean(&self) -> f64 {
+        self.mu
+    }
+}
+
+/// Exponential distribution with rate `lambda` (mean `1/lambda`).
+///
+/// Models the stochastic memory-access component `T_cmp^(j,2)` of client
+/// compute time, with rate `gamma_j = alpha_j mu_j / l_j` (paper §2.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Exponential {
+    pub rate: f64,
+}
+
+impl Exponential {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0, "rate must be positive");
+        Exponential { rate }
+    }
+}
+
+impl Sample for Exponential {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        // Inverse CDF; 1 - u in (0, 1] avoids ln(0).
+        -(1.0 - rng.next_f64()).ln() / self.rate
+    }
+
+    fn mean(&self) -> f64 {
+        1.0 / self.rate
+    }
+}
+
+/// Geometric distribution on `{1, 2, 3, ...}`: number of transmissions
+/// until the first success, `P{N = x} = p_fail^(x-1) (1 - p_fail)`
+/// (paper eq. 2, with `p_fail` the link erasure probability).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Geometric {
+    /// Per-transmission failure probability `p_j` in `[0, 1)`.
+    pub p_fail: f64,
+}
+
+impl Geometric {
+    pub fn new(p_fail: f64) -> Self {
+        assert!((0.0..1.0).contains(&p_fail), "p_fail must be in [0,1)");
+        Geometric { p_fail }
+    }
+
+    /// Sample the integer number of transmissions (>= 1).
+    pub fn sample_trials(&self, rng: &mut Rng) -> u64 {
+        if self.p_fail == 0.0 {
+            return 1;
+        }
+        // Inverse CDF: N = ceil(ln(1-u) / ln(p_fail)).
+        let u = rng.next_f64();
+        let n = ((1.0 - u).ln() / self.p_fail.ln()).ceil();
+        n.max(1.0) as u64
+    }
+}
+
+impl Sample for Geometric {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        self.sample_trials(rng) as f64
+    }
+
+    fn mean(&self) -> f64 {
+        1.0 / (1.0 - self.p_fail)
+    }
+}
+
+/// Uniform distribution on `[lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi > lo, "empty uniform support");
+        Uniform { lo, hi }
+    }
+}
+
+impl Sample for Uniform {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+
+    fn mean(&self) -> f64 {
+        0.5 * (self.lo + self.hi)
+    }
+}
+
+/// Fill a slice with i.i.d. `N(mu, sigma^2)` f32 samples (bulk helper for
+/// generator matrices and RFF frequency matrices).
+pub fn fill_normal_f32(rng: &mut Rng, mu: f32, sigma: f32, out: &mut [f32]) {
+    let d = Normal::new(mu as f64, sigma as f64);
+    for v in out.iter_mut() {
+        *v = d.sample(rng) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(d: &impl Sample, n: usize, seed: u64) -> (f64, f64) {
+        let mut rng = Rng::new(seed);
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        (mean, var)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let (m, v) = moments(&Normal::new(2.0, 3.0), 200_000, 1);
+        assert!((m - 2.0).abs() < 0.03, "mean {m}");
+        assert!((v - 9.0).abs() < 0.15, "var {v}");
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let (m, v) = moments(&Exponential::new(0.5), 200_000, 2);
+        assert!((m - 2.0).abs() < 0.03, "mean {m}");
+        assert!((v - 4.0).abs() < 0.15, "var {v}");
+    }
+
+    #[test]
+    fn geometric_pmf_matches_paper_eq2() {
+        // P{N=x} = p^(x-1)(1-p): check empirical pmf at x=1..4 for p=0.3.
+        let d = Geometric::new(0.3);
+        let mut rng = Rng::new(3);
+        let n = 300_000;
+        let mut counts = [0usize; 5];
+        for _ in 0..n {
+            let x = d.sample_trials(&mut rng) as usize;
+            if x <= 4 {
+                counts[x] += 1;
+            }
+        }
+        for x in 1..=4usize {
+            let want = 0.3f64.powi(x as i32 - 1) * 0.7;
+            let got = counts[x] as f64 / n as f64;
+            assert!((got - want).abs() < 0.005, "x={x}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn geometric_zero_failure_always_one() {
+        let d = Geometric::new(0.0);
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            assert_eq!(d.sample_trials(&mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn geometric_mean() {
+        let d = Geometric::new(0.9); // heavy retransmissions, mean 10
+        let (m, _) = moments(&d, 200_000, 5);
+        assert!((m - 10.0).abs() < 0.15, "mean {m}");
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let d = Uniform::new(-1.0, 3.0);
+        let mut rng = Rng::new(6);
+        for _ in 0..1000 {
+            let x = d.sample(&mut rng);
+            assert!((-1.0..3.0).contains(&x));
+        }
+        let (m, _) = moments(&d, 100_000, 7);
+        assert!((m - 1.0).abs() < 0.02, "mean {m}");
+    }
+
+    #[test]
+    fn exponential_tail_probability() {
+        // P(X > t) = exp(-rate t).
+        let d = Exponential::new(2.0);
+        let mut rng = Rng::new(8);
+        let n = 200_000;
+        let t = 1.0;
+        let tail = (0..n).filter(|_| d.sample(&mut rng) > t).count() as f64 / n as f64;
+        let want = (-2.0f64).exp();
+        assert!((tail - want).abs() < 0.005, "{tail} vs {want}");
+    }
+}

@@ -1,0 +1,191 @@
+//! Lambert W function, both real branches.
+//!
+//! The paper's closed-form optimal load (eq. 14) is
+//! `l*_j(t, nu) = -alpha mu (t - nu tau) / (W_{-1}(-e^{-(1+alpha)}) + 1)`,
+//! so the allocator needs the *minor* branch `W_{-1}` on `(-1/e, 0)`. We
+//! implement both branches with series initial guesses refined by Halley
+//! iteration (cubic convergence; <= 6 iterations to f64 precision).
+
+const INV_E: f64 = 1.0 / std::f64::consts::E;
+
+/// Halley refinement of `w` towards `W(x)` (solves `w e^w = x`).
+fn halley(mut w: f64, x: f64) -> f64 {
+    for _ in 0..64 {
+        let ew = w.exp();
+        let f = w * ew - x;
+        let wp1 = w + 1.0;
+        // At the branch point w = -1 the Halley denominator vanishes; the
+        // series guess is already exact there.
+        if f == 0.0 || wp1.abs() < 1e-12 {
+            break;
+        }
+        let denom = ew * wp1 - (w + 2.0) * f / (2.0 * wp1);
+        let dw = f / denom;
+        w -= dw;
+        if dw.abs() <= 1e-14 * (1.0 + w.abs()) {
+            break;
+        }
+    }
+    w
+}
+
+/// Principal branch `W_0(x)` for `x >= -1/e`.
+///
+/// `W_0` is the inverse of `w e^w` on `w >= -1`.
+pub fn lambert_w0(x: f64) -> f64 {
+    assert!(x >= -INV_E - 1e-12, "W0 domain is [-1/e, inf), got {x}");
+    if x == 0.0 {
+        return 0.0;
+    }
+    let x = x.max(-INV_E);
+    // Initial guess.
+    let w0 = if x < -0.25 {
+        // Series around the branch point -1/e: W ~ -1 + p - p^2/3, with
+        // p = sqrt(2(1 + e x)).
+        let p = (2.0 * (1.0 + std::f64::consts::E * x)).sqrt();
+        -1.0 + p - p * p / 3.0
+    } else if x < 2.0 {
+        // Pade-ish rational guess near 0.
+        x * (1.0 - x / (1.0 + x))
+    } else {
+        // Asymptotic: W ~ ln x - ln ln x.
+        let l1 = x.ln();
+        let l2 = l1.ln();
+        l1 - l2 + l2 / l1
+    };
+    halley(w0, x)
+}
+
+/// Minor branch `W_{-1}(x)` for `x` in `[-1/e, 0)`.
+///
+/// `W_{-1}` is the inverse of `w e^w` on `w <= -1`; it is the branch the
+/// paper's eq. (14) uses (its argument `-e^{-(1+alpha)}` always lies in
+/// `(-1/e, 0)` for `alpha > 0`).
+pub fn lambert_wm1(x: f64) -> f64 {
+    assert!(
+        x >= -INV_E - 1e-12 && x < 0.0,
+        "W-1 domain is [-1/e, 0), got {x}"
+    );
+    let x = x.max(-INV_E);
+    if (x + INV_E).abs() < 1e-16 {
+        return -1.0;
+    }
+    // Initial guess.
+    let w0 = if x < -0.25 {
+        // Branch-point series with the negative root: W ~ -1 - p - p^2/3.
+        let p = (2.0 * (1.0 + std::f64::consts::E * x)).sqrt();
+        -1.0 - p - p * p / 3.0
+    } else {
+        // Asymptotic for x -> 0-: W ~ ln(-x) - ln(-ln(-x)).
+        let l1 = (-x).ln();
+        let l2 = (-l1).ln();
+        l1 - l2 + l2 / l1
+    };
+    halley(w0, x)
+}
+
+/// The allocator's constant `kappa(alpha) = -alpha / (W_{-1}(-e^{-(1+alpha)}) + 1)`.
+///
+/// With this, eq. (14) reads `l*_j(t, nu) = kappa(alpha_j) * mu_j * (t - nu tau_j)`
+/// for `t > nu tau_j`. `kappa` is in `(0, 1)` for all `alpha > 0`: the
+/// optimal load is always a fraction of the work a deterministic client
+/// could finish by the deadline.
+pub fn load_fraction(alpha: f64) -> f64 {
+    assert!(alpha > 0.0, "alpha must be positive, got {alpha}");
+    let arg = -(-(1.0 + alpha)).exp(); // -e^{-(1+alpha)} in (-1/e, 0)
+    -alpha / (lambert_wm1(arg) + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_inverse(w: f64, x: f64) {
+        assert!(
+            (w * w.exp() - x).abs() < 1e-10 * (1.0 + x.abs()),
+            "w e^w = {} != {x} (w = {w})",
+            w * w.exp()
+        );
+    }
+
+    #[test]
+    fn w0_known_values() {
+        assert!((lambert_w0(0.0)).abs() < 1e-15);
+        // W0(e) = 1
+        assert!((lambert_w0(std::f64::consts::E) - 1.0).abs() < 1e-12);
+        // W0(1) = Omega constant
+        assert!((lambert_w0(1.0) - 0.567_143_290_409_783_8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn w0_inverse_property() {
+        for &x in &[-0.367, -0.3, -0.1, 0.1, 0.5, 1.0, 3.0, 10.0, 1e3, 1e8] {
+            check_inverse(lambert_w0(x), x);
+        }
+    }
+
+    #[test]
+    fn wm1_known_values() {
+        // W-1(-1/e) = -1
+        assert!((lambert_wm1(-INV_E) + 1.0).abs() < 1e-6);
+        // W-1(-0.1) ~ -3.577152063957297
+        assert!((lambert_wm1(-0.1) + 3.577_152_063_957_297).abs() < 1e-9);
+        // W-1(-2/e^2) ... check via inverse property instead (no table).
+    }
+
+    #[test]
+    fn wm1_inverse_property() {
+        for &x in &[-0.3678, -0.36, -0.3, -0.2, -0.1, -0.05, -1e-3, -1e-8] {
+            let w = lambert_wm1(x);
+            assert!(w <= -1.0, "W-1({x}) = {w} must be <= -1");
+            check_inverse(w, x);
+        }
+    }
+
+    #[test]
+    fn branches_agree_at_branch_point() {
+        let a = lambert_w0(-INV_E);
+        let b = lambert_wm1(-INV_E);
+        assert!((a + 1.0).abs() < 1e-6 && (b + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn load_fraction_bounds_and_monotonicity() {
+        // kappa in (0,1), increasing in alpha (less stochastic compute ->
+        // can safely load closer to the deterministic deadline capacity).
+        let mut prev = 0.0;
+        for &alpha in &[0.1, 0.5, 1.0, 2.0, 5.0, 20.0] {
+            let k = load_fraction(alpha);
+            assert!(k > 0.0 && k < 1.0, "kappa({alpha}) = {k}");
+            assert!(k > prev, "kappa not increasing at alpha={alpha}");
+            prev = k;
+        }
+        // alpha -> inf: deterministic compute, kappa -> 1.
+        assert!(load_fraction(50.0) > 0.9);
+    }
+
+    #[test]
+    fn load_fraction_maximizes_expected_return() {
+        // Cross-check eq. (14): kappa*mu*(t - nu tau) must maximize
+        // f(l) = l (1 - exp(-(alpha mu / l)(t - l/mu - nu tau))) over a grid.
+        let (alpha, mu, t, nu, tau) = (2.0, 3.0, 10.0, 2.0, 1.5);
+        let f = |l: f64| {
+            let slack = t - l / mu - nu * tau;
+            if slack <= 0.0 || l <= 0.0 {
+                return 0.0;
+            }
+            l * (1.0 - (-(alpha * mu / l) * slack).exp())
+        };
+        let lstar = load_fraction(alpha) * mu * (t - nu * tau);
+        let fstar = f(lstar);
+        let mut best = 0.0f64;
+        let lmax = mu * (t - nu * tau);
+        for i in 1..2000 {
+            best = best.max(f(lmax * i as f64 / 2000.0));
+        }
+        assert!(
+            fstar >= best - 1e-6 * best.abs().max(1.0),
+            "closed form {fstar} < grid max {best}"
+        );
+    }
+}

@@ -1,0 +1,339 @@
+//! Small dense row-major f32 matrix toolkit.
+//!
+//! This is the *native oracle and fallback* for the XLA artifacts: every
+//! runtime executable has an equivalent here, used by integration tests
+//! (XLA vs native must agree) and by pure-simulation paths where spinning
+//! up PJRT is unnecessary (e.g. the allocation benches). The hot training
+//! path goes through [`crate::runtime`] instead.
+
+use crate::mathx::rng::Rng;
+
+/// Dense row-major matrix of `f32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a row-major vector (length must equal `rows * cols`).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// i.i.d. `N(mu, sigma^2)` entries.
+    pub fn randn(rows: usize, cols: usize, mu: f32, sigma: f32, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        crate::mathx::distributions::fill_normal_f32(rng, mu, sigma, &mut m.data);
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Raw row-major data.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the row-major buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// New matrix holding the selected rows (gathers a client's sample).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Matrix product `self @ rhs` (ikj loop order, row-major friendly).
+    pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, rhs.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out.data[i * n..(i + 1) * n];
+            for (p, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &rhs.data[p * n..(p + 1) * n];
+                for (o, &b) in o_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self^T @ rhs` without materializing the transpose.
+    pub fn t_matmul(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.rows, rhs.rows, "t_matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, rhs.cols);
+        let mut out = Matrix::zeros(k, n);
+        for r in 0..m {
+            let a_row = &self.data[r * k..(r + 1) * k];
+            let b_row = &rhs.data[r * n..(r + 1) * n];
+            for (p, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let o_row = &mut out.data[p * n..(p + 1) * n];
+                for (o, &b) in o_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Elementwise `self + alpha * rhs`.
+    pub fn axpy(&self, alpha: f32, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), rhs.shape(), "axpy shape mismatch");
+        let data = self
+            .data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| a + alpha * b)
+            .collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `self += alpha * rhs`.
+    pub fn axpy_inplace(&mut self, alpha: f32, rhs: &Matrix) {
+        assert_eq!(self.shape(), rhs.shape(), "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&rhs.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scaled copy `alpha * self`.
+    pub fn scale(&self, alpha: f32) -> Matrix {
+        let data = self.data.iter().map(|a| a * alpha).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Scale every row `r` by `w[r]` (the paper's `W_j` diagonal weighting).
+    pub fn scale_rows(&self, w: &[f32]) -> Matrix {
+        assert_eq!(w.len(), self.rows, "row-weight length mismatch");
+        let mut out = self.clone();
+        for (r, &wr) in w.iter().enumerate() {
+            for v in out.row_mut(r) {
+                *v *= wr;
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Largest absolute entry difference (test helper).
+    pub fn max_abs_diff(&self, rhs: &Matrix) -> f32 {
+        assert_eq!(self.shape(), rhs.shape(), "shape mismatch");
+        self.data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Row-wise argmax (predicted class per sample).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|r| {
+                let row = self.row(r);
+                let mut best = 0;
+                for (c, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = c;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+/// Native masked gradient sum `X^T (mask .* (X beta - Y))` — oracle for the
+/// `grad_*` artifacts (and the pure-simulation fallback).
+pub fn gradient_ref(x: &Matrix, y: &Matrix, beta: &Matrix, mask: &[f32]) -> Matrix {
+    assert_eq!(x.rows(), y.rows());
+    assert_eq!(mask.len(), x.rows());
+    let mut err = x.matmul(beta); // (m, c)
+    for r in 0..err.rows() {
+        let w = mask[r];
+        let yr = y.row(r).to_vec();
+        for (c, v) in err.row_mut(r).iter_mut().enumerate() {
+            *v = (*v - yr[c]) * w;
+        }
+    }
+    x.t_matmul(&err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(4, 4, 0.0, 1.0, &mut rng);
+        assert!(a.matmul(&Matrix::eye(4)).max_abs_diff(&a) < 1e-6);
+        assert!(Matrix::eye(4).matmul(&a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(5, 3, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(5, 4, 0.0, 1.0, &mut rng);
+        let got = a.t_matmul(&b);
+        let want = a.transpose().matmul(&b);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(3, 7, 0.0, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gradient_ref_perfect_fit_is_zero() {
+        let mut rng = Rng::new(4);
+        let x = Matrix::randn(10, 4, 0.0, 1.0, &mut rng);
+        let beta = Matrix::randn(4, 3, 0.0, 1.0, &mut rng);
+        let y = x.matmul(&beta);
+        let g = gradient_ref(&x, &y, &beta, &vec![1.0; 10]);
+        assert!(g.fro_norm() < 1e-4, "{}", g.fro_norm());
+    }
+
+    #[test]
+    fn gradient_ref_respects_mask() {
+        let mut rng = Rng::new(5);
+        let x = Matrix::randn(8, 4, 0.0, 1.0, &mut rng);
+        let y = Matrix::randn(8, 2, 0.0, 1.0, &mut rng);
+        let beta = Matrix::randn(4, 2, 0.0, 1.0, &mut rng);
+        let mut mask = vec![1.0; 8];
+        mask[5..].iter_mut().for_each(|m| *m = 0.0);
+        let got = gradient_ref(&x, &y, &beta, &mask);
+        let xs = x.select_rows(&[0, 1, 2, 3, 4]);
+        let ys = y.select_rows(&[0, 1, 2, 3, 4]);
+        let want = gradient_ref(&xs, &ys, &beta, &vec![1.0; 5]);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn scale_rows_matches_diagonal_product() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(4, 3, 0.0, 1.0, &mut rng);
+        let w = vec![0.5, 2.0, 0.0, 1.0];
+        let mut diag = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            diag.set(i, i, w[i]);
+        }
+        assert!(a.scale_rows(&w).max_abs_diff(&diag.matmul(&a)) < 1e-6);
+    }
+
+    #[test]
+    fn select_rows_gathers() {
+        let a = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let s = a.select_rows(&[2, 0]);
+        assert_eq!(s.data(), &[5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let a = Matrix::from_vec(2, 3, vec![0.1, 0.9, 0.2, 1.0, -1.0, 0.5]);
+        assert_eq!(a.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Matrix::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        assert_eq!(a.axpy(2.0, &b).data(), &[3.0, 4.0, 5.0]);
+        assert_eq!(a.scale(-1.0).data(), &[-1.0, -2.0, -3.0]);
+        let mut c = a.clone();
+        c.axpy_inplace(0.5, &b);
+        assert_eq!(c.data(), &[1.5, 2.5, 3.5]);
+    }
+}

@@ -1,0 +1,141 @@
+//! Training metrics: per-evaluation records, time-to-accuracy extraction
+//! (the paper's Table 1 quantity), and CSV/JSON emission for the figure
+//! benches.
+
+use anyhow::Result;
+
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+
+/// One evaluation point during training.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalRecord {
+    pub epoch: usize,
+    /// Global mini-batch iteration (cumulative).
+    pub step: usize,
+    /// Simulated wall-clock seconds since training start.
+    pub sim_time_s: f64,
+    /// Test accuracy in [0, 1].
+    pub accuracy: f64,
+    /// Training mini-batch loss (mean squared error + ridge).
+    pub loss: f64,
+}
+
+/// Full trace of one training run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub scheme: String,
+    pub dataset: String,
+    pub records: Vec<EvalRecord>,
+    /// Total simulated time.
+    pub total_sim_time_s: f64,
+    /// Total host time actually spent (for §Perf accounting).
+    pub host_time_s: f64,
+    /// Server deadline `t*` (coded runs; 0 for uncoded).
+    pub deadline_s: f64,
+    /// Mean arrival fraction per step (diagnostics).
+    pub mean_arrivals: f64,
+}
+
+impl TrainReport {
+    /// Final test accuracy (0 if never evaluated).
+    pub fn final_accuracy(&self) -> f64 {
+        self.records.last().map(|r| r.accuracy).unwrap_or(0.0)
+    }
+
+    /// Best test accuracy seen.
+    pub fn best_accuracy(&self) -> f64 {
+        self.records.iter().map(|r| r.accuracy).fold(0.0, f64::max)
+    }
+
+    /// First simulated time at which `gamma` accuracy is reached — the
+    /// paper's `t_gamma` (Table 1). `None` if never reached.
+    pub fn time_to_accuracy(&self, gamma: f64) -> Option<f64> {
+        self.records.iter().find(|r| r.accuracy >= gamma).map(|r| r.sim_time_s)
+    }
+
+    /// First iteration at which `gamma` accuracy is reached.
+    pub fn steps_to_accuracy(&self, gamma: f64) -> Option<usize> {
+        self.records.iter().find(|r| r.accuracy >= gamma).map(|r| r.step)
+    }
+
+    /// Write the accuracy curve as CSV (columns: epoch, step, sim_time_s,
+    /// accuracy, loss) — the raw data behind Figs 2 and 3.
+    pub fn write_csv(&self, path: &str) -> Result<()> {
+        let mut w = CsvWriter::create(path, &["epoch", "step", "sim_time_s", "accuracy", "loss"])?;
+        for r in &self.records {
+            w.row_f64(&[r.epoch as f64, r.step as f64, r.sim_time_s, r.accuracy, r.loss])?;
+        }
+        w.flush()
+    }
+
+    /// JSON summary (EXPERIMENTS.md provenance).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scheme", Json::from(self.scheme.as_str())),
+            ("dataset", Json::from(self.dataset.as_str())),
+            ("final_accuracy", Json::from(self.final_accuracy())),
+            ("best_accuracy", Json::from(self.best_accuracy())),
+            ("total_sim_time_s", Json::from(self.total_sim_time_s)),
+            ("host_time_s", Json::from(self.host_time_s)),
+            ("deadline_s", Json::from(self.deadline_s)),
+            ("mean_arrivals", Json::from(self.mean_arrivals)),
+            ("evals", Json::from(self.records.len())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> TrainReport {
+        TrainReport {
+            scheme: "coded".into(),
+            dataset: "synth-mnist".into(),
+            records: vec![
+                EvalRecord { epoch: 0, step: 5, sim_time_s: 10.0, accuracy: 0.50, loss: 1.0 },
+                EvalRecord { epoch: 1, step: 10, sim_time_s: 20.0, accuracy: 0.80, loss: 0.5 },
+                EvalRecord { epoch: 2, step: 15, sim_time_s: 30.0, accuracy: 0.75, loss: 0.4 },
+                EvalRecord { epoch: 3, step: 20, sim_time_s: 40.0, accuracy: 0.90, loss: 0.3 },
+            ],
+            total_sim_time_s: 40.0,
+            host_time_s: 1.0,
+            deadline_s: 2.0,
+            mean_arrivals: 0.9,
+        }
+    }
+
+    #[test]
+    fn time_to_accuracy_finds_first_crossing() {
+        let r = report();
+        assert_eq!(r.time_to_accuracy(0.8), Some(20.0));
+        assert_eq!(r.time_to_accuracy(0.85), Some(40.0));
+        assert_eq!(r.time_to_accuracy(0.95), None);
+        assert_eq!(r.steps_to_accuracy(0.8), Some(10));
+    }
+
+    #[test]
+    fn final_and_best() {
+        let r = report();
+        assert_eq!(r.final_accuracy(), 0.90);
+        assert_eq!(r.best_accuracy(), 0.90);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let r = report();
+        let path = std::env::temp_dir().join("codedfedl_metrics_test.csv");
+        r.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("epoch,step,sim_time_s,accuracy,loss\n"));
+        assert_eq!(text.lines().count(), 5);
+    }
+
+    #[test]
+    fn json_summary_has_fields() {
+        let j = report().to_json();
+        assert_eq!(j.get("scheme").unwrap().as_str().unwrap(), "coded");
+        assert_eq!(j.get("evals").unwrap().as_usize().unwrap(), 4);
+    }
+}

@@ -1,0 +1,176 @@
+//! `artifacts/manifest.json` — the ABI contract between `aot.py` and the
+//! rust runtime. The manifest records, per shape profile, the dims tuple
+//! and for every artifact its file name and input/output shapes; the
+//! runtime validates the experiment config against it before compiling.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ShapeProfile;
+use crate::util::json::Json;
+
+/// One artifact's recorded ABI.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// Input shapes in call order (empty vec = rank-0 scalar).
+    pub inputs: Vec<Vec<usize>>,
+    pub output: Vec<usize>,
+}
+
+/// All artifacts of one shape profile.
+#[derive(Debug, Clone)]
+pub struct ProfileArtifacts {
+    pub dims: BTreeMap<String, usize>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl ProfileArtifacts {
+    /// Look up an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' missing from manifest"))
+    }
+
+    /// Cross-check the manifest dims against the config's shape profile.
+    pub fn check_profile(&self, p: &ShapeProfile) -> Result<()> {
+        let want: &[(&str, usize)] = &[
+            ("d", p.d),
+            ("q", p.q),
+            ("c", p.c),
+            ("l", p.l),
+            ("u", p.u_max),
+            ("chunk", p.chunk),
+        ];
+        for (k, v) in want {
+            match self.dims.get(*k) {
+                Some(got) if got == v => {}
+                Some(got) => bail!(
+                    "artifact dim mismatch for '{k}': manifest has {got}, config wants {v} \
+                     (re-run `make artifacts`?)"
+                ),
+                None => bail!("manifest missing dim '{k}'"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub profiles: BTreeMap<String, ProfileArtifacts>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        if root.req("format")?.as_str()? != "hlo-text" {
+            bail!("unsupported manifest format");
+        }
+        let mut profiles = BTreeMap::new();
+        for (pname, pval) in root.req("profiles")?.as_obj()? {
+            let mut dims = BTreeMap::new();
+            for (k, v) in pval.req("dims")?.as_obj()? {
+                dims.insert(k.clone(), v.as_usize()?);
+            }
+            let mut artifacts = BTreeMap::new();
+            for (aname, aval) in pval.req("artifacts")?.as_obj()? {
+                let file = dir.join(aval.req("file")?.as_str()?);
+                let inputs = aval
+                    .req("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_usize_vec())
+                    .collect::<Result<Vec<_>>>()?;
+                let output = aval.req("output")?.as_usize_vec()?;
+                artifacts.insert(
+                    aname.clone(),
+                    ArtifactMeta { name: aname.clone(), file, inputs, output },
+                );
+            }
+            profiles.insert(pname.clone(), ProfileArtifacts { dims, artifacts });
+        }
+        Ok(Manifest { dir, profiles })
+    }
+
+    /// Get one profile's artifact set.
+    pub fn profile(&self, name: &str) -> Result<&ProfileArtifacts> {
+        self.profiles
+            .get(name)
+            .with_context(|| format!("profile '{name}' not in manifest (built profiles: {:?})",
+                self.profiles.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let json = r#"{
+          "format": "hlo-text", "version": 1,
+          "profiles": {
+            "tiny": {
+              "dims": {"d": 32, "q": 64, "c": 4, "l": 20, "u": 30, "chunk": 50},
+              "artifacts": {
+                "grad_client": {"file": "tiny_grad_client.hlo.txt",
+                  "inputs": [[20,64],[20,4],[64,4],[20,1]], "output": [64,4]}
+              }
+            }
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let dir = std::env::temp_dir().join("codedfedl_manifest_test");
+        write_fake_manifest(&dir);
+        let man = Manifest::load(&dir).unwrap();
+        let prof = man.profile("tiny").unwrap();
+        assert_eq!(prof.dims["q"], 64);
+        let art = prof.artifact("grad_client").unwrap();
+        assert_eq!(art.inputs.len(), 4);
+        assert_eq!(art.output, vec![64, 4]);
+        let p = crate::config::profile("tiny").unwrap();
+        prof.check_profile(&p).unwrap();
+    }
+
+    #[test]
+    fn detects_dim_mismatch() {
+        let dir = std::env::temp_dir().join("codedfedl_manifest_test2");
+        write_fake_manifest(&dir);
+        let man = Manifest::load(&dir).unwrap();
+        let prof = man.profile("tiny").unwrap();
+        let mut p = crate::config::profile("tiny").unwrap();
+        p.q = 999;
+        assert!(prof.check_profile(&p).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_and_profile_error() {
+        let dir = std::env::temp_dir().join("codedfedl_manifest_test3");
+        write_fake_manifest(&dir);
+        let man = Manifest::load(&dir).unwrap();
+        assert!(man.profile("paper").is_err());
+        assert!(man.profile("tiny").unwrap().artifact("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_friendly() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

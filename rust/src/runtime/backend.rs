@@ -1,0 +1,262 @@
+//! The compute interface the FL trainer codes against, and its pure-rust
+//! reference implementation.
+//!
+//! [`ComputeBackend`] has exactly one method per AOT artifact; the
+//! [`crate::runtime::xla::XlaBackend`] executes the HLO artifacts via
+//! PJRT, while [`NativeBackend`] evaluates the same math with
+//! [`crate::mathx::linalg`]. Integration tests drive both and require
+//! agreement, which pins the artifact ABI end-to-end.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::mathx::linalg::{gradient_ref, Matrix};
+
+/// A backend-resident input operand.
+///
+/// The training hot loop re-feeds the *same* client slices, parity data,
+/// masks and test chunks every epoch; preparing them once (for the XLA
+/// backend: converting to a `Literal` up front) removes the per-step
+/// host-to-literal copy — the §Perf "literal caching" optimization.
+pub enum PreparedMatrix {
+    /// Plain host matrix (native backend, and the fallback path).
+    Native(Matrix),
+    /// Pre-built XLA literal plus its logical shape.
+    Xla(::xla::Literal, (usize, usize)),
+}
+
+impl PreparedMatrix {
+    /// Logical (rows, cols).
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            PreparedMatrix::Native(m) => m.shape(),
+            PreparedMatrix::Xla(_, s) => *s,
+        }
+    }
+
+    /// Borrow the host matrix (errors for device-prepared operands).
+    pub fn as_native(&self) -> Result<&Matrix> {
+        match self {
+            PreparedMatrix::Native(m) => Ok(m),
+            PreparedMatrix::Xla(..) => bail!("operand was prepared for the XLA backend"),
+        }
+    }
+}
+
+/// Compute operations of one shape profile. All matrices are row-major
+/// f32; shapes must match the profile exactly (the *callers* pad/mask).
+pub trait ComputeBackend {
+    /// Masked gradient sum over a client mini-batch slice:
+    /// `X^T(mask*(X beta - Y))` with `X: (l, q)`.
+    fn grad_client(&self, x: &Matrix, y: &Matrix, beta: &Matrix, mask: &[f32]) -> Result<Matrix>;
+
+    /// Masked gradient sum over the composite parity data, `X: (u_max, q)`.
+    fn grad_server(&self, x: &Matrix, y: &Matrix, beta: &Matrix, mask: &[f32]) -> Result<Matrix>;
+
+    /// RFF embedding of one row chunk: `(chunk, d) -> (chunk, q)`.
+    fn rff_chunk(&self, x: &Matrix, omega: &Matrix, delta: &Matrix) -> Result<Matrix>;
+
+    /// Parity encoding `G @ (w * M)` with `G: (u_max, l)`, `M: (l, p)`.
+    fn encode(&self, g: &Matrix, w: &[f32], m: &Matrix) -> Result<Matrix>;
+
+    /// Ridge step `beta - lr*(grad + lam*beta)`.
+    fn update(&self, beta: &Matrix, grad: &Matrix, lr: f32, lam: f32) -> Result<Matrix>;
+
+    /// Logits for one test chunk: `(chunk, q) @ (q, c)`.
+    fn predict_chunk(&self, x: &Matrix, beta: &Matrix) -> Result<Matrix>;
+
+    /// Human-readable backend name (for logs and EXPERIMENTS.md).
+    fn name(&self) -> &'static str;
+
+    // ---- prepared-operand hot path (defaults: host-matrix passthrough) ----
+
+    /// Prepare a matrix operand for repeated use.
+    fn prepare(&self, m: &Matrix) -> Result<PreparedMatrix> {
+        Ok(PreparedMatrix::Native(m.clone()))
+    }
+
+    /// Prepare a column vector (masks) for repeated use.
+    fn prepare_col(&self, v: &[f32]) -> Result<PreparedMatrix> {
+        Ok(PreparedMatrix::Native(Matrix::from_vec(v.len(), 1, v.to_vec())))
+    }
+
+    /// [`ComputeBackend::grad_client`] over prepared operands (`beta` is
+    /// also prepared — once per step, not once per call).
+    fn grad_client_p(
+        &self,
+        x: &PreparedMatrix,
+        y: &PreparedMatrix,
+        beta: &PreparedMatrix,
+        mask: &PreparedMatrix,
+    ) -> Result<Matrix> {
+        let m = mask.as_native()?;
+        self.grad_client(x.as_native()?, y.as_native()?, beta.as_native()?, m.data())
+    }
+
+    /// [`ComputeBackend::grad_server`] over prepared operands.
+    fn grad_server_p(
+        &self,
+        x: &PreparedMatrix,
+        y: &PreparedMatrix,
+        beta: &PreparedMatrix,
+        mask: &PreparedMatrix,
+    ) -> Result<Matrix> {
+        let m = mask.as_native()?;
+        self.grad_server(x.as_native()?, y.as_native()?, beta.as_native()?, m.data())
+    }
+
+    /// [`ComputeBackend::predict_chunk`] over a prepared chunk.
+    fn predict_chunk_p(&self, x: &PreparedMatrix, beta: &PreparedMatrix) -> Result<Matrix> {
+        self.predict_chunk(x.as_native()?, beta.as_native()?)
+    }
+
+    /// RFF-embed an arbitrary number of rows by streaming `chunk`-row
+    /// slices through [`ComputeBackend::rff_chunk`], zero-padding the tail.
+    fn rff_embed_all(&self, x: &Matrix, omega: &Matrix, delta: &Matrix, chunk: usize)
+        -> Result<Matrix> {
+        let (m, d) = x.shape();
+        let q = omega.cols();
+        let mut out = Matrix::zeros(m, q);
+        let mut row = 0;
+        while row < m {
+            let take = chunk.min(m - row);
+            let mut padded = Matrix::zeros(chunk, d);
+            for r in 0..take {
+                padded.row_mut(r).copy_from_slice(x.row(row + r));
+            }
+            let emb = self.rff_chunk(&padded, omega, delta)?;
+            ensure!(emb.shape() == (chunk, q), "rff chunk shape {:?}", emb.shape());
+            for r in 0..take {
+                out.row_mut(row + r).copy_from_slice(emb.row(r));
+            }
+            row += take;
+        }
+        Ok(out)
+    }
+
+    /// Predict logits for an arbitrary number of rows (streamed, padded).
+    fn predict_all(&self, x: &Matrix, beta: &Matrix, chunk: usize) -> Result<Matrix> {
+        let (m, q) = x.shape();
+        let c = beta.cols();
+        let mut out = Matrix::zeros(m, c);
+        let mut row = 0;
+        while row < m {
+            let take = chunk.min(m - row);
+            let mut padded = Matrix::zeros(chunk, q);
+            for r in 0..take {
+                padded.row_mut(r).copy_from_slice(x.row(row + r));
+            }
+            let logits = self.predict_chunk(&padded, beta)?;
+            for r in 0..take {
+                out.row_mut(row + r).copy_from_slice(logits.row(r));
+            }
+            row += take;
+        }
+        Ok(out)
+    }
+}
+
+/// Pure-rust implementation over [`crate::mathx::linalg`]. Exact same math
+/// as the artifacts; used as the test oracle and for artifact-free runs
+/// (`use_xla = false`).
+pub struct NativeBackend;
+
+impl ComputeBackend for NativeBackend {
+    fn grad_client(&self, x: &Matrix, y: &Matrix, beta: &Matrix, mask: &[f32]) -> Result<Matrix> {
+        Ok(gradient_ref(x, y, beta, mask))
+    }
+
+    fn grad_server(&self, x: &Matrix, y: &Matrix, beta: &Matrix, mask: &[f32]) -> Result<Matrix> {
+        Ok(gradient_ref(x, y, beta, mask))
+    }
+
+    fn rff_chunk(&self, x: &Matrix, omega: &Matrix, delta: &Matrix) -> Result<Matrix> {
+        let q = omega.cols();
+        ensure!(delta.shape() == (1, q), "delta shape");
+        let scale = (2.0f32 / q as f32).sqrt();
+        let mut out = x.matmul(omega);
+        for r in 0..out.rows() {
+            let row = out.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                *v = scale * (*v + delta.get(0, c)).cos();
+            }
+        }
+        Ok(out)
+    }
+
+    fn encode(&self, g: &Matrix, w: &[f32], m: &Matrix) -> Result<Matrix> {
+        Ok(g.matmul(&m.scale_rows(w)))
+    }
+
+    fn update(&self, beta: &Matrix, grad: &Matrix, lr: f32, lam: f32) -> Result<Matrix> {
+        // beta - lr*(grad + lam*beta) = (1 - lr*lam)*beta - lr*grad
+        Ok(beta.scale(1.0 - lr * lam).axpy(-lr, grad))
+    }
+
+    fn predict_chunk(&self, x: &Matrix, beta: &Matrix) -> Result<Matrix> {
+        Ok(x.matmul(beta))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::rng::Rng;
+
+    #[test]
+    fn native_update_math() {
+        let beta = Matrix::from_vec(2, 1, vec![1.0, 2.0]);
+        let grad = Matrix::from_vec(2, 1, vec![0.5, -0.5]);
+        let nb = NativeBackend;
+        let out = nb.update(&beta, &grad, 0.1, 0.01).unwrap();
+        // (1 - 0.001)*beta - 0.1*grad
+        assert!((out.get(0, 0) - (0.999 - 0.05)).abs() < 1e-6);
+        assert!((out.get(1, 0) - (1.998 + 0.05)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn native_rff_is_bounded_and_scaled() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(5, 3, 0.0, 1.0, &mut rng);
+        let omega = Matrix::randn(3, 8, 0.0, 1.0, &mut rng);
+        let delta = Matrix::randn(1, 8, 3.0, 1.0, &mut rng);
+        let out = NativeBackend.rff_chunk(&x, &omega, &delta).unwrap();
+        let bound = (2.0f32 / 8.0).sqrt() + 1e-6;
+        assert!(out.data().iter().all(|v| v.abs() <= bound));
+    }
+
+    #[test]
+    fn streamed_embed_handles_ragged_tail() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::randn(7, 3, 0.0, 1.0, &mut rng); // 7 rows, chunk 4
+        let omega = Matrix::randn(3, 6, 0.0, 1.0, &mut rng);
+        let delta = Matrix::randn(1, 6, 0.0, 1.0, &mut rng);
+        let nb = NativeBackend;
+        let streamed = nb.rff_embed_all(&x, &omega, &delta, 4).unwrap();
+        let whole = nb.rff_chunk(&x, &omega, &delta).unwrap();
+        assert!(streamed.max_abs_diff(&whole) < 1e-6);
+    }
+
+    #[test]
+    fn streamed_predict_matches_direct() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::randn(9, 4, 0.0, 1.0, &mut rng);
+        let beta = Matrix::randn(4, 3, 0.0, 1.0, &mut rng);
+        let nb = NativeBackend;
+        let streamed = nb.predict_all(&x, &beta, 4).unwrap();
+        assert!(streamed.max_abs_diff(&x.matmul(&beta)) < 1e-6);
+    }
+
+    #[test]
+    fn encode_equals_weighted_matmul() {
+        let mut rng = Rng::new(4);
+        let g = Matrix::randn(3, 5, 0.0, 1.0, &mut rng);
+        let m = Matrix::randn(5, 2, 0.0, 1.0, &mut rng);
+        let w = vec![1.0, 0.5, 0.0, 2.0, 1.0];
+        let got = NativeBackend.encode(&g, &w, &m).unwrap();
+        assert!(got.max_abs_diff(&g.matmul(&m.scale_rows(&w))) < 1e-6);
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the training hot path.
+//!
+//! * [`artifact`] — `artifacts/manifest.json` parsing + shape validation.
+//! * [`backend`] — the [`backend::ComputeBackend`] trait the trainer codes
+//!   against, plus the pure-rust [`backend::NativeBackend`] oracle.
+//! * [`xla`] — [`xla::XlaBackend`]: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `compile` → `execute`.
+//!
+//! Python never runs here: the artifacts are self-contained HLO.
+
+pub mod artifact;
+pub mod backend;
+pub mod xla;
+
+pub use artifact::{ArtifactMeta, Manifest, ProfileArtifacts};
+pub use backend::{ComputeBackend, NativeBackend};
+pub use xla::XlaBackend;

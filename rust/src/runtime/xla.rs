@@ -1,0 +1,270 @@
+//! XLA/PJRT backend: compiles the HLO-text artifacts once at startup and
+//! executes them on the training hot path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`) — see
+//! DESIGN.md: serialized protos from jax >= 0.5 carry 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::ShapeProfile;
+use crate::mathx::linalg::Matrix;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::backend::{ComputeBackend, PreparedMatrix};
+
+/// A compiled artifact plus its declared ABI (for shape checks).
+struct LoadedExe {
+    exe: ::xla::PjRtLoadedExecutable,
+    inputs: Vec<Vec<usize>>,
+    output: Vec<usize>,
+}
+
+/// PJRT-CPU backend holding one compiled executable per artifact.
+pub struct XlaBackend {
+    _client: ::xla::PjRtClient,
+    exes: BTreeMap<String, LoadedExe>,
+    profile: String,
+}
+
+impl XlaBackend {
+    /// Load and compile every artifact of `profile` from `artifacts_dir`.
+    pub fn load(artifacts_dir: &str, profile: &ShapeProfile) -> Result<XlaBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let prof = manifest.profile(profile.name)?;
+        prof.check_profile(profile)?;
+
+        let client = ::xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = BTreeMap::new();
+        for (name, meta) in &prof.artifacts {
+            let proto = ::xla::HloModuleProto::from_text_file(&meta.file)
+                .with_context(|| format!("parsing HLO text {}", meta.file.display()))?;
+            let comp = ::xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            exes.insert(
+                name.clone(),
+                LoadedExe { exe, inputs: meta.inputs.clone(), output: meta.output.clone() },
+            );
+        }
+        crate::log_info!("XlaBackend: compiled {} artifacts (profile {})", exes.len(), profile.name);
+        Ok(XlaBackend { _client: client, exes, profile: profile.name.to_string() })
+    }
+
+    /// Profile name this backend was built for.
+    pub fn profile(&self) -> &str {
+        &self.profile
+    }
+
+    fn matrix_literal(m: &Matrix) -> Result<::xla::Literal> {
+        Ok(::xla::Literal::vec1(m.data()).reshape(&[m.rows() as i64, m.cols() as i64])?)
+    }
+
+    /// Run an artifact whose operands were all prepared with
+    /// [`ComputeBackend::prepare`]; `beta` sits at ABI position
+    /// `beta_pos` (prepared once per training step by the caller).
+    fn run_prepared(
+        &self,
+        name: &str,
+        ops: &[&PreparedMatrix],
+        beta_pos: usize,
+        beta: &PreparedMatrix,
+    ) -> Result<Matrix> {
+        let loaded = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        ensure!(
+            ops.len() + 1 == loaded.inputs.len(),
+            "artifact '{name}': {} prepared operands + beta vs ABI arity {}",
+            ops.len(),
+            loaded.inputs.len()
+        );
+        // Pass 1: materialize owned literals (any native-prepared operands
+        // incl. beta), so the borrow list below never dangles on Vec
+        // reallocation.
+        let beta_owned;
+        let beta_lit: &::xla::Literal = match beta {
+            PreparedMatrix::Xla(lit, _) => lit,
+            PreparedMatrix::Native(m) => {
+                beta_owned = Self::matrix_literal(m)?;
+                &beta_owned
+            }
+        };
+        let mut owned: Vec<Option<::xla::Literal>> = Vec::with_capacity(ops.len());
+        for op in ops {
+            owned.push(match op {
+                PreparedMatrix::Native(m) => Some(Self::matrix_literal(m)?),
+                PreparedMatrix::Xla(..) => None,
+            });
+        }
+        // Pass 2: assemble the input list in ABI order, checking shapes.
+        let mut literals: Vec<&::xla::Literal> = Vec::with_capacity(ops.len() + 1);
+        let mut k = 0usize;
+        for (i, want) in loaded.inputs.iter().enumerate() {
+            if i == beta_pos {
+                literals.push(beta_lit);
+                continue;
+            }
+            let op = ops[k];
+            let (r, c) = op.shape();
+            ensure!(
+                want.len() == 2 && (r, c) == (want[0], want[1]),
+                "artifact '{name}' input {i}: prepared shape ({r},{c}) vs ABI {want:?}"
+            );
+            match (op, &owned[k]) {
+                (PreparedMatrix::Xla(lit, _), _) => literals.push(lit),
+                (PreparedMatrix::Native(_), Some(lit)) => literals.push(lit),
+                _ => unreachable!("owned literal missing for native operand"),
+            }
+            k += 1;
+        }
+        let result = loaded.exe.execute::<&::xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        let data = result.to_vec::<f32>()?;
+        let (r, c) = (loaded.output[0], loaded.output[1]);
+        ensure!(data.len() == r * c, "artifact '{name}': output size {} != {r}x{c}", data.len());
+        Ok(Matrix::from_vec(r, c, data))
+    }
+
+    /// Run one artifact on matrix/scalar inputs, returning the single
+    /// (tupled) matrix output.
+    fn run(&self, name: &str, inputs: &[Input<'_>]) -> Result<Matrix> {
+        let loaded = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        ensure!(
+            inputs.len() == loaded.inputs.len(),
+            "artifact '{name}': {} inputs given, ABI wants {}",
+            inputs.len(),
+            loaded.inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, inp) in inputs.iter().enumerate() {
+            let want = &loaded.inputs[i];
+            match inp {
+                Input::Mat(m) => {
+                    ensure!(
+                        want.len() == 2 && m.shape() == (want[0], want[1]),
+                        "artifact '{name}' input {i}: got {:?}, ABI wants {:?}",
+                        m.shape(),
+                        want
+                    );
+                    literals.push(Self::matrix_literal(m)?);
+                }
+                Input::Col(v) => {
+                    ensure!(
+                        want.len() == 2 && want[1] == 1 && v.len() == want[0],
+                        "artifact '{name}' input {i}: got ({},1), ABI wants {:?}",
+                        v.len(),
+                        want
+                    );
+                    literals.push(::xla::Literal::vec1(v).reshape(&[v.len() as i64, 1])?);
+                }
+                Input::Scalar(s) => {
+                    ensure!(
+                        want.is_empty(),
+                        "artifact '{name}' input {i}: got scalar, ABI wants {:?}",
+                        want
+                    );
+                    literals.push(::xla::Literal::scalar(*s));
+                }
+            }
+        }
+        let result = loaded.exe.execute::<::xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?; // aot.py lowers with return_tuple=True
+        let data = result.to_vec::<f32>()?;
+        let (r, c) = (loaded.output[0], loaded.output[1]);
+        ensure!(data.len() == r * c, "artifact '{name}': output size {} != {r}x{c}", data.len());
+        Ok(Matrix::from_vec(r, c, data))
+    }
+}
+
+/// Typed artifact input.
+enum Input<'a> {
+    Mat(&'a Matrix),
+    Col(&'a [f32]),
+    Scalar(f32),
+}
+
+impl ComputeBackend for XlaBackend {
+    fn grad_client(&self, x: &Matrix, y: &Matrix, beta: &Matrix, mask: &[f32]) -> Result<Matrix> {
+        self.run("grad_client", &[Input::Mat(x), Input::Mat(y), Input::Mat(beta), Input::Col(mask)])
+    }
+
+    fn grad_server(&self, x: &Matrix, y: &Matrix, beta: &Matrix, mask: &[f32]) -> Result<Matrix> {
+        self.run("grad_server", &[Input::Mat(x), Input::Mat(y), Input::Mat(beta), Input::Col(mask)])
+    }
+
+    fn rff_chunk(&self, x: &Matrix, omega: &Matrix, delta: &Matrix) -> Result<Matrix> {
+        self.run("rff", &[Input::Mat(x), Input::Mat(omega), Input::Mat(delta)])
+    }
+
+    fn encode(&self, g: &Matrix, w: &[f32], m: &Matrix) -> Result<Matrix> {
+        // The ABI ships two encode entry points (feature width q and label
+        // width c); dispatch on M's column count.
+        let x_width = self.exes.get("encode_x").map(|e| e.inputs[2][1]);
+        let name = if x_width == Some(m.cols()) { "encode_x" } else { "encode_y" };
+        self.run(name, &[Input::Mat(g), Input::Col(w), Input::Mat(m)])
+    }
+
+    fn update(&self, beta: &Matrix, grad: &Matrix, lr: f32, lam: f32) -> Result<Matrix> {
+        self.run(
+            "update",
+            &[Input::Mat(beta), Input::Mat(grad), Input::Scalar(lr), Input::Scalar(lam)],
+        )
+    }
+
+    fn predict_chunk(&self, x: &Matrix, beta: &Matrix) -> Result<Matrix> {
+        self.run("predict", &[Input::Mat(x), Input::Mat(beta)])
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt-cpu"
+    }
+
+    // ---- prepared-operand overrides: build the literal once, reuse every
+    // step (§Perf "literal caching"). ----
+
+    fn prepare(&self, m: &Matrix) -> Result<PreparedMatrix> {
+        Ok(PreparedMatrix::Xla(Self::matrix_literal(m)?, m.shape()))
+    }
+
+    fn prepare_col(&self, v: &[f32]) -> Result<PreparedMatrix> {
+        Ok(PreparedMatrix::Xla(
+            ::xla::Literal::vec1(v).reshape(&[v.len() as i64, 1])?,
+            (v.len(), 1),
+        ))
+    }
+
+    fn grad_client_p(
+        &self,
+        x: &PreparedMatrix,
+        y: &PreparedMatrix,
+        beta: &PreparedMatrix,
+        mask: &PreparedMatrix,
+    ) -> Result<Matrix> {
+        // ABI order: (x, y, beta, mask); beta is input 2.
+        self.run_prepared("grad_client", &[x, y, mask], 2, beta)
+    }
+
+    fn grad_server_p(
+        &self,
+        x: &PreparedMatrix,
+        y: &PreparedMatrix,
+        beta: &PreparedMatrix,
+        mask: &PreparedMatrix,
+    ) -> Result<Matrix> {
+        self.run_prepared("grad_server", &[x, y, mask], 2, beta)
+    }
+
+    fn predict_chunk_p(&self, x: &PreparedMatrix, beta: &PreparedMatrix) -> Result<Matrix> {
+        // ABI order: (x, beta); beta is input 1.
+        self.run_prepared("predict", &[x], 1, beta)
+    }
+}

@@ -1,0 +1,272 @@
+//! Asymmetric up/downlink delay model — the generalization the paper's
+//! footnote 1 waves at ("Generalization of our framework to asymmetric
+//! delay model is easy to address"). Here it is addressed.
+//!
+//! The symmetric model collapses `tau_d N_d + tau_u N_u` into
+//! `tau * NB(2, 1-p)`; with distinct per-transmission times the negative-
+//! binomial trick no longer applies, so the return probability becomes a
+//! (rapidly converging) double sum over the two geometric transmission
+//! counts:
+//!
+//! ```text
+//! P(T <= t) = sum_{a>=1} sum_{b>=1} (1-p)^2 p^(a+b-2)
+//!             * F_exp(t - l/mu - a tau_d - b tau_u)
+//! ```
+//!
+//! where `F_exp` is the CDF of the shifted-exponential compute time. Both
+//! sums truncate at `t / tau`, and the geometric tails bound the error.
+
+use crate::mathx::distributions::{Exponential, Geometric, Sample};
+use crate::mathx::rng::Rng;
+use crate::simnet::delay::ClientModel;
+
+/// Client with distinct downlink/uplink per-transmission times.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsymClientModel {
+    /// Processing rate in points/s.
+    pub mu: f64,
+    /// Shifted-exponential shape.
+    pub alpha: f64,
+    /// Downlink per-transmission time (model broadcast).
+    pub tau_down: f64,
+    /// Uplink per-transmission time (gradient upload) — often larger in
+    /// LTE/5G where uplink rates trail downlink rates.
+    pub tau_up: f64,
+    /// Erasure probability (shared by both directions, as in §A.2).
+    pub p_fail: f64,
+}
+
+impl AsymClientModel {
+    /// Lift a symmetric model, scaling the uplink by `uplink_ratio`
+    /// (`1.0` recovers the paper's symmetric footnote-1 baseline).
+    pub fn from_symmetric(m: &ClientModel, uplink_ratio: f64) -> AsymClientModel {
+        assert!(uplink_ratio > 0.0);
+        AsymClientModel {
+            mu: m.mu,
+            alpha: m.alpha,
+            tau_down: m.tau,
+            tau_up: m.tau * uplink_ratio,
+            p_fail: m.p_fail,
+        }
+    }
+
+    /// Sample one epoch's total execution time for load `l_tilde`.
+    pub fn sample_total(&self, l_tilde: usize, rng: &mut Rng) -> f64 {
+        let geo = Geometric::new(self.p_fail);
+        let n_down = geo.sample_trials(rng) as f64;
+        let n_up = geo.sample_trials(rng) as f64;
+        let compute = if l_tilde == 0 {
+            0.0
+        } else {
+            l_tilde as f64 / self.mu
+                + Exponential::new(self.alpha * self.mu / l_tilde as f64).sample(rng)
+        };
+        compute + n_down * self.tau_down + n_up * self.tau_up
+    }
+
+    /// Mean epoch delay: `(l/mu)(1 + 1/alpha) + (tau_d + tau_u)/(1-p)`.
+    pub fn mean_delay(&self, l_tilde: usize) -> f64 {
+        let compute = if l_tilde == 0 {
+            0.0
+        } else {
+            (l_tilde as f64 / self.mu) * (1.0 + 1.0 / self.alpha)
+        };
+        compute + (self.tau_down + self.tau_up) / (1.0 - self.p_fail)
+    }
+
+    /// Closed-form `P(T <= t)` via the truncated double geometric sum.
+    pub fn prob_return(&self, l: f64, t: f64) -> f64 {
+        if t <= 0.0 {
+            return 0.0;
+        }
+        let compute_cdf = |slack: f64| -> f64 {
+            let det = if l == 0.0 { 0.0 } else { l / self.mu };
+            let s = slack - det;
+            if s <= 0.0 {
+                0.0
+            } else if l == 0.0 {
+                1.0
+            } else {
+                1.0 - (-(self.alpha * self.mu / l) * s).exp()
+            }
+        };
+        let p = self.p_fail;
+        if p == 0.0 {
+            return compute_cdf(t - self.tau_down - self.tau_up);
+        }
+        let q = 1.0 - p;
+        let a_max = ((t / self.tau_down).ceil() as i64).max(1);
+        let mut total = 0.0;
+        let mut pa = q; // P(N_d = a) for a = 1
+        for a in 1..=a_max {
+            let rem = t - a as f64 * self.tau_down;
+            if rem <= self.tau_up {
+                break;
+            }
+            let b_max = ((rem / self.tau_up).ceil() as i64).max(1);
+            let mut pb = q;
+            for b in 1..=b_max {
+                let slack = rem - b as f64 * self.tau_up;
+                if slack <= 0.0 {
+                    break;
+                }
+                total += pa * pb * compute_cdf(slack);
+                pb *= p;
+                if pb < 1e-14 {
+                    break;
+                }
+            }
+            pa *= p;
+            if pa < 1e-14 {
+                break;
+            }
+        }
+        total.clamp(0.0, 1.0)
+    }
+
+    /// Expected return `l * P(T <= t)`.
+    pub fn expected_return(&self, l: f64, t: f64) -> f64 {
+        if l <= 0.0 {
+            0.0
+        } else {
+            l * self.prob_return(l, t)
+        }
+    }
+}
+
+/// Maximize the asymmetric expected return over `l in [0, cap]`.
+///
+/// The surface is piecewise concave with boundaries at every
+/// `mu (t - a tau_d - b tau_u)`; rather than enumerating the (a, b) grid
+/// we run a dense coarse scan to bracket the best piece, then refine
+/// with golden-section search inside the bracket.
+pub fn optimal_load_asym(m: &AsymClientModel, t: f64, cap: f64) -> (f64, f64) {
+    let f = |l: f64| m.expected_return(l, t);
+    let n_grid = 512usize;
+    let mut best = (0.0f64, 0.0f64);
+    for i in 0..=n_grid {
+        let l = cap * i as f64 / n_grid as f64;
+        let e = f(l);
+        if e > best.1 {
+            best = (l, e);
+        }
+    }
+    // Golden refinement around the winning grid cell.
+    let h = cap / n_grid as f64;
+    let (mut lo, mut hi) = ((best.0 - h).max(0.0), (best.0 + h).min(cap));
+    for _ in 0..60 {
+        let x1 = hi - 0.618_033_988_749_894_8 * (hi - lo);
+        let x2 = lo + 0.618_033_988_749_894_8 * (hi - lo);
+        if f(x1) < f(x2) {
+            lo = x1;
+        } else {
+            hi = x2;
+        }
+    }
+    let xm = 0.5 * (lo + hi);
+    let em = f(xm);
+    if em > best.1 {
+        best = (xm, em);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::expected_return::prob_return as sym_prob;
+    use crate::testx::{check, Gen};
+
+    fn sym() -> ClientModel {
+        ClientModel { mu: 100.0, alpha: 2.0, tau: 0.05, p_fail: 0.1 }
+    }
+
+    #[test]
+    fn symmetric_case_matches_nb_closed_form() {
+        // With tau_d == tau_u the double sum must reproduce the paper's
+        // negative-binomial Theorem exactly.
+        let s = sym();
+        let a = AsymClientModel::from_symmetric(&s, 1.0);
+        for &(l, t) in &[(20.0, 0.5), (50.0, 1.0), (80.0, 1.2), (0.0, 0.3)] {
+            let got = a.prob_return(l, t);
+            let want = sym_prob(&s, l, t);
+            assert!((got - want).abs() < 1e-9, "l={l} t={t}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn matches_monte_carlo_asymmetric() {
+        let a = AsymClientModel {
+            mu: 100.0,
+            alpha: 2.0,
+            tau_down: 0.03,
+            tau_up: 0.11,
+            p_fail: 0.25,
+        };
+        let mut rng = Rng::new(1);
+        for &(l, t) in &[(30usize, 0.8f64), (60, 1.2)] {
+            let analytic = a.prob_return(l as f64, t);
+            let hits = (0..150_000)
+                .filter(|_| a.sample_total(l, &mut rng) <= t)
+                .count();
+            let mc = hits as f64 / 150_000.0;
+            assert!((analytic - mc).abs() < 0.006, "l={l} t={t}: {analytic} vs {mc}");
+        }
+    }
+
+    #[test]
+    fn empirical_mean_matches_closed_form() {
+        let a = AsymClientModel { mu: 50.0, alpha: 1.5, tau_down: 0.02, tau_up: 0.09, p_fail: 0.2 };
+        let mut rng = Rng::new(2);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| a.sample_total(40, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - a.mean_delay(40)).abs() < 0.01, "{mean} vs {}", a.mean_delay(40));
+    }
+
+    #[test]
+    fn slower_uplink_reduces_return() {
+        let s = sym();
+        let fast = AsymClientModel::from_symmetric(&s, 1.0);
+        let slow = AsymClientModel::from_symmetric(&s, 4.0);
+        for i in 1..20 {
+            let t = 0.2 * i as f64;
+            assert!(
+                slow.prob_return(40.0, t) <= fast.prob_return(40.0, t) + 1e-12,
+                "slow uplink should not return more at t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn optimizer_beats_grid_asym() {
+        let a = AsymClientModel { mu: 80.0, alpha: 2.0, tau_down: 0.04, tau_up: 0.15, p_fail: 0.3 };
+        let (t, cap) = (1.5, 150.0);
+        let (_, best) = optimal_load_asym(&a, t, cap);
+        let mut grid_best = 0.0f64;
+        for i in 0..=30_000 {
+            grid_best = grid_best.max(a.expected_return(cap * i as f64 / 30_000.0, t));
+        }
+        assert!(best >= grid_best - 1e-4 * grid_best.max(1.0), "{best} vs {grid_best}");
+    }
+
+    #[test]
+    fn property_asym_return_monotone_in_t() {
+        check("asym monotone", 40, |g: &mut Gen| {
+            let a = AsymClientModel {
+                mu: g.f64_range(1.0, 200.0),
+                alpha: g.f64_range(0.3, 6.0),
+                tau_down: g.f64_range(0.005, 0.5),
+                tau_up: g.f64_range(0.005, 0.5),
+                p_fail: g.f64_range(0.0, 0.9),
+            };
+            let l = g.f64_range(1.0, 100.0);
+            let mut prev = 0.0;
+            for i in 1..30 {
+                let t = 0.15 * i as f64;
+                let e = a.expected_return(l, t);
+                assert!(e >= prev - 1e-9, "dropped at t={t}");
+                prev = e;
+            }
+        });
+    }
+}

@@ -1,0 +1,169 @@
+//! Per-client delay model (paper §2.2).
+//!
+//! One training epoch for client `j` processing `l_tilde` points costs
+//!
+//! ```text
+//! T(j) = l_tilde / mu_j                      deterministic compute
+//!      + Exp(alpha_j mu_j / l_tilde)         stochastic memory access
+//!      + tau_j * N_down + tau_j * N_up       wireless, N ~ Geometric(1-p_j)
+//! ```
+//!
+//! `mu_j` is the processing rate in points/s, `tau_j` the per-transmission
+//! time of one model/gradient packet, `p_j` the link erasure probability.
+
+use crate::mathx::distributions::{Exponential, Geometric, Sample};
+use crate::mathx::rng::Rng;
+
+/// Static compute + link parameters of one client (or of the MEC server
+/// when it is treated as the (n+1)-th node, paper Remark 5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientModel {
+    /// Processing rate `mu_j` in data points per second.
+    pub mu: f64,
+    /// Shifted-exponential shape `alpha_j` (compute vs memory access).
+    pub alpha: f64,
+    /// Per-transmission packet time `tau_j` in seconds.
+    pub tau: f64,
+    /// Link erasure probability `p_j` in `[0, 1)`.
+    pub p_fail: f64,
+}
+
+/// One sampled epoch execution, broken into components (useful for logs
+/// and for failure-injection tests).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DelaySample {
+    /// Deterministic compute time `l_tilde / mu`.
+    pub compute_det: f64,
+    /// Stochastic memory-access time.
+    pub compute_stoch: f64,
+    /// Number of downlink transmissions (>= 1).
+    pub n_down: u64,
+    /// Number of uplink transmissions (>= 1).
+    pub n_up: u64,
+    /// Per-transmission time used.
+    pub tau: f64,
+}
+
+impl DelaySample {
+    /// Total epoch time.
+    pub fn total(&self) -> f64 {
+        self.compute_det + self.compute_stoch + (self.n_down + self.n_up) as f64 * self.tau
+    }
+}
+
+impl ClientModel {
+    /// Sample one epoch's execution time for a load of `l_tilde` points.
+    ///
+    /// `l_tilde = 0` means the client does no local work but still incurs
+    /// the model download / (empty) ack upload — the trainer never asks
+    /// for that case, but the allocator's math handles it as limit 0.
+    pub fn sample(&self, l_tilde: usize, rng: &mut Rng) -> DelaySample {
+        let geo = Geometric::new(self.p_fail);
+        let n_down = geo.sample_trials(rng);
+        let n_up = geo.sample_trials(rng);
+        let (compute_det, compute_stoch) = if l_tilde == 0 {
+            (0.0, 0.0)
+        } else {
+            let det = l_tilde as f64 / self.mu;
+            let rate = self.alpha * self.mu / l_tilde as f64; // gamma_j
+            (det, Exponential::new(rate).sample(rng))
+        };
+        DelaySample { compute_det, compute_stoch, n_down, n_up, tau: self.tau }
+    }
+
+    /// Average epoch delay `E[T] = (l/mu)(1 + 1/alpha) + 2 tau/(1-p)`
+    /// (paper §2.2, closed form).
+    pub fn mean_delay(&self, l_tilde: usize) -> f64 {
+        let compute = if l_tilde == 0 {
+            0.0
+        } else {
+            (l_tilde as f64 / self.mu) * (1.0 + 1.0 / self.alpha)
+        };
+        compute + 2.0 * self.tau / (1.0 - self.p_fail)
+    }
+
+    /// Monte-Carlo estimate of `P(T <= t)` (used by validation tests; the
+    /// closed form lives in [`crate::allocation::expected_return`]).
+    pub fn mc_prob_return(&self, l_tilde: usize, t: f64, samples: usize, rng: &mut Rng) -> f64 {
+        let mut hits = 0usize;
+        for _ in 0..samples {
+            if self.sample(l_tilde, rng).total() <= t {
+                hits += 1;
+            }
+        }
+        hits as f64 / samples as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::stats::OnlineStats;
+
+    fn model() -> ClientModel {
+        ClientModel { mu: 100.0, alpha: 2.0, tau: 0.05, p_fail: 0.1 }
+    }
+
+    #[test]
+    fn sample_components_are_sane() {
+        let m = model();
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let s = m.sample(50, &mut rng);
+            assert!((s.compute_det - 0.5).abs() < 1e-12);
+            assert!(s.compute_stoch >= 0.0);
+            assert!(s.n_down >= 1 && s.n_up >= 1);
+            assert!(s.total() >= 0.5 + 2.0 * 0.05);
+        }
+    }
+
+    #[test]
+    fn empirical_mean_matches_closed_form() {
+        let m = model();
+        let mut rng = Rng::new(2);
+        let mut stats = OnlineStats::new();
+        for _ in 0..200_000 {
+            stats.push(m.sample(50, &mut rng).total());
+        }
+        let want = m.mean_delay(50);
+        assert!(
+            (stats.mean() - want).abs() < 5.0 * stats.sem().max(1e-4),
+            "mc {} vs analytic {want}",
+            stats.mean()
+        );
+    }
+
+    #[test]
+    fn zero_load_only_pays_communication() {
+        let m = model();
+        let mut rng = Rng::new(3);
+        let s = m.sample(0, &mut rng);
+        assert_eq!(s.compute_det, 0.0);
+        assert_eq!(s.compute_stoch, 0.0);
+        assert!(s.total() >= 2.0 * m.tau);
+    }
+
+    #[test]
+    fn more_load_is_stochastically_slower() {
+        let m = model();
+        let mut rng = Rng::new(4);
+        let mean = |l: usize, rng: &mut Rng| {
+            let mut s = OnlineStats::new();
+            for _ in 0..20_000 {
+                s.push(m.sample(l, rng).total());
+            }
+            s.mean()
+        };
+        let lo = mean(10, &mut rng);
+        let hi = mean(100, &mut rng);
+        assert!(hi > lo, "{hi} <= {lo}");
+    }
+
+    #[test]
+    fn reliable_link_needs_exactly_two_transmissions() {
+        let m = ClientModel { p_fail: 0.0, ..model() };
+        let mut rng = Rng::new(5);
+        let s = m.sample(10, &mut rng);
+        assert_eq!(s.n_down + s.n_up, 2);
+    }
+}

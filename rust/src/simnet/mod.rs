@@ -1,0 +1,16 @@
+//! MEC edge-network substrate: the paper's §2.2 stochastic models for
+//! client compute and wireless communication, and the §A.2 heterogeneous
+//! population generator.
+//!
+//! The trainer uses this module as its "testbed": every epoch it samples
+//! per-client execution times `T^(j)` and the simulated wall clock
+//! advances accordingly, so speedup results are host-independent.
+
+pub mod asym;
+pub mod delay;
+pub mod topology;
+pub mod trace;
+
+pub use asym::AsymClientModel;
+pub use delay::{ClientModel, DelaySample};
+pub use topology::{build_population, Population};

@@ -1,0 +1,141 @@
+//! Heterogeneous client population generation (paper Appendix A.2).
+//!
+//! Normalized link capacities follow the geometric ladder `{1, k1, k1^2,
+//! ...}` and processing powers `{1, k2, k2^2, ...}`; each ladder is
+//! *independently* randomly permuted across clients, so a client may have
+//! a fast link but a slow CPU. Absolute scales: best link 216 kbps, best
+//! processor 3.072e6 MAC/s.
+
+use crate::config::ExperimentConfig;
+use crate::mathx::rng::Rng;
+use crate::simnet::delay::ClientModel;
+
+/// The generated population plus the raw rates (kept for reporting).
+#[derive(Debug, Clone)]
+pub struct Population {
+    pub clients: Vec<ClientModel>,
+    /// Link rate in bits/s per client.
+    pub link_rate_bps: Vec<f64>,
+    /// Processing rate in MAC/s per client.
+    pub mac_rate: Vec<f64>,
+}
+
+impl Population {
+    pub fn n(&self) -> usize {
+        self.clients.len()
+    }
+}
+
+/// Build the §A.2 population for a config. Deterministic in `rng`.
+pub fn build_population(cfg: &ExperimentConfig, rng: &mut Rng) -> Population {
+    let n = cfg.n_clients;
+    let net = &cfg.net;
+
+    // Geometric ladders, independently permuted.
+    let mut link_rank: Vec<usize> = (0..n).collect();
+    let mut mac_rank: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut link_rank);
+    rng.shuffle(&mut mac_rank);
+
+    let packet_bits = cfg.packet_bits();
+    let macs_per_point = cfg.macs_per_point();
+
+    let mut clients = Vec::with_capacity(n);
+    let mut link_rate_bps = Vec::with_capacity(n);
+    let mut mac_rate = Vec::with_capacity(n);
+    for j in 0..n {
+        let rate = net.max_rate_bps * net.k1.powi(link_rank[j] as i32);
+        let macs = net.max_mac_rate * net.k2.powi(mac_rank[j] as i32);
+        let tau = packet_bits / rate;
+        let mu = macs / macs_per_point;
+        clients.push(ClientModel { mu, alpha: net.alpha, tau, p_fail: net.p_fail });
+        link_rate_bps.push(rate);
+        mac_rate.push(macs);
+    }
+    Population { clients, link_rate_bps, mac_rate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn pop(seed: u64) -> (ExperimentConfig, Population) {
+        let cfg = ExperimentConfig::preset("small").unwrap();
+        let mut rng = Rng::new(seed);
+        let p = build_population(&cfg, &mut rng);
+        (cfg, p)
+    }
+
+    #[test]
+    fn population_size_and_positivity() {
+        let (cfg, p) = pop(1);
+        assert_eq!(p.n(), cfg.n_clients);
+        for c in &p.clients {
+            assert!(c.mu > 0.0 && c.tau > 0.0);
+            assert_eq!(c.p_fail, cfg.net.p_fail);
+            assert_eq!(c.alpha, cfg.net.alpha);
+        }
+    }
+
+    #[test]
+    fn ladders_span_expected_range() {
+        let (cfg, p) = pop(2);
+        let max_rate = p.link_rate_bps.iter().cloned().fold(0.0, f64::max);
+        let min_rate = p.link_rate_bps.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((max_rate - cfg.net.max_rate_bps).abs() < 1e-6);
+        let want_min = cfg.net.max_rate_bps * cfg.net.k1.powi(cfg.n_clients as i32 - 1);
+        assert!((min_rate - want_min).abs() < 1e-6);
+
+        let max_mac = p.mac_rate.iter().cloned().fold(0.0, f64::max);
+        assert!((max_mac - cfg.net.max_mac_rate).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ladders_are_permutations() {
+        let (cfg, p) = pop(3);
+        // Every ladder value appears exactly once.
+        let mut rates = p.link_rate_bps.clone();
+        rates.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        for (i, r) in rates.iter().enumerate() {
+            let want = cfg.net.max_rate_bps * cfg.net.k1.powi(i as i32);
+            assert!((r - want).abs() < 1e-6, "rank {i}: {r} vs {want}");
+        }
+    }
+
+    #[test]
+    fn independent_permutations_decorrelate_link_and_compute() {
+        // With independent shuffles it is (overwhelmingly) not the case
+        // that the link ranking equals the compute ranking.
+        let (_, p) = pop(4);
+        let link_order: Vec<usize> = {
+            let mut idx: Vec<usize> = (0..p.n()).collect();
+            idx.sort_by(|&a, &b| p.link_rate_bps[b].partial_cmp(&p.link_rate_bps[a]).unwrap());
+            idx
+        };
+        let mac_order: Vec<usize> = {
+            let mut idx: Vec<usize> = (0..p.n()).collect();
+            idx.sort_by(|&a, &b| p.mac_rate[b].partial_cmp(&p.mac_rate[a]).unwrap());
+            idx
+        };
+        assert_ne!(link_order, mac_order);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (_, a) = pop(5);
+        let (_, b) = pop(5);
+        assert_eq!(a.link_rate_bps, b.link_rate_bps);
+        assert_eq!(a.mac_rate, b.mac_rate);
+    }
+
+    #[test]
+    fn paper_scale_tau_is_seconds_order() {
+        // q=2000,c=10 -> 704k bits/packet; at 216 kbps tau ~ 3.26 s.
+        let cfg = ExperimentConfig::preset("paper").unwrap();
+        let mut rng = Rng::new(6);
+        let p = build_population(&cfg, &mut rng);
+        let tau_min = p.clients.iter().map(|c| c.tau).fold(f64::INFINITY, f64::min);
+        assert!((tau_min - 704_000.0 / 216_000.0).abs() < 0.01, "{tau_min}");
+    }
+}

@@ -1,0 +1,199 @@
+//! Discrete-event trace of one training epoch — per-client timelines of
+//! model broadcast, retransmissions, compute, and upload.
+//!
+//! The trainer only needs epoch *totals* (sampled in [`crate::simnet::delay`]);
+//! this module expands the same stochastic model into an event log, used
+//! by the `codedfedl trace` subcommand for debugging/visualization and by
+//! tests that validate the component decomposition against the totals.
+
+use crate::mathx::distributions::{Exponential, Geometric, Sample};
+use crate::mathx::rng::Rng;
+use crate::simnet::delay::ClientModel;
+
+/// Event kinds in a client's epoch timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A downlink transmission attempt (model broadcast to the client).
+    DownlinkAttempt { attempt: u32, success: bool },
+    /// Local gradient computation (deterministic + stochastic parts).
+    Compute,
+    /// An uplink transmission attempt (gradient to the server).
+    UplinkAttempt { attempt: u32, success: bool },
+}
+
+/// One timeline event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub client: usize,
+    pub kind: EventKind,
+    /// Event start, seconds from epoch start.
+    pub start: f64,
+    /// Event end.
+    pub end: f64,
+}
+
+/// One client's full epoch timeline.
+#[derive(Debug, Clone)]
+pub struct ClientTrace {
+    pub client: usize,
+    pub events: Vec<Event>,
+    /// Time the gradient lands at the server.
+    pub finish: f64,
+}
+
+/// Expand one epoch into event timelines. Statistically identical to
+/// [`ClientModel::sample`]: same distributions, same parameters.
+pub fn trace_epoch(
+    models: &[ClientModel],
+    loads: &[usize],
+    rng: &mut Rng,
+) -> Vec<ClientTrace> {
+    assert_eq!(models.len(), loads.len());
+    let mut traces = Vec::with_capacity(models.len());
+    for (j, (m, &load)) in models.iter().zip(loads).enumerate() {
+        let mut events = Vec::new();
+        let mut t = 0.0f64;
+        let geo = Geometric::new(m.p_fail);
+
+        // Downlink attempts until the first success.
+        let n_down = geo.sample_trials(rng) as u32;
+        for a in 1..=n_down {
+            let end = t + m.tau;
+            events.push(Event {
+                client: j,
+                kind: EventKind::DownlinkAttempt { attempt: a, success: a == n_down },
+                start: t,
+                end,
+            });
+            t = end;
+        }
+
+        // Compute.
+        if load > 0 {
+            let dur = load as f64 / m.mu
+                + Exponential::new(m.alpha * m.mu / load as f64).sample(rng);
+            events.push(Event { client: j, kind: EventKind::Compute, start: t, end: t + dur });
+            t += dur;
+        }
+
+        // Uplink attempts until the first success.
+        let n_up = geo.sample_trials(rng) as u32;
+        for a in 1..=n_up {
+            let end = t + m.tau;
+            events.push(Event {
+                client: j,
+                kind: EventKind::UplinkAttempt { attempt: a, success: a == n_up },
+                start: t,
+                end,
+            });
+            t = end;
+        }
+
+        traces.push(ClientTrace { client: j, events, finish: t });
+    }
+    traces
+}
+
+/// Write traces as CSV rows: client, kind, attempt, success, start, end.
+pub fn write_csv<W: std::io::Write>(traces: &[ClientTrace], out: W) -> anyhow::Result<()> {
+    let mut w = crate::util::csv::CsvWriter::new(
+        out,
+        &["client", "kind", "attempt", "success", "start_s", "end_s"],
+    )?;
+    for tr in traces {
+        for e in &tr.events {
+            let (kind, attempt, success) = match e.kind {
+                EventKind::DownlinkAttempt { attempt, success } => ("downlink", attempt, success),
+                EventKind::Compute => ("compute", 0, true),
+                EventKind::UplinkAttempt { attempt, success } => ("uplink", attempt, success),
+            };
+            w.row(&[
+                e.client.to_string(),
+                kind.to_string(),
+                attempt.to_string(),
+                success.to_string(),
+                format!("{:.6}", e.start),
+                format!("{:.6}", e.end),
+            ])?;
+        }
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::stats::OnlineStats;
+
+    fn model() -> ClientModel {
+        ClientModel { mu: 100.0, alpha: 2.0, tau: 0.05, p_fail: 0.3 }
+    }
+
+    #[test]
+    fn timeline_is_contiguous_and_ordered() {
+        let mut rng = Rng::new(1);
+        let traces = trace_epoch(&[model(), model()], &[50, 20], &mut rng);
+        for tr in &traces {
+            let mut t = 0.0;
+            for e in &tr.events {
+                assert!((e.start - t).abs() < 1e-12, "gap in timeline");
+                assert!(e.end >= e.start);
+                t = e.end;
+            }
+            assert!((tr.finish - t).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn exactly_one_successful_attempt_per_direction() {
+        let mut rng = Rng::new(2);
+        let traces = trace_epoch(&[model()], &[30], &mut rng);
+        let tr = &traces[0];
+        let down_succ = tr.events.iter().filter(|e| matches!(e.kind, EventKind::DownlinkAttempt { success: true, .. })).count();
+        let up_succ = tr.events.iter().filter(|e| matches!(e.kind, EventKind::UplinkAttempt { success: true, .. })).count();
+        assert_eq!(down_succ, 1);
+        assert_eq!(up_succ, 1);
+        // The successful attempt is the last one in each direction.
+        let last_down = tr.events.iter().rev().find_map(|e| match e.kind {
+            EventKind::DownlinkAttempt { success, .. } => Some(success),
+            _ => None,
+        });
+        assert_eq!(last_down, Some(true));
+    }
+
+    #[test]
+    fn finish_distribution_matches_total_sampler() {
+        // The trace's finish time must follow the same distribution as
+        // ClientModel::sample().total(): compare means over many epochs.
+        let m = model();
+        let mut rng1 = Rng::new(3);
+        let mut rng2 = Rng::new(4);
+        let mut s_trace = OnlineStats::new();
+        let mut s_total = OnlineStats::new();
+        for _ in 0..30_000 {
+            s_trace.push(trace_epoch(std::slice::from_ref(&m), &[40], &mut rng1)[0].finish);
+            s_total.push(m.sample(40, &mut rng2).total());
+        }
+        let diff = (s_trace.mean() - s_total.mean()).abs();
+        assert!(diff < 6.0 * (s_trace.sem() + s_total.sem()), "means differ: {diff}");
+    }
+
+    #[test]
+    fn zero_load_has_no_compute_event() {
+        let mut rng = Rng::new(5);
+        let traces = trace_epoch(&[model()], &[0], &mut rng);
+        assert!(traces[0].events.iter().all(|e| e.kind != EventKind::Compute));
+    }
+
+    #[test]
+    fn csv_emission() {
+        let mut rng = Rng::new(6);
+        let traces = trace_epoch(&[model()], &[10], &mut rng);
+        let mut buf = Vec::new();
+        write_csv(&traces, &mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("client,kind,attempt,success,start_s,end_s\n"));
+        assert!(text.contains("compute"));
+        assert!(text.lines().count() >= 4);
+    }
+}

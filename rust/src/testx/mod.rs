@@ -1,0 +1,144 @@
+//! Mini property-based testing framework (the offline registry has no
+//! proptest). A property is a closure over a [`Gen`] (seeded generator);
+//! [`check`] runs it across many deterministic seeds and reports the first
+//! failing seed so failures replay exactly:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the rpath to libxla_extension)
+//! use codedfedl::testx::{check, Gen};
+//! check("addition commutes", 100, |g: &mut Gen| {
+//!     let (a, b) = (g.f64_range(-1e3, 1e3), g.f64_range(-1e3, 1e3));
+//!     assert!((a + b - (b + a)).abs() < 1e-12);
+//! });
+//! ```
+
+use crate::mathx::rng::Rng;
+
+/// Seeded input generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// The case index (0..n); properties may use it to scale sizes.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Underlying RNG for custom draws.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform choice from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_range(0, xs.len() - 1)]
+    }
+
+    /// Bernoulli(p).
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Vector of uniform f64s.
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_range(lo, hi)).collect()
+    }
+
+    /// Vector of standard normal f32s.
+    pub fn vec_normal_f32(&mut self, len: usize, sigma: f32) -> Vec<f32> {
+        let mut out = vec![0.0f32; len];
+        crate::mathx::distributions::fill_normal_f32(&mut self.rng, 0.0, sigma, &mut out);
+        out
+    }
+}
+
+/// Base seed; override with `CODEDFEDL_PROP_SEED` to explore, or set it to a
+/// reported failing seed to replay one case.
+fn base_seed() -> u64 {
+    std::env::var("CODEDFEDL_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0DE_FED1)
+}
+
+/// Run `prop` for `n` deterministic cases. Panics (preserving the inner
+/// assertion message) with the failing seed on the first failure.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, n: usize, mut prop: F) {
+    let base = base_seed();
+    for case in 0..n {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{n} (seed {seed:#x}):\n  {msg}\n\
+                 replay with CODEDFEDL_PROP_SEED={}",
+                base.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("count", 25, |_g| {}); // no panic
+        // count cases manually via a second run with side effect
+        check("side", 25, |g| {
+            let _ = g.f64_range(0.0, 1.0);
+        });
+        count += 25;
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails' failed")]
+    fn failing_property_reports_seed() {
+        check("fails", 10, |g| {
+            assert!(g.f64_range(0.0, 1.0) < -1.0, "impossible");
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 200, |g| {
+            let x = g.f64_range(2.0, 3.0);
+            assert!((2.0..3.0).contains(&x));
+            let u = g.usize_range(5, 9);
+            assert!((5..=9).contains(&u));
+            let v = g.vec_f64(4, -1.0, 1.0);
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<f64> = Vec::new();
+        check("record", 5, |g| {
+            first.push(g.f64_range(0.0, 1.0));
+        });
+        let mut second: Vec<f64> = Vec::new();
+        check("record", 5, |g| {
+            second.push(g.f64_range(0.0, 1.0));
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny CSV writer for experiment series (accuracy-vs-time curves etc.).
+//! Fields containing commas/quotes/newlines are quoted per RFC 4180.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter<W: Write> {
+    out: W,
+    n_cols: usize,
+}
+
+impl CsvWriter<BufWriter<File>> {
+    /// Create a file-backed writer (parent directories are created).
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file = File::create(&path)
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        CsvWriter::new(BufWriter::new(file), header)
+    }
+}
+
+impl<W: Write> CsvWriter<W> {
+    /// Wrap any writer, emitting the header immediately.
+    pub fn new(mut out: W, header: &[&str]) -> Result<Self> {
+        writeln!(out, "{}", header.iter().map(|s| escape(s)).collect::<Vec<_>>().join(","))?;
+        Ok(CsvWriter { out, n_cols: header.len() })
+    }
+
+    /// Write one row of raw string fields.
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.n_cols,
+            "row has {} fields, header has {}",
+            fields.len(),
+            self.n_cols
+        );
+        writeln!(
+            self.out,
+            "{}",
+            fields.iter().map(|s| escape(s)).collect::<Vec<_>>().join(",")
+        )?;
+        Ok(())
+    }
+
+    /// Write one row of numbers.
+    pub fn row_f64(&mut self, fields: &[f64]) -> Result<()> {
+        self.row(&fields.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+
+    /// Flush underlying writer.
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+fn escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::new(&mut buf, &["t", "acc"]).unwrap();
+            w.row_f64(&[1.0, 0.5]).unwrap();
+            w.row(&["2".into(), "0.75".into()]).unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text, "t,acc\n1,0.5\n2,0.75\n");
+    }
+
+    #[test]
+    fn escapes_special_fields() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::new(&mut buf, &["a"]).unwrap();
+            w.row(&["x,y\"z".into()]).unwrap();
+        }
+        assert_eq!(String::from_utf8(buf).unwrap(), "a\n\"x,y\"\"z\"\n");
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let mut buf = Vec::new();
+        let mut w = CsvWriter::new(&mut buf, &["a", "b"]).unwrap();
+        assert!(w.row(&["only-one".into()]).is_err());
+    }
+}

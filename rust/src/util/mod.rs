@@ -1,0 +1,9 @@
+//! General-purpose substrates: JSON (emit + parse), CSV emission, and a
+//! leveled logger. Hand-rolled because the offline registry carries no
+//! serde/csv/log crates.
+
+pub mod csv;
+pub mod json;
+pub mod logging;
+
+pub use json::Json;

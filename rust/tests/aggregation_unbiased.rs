@@ -1,0 +1,114 @@
+//! Integration: the paper's central correctness claim (eqs. 11-13) —
+//! coded gradient + expected uncoded return = full mini-batch gradient:
+//! `E[g_C + g_U] = m * g_hat`, with the expectation over BOTH the
+//! generator matrices G_j and the straggler pattern.
+//!
+//! Built from the same components the trainer uses (weights, encoder,
+//! gradient oracle), at a scale where a few hundred Monte-Carlo trials
+//! tighten the estimate well below the asserted tolerance.
+
+use codedfedl::coding::encoder::{encode_client_slice, CompositeParity};
+use codedfedl::coding::weights::build_weights;
+use codedfedl::mathx::linalg::{gradient_ref, Matrix};
+use codedfedl::mathx::rng::Rng;
+use codedfedl::runtime::backend::NativeBackend;
+
+#[test]
+fn coded_plus_uncoded_equals_full_gradient_in_expectation() {
+    let mut rng = Rng::new(42);
+    let (n, l, q, c, u) = (4usize, 8usize, 6usize, 3usize, 64usize);
+    let m_batch = n * l;
+
+    // Fixed client slices, model, per-client return probabilities.
+    let xs: Vec<Matrix> = (0..n).map(|_| Matrix::randn(l, q, 0.0, 1.0, &mut rng)).collect();
+    let ys: Vec<Matrix> = (0..n).map(|_| Matrix::randn(l, c, 0.0, 1.0, &mut rng)).collect();
+    let beta = Matrix::randn(q, c, 0.0, 1.0, &mut rng);
+    let p_return = [0.9, 0.6, 0.3, 0.8];
+    // Client j processes a fixed subset of its slice (the allocator's l*).
+    let loads = [6usize, 5, 3, 8];
+    let processed: Vec<Vec<usize>> = (0..n).map(|j| (0..loads[j]).collect()).collect();
+
+    // Ground truth: full-batch gradient sum over ALL n*l rows.
+    let full: Matrix = {
+        let mut acc = Matrix::zeros(q, c);
+        for j in 0..n {
+            acc.axpy_inplace(1.0, &gradient_ref(&xs[j], &ys[j], &beta, &vec![1.0; l]));
+        }
+        acc
+    };
+
+    // Monte-Carlo over (G, straggler pattern).
+    let nb = NativeBackend;
+    let trials = 600;
+    let mut acc = Matrix::zeros(q, c);
+    for _ in 0..trials {
+        // Encode with fresh private generators (as before each batch).
+        let mut comp = CompositeParity::zeros(u, u, q, c);
+        for j in 0..n {
+            let w = build_weights(l, &processed[j], 1.0 - p_return[j]);
+            let (xc, yc) =
+                encode_client_slice(&nb, &xs[j], &ys[j], &w, u, u, &mut rng).unwrap();
+            comp.add(&xc, &yc);
+        }
+        let mut g = gradient_ref(&comp.x, &comp.y, &beta, &comp.mask());
+        // Sample arrivals and add uncoded contributions.
+        for j in 0..n {
+            if rng.next_f64() < p_return[j] {
+                let mut mask = vec![0.0f32; l];
+                for &k in &processed[j] {
+                    mask[k] = 1.0;
+                }
+                g.axpy_inplace(1.0, &gradient_ref(&xs[j], &ys[j], &beta, &mask));
+            }
+        }
+        acc.axpy_inplace(1.0 / trials as f32, &g);
+    }
+
+    let scale = full.data().iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+    let rel = acc.max_abs_diff(&full) / scale;
+    assert!(
+        rel < 0.15,
+        "E[g_C + g_U] deviates from full gradient by {:.1}% (m_batch {m_batch})",
+        100.0 * rel
+    );
+}
+
+#[test]
+fn dropping_the_weights_breaks_unbiasedness() {
+    // Ablation of the §3.4 weight matrix: with W_j = I the estimator is
+    // clearly biased whenever clients straggle — the weights are load-
+    // bearing, not decorative.
+    let mut rng = Rng::new(43);
+    let (l, q, c, u) = (10usize, 5usize, 2usize, 64usize);
+    let x = Matrix::randn(l, q, 0.0, 1.0, &mut rng);
+    let y = Matrix::randn(l, c, 0.0, 1.0, &mut rng);
+    let beta = Matrix::randn(q, c, 0.0, 1.0, &mut rng);
+    let p_return = 0.5;
+    let processed: Vec<usize> = (0..l).collect();
+
+    let full = gradient_ref(&x, &y, &beta, &vec![1.0; l]);
+    let nb = NativeBackend;
+    let trials = 800;
+    let mut acc = Matrix::zeros(q, c);
+    for _ in 0..trials {
+        let w = vec![1.0f32; l]; // WRONG: identity weights
+        let (xc, yc) = encode_client_slice(&nb, &x, &y, &w, u, u, &mut rng).unwrap();
+        let mut g = gradient_ref(&xc, &yc, &beta, &vec![1.0; u]);
+        if rng.next_f64() < p_return {
+            let mut mask = vec![0.0f32; l];
+            for &k in &processed {
+                mask[k] = 1.0;
+            }
+            g.axpy_inplace(1.0, &gradient_ref(&x, &y, &beta, &mask));
+        }
+        acc.axpy_inplace(1.0 / trials as f32, &g);
+    }
+    // E[g] = (1 + p) * full, i.e. 50% too large — far outside noise.
+    let scale = full.data().iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+    let rel = acc.max_abs_diff(&full) / scale;
+    assert!(
+        rel > 0.25,
+        "identity weights should visibly bias the estimate (got {:.1}%)",
+        100.0 * rel
+    );
+}

@@ -1,0 +1,138 @@
+//! Integration: the analytical load-allocation policy against the
+//! *simulated* network — the Theorem's closed form must predict what the
+//! simulator actually delivers, and the optimized plan must meet its
+//! aggregate-return target empirically.
+
+use codedfedl::allocation::expected_return::{expected_return, prob_return};
+use codedfedl::allocation::optimizer::plan_fixed_u;
+use codedfedl::config::ExperimentConfig;
+use codedfedl::mathx::rng::Rng;
+use codedfedl::mathx::stats::OnlineStats;
+use codedfedl::simnet::topology::build_population;
+
+#[test]
+fn closed_form_matches_simulator_across_population() {
+    // For every client in the small-preset population, the Theorem's
+    // P(T <= t) must match Monte-Carlo sampling of the §2.2 delay model.
+    let cfg = ExperimentConfig::preset("small").unwrap();
+    let mut rng = Rng::new(cfg.seed).fork(2);
+    let pop = build_population(&cfg, &mut rng);
+    let mut mc_rng = Rng::new(99);
+    for (j, c) in pop.clients.iter().enumerate().step_by(5) {
+        let l = cfg.profile.l / 2;
+        let t = c.mean_delay(l); // probe at a representative deadline
+        let analytic = prob_return(c, l as f64, t);
+        let mc = c.mc_prob_return(l, t, 60_000, &mut mc_rng);
+        assert!(
+            (analytic - mc).abs() < 0.01,
+            "client {j}: analytic {analytic} vs mc {mc}"
+        );
+    }
+}
+
+#[test]
+fn plan_meets_target_empirically() {
+    // Simulate many epochs under the optimized plan; the realized
+    // aggregate uncoded return must match the target m - u within
+    // Monte-Carlo error. This is the paper's eq. (10) done end-to-end.
+    let cfg = ExperimentConfig::preset("small").unwrap();
+    let mut rng = Rng::new(cfg.seed).fork(2);
+    let pop = build_population(&cfg, &mut rng);
+    let caps = vec![cfg.profile.l; cfg.n_clients];
+    let m_batch = cfg.global_batch();
+    let u = cfg.u();
+    let plan = plan_fixed_u(&pop.clients, &caps, m_batch, u, cfg.epsilon).unwrap();
+
+    let mut sim_rng = Rng::new(7);
+    let mut stats = OnlineStats::new();
+    for _ in 0..4000 {
+        let mut ret = 0usize;
+        for (j, c) in pop.clients.iter().enumerate() {
+            let l = plan.loads[j];
+            if l == 0 {
+                continue;
+            }
+            if c.sample(l, &mut sim_rng).total() <= plan.deadline {
+                ret += l;
+            }
+        }
+        stats.push(ret as f64);
+    }
+    let target = (m_batch - u) as f64;
+    let err = (stats.mean() - target).abs();
+    assert!(
+        err < 5.0 * stats.sem() + 0.02 * target,
+        "empirical return {} vs target {target} (sem {})",
+        stats.mean(),
+        stats.sem()
+    );
+}
+
+#[test]
+fn plan_expected_return_consistent_with_theorem() {
+    let cfg = ExperimentConfig::preset("small").unwrap();
+    let mut rng = Rng::new(cfg.seed).fork(2);
+    let pop = build_population(&cfg, &mut rng);
+    let caps = vec![cfg.profile.l; cfg.n_clients];
+    let plan = plan_fixed_u(&pop.clients, &caps, cfg.global_batch(), cfg.u(), 1.0).unwrap();
+    let recomputed: f64 = pop
+        .clients
+        .iter()
+        .zip(&plan.loads)
+        .map(|(c, &l)| expected_return(c, l as f64, plan.deadline))
+        .sum();
+    assert!(
+        (recomputed - plan.expected_return).abs() < 1e-6 * plan.expected_return.max(1.0),
+        "{recomputed} vs {}",
+        plan.expected_return
+    );
+}
+
+#[test]
+fn deadline_shrinks_with_redundancy_at_scale() {
+    // Paper intuition: more coded redundancy lets the server wait less.
+    let cfg = ExperimentConfig::preset("small").unwrap();
+    let mut rng = Rng::new(cfg.seed).fork(2);
+    let pop = build_population(&cfg, &mut rng);
+    let caps = vec![cfg.profile.l; cfg.n_clients];
+    let m_batch = cfg.global_batch();
+    let mut last = f64::INFINITY;
+    for redundancy in [0.05, 0.10, 0.20, 0.30] {
+        let u = (redundancy * m_batch as f64) as usize;
+        let plan = plan_fixed_u(&pop.clients, &caps, m_batch, u, 1.0).unwrap();
+        assert!(
+            plan.deadline < last,
+            "deadline did not shrink at {redundancy}: {} vs {last}",
+            plan.deadline
+        );
+        last = plan.deadline;
+    }
+}
+
+#[test]
+fn uncoded_epoch_time_exceeds_coded_deadline() {
+    // E[max_j T_j(full load)] under uncoded must exceed the coded t* —
+    // the mechanism behind the paper's speedup.
+    let cfg = ExperimentConfig::preset("small").unwrap();
+    let mut rng = Rng::new(cfg.seed).fork(2);
+    let pop = build_population(&cfg, &mut rng);
+    let caps = vec![cfg.profile.l; cfg.n_clients];
+    let plan = plan_fixed_u(&pop.clients, &caps, cfg.global_batch(), cfg.u(), 1.0).unwrap();
+
+    let mut sim_rng = Rng::new(3);
+    let mut stats = OnlineStats::new();
+    for _ in 0..500 {
+        let t_max = pop
+            .clients
+            .iter()
+            .map(|c| c.sample(cfg.profile.l, &mut sim_rng).total())
+            .fold(0.0, f64::max);
+        stats.push(t_max);
+    }
+    assert!(
+        stats.mean() > plan.deadline * 1.2,
+        "uncoded mean epoch {} not clearly above coded deadline {}",
+        stats.mean(),
+        plan.deadline
+    );
+}

@@ -1,0 +1,121 @@
+//! Failure-injection integration tests: extreme network regimes must not
+//! break the allocator or the trainer, and the coded scheme must stay
+//! robust where the uncoded baseline degrades.
+
+use codedfedl::allocation::optimizer::plan_fixed_u;
+use codedfedl::config::{ExperimentConfig, Scheme};
+use codedfedl::fl::trainer::Trainer;
+use codedfedl::mathx::rng::Rng;
+use codedfedl::runtime::backend::NativeBackend;
+use codedfedl::simnet::delay::ClientModel;
+use codedfedl::simnet::topology::build_population;
+
+fn tiny(scheme: Scheme) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+    cfg.scheme = scheme;
+    cfg.use_xla = false;
+    cfg.train.epochs = 5;
+    cfg
+}
+
+#[test]
+fn high_erasure_probability_still_trains() {
+    let mut cfg = tiny(Scheme::Coded);
+    cfg.net.p_fail = 0.6; // six in ten transmissions lost
+    cfg.train.redundancy = 0.30;
+    let report = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap().run().unwrap();
+    assert!(report.final_accuracy() > 0.4, "acc {}", report.final_accuracy());
+}
+
+#[test]
+fn extreme_compute_heterogeneity_still_plans() {
+    let mut cfg = tiny(Scheme::Coded);
+    cfg.net.k2 = 0.3; // slowest client ~0.3^4 of the fastest
+    let mut rng = Rng::new(1);
+    let pop = build_population(&cfg, &mut rng);
+    let caps = vec![cfg.profile.l; cfg.n_clients];
+    let plan = plan_fixed_u(&pop.clients, &caps, cfg.global_batch(), cfg.u(), 1.0).unwrap();
+    // The slowest clients should be assigned strictly less work.
+    let mut by_mu: Vec<(f64, usize)> =
+        pop.clients.iter().map(|c| c.mu).zip(plan.loads.iter().cloned()).collect();
+    by_mu.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let slow_avg: f64 =
+        by_mu[..2].iter().map(|&(_, l)| l as f64).sum::<f64>() / 2.0;
+    let fast_avg: f64 =
+        by_mu[by_mu.len() - 2..].iter().map(|&(_, l)| l as f64).sum::<f64>() / 2.0;
+    assert!(
+        slow_avg <= fast_avg,
+        "slow clients got more load: {slow_avg} vs {fast_avg}"
+    );
+}
+
+#[test]
+fn one_dead_slow_client_does_not_stall_coded() {
+    // Make one client pathologically slow; uncoded epoch time explodes
+    // (max over clients) while the coded deadline stays bounded by
+    // design (the straggler simply never arrives and parity compensates).
+    let mut cfg = tiny(Scheme::Coded);
+    // Enough redundancy that the healthy fleet alone can meet the target
+    // (m - u <= healthy capacity); otherwise waiting on the dead node is
+    // genuinely unavoidable.
+    cfg.train.redundancy = 0.30;
+    let mut rng = Rng::new(2);
+    let mut pop = build_population(&cfg, &mut rng);
+    pop.clients[0] = ClientModel { mu: 1e-3, alpha: 1.0, tau: 50.0, p_fail: 0.3 };
+    let caps = vec![cfg.profile.l; cfg.n_clients];
+    let plan = plan_fixed_u(&pop.clients, &caps, cfg.global_batch(), cfg.u(), 1.0).unwrap();
+    assert_eq!(plan.loads[0], 0, "dead client must get zero load");
+    // Deadline is set by the healthy fleet, not the dead node.
+    let healthy_max_mean = pop.clients[1..]
+        .iter()
+        .map(|c| c.mean_delay(cfg.profile.l))
+        .fold(0.0, f64::max);
+    assert!(
+        plan.deadline < 10.0 * healthy_max_mean,
+        "deadline {} blown up by dead client",
+        plan.deadline
+    );
+}
+
+#[test]
+fn zero_failure_network_is_fastest() {
+    let mut flaky = tiny(Scheme::Coded);
+    flaky.net.p_fail = 0.4;
+    let mut clean = tiny(Scheme::Coded);
+    clean.net.p_fail = 0.0;
+    let rf = Trainer::with_backend(&flaky, Box::new(NativeBackend)).unwrap();
+    let rc = Trainer::with_backend(&clean, Box::new(NativeBackend)).unwrap();
+    let df = rf.setup().plan.as_ref().unwrap().deadline;
+    let dc = rc.setup().plan.as_ref().unwrap().deadline;
+    assert!(dc < df, "clean network deadline {dc} not below flaky {df}");
+}
+
+#[test]
+fn redundancy_sweep_never_panics_and_improves_deadline() {
+    let mut last = f64::INFINITY;
+    for r in [0.02, 0.05, 0.1, 0.2, 0.3] {
+        let mut cfg = tiny(Scheme::Coded);
+        cfg.train.redundancy = r;
+        let t = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap();
+        let d = t.setup().plan.as_ref().unwrap().deadline;
+        assert!(d <= last * 1.0001, "deadline rose at redundancy {r}: {d} vs {last}");
+        last = d;
+    }
+}
+
+#[test]
+fn uncoded_suffers_under_stragglers_more_than_coded() {
+    // Inject heavy tail: higher alpha variance via low alpha.
+    let mut cu = tiny(Scheme::Uncoded);
+    cu.net.alpha = 0.3;
+    let mut cc = tiny(Scheme::Coded);
+    cc.net.alpha = 0.3;
+    let ru = Trainer::with_backend(&cu, Box::new(NativeBackend)).unwrap().run().unwrap();
+    let rc = Trainer::with_backend(&cc, Box::new(NativeBackend)).unwrap().run().unwrap();
+    let per_step_u = ru.total_sim_time_s / ru.records.last().unwrap().step as f64;
+    let per_step_c = rc.total_sim_time_s / rc.records.last().unwrap().step as f64;
+    assert!(
+        per_step_c < per_step_u,
+        "coded per-step {per_step_c} not below uncoded {per_step_u}"
+    );
+}

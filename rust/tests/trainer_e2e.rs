@@ -1,0 +1,114 @@
+//! Integration: end-to-end training over the XLA runtime (tiny profile).
+//! Requires `make artifacts`; skips cleanly when they are absent.
+
+use codedfedl::config::{ExperimentConfig, Scheme};
+use codedfedl::fl::trainer::Trainer;
+use codedfedl::runtime::backend::NativeBackend;
+
+fn artifacts_ready() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+    }
+    ok
+}
+
+fn tiny(scheme: Scheme, use_xla: bool) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+    cfg.scheme = scheme;
+    cfg.use_xla = use_xla;
+    cfg.train.epochs = 6;
+    cfg
+}
+
+#[test]
+fn xla_coded_run_learns() {
+    if !artifacts_ready() {
+        return;
+    }
+    let cfg = tiny(Scheme::Coded, true);
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    let report = t.run().unwrap();
+    assert!(report.final_accuracy() > 0.5, "acc {}", report.final_accuracy());
+    assert!(report.deadline_s > 0.0);
+}
+
+#[test]
+fn xla_and_native_runs_agree() {
+    // Same config, same seeds: the XLA pipeline must produce the same
+    // training trajectory as the native oracle (f32 tolerance).
+    if !artifacts_ready() {
+        return;
+    }
+    let cfg_x = tiny(Scheme::Coded, true);
+    let rx = Trainer::from_config(&cfg_x).unwrap().run().unwrap();
+    let cfg_n = tiny(Scheme::Coded, false);
+    let rn = Trainer::with_backend(&cfg_n, Box::new(NativeBackend)).unwrap().run().unwrap();
+    assert_eq!(rx.records.len(), rn.records.len());
+    for (a, b) in rx.records.iter().zip(&rn.records) {
+        assert_eq!(a.sim_time_s, b.sim_time_s, "delay streams must be identical");
+        assert!(
+            (a.accuracy - b.accuracy).abs() < 0.05,
+            "accuracy diverged: xla {} vs native {}",
+            a.accuracy,
+            b.accuracy
+        );
+        assert!(
+            (a.loss - b.loss).abs() < 0.05 * b.loss.abs().max(0.1),
+            "loss diverged: xla {} vs native {}",
+            a.loss,
+            b.loss
+        );
+    }
+}
+
+#[test]
+fn xla_uncoded_run_learns() {
+    if !artifacts_ready() {
+        return;
+    }
+    let cfg = tiny(Scheme::Uncoded, true);
+    let report = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    assert!(report.final_accuracy() > 0.5, "acc {}", report.final_accuracy());
+    assert_eq!(report.deadline_s, 0.0);
+}
+
+#[test]
+fn coded_is_faster_per_step_without_losing_accuracy() {
+    // The sound tiny-scale invariants behind the paper's speedup: (i) the
+    // coded deadline beats the uncoded max-straggler step time, and (ii)
+    // accuracy is not sacrificed. (With only u=10 parity rows the tiny
+    // coded gradient is noisy, so time-to-gamma races are meaningful only
+    // at the small preset — reproduced by the fig2/table1 benches.)
+    if !artifacts_ready() {
+        return;
+    }
+    let rc = Trainer::from_config(&tiny(Scheme::Coded, true)).unwrap().run().unwrap();
+    let ru = Trainer::from_config(&tiny(Scheme::Uncoded, true)).unwrap().run().unwrap();
+    let steps_c = rc.records.last().unwrap().step as f64;
+    let steps_u = ru.records.last().unwrap().step as f64;
+    let per_step_c = rc.total_sim_time_s / steps_c;
+    let per_step_u = ru.total_sim_time_s / steps_u;
+    assert!(
+        per_step_c < per_step_u,
+        "coded per-step {per_step_c:.3}s not below uncoded {per_step_u:.3}s"
+    );
+    assert!(
+        rc.best_accuracy() > ru.best_accuracy() - 0.08,
+        "coded accuracy collapsed: {} vs uncoded {}",
+        rc.best_accuracy(),
+        ru.best_accuracy()
+    );
+}
+
+#[test]
+fn curve_csv_is_written() {
+    if !artifacts_ready() {
+        return;
+    }
+    let report = Trainer::from_config(&tiny(Scheme::Coded, true)).unwrap().run().unwrap();
+    let path = std::env::temp_dir().join("codedfedl_e2e_curve.csv");
+    report.write_csv(path.to_str().unwrap()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.lines().count() > 2);
+}

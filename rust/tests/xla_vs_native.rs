@@ -1,0 +1,139 @@
+//! Integration: the XLA artifacts must agree with the native oracle on
+//! every operation — this pins the python-AOT -> HLO-text -> PJRT ABI
+//! end-to-end. Requires `make artifacts` (tests skip cleanly otherwise).
+
+use codedfedl::config::profile;
+use codedfedl::mathx::linalg::Matrix;
+use codedfedl::mathx::rng::Rng;
+use codedfedl::runtime::backend::{ComputeBackend, NativeBackend};
+use codedfedl::runtime::xla::XlaBackend;
+
+fn backend() -> Option<XlaBackend> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/manifest.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaBackend::load("artifacts", &profile("tiny").unwrap()).expect("loading artifacts"))
+}
+
+fn close(a: &Matrix, b: &Matrix, tol: f32, what: &str) {
+    let d = a.max_abs_diff(b);
+    assert!(d <= tol, "{what}: xla vs native differ by {d}");
+}
+
+#[test]
+fn gradient_client_matches_native() {
+    let Some(xb) = backend() else { return };
+    let p = profile("tiny").unwrap();
+    let mut rng = Rng::new(1);
+    let x = Matrix::randn(p.l, p.q, 0.0, 1.0, &mut rng);
+    let y = Matrix::randn(p.l, p.c, 0.0, 1.0, &mut rng);
+    let beta = Matrix::randn(p.q, p.c, 0.0, 0.5, &mut rng);
+    let mut mask = vec![1.0f32; p.l];
+    mask[p.l - 3..].iter_mut().for_each(|m| *m = 0.0);
+    let got = xb.grad_client(&x, &y, &beta, &mask).unwrap();
+    let want = NativeBackend.grad_client(&x, &y, &beta, &mask).unwrap();
+    close(&got, &want, 2e-3, "grad_client");
+}
+
+#[test]
+fn gradient_server_matches_native() {
+    let Some(xb) = backend() else { return };
+    let p = profile("tiny").unwrap();
+    let mut rng = Rng::new(2);
+    let x = Matrix::randn(p.u_max, p.q, 0.0, 1.0, &mut rng);
+    let y = Matrix::randn(p.u_max, p.c, 0.0, 1.0, &mut rng);
+    let beta = Matrix::randn(p.q, p.c, 0.0, 0.5, &mut rng);
+    let mut mask = vec![0.0f32; p.u_max];
+    mask[..7].iter_mut().for_each(|m| *m = 1.0);
+    let got = xb.grad_server(&x, &y, &beta, &mask).unwrap();
+    let want = NativeBackend.grad_server(&x, &y, &beta, &mask).unwrap();
+    close(&got, &want, 2e-3, "grad_server");
+}
+
+#[test]
+fn rff_matches_native() {
+    let Some(xb) = backend() else { return };
+    let p = profile("tiny").unwrap();
+    let mut rng = Rng::new(3);
+    let x = Matrix::randn(p.chunk, p.d, 0.5, 0.3, &mut rng);
+    let omega = Matrix::randn(p.d, p.q, 0.0, 0.2, &mut rng);
+    let delta = Matrix::randn(1, p.q, 3.0, 1.0, &mut rng);
+    let got = xb.rff_chunk(&x, &omega, &delta).unwrap();
+    let want = NativeBackend.rff_chunk(&x, &omega, &delta).unwrap();
+    close(&got, &want, 1e-4, "rff");
+}
+
+#[test]
+fn encode_matches_native_for_both_widths() {
+    let Some(xb) = backend() else { return };
+    let p = profile("tiny").unwrap();
+    let mut rng = Rng::new(4);
+    let g = Matrix::randn(p.u_max, p.l, 0.0, 0.2, &mut rng);
+    let w: Vec<f32> = (0..p.l).map(|k| if k % 3 == 0 { 0.5 } else { 1.0 }).collect();
+    let mx = Matrix::randn(p.l, p.q, 0.0, 1.0, &mut rng);
+    let my = Matrix::randn(p.l, p.c, 0.0, 1.0, &mut rng);
+    close(
+        &xb.encode(&g, &w, &mx).unwrap(),
+        &NativeBackend.encode(&g, &w, &mx).unwrap(),
+        2e-3,
+        "encode_x",
+    );
+    close(
+        &xb.encode(&g, &w, &my).unwrap(),
+        &NativeBackend.encode(&g, &w, &my).unwrap(),
+        2e-3,
+        "encode_y",
+    );
+}
+
+#[test]
+fn update_matches_native() {
+    let Some(xb) = backend() else { return };
+    let p = profile("tiny").unwrap();
+    let mut rng = Rng::new(5);
+    let beta = Matrix::randn(p.q, p.c, 0.0, 1.0, &mut rng);
+    let grad = Matrix::randn(p.q, p.c, 0.0, 1.0, &mut rng);
+    let got = xb.update(&beta, &grad, 0.37, 1e-4).unwrap();
+    let want = NativeBackend.update(&beta, &grad, 0.37, 1e-4).unwrap();
+    close(&got, &want, 1e-5, "update");
+}
+
+#[test]
+fn predict_matches_native() {
+    let Some(xb) = backend() else { return };
+    let p = profile("tiny").unwrap();
+    let mut rng = Rng::new(6);
+    let x = Matrix::randn(p.chunk, p.q, 0.0, 1.0, &mut rng);
+    let beta = Matrix::randn(p.q, p.c, 0.0, 1.0, &mut rng);
+    let got = xb.predict_chunk(&x, &beta).unwrap();
+    let want = NativeBackend.predict_chunk(&x, &beta).unwrap();
+    close(&got, &want, 1e-3, "predict");
+}
+
+#[test]
+fn streamed_helpers_work_via_xla() {
+    let Some(xb) = backend() else { return };
+    let p = profile("tiny").unwrap();
+    let mut rng = Rng::new(7);
+    // Ragged row count (not a multiple of chunk) exercises padding.
+    let m = p.chunk + p.chunk / 2;
+    let x = Matrix::randn(m, p.d, 0.5, 0.2, &mut rng);
+    let omega = Matrix::randn(p.d, p.q, 0.0, 0.2, &mut rng);
+    let delta = Matrix::randn(1, p.q, 3.0, 1.0, &mut rng);
+    let got = xb.rff_embed_all(&x, &omega, &delta, p.chunk).unwrap();
+    let want = NativeBackend.rff_embed_all(&x, &omega, &delta, p.chunk).unwrap();
+    close(&got, &want, 1e-4, "rff_embed_all");
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(xb) = backend() else { return };
+    let p = profile("tiny").unwrap();
+    let mut rng = Rng::new(8);
+    let x = Matrix::randn(p.l + 1, p.q, 0.0, 1.0, &mut rng); // wrong rows
+    let y = Matrix::randn(p.l + 1, p.c, 0.0, 1.0, &mut rng);
+    let beta = Matrix::randn(p.q, p.c, 0.0, 1.0, &mut rng);
+    let mask = vec![1.0f32; p.l + 1];
+    assert!(xb.grad_client(&x, &y, &beta, &mask).is_err());
+}
