@@ -1,15 +1,14 @@
-//! Component micro-benchmarks — the L3 hot paths and the XLA-vs-native
-//! executor comparison that feeds EXPERIMENTS.md §Perf.
+//! Component micro-benchmarks — the L3 hot paths and (with the `xla`
+//! feature + built artifacts) the XLA-vs-native executor comparison that
+//! feeds EXPERIMENTS.md §Perf.
 
 use codedfedl::allocation::optimizer::plan_fixed_u;
 use codedfedl::allocation::piecewise::optimal_load;
 use codedfedl::benchx::Bencher;
-use codedfedl::config::{profile, ExperimentConfig};
+use codedfedl::config::ExperimentConfig;
 use codedfedl::mathx::linalg::Matrix;
 use codedfedl::mathx::rng::Rng;
 use codedfedl::runtime::backend::{ComputeBackend, NativeBackend};
-use codedfedl::runtime::xla::XlaBackend;
-use codedfedl::simnet::topology::build_population;
 
 fn main() -> anyhow::Result<()> {
     let mut b = Bencher::new();
@@ -18,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(1);
 
     // --- PRNG + delay sampling (per-step simulator cost).
-    let pop = build_population(&cfg, &mut Rng::new(2).fork(2));
+    let pop = codedfedl::simnet::topology::build_population(&cfg, &mut Rng::new(2).fork(2));
     {
         let mut r = Rng::new(3);
         b.bench_with_work("rng: next_f64", Some(1.0), || {
@@ -42,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         );
     });
 
-    // --- Gradient + encode: native vs XLA (small-profile shapes).
+    // --- Gradient + encode: native (and XLA when available).
     let x = Matrix::randn(p.l, p.q, 0.0, 1.0, &mut rng);
     let y = Matrix::randn(p.l, p.c, 0.0, 1.0, &mut rng);
     let beta = Matrix::randn(p.q, p.c, 0.0, 0.3, &mut rng);
@@ -61,40 +60,7 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(nb.encode(&g, &w, &x).unwrap());
     });
 
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        let xb = XlaBackend::load("artifacts", &profile("small")?)?;
-        b.bench_with_work("grad_client xla (100x512x10)", Some(flops_grad), || {
-            std::hint::black_box(xb.grad_client(&x, &y, &beta, &mask).unwrap());
-        });
-        let xu = Matrix::randn(p.u_max, p.q, 0.0, 1.0, &mut rng);
-        let yu = Matrix::randn(p.u_max, p.c, 0.0, 1.0, &mut rng);
-        let mask_u = vec![1.0f32; p.u_max];
-        b.bench_with_work(
-            "grad_server xla (900x512x10)",
-            Some(4.0 * (p.u_max * p.q * p.c) as f64),
-            || {
-                std::hint::black_box(xb.grad_server(&xu, &yu, &beta, &mask_u).unwrap());
-            },
-        );
-        b.bench_with_work("encode xla (900x100 @ 100x512)", Some(flops_enc), || {
-            std::hint::black_box(xb.encode(&g, &w, &x).unwrap());
-        });
-        let xc = Matrix::randn(p.chunk, p.d, 0.5, 0.2, &mut rng);
-        let omega = Matrix::randn(p.d, p.q, 0.0, 0.2, &mut rng);
-        let delta = Matrix::randn(1, p.q, 3.0, 1.0, &mut rng);
-        b.bench_with_work(
-            "rff xla (500x784 -> 500x512)",
-            Some(2.0 * (p.chunk * p.d * p.q) as f64),
-            || {
-                std::hint::black_box(xb.rff_chunk(&xc, &omega, &delta).unwrap());
-            },
-        );
-        b.bench("update xla (512x10)", || {
-            std::hint::black_box(xb.update(&beta, &beta, 0.1, 1e-5).unwrap());
-        });
-    } else {
-        eprintln!("(artifacts missing; XLA rows skipped — run `make artifacts`)");
-    }
+    bench_xla(&mut b, &p, &x, &y, &beta, &mask, &g, &w, flops_grad, flops_enc)?;
 
     // --- Aggregation (pure L3).
     let grads: Vec<Matrix> = (0..cfg.n_clients)
@@ -109,5 +75,78 @@ fn main() -> anyhow::Result<()> {
     });
 
     b.report("component benchmarks (small profile)");
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
+#[allow(clippy::too_many_arguments)]
+fn bench_xla(
+    b: &mut Bencher,
+    p: &codedfedl::config::ShapeProfile,
+    x: &Matrix,
+    y: &Matrix,
+    beta: &Matrix,
+    mask: &[f32],
+    g: &Matrix,
+    w: &[f32],
+    flops_grad: f64,
+    flops_enc: f64,
+) -> anyhow::Result<()> {
+    use codedfedl::config::profile;
+    use codedfedl::runtime::xla::XlaBackend;
+
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("(artifacts missing; XLA rows skipped — run `make artifacts`)");
+        return Ok(());
+    }
+    let mut rng = Rng::new(99);
+    let xb = XlaBackend::load("artifacts", &profile("small")?)?;
+    b.bench_with_work("grad_client xla (100x512x10)", Some(flops_grad), || {
+        std::hint::black_box(xb.grad_client(x, y, beta, mask).unwrap());
+    });
+    let xu = Matrix::randn(p.u_max, p.q, 0.0, 1.0, &mut rng);
+    let yu = Matrix::randn(p.u_max, p.c, 0.0, 1.0, &mut rng);
+    let mask_u = vec![1.0f32; p.u_max];
+    b.bench_with_work(
+        "grad_server xla (900x512x10)",
+        Some(4.0 * (p.u_max * p.q * p.c) as f64),
+        || {
+            std::hint::black_box(xb.grad_server(&xu, &yu, beta, &mask_u).unwrap());
+        },
+    );
+    b.bench_with_work("encode xla (900x100 @ 100x512)", Some(flops_enc), || {
+        std::hint::black_box(xb.encode(g, w, x).unwrap());
+    });
+    let xc = Matrix::randn(p.chunk, p.d, 0.5, 0.2, &mut rng);
+    let omega = Matrix::randn(p.d, p.q, 0.0, 0.2, &mut rng);
+    let delta = Matrix::randn(1, p.q, 3.0, 1.0, &mut rng);
+    b.bench_with_work(
+        "rff xla (500x784 -> 500x512)",
+        Some(2.0 * (p.chunk * p.d * p.q) as f64),
+        || {
+            std::hint::black_box(xb.rff_chunk(&xc, &omega, &delta).unwrap());
+        },
+    );
+    b.bench("update xla (512x10)", || {
+        std::hint::black_box(xb.update(beta, beta, 0.1, 1e-5).unwrap());
+    });
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+#[allow(clippy::too_many_arguments)]
+fn bench_xla(
+    _b: &mut Bencher,
+    _p: &codedfedl::config::ShapeProfile,
+    _x: &Matrix,
+    _y: &Matrix,
+    _beta: &Matrix,
+    _mask: &[f32],
+    _g: &Matrix,
+    _w: &[f32],
+    _flops_grad: f64,
+    _flops_enc: f64,
+) -> anyhow::Result<()> {
+    eprintln!("(built without the 'xla' feature; XLA rows skipped)");
     Ok(())
 }

@@ -1,0 +1,131 @@
+//! Kernel benchmarks: the cache-blocked multi-threaded compute core vs
+//! the seed's scalar kernels, across sizes and thread counts.
+//!
+//! Cells:
+//!   * `matmul` — square `s x s x s` products (s = 128, 256, 512);
+//!   * `t_matmul` — the gradient's second stage shape, `(m, q)^T (m, c)`;
+//!   * `gather-gradient` — the per-client masked gradient over a row-index
+//!     set, seed path (select_rows + scalar gradient) vs the zero-copy
+//!     blocked kernel.
+//!
+//! Each blocked cell runs at 1/2/4/8 threads regardless of
+//! `CODEDFEDL_THREADS`; a speedup summary vs the scalar baseline is
+//! printed at the end.
+//!
+//! ```bash
+//! cargo bench --bench kernels
+//! ```
+
+use codedfedl::benchx::Bencher;
+use codedfedl::mathx::linalg::{gradient_naive, matmul_naive, t_matmul_naive, Matrix};
+use codedfedl::mathx::par;
+use codedfedl::mathx::rng::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn mean_of(b: &Bencher, name: &str) -> f64 {
+    b.results()
+        .iter()
+        .find(|r| r.name == name)
+        .map(|r| r.mean_s)
+        .unwrap_or(f64::NAN)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    b.target_time_s = 0.25;
+    b.max_iters = 40;
+    b.warmup = 1;
+    let mut rng = Rng::new(7);
+    let mut summaries: Vec<(String, String)> = Vec::new();
+
+    // --- square matmul across sizes and thread counts.
+    for &s in &[128usize, 256, 512] {
+        let a = Matrix::randn(s, s, 0.0, 1.0, &mut rng);
+        let c = Matrix::randn(s, s, 0.0, 1.0, &mut rng);
+        let flops = 2.0 * (s * s * s) as f64;
+        let base = format!("matmul {s}x{s}x{s} scalar (seed)");
+        b.bench_with_work(&base, Some(flops), || {
+            std::hint::black_box(matmul_naive(a.view(), c.view()));
+        });
+        for &t in &THREADS {
+            b.bench_with_work(&format!("matmul {s}x{s}x{s} blocked {t}t"), Some(flops), || {
+                std::hint::black_box(par::matmul_with_threads(a.view(), c.view(), t));
+            });
+        }
+        let naive = mean_of(&b, &base);
+        let best4 = mean_of(&b, &format!("matmul {s}x{s}x{s} blocked 4t"));
+        summaries.push((
+            format!("matmul {s}"),
+            format!("x{:.2} at 4 threads vs seed scalar", naive / best4),
+        ));
+    }
+
+    // --- transposed matmul (gradient stage 2 shape: m=4096, q=512, c=10).
+    {
+        let (m, q, c) = (4096usize, 512usize, 10usize);
+        let a = Matrix::randn(m, q, 0.0, 1.0, &mut rng);
+        let e = Matrix::randn(m, c, 0.0, 1.0, &mut rng);
+        let flops = 2.0 * (m * q * c) as f64;
+        b.bench_with_work("t_matmul 4096x512^T @ 4096x10 scalar (seed)", Some(flops), || {
+            std::hint::black_box(t_matmul_naive(a.view(), e.view()));
+        });
+        for &t in &THREADS {
+            let name = format!("t_matmul 4096x512^T @ 4096x10 blocked {t}t");
+            b.bench_with_work(&name, Some(flops), || {
+                std::hint::black_box(par::t_matmul_with_threads(a.view(), e.view(), t));
+            });
+        }
+    }
+
+    // --- gather-gradient: per-client masked gradient over a row set.
+    {
+        let (m_total, l, q, c) = (12_288usize, 512usize, 512usize, 10usize);
+        let x = Matrix::randn(m_total, q, 0.0, 1.0, &mut rng);
+        let y = Matrix::randn(m_total, c, 0.0, 1.0, &mut rng);
+        let beta = Matrix::randn(q, c, 0.0, 0.3, &mut rng);
+        let idx: Vec<usize> = (0..l).map(|i| (i * 23) % m_total).collect();
+        let mask: Vec<f32> = (0..l).map(|i| if i % 5 == 0 { 0.0 } else { 1.0 }).collect();
+        let flops = 4.0 * (l * q * c) as f64;
+
+        let base = "gather-grad 512 rows of 12288x512 scalar (seed select_rows)";
+        b.bench_with_work(base, Some(flops), || {
+            let xs = x.select_rows(&idx);
+            let ys = y.select_rows(&idx);
+            std::hint::black_box(gradient_naive(&xs, &ys, &beta, &mask).unwrap());
+        });
+        for &t in &THREADS {
+            b.bench_with_work(
+                &format!("gather-grad 512 rows of 12288x512 blocked {t}t"),
+                Some(flops),
+                || {
+                    std::hint::black_box(
+                        par::gather_gradient_with_threads(
+                            x.view(),
+                            y.view(),
+                            &idx,
+                            beta.view(),
+                            &mask,
+                            t,
+                        )
+                        .unwrap(),
+                    );
+                },
+            );
+        }
+        let naive = mean_of(&b, base);
+        let best4 = mean_of(&b, "gather-grad 512 rows of 12288x512 blocked 4t");
+        summaries.push((
+            "gather-gradient".into(),
+            format!("x{:.2} at 4 threads vs seed scalar", naive / best4),
+        ));
+    }
+
+    b.report("kernel benchmarks (blocked/parallel vs seed scalar)");
+    println!("\nspeedup summary:");
+    for (what, line) in &summaries {
+        println!("  {what:<16} {line}");
+    }
+    println!("(host has {} available threads)", par::num_threads());
+    Ok(())
+}

@@ -181,12 +181,35 @@ mod tests {
 
     #[test]
     fn throughput_computed() {
-        let mut b = Bencher { target_time_s: 0.001, max_iters: 3, warmup: 0, results: vec![] };
-        let r = b.bench_with_work("w", Some(1000.0), || {
-            std::thread::sleep(std::time::Duration::from_micros(100));
-        });
+        // Deterministic: throughput is pure arithmetic over an injected
+        // timing summary — no sleeping, nothing a loaded CI runner can
+        // perturb.
+        let r = BenchResult {
+            name: "w".into(),
+            iters: 3,
+            mean_s: 1e-3,
+            p50_s: 1e-3,
+            p95_s: 1e-3,
+            min_s: 1e-3,
+            work_per_iter: Some(1000.0),
+        };
         let t = r.throughput().unwrap();
-        assert!(t > 0.0 && t < 1e8, "{t}");
+        assert!((t - 1e6).abs() < 1e-3, "{t}");
+        let no_work = BenchResult { work_per_iter: None, ..r.clone() };
+        assert!(no_work.throughput().is_none());
+
+        // The runner wires the declared work through to its result (the
+        // only wall-clock dependence left is mean_s > 0, always true).
+        let mut b = Bencher { target_time_s: 0.0, max_iters: 2, warmup: 0, results: vec![] };
+        let measured = b.bench_with_work("spin", Some(64.0), || {
+            let mut x = 0u64;
+            for i in 0..512 {
+                x = x.wrapping_add(i * i);
+            }
+            std::hint::black_box(x);
+        });
+        assert_eq!(measured.work_per_iter, Some(64.0));
+        assert!(measured.throughput().unwrap() > 0.0);
     }
 
     #[test]

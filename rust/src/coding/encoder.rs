@@ -67,6 +67,28 @@ pub fn encode_client_slice(
     Ok((xc, yc))
 }
 
+/// Zero-copy variant of [`encode_client_slice`]: the client's slice is
+/// given as a row-index set into the full `(m, q)` embedded features and
+/// `(m, c)` labels, and the backend encodes `G_j W_j X[idx]` /
+/// `G_j W_j Y[idx]` reading the rows in place (no `select_rows`
+/// materialization). This is what the trainer's per-mini-batch encoding
+/// pass uses.
+pub fn encode_client_rows(
+    backend: &dyn ComputeBackend,
+    x: &Matrix,
+    y: &Matrix,
+    idx: &[usize],
+    weights: &[f32],
+    u: usize,
+    u_max: usize,
+    client_rng: &mut Rng,
+) -> Result<(Matrix, Matrix)> {
+    let g = sample_generator(u, u_max, idx.len(), client_rng);
+    let xc = backend.encode_gather(&g, weights, x, idx)?;
+    let yc = backend.encode_gather(&g, weights, y, idx)?;
+    Ok((xc, yc))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,14 +138,14 @@ mod tests {
         let w: Vec<f32> = (0..l).map(|k| if k % 2 == 0 { 0.6 } else { 1.0 }).collect();
         let wx = x.scale_rows(&w);
         let wy = y.scale_rows(&w);
-        let want = gradient_ref(&wx, &wy, &beta, &vec![1.0; l]);
+        let want = gradient_ref(&wx, &wy, &beta, &vec![1.0; l]).unwrap();
 
         let nb = NativeBackend;
         let trials = 300;
         let mut acc = Matrix::zeros(q, c);
         for _ in 0..trials {
             let (xc, yc) = encode_client_slice(&nb, &x, &y, &w, u, u, &mut rng).unwrap();
-            let g = gradient_ref(&xc, &yc, &beta, &vec![1.0; u]);
+            let g = gradient_ref(&xc, &yc, &beta, &vec![1.0; u]).unwrap();
             acc.axpy_inplace(1.0 / trials as f32, &g);
         }
         let scale = want.data().iter().fold(0.0f32, |a, &b| a.max(b.abs())) + 1.0;
@@ -132,6 +154,32 @@ mod tests {
             "bias {} vs scale {scale}",
             acc.max_abs_diff(&want)
         );
+    }
+
+    #[test]
+    fn rows_variant_matches_sliced_encoding() {
+        // Same rng stream, same weights: the zero-copy gather path must
+        // produce bitwise the same parity as materialize-then-encode.
+        let mut rng = Rng::new(7);
+        let x = Matrix::randn(12, 4, 0.0, 1.0, &mut rng);
+        let y = Matrix::randn(12, 2, 0.0, 1.0, &mut rng);
+        let idx = vec![11usize, 2, 5, 0, 7];
+        let w = vec![1.0f32, 0.5, 0.0, 2.0, 1.0];
+        let nb = NativeBackend;
+        let base = Rng::new(8);
+        let (xa, ya) = encode_client_slice(
+            &nb,
+            &x.select_rows(&idx),
+            &y.select_rows(&idx),
+            &w,
+            3,
+            6,
+            &mut base.fork(1),
+        )
+        .unwrap();
+        let (xb, yb) = encode_client_rows(&nb, &x, &y, &idx, &w, 3, 6, &mut base.fork(1)).unwrap();
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
     }
 
     #[test]

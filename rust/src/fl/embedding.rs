@@ -5,9 +5,12 @@
 //! does from a forked [`Rng`] stream. Frequencies `omega ~ N(0, 1/sigma^2)`
 //! and phases `delta ~ Uniform(0, 2pi]`.
 
+use anyhow::Result;
+
 use crate::mathx::distributions::{Sample, Uniform};
 use crate::mathx::linalg::Matrix;
 use crate::mathx::rng::Rng;
+use crate::runtime::backend::ComputeBackend;
 
 /// The shared RFF mapping parameters.
 #[derive(Debug, Clone)]
@@ -17,6 +20,16 @@ pub struct RffParams {
     /// `(1, q)` phase row.
     pub delta: Matrix,
     pub sigma: f64,
+}
+
+impl RffParams {
+    /// Embed `x` (`(m, d) -> (m, q)`) through a backend. Backends with
+    /// fixed artifact shapes stream `chunk`-row padded slices; the native
+    /// backend embeds the whole matrix in one blocked parallel pass with
+    /// no padding copies.
+    pub fn embed(&self, backend: &dyn ComputeBackend, x: &Matrix, chunk: usize) -> Result<Matrix> {
+        backend.rff_embed_all(x, &self.omega, &self.delta, chunk)
+    }
 }
 
 /// Expand a shared seed stream into RFF parameters (Remark 1).
@@ -51,6 +64,18 @@ mod tests {
         let n = (100 * 200) as f64;
         let var: f64 = p.omega.data().iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / n;
         assert!((var - 1.0 / (sigma * sigma)).abs() < 0.002, "var {var}");
+    }
+
+    #[test]
+    fn embed_helper_matches_backend_streaming() {
+        use crate::runtime::backend::NativeBackend;
+        let mut rng = Rng::new(4);
+        let p = from_seed(&mut rng, 6, 16, 2.0);
+        let x = Matrix::randn(9, 6, 0.0, 1.0, &mut rng);
+        let nb = NativeBackend;
+        let got = p.embed(&nb, &x, 4).unwrap();
+        let want = nb.rff_chunk(&x, &p.omega, &p.delta).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-6);
     }
 
     #[test]

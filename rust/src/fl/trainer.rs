@@ -15,10 +15,12 @@
 //! Wall-clock is *simulated*: each step advances the clock by the sampled
 //! §2.2 delays, so speedups are independent of the host machine.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use crate::allocation::optimizer::{plan_fixed_u, AllocationPlan};
-use crate::coding::encoder::{encode_client_slice, CompositeParity};
+use crate::coding::encoder::{encode_client_rows, CompositeParity};
 use crate::coding::weights::build_weights;
 use crate::config::{ExperimentConfig, Scheme};
 use crate::data::dataset::Dataset;
@@ -28,6 +30,7 @@ use crate::mathx::linalg::Matrix;
 use crate::mathx::rng::Rng;
 use crate::metrics::{EvalRecord, TrainReport};
 use crate::runtime::backend::{ComputeBackend, NativeBackend, PreparedMatrix};
+#[cfg(feature = "xla")]
 use crate::runtime::xla::XlaBackend;
 use crate::simnet::topology::{build_population, Population};
 
@@ -42,10 +45,12 @@ pub struct TrainerSetup {
 pub struct Trainer {
     cfg: ExperimentConfig,
     backend: Box<dyn ComputeBackend>,
-    /// Embedded training features `(m_train, q)`.
-    train_emb: Matrix,
-    train_y: Matrix,
-    test_emb: Matrix,
+    /// Embedded training features `(m_train, q)`, shared (zero-copy) with
+    /// every prepared client-slice gather.
+    train_emb: Arc<Matrix>,
+    /// One-hot training labels, shared the same way.
+    train_y: Arc<Matrix>,
+    test_emb: Arc<Matrix>,
     test: Dataset,
     /// Per-step, per-client: global row indices of the client's slice.
     slices: Vec<Vec<Vec<usize>>>,
@@ -53,16 +58,20 @@ pub struct Trainer {
     masks: Vec<Vec<Vec<f32>>>,
     /// Per-step composite parity (empty for uncoded).
     parity: Vec<CompositeParity>,
-    /// §Perf literal cache: per-step, per-client prepared (x, y, mask) —
-    /// invariant across epochs, so built once.
+    /// §Perf prepared-operand cache: per-step, per-client prepared
+    /// (x, y, mask) — invariant across epochs, so built once. On the
+    /// native backend the x/y entries are row-gather *views* into
+    /// `train_emb`/`train_y` (no materialization, ever); on XLA they are
+    /// literals built once (the literal-caching optimization).
     prep_slices: Vec<Vec<(PreparedMatrix, PreparedMatrix, PreparedMatrix)>>,
     /// Per-step prepared parity (x, y, mask); empty for uncoded.
     prep_parity: Vec<(PreparedMatrix, PreparedMatrix, PreparedMatrix)>,
-    /// Prepared test chunks (padded to `chunk` rows).
+    /// Prepared test chunks (gather views on native; padded literals on
+    /// backends with fixed artifact shapes).
     prep_test: Vec<PreparedMatrix>,
-    /// Per-step prepared mini-batch chunks + the batch label matrix
-    /// (for the loss series).
-    prep_batch: Vec<(Vec<PreparedMatrix>, Matrix)>,
+    /// Per-step prepared mini-batch chunks + the batch's global row
+    /// indices (labels for the loss series are read in place).
+    prep_batch: Vec<(Vec<PreparedMatrix>, Vec<usize>)>,
     setup: TrainerSetup,
     beta: Matrix,
     delay_rng: Rng,
@@ -71,17 +80,30 @@ pub struct Trainer {
 
 impl Trainer {
     /// Build a trainer from a config, selecting the XLA or native backend.
+    /// Without the `xla` cargo feature the native backend is always used
+    /// (a `use_xla = true` config logs a notice and falls back).
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Trainer> {
+        #[cfg(feature = "xla")]
         let backend: Box<dyn ComputeBackend> = if cfg.use_xla {
             Box::new(XlaBackend::load(&cfg.artifacts_dir, &cfg.profile)?)
         } else {
+            Box::new(NativeBackend)
+        };
+        #[cfg(not(feature = "xla"))]
+        let backend: Box<dyn ComputeBackend> = {
+            if cfg.use_xla {
+                crate::log_info!("built without the 'xla' feature; using the native backend");
+            }
             Box::new(NativeBackend)
         };
         Self::with_backend(cfg, backend)
     }
 
     /// Build with an explicit backend (tests inject [`NativeBackend`]).
-    pub fn with_backend(cfg: &ExperimentConfig, backend: Box<dyn ComputeBackend>) -> Result<Trainer> {
+    pub fn with_backend(
+        cfg: &ExperimentConfig,
+        backend: Box<dyn ComputeBackend>,
+    ) -> Result<Trainer> {
         cfg.validate()?;
         let root = Rng::new(cfg.seed);
         let mut data_rng = root.fork(1);
@@ -100,12 +122,15 @@ impl Trainer {
         let p = &cfg.profile;
         let rff = from_seed(&mut rff_rng, p.d, p.q, cfg.train.sigma);
         crate::log_info!("embedding {} train + {} test rows (q={})", train.len(), test.len(), p.q);
-        let train_emb = backend
-            .rff_embed_all(&train.x, &rff.omega, &rff.delta, p.chunk)
-            .context("embedding training set")?;
-        let test_emb = backend
-            .rff_embed_all(&test.x, &rff.omega, &rff.delta, p.chunk)
-            .context("embedding test set")?;
+        let train_emb = Arc::new(
+            rff.embed(backend.as_ref(), &train.x, p.chunk).context("embedding training set")?,
+        );
+        let test_emb = Arc::new(
+            rff.embed(backend.as_ref(), &test.x, p.chunk).context("embedding test set")?,
+        );
+        // The label matrix is shared (zero-copy) with every prepared
+        // gather below, so it is wrapped once and never row-copied again.
+        let train_y = Arc::new(train.y);
 
         // 3. MEC population + load allocation.
         let population = build_population(cfg, &mut topo_rng);
@@ -184,12 +209,13 @@ impl Trainer {
                         }
                         masks[s][j] = mask;
                         if pl.u > 0 {
-                            let x_slice = train_emb.select_rows(&slices[s][j]);
-                            let y_slice = train_y_of(&train).select_rows(&slices[s][j]);
-                            let (xc, yc) = encode_client_slice(
+                            // Zero-copy: the encoder reads the client's
+                            // rows straight out of the shared embedding.
+                            let (xc, yc) = encode_client_rows(
                                 backend.as_ref(),
-                                &x_slice,
-                                &y_slice,
+                                &train_emb,
+                                &train_y,
+                                &slices[s][j],
                                 &w,
                                 pl.u,
                                 p.u_max,
@@ -203,16 +229,20 @@ impl Trainer {
             }
         }
 
-        // 6. §Perf literal cache: every operand that is invariant across
-        //    epochs is prepared once (for the XLA backend this builds the
-        //    input literal up front, removing per-step host copies).
+        // 6. §Perf prepared-operand cache: every operand that is invariant
+        //    across epochs is prepared once. Client slices and eval
+        //    batches are prepared as *row gathers* — zero-copy views on
+        //    the native backend, one-time literal builds on XLA (the
+        //    literal-caching optimization, unchanged).
         let mut prep_slices = Vec::with_capacity(steps);
         for s in 0..steps {
             let mut row = Vec::with_capacity(cfg.n_clients);
             for j in 0..cfg.n_clients {
-                let x = train_emb.select_rows(&slices[s][j]);
-                let y = train.y.select_rows(&slices[s][j]);
-                row.push((backend.prepare(&x)?, backend.prepare(&y)?, backend.prepare_col(&masks[s][j])?));
+                row.push((
+                    backend.prepare_gather(&train_emb, &slices[s][j])?,
+                    backend.prepare_gather(&train_y, &slices[s][j])?,
+                    backend.prepare_col(&masks[s][j])?,
+                ));
             }
             prep_slices.push(row);
         }
@@ -224,16 +254,16 @@ impl Trainer {
                 backend.prepare_col(&comp.mask())?,
             ));
         }
-        let prep_test = prepare_chunks(backend.as_ref(), &test_emb, p.chunk)?;
+        let test_idx: Vec<usize> = (0..test_emb.rows()).collect();
+        let prep_test = backend.prepare_gather_chunks(&test_emb, &test_idx, p.chunk)?;
         let mut prep_batch = Vec::with_capacity(steps);
         for s in 0..steps {
             let mut idx = Vec::with_capacity(cfg.global_batch());
             for j in 0..cfg.n_clients {
                 idx.extend_from_slice(&slices[s][j]);
             }
-            let xb = train_emb.select_rows(&idx);
-            let yb = train.y.select_rows(&idx);
-            prep_batch.push((prepare_chunks(backend.as_ref(), &xb, p.chunk)?, yb));
+            let chunks = backend.prepare_gather_chunks(&train_emb, &idx, p.chunk)?;
+            prep_batch.push((chunks, idx));
         }
 
         let beta = Matrix::zeros(p.q, p.c); // paper: model initialized to 0
@@ -245,7 +275,7 @@ impl Trainer {
         Ok(Trainer {
             cfg: cfg.clone(),
             backend,
-            train_y: train.y.clone(),
+            train_y,
             train_emb,
             test_emb,
             test,
@@ -268,9 +298,16 @@ impl Trainer {
         &self.setup
     }
 
+    /// Name of the backend actually executing the compute (which may be
+    /// the native fallback even when the config asked for XLA — e.g. a
+    /// build without the `xla` feature).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
     // -- Introspection accessors (diagnostics, notebooks, tests). The hot
-    // loop reads only the prepared-literal caches; these expose the host
-    // copies the caches were built from.
+    // loop reads only the prepared-operand caches; these expose the
+    // shared host matrices the caches gather from.
 
     /// Embedded training features `(m_train, q)`.
     pub fn train_embedding(&self) -> &Matrix {
@@ -341,7 +378,8 @@ impl Trainer {
                         loss,
                     });
                     crate::log_debug!(
-                        "epoch {epoch} step {global_step}: sim_t={sim_time:.1}s acc={acc:.4} loss={loss:.5}"
+                        "epoch {epoch} step {global_step}: sim_t={sim_time:.1}s \
+                         acc={acc:.4} loss={loss:.5}"
                     );
                 }
             }
@@ -412,13 +450,16 @@ impl Trainer {
         let logits = self.predict_prepared(&self.prep_test, self.test.len(), &beta_p)?;
         let acc = self.test.accuracy(&logits);
 
-        // Mini-batch loss over step s's global batch.
-        let (chunks, yb) = &self.prep_batch[s];
-        let pred = self.predict_prepared(chunks, yb.rows(), &beta_p)?;
-        let m = yb.rows() as f64;
+        // Mini-batch loss over step s's global batch; labels are read in
+        // place from the shared matrix via the stored row-index set.
+        let (chunks, idx) = &self.prep_batch[s];
+        let pred = self.predict_prepared(chunks, idx.len(), &beta_p)?;
+        let m = idx.len() as f64;
         let mut se = 0.0f64;
-        for (a, b) in pred.data().iter().zip(yb.data()) {
-            se += ((a - b) as f64).powi(2);
+        for (r, &gi) in idx.iter().enumerate() {
+            for (a, b) in pred.row(r).iter().zip(self.train_y.row(gi)) {
+                se += ((a - b) as f64).powi(2);
+            }
         }
         let reg: f64 = self.beta.data().iter().map(|&v| (v as f64).powi(2)).sum();
         let loss = se / (2.0 * m) + 0.5 * self.cfg.train.lambda * reg;
@@ -445,31 +486,6 @@ impl Trainer {
         }
         Ok(out)
     }
-}
-
-/// Split `m` into `chunk`-row zero-padded prepared chunks.
-fn prepare_chunks(
-    backend: &dyn ComputeBackend,
-    m: &Matrix,
-    chunk: usize,
-) -> Result<Vec<PreparedMatrix>> {
-    let (rows, cols) = m.shape();
-    let mut out = Vec::new();
-    let mut row = 0;
-    while row < rows {
-        let take = chunk.min(rows - row);
-        let mut padded = Matrix::zeros(chunk, cols);
-        for r in 0..take {
-            padded.row_mut(r).copy_from_slice(m.row(row + r));
-        }
-        out.push(backend.prepare(&padded)?);
-        row += take;
-    }
-    Ok(out)
-}
-
-fn train_y_of(d: &Dataset) -> &Matrix {
-    &d.y
 }
 
 #[cfg(test)]

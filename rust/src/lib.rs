@@ -7,12 +7,23 @@
 //! * **L3 (this crate)** — the MEC coordinator: stochastic edge network
 //!   simulation ([`simnet`]), the paper's analytical load-allocation policy
 //!   ([`allocation`]), private parity encoding ([`coding`]), the federated
-//!   training loop with coded gradient aggregation ([`fl`]), and the PJRT
-//!   runtime that executes AOT-compiled XLA artifacts ([`runtime`]).
+//!   training loop with coded gradient aggregation ([`fl`]), and the
+//!   [`runtime`] layer the trainer codes against — the zero-copy parallel
+//!   native backend always, plus (behind the `xla` cargo feature) the PJRT
+//!   runtime that executes AOT-compiled XLA artifacts.
 //! * **L2** — the JAX compute graph (`python/compile/model.py`), lowered
 //!   once by `make artifacts` to HLO text; never on the training path.
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) for the gradient,
 //!   RFF embedding, and parity encoding hot spots.
+//!
+//! The native compute core is view-based: [`mathx::linalg`] provides the
+//! owning [`mathx::Matrix`] plus borrowed [`mathx::MatRef`] /
+//! [`mathx::MatMut`] views, and [`mathx::par`] provides cache-blocked
+//! kernels parallelized over row panels (matmul, transposed matmul, the
+//! masked gradient, parity encoding) including `gather_*` variants that
+//! compute over a row-index set without materializing the gathered slice.
+//! Thread count honors `CODEDFEDL_THREADS`; results are bitwise identical
+//! at any thread count, so seeded experiments replay exactly.
 //!
 //! The offline crate universe contains only `xla` + `anyhow`, so this crate
 //! carries its own substrates: PRNG and distributions ([`mathx`]), JSON and

@@ -65,15 +65,15 @@ fn build_config(args: &codedfedl::cli::Args) -> Result<ExperimentConfig> {
 
 fn cmd_train(args: &codedfedl::cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
+    let mut trainer = Trainer::from_config(&cfg)?;
     println!(
         "training: scheme={} dataset={} preset={} epochs={} backend={}",
         cfg.scheme.name(),
         cfg.dataset,
         cfg.profile.name,
         cfg.train.epochs,
-        if cfg.use_xla { "xla-pjrt" } else { "native" }
+        trainer.backend_name()
     );
-    let mut trainer = Trainer::from_config(&cfg)?;
     let report = trainer.run()?;
     println!(
         "done: final_acc={:.4} best_acc={:.4} sim_time={:.1}s host_time={:.1}s mean_arrivals={:.3}",

@@ -1,10 +1,26 @@
-//! Small dense row-major f32 matrix toolkit.
+//! Dense row-major f32 matrices, zero-copy views, and the scalar oracle
+//! kernels.
 //!
-//! This is the *native oracle and fallback* for the XLA artifacts: every
-//! runtime executable has an equivalent here, used by integration tests
-//! (XLA vs native must agree) and by pure-simulation paths where spinning
-//! up PJRT is unnecessary (e.g. the allocation benches). The hot training
-//! path goes through [`crate::runtime`] instead.
+//! Three tiers live here:
+//!
+//! * [`Matrix`] — the owning container. Its arithmetic methods (`matmul`,
+//!   `t_matmul`, `scale_rows`, …) delegate to the cache-blocked,
+//!   multi-threaded kernels in [`crate::mathx::par`].
+//! * [`MatRef`] / [`MatMut`] — borrowed views (base slice + rows/cols +
+//!   row stride). Kernels operate on views, so callers can hand out row
+//!   windows or column windows of a larger matrix without copying.
+//! * `*_naive` free functions — the seed's scalar triple loops, kept as
+//!   the reference oracle for property tests and as the bench baseline.
+//!
+//! This module remains the *native oracle and fallback* for the XLA
+//! artifacts: every runtime executable has an equivalent here, used by
+//! integration tests (XLA vs native must agree) and by pure-simulation
+//! paths where spinning up PJRT is unnecessary. The hot training path
+//! goes through [`crate::runtime`] instead.
+
+use std::ops::Range;
+
+use anyhow::{ensure, Result};
 
 use crate::mathx::rng::Rng;
 
@@ -14,6 +30,199 @@ pub struct Matrix {
     rows: usize,
     cols: usize,
     data: Vec<f32>,
+}
+
+/// Borrowed read-only matrix view: a base slice plus logical shape and a
+/// row stride. `row_stride == cols` for dense views; row/column windows
+/// of a wider parent keep the parent's stride, so slicing never copies.
+#[derive(Debug, Clone, Copy)]
+pub struct MatRef<'a> {
+    data: &'a [f32],
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+}
+
+impl<'a> MatRef<'a> {
+    /// Build a view over `data`. Row `r` occupies
+    /// `data[r * row_stride .. r * row_stride + cols]`.
+    pub fn new(data: &'a [f32], rows: usize, cols: usize, row_stride: usize) -> MatRef<'a> {
+        assert!(
+            cols <= row_stride || rows <= 1,
+            "row stride {row_stride} shorter than row width {cols}"
+        );
+        let need = if rows == 0 { 0 } else { (rows - 1) * row_stride + cols };
+        assert!(
+            data.len() >= need,
+            "view of {rows}x{cols} (stride {row_stride}) needs {need} floats, got {}",
+            data.len()
+        );
+        MatRef { data, rows, cols, row_stride }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Distance (in floats) between consecutive row starts.
+    pub fn row_stride(&self) -> usize {
+        self.row_stride
+    }
+
+    /// Borrow row `r` (length `cols`).
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        debug_assert!(r < self.rows);
+        if self.cols == 0 {
+            return &[];
+        }
+        let start = r * self.row_stride;
+        &self.data[start..start + self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.row_stride + c]
+    }
+
+    /// Zero-copy window over a contiguous row range.
+    pub fn subrows(&self, range: Range<usize>) -> MatRef<'a> {
+        assert!(
+            range.start <= range.end && range.end <= self.rows,
+            "subrows {range:?} out of range for {} rows",
+            self.rows
+        );
+        let rows = range.end - range.start;
+        if rows == 0 {
+            return MatRef { data: &[], rows: 0, cols: self.cols, row_stride: self.row_stride };
+        }
+        let start = range.start * self.row_stride;
+        let need = (rows - 1) * self.row_stride + self.cols;
+        MatRef {
+            data: &self.data[start..start + need],
+            rows,
+            cols: self.cols,
+            row_stride: self.row_stride,
+        }
+    }
+
+    /// Zero-copy window over a contiguous column range (keeps the parent
+    /// stride — this is where `row_stride != cols` arises).
+    pub fn subcols(&self, range: Range<usize>) -> MatRef<'a> {
+        assert!(
+            range.start <= range.end && range.end <= self.cols,
+            "subcols {range:?} out of range for {} cols",
+            self.cols
+        );
+        let cols = range.end - range.start;
+        if self.rows == 0 || cols == 0 {
+            return MatRef { data: &[], rows: self.rows, cols, row_stride: self.row_stride };
+        }
+        let need = (self.rows - 1) * self.row_stride + range.end;
+        MatRef {
+            data: &self.data[range.start..need],
+            rows: self.rows,
+            cols,
+            row_stride: self.row_stride,
+        }
+    }
+
+    /// Materialize the view into an owning dense matrix.
+    pub fn to_matrix(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(self.row(r));
+        }
+        out
+    }
+}
+
+/// Borrowed mutable matrix view. Supports disjoint row-panel splitting
+/// ([`MatMut::split_rows_at`]), which is how [`crate::mathx::par`] hands
+/// each worker thread its own slice of the output.
+#[derive(Debug)]
+pub struct MatMut<'a> {
+    data: &'a mut [f32],
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+}
+
+impl<'a> MatMut<'a> {
+    /// Build a mutable view over `data` (same layout rules as [`MatRef`]).
+    pub fn new(data: &'a mut [f32], rows: usize, cols: usize, row_stride: usize) -> MatMut<'a> {
+        assert!(
+            cols <= row_stride || rows <= 1,
+            "row stride {row_stride} shorter than row width {cols}"
+        );
+        let need = if rows == 0 { 0 } else { (rows - 1) * row_stride + cols };
+        assert!(
+            data.len() >= need,
+            "view of {rows}x{cols} (stride {row_stride}) needs {need} floats, got {}",
+            data.len()
+        );
+        MatMut { data, rows, cols, row_stride }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows);
+        if self.cols == 0 {
+            return &[];
+        }
+        let start = r * self.row_stride;
+        &self.data[start..start + self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows);
+        if self.cols == 0 {
+            return &mut [];
+        }
+        let start = r * self.row_stride;
+        &mut self.data[start..start + self.cols]
+    }
+
+    /// Read-only reborrow of this view.
+    pub fn reborrow(&self) -> MatRef<'_> {
+        MatRef { data: self.data, rows: self.rows, cols: self.cols, row_stride: self.row_stride }
+    }
+
+    /// Split into disjoint row panels `[0, mid)` and `[mid, rows)`.
+    /// Consumes the view; the two halves may be handed to different
+    /// threads (they alias nothing).
+    pub fn split_rows_at(self, mid: usize) -> (MatMut<'a>, MatMut<'a>) {
+        assert!(mid <= self.rows, "split at {mid} beyond {} rows", self.rows);
+        let at = if mid == self.rows { self.data.len() } else { mid * self.row_stride };
+        let (head, tail) = self.data.split_at_mut(at);
+        let stride = self.row_stride;
+        (
+            MatMut { data: head, rows: mid, cols: self.cols, row_stride: stride },
+            MatMut { data: tail, rows: self.rows - mid, cols: self.cols, row_stride: stride },
+        )
+    }
 }
 
 impl Matrix {
@@ -70,6 +279,16 @@ impl Matrix {
         self.data
     }
 
+    /// Zero-copy read-only view of the whole matrix.
+    pub fn view(&self) -> MatRef<'_> {
+        MatRef { data: &self.data, rows: self.rows, cols: self.cols, row_stride: self.cols }
+    }
+
+    /// Zero-copy mutable view of the whole matrix.
+    pub fn view_mut(&mut self) -> MatMut<'_> {
+        MatMut { data: &mut self.data, rows: self.rows, cols: self.cols, row_stride: self.cols }
+    }
+
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> f32 {
         debug_assert!(r < self.rows && c < self.cols);
@@ -92,6 +311,11 @@ impl Matrix {
     }
 
     /// New matrix holding the selected rows (gathers a client's sample).
+    ///
+    /// This *copies*; the training hot path avoids it via
+    /// [`crate::mathx::par::gather_matmul`] /
+    /// [`crate::mathx::par::gather_gradient`], which consume the index
+    /// set directly.
     pub fn select_rows(&self, idx: &[usize]) -> Matrix {
         let mut out = Matrix::zeros(idx.len(), self.cols);
         for (i, &r) in idx.iter().enumerate() {
@@ -100,46 +324,18 @@ impl Matrix {
         out
     }
 
-    /// Matrix product `self @ rhs` (ikj loop order, row-major friendly).
+    /// Matrix product `self @ rhs` (cache-blocked, multi-threaded; see
+    /// [`crate::mathx::par::matmul`]).
     pub fn matmul(&self, rhs: &Matrix) -> Matrix {
         assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, rhs.cols);
-        let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let a_row = &self.data[i * k..(i + 1) * k];
-            let o_row = &mut out.data[i * n..(i + 1) * n];
-            for (p, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = &rhs.data[p * n..(p + 1) * n];
-                for (o, &b) in o_row.iter_mut().zip(b_row) {
-                    *o += a * b;
-                }
-            }
-        }
-        out
+        crate::mathx::par::matmul(self.view(), rhs.view())
     }
 
-    /// `self^T @ rhs` without materializing the transpose.
+    /// `self^T @ rhs` without materializing the transpose (blocked,
+    /// multi-threaded; see [`crate::mathx::par::t_matmul`]).
     pub fn t_matmul(&self, rhs: &Matrix) -> Matrix {
         assert_eq!(self.rows, rhs.rows, "t_matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, rhs.cols);
-        let mut out = Matrix::zeros(k, n);
-        for r in 0..m {
-            let a_row = &self.data[r * k..(r + 1) * k];
-            let b_row = &rhs.data[r * n..(r + 1) * n];
-            for (p, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let o_row = &mut out.data[p * n..(p + 1) * n];
-                for (o, &b) in o_row.iter_mut().zip(b_row) {
-                    *o += a * b;
-                }
-            }
-        }
-        out
+        crate::mathx::par::t_matmul(self.view(), rhs.view())
     }
 
     /// Transposed copy.
@@ -179,16 +375,11 @@ impl Matrix {
         Matrix { rows: self.rows, cols: self.cols, data }
     }
 
-    /// Scale every row `r` by `w[r]` (the paper's `W_j` diagonal weighting).
+    /// Scale every row `r` by `w[r]` (the paper's `W_j` diagonal
+    /// weighting), parallel over row panels.
     pub fn scale_rows(&self, w: &[f32]) -> Matrix {
         assert_eq!(w.len(), self.rows, "row-weight length mismatch");
-        let mut out = self.clone();
-        for (r, &wr) in w.iter().enumerate() {
-            for v in out.row_mut(r) {
-                *v *= wr;
-            }
-        }
-        out
+        crate::mathx::par::scale_rows(self.view(), w)
     }
 
     /// Frobenius norm.
@@ -223,20 +414,110 @@ impl Matrix {
     }
 }
 
-/// Native masked gradient sum `X^T (mask .* (X beta - Y))` — oracle for the
-/// `grad_*` artifacts (and the pure-simulation fallback).
-pub fn gradient_ref(x: &Matrix, y: &Matrix, beta: &Matrix, mask: &[f32]) -> Matrix {
-    assert_eq!(x.rows(), y.rows());
-    assert_eq!(mask.len(), x.rows());
-    let mut err = x.matmul(beta); // (m, c)
-    for r in 0..err.rows() {
-        let w = mask[r];
-        let yr = y.row(r).to_vec();
-        for (c, v) in err.row_mut(r).iter_mut().enumerate() {
-            *v = (*v - yr[c]) * w;
+// ---- scalar oracle kernels (the seed's single-threaded triple loops) ----
+
+/// Scalar reference `a @ b` (ikj loop order, row-major friendly). Kept as
+/// the oracle the blocked/parallel kernels are property-tested against,
+/// and as the bench baseline.
+pub fn matmul_naive(a: MatRef<'_>, b: MatRef<'_>) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let (m, n) = (a.rows(), b.cols());
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        let a_row = a.row(i);
+        let o_row = out.row_mut(i);
+        for (p, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let b_row = b.row(p);
+            for (o, &bv) in o_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
         }
     }
-    x.t_matmul(&err)
+    out
+}
+
+/// Scalar reference `a^T @ b` without materializing the transpose.
+pub fn t_matmul_naive(a: MatRef<'_>, b: MatRef<'_>) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "t_matmul shape mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Matrix::zeros(k, n);
+    for r in 0..m {
+        let a_row = a.row(r);
+        let b_row = b.row(r);
+        for (p, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let o_row = out.row_mut(p);
+            for (o, &bv) in o_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Shared shape validation for the gradient kernels: every dimension is
+/// checked up front with a descriptive error (no panics deep in a loop).
+pub(crate) fn check_gradient_shapes(
+    x: (usize, usize),
+    y: (usize, usize),
+    beta: (usize, usize),
+    mask_len: usize,
+    rows: usize,
+) -> Result<()> {
+    ensure!(
+        beta.0 == x.1,
+        "gradient: beta has {} rows but x has {} columns",
+        beta.0,
+        x.1
+    );
+    ensure!(
+        y.1 == beta.1,
+        "gradient: y has {} columns but beta has {}",
+        y.1,
+        beta.1
+    );
+    ensure!(
+        mask_len == rows,
+        "gradient: mask covers {mask_len} rows but the slice has {rows} \
+         (the mask must have exactly one entry per slice row)"
+    );
+    Ok(())
+}
+
+/// Scalar reference for the masked gradient sum
+/// `X^T (mask .* (X beta - Y))` — the oracle the blocked kernel and the
+/// `grad_*` XLA artifacts are tested against.
+pub fn gradient_naive(x: &Matrix, y: &Matrix, beta: &Matrix, mask: &[f32]) -> Result<Matrix> {
+    ensure!(
+        y.rows() == x.rows(),
+        "gradient: y has {} rows but x has {}",
+        y.rows(),
+        x.rows()
+    );
+    check_gradient_shapes(x.shape(), y.shape(), beta.shape(), mask.len(), x.rows())?;
+    let mut err = matmul_naive(x.view(), beta.view()); // (m, c)
+    for r in 0..err.rows() {
+        let w = mask[r];
+        let y_row = y.row(r);
+        for (v, &yv) in err.row_mut(r).iter_mut().zip(y_row) {
+            *v = (*v - yv) * w;
+        }
+    }
+    Ok(t_matmul_naive(x.view(), err.view()))
+}
+
+/// Native masked gradient sum `X^T (mask .* (X beta - Y))` — the fallback
+/// for the `grad_*` artifacts. Validates every shape up front and runs
+/// the cache-blocked parallel kernel ([`crate::mathx::par::gradient`]);
+/// results are bitwise identical to [`gradient_naive`] at any thread
+/// count (panel workers accumulate in the same order).
+pub fn gradient_ref(x: &Matrix, y: &Matrix, beta: &Matrix, mask: &[f32]) -> Result<Matrix> {
+    crate::mathx::par::gradient(x.view(), y.view(), beta.view(), mask)
 }
 
 #[cfg(test)]
@@ -282,7 +563,7 @@ mod tests {
         let x = Matrix::randn(10, 4, 0.0, 1.0, &mut rng);
         let beta = Matrix::randn(4, 3, 0.0, 1.0, &mut rng);
         let y = x.matmul(&beta);
-        let g = gradient_ref(&x, &y, &beta, &vec![1.0; 10]);
+        let g = gradient_ref(&x, &y, &beta, &vec![1.0; 10]).unwrap();
         assert!(g.fro_norm() < 1e-4, "{}", g.fro_norm());
     }
 
@@ -294,11 +575,24 @@ mod tests {
         let beta = Matrix::randn(4, 2, 0.0, 1.0, &mut rng);
         let mut mask = vec![1.0; 8];
         mask[5..].iter_mut().for_each(|m| *m = 0.0);
-        let got = gradient_ref(&x, &y, &beta, &mask);
+        let got = gradient_ref(&x, &y, &beta, &mask).unwrap();
         let xs = x.select_rows(&[0, 1, 2, 3, 4]);
         let ys = y.select_rows(&[0, 1, 2, 3, 4]);
-        let want = gradient_ref(&xs, &ys, &beta, &vec![1.0; 5]);
+        let want = gradient_ref(&xs, &ys, &beta, &vec![1.0; 5]).unwrap();
         assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn gradient_ref_rejects_bad_shapes_descriptively() {
+        let x = Matrix::zeros(4, 3);
+        let y = Matrix::zeros(4, 2);
+        let beta = Matrix::zeros(3, 2);
+        let err = gradient_ref(&x, &y, &beta, &[1.0; 3]).unwrap_err();
+        assert!(err.to_string().contains("mask"), "unexpected error: {err}");
+        let err2 = gradient_ref(&x, &y, &Matrix::zeros(5, 2), &[1.0; 4]).unwrap_err();
+        assert!(err2.to_string().contains("beta"), "unexpected error: {err2}");
+        let err3 = gradient_naive(&x, &Matrix::zeros(3, 2), &beta, &[1.0; 4]).unwrap_err();
+        assert!(err3.to_string().contains("rows"), "unexpected error: {err3}");
     }
 
     #[test]
@@ -335,5 +629,60 @@ mod tests {
         let mut c = a.clone();
         c.axpy_inplace(0.5, &b);
         assert_eq!(c.data(), &[1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn view_rows_and_windows_are_zero_copy_consistent() {
+        let m = Matrix::from_vec(3, 4, (0..12).map(|v| v as f32).collect());
+        let v = m.view();
+        assert_eq!(v.shape(), (3, 4));
+        assert_eq!(v.row(1), &[4.0, 5.0, 6.0, 7.0]);
+        let sub = v.subrows(1..3);
+        assert_eq!(sub.shape(), (2, 4));
+        assert_eq!(sub.row(0), m.row(1));
+        assert_eq!(sub.to_matrix(), m.select_rows(&[1, 2]));
+        // Column window keeps the parent stride.
+        let cols = v.subcols(1..3);
+        assert_eq!(cols.shape(), (3, 2));
+        assert_eq!(cols.row_stride(), 4);
+        assert_eq!(cols.row(2), &[9.0, 10.0]);
+        assert_eq!(cols.get(0, 1), 2.0);
+        // Empty windows are fine.
+        assert_eq!(v.subrows(3..3).shape(), (0, 4));
+        assert_eq!(v.subcols(2..2).to_matrix().data().len(), 0);
+    }
+
+    #[test]
+    fn strided_views_feed_kernels() {
+        // A column window (stride > cols) must multiply exactly like its
+        // materialized copy.
+        let mut rng = Rng::new(7);
+        let a = Matrix::randn(6, 8, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(3, 5, 0.0, 1.0, &mut rng);
+        let win = a.view().subcols(2..5); // (6, 3), stride 8
+        let got = crate::mathx::par::matmul(win, b.view());
+        let want = win.to_matrix().matmul(&b);
+        assert!(got.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn mat_mut_split_panels_are_disjoint() {
+        let mut m = Matrix::zeros(4, 2);
+        let (mut top, mut bot) = m.view_mut().split_rows_at(1);
+        assert_eq!(top.shape(), (1, 2));
+        assert_eq!(bot.shape(), (3, 2));
+        top.row_mut(0).fill(1.0);
+        bot.row_mut(2).fill(2.0);
+        assert_eq!(m.data(), &[1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn naive_kernels_agree_with_blocked() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::randn(9, 7, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(7, 5, 0.0, 1.0, &mut rng);
+        assert_eq!(matmul_naive(a.view(), b.view()), a.matmul(&b));
+        let c = Matrix::randn(9, 5, 0.0, 1.0, &mut rng);
+        assert_eq!(t_matmul_naive(a.view(), c.view()), a.t_matmul(&c));
     }
 }

@@ -1,15 +1,17 @@
 //! Numerical substrates: PRNG, probability distributions, the Lambert W
-//! function needed by the paper's closed-form load allocation (eq. 14), a
-//! small dense linear-algebra toolkit used as the native oracle/fallback
-//! for the XLA artifacts, and summary statistics.
+//! function needed by the paper's closed-form load allocation (eq. 14),
+//! the dense linear-algebra toolkit with zero-copy [`linalg::MatRef`] /
+//! [`linalg::MatMut`] views, the cache-blocked multi-threaded kernels in
+//! [`par`] that the native compute path runs on, and summary statistics.
 
 pub mod distributions;
 pub mod lambertw;
 pub mod linalg;
+pub mod par;
 pub mod rng;
 pub mod stats;
 
 pub use distributions::{Exponential, Geometric, Normal, Uniform};
 pub use lambertw::{lambert_w0, lambert_wm1};
-pub use linalg::Matrix;
+pub use linalg::{MatMut, MatRef, Matrix};
 pub use rng::Rng;

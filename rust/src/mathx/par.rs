@@ -1,0 +1,573 @@
+//! Cache-blocked, multi-threaded compute kernels over matrix views.
+//!
+//! This is the native compute core the trainer, encoder and benches run
+//! on. Design rules:
+//!
+//! * **Panel parallelism.** Every kernel partitions its *output* into
+//!   contiguous row panels and hands each panel to one scoped thread
+//!   ([`par_row_panels`]); workers never share an accumulator, so no
+//!   locks, no atomics, no reduction trees. The offline crate universe
+//!   has only `xla` + `anyhow`, so the pool is hand-rolled on
+//!   [`std::thread::scope`].
+//! * **Determinism.** Within a panel the reduction dimension is walked in
+//!   a fixed order, and the k-blocking preserves that order, so results
+//!   are **bitwise identical for any thread count** (and identical to the
+//!   scalar `*_naive` oracles in [`crate::mathx::linalg`]). Seeded
+//!   experiments replay exactly no matter the host's core count.
+//! * **Zero-copy gathers.** The `gather_*` kernels take a row-index set
+//!   and read straight out of the source matrix — the hot federated
+//!   training path never materializes a client's slice.
+//! * **Validation up front.** Gradient/encode kernels check every shape
+//!   and every row index before touching data and return descriptive
+//!   `anyhow` errors instead of panicking mid-loop.
+//!
+//! Thread count: `CODEDFEDL_THREADS` if set (>= 1), else
+//! [`std::thread::available_parallelism`]. Kernels fall back to a single
+//! thread when the work is too small to amortize a spawn.
+
+use std::sync::OnceLock;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::mathx::linalg::{check_gradient_shapes, MatMut, MatRef, Matrix};
+
+/// Reduction-dimension block width: one `KC x n` panel of the right-hand
+/// side stays resident in L1/L2 while it is reused across all rows of an
+/// output panel.
+const KC: usize = 256;
+
+/// Multiply-accumulate count below which spawning threads costs more
+/// than it saves; such calls run on the caller's thread.
+const PAR_MIN_OPS: usize = 1 << 15;
+
+/// Worker-thread count: `CODEDFEDL_THREADS` (>= 1) if set, else the
+/// host's available parallelism. Cached after the first call.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("CODEDFEDL_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+fn effective_threads(requested: usize, rows: usize, ops_per_row: usize) -> usize {
+    if rows.saturating_mul(ops_per_row) < PAR_MIN_OPS {
+        1
+    } else {
+        requested.max(1)
+    }
+}
+
+/// Split `out` into at most `threads` contiguous row panels and run
+/// `kernel(first_row, panel)` on each, one scoped thread per panel (the
+/// last panel runs on the caller's thread). Panels are disjoint, so the
+/// kernel borrows no shared mutable state.
+pub fn par_row_panels<'a, F>(out: MatMut<'a>, threads: usize, kernel: F)
+where
+    F: Fn(usize, MatMut<'a>) + Sync,
+{
+    let rows = out.rows();
+    let t = threads.max(1).min(rows.max(1));
+    if t <= 1 {
+        kernel(0, out);
+        return;
+    }
+    let base = rows / t;
+    let rem = rows % t;
+    std::thread::scope(|scope| {
+        let kernel = &kernel;
+        let mut rest = out;
+        let mut first = 0usize;
+        for p in 0..t {
+            let take = base + usize::from(p < rem);
+            let (head, tail) = rest.split_rows_at(take);
+            rest = tail;
+            let start = first;
+            first += take;
+            if p + 1 == t {
+                kernel(start, head);
+            } else {
+                scope.spawn(move || kernel(start, head));
+            }
+        }
+    });
+}
+
+/// Validate a gather index set against a source row count.
+pub(crate) fn check_indices(idx: &[usize], rows: usize, what: &str) -> Result<()> {
+    if let Some(&bad) = idx.iter().find(|&&i| i >= rows) {
+        bail!("{what}: row index {bad} out of range for a {rows}-row source");
+    }
+    Ok(())
+}
+
+// ---- matmul ----
+
+/// Cache-blocked parallel `a @ b`.
+pub fn matmul(a: MatRef<'_>, b: MatRef<'_>) -> Matrix {
+    matmul_with_threads(a, b, num_threads())
+}
+
+/// [`matmul`] with an explicit thread count (tests/benches).
+pub fn matmul_with_threads(a: MatRef<'_>, b: MatRef<'_>, threads: usize) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Matrix::zeros(m, n);
+    let t = effective_threads(threads, m, k * n);
+    par_row_panels(out.view_mut(), t, |first, mut panel| {
+        matmul_panel(a, None, b, first, &mut panel);
+    });
+    out
+}
+
+/// `a[idx] @ b` without materializing the gathered rows.
+pub fn gather_matmul(a: MatRef<'_>, idx: &[usize], b: MatRef<'_>) -> Result<Matrix> {
+    gather_matmul_with_threads(a, idx, b, num_threads())
+}
+
+/// [`gather_matmul`] with an explicit thread count.
+pub fn gather_matmul_with_threads(
+    a: MatRef<'_>,
+    idx: &[usize],
+    b: MatRef<'_>,
+    threads: usize,
+) -> Result<Matrix> {
+    ensure!(
+        a.cols() == b.rows(),
+        "gather_matmul: a has {} columns but b has {} rows",
+        a.cols(),
+        b.rows()
+    );
+    check_indices(idx, a.rows(), "gather_matmul")?;
+    let (m, n) = (idx.len(), b.cols());
+    let mut out = Matrix::zeros(m, n);
+    let t = effective_threads(threads, m, a.cols() * n);
+    par_row_panels(out.view_mut(), t, |first, mut panel| {
+        matmul_panel(a, Some(idx), b, first, &mut panel);
+    });
+    Ok(out)
+}
+
+/// Output rows `[first, first + panel.rows())` of `A[idx] @ B`
+/// (`idx = None` is the identity gather). The `KC` blocking keeps a
+/// `KC x n` slab of `B` hot across every row of the panel; within one
+/// output element the accumulation order over `p` is unchanged, so the
+/// result is bitwise equal to the scalar kernel.
+fn matmul_panel(
+    a: MatRef<'_>,
+    idx: Option<&[usize]>,
+    b: MatRef<'_>,
+    first: usize,
+    panel: &mut MatMut<'_>,
+) {
+    let k = a.cols();
+    let n = b.cols();
+    if n == 0 || panel.rows() == 0 {
+        return;
+    }
+    for kb in (0..k).step_by(KC) {
+        let ke = (kb + KC).min(k);
+        for pr in 0..panel.rows() {
+            let src = match idx {
+                Some(ix) => ix[first + pr],
+                None => first + pr,
+            };
+            let a_row = a.row(src);
+            let out_row = panel.row_mut(pr);
+            for p in kb..ke {
+                let av = a_row[p];
+                if av == 0.0 {
+                    continue;
+                }
+                let b_row = b.row(p);
+                for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+// ---- transposed matmul ----
+
+/// Parallel `a^T @ b` without materializing the transpose (panels over
+/// the output rows, i.e. the columns of `a`).
+pub fn t_matmul(a: MatRef<'_>, b: MatRef<'_>) -> Matrix {
+    t_matmul_with_threads(a, b, num_threads())
+}
+
+/// [`t_matmul`] with an explicit thread count.
+pub fn t_matmul_with_threads(a: MatRef<'_>, b: MatRef<'_>, threads: usize) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "t_matmul shape mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Matrix::zeros(k, n);
+    let t = effective_threads(threads, k, m * n);
+    par_row_panels(out.view_mut(), t, |first, mut panel| {
+        t_matmul_panel(a, None, b, first, &mut panel);
+    });
+    out
+}
+
+/// Output rows `[first, first + panel.rows())` of `A[idx]^T @ B`. The
+/// reduction walks rows `r` in ascending order regardless of panel
+/// boundaries — bitwise equal to the scalar kernel.
+fn t_matmul_panel(
+    a: MatRef<'_>,
+    a_idx: Option<&[usize]>,
+    b: MatRef<'_>,
+    first: usize,
+    panel: &mut MatMut<'_>,
+) {
+    let n = b.cols();
+    if n == 0 || panel.rows() == 0 {
+        return;
+    }
+    let red = a_idx.map_or(a.rows(), <[usize]>::len);
+    debug_assert_eq!(b.rows(), red);
+    for r in 0..red {
+        let src = match a_idx {
+            Some(ix) => ix[r],
+            None => r,
+        };
+        let a_row = a.row(src);
+        let b_row = b.row(r);
+        for pr in 0..panel.rows() {
+            let av = a_row[first + pr];
+            if av == 0.0 {
+                continue;
+            }
+            let out_row = panel.row_mut(pr);
+            for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+// ---- row scaling ----
+
+/// Parallel `diag(w) @ a` (scale row `r` by `w[r]`).
+pub fn scale_rows(a: MatRef<'_>, w: &[f32]) -> Matrix {
+    scale_rows_with_threads(a, w, num_threads())
+}
+
+/// [`scale_rows`] with an explicit thread count.
+pub fn scale_rows_with_threads(a: MatRef<'_>, w: &[f32], threads: usize) -> Matrix {
+    assert_eq!(w.len(), a.rows(), "row-weight length mismatch");
+    let mut out = Matrix::zeros(a.rows(), a.cols());
+    let t = effective_threads(threads, a.rows(), a.cols());
+    par_row_panels(out.view_mut(), t, |first, mut panel| {
+        for pr in 0..panel.rows() {
+            let i = first + pr;
+            let wv = w[i];
+            for (o, &av) in panel.row_mut(pr).iter_mut().zip(a.row(i)) {
+                *o = av * wv;
+            }
+        }
+    });
+    out
+}
+
+// ---- masked gradient ----
+
+/// Masked gradient sum `X^T (mask .* (X beta - Y))`, blocked + parallel.
+/// Shapes are validated up front with descriptive errors.
+pub fn gradient(x: MatRef<'_>, y: MatRef<'_>, beta: MatRef<'_>, mask: &[f32]) -> Result<Matrix> {
+    gradient_with_threads(x, y, beta, mask, num_threads())
+}
+
+/// [`gradient`] with an explicit thread count.
+pub fn gradient_with_threads(
+    x: MatRef<'_>,
+    y: MatRef<'_>,
+    beta: MatRef<'_>,
+    mask: &[f32],
+    threads: usize,
+) -> Result<Matrix> {
+    ensure!(
+        y.rows() == x.rows(),
+        "gradient: y has {} rows but x has {}",
+        y.rows(),
+        x.rows()
+    );
+    grad_impl(x, y, None, beta, mask, threads)
+}
+
+/// Masked gradient over the row-index set `idx` of `x`/`y`, **without
+/// materializing the gathered slice**: the paper's per-client
+/// `X_j^T (mask .* (X_j beta - Y_j))` where `X_j = X[idx]`, read in
+/// place from the full matrices.
+pub fn gather_gradient(
+    x: MatRef<'_>,
+    y: MatRef<'_>,
+    idx: &[usize],
+    beta: MatRef<'_>,
+    mask: &[f32],
+) -> Result<Matrix> {
+    gather_gradient_with_threads(x, y, idx, beta, mask, num_threads())
+}
+
+/// [`gather_gradient`] with an explicit thread count.
+pub fn gather_gradient_with_threads(
+    x: MatRef<'_>,
+    y: MatRef<'_>,
+    idx: &[usize],
+    beta: MatRef<'_>,
+    mask: &[f32],
+    threads: usize,
+) -> Result<Matrix> {
+    check_indices(idx, x.rows(), "gather_gradient(x)")?;
+    check_indices(idx, y.rows(), "gather_gradient(y)")?;
+    grad_impl(x, y, Some(idx), beta, mask, threads)
+}
+
+fn grad_impl(
+    x: MatRef<'_>,
+    y: MatRef<'_>,
+    idx: Option<&[usize]>,
+    beta: MatRef<'_>,
+    mask: &[f32],
+    threads: usize,
+) -> Result<Matrix> {
+    let rows = idx.map_or(x.rows(), <[usize]>::len);
+    check_gradient_shapes(x.shape(), y.shape(), beta.shape(), mask.len(), rows)?;
+    let (q, c) = (x.cols(), beta.cols());
+
+    // Stage 1: err = mask .* (X[idx] @ beta - Y[idx]), shape (rows, c).
+    // Rows with a zero mask stay zero and are skipped outright.
+    let mut err = Matrix::zeros(rows, c);
+    let t1 = effective_threads(threads, rows, q * c);
+    par_row_panels(err.view_mut(), t1, |first, mut panel| {
+        for pr in 0..panel.rows() {
+            let i = first + pr;
+            let w = mask[i];
+            if w == 0.0 {
+                continue;
+            }
+            let src = match idx {
+                Some(ix) => ix[i],
+                None => i,
+            };
+            let x_row = x.row(src);
+            let out_row = panel.row_mut(pr);
+            for (p, &av) in x_row.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                for (o, &bv) in out_row.iter_mut().zip(beta.row(p)) {
+                    *o += av * bv;
+                }
+            }
+            for (o, &yv) in out_row.iter_mut().zip(y.row(src)) {
+                *o = (*o - yv) * w;
+            }
+        }
+    });
+
+    // Stage 2: grad = X[idx]^T @ err, shape (q, c).
+    let mut out = Matrix::zeros(q, c);
+    let t2 = effective_threads(threads, q, rows * c);
+    let err_ref = err.view();
+    par_row_panels(out.view_mut(), t2, |first, mut panel| {
+        t_matmul_panel(x, idx, err_ref, first, &mut panel);
+    });
+    Ok(out)
+}
+
+// ---- parity encoding ----
+
+/// Parity encode `G @ (w .* M)` (the §3.2 client encoding with the §3.4
+/// weights folded in).
+pub fn encode(g: MatRef<'_>, w: &[f32], m: MatRef<'_>) -> Result<Matrix> {
+    encode_impl(g, w, m, None, num_threads())
+}
+
+/// Parity encode over a row-index set: `G @ (w .* M[idx])` without
+/// materializing the gathered slice.
+pub fn gather_encode(g: MatRef<'_>, w: &[f32], m: MatRef<'_>, idx: &[usize]) -> Result<Matrix> {
+    encode_impl(g, w, m, Some(idx), num_threads())
+}
+
+fn encode_impl(
+    g: MatRef<'_>,
+    w: &[f32],
+    m: MatRef<'_>,
+    idx: Option<&[usize]>,
+    threads: usize,
+) -> Result<Matrix> {
+    let l = idx.map_or(m.rows(), <[usize]>::len);
+    ensure!(
+        g.cols() == l,
+        "encode: generator has {} columns but the slice has {l} rows",
+        g.cols()
+    );
+    ensure!(
+        w.len() == l,
+        "encode: weight vector covers {} rows but the slice has {l}",
+        w.len()
+    );
+    if let Some(ix) = idx {
+        check_indices(ix, m.rows(), "encode")?;
+    }
+    let (u, n) = (g.rows(), m.cols());
+    let mut out = Matrix::zeros(u, n);
+    let t = effective_threads(threads, u, l * n);
+    par_row_panels(out.view_mut(), t, |first, mut panel| {
+        for pr in 0..panel.rows() {
+            let g_row = g.row(first + pr);
+            let out_row = panel.row_mut(pr);
+            for (kk, (&gv, &wv)) in g_row.iter().zip(w).enumerate() {
+                let av = gv * wv;
+                if av == 0.0 {
+                    continue;
+                }
+                let src = match idx {
+                    Some(ix) => ix[kk],
+                    None => kk,
+                };
+                for (o, &mv) in out_row.iter_mut().zip(m.row(src)) {
+                    *o += av * mv;
+                }
+            }
+        }
+    });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::linalg::{gradient_naive, matmul_naive, t_matmul_naive};
+    use crate::mathx::rng::Rng;
+
+    #[test]
+    fn matmul_matches_naive_any_thread_count() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(37, 65, 0.0, 1.0, &mut rng); // not multiples of KC
+        let b = Matrix::randn(65, 9, 0.0, 1.0, &mut rng);
+        let want = matmul_naive(a.view(), b.view());
+        for t in [1, 2, 3, 8] {
+            assert_eq!(matmul_with_threads(a.view(), b.view(), t), want);
+        }
+    }
+
+    #[test]
+    fn t_matmul_matches_naive_any_thread_count() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(41, 17, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(41, 6, 0.0, 1.0, &mut rng);
+        let want = t_matmul_naive(a.view(), b.view());
+        for t in [1, 2, 5] {
+            assert_eq!(t_matmul_with_threads(a.view(), b.view(), t), want);
+        }
+    }
+
+    #[test]
+    fn gather_matmul_equals_select_then_multiply() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(20, 8, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(8, 5, 0.0, 1.0, &mut rng);
+        let idx = vec![19, 0, 7, 7, 3];
+        let got = gather_matmul_with_threads(a.view(), &idx, b.view(), 3).unwrap();
+        let want = a.select_rows(&idx).matmul(&b);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn gradient_matches_naive_oracle() {
+        let mut rng = Rng::new(4);
+        let x = Matrix::randn(33, 12, 0.0, 1.0, &mut rng);
+        let y = Matrix::randn(33, 4, 0.0, 1.0, &mut rng);
+        let beta = Matrix::randn(12, 4, 0.0, 1.0, &mut rng);
+        let mask: Vec<f32> = (0..33).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+        let want = gradient_naive(&x, &y, &beta, &mask).unwrap();
+        for t in [1, 2, 4] {
+            let got = gradient_with_threads(x.view(), y.view(), beta.view(), &mask, t).unwrap();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn gather_gradient_equals_materialized_gradient() {
+        let mut rng = Rng::new(5);
+        let x = Matrix::randn(50, 16, 0.0, 1.0, &mut rng);
+        let y = Matrix::randn(50, 3, 0.0, 1.0, &mut rng);
+        let beta = Matrix::randn(16, 3, 0.0, 1.0, &mut rng);
+        let idx = vec![42, 1, 13, 13, 0, 49, 8];
+        let mask = vec![1.0, 0.0, 0.5, 1.0, 1.0, 0.0, 2.0];
+        let want =
+            gradient_naive(&x.select_rows(&idx), &y.select_rows(&idx), &beta, &mask).unwrap();
+        for t in [1, 2, 4] {
+            let got =
+                gather_gradient_with_threads(x.view(), y.view(), &idx, beta.view(), &mask, t)
+                    .unwrap();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn encode_matches_scale_then_matmul() {
+        let mut rng = Rng::new(6);
+        let g = Matrix::randn(4, 10, 0.0, 1.0, &mut rng);
+        let m = Matrix::randn(10, 7, 0.0, 1.0, &mut rng);
+        let w: Vec<f32> = (0..10).map(|i| if i % 4 == 0 { 0.0 } else { 0.7 }).collect();
+        let got = encode(g.view(), &w, m.view()).unwrap();
+        let want = matmul_naive(g.view(), m.scale_rows(&w).view());
+        assert!(got.max_abs_diff(&want) < 1e-5);
+        // Gather variant over a shuffled identity agrees with itself.
+        let idx: Vec<usize> = (0..10).collect();
+        assert_eq!(gather_encode(g.view(), &w, m.view(), &idx).unwrap(), got);
+    }
+
+    #[test]
+    fn kernels_reject_bad_inputs_descriptively() {
+        let a = Matrix::zeros(4, 3);
+        let b = Matrix::zeros(3, 2);
+        let err = gather_matmul(a.view(), &[4], b.view()).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let y = Matrix::zeros(2, 2);
+        let err2 = gather_gradient(a.view(), y.view(), &[0, 3], b.view(), &[1.0, 1.0])
+            .unwrap_err();
+        assert!(err2.to_string().contains("gather_gradient(y)"), "{err2}");
+        let err3 = gradient(a.view(), Matrix::zeros(4, 2).view(), b.view(), &[1.0; 3])
+            .unwrap_err();
+        assert!(err3.to_string().contains("mask"), "{err3}");
+        let err4 = encode(Matrix::zeros(2, 5).view(), &[1.0; 4], a.view()).unwrap_err();
+        assert!(err4.to_string().contains("generator"), "{err4}");
+    }
+
+    #[test]
+    fn degenerate_shapes_are_fine() {
+        let e = Matrix::zeros(0, 5);
+        let b = Matrix::zeros(5, 4);
+        assert_eq!(matmul(e.view(), b.view()).shape(), (0, 4));
+        assert_eq!(t_matmul(e.view(), Matrix::zeros(0, 3).view()).shape(), (5, 3));
+        // Empty gather: a valid (q, c) zero gradient, no work done.
+        let beta = Matrix::zeros(4, 2);
+        let g = gather_gradient(b.view(), Matrix::zeros(5, 2).view(), &[], beta.view(), &[])
+            .unwrap();
+        assert_eq!(g.shape(), (4, 2));
+        assert!(g.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn panel_split_covers_every_row_once() {
+        let mut m = Matrix::zeros(11, 3);
+        par_row_panels(m.view_mut(), 4, |first, mut panel| {
+            for pr in 0..panel.rows() {
+                let i = first + pr;
+                for v in panel.row_mut(pr) {
+                    *v += (i + 1) as f32;
+                }
+            }
+        });
+        for r in 0..11 {
+            assert!(m.row(r).iter().all(|&v| v == (r + 1) as f32), "row {r}: {:?}", m.row(r));
+        }
+    }
+}

@@ -1,26 +1,47 @@
 //! The compute interface the FL trainer codes against, and its pure-rust
 //! reference implementation.
 //!
-//! [`ComputeBackend`] has exactly one method per AOT artifact; the
-//! [`crate::runtime::xla::XlaBackend`] executes the HLO artifacts via
-//! PJRT, while [`NativeBackend`] evaluates the same math with
-//! [`crate::mathx::linalg`]. Integration tests drive both and require
+//! [`ComputeBackend`] has one method per AOT artifact plus the
+//! prepared-operand hot path; the XLA backend (behind the `xla` cargo
+//! feature) executes the HLO artifacts via PJRT, while [`NativeBackend`]
+//! evaluates the same math with the cache-blocked parallel kernels in
+//! [`crate::mathx::par`]. Integration tests drive both and require
 //! agreement, which pins the artifact ABI end-to-end.
+//!
+//! Operands come in three prepared forms:
+//!
+//! * [`PreparedMatrix::Native`] — a plain host matrix;
+//! * [`PreparedMatrix::Gather`] — a **zero-copy row-index view** into a
+//!   shared host matrix (`Arc`), the native hot path for client slices:
+//!   the gradient reads straight out of the full embedded training set;
+//! * `PreparedMatrix::Xla` — a pre-built device literal (the §Perf
+//!   "literal caching" path), only with the `xla` feature.
+
+use std::borrow::Cow;
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::mathx::linalg::{gradient_ref, Matrix};
+use crate::mathx::par;
 
 /// A backend-resident input operand.
 ///
 /// The training hot loop re-feeds the *same* client slices, parity data,
-/// masks and test chunks every epoch; preparing them once (for the XLA
-/// backend: converting to a `Literal` up front) removes the per-step
-/// host-to-literal copy — the §Perf "literal caching" optimization.
+/// masks and test chunks every epoch; preparing them once removes all
+/// per-step conversion work. For the XLA backend that means building the
+/// input `Literal` up front; for the native backend a gather is prepared
+/// as source + indices and never materialized at all.
 pub enum PreparedMatrix {
     /// Plain host matrix (native backend, and the fallback path).
     Native(Matrix),
+    /// Zero-copy row gather `source[idx]` (native backend).
+    Gather {
+        source: Arc<Matrix>,
+        idx: Arc<Vec<usize>>,
+    },
     /// Pre-built XLA literal plus its logical shape.
+    #[cfg(feature = "xla")]
     Xla(::xla::Literal, (usize, usize)),
 }
 
@@ -29,14 +50,32 @@ impl PreparedMatrix {
     pub fn shape(&self) -> (usize, usize) {
         match self {
             PreparedMatrix::Native(m) => m.shape(),
+            PreparedMatrix::Gather { source, idx } => (idx.len(), source.cols()),
+            #[cfg(feature = "xla")]
             PreparedMatrix::Xla(_, s) => *s,
         }
     }
 
-    /// Borrow the host matrix (errors for device-prepared operands).
+    /// Borrow the dense host matrix (errors for gathers and device
+    /// literals — use [`PreparedMatrix::as_dense`] when a copy is ok).
     pub fn as_native(&self) -> Result<&Matrix> {
         match self {
             PreparedMatrix::Native(m) => Ok(m),
+            PreparedMatrix::Gather { .. } => {
+                bail!("operand is a row-gather view; materialize it with as_dense()")
+            }
+            #[cfg(feature = "xla")]
+            PreparedMatrix::Xla(..) => bail!("operand was prepared for the XLA backend"),
+        }
+    }
+
+    /// Dense host view: borrows `Native` operands, materializes `Gather`
+    /// operands, errors for device literals.
+    pub fn as_dense(&self) -> Result<Cow<'_, Matrix>> {
+        match self {
+            PreparedMatrix::Native(m) => Ok(Cow::Borrowed(m)),
+            PreparedMatrix::Gather { source, idx } => Ok(Cow::Owned(source.select_rows(idx))),
+            #[cfg(feature = "xla")]
             PreparedMatrix::Xla(..) => bail!("operand was prepared for the XLA backend"),
         }
     }
@@ -79,6 +118,52 @@ pub trait ComputeBackend {
         Ok(PreparedMatrix::Native(Matrix::from_vec(v.len(), 1, v.to_vec())))
     }
 
+    /// Prepare the row gather `source[idx]` for repeated use. The native
+    /// backend keeps it as a zero-copy view; backends with device-resident
+    /// operands (XLA) materialize once here — preserving the literal-
+    /// caching optimization while the host side stops copying.
+    fn prepare_gather(&self, source: &Arc<Matrix>, idx: &[usize]) -> Result<PreparedMatrix> {
+        par::check_indices(idx, source.rows(), "prepare_gather")?;
+        self.prepare(&source.select_rows(idx))
+    }
+
+    /// Prepare `source[idx]` as a sequence of `chunk`-row operands for the
+    /// streaming predict path. The default pads the tail chunk with zero
+    /// rows (fixed artifact shapes); the native backend returns unpadded
+    /// zero-copy gathers.
+    fn prepare_gather_chunks(
+        &self,
+        source: &Arc<Matrix>,
+        idx: &[usize],
+        chunk: usize,
+    ) -> Result<Vec<PreparedMatrix>> {
+        ensure!(chunk > 0, "chunk size must be positive");
+        par::check_indices(idx, source.rows(), "prepare_gather_chunks")?;
+        let cols = source.cols();
+        let mut out = Vec::with_capacity(idx.len().div_ceil(chunk));
+        for group in idx.chunks(chunk) {
+            let mut padded = Matrix::zeros(chunk, cols);
+            for (r, &gi) in group.iter().enumerate() {
+                padded.row_mut(r).copy_from_slice(source.row(gi));
+            }
+            out.push(self.prepare(&padded)?);
+        }
+        Ok(out)
+    }
+
+    /// Parity encoding over a row-index set, `G @ (w * M[idx])`. The
+    /// native backend reads the rows in place; the default materializes.
+    fn encode_gather(
+        &self,
+        g: &Matrix,
+        w: &[f32],
+        source: &Matrix,
+        idx: &[usize],
+    ) -> Result<Matrix> {
+        par::check_indices(idx, source.rows(), "encode_gather")?;
+        self.encode(g, w, &source.select_rows(idx))
+    }
+
     /// [`ComputeBackend::grad_client`] over prepared operands (`beta` is
     /// also prepared — once per step, not once per call).
     fn grad_client_p(
@@ -89,7 +174,7 @@ pub trait ComputeBackend {
         mask: &PreparedMatrix,
     ) -> Result<Matrix> {
         let m = mask.as_native()?;
-        self.grad_client(x.as_native()?, y.as_native()?, beta.as_native()?, m.data())
+        self.grad_client(&x.as_dense()?, &y.as_dense()?, beta.as_native()?, m.data())
     }
 
     /// [`ComputeBackend::grad_server`] over prepared operands.
@@ -101,12 +186,12 @@ pub trait ComputeBackend {
         mask: &PreparedMatrix,
     ) -> Result<Matrix> {
         let m = mask.as_native()?;
-        self.grad_server(x.as_native()?, y.as_native()?, beta.as_native()?, m.data())
+        self.grad_server(&x.as_dense()?, &y.as_dense()?, beta.as_native()?, m.data())
     }
 
     /// [`ComputeBackend::predict_chunk`] over a prepared chunk.
     fn predict_chunk_p(&self, x: &PreparedMatrix, beta: &PreparedMatrix) -> Result<Matrix> {
-        self.predict_chunk(x.as_native()?, beta.as_native()?)
+        self.predict_chunk(&x.as_dense()?, beta.as_native()?)
     }
 
     /// RFF-embed an arbitrary number of rows by streaming `chunk`-row
@@ -155,18 +240,19 @@ pub trait ComputeBackend {
     }
 }
 
-/// Pure-rust implementation over [`crate::mathx::linalg`]. Exact same math
+/// Pure-rust implementation over [`crate::mathx::par`]. Exact same math
 /// as the artifacts; used as the test oracle and for artifact-free runs
-/// (`use_xla = false`).
+/// (`use_xla = false`). Prepared gathers stay zero-copy: the gradient,
+/// predict and encode paths read rows of the shared source in place.
 pub struct NativeBackend;
 
 impl ComputeBackend for NativeBackend {
     fn grad_client(&self, x: &Matrix, y: &Matrix, beta: &Matrix, mask: &[f32]) -> Result<Matrix> {
-        Ok(gradient_ref(x, y, beta, mask))
+        gradient_ref(x, y, beta, mask)
     }
 
     fn grad_server(&self, x: &Matrix, y: &Matrix, beta: &Matrix, mask: &[f32]) -> Result<Matrix> {
-        Ok(gradient_ref(x, y, beta, mask))
+        gradient_ref(x, y, beta, mask)
     }
 
     fn rff_chunk(&self, x: &Matrix, omega: &Matrix, delta: &Matrix) -> Result<Matrix> {
@@ -184,7 +270,7 @@ impl ComputeBackend for NativeBackend {
     }
 
     fn encode(&self, g: &Matrix, w: &[f32], m: &Matrix) -> Result<Matrix> {
-        Ok(g.matmul(&m.scale_rows(w)))
+        par::encode(g.view(), w, m.view())
     }
 
     fn update(&self, beta: &Matrix, grad: &Matrix, lr: f32, lam: f32) -> Result<Matrix> {
@@ -198,6 +284,110 @@ impl ComputeBackend for NativeBackend {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    // ---- zero-copy prepared-operand overrides ----
+
+    fn prepare_gather(&self, source: &Arc<Matrix>, idx: &[usize]) -> Result<PreparedMatrix> {
+        par::check_indices(idx, source.rows(), "prepare_gather")?;
+        Ok(PreparedMatrix::Gather { source: Arc::clone(source), idx: Arc::new(idx.to_vec()) })
+    }
+
+    fn prepare_gather_chunks(
+        &self,
+        source: &Arc<Matrix>,
+        idx: &[usize],
+        chunk: usize,
+    ) -> Result<Vec<PreparedMatrix>> {
+        ensure!(chunk > 0, "chunk size must be positive");
+        par::check_indices(idx, source.rows(), "prepare_gather_chunks")?;
+        Ok(idx
+            .chunks(chunk)
+            .map(|group| PreparedMatrix::Gather {
+                source: Arc::clone(source),
+                idx: Arc::new(group.to_vec()),
+            })
+            .collect())
+    }
+
+    fn encode_gather(
+        &self,
+        g: &Matrix,
+        w: &[f32],
+        source: &Matrix,
+        idx: &[usize],
+    ) -> Result<Matrix> {
+        par::gather_encode(g.view(), w, source.view(), idx)
+    }
+
+    fn grad_client_p(
+        &self,
+        x: &PreparedMatrix,
+        y: &PreparedMatrix,
+        beta: &PreparedMatrix,
+        mask: &PreparedMatrix,
+    ) -> Result<Matrix> {
+        let beta_m = beta.as_native()?;
+        let mask_m = mask.as_native()?;
+        if let (
+            PreparedMatrix::Gather { source: xs, idx: xi },
+            PreparedMatrix::Gather { source: ys, idx: yi },
+        ) = (x, y)
+        {
+            ensure!(xi == yi, "grad: x and y were prepared with different row-index sets");
+            return par::gather_gradient(xs.view(), ys.view(), xi, beta_m.view(), mask_m.data());
+        }
+        self.grad_client(&x.as_dense()?, &y.as_dense()?, beta_m, mask_m.data())
+    }
+
+    fn grad_server_p(
+        &self,
+        x: &PreparedMatrix,
+        y: &PreparedMatrix,
+        beta: &PreparedMatrix,
+        mask: &PreparedMatrix,
+    ) -> Result<Matrix> {
+        // Parity data is dense (it is synthesized, not sliced), but the
+        // gather path is honored for symmetry.
+        self.grad_client_p(x, y, beta, mask)
+    }
+
+    fn predict_chunk_p(&self, x: &PreparedMatrix, beta: &PreparedMatrix) -> Result<Matrix> {
+        let beta_m = beta.as_native()?;
+        if let PreparedMatrix::Gather { source, idx } = x {
+            return par::gather_matmul(source.view(), idx, beta_m.view());
+        }
+        self.predict_chunk(x.as_native()?, beta_m)
+    }
+
+    fn rff_embed_all(
+        &self,
+        x: &Matrix,
+        omega: &Matrix,
+        delta: &Matrix,
+        _chunk: usize,
+    ) -> Result<Matrix> {
+        // No fixed artifact shape on the native path: embed the whole
+        // matrix in one blocked parallel pass, no chunk padding copies.
+        let q = omega.cols();
+        ensure!(delta.shape() == (1, q), "delta shape {:?}", delta.shape());
+        ensure!(
+            x.cols() == omega.rows(),
+            "rff: x has {} columns but omega has {} rows",
+            x.cols(),
+            omega.rows()
+        );
+        let mut out = par::matmul(x.view(), omega.view());
+        let scale = (2.0f32 / q as f32).sqrt();
+        let delta_row = delta.row(0);
+        par::par_row_panels(out.view_mut(), par::num_threads(), |_, mut panel| {
+            for pr in 0..panel.rows() {
+                for (v, &dv) in panel.row_mut(pr).iter_mut().zip(delta_row) {
+                    *v = scale * (*v + dv).cos();
+                }
+            }
+        });
+        Ok(out)
     }
 }
 
@@ -257,6 +447,76 @@ mod tests {
         let m = Matrix::randn(5, 2, 0.0, 1.0, &mut rng);
         let w = vec![1.0, 0.5, 0.0, 2.0, 1.0];
         let got = NativeBackend.encode(&g, &w, &m).unwrap();
-        assert!(got.max_abs_diff(&g.matmul(&m.scale_rows(&w))) < 1e-6);
+        assert!(got.max_abs_diff(&g.matmul(&m.scale_rows(&w))) < 1e-5);
+    }
+
+    #[test]
+    fn prepared_gather_gradient_matches_dense_path() {
+        let mut rng = Rng::new(5);
+        let nb = NativeBackend;
+        let source = Arc::new(Matrix::randn(40, 6, 0.0, 1.0, &mut rng));
+        let labels = Arc::new(Matrix::randn(40, 3, 0.0, 1.0, &mut rng));
+        let beta = Matrix::randn(6, 3, 0.0, 1.0, &mut rng);
+        let idx = vec![5usize, 17, 0, 39, 22];
+        let mask = vec![1.0f32, 0.0, 1.0, 1.0, 0.5];
+
+        let px = nb.prepare_gather(&source, &idx).unwrap();
+        let py = nb.prepare_gather(&labels, &idx).unwrap();
+        assert_eq!(px.shape(), (5, 6));
+        let pb = nb.prepare(&beta).unwrap();
+        let pm = nb.prepare_col(&mask).unwrap();
+        let got = nb.grad_client_p(&px, &py, &pb, &pm).unwrap();
+
+        let want = nb
+            .grad_client(&source.select_rows(&idx), &labels.select_rows(&idx), &beta, &mask)
+            .unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn prepared_gather_chunks_predict_unpadded() {
+        let mut rng = Rng::new(6);
+        let nb = NativeBackend;
+        let source = Arc::new(Matrix::randn(11, 4, 0.0, 1.0, &mut rng));
+        let beta = Matrix::randn(4, 2, 0.0, 1.0, &mut rng);
+        let idx: Vec<usize> = (0..11).collect();
+        let chunks = nb.prepare_gather_chunks(&source, &idx, 4).unwrap();
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[2].shape(), (3, 4)); // ragged tail, no padding
+        let pb = nb.prepare(&beta).unwrap();
+        let mut rows = 0;
+        let direct = source.matmul(&beta);
+        for pc in &chunks {
+            let logits = nb.predict_chunk_p(pc, &pb).unwrap();
+            for r in 0..logits.rows() {
+                assert_eq!(logits.row(r), direct.row(rows + r));
+            }
+            rows += logits.rows();
+        }
+        assert_eq!(rows, 11);
+    }
+
+    #[test]
+    fn encode_gather_matches_materialized() {
+        let mut rng = Rng::new(7);
+        let nb = NativeBackend;
+        let source = Matrix::randn(20, 5, 0.0, 1.0, &mut rng);
+        let idx = vec![3usize, 19, 3, 0];
+        let g = Matrix::randn(6, 4, 0.0, 1.0, &mut rng);
+        let w = vec![1.0f32, 0.5, 0.0, 2.0];
+        let got = nb.encode_gather(&g, &w, &source, &idx).unwrap();
+        let want = nb.encode(&g, &w, &source.select_rows(&idx)).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn gather_shape_and_errors() {
+        let nb = NativeBackend;
+        let source = Arc::new(Matrix::zeros(3, 2));
+        assert!(nb.prepare_gather(&source, &[3]).is_err());
+        let p = nb.prepare_gather(&source, &[0, 2]).unwrap();
+        assert_eq!(p.shape(), (2, 2));
+        assert!(p.as_native().is_err());
+        assert_eq!(p.as_dense().unwrap().shape(), (2, 2));
     }
 }

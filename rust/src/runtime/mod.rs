@@ -1,18 +1,23 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the training hot path.
+//! Runtime layer: the [`backend::ComputeBackend`] trait the trainer codes
+//! against, its zero-copy native implementation, and (behind the `xla`
+//! cargo feature) the PJRT runtime that loads the AOT-compiled HLO-text
+//! artifacts produced by `python/compile/aot.py`.
 //!
 //! * [`artifact`] — `artifacts/manifest.json` parsing + shape validation.
-//! * [`backend`] — the [`backend::ComputeBackend`] trait the trainer codes
-//!   against, plus the pure-rust [`backend::NativeBackend`] oracle.
-//! * [`xla`] — [`xla::XlaBackend`]: `PjRtClient::cpu()` →
+//! * [`backend`] — the [`backend::ComputeBackend`] trait, the prepared-
+//!   operand hot path (zero-copy row gathers on native, cached literals
+//!   on XLA), and the pure-rust [`backend::NativeBackend`] oracle.
+//! * `xla` (feature `xla`) — `XlaBackend`: `PjRtClient::cpu()` →
 //!   `HloModuleProto::from_text_file` → `compile` → `execute`.
 //!
 //! Python never runs here: the artifacts are self-contained HLO.
 
 pub mod artifact;
 pub mod backend;
+#[cfg(feature = "xla")]
 pub mod xla;
 
 pub use artifact::{ArtifactMeta, Manifest, ProfileArtifacts};
 pub use backend::{ComputeBackend, NativeBackend};
+#[cfg(feature = "xla")]
 pub use xla::XlaBackend;

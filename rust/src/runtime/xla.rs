@@ -49,7 +49,11 @@ impl XlaBackend {
                 LoadedExe { exe, inputs: meta.inputs.clone(), output: meta.output.clone() },
             );
         }
-        crate::log_info!("XlaBackend: compiled {} artifacts (profile {})", exes.len(), profile.name);
+        crate::log_info!(
+            "XlaBackend: compiled {} artifacts (profile {})",
+            exes.len(),
+            profile.name
+        );
         Ok(XlaBackend { _client: client, exes, profile: profile.name.to_string() })
     }
 
@@ -88,16 +92,16 @@ impl XlaBackend {
         let beta_owned;
         let beta_lit: &::xla::Literal = match beta {
             PreparedMatrix::Xla(lit, _) => lit,
-            PreparedMatrix::Native(m) => {
-                beta_owned = Self::matrix_literal(m)?;
+            other => {
+                beta_owned = Self::matrix_literal(&other.as_dense()?)?;
                 &beta_owned
             }
         };
         let mut owned: Vec<Option<::xla::Literal>> = Vec::with_capacity(ops.len());
         for op in ops {
             owned.push(match op {
-                PreparedMatrix::Native(m) => Some(Self::matrix_literal(m)?),
                 PreparedMatrix::Xla(..) => None,
+                host => Some(Self::matrix_literal(&host.as_dense()?)?),
             });
         }
         // Pass 2: assemble the input list in ABI order, checking shapes.
@@ -116,8 +120,8 @@ impl XlaBackend {
             );
             match (op, &owned[k]) {
                 (PreparedMatrix::Xla(lit, _), _) => literals.push(lit),
-                (PreparedMatrix::Native(_), Some(lit)) => literals.push(lit),
-                _ => unreachable!("owned literal missing for native operand"),
+                (_, Some(lit)) => literals.push(lit),
+                _ => unreachable!("owned literal missing for host operand"),
             }
             k += 1;
         }

@@ -32,7 +32,7 @@ fn coded_plus_uncoded_equals_full_gradient_in_expectation() {
     let full: Matrix = {
         let mut acc = Matrix::zeros(q, c);
         for j in 0..n {
-            acc.axpy_inplace(1.0, &gradient_ref(&xs[j], &ys[j], &beta, &vec![1.0; l]));
+            acc.axpy_inplace(1.0, &gradient_ref(&xs[j], &ys[j], &beta, &vec![1.0; l]).unwrap());
         }
         acc
     };
@@ -50,7 +50,7 @@ fn coded_plus_uncoded_equals_full_gradient_in_expectation() {
                 encode_client_slice(&nb, &xs[j], &ys[j], &w, u, u, &mut rng).unwrap();
             comp.add(&xc, &yc);
         }
-        let mut g = gradient_ref(&comp.x, &comp.y, &beta, &comp.mask());
+        let mut g = gradient_ref(&comp.x, &comp.y, &beta, &comp.mask()).unwrap();
         // Sample arrivals and add uncoded contributions.
         for j in 0..n {
             if rng.next_f64() < p_return[j] {
@@ -58,7 +58,7 @@ fn coded_plus_uncoded_equals_full_gradient_in_expectation() {
                 for &k in &processed[j] {
                     mask[k] = 1.0;
                 }
-                g.axpy_inplace(1.0, &gradient_ref(&xs[j], &ys[j], &beta, &mask));
+                g.axpy_inplace(1.0, &gradient_ref(&xs[j], &ys[j], &beta, &mask).unwrap());
             }
         }
         acc.axpy_inplace(1.0 / trials as f32, &g);
@@ -86,20 +86,20 @@ fn dropping_the_weights_breaks_unbiasedness() {
     let p_return = 0.5;
     let processed: Vec<usize> = (0..l).collect();
 
-    let full = gradient_ref(&x, &y, &beta, &vec![1.0; l]);
+    let full = gradient_ref(&x, &y, &beta, &vec![1.0; l]).unwrap();
     let nb = NativeBackend;
     let trials = 800;
     let mut acc = Matrix::zeros(q, c);
     for _ in 0..trials {
         let w = vec![1.0f32; l]; // WRONG: identity weights
         let (xc, yc) = encode_client_slice(&nb, &x, &y, &w, u, u, &mut rng).unwrap();
-        let mut g = gradient_ref(&xc, &yc, &beta, &vec![1.0; u]);
+        let mut g = gradient_ref(&xc, &yc, &beta, &vec![1.0; u]).unwrap();
         if rng.next_f64() < p_return {
             let mut mask = vec![0.0f32; l];
             for &k in &processed {
                 mask[k] = 1.0;
             }
-            g.axpy_inplace(1.0, &gradient_ref(&x, &y, &beta, &mask));
+            g.axpy_inplace(1.0, &gradient_ref(&x, &y, &beta, &mask).unwrap());
         }
         acc.axpy_inplace(1.0 / trials as f32, &g);
     }

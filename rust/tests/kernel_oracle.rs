@@ -1,0 +1,181 @@
+//! Property tests pinning the cache-blocked parallel kernels
+//! (`mathx::par`) against the seed's scalar oracles (`*_naive`) over
+//! adversarial shapes: empty matrices, single rows/columns, tall-skinny,
+//! dimensions that are not a multiple of the k-block, and 1-thread vs
+//! N-thread agreement (which must be *bitwise exact* — the panel split
+//! never changes accumulation order).
+
+use codedfedl::mathx::linalg::{gradient_naive, matmul_naive, t_matmul_naive, Matrix};
+use codedfedl::mathx::par;
+use codedfedl::testx::{check, Gen};
+
+/// Adversarial dimension pool: empty, tiny, around the KC=256 block edge,
+/// and tall/skinny mixes.
+const DIMS: [usize; 9] = [0, 1, 2, 3, 7, 64, 255, 256, 257];
+const SMALL_DIMS: [usize; 5] = [0, 1, 2, 5, 9];
+const THREADS: [usize; 4] = [1, 2, 3, 8];
+
+fn rand_matrix(g: &mut Gen, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_vec(rows, cols, g.vec_normal_f32(rows * cols, 1.0))
+}
+
+/// Random mask with a healthy share of exact zeros (exercises the
+/// zero-skip fast path).
+fn rand_mask(g: &mut Gen, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| if g.bool_with(0.3) { 0.0 } else { g.f64_range(0.1, 2.0) as f32 })
+        .collect()
+}
+
+fn rand_indices(g: &mut Gen, len: usize, source_rows: usize) -> Vec<usize> {
+    (0..len).map(|_| g.usize_range(0, source_rows - 1)).collect()
+}
+
+#[test]
+fn matmul_matches_scalar_oracle_over_adversarial_shapes() {
+    check("par::matmul vs naive", 60, |g: &mut Gen| {
+        let m = *g.choose(&DIMS);
+        let k = *g.choose(&DIMS);
+        let n = *g.choose(&SMALL_DIMS);
+        let a = rand_matrix(g, m, k);
+        let b = rand_matrix(g, k, n);
+        let want = matmul_naive(a.view(), b.view());
+        let single = par::matmul_with_threads(a.view(), b.view(), 1);
+        assert_eq!(single.shape(), (m, n));
+        assert_eq!(single, want, "1-thread blocked != scalar at {m}x{k}x{n}");
+        for &t in &THREADS {
+            let got = par::matmul_with_threads(a.view(), b.view(), t);
+            assert_eq!(got, single, "{t}-thread result differs at {m}x{k}x{n}");
+        }
+    });
+}
+
+#[test]
+fn t_matmul_matches_scalar_oracle_over_adversarial_shapes() {
+    check("par::t_matmul vs naive", 60, |g: &mut Gen| {
+        let m = *g.choose(&DIMS);
+        let k = *g.choose(&DIMS);
+        let n = *g.choose(&SMALL_DIMS);
+        let a = rand_matrix(g, m, k);
+        let b = rand_matrix(g, m, n);
+        let want = t_matmul_naive(a.view(), b.view());
+        for &t in &THREADS {
+            let got = par::t_matmul_with_threads(a.view(), b.view(), t);
+            assert_eq!(got.shape(), (k, n));
+            assert_eq!(got, want, "{t}-thread t_matmul differs at {m}x{k}x{n}");
+        }
+    });
+}
+
+#[test]
+fn gradient_matches_scalar_oracle() {
+    check("par::gradient vs naive", 50, |g: &mut Gen| {
+        let m = *g.choose(&DIMS);
+        let q = *g.choose(&[1usize, 3, 17, 255, 257]);
+        let c = 1 + *g.choose(&SMALL_DIMS).min(&4);
+        let x = rand_matrix(g, m, q);
+        let y = rand_matrix(g, m, c);
+        let beta = rand_matrix(g, q, c);
+        let mask = rand_mask(g, m);
+        let want = gradient_naive(&x, &y, &beta, &mask).unwrap();
+        for &t in &THREADS {
+            let got =
+                par::gradient_with_threads(x.view(), y.view(), beta.view(), &mask, t).unwrap();
+            assert_eq!(got, want, "{t}-thread gradient differs at m={m} q={q} c={c}");
+        }
+    });
+}
+
+#[test]
+fn gather_gradient_matches_materialize_then_gradient() {
+    check("par::gather_gradient vs select_rows+naive", 50, |g: &mut Gen| {
+        let source_rows = 1 + *g.choose(&[0usize, 1, 6, 99, 300]);
+        let l = *g.choose(&[0usize, 1, 2, 37, 128]);
+        let q = *g.choose(&[1usize, 8, 65]);
+        let c = *g.choose(&[1usize, 3]);
+        let x = rand_matrix(g, source_rows, q);
+        let y = rand_matrix(g, source_rows, c);
+        let beta = rand_matrix(g, q, c);
+        let idx = rand_indices(g, l, source_rows);
+        let mask = rand_mask(g, l);
+        let want =
+            gradient_naive(&x.select_rows(&idx), &y.select_rows(&idx), &beta, &mask).unwrap();
+        for &t in &THREADS {
+            let got = par::gather_gradient_with_threads(
+                x.view(),
+                y.view(),
+                &idx,
+                beta.view(),
+                &mask,
+                t,
+            )
+            .unwrap();
+            assert_eq!(got.shape(), (q, c));
+            assert_eq!(got, want, "{t}-thread gather_gradient differs (l={l}, q={q})");
+        }
+    });
+}
+
+#[test]
+fn gather_matmul_matches_materialize_then_matmul() {
+    check("par::gather_matmul vs select_rows+matmul", 50, |g: &mut Gen| {
+        let source_rows = 1 + *g.choose(&[0usize, 2, 50, 257]);
+        let l = *g.choose(&[0usize, 1, 33, 256]);
+        let k = *g.choose(&[1usize, 7, 64]);
+        let n = *g.choose(&[1usize, 4]);
+        let a = rand_matrix(g, source_rows, k);
+        let b = rand_matrix(g, k, n);
+        let idx = rand_indices(g, l, source_rows);
+        let want = matmul_naive(a.select_rows(&idx).view(), b.view());
+        for &t in &THREADS {
+            let got = par::gather_matmul_with_threads(a.view(), &idx, b.view(), t).unwrap();
+            assert_eq!(got, want);
+        }
+    });
+}
+
+#[test]
+fn scale_rows_and_encode_match_oracles() {
+    check("par::scale_rows / par::encode vs naive", 40, |g: &mut Gen| {
+        let rows = *g.choose(&DIMS);
+        let cols = *g.choose(&SMALL_DIMS);
+        let a = rand_matrix(g, rows, cols);
+        let w = rand_mask(g, rows);
+        // scale_rows: row r multiplied by w[r], exactly.
+        let scaled = par::scale_rows_with_threads(a.view(), &w, 3);
+        for r in 0..rows {
+            for (o, &v) in scaled.row(r).iter().zip(a.row(r)) {
+                assert_eq!(*o, v * w[r]);
+            }
+        }
+        // encode == G @ (w .* M) via the scalar kernels (f32 tolerance:
+        // the fused kernel multiplies g*w before touching M).
+        let u = *g.choose(&[0usize, 1, 5]);
+        let gm = rand_matrix(g, u, rows);
+        let got = par::encode(gm.view(), &w, a.view()).unwrap();
+        let want = matmul_naive(gm.view(), par::scale_rows(a.view(), &w).view());
+        assert_eq!(got.shape(), want.shape());
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-4, "encode differs from scale-then-matmul by {diff}");
+    });
+}
+
+#[test]
+fn kernels_validate_before_computing() {
+    // Descriptive errors, not index panics deep in a loop.
+    let x = Matrix::zeros(8, 4);
+    let y = Matrix::zeros(8, 2);
+    let beta = Matrix::zeros(4, 2);
+    let short_mask = vec![1.0f32; 7];
+    let err = par::gradient(x.view(), y.view(), beta.view(), &short_mask).unwrap_err();
+    assert!(err.to_string().contains("mask"), "{err}");
+
+    let err = gradient_naive(&x, &y, &beta, &short_mask).unwrap_err();
+    assert!(err.to_string().contains("mask"), "{err}");
+
+    let err = par::gather_gradient(x.view(), y.view(), &[8], beta.view(), &[1.0]).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+
+    let err = par::gather_matmul(x.view(), &[0, 9], beta.view()).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+}

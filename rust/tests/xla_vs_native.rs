@@ -1,6 +1,8 @@
 //! Integration: the XLA artifacts must agree with the native oracle on
 //! every operation — this pins the python-AOT -> HLO-text -> PJRT ABI
-//! end-to-end. Requires `make artifacts` (tests skip cleanly otherwise).
+//! end-to-end. Requires the `xla` cargo feature (compiled out otherwise)
+//! and `make artifacts` (tests skip cleanly when they are absent).
+#![cfg(feature = "xla")]
 
 use codedfedl::config::profile;
 use codedfedl::mathx::linalg::Matrix;
