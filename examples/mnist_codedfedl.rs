@@ -11,12 +11,12 @@
 //! # default: small synth-mnist; paper-scale: `-- paper synth-mnist`
 //! ```
 
+use codedfedl::benchx::sweep::SweepRunner;
 use codedfedl::config::{ExperimentConfig, Scheme};
-use codedfedl::fl::trainer::Trainer;
 use codedfedl::metrics::TrainReport;
 
-fn run(cfg: &ExperimentConfig) -> anyhow::Result<TrainReport> {
-    let mut trainer = Trainer::from_config(cfg)?;
+fn run(runner: &mut SweepRunner, cfg: &ExperimentConfig) -> anyhow::Result<TrainReport> {
+    let mut trainer = runner.trainer(cfg)?;
     if let Some(plan) = &trainer.setup().plan {
         println!(
             "  allocation: t* = {:.3}s, u = {} parity rows, mean load {:.1}",
@@ -54,15 +54,18 @@ fn main() -> anyhow::Result<()> {
         base.train.epochs
     );
 
+    // Both schemes share one dataset + RFF embedding build (the sweep
+    // runner caches it; only plan/masks/parity differ between them).
+    let mut runner = SweepRunner::new();
     let mut uncoded_cfg = base.clone();
     uncoded_cfg.scheme = Scheme::Uncoded;
     println!("\n== uncoded baseline ==");
-    let uncoded = run(&uncoded_cfg)?;
+    let uncoded = run(&mut runner, &uncoded_cfg)?;
 
     let mut coded_cfg = base.clone();
     coded_cfg.scheme = Scheme::Coded;
     println!("\n== CodedFedL ==");
-    let coded = run(&coded_cfg)?;
+    let coded = run(&mut runner, &coded_cfg)?;
 
     std::fs::create_dir_all("results")?;
     let tag = format!("{preset}_{dataset}");

@@ -14,11 +14,9 @@ use codedfedl::fl::trainer::Trainer;
 
 fn main() -> anyhow::Result<()> {
     codedfedl::util::logging::init_from_env();
-    let mut cfg = ExperimentConfig::preset("tiny")?;
-    if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
-        eprintln!("artifacts not built; using the native fallback backend");
-        cfg.use_xla = false;
-    }
+    // The preset's `auto` backend resolves through the registry: XLA when
+    // compiled in and artifacts exist, the native pooled kernels otherwise.
+    let cfg = ExperimentConfig::preset("tiny")?;
 
     println!("CodedFedL quickstart");
     println!("  dataset    : {} ({} train / {} test)", cfg.dataset, cfg.m_train, cfg.m_test);

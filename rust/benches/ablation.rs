@@ -10,7 +10,6 @@
 
 use codedfedl::allocation::optimizer::{optimize_with_server, plan_fixed_u};
 use codedfedl::config::{ExperimentConfig, Scheme};
-use codedfedl::fl::trainer::Trainer;
 use codedfedl::mathx::rng::Rng;
 use codedfedl::mathx::stats::OnlineStats;
 use codedfedl::simnet::delay::ClientModel;
@@ -41,6 +40,9 @@ fn main() -> anyhow::Result<()> {
     println!("uncoded per-step E[max_j T_j] = {t_uncoded:.1}s (small preset)\n");
 
     // --- redundancy sweep (analytic deadline + short learning runs).
+    // The sweep runner embeds the dataset once; all five redundancy
+    // variants (and the sharding run below) share it.
+    let mut runner = codedfedl::benchx::sweep::SweepRunner::new();
     let mut w = CsvWriter::create(
         "results/ablation_redundancy.csv",
         &["redundancy", "u", "deadline_s", "per_step_speedup", "final_acc"],
@@ -51,12 +53,11 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = base.clone();
         cfg.set("train.redundancy", &r.to_string())?;
         cfg.set("train.epochs", "8")?; // short run: accuracy trend only
-        cfg.use_xla = std::path::Path::new("artifacts/manifest.json").exists();
         let mut rng = Rng::new(cfg.seed).fork(2);
         let pop = build_population(&cfg, &mut rng);
         let caps = vec![cfg.profile.l; cfg.n_clients];
         let plan = plan_fixed_u(&pop.clients, &caps, cfg.global_batch(), cfg.u(), 1.0)?;
-        let report = Trainer::from_config(&cfg)?.run()?;
+        let report = runner.run(&cfg)?;
         let speedup = t_uncoded / plan.deadline;
         println!(
             "{:>11.2} {:>6} {:>11.1} {:>9.2} {:>10.4}",
@@ -65,6 +66,8 @@ fn main() -> anyhow::Result<()> {
         w.row_f64(&[r, plan.u as f64, plan.deadline, speedup, report.final_accuracy()])?;
     }
     w.flush()?;
+    let (hits, builds) = runner.cache_stats();
+    println!("(embedding cache: {hits} reuses, {builds} builds)");
 
     // --- Remark-5 joint u optimization vs the fixed 10%.
     println!("\nRemark-5 joint optimization (server as (n+1)-th node):");
@@ -91,8 +94,7 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = base.clone();
     cfg.scheme = Scheme::Coded;
     cfg.set("train.epochs", "8")?;
-    cfg.use_xla = std::path::Path::new("artifacts/manifest.json").exists();
-    let noniid = Trainer::from_config(&cfg)?.run()?;
+    let noniid = runner.run(&cfg)?;
     println!("  non-IID (paper): final acc {:.4}", noniid.final_accuracy());
     println!("  (IID sharding exposed via data::noniid::shard_iid; trainer uses the paper's non-IID)");
 

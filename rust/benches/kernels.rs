@@ -1,27 +1,34 @@
-//! Kernel benchmarks: the cache-blocked multi-threaded compute core vs
-//! the seed's scalar kernels, across sizes and thread counts.
+//! Kernel benchmarks: the pooled + unrolled compute core vs the PR 1
+//! `thread::scope` + scalar kernels vs the seed's scalar oracles.
 //!
 //! Cells:
-//!   * `matmul` — square `s x s x s` products (s = 128, 256, 512);
-//!   * `t_matmul` — the gradient's second stage shape, `(m, q)^T (m, c)`;
-//!   * `gather-gradient` — the per-client masked gradient over a row-index
-//!     set, seed path (select_rows + scalar gradient) vs the zero-copy
-//!     blocked kernel.
+//!   * `matmul` — square `s x s x s` products across thread counts;
+//!   * `gather-gradient` — the per-client masked gradient on the
+//!     small-gradient hot shape (l = 256 rows of a 12288x512 source),
+//!     where per-call spawn overhead dominated PR 1;
+//!   * `encode` — fused streaming encode-accumulate vs materialize-then-
+//!     add (the fused kernel's peak resident intermediate is 0 bytes and
+//!     does not scale with `u_max`).
 //!
-//! Each blocked cell runs at 1/2/4/8 threads regardless of
-//! `CODEDFEDL_THREADS`; a speedup summary vs the scalar baseline is
-//! printed at the end.
+//! Every parallel result is asserted **bitwise identical** to its scalar
+//! naive oracle at every thread count before timing, so this bench doubles
+//! as a correctness smoke (CI runs it with `--quick` under 2 threads).
+//!
+//! A machine-readable summary is written to `BENCH_kernels.json` so the
+//! perf trajectory is tracked across PRs.
 //!
 //! ```bash
-//! cargo bench --bench kernels
+//! cargo bench --bench kernels            # full grid
+//! cargo bench --bench kernels -- --quick # CI smoke (small sizes/iters)
 //! ```
 
 use codedfedl::benchx::Bencher;
-use codedfedl::mathx::linalg::{gradient_naive, matmul_naive, t_matmul_naive, Matrix};
-use codedfedl::mathx::par;
+use codedfedl::mathx::linalg::{
+    encode_accumulate_naive, gradient_naive, matmul_naive, Matrix,
+};
+use codedfedl::mathx::par::{self, legacy};
 use codedfedl::mathx::rng::Rng;
-
-const THREADS: [usize; 4] = [1, 2, 4, 8];
+use codedfedl::util::json::Json;
 
 fn mean_of(b: &Bencher, name: &str) -> f64 {
     b.results()
@@ -31,56 +38,73 @@ fn mean_of(b: &Bencher, name: &str) -> f64 {
         .unwrap_or(f64::NAN)
 }
 
+fn speedup(b: &Bencher, base: &str, new: &str) -> f64 {
+    mean_of(b, base) / mean_of(b, new)
+}
+
 fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
     let mut b = Bencher::new();
-    b.target_time_s = 0.25;
-    b.max_iters = 40;
-    b.warmup = 1;
+    if quick {
+        b.target_time_s = 0.05;
+        b.max_iters = 8;
+        b.warmup = 1;
+    } else {
+        b.target_time_s = 0.25;
+        b.max_iters = 40;
+        b.warmup = 1;
+    }
+    let threads: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let matmul_sizes: &[usize] = if quick { &[128, 256] } else { &[128, 256, 512] };
     let mut rng = Rng::new(7);
     let mut summaries: Vec<(String, String)> = Vec::new();
 
     // --- square matmul across sizes and thread counts.
-    for &s in &[128usize, 256, 512] {
+    for &s in matmul_sizes {
         let a = Matrix::randn(s, s, 0.0, 1.0, &mut rng);
         let c = Matrix::randn(s, s, 0.0, 1.0, &mut rng);
         let flops = 2.0 * (s * s * s) as f64;
-        let base = format!("matmul {s}x{s}x{s} scalar (seed)");
+        // Correctness gate: pooled/unrolled bitwise equals the oracle at
+        // every thread count (and the legacy scoped kernel agrees too).
+        let want = matmul_naive(a.view(), c.view());
+        for &t in threads {
+            assert_eq!(
+                par::matmul_with_threads(a.view(), c.view(), t),
+                want,
+                "pooled matmul diverged from the scalar oracle at {t} threads"
+            );
+            assert_eq!(legacy::matmul_with_threads(a.view(), c.view(), t), want);
+        }
+        let base = format!("matmul {s} scalar (seed)");
         b.bench_with_work(&base, Some(flops), || {
             std::hint::black_box(matmul_naive(a.view(), c.view()));
         });
-        for &t in &THREADS {
-            b.bench_with_work(&format!("matmul {s}x{s}x{s} blocked {t}t"), Some(flops), || {
+        for &t in threads {
+            b.bench_with_work(&format!("matmul {s} scoped-scalar (PR1) {t}t"), Some(flops), || {
+                std::hint::black_box(legacy::matmul_with_threads(a.view(), c.view(), t));
+            });
+            b.bench_with_work(&format!("matmul {s} pooled-unrolled {t}t"), Some(flops), || {
                 std::hint::black_box(par::matmul_with_threads(a.view(), c.view(), t));
             });
         }
-        let naive = mean_of(&b, &base);
-        let best4 = mean_of(&b, &format!("matmul {s}x{s}x{s} blocked 4t"));
         summaries.push((
             format!("matmul {s}"),
-            format!("x{:.2} at 4 threads vs seed scalar", naive / best4),
+            format!(
+                "pooled x{:.2} vs seed scalar, x{:.2} vs PR1 scoped (4t)",
+                speedup(&b, &base, &format!("matmul {s} pooled-unrolled 4t")),
+                speedup(
+                    &b,
+                    &format!("matmul {s} scoped-scalar (PR1) 4t"),
+                    &format!("matmul {s} pooled-unrolled 4t"),
+                ),
+            ),
         ));
     }
 
-    // --- transposed matmul (gradient stage 2 shape: m=4096, q=512, c=10).
+    // --- gather-gradient on the small-gradient hot shape (the acceptance
+    // shape: l=256 rows, q=512): this is where spawn overhead dominated.
     {
-        let (m, q, c) = (4096usize, 512usize, 10usize);
-        let a = Matrix::randn(m, q, 0.0, 1.0, &mut rng);
-        let e = Matrix::randn(m, c, 0.0, 1.0, &mut rng);
-        let flops = 2.0 * (m * q * c) as f64;
-        b.bench_with_work("t_matmul 4096x512^T @ 4096x10 scalar (seed)", Some(flops), || {
-            std::hint::black_box(t_matmul_naive(a.view(), e.view()));
-        });
-        for &t in &THREADS {
-            let name = format!("t_matmul 4096x512^T @ 4096x10 blocked {t}t");
-            b.bench_with_work(&name, Some(flops), || {
-                std::hint::black_box(par::t_matmul_with_threads(a.view(), e.view(), t));
-            });
-        }
-    }
-
-    // --- gather-gradient: per-client masked gradient over a row set.
-    {
-        let (m_total, l, q, c) = (12_288usize, 512usize, 512usize, 10usize);
+        let (m_total, l, q, c) = (12_288usize, 256usize, 512usize, 10usize);
         let x = Matrix::randn(m_total, q, 0.0, 1.0, &mut rng);
         let y = Matrix::randn(m_total, c, 0.0, 1.0, &mut rng);
         let beta = Matrix::randn(q, c, 0.0, 0.3, &mut rng);
@@ -88,15 +112,41 @@ fn main() -> anyhow::Result<()> {
         let mask: Vec<f32> = (0..l).map(|i| if i % 5 == 0 { 0.0 } else { 1.0 }).collect();
         let flops = 4.0 * (l * q * c) as f64;
 
-        let base = "gather-grad 512 rows of 12288x512 scalar (seed select_rows)";
+        let want =
+            gradient_naive(&x.select_rows(&idx), &y.select_rows(&idx), &beta, &mask).unwrap();
+        for &t in threads {
+            let got =
+                par::gather_gradient_with_threads(x.view(), y.view(), &idx, beta.view(), &mask, t)
+                    .unwrap();
+            assert_eq!(got, want, "pooled gather-gradient diverged at {t} threads");
+        }
+
+        let base = "gather-grad l=256 q=512 scalar (seed select_rows)";
         b.bench_with_work(base, Some(flops), || {
             let xs = x.select_rows(&idx);
             let ys = y.select_rows(&idx);
             std::hint::black_box(gradient_naive(&xs, &ys, &beta, &mask).unwrap());
         });
-        for &t in &THREADS {
+        for &t in threads {
             b.bench_with_work(
-                &format!("gather-grad 512 rows of 12288x512 blocked {t}t"),
+                &format!("gather-grad l=256 q=512 scoped-scalar (PR1) {t}t"),
+                Some(flops),
+                || {
+                    std::hint::black_box(
+                        legacy::gather_gradient_with_threads(
+                            x.view(),
+                            y.view(),
+                            &idx,
+                            beta.view(),
+                            &mask,
+                            t,
+                        )
+                        .unwrap(),
+                    );
+                },
+            );
+            b.bench_with_work(
+                &format!("gather-grad l=256 q=512 pooled-unrolled {t}t"),
                 Some(flops),
                 || {
                     std::hint::black_box(
@@ -113,19 +163,123 @@ fn main() -> anyhow::Result<()> {
                 },
             );
         }
-        let naive = mean_of(&b, base);
-        let best4 = mean_of(&b, "gather-grad 512 rows of 12288x512 blocked 4t");
         summaries.push((
             "gather-gradient".into(),
-            format!("x{:.2} at 4 threads vs seed scalar", naive / best4),
+            format!(
+                "pooled x{:.2} vs seed scalar, x{:.2} vs PR1 scoped (4t)",
+                speedup(&b, base, "gather-grad l=256 q=512 pooled-unrolled 4t"),
+                speedup(
+                    &b,
+                    "gather-grad l=256 q=512 scoped-scalar (PR1) 4t",
+                    "gather-grad l=256 q=512 pooled-unrolled 4t",
+                ),
+            ),
         ));
     }
 
-    b.report("kernel benchmarks (blocked/parallel vs seed scalar)");
+    // --- fused streaming encode-accumulate vs materialize-then-add.
+    let (u_max, enc_l, enc_q) = if quick {
+        (256usize, 128usize, 128usize)
+    } else {
+        (512usize, 256usize, 512usize)
+    };
+    {
+        let g = Matrix::randn(u_max, enc_l, 0.0, 0.05, &mut rng);
+        let m = Matrix::randn(12_288.min(4 * enc_l), enc_q, 0.0, 1.0, &mut rng);
+        let idx: Vec<usize> = (0..enc_l).map(|i| (i * 13) % m.rows()).collect();
+        let w: Vec<f32> = (0..enc_l).map(|i| if i % 7 == 0 { 0.0 } else { 0.8 }).collect();
+        let flops = 2.0 * (u_max * enc_l * enc_q) as f64;
+
+        // Correctness gate: fused kernel bitwise equals the fused scalar
+        // oracle at every thread count, from a non-zero accumulator.
+        let start = Matrix::randn(u_max, enc_q, 0.0, 1.0, &mut rng);
+        let mut want = start.clone();
+        encode_accumulate_naive(&g, &w, &m, Some(&idx), &mut want);
+        for &t in threads {
+            let mut got = start.clone();
+            par::encode_accumulate_with_threads(
+                g.view(),
+                &w,
+                m.view(),
+                Some(&idx),
+                got.view_mut(),
+                t,
+            )
+            .unwrap();
+            assert_eq!(got, want, "fused encode diverged at {t} threads");
+        }
+
+        let mat = format!("encode u={u_max} materialized+add (PR1)");
+        b.bench_with_work(&mat, Some(flops), || {
+            let mut acc = Matrix::zeros(u_max, enc_q);
+            legacy::encode_then_add(g.view(), &w, m.view(), Some(&idx), &mut acc).unwrap();
+            std::hint::black_box(acc);
+        });
+        let fused = format!("encode u={u_max} fused streaming");
+        b.bench_with_work(&fused, Some(flops), || {
+            let mut acc = Matrix::zeros(u_max, enc_q);
+            par::gather_encode_accumulate(g.view(), &w, m.view(), &idx, acc.view_mut()).unwrap();
+            std::hint::black_box(acc);
+        });
+        summaries.push((
+            "fused encode".into(),
+            format!(
+                "x{:.2} vs materialize+add; peak intermediate 0 B vs {} B \
+                 (scales with u_max only when materialized)",
+                speedup(&b, &mat, &fused),
+                u_max * enc_q * 4,
+            ),
+        ));
+    }
+
+    b.report("kernel benchmarks (pooled/unrolled vs PR1 scoped vs seed scalar)");
     println!("\nspeedup summary:");
     for (what, line) in &summaries {
         println!("  {what:<16} {line}");
     }
-    println!("(host has {} available threads)", par::num_threads());
+    println!(
+        "(host: {} compute threads; pool: {} workers + caller; quick={quick})",
+        par::num_threads(),
+        codedfedl::mathx::pool::global().workers(),
+    );
+
+    // Machine-readable trajectory for cross-PR tracking.
+    let results: Vec<Json> = b
+        .results()
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("iters", Json::Num(r.iters as f64)),
+                ("mean_s", Json::Num(r.mean_s)),
+                ("p50_s", Json::Num(r.p50_s)),
+                ("p95_s", Json::Num(r.p95_s)),
+                ("min_s", Json::Num(r.min_s)),
+                (
+                    "throughput_per_s",
+                    r.throughput().map(Json::Num).unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    let summary: Vec<Json> = summaries
+        .iter()
+        .map(|(what, line)| {
+            Json::obj(vec![("cell", Json::Str(what.clone())), ("result", Json::Str(line.clone()))])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("kernels".into())),
+        ("quick", Json::Bool(quick)),
+        ("threads_knob", Json::Num(par::num_threads() as f64)),
+        (
+            "pool_workers",
+            Json::Num(codedfedl::mathx::pool::global().workers() as f64),
+        ),
+        ("results", Json::Arr(results)),
+        ("summary", Json::Arr(summary)),
+    ]);
+    std::fs::write("BENCH_kernels.json", doc.to_string())?;
+    println!("wrote BENCH_kernels.json");
     Ok(())
 }

@@ -15,17 +15,15 @@ pub fn bench_preset() -> String {
 }
 
 /// Build a config for the bench runs, honoring the env preset and an
-/// optional `CODEDFEDL_BENCH_EPOCHS` override.
+/// optional `CODEDFEDL_BENCH_EPOCHS` override. The preset's `auto`
+/// backend resolves through the registry (XLA when built + artifacts
+/// exist, the native pooled kernels otherwise).
 pub fn bench_config(dataset: &str, scheme: Scheme) -> Result<ExperimentConfig> {
     let mut cfg = ExperimentConfig::preset(&bench_preset())?;
     cfg.set("dataset", dataset)?;
     cfg.scheme = scheme;
     if let Ok(e) = std::env::var("CODEDFEDL_BENCH_EPOCHS") {
         cfg.set("train.epochs", &e)?;
-    }
-    if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
-        eprintln!("(artifacts missing — falling back to the native backend)");
-        cfg.use_xla = false;
     }
     Ok(cfg)
 }
@@ -36,10 +34,12 @@ pub fn run(cfg: &ExperimentConfig) -> Result<TrainReport> {
     trainer.run()
 }
 
-/// Run the uncoded/coded pair on a dataset.
+/// Run the uncoded/coded pair on a dataset through the batched sweep
+/// runner: the RFF embedding is built once and shared by both schemes.
 pub fn run_pair(dataset: &str) -> Result<(TrainReport, TrainReport)> {
-    let uncoded = run(&bench_config(dataset, Scheme::Uncoded)?)?;
-    let coded = run(&bench_config(dataset, Scheme::Coded)?)?;
+    let mut runner = crate::benchx::sweep::SweepRunner::new();
+    let uncoded = runner.run(&bench_config(dataset, Scheme::Uncoded)?)?;
+    let coded = runner.run(&bench_config(dataset, Scheme::Coded)?)?;
     Ok((uncoded, coded))
 }
 

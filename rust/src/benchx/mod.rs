@@ -6,6 +6,7 @@
 //! over this module plus the experiment harnesses in [`crate::fl`].
 
 pub mod figures;
+pub mod sweep;
 
 use std::time::Instant;
 

@@ -1,0 +1,112 @@
+//! Batched multi-round sweep runner: run many experiment variants while
+//! building the expensive dataset + RFF embedding state **once**.
+//!
+//! fig2/fig3/ablation sweep over scheme, redundancy and network knobs,
+//! none of which touch the embedding — only the allocation plan, masks
+//! and parity differ. [`SweepRunner`] caches the last
+//! [`SharedData`] and reuses it whenever the next config's
+//! embedding key (dataset, seed, shapes, sigma, backend) matches,
+//! cutting sweep time by the embedding cost times the variant count.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::fl::trainer::{SharedData, Trainer};
+use crate::metrics::TrainReport;
+use crate::runtime::registry::create_backend;
+
+/// Runs experiment variants against a cached shared embedding.
+#[derive(Default)]
+pub struct SweepRunner {
+    shared: Option<Arc<SharedData>>,
+    /// How many trainer builds hit the embedding cache (diagnostics).
+    hits: usize,
+    /// How many had to (re)build the embedding.
+    builds: usize,
+}
+
+impl SweepRunner {
+    pub fn new() -> SweepRunner {
+        SweepRunner::default()
+    }
+
+    /// Build a trainer for `cfg`, reusing the cached embedding when the
+    /// config is compatible (otherwise the cache is rebuilt for it).
+    pub fn trainer(&mut self, cfg: &ExperimentConfig) -> Result<Trainer> {
+        let backend = create_backend(&cfg.backend, cfg)?;
+        let shared = match &self.shared {
+            Some(s) if s.compatible(cfg) => {
+                self.hits += 1;
+                Arc::clone(s)
+            }
+            _ => {
+                self.builds += 1;
+                let s = Arc::new(SharedData::build(cfg, backend.as_ref())?);
+                self.shared = Some(Arc::clone(&s));
+                s
+            }
+        };
+        Trainer::with_shared(cfg, backend, shared)
+    }
+
+    /// Run one variant end-to-end.
+    pub fn run(&mut self, cfg: &ExperimentConfig) -> Result<TrainReport> {
+        self.trainer(cfg)?.run()
+    }
+
+    /// `(embedding cache hits, embedding builds)` so far.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (self.hits, self.builds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+
+    fn tiny(scheme: Scheme) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.scheme = scheme;
+        cfg.backend = "native".into();
+        cfg.train.epochs = 4;
+        cfg
+    }
+
+    #[test]
+    fn sweep_shares_one_embedding_across_schemes() {
+        let mut runner = SweepRunner::new();
+        let rc = runner.run(&tiny(Scheme::Coded)).unwrap();
+        let ru = runner.run(&tiny(Scheme::Uncoded)).unwrap();
+        let mut red = tiny(Scheme::Coded);
+        red.train.redundancy = 0.20;
+        let rr = runner.run(&red).unwrap();
+        assert_eq!(runner.cache_stats(), (2, 1), "one build, two reuses");
+        assert!(!rc.records.is_empty() && !ru.records.is_empty() && !rr.records.is_empty());
+    }
+
+    #[test]
+    fn sweep_matches_monolithic_build_exactly() {
+        let cfg = tiny(Scheme::Coded);
+        let mut runner = SweepRunner::new();
+        let swept = runner.run(&cfg).unwrap();
+        let solo = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(swept.records.len(), solo.records.len());
+        for (a, b) in swept.records.iter().zip(&solo.records) {
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.sim_time_s, b.sim_time_s);
+        }
+    }
+
+    #[test]
+    fn incompatible_config_rebuilds_the_cache() {
+        let mut runner = SweepRunner::new();
+        runner.run(&tiny(Scheme::Coded)).unwrap();
+        let mut other = tiny(Scheme::Coded);
+        other.seed = 42;
+        runner.run(&other).unwrap();
+        assert_eq!(runner.cache_stats(), (0, 2));
+    }
+}

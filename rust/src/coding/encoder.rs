@@ -73,6 +73,7 @@ pub fn encode_client_slice(
 /// `G_j W_j Y[idx]` reading the rows in place (no `select_rows`
 /// materialization). This is what the trainer's per-mini-batch encoding
 /// pass uses.
+#[allow(clippy::too_many_arguments)]
 pub fn encode_client_rows(
     backend: &dyn ComputeBackend,
     x: &Matrix,
@@ -87,6 +88,34 @@ pub fn encode_client_rows(
     let xc = backend.encode_gather(&g, weights, x, idx)?;
     let yc = backend.encode_gather(&g, weights, y, idx)?;
     Ok((xc, yc))
+}
+
+/// Streaming variant of [`encode_client_rows`]: the client's parity
+/// contribution is accumulated **directly into** the server's composite
+/// parity block (`comp.x += G_j W_j X[idx]`, `comp.y += G_j W_j Y[idx]`).
+/// On the native backend the per-client `(u_max, q)` parity block is
+/// never materialized — the encode's peak resident intermediate no
+/// longer scales with `u_max`. This is what the trainer's per-mini-batch
+/// encoding pass uses.
+///
+/// Same privacy story as [`encode_client_slice`]: `G_j` is sampled from
+/// the client's own rng stream and dropped before returning (Remark 2).
+#[allow(clippy::too_many_arguments)]
+pub fn encode_client_rows_into(
+    backend: &dyn ComputeBackend,
+    x: &Matrix,
+    y: &Matrix,
+    idx: &[usize],
+    weights: &[f32],
+    u: usize,
+    u_max: usize,
+    comp: &mut CompositeParity,
+    client_rng: &mut Rng,
+) -> Result<()> {
+    let g = sample_generator(u, u_max, idx.len(), client_rng);
+    backend.encode_accumulate_gather(&g, weights, x, idx, &mut comp.x)?;
+    backend.encode_accumulate_gather(&g, weights, y, idx, &mut comp.y)?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -180,6 +209,32 @@ mod tests {
         let (xb, yb) = encode_client_rows(&nb, &x, &y, &idx, &w, 3, 6, &mut base.fork(1)).unwrap();
         assert_eq!(xa, xb);
         assert_eq!(ya, yb);
+    }
+
+    #[test]
+    fn streaming_accumulate_matches_materialized_encoding() {
+        // Same rng stream: accumulating straight into a zero composite
+        // performs the exact same per-element operation sequence as
+        // materialize-then-add, and the streaming path replays bitwise.
+        let mut rng = Rng::new(12);
+        let x = Matrix::randn(12, 4, 0.0, 1.0, &mut rng);
+        let y = Matrix::randn(12, 2, 0.0, 1.0, &mut rng);
+        let idx = vec![1usize, 4, 9, 0, 11];
+        let w = vec![1.0f32, 0.5, 0.0, 2.0, 1.0];
+        let nb = NativeBackend;
+        let base = Rng::new(13);
+        let (xa, ya) =
+            encode_client_rows(&nb, &x, &y, &idx, &w, 3, 6, &mut base.fork(1)).unwrap();
+        let mut comp = CompositeParity::zeros(3, 6, 4, 2);
+        encode_client_rows_into(&nb, &x, &y, &idx, &w, 3, 6, &mut comp, &mut base.fork(1))
+            .unwrap();
+        assert!(comp.x.max_abs_diff(&xa) < 1e-6);
+        assert!(comp.y.max_abs_diff(&ya) < 1e-6);
+        let mut comp2 = CompositeParity::zeros(3, 6, 4, 2);
+        encode_client_rows_into(&nb, &x, &y, &idx, &w, 3, 6, &mut comp2, &mut base.fork(1))
+            .unwrap();
+        assert_eq!(comp.x, comp2.x);
+        assert_eq!(comp.y, comp2.y);
     }
 
     #[test]

@@ -7,7 +7,9 @@ pub mod generator;
 pub mod privacy;
 pub mod weights;
 
-pub use encoder::{encode_client_rows, encode_client_slice, CompositeParity};
+pub use encoder::{
+    encode_client_rows, encode_client_rows_into, encode_client_slice, CompositeParity,
+};
 pub use generator::sample_generator;
 pub use privacy::{parity_attack, LeakageReport};
 pub use weights::build_weights;

@@ -156,9 +156,13 @@ pub struct ExperimentConfig {
     pub train: TrainConfig,
     pub scheme: Scheme,
     pub artifacts_dir: String,
-    /// `false` = native linalg fallback (no PJRT); used by pure-simulation
-    /// paths and tests that must run without artifacts.
-    pub use_xla: bool,
+    /// Compute backend name, resolved through the
+    /// [`crate::runtime::registry`] name → constructor map: `native`,
+    /// `xla`, or `auto` (XLA when compiled in and artifacts exist, else
+    /// the native pooled kernels). Replaces the old `use_xla` boolean;
+    /// `use_xla = true/false` is still accepted in config files as an
+    /// alias for `auto`/`native`.
+    pub backend: String,
     /// Tolerance `epsilon` in the waiting-time optimization (paper eq. 10).
     pub epsilon: f64,
 }
@@ -189,7 +193,7 @@ impl ExperimentConfig {
                 },
                 scheme: Scheme::Coded,
                 artifacts_dir: "artifacts".into(),
-                use_xla: true,
+                backend: "auto".into(),
                 epsilon: 1.0,
             },
             "small" => ExperimentConfig {
@@ -213,7 +217,7 @@ impl ExperimentConfig {
                 },
                 scheme: Scheme::Coded,
                 artifacts_dir: "artifacts".into(),
-                use_xla: true,
+                backend: "auto".into(),
                 epsilon: 1.0,
             },
             "medium" => ExperimentConfig {
@@ -237,7 +241,7 @@ impl ExperimentConfig {
                 },
                 scheme: Scheme::Coded,
                 artifacts_dir: "artifacts".into(),
-                use_xla: true,
+                backend: "auto".into(),
                 epsilon: 1.0,
             },
             "paper" => ExperimentConfig {
@@ -261,7 +265,7 @@ impl ExperimentConfig {
                 },
                 scheme: Scheme::Coded,
                 artifacts_dir: "artifacts".into(),
-                use_xla: true,
+                backend: "auto".into(),
                 epsilon: 1.0,
             },
             _ => bail!("unknown preset '{name}' (tiny|small|medium|paper)"),
@@ -344,7 +348,15 @@ impl ExperimentConfig {
             "seed" => self.seed = v.parse()?,
             "scheme" => self.scheme = Scheme::parse(v)?,
             "artifacts_dir" => self.artifacts_dir = v.into(),
-            "use_xla" => self.use_xla = v.parse()?,
+            "backend" => self.backend = v.into(),
+            // Legacy alias from before the backend registry existed.
+            // `true` maps to `auto` (not `xla`): old builds without the
+            // xla feature fell back to native, and `auto` preserves that
+            // for existing config files. Ask for `backend = xla` to make
+            // missing artifacts a hard error instead of a fallback.
+            "use_xla" => {
+                self.backend = if v.parse::<bool>()? { "auto".into() } else { "native".into() };
+            }
             "epsilon" => self.epsilon = v.parse()?,
             "net.p_fail" => self.net.p_fail = v.parse()?,
             "net.max_rate_bps" => self.net.max_rate_bps = v.parse()?,
@@ -464,6 +476,19 @@ mod tests {
         cfg.apply_file(path.to_str().unwrap()).unwrap();
         assert_eq!(cfg.train.epochs, 4);
         assert_eq!(cfg.net.k1, 0.9);
+    }
+
+    #[test]
+    fn backend_override_and_legacy_alias() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        assert_eq!(cfg.backend, "auto");
+        cfg.set("backend", "native").unwrap();
+        assert_eq!(cfg.backend, "native");
+        cfg.set("use_xla", "true").unwrap();
+        assert_eq!(cfg.backend, "auto");
+        cfg.set("use_xla", "false").unwrap();
+        assert_eq!(cfg.backend, "native");
+        assert!(cfg.set("use_xla", "maybe").is_err());
     }
 
     #[test]

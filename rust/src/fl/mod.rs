@@ -6,4 +6,4 @@ pub mod embedding;
 pub mod lr;
 pub mod trainer;
 
-pub use trainer::{Trainer, TrainerSetup};
+pub use trainer::{SharedData, Trainer, TrainerSetup};

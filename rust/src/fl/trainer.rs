@@ -14,24 +14,33 @@
 //!
 //! Wall-clock is *simulated*: each step advances the clock by the sampled
 //! §2.2 delays, so speedups are independent of the host machine.
+//!
+//! Construction is split in two so sweeps can share the expensive part:
+//! [`SharedData`] holds the loaded dataset and the RFF-embedded
+//! train/test matrices (invariant across scheme/redundancy/network
+//! variants), and [`Trainer::with_shared`] builds the per-variant state
+//! (allocation plan, masks, parity, prepared-operand caches) on top of
+//! it. All heavy compute runs on the persistent worker pool
+//! ([`crate::mathx::pool`]), warmed at construction so the first
+//! training step pays no spawn cost.
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::allocation::optimizer::{plan_fixed_u, AllocationPlan};
-use crate::coding::encoder::{encode_client_rows, CompositeParity};
+use crate::coding::encoder::{encode_client_rows_into, CompositeParity};
 use crate::coding::weights::build_weights;
 use crate::config::{ExperimentConfig, Scheme};
 use crate::data::dataset::Dataset;
 use crate::fl::embedding::{from_seed, RffParams};
 use crate::fl::lr::LrSchedule;
 use crate::mathx::linalg::Matrix;
+use crate::mathx::pool::{self, WorkerPool};
 use crate::mathx::rng::Rng;
 use crate::metrics::{EvalRecord, TrainReport};
-use crate::runtime::backend::{ComputeBackend, NativeBackend, PreparedMatrix};
-#[cfg(feature = "xla")]
-use crate::runtime::xla::XlaBackend;
+use crate::runtime::backend::{ComputeBackend, PreparedMatrix};
+use crate::runtime::registry::create_backend;
 use crate::simnet::topology::{build_population, Population};
 
 /// Static per-run state exposed for diagnostics and benches.
@@ -41,17 +50,112 @@ pub struct TrainerSetup {
     pub rff: RffParams,
 }
 
+/// The config fields the shared dataset + embedding state depends on.
+/// Two configs with equal keys can share one [`SharedData`].
+#[derive(Debug, Clone, PartialEq)]
+struct SharedKey {
+    dataset: String,
+    data_dir: String,
+    m_train: usize,
+    m_test: usize,
+    seed: u64,
+    d: usize,
+    q: usize,
+    c: usize,
+    chunk: usize,
+    sigma: f64,
+    backend: String,
+    /// With `backend = "auto"` the *resolved* backend depends on where
+    /// artifacts live, so the directory is part of the embedding key.
+    artifacts_dir: String,
+}
+
+impl SharedKey {
+    fn of(cfg: &ExperimentConfig) -> SharedKey {
+        SharedKey {
+            dataset: cfg.dataset.clone(),
+            data_dir: cfg.data_dir.clone(),
+            m_train: cfg.m_train,
+            m_test: cfg.m_test,
+            seed: cfg.seed,
+            d: cfg.profile.d,
+            q: cfg.profile.q,
+            c: cfg.profile.c,
+            chunk: cfg.profile.chunk,
+            sigma: cfg.train.sigma,
+            backend: cfg.backend.clone(),
+            artifacts_dir: cfg.artifacts_dir.clone(),
+        }
+    }
+}
+
+/// Dataset + RFF embedding state shared across trainers: the loaded
+/// train/test sets, the embedded feature matrices, and the one-hot label
+/// matrix, all behind `Arc` so every prepared gather is zero-copy.
+///
+/// Building this is the dominant setup cost (embedding is `m x d x q`);
+/// the sweep runner ([`crate::benchx::sweep`]) builds it once per
+/// embedding key and reuses it across scheme/redundancy variants.
+pub struct SharedData {
+    key: SharedKey,
+    /// Raw training set (features kept for diagnostics; labels drive the
+    /// non-IID sharding).
+    pub train: Dataset,
+    pub test: Dataset,
+    /// Embedded training features `(m_train, q)`.
+    pub train_emb: Arc<Matrix>,
+    /// One-hot training labels `(m_train, c)`.
+    pub train_y: Arc<Matrix>,
+    /// Embedded test features `(m_test, q)`.
+    pub test_emb: Arc<Matrix>,
+    pub rff: RffParams,
+}
+
+impl SharedData {
+    /// Load the dataset and embed train + test through `backend`
+    /// (deterministic in `cfg.seed`: data is fork 1 of the root stream,
+    /// RFF parameters fork 3 — exactly as the monolithic constructor
+    /// always did, so trajectories are unchanged).
+    pub fn build(cfg: &ExperimentConfig, backend: &dyn ComputeBackend) -> Result<SharedData> {
+        let root = Rng::new(cfg.seed);
+        let mut data_rng = root.fork(1);
+        let mut rff_rng = root.fork(3);
+
+        let (train, test) = crate::data::load(cfg, &mut data_rng)?;
+        if train.len() != cfg.m_train {
+            bail!("dataset provides {} train rows, config wants {}", train.len(), cfg.m_train);
+        }
+        let p = &cfg.profile;
+        let rff = from_seed(&mut rff_rng, p.d, p.q, cfg.train.sigma);
+        crate::log_info!("embedding {} train + {} test rows (q={})", train.len(), test.len(), p.q);
+        let train_emb =
+            Arc::new(rff.embed(backend, &train.x, p.chunk).context("embedding training set")?);
+        let test_emb =
+            Arc::new(rff.embed(backend, &test.x, p.chunk).context("embedding test set")?);
+        // The label matrix is shared (zero-copy) with every prepared
+        // gather, so it is wrapped once and never row-copied again.
+        let train_y = Arc::new(train.y.clone());
+        Ok(SharedData { key: SharedKey::of(cfg), train, test, train_emb, train_y, test_emb, rff })
+    }
+
+    /// Whether this shared state is valid for `cfg` (same dataset, seed,
+    /// embedding shapes, kernel width and backend).
+    pub fn compatible(&self, cfg: &ExperimentConfig) -> bool {
+        self.key == SharedKey::of(cfg)
+    }
+}
+
 /// One fully-prepared training run.
 pub struct Trainer {
     cfg: ExperimentConfig,
     backend: Box<dyn ComputeBackend>,
-    /// Embedded training features `(m_train, q)`, shared (zero-copy) with
-    /// every prepared client-slice gather.
-    train_emb: Arc<Matrix>,
-    /// One-hot training labels, shared the same way.
-    train_y: Arc<Matrix>,
-    test_emb: Arc<Matrix>,
-    test: Dataset,
+    /// Handle to the persistent worker pool every native kernel in the
+    /// step loop executes on (created at latest during construction, so
+    /// no step ever pays the one-time worker spawn; exposed via
+    /// [`Trainer::pool`] for diagnostics).
+    pool: &'static WorkerPool,
+    /// Dataset + embeddings, shared (possibly across sweep variants).
+    shared: Arc<SharedData>,
     /// Per-step, per-client: global row indices of the client's slice.
     slices: Vec<Vec<Vec<usize>>>,
     /// Per-step, per-client row mask over the slice (1.0 = processed).
@@ -73,66 +177,63 @@ pub struct Trainer {
     /// indices (labels for the loss series are read in place).
     prep_batch: Vec<(Vec<PreparedMatrix>, Vec<usize>)>,
     setup: TrainerSetup,
-    beta: Matrix,
+    /// Current model, `Arc`-shared so the per-step beta snapshot handed
+    /// to the backend is a refcount bump instead of a host clone.
+    beta: Arc<Matrix>,
     delay_rng: Rng,
     sched: LrSchedule,
 }
 
 impl Trainer {
-    /// Build a trainer from a config, selecting the XLA or native backend.
-    /// Without the `xla` cargo feature the native backend is always used
-    /// (a `use_xla = true` config logs a notice and falls back).
+    /// Build a trainer from a config. The backend is constructed by name
+    /// (`cfg.backend`) through the [`crate::runtime::registry`] — `auto`
+    /// resolves to XLA when compiled in and artifacts exist, else to the
+    /// native pooled kernels.
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Trainer> {
-        #[cfg(feature = "xla")]
-        let backend: Box<dyn ComputeBackend> = if cfg.use_xla {
-            Box::new(XlaBackend::load(&cfg.artifacts_dir, &cfg.profile)?)
-        } else {
-            Box::new(NativeBackend)
-        };
-        #[cfg(not(feature = "xla"))]
-        let backend: Box<dyn ComputeBackend> = {
-            if cfg.use_xla {
-                crate::log_info!("built without the 'xla' feature; using the native backend");
-            }
-            Box::new(NativeBackend)
-        };
+        let backend = create_backend(&cfg.backend, cfg)?;
         Self::with_backend(cfg, backend)
     }
 
-    /// Build with an explicit backend (tests inject [`NativeBackend`]).
+    /// Build with an explicit backend (tests inject `NativeBackend`).
     pub fn with_backend(
         cfg: &ExperimentConfig,
         backend: Box<dyn ComputeBackend>,
     ) -> Result<Trainer> {
         cfg.validate()?;
+        let shared = Arc::new(SharedData::build(cfg, backend.as_ref())?);
+        Self::with_shared(cfg, backend, shared)
+    }
+
+    /// Build on top of pre-built [`SharedData`] (the sweep fast path:
+    /// scheme/redundancy/network variants reuse one embedding).
+    pub fn with_shared(
+        cfg: &ExperimentConfig,
+        backend: Box<dyn ComputeBackend>,
+        shared: Arc<SharedData>,
+    ) -> Result<Trainer> {
+        cfg.validate()?;
+        ensure!(
+            shared.compatible(cfg),
+            "shared embedding state was built for a different config \
+             (dataset/seed/profile/sigma/backend must match)"
+        );
+        // Grab (and, if this is the first compute in the process, spawn)
+        // the persistent pool; every gradient/encode/predict in the step
+        // loop runs on it with zero per-call spawn cost.
+        let pool = pool::global();
+        crate::log_debug!("compute pool: {} workers (+ caller)", pool.workers());
+
         let root = Rng::new(cfg.seed);
-        let mut data_rng = root.fork(1);
         let mut topo_rng = root.fork(2);
-        let mut rff_rng = root.fork(3);
         let delay_rng = root.fork(4);
-
-        // 1. Data + non-IID shards.
-        let (train, test) = crate::data::load(cfg, &mut data_rng)?;
-        if train.len() != cfg.m_train {
-            bail!("dataset provides {} train rows, config wants {}", train.len(), cfg.m_train);
-        }
-        let shards = crate::data::noniid::shard_non_iid(&train, cfg.n_clients)?;
-
-        // 2. Kernel embedding (Remark 1: parameters from the shared seed).
         let p = &cfg.profile;
-        let rff = from_seed(&mut rff_rng, p.d, p.q, cfg.train.sigma);
-        crate::log_info!("embedding {} train + {} test rows (q={})", train.len(), test.len(), p.q);
-        let train_emb = Arc::new(
-            rff.embed(backend.as_ref(), &train.x, p.chunk).context("embedding training set")?,
-        );
-        let test_emb = Arc::new(
-            rff.embed(backend.as_ref(), &test.x, p.chunk).context("embedding test set")?,
-        );
-        // The label matrix is shared (zero-copy) with every prepared
-        // gather below, so it is wrapped once and never row-copied again.
-        let train_y = Arc::new(train.y);
+        let train_emb = &shared.train_emb;
+        let train_y = &shared.train_y;
 
-        // 3. MEC population + load allocation.
+        // 1. Non-IID shards over the shared training set.
+        let shards = crate::data::noniid::shard_non_iid(&shared.train, cfg.n_clients)?;
+
+        // 2. MEC population + load allocation.
         let population = build_population(cfg, &mut topo_rng);
         let steps = cfg.steps_per_epoch();
         let caps = vec![p.l; cfg.n_clients];
@@ -174,7 +275,7 @@ impl Trainer {
             );
         }
 
-        // 4. Fixed global mini-batch partition (encoding is per mini-batch,
+        // 3. Fixed global mini-batch partition (encoding is per mini-batch,
         //    §A.2, so batches must not be reshuffled between epochs).
         let mut slices = vec![vec![Vec::new(); cfg.n_clients]; steps];
         for (j, shard) in shards.iter().enumerate() {
@@ -183,7 +284,11 @@ impl Trainer {
             }
         }
 
-        // 5. Per-client processed subsets + §3.4 weights + parity encoding.
+        // 4. Per-client processed subsets + §3.4 weights + parity encoding.
+        //    The parity pass is *streaming*: each client's contribution is
+        //    accumulated straight into the composite block
+        //    (encode_client_rows_into), so no (u_max, q) per-client
+        //    intermediate ever exists on the native path.
         let mut masks = vec![vec![Vec::new(); cfg.n_clients]; steps];
         let mut parity = Vec::new();
         match &plan {
@@ -209,19 +314,20 @@ impl Trainer {
                         }
                         masks[s][j] = mask;
                         if pl.u > 0 {
-                            // Zero-copy: the encoder reads the client's
-                            // rows straight out of the shared embedding.
-                            let (xc, yc) = encode_client_rows(
+                            // Zero-copy + fused: the encoder reads the
+                            // client's rows straight out of the shared
+                            // embedding and accumulates into `comp`.
+                            encode_client_rows_into(
                                 backend.as_ref(),
-                                &train_emb,
-                                &train_y,
+                                train_emb,
+                                train_y,
                                 &slices[s][j],
                                 &w,
                                 pl.u,
                                 p.u_max,
+                                &mut comp,
                                 &mut client_rng,
                             )?;
-                            comp.add(&xc, &yc);
                         }
                     }
                     parity.push(comp);
@@ -229,7 +335,7 @@ impl Trainer {
             }
         }
 
-        // 6. §Perf prepared-operand cache: every operand that is invariant
+        // 5. §Perf prepared-operand cache: every operand that is invariant
         //    across epochs is prepared once. Client slices and eval
         //    batches are prepared as *row gathers* — zero-copy views on
         //    the native backend, one-time literal builds on XLA (the
@@ -239,8 +345,8 @@ impl Trainer {
             let mut row = Vec::with_capacity(cfg.n_clients);
             for j in 0..cfg.n_clients {
                 row.push((
-                    backend.prepare_gather(&train_emb, &slices[s][j])?,
-                    backend.prepare_gather(&train_y, &slices[s][j])?,
+                    backend.prepare_gather(train_emb, &slices[s][j])?,
+                    backend.prepare_gather(train_y, &slices[s][j])?,
                     backend.prepare_col(&masks[s][j])?,
                 ));
             }
@@ -254,31 +360,30 @@ impl Trainer {
                 backend.prepare_col(&comp.mask())?,
             ));
         }
-        let test_idx: Vec<usize> = (0..test_emb.rows()).collect();
-        let prep_test = backend.prepare_gather_chunks(&test_emb, &test_idx, p.chunk)?;
+        let test_idx: Vec<usize> = (0..shared.test_emb.rows()).collect();
+        let prep_test = backend.prepare_gather_chunks(&shared.test_emb, &test_idx, p.chunk)?;
         let mut prep_batch = Vec::with_capacity(steps);
         for s in 0..steps {
             let mut idx = Vec::with_capacity(cfg.global_batch());
             for j in 0..cfg.n_clients {
                 idx.extend_from_slice(&slices[s][j]);
             }
-            let chunks = backend.prepare_gather_chunks(&train_emb, &idx, p.chunk)?;
+            let chunks = backend.prepare_gather_chunks(train_emb, &idx, p.chunk)?;
             prep_batch.push((chunks, idx));
         }
 
-        let beta = Matrix::zeros(p.q, p.c); // paper: model initialized to 0
+        let beta = Arc::new(Matrix::zeros(p.q, p.c)); // paper: model initialized to 0
         let sched = LrSchedule {
             lr0: cfg.train.lr0,
             decay: cfg.train.decay,
             decay_epochs: cfg.train.decay_epochs.clone(),
         };
+        let rff = shared.rff.clone();
         Ok(Trainer {
             cfg: cfg.clone(),
             backend,
-            train_y,
-            train_emb,
-            test_emb,
-            test,
+            pool,
+            shared,
             slices,
             masks,
             parity,
@@ -299,10 +404,20 @@ impl Trainer {
     }
 
     /// Name of the backend actually executing the compute (which may be
-    /// the native fallback even when the config asked for XLA — e.g. a
-    /// build without the `xla` feature).
+    /// the native fallback even when the config asked for `auto` — e.g.
+    /// a build without the `xla` feature).
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// The persistent worker pool the step loop's kernels execute on.
+    pub fn pool(&self) -> &'static WorkerPool {
+        self.pool
+    }
+
+    /// The shared dataset + embedding state (sweep reuse, diagnostics).
+    pub fn shared_data(&self) -> &Arc<SharedData> {
+        &self.shared
     }
 
     // -- Introspection accessors (diagnostics, notebooks, tests). The hot
@@ -311,17 +426,17 @@ impl Trainer {
 
     /// Embedded training features `(m_train, q)`.
     pub fn train_embedding(&self) -> &Matrix {
-        &self.train_emb
+        &self.shared.train_emb
     }
 
     /// One-hot training labels.
     pub fn train_labels(&self) -> &Matrix {
-        &self.train_y
+        &self.shared.train_y
     }
 
     /// Embedded test features.
     pub fn test_embedding(&self) -> &Matrix {
-        &self.test_emb
+        &self.shared.test_emb
     }
 
     /// Per-step, per-client global row indices of the mini-batch slices.
@@ -398,8 +513,10 @@ impl Trainer {
         let mut grad_sum = Matrix::zeros(p.q, p.c);
         let mut arrivals = 0usize;
         let step_time;
-        // One beta literal per step, shared by every gradient call (§Perf).
-        let beta_p = self.backend.prepare(&self.beta)?;
+        // One beta snapshot per step, shared by every gradient call
+        // (§Perf); on the native backend this is a refcount bump, on XLA
+        // a single literal build.
+        let beta_p = self.backend.prepare_shared(&self.beta)?;
 
         match &self.setup.plan {
             None => {
@@ -440,15 +557,15 @@ impl Trainer {
         }
 
         let g_mean = grad_sum.scale(1.0 / m_batch);
-        self.beta = self.backend.update(&self.beta, &g_mean, lr, lam)?;
+        self.beta = Arc::new(self.backend.update(&self.beta, &g_mean, lr, lam)?);
         Ok((step_time, arrivals))
     }
 
     /// Test accuracy + current-batch ridge loss (prepared chunks).
     fn evaluate(&self, s: usize) -> Result<(f64, f64)> {
-        let beta_p = self.backend.prepare(&self.beta)?;
-        let logits = self.predict_prepared(&self.prep_test, self.test.len(), &beta_p)?;
-        let acc = self.test.accuracy(&logits);
+        let beta_p = self.backend.prepare_shared(&self.beta)?;
+        let logits = self.predict_prepared(&self.prep_test, self.shared.test.len(), &beta_p)?;
+        let acc = self.shared.test.accuracy(&logits);
 
         // Mini-batch loss over step s's global batch; labels are read in
         // place from the shared matrix via the stored row-index set.
@@ -457,7 +574,7 @@ impl Trainer {
         let m = idx.len() as f64;
         let mut se = 0.0f64;
         for (r, &gi) in idx.iter().enumerate() {
-            for (a, b) in pred.row(r).iter().zip(self.train_y.row(gi)) {
+            for (a, b) in pred.row(r).iter().zip(self.shared.train_y.row(gi)) {
                 se += ((a - b) as f64).powi(2);
             }
         }
@@ -491,11 +608,12 @@ impl Trainer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::backend::NativeBackend;
 
     fn tiny_cfg(scheme: Scheme) -> ExperimentConfig {
         let mut cfg = ExperimentConfig::preset("tiny").unwrap();
         cfg.scheme = scheme;
-        cfg.use_xla = false; // tests run on the native backend
+        cfg.backend = "native".into(); // tests run on the native backend
         cfg.train.epochs = 6;
         cfg
     }
@@ -553,6 +671,35 @@ mod tests {
     }
 
     #[test]
+    fn shared_embedding_reuse_is_bitwise_neutral() {
+        // Building two trainers on one SharedData must reproduce the
+        // exact trajectory of two monolithic builds.
+        let cfg = tiny_cfg(Scheme::Coded);
+        let backend: Box<dyn ComputeBackend> = Box::new(NativeBackend);
+        let shared = Arc::new(SharedData::build(&cfg, backend.as_ref()).unwrap());
+        assert!(shared.compatible(&cfg));
+        let mut ta =
+            Trainer::with_shared(&cfg, Box::new(NativeBackend), Arc::clone(&shared)).unwrap();
+        let ra = ta.run().unwrap();
+        let uc = tiny_cfg(Scheme::Uncoded);
+        let mut tb =
+            Trainer::with_shared(&uc, Box::new(NativeBackend), Arc::clone(&shared)).unwrap();
+        let rb = tb.run().unwrap();
+        let rm = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap().run().unwrap();
+        assert_eq!(ra.records.len(), rm.records.len());
+        for (a, b) in ra.records.iter().zip(&rm.records) {
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.loss, b.loss);
+        }
+        assert!(rb.final_accuracy() > 0.5, "uncoded on shared data: {}", rb.final_accuracy());
+        // Incompatible config (different seed) is rejected.
+        let mut other = tiny_cfg(Scheme::Coded);
+        other.seed = 99;
+        assert!(!shared.compatible(&other));
+        assert!(Trainer::with_shared(&other, Box::new(NativeBackend), shared).is_err());
+    }
+
+    #[test]
     fn joint_scheme_picks_u_and_learns() {
         let mut cfg = tiny_cfg(Scheme::CodedJoint);
         cfg.train.epochs = 6;
@@ -604,6 +751,11 @@ mod tests {
         assert_eq!(t.train_embedding().shape(), (cfg.m_train, cfg.profile.q));
         assert_eq!(t.train_labels().shape(), (cfg.m_train, cfg.profile.c));
         assert_eq!(t.test_embedding().shape(), (cfg.m_test, cfg.profile.q));
+        // The pool handle is live and sized by the thread knob.
+        assert_eq!(
+            t.pool().workers(),
+            crate::mathx::par::num_threads().saturating_sub(1)
+        );
     }
 
     #[test]

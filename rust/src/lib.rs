@@ -16,14 +16,33 @@
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) for the gradient,
 //!   RFF embedding, and parity encoding hot spots.
 //!
-//! The native compute core is view-based: [`mathx::linalg`] provides the
-//! owning [`mathx::Matrix`] plus borrowed [`mathx::MatRef`] /
-//! [`mathx::MatMut`] views, and [`mathx::par`] provides cache-blocked
-//! kernels parallelized over row panels (matmul, transposed matmul, the
-//! masked gradient, parity encoding) including `gather_*` variants that
-//! compute over a row-index set without materializing the gathered slice.
-//! Thread count honors `CODEDFEDL_THREADS`; results are bitwise identical
-//! at any thread count, so seeded experiments replay exactly.
+//! The native compute core is view-based and pool-backed:
+//! [`mathx::linalg`] provides the owning [`mathx::Matrix`] plus borrowed
+//! [`mathx::MatRef`] / [`mathx::MatMut`] views; [`mathx::par`] provides
+//! cache-blocked kernels parallelized over row panels (matmul, transposed
+//! matmul, the masked gradient, parity encoding) with unroll-by-8
+//! autovectorizer-friendly inner loops, `gather_*` variants that compute
+//! over a row-index set without materializing the gathered slice, and a
+//! fused streaming `encode_accumulate` that folds client parity straight
+//! into the composite block (no `(u_max, q)` intermediate). Every kernel
+//! executes on the **persistent worker pool** in [`mathx::pool`]: one
+//! process-wide set of long-lived threads fed panel tasks, so the small
+//! per-client gradient calls pay no per-call spawn cost.
+//!
+//! `CODEDFEDL_THREADS` semantics under the pool: the knob (default: the
+//! host's available parallelism) fixes the pool size at first use —
+//! `N - 1` workers plus the calling thread. Kernel `*_with_threads`
+//! arguments above the pool size change task granularity, not the thread
+//! count. The panel split is a pure function of the output shape and
+//! panels are disjoint with fixed reduction order, so results are
+//! **bitwise identical for any thread count and pool size** — seeded
+//! experiments replay exactly. Worker panics propagate to the caller and
+//! the pool stays usable.
+//!
+//! Backends are selected by *name* through the [`runtime::registry`]
+//! (`native` / `xla` / `auto` via `ExperimentConfig::backend`), and
+//! multi-variant experiment sweeps share one dataset + RFF embedding
+//! build through [`benchx::sweep::SweepRunner`].
 //!
 //! The offline crate universe contains only `xla` + `anyhow`, so this crate
 //! carries its own substrates: PRNG and distributions ([`mathx`]), JSON and

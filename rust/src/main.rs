@@ -24,7 +24,8 @@ fn common_flags() -> Vec<codedfedl::cli::FlagSpec> {
         flag("seed", "override seed", None),
         flag("redundancy", "override train.redundancy", None),
         flag("out", "write the accuracy curve CSV here", None),
-        switch("native", "use the native backend (no PJRT/artifacts)"),
+        flag("backend", "compute backend registry name: native|xla|auto", None),
+        switch("native", "shorthand for --backend native (no PJRT/artifacts)"),
     ]
 }
 
@@ -56,8 +57,11 @@ fn build_config(args: &codedfedl::cli::Args) -> Result<ExperimentConfig> {
             cfg.set(k, v)?;
         }
     }
+    if let Some(b) = args.get("backend") {
+        cfg.set("backend", b)?;
+    }
     if args.has("native") {
-        cfg.use_xla = false;
+        cfg.backend = "native".into();
     }
     cfg.validate()?;
     Ok(cfg)

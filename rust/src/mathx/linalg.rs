@@ -460,6 +460,42 @@ pub fn t_matmul_naive(a: MatRef<'_>, b: MatRef<'_>) -> Matrix {
     out
 }
 
+/// Scalar reference for the fused streaming encode-accumulate:
+/// `out += G @ (w .* M[idx])` (`idx = None` reads `M` directly), walking
+/// the reduction in ascending `k` order. This is the oracle for
+/// [`crate::mathx::par::encode_accumulate`] — note it is *not* bitwise
+/// equal to materialize-then-add (the accumulator participates in the
+/// sum from the start instead of being added once at the end).
+pub fn encode_accumulate_naive(
+    g: &Matrix,
+    w: &[f32],
+    m: &Matrix,
+    idx: Option<&[usize]>,
+    out: &mut Matrix,
+) {
+    let l = idx.map_or(m.rows(), <[usize]>::len);
+    assert_eq!(g.cols(), l, "generator/slice mismatch");
+    assert_eq!(w.len(), l, "weights/slice mismatch");
+    assert_eq!(out.shape(), (g.rows(), m.cols()), "accumulator shape");
+    for r in 0..g.rows() {
+        let g_row = g.row(r);
+        for (kk, (&gv, &wv)) in g_row.iter().zip(w).enumerate() {
+            let av = gv * wv;
+            if av == 0.0 {
+                continue;
+            }
+            let src = match idx {
+                Some(ix) => ix[kk],
+                None => kk,
+            };
+            let m_row = m.row(src);
+            for (o, &mv) in out.row_mut(r).iter_mut().zip(m_row) {
+                *o += av * mv;
+            }
+        }
+    }
+}
+
 /// Shared shape validation for the gradient kernels: every dimension is
 /// checked up front with a descriptive error (no panics deep in a loop).
 pub(crate) fn check_gradient_shapes(

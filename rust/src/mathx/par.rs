@@ -3,27 +3,36 @@
 //! This is the native compute core the trainer, encoder and benches run
 //! on. Design rules:
 //!
-//! * **Panel parallelism.** Every kernel partitions its *output* into
-//!   contiguous row panels and hands each panel to one scoped thread
-//!   ([`par_row_panels`]); workers never share an accumulator, so no
-//!   locks, no atomics, no reduction trees. The offline crate universe
-//!   has only `xla` + `anyhow`, so the pool is hand-rolled on
-//!   [`std::thread::scope`].
+//! * **Panel parallelism over a persistent pool.** Every kernel
+//!   partitions its *output* into contiguous row panels and feeds them to
+//!   the process-wide worker pool ([`crate::mathx::pool`]) via
+//!   [`par_row_panels`]; workers never share an accumulator, so no locks,
+//!   no atomics, no reduction trees — and no per-call thread spawns (the
+//!   PR 1 `std::thread::scope` executor survives only as the
+//!   [`legacy`] bench baseline).
+//! * **Unrolled microkernel.** The inner loops are a single `axpy`-shaped
+//!   microkernel unrolled by 8 ([`axpy8`]) — elementwise independent, so
+//!   the autovectorizer can emit f32x8 SIMD while results stay bitwise
+//!   equal to the scalar `*_naive` oracles in [`crate::mathx::linalg`].
 //! * **Determinism.** Within a panel the reduction dimension is walked in
-//!   a fixed order, and the k-blocking preserves that order, so results
-//!   are **bitwise identical for any thread count** (and identical to the
-//!   scalar `*_naive` oracles in [`crate::mathx::linalg`]). Seeded
+//!   a fixed order, the k-blocking preserves that order, and the panel
+//!   split is a pure function of the shape — results are **bitwise
+//!   identical for any thread count and any pool size**. Seeded
 //!   experiments replay exactly no matter the host's core count.
 //! * **Zero-copy gathers.** The `gather_*` kernels take a row-index set
 //!   and read straight out of the source matrix — the hot federated
 //!   training path never materializes a client's slice.
+//! * **Streaming encode.** [`encode_accumulate`] folds parity encoding
+//!   straight into the composite accumulator (`out += G @ (w .* M[idx])`)
+//!   so the per-client `(u_max, q)` parity block is never materialized.
 //! * **Validation up front.** Gradient/encode kernels check every shape
 //!   and every row index before touching data and return descriptive
 //!   `anyhow` errors instead of panicking mid-loop.
 //!
 //! Thread count: `CODEDFEDL_THREADS` if set (>= 1), else
 //! [`std::thread::available_parallelism`]. Kernels fall back to a single
-//! thread when the work is too small to amortize a spawn.
+//! thread when the work is too small to amortize handing panels to the
+//! pool.
 
 use std::sync::OnceLock;
 
@@ -36,12 +45,13 @@ use crate::mathx::linalg::{check_gradient_shapes, MatMut, MatRef, Matrix};
 /// output panel.
 const KC: usize = 256;
 
-/// Multiply-accumulate count below which spawning threads costs more
-/// than it saves; such calls run on the caller's thread.
+/// Multiply-accumulate count below which parallelizing costs more than
+/// it saves; such calls run on the caller's thread.
 const PAR_MIN_OPS: usize = 1 << 15;
 
 /// Worker-thread count: `CODEDFEDL_THREADS` (>= 1) if set, else the
-/// host's available parallelism. Cached after the first call.
+/// host's available parallelism. Cached after the first call; the
+/// persistent pool ([`crate::mathx::pool::global`]) is sized from it.
 pub fn num_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
@@ -64,38 +74,40 @@ fn effective_threads(requested: usize, rows: usize, ops_per_row: usize) -> usize
 }
 
 /// Split `out` into at most `threads` contiguous row panels and run
-/// `kernel(first_row, panel)` on each, one scoped thread per panel (the
-/// last panel runs on the caller's thread). Panels are disjoint, so the
-/// kernel borrows no shared mutable state.
+/// `kernel(first_row, panel)` on each, executed by the persistent worker
+/// pool (plus the calling thread). Panels are disjoint, so the kernel
+/// borrows no shared mutable state; the split is deterministic, so the
+/// result is bitwise independent of the pool size.
 pub fn par_row_panels<'a, F>(out: MatMut<'a>, threads: usize, kernel: F)
 where
     F: Fn(usize, MatMut<'a>) + Sync,
 {
-    let rows = out.rows();
-    let t = threads.max(1).min(rows.max(1));
-    if t <= 1 {
-        kernel(0, out);
-        return;
+    crate::mathx::pool::global().run_panels(out, threads, kernel);
+}
+
+/// `out[i] += alpha * b[i]`, unrolled by 8. Every output element is
+/// touched exactly once per call, so this is bitwise identical to the
+/// scalar loop while giving the autovectorizer a clean f32x8 body (no
+/// cross-lane reduction to reassociate).
+#[inline(always)]
+fn axpy8(alpha: f32, b: &[f32], out: &mut [f32]) {
+    let n = out.len().min(b.len());
+    let split = n - n % 8;
+    let (b_main, b_tail) = b[..n].split_at(split);
+    let (o_main, o_tail) = out[..n].split_at_mut(split);
+    for (o, bv) in o_main.chunks_exact_mut(8).zip(b_main.chunks_exact(8)) {
+        o[0] += alpha * bv[0];
+        o[1] += alpha * bv[1];
+        o[2] += alpha * bv[2];
+        o[3] += alpha * bv[3];
+        o[4] += alpha * bv[4];
+        o[5] += alpha * bv[5];
+        o[6] += alpha * bv[6];
+        o[7] += alpha * bv[7];
     }
-    let base = rows / t;
-    let rem = rows % t;
-    std::thread::scope(|scope| {
-        let kernel = &kernel;
-        let mut rest = out;
-        let mut first = 0usize;
-        for p in 0..t {
-            let take = base + usize::from(p < rem);
-            let (head, tail) = rest.split_rows_at(take);
-            rest = tail;
-            let start = first;
-            first += take;
-            if p + 1 == t {
-                kernel(start, head);
-            } else {
-                scope.spawn(move || kernel(start, head));
-            }
-        }
-    });
+    for (o, &bv) in o_tail.iter_mut().zip(b_tail) {
+        *o += alpha * bv;
+    }
 }
 
 /// Validate a gather index set against a source row count.
@@ -184,10 +196,7 @@ fn matmul_panel(
                 if av == 0.0 {
                     continue;
                 }
-                let b_row = b.row(p);
-                for (o, &bv) in out_row.iter_mut().zip(b_row) {
-                    *o += av * bv;
-                }
+                axpy8(av, b.row(p), out_row);
             }
         }
     }
@@ -241,10 +250,7 @@ fn t_matmul_panel(
             if av == 0.0 {
                 continue;
             }
-            let out_row = panel.row_mut(pr);
-            for (o, &bv) in out_row.iter_mut().zip(b_row) {
-                *o += av * bv;
-            }
+            axpy8(av, b_row, panel.row_mut(pr));
         }
     }
 }
@@ -359,9 +365,7 @@ fn grad_impl(
                 if av == 0.0 {
                     continue;
                 }
-                for (o, &bv) in out_row.iter_mut().zip(beta.row(p)) {
-                    *o += av * bv;
-                }
+                axpy8(av, beta.row(p), out_row);
             }
             for (o, &yv) in out_row.iter_mut().zip(y.row(src)) {
                 *o = (*o - yv) * w;
@@ -400,6 +404,53 @@ fn encode_impl(
     idx: Option<&[usize]>,
     threads: usize,
 ) -> Result<Matrix> {
+    let mut out = Matrix::zeros(g.rows(), m.cols());
+    encode_accumulate_impl(g, w, m, idx, out.view_mut(), threads)?;
+    Ok(out)
+}
+
+/// Fused streaming encode-accumulate: `out += G @ (w .* M)`, panel
+/// parallel, reading `M`'s rows in place and accumulating straight into
+/// the caller's composite parity block — the `(u_max, q)` per-client
+/// parity intermediate is never materialized, halving the encode path's
+/// memory traffic.
+pub fn encode_accumulate(g: MatRef<'_>, w: &[f32], m: MatRef<'_>, out: MatMut<'_>) -> Result<()> {
+    encode_accumulate_impl(g, w, m, None, out, num_threads())
+}
+
+/// [`encode_accumulate`] over a row-index set:
+/// `out += G @ (w .* M[idx])` without materializing the gathered slice
+/// *or* the parity block.
+pub fn gather_encode_accumulate(
+    g: MatRef<'_>,
+    w: &[f32],
+    m: MatRef<'_>,
+    idx: &[usize],
+    out: MatMut<'_>,
+) -> Result<()> {
+    encode_accumulate_impl(g, w, m, Some(idx), out, num_threads())
+}
+
+/// [`encode_accumulate`] with an explicit thread count (tests/benches).
+pub fn encode_accumulate_with_threads(
+    g: MatRef<'_>,
+    w: &[f32],
+    m: MatRef<'_>,
+    idx: Option<&[usize]>,
+    out: MatMut<'_>,
+    threads: usize,
+) -> Result<()> {
+    encode_accumulate_impl(g, w, m, idx, out, threads)
+}
+
+fn encode_accumulate_impl(
+    g: MatRef<'_>,
+    w: &[f32],
+    m: MatRef<'_>,
+    idx: Option<&[usize]>,
+    out: MatMut<'_>,
+    threads: usize,
+) -> Result<()> {
     let l = idx.map_or(m.rows(), <[usize]>::len);
     ensure!(
         g.cols() == l,
@@ -414,10 +465,16 @@ fn encode_impl(
     if let Some(ix) = idx {
         check_indices(ix, m.rows(), "encode")?;
     }
+    ensure!(
+        out.shape() == (g.rows(), m.cols()),
+        "encode: accumulator is {:?} but the parity block is ({}, {})",
+        out.shape(),
+        g.rows(),
+        m.cols()
+    );
     let (u, n) = (g.rows(), m.cols());
-    let mut out = Matrix::zeros(u, n);
     let t = effective_threads(threads, u, l * n);
-    par_row_panels(out.view_mut(), t, |first, mut panel| {
+    par_row_panels(out, t, |first, mut panel| {
         for pr in 0..panel.rows() {
             let g_row = g.row(first + pr);
             let out_row = panel.row_mut(pr);
@@ -430,13 +487,221 @@ fn encode_impl(
                     Some(ix) => ix[kk],
                     None => kk,
                 };
-                for (o, &mv) in out_row.iter_mut().zip(m.row(src)) {
-                    *o += av * mv;
-                }
+                axpy8(av, m.row(src), out_row);
             }
         }
     });
-    Ok(out)
+    Ok(())
+}
+
+// ---- PR 1 baseline (bench reference only) ----
+
+/// The PR 1 kernels exactly as they shipped: a fresh `std::thread::scope`
+/// per call and scalar (non-unrolled) inner loops. Kept **only** so
+/// `benches/kernels.rs` can report the pooled-vs-scope and
+/// unrolled-vs-scalar speedups across PRs, and so regression tests can
+/// assert the rewrite is bitwise neutral. Not used by any hot path.
+pub mod legacy {
+    use super::*;
+
+    /// Per-call scoped executor (the PR 1 `par_row_panels`).
+    pub fn run_row_panels<'a, F>(out: MatMut<'a>, threads: usize, kernel: F)
+    where
+        F: Fn(usize, MatMut<'a>) + Sync,
+    {
+        let rows = out.rows();
+        let t = threads.max(1).min(rows.max(1));
+        if t <= 1 {
+            kernel(0, out);
+            return;
+        }
+        let base = rows / t;
+        let rem = rows % t;
+        std::thread::scope(|scope| {
+            let kernel = &kernel;
+            let mut rest = out;
+            let mut first = 0usize;
+            for p in 0..t {
+                let take = base + usize::from(p < rem);
+                let (head, tail) = rest.split_rows_at(take);
+                rest = tail;
+                let start = first;
+                first += take;
+                if p + 1 == t {
+                    kernel(start, head);
+                } else {
+                    scope.spawn(move || kernel(start, head));
+                }
+            }
+        });
+    }
+
+    fn matmul_panel_scalar(
+        a: MatRef<'_>,
+        idx: Option<&[usize]>,
+        b: MatRef<'_>,
+        first: usize,
+        panel: &mut MatMut<'_>,
+    ) {
+        let k = a.cols();
+        if b.cols() == 0 || panel.rows() == 0 {
+            return;
+        }
+        for kb in (0..k).step_by(KC) {
+            let ke = (kb + KC).min(k);
+            for pr in 0..panel.rows() {
+                let src = match idx {
+                    Some(ix) => ix[first + pr],
+                    None => first + pr,
+                };
+                let a_row = a.row(src);
+                let out_row = panel.row_mut(pr);
+                for p in kb..ke {
+                    let av = a_row[p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for (o, &bv) in out_row.iter_mut().zip(b.row(p)) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
+
+    fn t_matmul_panel_scalar(
+        a: MatRef<'_>,
+        a_idx: Option<&[usize]>,
+        b: MatRef<'_>,
+        first: usize,
+        panel: &mut MatMut<'_>,
+    ) {
+        let n = b.cols();
+        if n == 0 || panel.rows() == 0 {
+            return;
+        }
+        let red = a_idx.map_or(a.rows(), <[usize]>::len);
+        for r in 0..red {
+            let src = match a_idx {
+                Some(ix) => ix[r],
+                None => r,
+            };
+            let a_row = a.row(src);
+            let b_row = b.row(r);
+            for pr in 0..panel.rows() {
+                let av = a_row[first + pr];
+                if av == 0.0 {
+                    continue;
+                }
+                for (o, &bv) in panel.row_mut(pr).iter_mut().zip(b_row) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+
+    /// PR 1 `matmul_with_threads`: scoped spawn + scalar inner loop.
+    pub fn matmul_with_threads(a: MatRef<'_>, b: MatRef<'_>, threads: usize) -> Matrix {
+        assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut out = Matrix::zeros(m, n);
+        let t = effective_threads(threads, m, k * n);
+        run_row_panels(out.view_mut(), t, |first, mut panel| {
+            matmul_panel_scalar(a, None, b, first, &mut panel);
+        });
+        out
+    }
+
+    /// PR 1 `gather_gradient_with_threads`: scoped spawn + scalar loops.
+    pub fn gather_gradient_with_threads(
+        x: MatRef<'_>,
+        y: MatRef<'_>,
+        idx: &[usize],
+        beta: MatRef<'_>,
+        mask: &[f32],
+        threads: usize,
+    ) -> Result<Matrix> {
+        check_indices(idx, x.rows(), "gather_gradient(x)")?;
+        check_indices(idx, y.rows(), "gather_gradient(y)")?;
+        let rows = idx.len();
+        check_gradient_shapes(x.shape(), y.shape(), beta.shape(), mask.len(), rows)?;
+        let (q, c) = (x.cols(), beta.cols());
+        let mut err = Matrix::zeros(rows, c);
+        let t1 = effective_threads(threads, rows, q * c);
+        run_row_panels(err.view_mut(), t1, |first, mut panel| {
+            for pr in 0..panel.rows() {
+                let i = first + pr;
+                let w = mask[i];
+                if w == 0.0 {
+                    continue;
+                }
+                let src = idx[i];
+                let x_row = x.row(src);
+                let out_row = panel.row_mut(pr);
+                for (p, &av) in x_row.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for (o, &bv) in out_row.iter_mut().zip(beta.row(p)) {
+                        *o += av * bv;
+                    }
+                }
+                for (o, &yv) in out_row.iter_mut().zip(y.row(src)) {
+                    *o = (*o - yv) * w;
+                }
+            }
+        });
+        let mut out = Matrix::zeros(q, c);
+        let t2 = effective_threads(threads, q, rows * c);
+        let err_ref = err.view();
+        run_row_panels(out.view_mut(), t2, |first, mut panel| {
+            t_matmul_panel_scalar(x, Some(idx), err_ref, first, &mut panel);
+        });
+        Ok(out)
+    }
+
+    /// PR 1 materialize-then-add encode, exactly as it shipped: build
+    /// the `(u_max, n)` parity block with the scoped executor and scalar
+    /// inner loops, then fold it into the accumulator (two passes over
+    /// the block instead of the fused kernel's one).
+    pub fn encode_then_add(
+        g: MatRef<'_>,
+        w: &[f32],
+        m: MatRef<'_>,
+        idx: Option<&[usize]>,
+        out: &mut Matrix,
+    ) -> Result<()> {
+        let l = idx.map_or(m.rows(), <[usize]>::len);
+        ensure!(g.cols() == l, "encode: generator has {} columns, slice has {l} rows", g.cols());
+        ensure!(w.len() == l, "encode: weight vector covers {} rows, slice has {l}", w.len());
+        if let Some(ix) = idx {
+            check_indices(ix, m.rows(), "encode")?;
+        }
+        let (u, n) = (g.rows(), m.cols());
+        let mut block = Matrix::zeros(u, n);
+        let t = effective_threads(super::num_threads(), u, l * n);
+        run_row_panels(block.view_mut(), t, |first, mut panel| {
+            for pr in 0..panel.rows() {
+                let g_row = g.row(first + pr);
+                let out_row = panel.row_mut(pr);
+                for (kk, (&gv, &wv)) in g_row.iter().zip(w).enumerate() {
+                    let av = gv * wv;
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let src = match idx {
+                        Some(ix) => ix[kk],
+                        None => kk,
+                    };
+                    for (o, &mv) in out_row.iter_mut().zip(m.row(src)) {
+                        *o += av * mv;
+                    }
+                }
+            }
+        });
+        out.axpy_inplace(1.0, &block);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -522,6 +787,59 @@ mod tests {
         // Gather variant over a shuffled identity agrees with itself.
         let idx: Vec<usize> = (0..10).collect();
         assert_eq!(gather_encode(g.view(), &w, m.view(), &idx).unwrap(), got);
+    }
+
+    #[test]
+    fn fused_encode_accumulate_matches_naive_fused_oracle() {
+        use crate::mathx::linalg::encode_accumulate_naive;
+        let mut rng = Rng::new(9);
+        let g = Matrix::randn(6, 11, 0.0, 1.0, &mut rng);
+        let m = Matrix::randn(30, 5, 0.0, 1.0, &mut rng);
+        let idx: Vec<usize> = (0..11).map(|i| (i * 7) % 30).collect();
+        let w: Vec<f32> = (0..11).map(|i| if i % 3 == 0 { 0.0 } else { 1.3 }).collect();
+        // Non-zero starting accumulator: the fused kernel adds into it.
+        let start = Matrix::randn(6, 5, 0.0, 1.0, &mut rng);
+        let mut want = start.clone();
+        encode_accumulate_naive(&g, &w, &m, Some(&idx), &mut want);
+        for t in [1, 2, 3, 8] {
+            let mut got = start.clone();
+            encode_accumulate_with_threads(g.view(), &w, m.view(), Some(&idx), got.view_mut(), t)
+                .unwrap();
+            assert_eq!(got, want, "{t}-thread fused encode differs");
+        }
+    }
+
+    #[test]
+    fn fused_encode_rejects_shape_mismatch() {
+        let g = Matrix::zeros(3, 4);
+        let m = Matrix::zeros(4, 2);
+        let mut bad = Matrix::zeros(2, 2);
+        let err = encode_accumulate(g.view(), &[1.0; 4], m.view(), bad.view_mut()).unwrap_err();
+        assert!(err.to_string().contains("accumulator"), "{err}");
+    }
+
+    #[test]
+    fn legacy_kernels_are_bitwise_equal_to_pooled_unrolled() {
+        let mut rng = Rng::new(10);
+        let a = Matrix::randn(45, 70, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(70, 9, 0.0, 1.0, &mut rng);
+        for t in [1, 3] {
+            assert_eq!(
+                legacy::matmul_with_threads(a.view(), b.view(), t),
+                matmul_with_threads(a.view(), b.view(), t)
+            );
+        }
+        let x = Matrix::randn(40, 12, 0.0, 1.0, &mut rng);
+        let y = Matrix::randn(40, 3, 0.0, 1.0, &mut rng);
+        let beta = Matrix::randn(12, 3, 0.0, 1.0, &mut rng);
+        let idx = vec![0usize, 39, 17, 17, 4];
+        let mask = vec![1.0f32, 0.5, 0.0, 2.0, 1.0];
+        assert_eq!(
+            legacy::gather_gradient_with_threads(x.view(), y.view(), &idx, beta.view(), &mask, 2)
+                .unwrap(),
+            gather_gradient_with_threads(x.view(), y.view(), &idx, beta.view(), &mask, 2)
+                .unwrap()
+        );
     }
 
     #[test]

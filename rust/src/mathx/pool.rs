@@ -1,0 +1,369 @@
+//! Persistent worker pool for the panel-parallel compute kernels.
+//!
+//! PR 1's kernels spawned a fresh `std::thread::scope` per call, which is
+//! fine for big server-side products but dominates the small per-client
+//! gradients (l ~ 100-400 rows): a spawn + join costs tens of
+//! microseconds while the panel itself runs for a few. This module keeps
+//! a process-wide set of long-lived workers ([`global`], sized by
+//! `CODEDFEDL_THREADS` via [`crate::mathx::par::num_threads`]) and feeds
+//! them *panel tasks* instead:
+//!
+//! * **One job at a time.** [`WorkerPool::run_panels`] splits the output
+//!   into disjoint row panels, publishes them as a task queue, runs tasks
+//!   on the calling thread too, and blocks until every panel is done.
+//!   Jobs are serialized by an internal run lock, so concurrent callers
+//!   (e.g. parallel tests) queue up instead of interleaving panels.
+//! * **Determinism.** Which worker executes which panel is racy, but the
+//!   panel *split* is a pure function of (rows, requested panel count)
+//!   and panels are disjoint output regions whose inner reduction order
+//!   is fixed — results are bitwise identical for any pool size, any
+//!   requested thread count, and identical to the scalar oracles.
+//! * **Panic propagation.** A panicking panel poisons the job: remaining
+//!   tasks are drained without running, sibling workers detach cleanly,
+//!   and the first panic payload is re-raised on the *calling* thread
+//!   ([`std::panic::resume_unwind`]). The pool itself stays usable.
+//! * **No dependencies.** The offline crate universe has no rayon or
+//!   crossbeam; the scoped-lifetime hand-off is a contained `unsafe`
+//!   lifetime erasure, sound because the caller never returns before
+//!   every worker has detached from the job.
+//!
+//! Kernels must not call back into the pool from inside a panel closure
+//! (the run lock is not reentrant); the `mathx::par` kernels issue their
+//! stages sequentially from the caller, so this never arises there.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
+
+use crate::mathx::linalg::MatMut;
+
+/// Lock helper: the pool's internal mutexes never guard user invariants,
+/// so a poisoned lock (a panicking panel) is safe to keep using.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A panel job: the task queue plus panic bookkeeping. Lives on the
+/// submitting caller's stack for the duration of one `run_panels` call.
+struct Job<'k, 'env> {
+    /// Remaining `(first_row, panel)` tasks; workers pop from the back.
+    tasks: Mutex<Vec<(usize, MatMut<'env>)>>,
+    kernel: &'k (dyn Fn(usize, MatMut<'env>) + Sync),
+    /// First panic payload raised by any panel (re-raised on the caller).
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+    /// Set on panic: remaining tasks are drained without running.
+    poisoned: AtomicBool,
+}
+
+/// Object-safe face of [`Job`] the workers see. `Sync` is a supertrait so
+/// a shared reference to a job is `Send` into the worker threads.
+trait RunnableJob: Sync {
+    fn run_until_drained(&self);
+}
+
+impl RunnableJob for Job<'_, '_> {
+    fn run_until_drained(&self) {
+        loop {
+            let task = lock(&self.tasks).pop();
+            let Some((first, panel)) = task else { return };
+            if self.poisoned.load(Ordering::Relaxed) {
+                continue; // a sibling panicked; drain without running
+            }
+            if let Err(payload) =
+                catch_unwind(AssertUnwindSafe(|| (self.kernel)(first, panel)))
+            {
+                self.poisoned.store(true, Ordering::Relaxed);
+                let mut slot = lock(&self.panic);
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+        }
+    }
+}
+
+/// SAFETY: callers of [`WorkerPool::run_panels`] keep the job (and every
+/// borrow inside it) alive until all workers have detached, so extending
+/// the reference to `'static` for the hand-off through the shared slot
+/// never lets a worker see a dangling job.
+unsafe fn erase<'a>(job: &'a (dyn RunnableJob + 'a)) -> &'static (dyn RunnableJob + 'static) {
+    std::mem::transmute(job)
+}
+
+/// State behind the pool's mutex: the published job (if any), how many
+/// workers are currently attached to it, and the shutdown flag.
+struct Slot {
+    job: Option<&'static (dyn RunnableJob + 'static)>,
+    attached: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<Slot>,
+    /// Workers wait here for a job (or shutdown).
+    work_cv: Condvar,
+    /// The caller waits here for the last attached worker to detach.
+    done_cv: Condvar,
+}
+
+/// A persistent pool of panel workers. The process-wide instance is
+/// [`global`]; tests build private pools via [`WorkerPool::with_workers`].
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes jobs: one panel queue in flight at a time.
+    run_lock: Mutex<()>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` long-lived threads. The caller of
+    /// [`WorkerPool::run_panels`] always participates too, so a pool for
+    /// `n`-way parallelism wants `n - 1` workers (and `0` workers means
+    /// every kernel runs inline on the caller).
+    pub fn with_workers(workers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(Slot { job: None, attached: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("codedfedl-pool-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawning pool worker");
+            handles.push(h);
+        }
+        WorkerPool { shared, handles, run_lock: Mutex::new(()), workers }
+    }
+
+    /// Number of long-lived worker threads (the caller adds one more
+    /// execution lane on top during [`WorkerPool::run_panels`]).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Split `out` into at most `panels` contiguous row panels and run
+    /// `kernel(first_row, panel)` over all of them, using the pool's
+    /// workers plus the calling thread. Blocks until every panel is done;
+    /// re-raises the first panel panic on the caller.
+    ///
+    /// Requesting more panels than the pool has threads is allowed — the
+    /// extra panels simply queue (task granularity, not extra threads) —
+    /// and the result is bitwise identical either way.
+    pub fn run_panels<'env, F>(&self, out: MatMut<'env>, panels: usize, kernel: F)
+    where
+        F: Fn(usize, MatMut<'env>) + Sync,
+    {
+        let rows = out.rows();
+        let want = panels.max(1).min(rows.max(1));
+        if want <= 1 || self.workers == 0 {
+            // Inline: same panel split, executed sequentially in ascending
+            // row order (bitwise identical — panels are disjoint).
+            for (first, panel) in split_panels(out, want) {
+                kernel(first, panel);
+            }
+            return;
+        }
+
+        let mut tasks = split_panels(out, want);
+        tasks.reverse(); // pop() hands out panels in ascending row order
+        let job = Job {
+            tasks: Mutex::new(tasks),
+            kernel: &kernel,
+            panic: Mutex::new(None),
+            poisoned: AtomicBool::new(false),
+        };
+
+        let _run = lock(&self.run_lock);
+        {
+            // SAFETY: `job` outlives this scope; we retract it from the
+            // slot and wait for `attached == 0` before returning, so no
+            // worker touches it after it dies.
+            let erased = unsafe { erase(&job) };
+            let mut st = lock(&self.shared.state);
+            st.job = Some(erased);
+            drop(st);
+            self.shared.work_cv.notify_all();
+        }
+
+        // The caller is a worker too.
+        job.run_until_drained();
+
+        {
+            let mut st = lock(&self.shared.state);
+            st.job = None; // stop further attaches to the spent job
+            while st.attached > 0 {
+                st = self
+                    .shared
+                    .done_cv
+                    .wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+        }
+
+        if let Some(payload) = lock(&job.panic).take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        lock(&self.shared.state).shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Deterministic panel split: `panels` contiguous row ranges whose sizes
+/// differ by at most one, ordered by first row. Pure function of
+/// `(rows, panels)` — this is what keeps results independent of the pool.
+fn split_panels(out: MatMut<'_>, panels: usize) -> Vec<(usize, MatMut<'_>)> {
+    let rows = out.rows();
+    let n = panels.max(1);
+    let base = rows / n;
+    let rem = rows % n;
+    let mut tasks = Vec::with_capacity(n);
+    let mut rest = out;
+    let mut first = 0usize;
+    for p in 0..n {
+        let take = base + usize::from(p < rem);
+        let (head, tail) = rest.split_rows_at(take);
+        rest = tail;
+        tasks.push((first, head));
+        first += take;
+    }
+    tasks
+}
+
+fn worker_loop(shared: &PoolShared) {
+    let mut st = lock(&shared.state);
+    loop {
+        if st.shutdown {
+            return;
+        }
+        if let Some(job) = st.job {
+            st.attached += 1;
+            drop(st);
+            job.run_until_drained();
+            st = lock(&shared.state);
+            // This worker saw the queue drain: retract the spent job so
+            // siblings stop attaching to it.
+            if let Some(cur) = st.job {
+                if std::ptr::eq(
+                    cur as *const dyn RunnableJob as *const (),
+                    job as *const dyn RunnableJob as *const (),
+                ) {
+                    st.job = None;
+                }
+            }
+            st.attached -= 1;
+            shared.done_cv.notify_all();
+        } else {
+            st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// The process-wide pool: `num_threads() - 1` workers (the calling thread
+/// is the final lane), created on first use and alive for the process
+/// lifetime. `CODEDFEDL_THREADS` therefore bounds *total* compute
+/// threads, exactly as it did under the scoped executor.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        WorkerPool::with_workers(crate::mathx::par::num_threads().saturating_sub(1))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::linalg::Matrix;
+
+    #[test]
+    fn pool_covers_every_row_exactly_once() {
+        let pool = WorkerPool::with_workers(3);
+        let mut m = Matrix::zeros(23, 4);
+        pool.run_panels(m.view_mut(), 6, |first, mut panel| {
+            for pr in 0..panel.rows() {
+                let i = first + pr;
+                for v in panel.row_mut(pr) {
+                    *v += (i + 1) as f32;
+                }
+            }
+        });
+        for r in 0..23 {
+            assert!(m.row(r).iter().all(|&v| v == (r + 1) as f32), "row {r}");
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::with_workers(0);
+        let mut m = Matrix::zeros(5, 2);
+        pool.run_panels(m.view_mut(), 4, |first, mut panel| {
+            for pr in 0..panel.rows() {
+                panel.row_mut(pr).fill((first + pr) as f32);
+            }
+        });
+        for r in 0..5 {
+            assert_eq!(m.row(r), &[r as f32, r as f32]);
+        }
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_the_same_workers() {
+        let pool = WorkerPool::with_workers(2);
+        for round in 0..50 {
+            let mut m = Matrix::zeros(17, 3);
+            pool.run_panels(m.view_mut(), 4, |first, mut panel| {
+                for pr in 0..panel.rows() {
+                    panel.row_mut(pr).fill((round + first + pr) as f32);
+                }
+            });
+            for r in 0..17 {
+                assert_eq!(m.row(r)[0], (round + r) as f32, "round {round} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::with_workers(2);
+        let mut m = Matrix::zeros(16, 2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_panels(m.view_mut(), 4, |first, _panel| {
+                if first >= 8 {
+                    panic!("injected panel failure");
+                }
+            });
+        }));
+        let err = result.expect_err("panel panic must reach the caller");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("injected"), "unexpected payload: {msg}");
+
+        // The pool is still fully operational after the poisoned job.
+        let mut m2 = Matrix::zeros(9, 2);
+        pool.run_panels(m2.view_mut(), 3, |first, mut panel| {
+            for pr in 0..panel.rows() {
+                panel.row_mut(pr).fill((first + pr) as f32 + 1.0);
+            }
+        });
+        for r in 0..9 {
+            assert_eq!(m2.row(r)[0], r as f32 + 1.0);
+        }
+    }
+
+    #[test]
+    fn global_pool_is_sized_by_thread_knob() {
+        let p = global();
+        assert_eq!(p.workers(), crate::mathx::par::num_threads().saturating_sub(1));
+    }
+}

@@ -35,6 +35,10 @@ use crate::mathx::par;
 pub enum PreparedMatrix {
     /// Plain host matrix (native backend, and the fallback path).
     Native(Matrix),
+    /// Zero-copy shared host matrix (the native backend's `prepare_shared`
+    /// fast path: the per-step beta snapshot is an `Arc` bump, not a
+    /// clone).
+    Shared(Arc<Matrix>),
     /// Zero-copy row gather `source[idx]` (native backend).
     Gather {
         source: Arc<Matrix>,
@@ -50,6 +54,7 @@ impl PreparedMatrix {
     pub fn shape(&self) -> (usize, usize) {
         match self {
             PreparedMatrix::Native(m) => m.shape(),
+            PreparedMatrix::Shared(m) => m.shape(),
             PreparedMatrix::Gather { source, idx } => (idx.len(), source.cols()),
             #[cfg(feature = "xla")]
             PreparedMatrix::Xla(_, s) => *s,
@@ -61,6 +66,7 @@ impl PreparedMatrix {
     pub fn as_native(&self) -> Result<&Matrix> {
         match self {
             PreparedMatrix::Native(m) => Ok(m),
+            PreparedMatrix::Shared(m) => Ok(m),
             PreparedMatrix::Gather { .. } => {
                 bail!("operand is a row-gather view; materialize it with as_dense()")
             }
@@ -69,11 +75,12 @@ impl PreparedMatrix {
         }
     }
 
-    /// Dense host view: borrows `Native` operands, materializes `Gather`
-    /// operands, errors for device literals.
+    /// Dense host view: borrows `Native`/`Shared` operands, materializes
+    /// `Gather` operands, errors for device literals.
     pub fn as_dense(&self) -> Result<Cow<'_, Matrix>> {
         match self {
             PreparedMatrix::Native(m) => Ok(Cow::Borrowed(m)),
+            PreparedMatrix::Shared(m) => Ok(Cow::Borrowed(m)),
             PreparedMatrix::Gather { source, idx } => Ok(Cow::Owned(source.select_rows(idx))),
             #[cfg(feature = "xla")]
             PreparedMatrix::Xla(..) => bail!("operand was prepared for the XLA backend"),
@@ -116,6 +123,14 @@ pub trait ComputeBackend {
     /// Prepare a column vector (masks) for repeated use.
     fn prepare_col(&self, v: &[f32]) -> Result<PreparedMatrix> {
         Ok(PreparedMatrix::Native(Matrix::from_vec(v.len(), 1, v.to_vec())))
+    }
+
+    /// Prepare an `Arc`-shared matrix. The native backend bumps the
+    /// refcount (zero-copy — this is how the trainer snapshots beta every
+    /// step without a host clone); backends with device-resident operands
+    /// fall back to [`ComputeBackend::prepare`].
+    fn prepare_shared(&self, m: &Arc<Matrix>) -> Result<PreparedMatrix> {
+        self.prepare(m)
     }
 
     /// Prepare the row gather `source[idx]` for repeated use. The native
@@ -162,6 +177,32 @@ pub trait ComputeBackend {
     ) -> Result<Matrix> {
         par::check_indices(idx, source.rows(), "encode_gather")?;
         self.encode(g, w, &source.select_rows(idx))
+    }
+
+    /// Streaming parity encode-accumulate over a row-index set:
+    /// `out += G @ (w * M[idx])`. The native backend fuses the encode
+    /// into the accumulation (the `(u_max, cols)` parity block is never
+    /// materialized); the default for artifact-shape backends computes
+    /// the block and folds it in. The two differ in f32 rounding (the
+    /// accumulator joins the sum at a different point), but each is
+    /// deterministic for a fixed backend.
+    fn encode_accumulate_gather(
+        &self,
+        g: &Matrix,
+        w: &[f32],
+        source: &Matrix,
+        idx: &[usize],
+        out: &mut Matrix,
+    ) -> Result<()> {
+        let block = self.encode_gather(g, w, source, idx)?;
+        ensure!(
+            out.shape() == block.shape(),
+            "encode_accumulate_gather: accumulator is {:?} but the parity block is {:?}",
+            out.shape(),
+            block.shape()
+        );
+        out.axpy_inplace(1.0, &block);
+        Ok(())
     }
 
     /// [`ComputeBackend::grad_client`] over prepared operands (`beta` is
@@ -240,10 +281,11 @@ pub trait ComputeBackend {
     }
 }
 
-/// Pure-rust implementation over [`crate::mathx::par`]. Exact same math
-/// as the artifacts; used as the test oracle and for artifact-free runs
-/// (`use_xla = false`). Prepared gathers stay zero-copy: the gradient,
-/// predict and encode paths read rows of the shared source in place.
+/// Pure-rust implementation over [`crate::mathx::par`]: the pooled,
+/// unrolled panel kernels. Exact same math as the artifacts; used as the
+/// test oracle and for artifact-free runs (`backend = "native"`).
+/// Prepared gathers stay zero-copy: the gradient, predict and encode
+/// paths read rows of the shared source in place.
 pub struct NativeBackend;
 
 impl ComputeBackend for NativeBackend {
@@ -288,6 +330,10 @@ impl ComputeBackend for NativeBackend {
 
     // ---- zero-copy prepared-operand overrides ----
 
+    fn prepare_shared(&self, m: &Arc<Matrix>) -> Result<PreparedMatrix> {
+        Ok(PreparedMatrix::Shared(Arc::clone(m)))
+    }
+
     fn prepare_gather(&self, source: &Arc<Matrix>, idx: &[usize]) -> Result<PreparedMatrix> {
         par::check_indices(idx, source.rows(), "prepare_gather")?;
         Ok(PreparedMatrix::Gather { source: Arc::clone(source), idx: Arc::new(idx.to_vec()) })
@@ -318,6 +364,20 @@ impl ComputeBackend for NativeBackend {
         idx: &[usize],
     ) -> Result<Matrix> {
         par::gather_encode(g.view(), w, source.view(), idx)
+    }
+
+    fn encode_accumulate_gather(
+        &self,
+        g: &Matrix,
+        w: &[f32],
+        source: &Matrix,
+        idx: &[usize],
+        out: &mut Matrix,
+    ) -> Result<()> {
+        // Fused streaming kernel: parity rows accumulate panel-by-panel
+        // straight into the composite block — no `(u_max, cols)`
+        // intermediate, half the memory traffic of encode-then-add.
+        par::gather_encode_accumulate(g.view(), w, source.view(), idx, out.view_mut())
     }
 
     fn grad_client_p(
@@ -507,6 +567,40 @@ mod tests {
         let got = nb.encode_gather(&g, &w, &source, &idx).unwrap();
         let want = nb.encode(&g, &w, &source.select_rows(&idx)).unwrap();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn prepare_shared_is_zero_copy_on_native() {
+        let nb = NativeBackend;
+        let m = Arc::new(Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]));
+        let p = nb.prepare_shared(&m).unwrap();
+        assert_eq!(p.shape(), (2, 2));
+        // Same allocation: the prepared operand shares the Arc.
+        match &p {
+            PreparedMatrix::Shared(s) => assert!(Arc::ptr_eq(s, &m)),
+            other => panic!("expected Shared, got shape {:?}", other.shape()),
+        }
+        assert_eq!(p.as_native().unwrap().data(), m.data());
+        assert_eq!(p.as_dense().unwrap().data(), m.data());
+    }
+
+    #[test]
+    fn fused_encode_accumulate_matches_naive_oracle() {
+        use crate::mathx::linalg::encode_accumulate_naive;
+        let mut rng = Rng::new(8);
+        let nb = NativeBackend;
+        let source = Matrix::randn(20, 5, 0.0, 1.0, &mut rng);
+        let idx = vec![3usize, 19, 3, 0];
+        let g = Matrix::randn(6, 4, 0.0, 1.0, &mut rng);
+        let w = vec![1.0f32, 0.5, 0.0, 2.0];
+        let mut got = Matrix::randn(6, 5, 0.0, 1.0, &mut rng);
+        let mut want = got.clone();
+        nb.encode_accumulate_gather(&g, &w, &source, &idx, &mut got).unwrap();
+        encode_accumulate_naive(&g, &w, &source, Some(&idx), &mut want);
+        assert_eq!(got, want);
+        // Shape mismatch is rejected before touching the accumulator.
+        let mut bad = Matrix::zeros(2, 2);
+        assert!(nb.encode_accumulate_gather(&g, &w, &source, &idx, &mut bad).is_err());
     }
 
     #[test]

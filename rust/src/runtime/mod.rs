@@ -7,6 +7,9 @@
 //! * [`backend`] — the [`backend::ComputeBackend`] trait, the prepared-
 //!   operand hot path (zero-copy row gathers on native, cached literals
 //!   on XLA), and the pure-rust [`backend::NativeBackend`] oracle.
+//! * [`registry`] — the name → constructor backend registry
+//!   (`native` / `xla` / `auto`); backends are selected by name via
+//!   `ExperimentConfig::backend` instead of the old `use_xla` boolean.
 //! * `xla` (feature `xla`) — `XlaBackend`: `PjRtClient::cpu()` →
 //!   `HloModuleProto::from_text_file` → `compile` → `execute`.
 //!
@@ -14,10 +17,12 @@
 
 pub mod artifact;
 pub mod backend;
+pub mod registry;
 #[cfg(feature = "xla")]
 pub mod xla;
 
 pub use artifact::{ArtifactMeta, Manifest, ProfileArtifacts};
 pub use backend::{ComputeBackend, NativeBackend};
+pub use registry::{create_backend, BackendRegistry};
 #[cfg(feature = "xla")]
 pub use xla::XlaBackend;

@@ -1,0 +1,154 @@
+//! Name → constructor registry for compute backends.
+//!
+//! Replaces the old `use_xla: bool` config switch: a backend is selected
+//! by *name* (`ExperimentConfig::backend`), and new implementations
+//! (threaded-native variants, future GPU/PJRT-device backends) plug in by
+//! registering a constructor instead of growing another boolean.
+//!
+//! Built-in names:
+//!
+//! * `native` — the pure-rust pooled/unrolled kernels
+//!   ([`crate::runtime::backend::NativeBackend`]); always available.
+//! * `xla` — the PJRT artifact executor; requires the `xla` cargo
+//!   feature *and* built artifacts, errors otherwise.
+//! * `auto` — `xla` when the feature is compiled in and
+//!   `<artifacts_dir>/manifest.json` exists, else `native`. This is the
+//!   default in every preset, preserving the old "use XLA when
+//!   available, fall back silently" behavior.
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::runtime::backend::{ComputeBackend, NativeBackend};
+
+/// A backend constructor: builds a ready-to-use backend from the
+/// experiment config (artifact paths, shape profile, ...).
+pub type BackendCtor = fn(&ExperimentConfig) -> Result<Box<dyn ComputeBackend>>;
+
+/// An ordered name → constructor map.
+pub struct BackendRegistry {
+    ctors: BTreeMap<&'static str, BackendCtor>,
+}
+
+impl BackendRegistry {
+    /// Empty registry (embedding applications that want full control).
+    pub fn empty() -> BackendRegistry {
+        BackendRegistry { ctors: BTreeMap::new() }
+    }
+
+    /// Registry pre-populated with the built-in backends.
+    pub fn with_builtins() -> BackendRegistry {
+        let mut reg = BackendRegistry::empty();
+        reg.register("native", native_ctor);
+        reg.register("xla", xla_ctor);
+        reg.register("auto", auto_ctor);
+        reg
+    }
+
+    /// Add (or replace) a named constructor.
+    pub fn register(&mut self, name: &'static str, ctor: BackendCtor) {
+        self.ctors.insert(name, ctor);
+    }
+
+    /// Registered backend names, sorted.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.ctors.keys().copied().collect()
+    }
+
+    /// Construct the backend registered under `name`.
+    pub fn create(&self, name: &str, cfg: &ExperimentConfig) -> Result<Box<dyn ComputeBackend>> {
+        match self.ctors.get(name.trim()) {
+            Some(ctor) => ctor(cfg),
+            None => bail!(
+                "unknown backend '{name}' (available: {})",
+                self.names().join(", ")
+            ),
+        }
+    }
+}
+
+fn native_ctor(_cfg: &ExperimentConfig) -> Result<Box<dyn ComputeBackend>> {
+    Ok(Box::new(NativeBackend))
+}
+
+#[cfg(feature = "xla")]
+fn xla_ctor(cfg: &ExperimentConfig) -> Result<Box<dyn ComputeBackend>> {
+    Ok(Box::new(crate::runtime::xla::XlaBackend::load(&cfg.artifacts_dir, &cfg.profile)?))
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_ctor(_cfg: &ExperimentConfig) -> Result<Box<dyn ComputeBackend>> {
+    bail!("backend 'xla' requires building with the 'xla' cargo feature")
+}
+
+fn auto_ctor(cfg: &ExperimentConfig) -> Result<Box<dyn ComputeBackend>> {
+    #[cfg(feature = "xla")]
+    {
+        if std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+            return xla_ctor(cfg);
+        }
+        crate::log_info!("backend 'auto': artifacts missing; using the native backend");
+    }
+    native_ctor(cfg)
+}
+
+/// The process-wide registry of built-in backends.
+pub fn builtin() -> &'static BackendRegistry {
+    static REG: OnceLock<BackendRegistry> = OnceLock::new();
+    REG.get_or_init(BackendRegistry::with_builtins)
+}
+
+/// Construct a backend by name from the built-in registry.
+pub fn create_backend(name: &str, cfg: &ExperimentConfig) -> Result<Box<dyn ComputeBackend>> {
+    builtin().create(name, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_names_are_registered() {
+        let names = builtin().names();
+        assert!(names.contains(&"native"));
+        assert!(names.contains(&"xla"));
+        assert!(names.contains(&"auto"));
+    }
+
+    #[test]
+    fn native_and_auto_construct_without_artifacts() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.artifacts_dir = "definitely-missing-artifacts".into();
+        assert_eq!(create_backend("native", &cfg).unwrap().name(), "native");
+        // Without artifacts (and in the default build, without the xla
+        // feature) auto resolves to the native backend.
+        assert_eq!(create_backend("auto", &cfg).unwrap().name(), "native");
+    }
+
+    #[test]
+    fn unknown_backend_is_a_descriptive_error() {
+        let cfg = ExperimentConfig::preset("tiny").unwrap();
+        let err = create_backend("pjrt-gpu", &cfg).unwrap_err();
+        assert!(err.to_string().contains("unknown backend"), "{err}");
+        assert!(err.to_string().contains("native"), "{err}");
+    }
+
+    #[test]
+    fn custom_registration_wins() {
+        let mut reg = BackendRegistry::with_builtins();
+        reg.register("native2", native_ctor);
+        let cfg = ExperimentConfig::preset("tiny").unwrap();
+        assert_eq!(reg.create("native2", &cfg).unwrap().name(), "native");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_backend_errors_without_the_feature() {
+        let cfg = ExperimentConfig::preset("tiny").unwrap();
+        let err = create_backend("xla", &cfg).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+}

@@ -22,6 +22,12 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Standalone seeded generator for tests that drive their own case
+    /// loop instead of going through [`check`].
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed), case: 0 }
+    }
+
     /// Underlying RNG for custom draws.
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng

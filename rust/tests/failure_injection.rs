@@ -13,7 +13,7 @@ use codedfedl::simnet::topology::build_population;
 fn tiny(scheme: Scheme) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::preset("tiny").unwrap();
     cfg.scheme = scheme;
-    cfg.use_xla = false;
+    cfg.backend = "native".into();
     cfg.train.epochs = 5;
     cfg
 }

@@ -3,10 +3,16 @@
 //! adversarial shapes: empty matrices, single rows/columns, tall-skinny,
 //! dimensions that are not a multiple of the k-block, and 1-thread vs
 //! N-thread agreement (which must be *bitwise exact* — the panel split
-//! never changes accumulation order).
+//! never changes accumulation order). Since PR 2 every `par` kernel
+//! executes on the persistent worker pool (`mathx::pool`), so these
+//! properties also pin pool scheduling: pool reuse across sequential
+//! kernels, oversubscribed panel counts, and panic propagation.
 
-use codedfedl::mathx::linalg::{gradient_naive, matmul_naive, t_matmul_naive, Matrix};
+use codedfedl::mathx::linalg::{
+    encode_accumulate_naive, gradient_naive, matmul_naive, t_matmul_naive, Matrix,
+};
 use codedfedl::mathx::par;
+use codedfedl::mathx::pool::WorkerPool;
 use codedfedl::testx::{check, Gen};
 
 /// Adversarial dimension pool: empty, tiny, around the KC=256 block edge,
@@ -158,6 +164,128 @@ fn scale_rows_and_encode_match_oracles() {
         let diff = got.max_abs_diff(&want);
         assert!(diff < 1e-4, "encode differs from scale-then-matmul by {diff}");
     });
+}
+
+#[test]
+fn fused_encode_accumulate_matches_naive_at_any_thread_count() {
+    check("par::encode_accumulate vs naive fused oracle", 40, |g: &mut Gen| {
+        let source_rows = 1 + *g.choose(&[0usize, 3, 40, 257]);
+        let l = *g.choose(&[0usize, 1, 2, 33, 256]);
+        let u = *g.choose(&[0usize, 1, 4, 17]);
+        let n = *g.choose(&[1usize, 2, 5, 9]);
+        let gm = rand_matrix(g, u, l);
+        let m = rand_matrix(g, source_rows, n);
+        let idx = rand_indices(g, l, source_rows);
+        let w = rand_mask(g, l);
+        // Non-zero starting accumulator: the fused kernel adds into it.
+        let start = rand_matrix(g, u, n);
+        let mut want = start.clone();
+        encode_accumulate_naive(&gm, &w, &m, Some(&idx), &mut want);
+        for &t in &THREADS {
+            let mut got = start.clone();
+            par::encode_accumulate_with_threads(
+                gm.view(),
+                &w,
+                m.view(),
+                Some(&idx),
+                got.view_mut(),
+                t,
+            )
+            .unwrap();
+            assert_eq!(got, want, "{t}-thread fused encode differs (u={u}, l={l})");
+        }
+    });
+}
+
+#[test]
+fn pool_reuse_across_sequential_kernels_stays_exact() {
+    // One process-wide pool serves a whole train of different kernels;
+    // every result must stay bitwise equal to its oracle, round after
+    // round (stale panel state or mis-routed tasks would show up here).
+    let mut g = Gen::new(0xC0DED);
+    for round in 0..10 {
+        let m = 1 + (round * 37) % 120;
+        let k = 1 + (round * 29) % 90;
+        let n = 1 + round % 7;
+        let a = rand_matrix(&mut g, m, k);
+        let b = rand_matrix(&mut g, k, n);
+        assert_eq!(
+            par::matmul_with_threads(a.view(), b.view(), 4),
+            matmul_naive(a.view(), b.view()),
+            "round {round}: matmul"
+        );
+        let y = rand_matrix(&mut g, m, n);
+        let beta = rand_matrix(&mut g, k, n);
+        let mask = rand_mask(&mut g, m);
+        assert_eq!(
+            par::gradient_with_threads(a.view(), y.view(), beta.view(), &mask, 3).unwrap(),
+            gradient_naive(&a, &y, &beta, &mask).unwrap(),
+            "round {round}: gradient"
+        );
+        let gm = rand_matrix(&mut g, 1 + round % 5, m);
+        let w = rand_mask(&mut g, m);
+        let mut acc = rand_matrix(&mut g, gm.rows(), k);
+        let mut want = acc.clone();
+        encode_accumulate_naive(&gm, &w, &a, None, &mut want);
+        par::encode_accumulate(gm.view(), &w, a.view(), acc.view_mut()).unwrap();
+        assert_eq!(acc, want, "round {round}: encode");
+    }
+}
+
+#[test]
+fn pool_panic_propagates_without_deadlock() {
+    // A panicking panel must surface on the caller (not hang the pool or
+    // kill a detached worker), and the pool must stay usable afterwards.
+    let pool = WorkerPool::with_workers(2);
+    let mut m = Matrix::zeros(32, 3);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run_panels(m.view_mut(), 8, |first, _panel| {
+            if first > 0 {
+                panic!("boom in worker panel {first}");
+            }
+        });
+    }));
+    assert!(result.is_err(), "panel panic must reach the caller");
+
+    // Same pool, next job: full coverage, correct values.
+    let mut ok = Matrix::zeros(13, 2);
+    pool.run_panels(ok.view_mut(), 4, |first, mut panel| {
+        for pr in 0..panel.rows() {
+            panel.row_mut(pr).fill((first + pr) as f32);
+        }
+    });
+    for r in 0..13 {
+        assert_eq!(ok.row(r), &[r as f32, r as f32], "row {r} after panic");
+    }
+
+    // The *global* pool (the one `par` kernels run on) also survives a
+    // poisoned job and keeps producing oracle-exact results.
+    let mut g = Gen::new(7);
+    let a = rand_matrix(&mut g, 40, 30);
+    let b = rand_matrix(&mut g, 30, 4);
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut out = Matrix::zeros(24, 2);
+        codedfedl::mathx::pool::global().run_panels(out.view_mut(), 6, |first, _p| {
+            if first >= 12 {
+                panic!("boom");
+            }
+        });
+    }));
+    assert!(caught.is_err());
+    assert_eq!(par::matmul_with_threads(a.view(), b.view(), 4), matmul_naive(a.view(), b.view()));
+}
+
+#[test]
+fn oversubscribed_panel_counts_are_exact() {
+    // Requesting far more panels than the pool has threads just queues
+    // tasks; results stay bitwise equal to the single-thread run.
+    let mut g = Gen::new(99);
+    let a = rand_matrix(&mut g, 67, 41);
+    let b = rand_matrix(&mut g, 41, 5);
+    let want = matmul_naive(a.view(), b.view());
+    for t in [16, 64, 1000] {
+        assert_eq!(par::matmul_with_threads(a.view(), b.view(), t), want, "{t} panels");
+    }
 }
 
 #[test]

@@ -13,10 +13,10 @@ fn artifacts_ready() -> bool {
     ok
 }
 
-fn tiny(scheme: Scheme, use_xla: bool) -> ExperimentConfig {
+fn tiny(scheme: Scheme, backend: &str) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::preset("tiny").unwrap();
     cfg.scheme = scheme;
-    cfg.use_xla = use_xla;
+    cfg.backend = backend.into();
     cfg.train.epochs = 6;
     cfg
 }
@@ -26,7 +26,7 @@ fn xla_coded_run_learns() {
     if !artifacts_ready() {
         return;
     }
-    let cfg = tiny(Scheme::Coded, true);
+    let cfg = tiny(Scheme::Coded, "auto");
     let mut t = Trainer::from_config(&cfg).unwrap();
     let report = t.run().unwrap();
     assert!(report.final_accuracy() > 0.5, "acc {}", report.final_accuracy());
@@ -40,9 +40,9 @@ fn xla_and_native_runs_agree() {
     if !artifacts_ready() {
         return;
     }
-    let cfg_x = tiny(Scheme::Coded, true);
+    let cfg_x = tiny(Scheme::Coded, "auto");
     let rx = Trainer::from_config(&cfg_x).unwrap().run().unwrap();
-    let cfg_n = tiny(Scheme::Coded, false);
+    let cfg_n = tiny(Scheme::Coded, "native");
     let rn = Trainer::with_backend(&cfg_n, Box::new(NativeBackend)).unwrap().run().unwrap();
     assert_eq!(rx.records.len(), rn.records.len());
     for (a, b) in rx.records.iter().zip(&rn.records) {
@@ -67,7 +67,7 @@ fn xla_uncoded_run_learns() {
     if !artifacts_ready() {
         return;
     }
-    let cfg = tiny(Scheme::Uncoded, true);
+    let cfg = tiny(Scheme::Uncoded, "auto");
     let report = Trainer::from_config(&cfg).unwrap().run().unwrap();
     assert!(report.final_accuracy() > 0.5, "acc {}", report.final_accuracy());
     assert_eq!(report.deadline_s, 0.0);
@@ -83,8 +83,8 @@ fn coded_is_faster_per_step_without_losing_accuracy() {
     if !artifacts_ready() {
         return;
     }
-    let rc = Trainer::from_config(&tiny(Scheme::Coded, true)).unwrap().run().unwrap();
-    let ru = Trainer::from_config(&tiny(Scheme::Uncoded, true)).unwrap().run().unwrap();
+    let rc = Trainer::from_config(&tiny(Scheme::Coded, "auto")).unwrap().run().unwrap();
+    let ru = Trainer::from_config(&tiny(Scheme::Uncoded, "auto")).unwrap().run().unwrap();
     let steps_c = rc.records.last().unwrap().step as f64;
     let steps_u = ru.records.last().unwrap().step as f64;
     let per_step_c = rc.total_sim_time_s / steps_c;
@@ -106,7 +106,7 @@ fn curve_csv_is_written() {
     if !artifacts_ready() {
         return;
     }
-    let report = Trainer::from_config(&tiny(Scheme::Coded, true)).unwrap().run().unwrap();
+    let report = Trainer::from_config(&tiny(Scheme::Coded, "auto")).unwrap().run().unwrap();
     let path = std::env::temp_dir().join("codedfedl_e2e_curve.csv");
     report.write_csv(path.to_str().unwrap()).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
