@@ -22,12 +22,17 @@
 //! cargo bench --bench kernels -- --quick # CI smoke (small sizes/iters)
 //! ```
 
+use std::sync::Arc;
+
 use codedfedl::benchx::Bencher;
 use codedfedl::mathx::linalg::{
     encode_accumulate_naive, gradient_naive, matmul_naive, Matrix,
 };
-use codedfedl::mathx::par::{self, legacy};
+use codedfedl::mathx::par::{self, legacy, Parallelism};
 use codedfedl::mathx::rng::Rng;
+use codedfedl::runtime::backend::{
+    ComputeBackend, EncodeClientJob, GradClientOperands, NativeBackend, PreparedMatrix,
+};
 use codedfedl::util::json::Json;
 
 fn mean_of(b: &Bencher, name: &str) -> f64 {
@@ -232,6 +237,115 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // --- `round` cell: one trainer-shaped round (per-client masked
+    // gradients + fused parity encode over a shared Arc embedding),
+    // sequential per-client loop vs the concurrent-job sharded path.
+    // Gated bitwise first: the sharded round must reproduce the
+    // sequential round exactly at any shard count.
+    let client_counts: &[usize] = if quick { &[16] } else { &[16, 64, 256] };
+    let mut round_names: Vec<String> = Vec::new();
+    {
+        let (l, q, c, u) = if quick {
+            (48usize, 128usize, 10usize, 32usize)
+        } else {
+            (96usize, 256usize, 10usize, 64usize)
+        };
+        let shards = par::num_shards().max(2);
+        let nb = NativeBackend;
+        for &n in client_counts {
+            let emb = Arc::new(Matrix::randn(n * l, q, 0.0, 1.0, &mut rng));
+            let labels = Arc::new(Matrix::randn(n * l, c, 0.0, 1.0, &mut rng));
+            let beta = Matrix::randn(q, c, 0.0, 0.3, &mut rng);
+            let beta_p = nb.prepare(&beta).unwrap();
+            let mut prepared: Vec<(PreparedMatrix, PreparedMatrix, PreparedMatrix)> = Vec::new();
+            let mut slices: Vec<Vec<usize>> = Vec::new();
+            let mut gens: Vec<(Matrix, Vec<f32>)> = Vec::new();
+            for j in 0..n {
+                let idx: Vec<usize> = (j * l..(j + 1) * l).collect();
+                let mask: Vec<f32> =
+                    (0..l).map(|k| if k % 5 == 0 { 0.0 } else { 1.0 }).collect();
+                prepared.push((
+                    nb.prepare_gather(&emb, &idx).unwrap(),
+                    nb.prepare_gather(&labels, &idx).unwrap(),
+                    nb.prepare_col(&mask).unwrap(),
+                ));
+                slices.push(idx);
+                let g = Matrix::randn(u, l, 0.0, 0.1, &mut rng);
+                let w: Vec<f32> =
+                    (0..l).map(|k| if k % 7 == 0 { 0.0 } else { 0.8 }).collect();
+                gens.push((g, w));
+            }
+            let clients: Vec<GradClientOperands<'_>> = prepared
+                .iter()
+                .map(|(px, py, pm)| GradClientOperands { x: px, y: py, mask: pm })
+                .collect();
+            let jobs: Vec<EncodeClientJob<'_>> = gens
+                .iter()
+                .zip(&slices)
+                .map(|((g, w), idx)| EncodeClientJob { g, w, idx })
+                .collect();
+            let seq = Parallelism::new(par::num_threads(), 1);
+            let shd = Parallelism::new(par::num_threads(), shards);
+
+            let run_round = |p: Parallelism| -> (Matrix, Matrix, Matrix) {
+                let mut grad_sum = Matrix::zeros(q, c);
+                for g in &nb.grad_clients_p(&clients, &beta_p, p).unwrap() {
+                    grad_sum.axpy_inplace(1.0, g);
+                }
+                let mut comp_x = Matrix::zeros(u, q);
+                let mut comp_y = Matrix::zeros(u, c);
+                if p.shards <= 1 {
+                    // The trainer's sequential oracle: one fused
+                    // accumulate per client, in client order.
+                    for (job, idx) in gens.iter().zip(&slices) {
+                        nb.encode_accumulate_gather(&job.0, &job.1, &emb, idx, &mut comp_x)
+                            .unwrap();
+                        nb.encode_accumulate_gather(&job.0, &job.1, &labels, idx, &mut comp_y)
+                            .unwrap();
+                    }
+                } else {
+                    nb.encode_accumulate_batch(&jobs, &emb, &mut comp_x, p).unwrap();
+                    nb.encode_accumulate_batch(&jobs, &labels, &mut comp_y, p).unwrap();
+                }
+                (grad_sum, comp_x, comp_y)
+            };
+
+            // Bitwise gate before timing (deduped: CI pins shards=2).
+            let want = run_round(seq);
+            let mut gate_shards = vec![2, shards, shards * 4];
+            gate_shards.sort_unstable();
+            gate_shards.dedup();
+            for s in gate_shards {
+                let got = run_round(Parallelism::new(par::num_threads(), s));
+                assert_eq!(got.0, want.0, "sharded round gradients diverged at {s} shards");
+                assert_eq!(got.1, want.1, "sharded parity features diverged at {s} shards");
+                assert_eq!(got.2, want.2, "sharded parity labels diverged at {s} shards");
+            }
+
+            let flops = (n * (4 * l * q * c + 2 * u * l * (q + c))) as f64;
+            let seq_name = format!("round n={n} sequential (1 shard)");
+            b.bench_with_work(&seq_name, Some(flops), || {
+                std::hint::black_box(run_round(seq));
+            });
+            let shd_name = format!("round n={n} sharded ({shards} shards)");
+            b.bench_with_work(&shd_name, Some(flops), || {
+                std::hint::black_box(run_round(shd));
+            });
+            summaries.push((
+                format!("round n={n}"),
+                format!(
+                    "sharded x{:.2} vs sequential ({} clients, {} shards, {} threads)",
+                    speedup(&b, &seq_name, &shd_name),
+                    n,
+                    shards,
+                    par::num_threads(),
+                ),
+            ));
+            round_names.push(seq_name);
+            round_names.push(shd_name);
+        }
+    }
+
     b.report("kernel benchmarks (pooled/unrolled vs PR1 scoped vs seed scalar)");
     println!("\nspeedup summary:");
     for (what, line) in &summaries {
@@ -281,5 +395,49 @@ fn main() -> anyhow::Result<()> {
     ]);
     std::fs::write("BENCH_kernels.json", doc.to_string())?;
     println!("wrote BENCH_kernels.json");
+
+    // The round cells get their own trajectory file: sharded-vs-
+    // sequential round times are the acceptance number for the
+    // concurrent-job scheduler and are tracked across PRs.
+    let round_results: Vec<Json> = b
+        .results()
+        .iter()
+        .filter(|r| round_names.contains(&r.name))
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("iters", Json::Num(r.iters as f64)),
+                ("mean_s", Json::Num(r.mean_s)),
+                ("p50_s", Json::Num(r.p50_s)),
+                ("p95_s", Json::Num(r.p95_s)),
+                ("min_s", Json::Num(r.min_s)),
+                (
+                    "throughput_per_s",
+                    r.throughput().map(Json::Num).unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    let round_summary: Vec<Json> = summaries
+        .iter()
+        .filter(|(what, _)| what.starts_with("round "))
+        .map(|(what, line)| {
+            Json::obj(vec![("cell", Json::Str(what.clone())), ("result", Json::Str(line.clone()))])
+        })
+        .collect();
+    let round_doc = Json::obj(vec![
+        ("bench", Json::Str("round".into())),
+        ("quick", Json::Bool(quick)),
+        ("threads_knob", Json::Num(par::num_threads() as f64)),
+        ("shards_knob", Json::Num(par::num_shards() as f64)),
+        (
+            "pool_workers",
+            Json::Num(codedfedl::mathx::pool::global().workers() as f64),
+        ),
+        ("results", Json::Arr(round_results)),
+        ("summary", Json::Arr(round_summary)),
+    ]);
+    std::fs::write("BENCH_round.json", round_doc.to_string())?;
+    println!("wrote BENCH_round.json");
     Ok(())
 }

@@ -14,22 +14,39 @@ use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::fl::trainer::{SharedData, Trainer};
+use crate::mathx::par::Parallelism;
 use crate::metrics::TrainReport;
 use crate::runtime::registry::create_backend;
 
 /// Runs experiment variants against a cached shared embedding.
-#[derive(Default)]
 pub struct SweepRunner {
     shared: Option<Arc<SharedData>>,
     /// How many trainer builds hit the embedding cache (diagnostics).
     hits: usize,
     /// How many had to (re)build the embedding.
     builds: usize,
+    /// Round parallelism every swept trainer runs with (sharding is
+    /// bitwise neutral, so sweeps saturate the pool for free).
+    par: Parallelism,
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        SweepRunner::new()
+    }
 }
 
 impl SweepRunner {
+    /// Environment parallelism (`CODEDFEDL_THREADS` / `CODEDFEDL_SHARDS`).
     pub fn new() -> SweepRunner {
-        SweepRunner::default()
+        SweepRunner::with_parallelism(Parallelism::from_env())
+    }
+
+    /// Explicit round parallelism for every trainer this runner builds —
+    /// e.g. a thousands-of-client population sweep pinning `shards` to
+    /// the pool size. Trajectories are bitwise independent of the choice.
+    pub fn with_parallelism(par: Parallelism) -> SweepRunner {
+        SweepRunner { shared: None, hits: 0, builds: 0, par }
     }
 
     /// Build a trainer for `cfg`, reusing the cached embedding when the
@@ -48,7 +65,7 @@ impl SweepRunner {
                 s
             }
         };
-        Trainer::with_shared(cfg, backend, shared)
+        Trainer::with_shared_parallelism(cfg, backend, shared, self.par)
     }
 
     /// Run one variant end-to-end.

@@ -118,6 +118,118 @@ pub fn encode_client_rows_into(
     Ok(())
 }
 
+/// Re-encoding amortization cache (ROADMAP: *parity re-encoding across
+/// batches*): when a client re-encodes successive mini-batches whose row
+/// sets overlap, the expensive part that is worth skipping is the gather
+/// of the slice out of the big shared embedding — the generator must be
+/// **re-drawn every time** anyway (re-using `G_j` across batches would
+/// correlate the parity noise and leak slice structure, Remark 2).
+///
+/// The cache keeps the client's materialized slice `(X[idx], Y[idx])`
+/// and, on the next encode, copies in only the rows whose index
+/// *changed* since the previous call; fully-overlapping batches re-read
+/// nothing. Encoding then runs the fused kernel over the cached dense
+/// slice, which performs the exact per-element operation sequence of the
+/// gather path — results are **bitwise identical** to
+/// [`encode_client_rows`] on the same rng stream.
+///
+/// The row-level delta is only valid against one source pair: the cache
+/// remembers which `(x, y)` buffers it was filled from (allocation
+/// address + shape) and falls back to a full refresh whenever they
+/// change, so handing it a rebuilt embedding never encodes stale rows.
+/// **Invariant:** the sources must not be mutated in place while cached
+/// — same-buffer row overwrites (and the rarer freed-then-reallocated
+/// same-address case) are undetectable by the identity check and would
+/// encode stale rows. The intended usage — one cache per client against
+/// the immutable shared `Arc<Matrix>` embedding — satisfies this by
+/// construction.
+pub struct ReencodeCache {
+    idx: Vec<usize>,
+    x: Matrix,
+    y: Matrix,
+    /// Identity of the source pair the cached rows were read from:
+    /// `(x data ptr, x shape, y data ptr, y shape)`.
+    src: Option<(usize, (usize, usize), usize, (usize, usize))>,
+    /// Rows copied in across all calls (diagnostics: a full re-encode
+    /// would have copied `calls * l` rows).
+    rows_refreshed: usize,
+    calls: usize,
+}
+
+impl Default for ReencodeCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReencodeCache {
+    pub fn new() -> ReencodeCache {
+        ReencodeCache {
+            idx: Vec::new(),
+            x: Matrix::zeros(0, 0),
+            y: Matrix::zeros(0, 0),
+            src: None,
+            rows_refreshed: 0,
+            calls: 0,
+        }
+    }
+
+    /// `(rows copied in, encode calls)` so far — the amortization win is
+    /// `1 - rows_refreshed / (calls * l)` for fixed-length slices.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.rows_refreshed, self.calls)
+    }
+
+    /// [`encode_client_rows`], but re-reading only the slice rows whose
+    /// index differs from the previous call. The generator is freshly
+    /// sampled from `client_rng` exactly as the uncached path does, so
+    /// the parity output is bitwise identical on the same rng stream.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_client_rows(
+        &mut self,
+        backend: &dyn ComputeBackend,
+        x: &Matrix,
+        y: &Matrix,
+        idx: &[usize],
+        weights: &[f32],
+        u: usize,
+        u_max: usize,
+        client_rng: &mut Rng,
+    ) -> Result<(Matrix, Matrix)> {
+        crate::mathx::par::check_indices(idx, x.rows(), "reencode(x)")?;
+        crate::mathx::par::check_indices(idx, y.rows(), "reencode(y)")?;
+        let l = idx.len();
+        let src_key =
+            Some((x.data().as_ptr() as usize, x.shape(), y.data().as_ptr() as usize, y.shape()));
+        if self.src != src_key
+            || self.idx.len() != l
+            || self.x.shape() != (l, x.cols())
+            || self.y.shape() != (l, y.cols())
+        {
+            // New source pair or a shape change: rebuild outright.
+            self.x = x.select_rows(idx);
+            self.y = y.select_rows(idx);
+            self.idx = idx.to_vec();
+            self.src = src_key;
+            self.rows_refreshed += l;
+        } else {
+            for (k, &gi) in idx.iter().enumerate() {
+                if self.idx[k] != gi {
+                    self.x.row_mut(k).copy_from_slice(x.row(gi));
+                    self.y.row_mut(k).copy_from_slice(y.row(gi));
+                    self.idx[k] = gi;
+                    self.rows_refreshed += 1;
+                }
+            }
+        }
+        self.calls += 1;
+        let g = sample_generator(u, u_max, l, client_rng);
+        let xc = backend.encode(&g, weights, &self.x)?;
+        let yc = backend.encode(&g, weights, &self.y)?;
+        Ok((xc, yc))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,6 +347,42 @@ mod tests {
             .unwrap();
         assert_eq!(comp.x, comp2.x);
         assert_eq!(comp.y, comp2.y);
+    }
+
+    #[test]
+    fn reencode_cache_is_bitwise_equal_to_full_reencode() {
+        // Oracle: the uncached gather path, fed the same per-call rng
+        // streams. Overlapping batches must produce identical parity
+        // while copying only the changed rows.
+        let mut rng = Rng::new(20);
+        let x = Matrix::randn(30, 5, 0.0, 1.0, &mut rng);
+        let y = Matrix::randn(30, 2, 0.0, 1.0, &mut rng);
+        let nb = NativeBackend;
+        let base = Rng::new(21);
+        let batches: [Vec<usize>; 4] = [
+            vec![3, 7, 11, 15, 22],
+            vec![3, 7, 11, 15, 22], // full overlap: zero rows re-read
+            vec![3, 7, 29, 15, 22], // one row changed
+            vec![0, 1, 2, 3, 4],    // disjoint: full refresh
+        ];
+        let w = vec![1.0f32, 0.5, 0.0, 2.0, 1.0];
+        let mut cache = ReencodeCache::new();
+        for (call, idx) in batches.iter().enumerate() {
+            let (want_x, want_y) =
+                encode_client_rows(&nb, &x, &y, idx, &w, 3, 6, &mut base.fork(call as u64))
+                    .unwrap();
+            let (got_x, got_y) = cache
+                .encode_client_rows(&nb, &x, &y, idx, &w, 3, 6, &mut base.fork(call as u64))
+                .unwrap();
+            assert_eq!(got_x, want_x, "call {call}: parity features diverged");
+            assert_eq!(got_y, want_y, "call {call}: parity labels diverged");
+        }
+        // 5 (initial) + 0 (identical) + 1 (one changed) + 5 (disjoint).
+        assert_eq!(cache.stats(), (11, 4));
+        // Bad indices are rejected before touching the cache.
+        assert!(cache
+            .encode_client_rows(&nb, &x, &y, &[30, 0, 0, 0, 0], &w, 3, 6, &mut base.fork(9))
+            .is_err());
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod weights;
 
 pub use encoder::{
     encode_client_rows, encode_client_rows_into, encode_client_slice, CompositeParity,
+    ReencodeCache,
 };
 pub use generator::sample_generator;
 pub use privacy::{parity_attack, LeakageReport};

@@ -30,18 +30,41 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::allocation::optimizer::{plan_fixed_u, AllocationPlan};
 use crate::coding::encoder::{encode_client_rows_into, CompositeParity};
+use crate::coding::generator::sample_generator;
 use crate::coding::weights::build_weights;
 use crate::config::{ExperimentConfig, Scheme};
 use crate::data::dataset::Dataset;
 use crate::fl::embedding::{from_seed, RffParams};
 use crate::fl::lr::LrSchedule;
 use crate::mathx::linalg::Matrix;
+use crate::mathx::par::{self, Parallelism};
 use crate::mathx::pool::{self, WorkerPool};
 use crate::mathx::rng::Rng;
 use crate::metrics::{EvalRecord, TrainReport};
-use crate::runtime::backend::{ComputeBackend, PreparedMatrix};
+use crate::runtime::backend::{
+    ComputeBackend, EncodeClientJob, GradClientOperands, PreparedMatrix,
+};
 use crate::runtime::registry::create_backend;
 use crate::simnet::topology::{build_population, Population};
+
+/// Clients per batched backend call (parity encodes and per-client
+/// gradients): bounds the resident per-client intermediates — generator
+/// matrices (`batch * u_max * l` floats) on the encode pass, `(q, c)`
+/// gradients on the round pass — while the accumulation order over
+/// clients stays globally fixed, so chunking is bitwise neutral.
+const CLIENT_BATCH: usize = 64;
+
+/// Per-client scratch of the sharded parity pass: everything a client
+/// derives from its private rng stream before the batched encode.
+#[derive(Default)]
+struct ClientParityPrep {
+    mask: Vec<f32>,
+    w: Vec<f32>,
+    /// `None` when the plan carries no parity rows (`u == 0`). Dropped
+    /// at the end of the client batch — the generator never outlives the
+    /// encode, same privacy story as the sequential path (Remark 2).
+    g: Option<Matrix>,
+}
 
 /// Static per-run state exposed for diagnostics and benches.
 pub struct TrainerSetup {
@@ -182,6 +205,12 @@ pub struct Trainer {
     beta: Arc<Matrix>,
     delay_rng: Rng,
     sched: LrSchedule,
+    /// How per-round client work is spread over the pool: `threads`
+    /// panels per kernel, `shards` concurrent client shards per loop
+    /// (`shards <= 1` selects the sequential oracle path). Every
+    /// combination produces **bitwise-identical trajectories** — see
+    /// [`Trainer::with_shared_parallelism`].
+    par: Parallelism,
 }
 
 impl Trainer {
@@ -205,11 +234,31 @@ impl Trainer {
     }
 
     /// Build on top of pre-built [`SharedData`] (the sweep fast path:
-    /// scheme/redundancy/network variants reuse one embedding).
+    /// scheme/redundancy/network variants reuse one embedding), with the
+    /// environment's parallelism knobs (`CODEDFEDL_THREADS` /
+    /// `CODEDFEDL_SHARDS`).
     pub fn with_shared(
         cfg: &ExperimentConfig,
         backend: Box<dyn ComputeBackend>,
         shared: Arc<SharedData>,
+    ) -> Result<Trainer> {
+        Self::with_shared_parallelism(cfg, backend, shared, Parallelism::from_env())
+    }
+
+    /// [`Trainer::with_shared`] with explicit parallelism. `shards > 1`
+    /// fans each per-round client loop (parity encodes, per-client
+    /// gradients) out across concurrent pool jobs; `shards <= 1` runs
+    /// the sequential per-client path, which is kept alive as the
+    /// bitwise oracle. Aggregation order is fixed (ascending client id)
+    /// and every per-client kernel is deterministic at any panel count,
+    /// so the final model is **bitwise identical** for every
+    /// `(threads, shards)` combination — the knobs trade only
+    /// wall-clock.
+    pub fn with_shared_parallelism(
+        cfg: &ExperimentConfig,
+        backend: Box<dyn ComputeBackend>,
+        shared: Arc<SharedData>,
+        par: Parallelism,
     ) -> Result<Trainer> {
         cfg.validate()?;
         ensure!(
@@ -293,13 +342,18 @@ impl Trainer {
         let mut parity = Vec::new();
         match &plan {
             None => {
-                for s in 0..steps {
-                    for j in 0..cfg.n_clients {
-                        masks[s][j] = vec![1.0f32; p.l];
+                // Allocator-bound, no arithmetic — not worth a pool job.
+                for masks_s in masks.iter_mut() {
+                    for m in masks_s.iter_mut() {
+                        *m = vec![1.0f32; p.l];
                     }
                 }
             }
-            Some(pl) => {
+            Some(pl) if par.shards <= 1 => {
+                // Sequential oracle path: one client at a time, fused
+                // accumulate straight into the composite (the PR 2 loop,
+                // kept bit-for-bit as the reference the sharded path is
+                // tested against).
                 crate::log_info!("encoding parity for {} mini-batches (u={})", steps, pl.u);
                 for s in 0..steps {
                     let mut comp = CompositeParity::zeros(pl.u, p.u_max, p.q, p.c);
@@ -329,6 +383,74 @@ impl Trainer {
                                 &mut client_rng,
                             )?;
                         }
+                    }
+                    parity.push(comp);
+                }
+            }
+            Some(pl) => {
+                // Sharded parity pass. Two stages per client batch:
+                //
+                // 1. Per-client rng work (processed subset, §3.4 weights,
+                //    private generator) fans out across shard jobs — the
+                //    streams `root.fork(1000 + s*n + j)` are independent
+                //    per client, so parallel sampling replays exactly.
+                // 2. One batched fused encode folds the whole batch into
+                //    the composite **in ascending client order**; the
+                //    per-element addition sequence equals the sequential
+                //    loop above, so the parity is bitwise identical.
+                crate::log_info!(
+                    "encoding parity for {} mini-batches (u={}, {} shards)",
+                    steps,
+                    pl.u,
+                    par.shards
+                );
+                let n = cfg.n_clients;
+                for s in 0..steps {
+                    let mut comp = CompositeParity::zeros(pl.u, p.u_max, p.q, p.c);
+                    for c0 in (0..n).step_by(CLIENT_BATCH) {
+                        let c1 = (c0 + CLIENT_BATCH).min(n);
+                        let mut prep: Vec<ClientParityPrep> =
+                            (c0..c1).map(|_| ClientParityPrep::default()).collect();
+                        let slices_s = &slices[s];
+                        par::for_each_shard(&mut prep, par.shards, |first, chunk| {
+                            for (off, slot) in chunk.iter_mut().enumerate() {
+                                let j = c0 + first + off;
+                                let mut client_rng = root.fork(1000 + (s * n + j) as u64);
+                                let processed =
+                                    client_rng.sample_indices(p.l, pl.loads[j].min(p.l));
+                                slot.w = build_weights(p.l, &processed, pl.pnr[j]);
+                                let mut mask = vec![0.0f32; p.l];
+                                for &k in &processed {
+                                    mask[k] = 1.0;
+                                }
+                                slot.mask = mask;
+                                if pl.u > 0 {
+                                    slot.g = Some(sample_generator(
+                                        pl.u,
+                                        p.u_max,
+                                        slices_s[j].len(),
+                                        &mut client_rng,
+                                    ));
+                                }
+                            }
+                        });
+                        for (off, slot) in prep.iter_mut().enumerate() {
+                            masks[s][c0 + off] = std::mem::take(&mut slot.mask);
+                        }
+                        if pl.u > 0 {
+                            let jobs: Vec<EncodeClientJob<'_>> = prep
+                                .iter()
+                                .enumerate()
+                                .map(|(off, slot)| EncodeClientJob {
+                                    g: slot.g.as_ref().expect("u > 0 samples a generator"),
+                                    w: &slot.w,
+                                    idx: &slices_s[c0 + off],
+                                })
+                                .collect();
+                            backend.encode_accumulate_batch(&jobs, train_emb, &mut comp.x, par)?;
+                            backend.encode_accumulate_batch(&jobs, train_y, &mut comp.y, par)?;
+                        }
+                        // `prep` (and every private generator) drops here.
                     }
                     parity.push(comp);
                 }
@@ -395,6 +517,7 @@ impl Trainer {
             beta,
             delay_rng,
             sched,
+            par,
         })
     }
 
@@ -413,6 +536,12 @@ impl Trainer {
     /// The persistent worker pool the step loop's kernels execute on.
     pub fn pool(&self) -> &'static WorkerPool {
         self.pool
+    }
+
+    /// The round-parallelism configuration (threads per kernel, client
+    /// shards per loop) this trainer runs with.
+    pub fn parallelism(&self) -> Parallelism {
+        self.par
     }
 
     /// The shared dataset + embedding state (sweep reuse, diagnostics).
@@ -511,7 +640,7 @@ impl Trainer {
         let p = &self.cfg.profile;
         let n = self.cfg.n_clients;
         let mut grad_sum = Matrix::zeros(p.q, p.c);
-        let mut arrivals = 0usize;
+        let arrivals: usize;
         let step_time;
         // One beta snapshot per step, shared by every gradient call
         // (§Perf); on the native backend this is a refcount bump, on XLA
@@ -521,21 +650,36 @@ impl Trainer {
         match &self.setup.plan {
             None => {
                 // Uncoded: all clients compute full slices; wait for max.
+                // Delay sampling stays sequential (one shared rng
+                // stream); the gradients fan out as a batched, sharded
+                // pool round and are summed in ascending client order —
+                // bitwise the per-client sequential loop.
                 let mut t_max = 0.0f64;
                 for j in 0..n {
                     let t = self.setup.population.clients[j].sample(p.l, &mut self.delay_rng);
                     t_max = t_max.max(t.total());
                 }
-                for j in 0..n {
-                    let (px, py, pm) = &self.prep_slices[s][j];
-                    let g = self.backend.grad_client_p(px, py, &beta_p, pm)?;
-                    grad_sum.axpy_inplace(1.0, &g);
+                // Chunked so the resident per-client gradient set stays
+                // O(CLIENT_BATCH * q * c) at any population size; the
+                // ascending-client sum order is unchanged.
+                for chunk in self.prep_slices[s].chunks(CLIENT_BATCH) {
+                    let clients: Vec<GradClientOperands<'_>> = chunk
+                        .iter()
+                        .map(|(px, py, pm)| GradClientOperands { x: px, y: py, mask: pm })
+                        .collect();
+                    for g in &self.backend.grad_clients_p(&clients, &beta_p, self.par)? {
+                        grad_sum.axpy_inplace(1.0, g);
+                    }
                 }
                 arrivals = n;
                 step_time = t_max;
             }
             Some(plan) => {
-                // CodedFedL: deadline t*, stragglers dropped, parity added.
+                // CodedFedL: deadline t*, stragglers dropped, parity
+                // added. Arrivals are decided first (sequential delay
+                // stream), then the arrived clients' gradients run as
+                // one sharded batch, summed in ascending client order.
+                let mut arrived = Vec::with_capacity(n);
                 for j in 0..n {
                     let load = plan.loads[j];
                     if load == 0 {
@@ -543,12 +687,22 @@ impl Trainer {
                     }
                     let t = self.setup.population.clients[j].sample(load, &mut self.delay_rng);
                     if t.total() <= plan.deadline {
-                        let (px, py, pm) = &self.prep_slices[s][j];
-                        let g = self.backend.grad_client_p(px, py, &beta_p, pm)?;
-                        grad_sum.axpy_inplace(1.0, &g);
-                        arrivals += 1;
+                        arrived.push(j);
                     }
                 }
+                for chunk in arrived.chunks(CLIENT_BATCH) {
+                    let clients: Vec<GradClientOperands<'_>> = chunk
+                        .iter()
+                        .map(|&j| {
+                            let (px, py, pm) = &self.prep_slices[s][j];
+                            GradClientOperands { x: px, y: py, mask: pm }
+                        })
+                        .collect();
+                    for g in &self.backend.grad_clients_p(&clients, &beta_p, self.par)? {
+                        grad_sum.axpy_inplace(1.0, g);
+                    }
+                }
+                arrivals = arrived.len();
                 let (px, py, pm) = &self.prep_parity[s];
                 let gc = self.backend.grad_server_p(px, py, &beta_p, pm)?;
                 grad_sum.axpy_inplace(1.0, &gc);

@@ -26,18 +26,32 @@
 //! fused streaming `encode_accumulate` that folds client parity straight
 //! into the composite block (no `(u_max, q)` intermediate). Every kernel
 //! executes on the **persistent worker pool** in [`mathx::pool`]: one
-//! process-wide set of long-lived threads fed panel tasks, so the small
-//! per-client gradient calls pay no per-call spawn cost.
+//! process-wide set of long-lived threads with a **concurrent-job
+//! scheduler** — multiple independent jobs (each a queue of panel or
+//! shard tasks) can be in flight at once, workers pull tasks across jobs
+//! round-robin, completion and panics are tracked per job (a panicking
+//! job never poisons a sibling), and dropping a pool joins every worker.
 //!
-//! `CODEDFEDL_THREADS` semantics under the pool: the knob (default: the
-//! host's available parallelism) fixes the pool size at first use —
-//! `N - 1` workers plus the calling thread. Kernel `*_with_threads`
-//! arguments above the pool size change task granularity, not the thread
-//! count. The panel split is a pure function of the output shape and
-//! panels are disjoint with fixed reduction order, so results are
-//! **bitwise identical for any thread count and pool size** — seeded
-//! experiments replay exactly. Worker panics propagate to the caller and
-//! the pool stays usable.
+//! On top of the kernels, the trainer's per-round client loops are
+//! **sharded**: `mathx::par::for_each_shard` fans per-client work
+//! (gradients, parity encodes, rng prep) out as concurrent pool jobs
+//! against the shared `Arc<Matrix>` embedding, and the batched backend
+//! entry points (`grad_clients_p`, `encode_accumulate_batch`) aggregate
+//! in fixed ascending-client order.
+//!
+//! Threading knobs: `CODEDFEDL_THREADS` (default: the host's available
+//! parallelism) fixes the pool size at first use — `N - 1` workers plus
+//! one lane per submitting caller — and sets the default panel count per
+//! kernel; `CODEDFEDL_SHARDS` (default: the thread count) sets the
+//! default client-shard count of the trainer loops, with `shards = 1`
+//! selecting the sequential per-client oracle path. Kernel
+//! `*_with_threads` arguments above the pool size change task
+//! granularity, not the thread count. Panel and shard splits are pure
+//! functions of the shapes, tasks write disjoint regions with fixed
+//! reduction order, and aggregation order is pinned — so results are
+//! **bitwise identical for any thread count, shard count and pool
+//! size**; seeded experiments replay exactly. Worker panics propagate to
+//! the submitting caller and the pool stays usable.
 //!
 //! Backends are selected by *name* through the [`runtime::registry`]
 //! (`native` / `xla` / `auto` via `ExperimentConfig::backend`), and

@@ -65,6 +65,54 @@ pub fn num_threads() -> usize {
     })
 }
 
+/// Client-shard count for the sharded trainer round: `CODEDFEDL_SHARDS`
+/// (>= 1) if set, else [`num_threads`]. Cached after the first call.
+pub fn num_shards() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("CODEDFEDL_SHARDS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(num_threads)
+    })
+}
+
+/// How a round's compute is spread: `threads` is the panel count handed
+/// to the within-kernel split, `shards` the client-shard count of the
+/// sharded trainer loops (`shards <= 1` selects the sequential oracle
+/// path). Results are **bitwise identical for every combination** — the
+/// panel split and the shard split both preserve per-element reduction
+/// order — so the knobs trade only wall-clock, never trajectories.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    pub threads: usize,
+    pub shards: usize,
+}
+
+impl Parallelism {
+    /// Environment defaults: `CODEDFEDL_THREADS` / `CODEDFEDL_SHARDS`.
+    pub fn from_env() -> Parallelism {
+        Parallelism { threads: num_threads(), shards: num_shards() }
+    }
+
+    /// Explicit counts (tests/benches); both are clamped to >= 1.
+    pub fn new(threads: usize, shards: usize) -> Parallelism {
+        Parallelism { threads: threads.max(1), shards: shards.max(1) }
+    }
+
+    /// The sequential-oracle variant of `self` (same threads, 1 shard).
+    pub fn sequential(self) -> Parallelism {
+        Parallelism { shards: 1, ..self }
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Parallelism {
+        Parallelism::from_env()
+    }
+}
+
 fn effective_threads(requested: usize, rows: usize, ops_per_row: usize) -> usize {
     if rows.saturating_mul(ops_per_row) < PAR_MIN_OPS {
         1
@@ -83,6 +131,38 @@ where
     F: Fn(usize, MatMut<'a>) + Sync,
 {
     crate::mathx::pool::global().run_panels(out, threads, kernel);
+}
+
+/// Partition `items` into at most `shards` contiguous chunks and run
+/// `kernel(first_index, chunk)` on each as **one pool job**, concurrent
+/// with any sibling jobs in flight (this is the client-sharding primitive
+/// the trainer's per-round loops fan out on). The split is the same
+/// deterministic at-most-one-apart split as the panel kernels; chunks are
+/// disjoint `&mut` slices, so shard bodies share no mutable state.
+///
+/// With `shards <= 1`, no items, or a worker-less pool the chunks run
+/// inline on the caller in ascending order — kernels that are per-item
+/// deterministic therefore produce bitwise-identical item results at any
+/// shard count.
+pub fn for_each_shard<T, F>(items: &mut [T], shards: usize, kernel: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if items.is_empty() {
+        return;
+    }
+    let want = shards.max(1).min(items.len());
+    let mut tasks: Vec<(usize, &mut [T])> = Vec::with_capacity(want);
+    let mut rest = items;
+    let mut first = 0usize;
+    for take in crate::mathx::pool::split_sizes(rest.len(), want) {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        rest = tail;
+        tasks.push((first, head));
+        first += take;
+    }
+    crate::mathx::pool::global().run_tasks(tasks, |(f, chunk)| kernel(f, chunk));
 }
 
 /// `out[i] += alpha * b[i]`, unrolled by 8. Every output element is
@@ -478,16 +558,94 @@ fn encode_accumulate_impl(
         for pr in 0..panel.rows() {
             let g_row = g.row(first + pr);
             let out_row = panel.row_mut(pr);
-            for (kk, (&gv, &wv)) in g_row.iter().zip(w).enumerate() {
-                let av = gv * wv;
-                if av == 0.0 {
-                    continue;
-                }
-                let src = match idx {
-                    Some(ix) => ix[kk],
-                    None => kk,
-                };
-                axpy8(av, m.row(src), out_row);
+            encode_row_accumulate(g_row, w, m, idx, out_row);
+        }
+    });
+    Ok(())
+}
+
+/// One parity row of the fused encode: `out_row += sum_k (g[k]*w[k]) *
+/// m[idx[k]]`, walking `k` in ascending order (the fixed reduction order
+/// every encode path shares).
+#[inline]
+fn encode_row_accumulate(
+    g_row: &[f32],
+    w: &[f32],
+    m: MatRef<'_>,
+    idx: Option<&[usize]>,
+    out_row: &mut [f32],
+) {
+    for (kk, (&gv, &wv)) in g_row.iter().zip(w).enumerate() {
+        let av = gv * wv;
+        if av == 0.0 {
+            continue;
+        }
+        let src = match idx {
+            Some(ix) => ix[kk],
+            None => kk,
+        };
+        axpy8(av, m.row(src), out_row);
+    }
+}
+
+/// One client's operands for the batched fused encode: its private
+/// generator, §3.4 weights, and the row-index set of its slice.
+#[derive(Clone, Copy)]
+pub struct EncodeTask<'a> {
+    pub g: MatRef<'a>,
+    pub w: &'a [f32],
+    pub idx: &'a [usize],
+}
+
+/// Batched fused streaming encode over a whole **client batch**:
+/// `out += sum_j G_j @ (w_j .* M[idx_j])`, accumulated in task order.
+///
+/// This is the sharded trainer's parity kernel: instead of one pool job
+/// per client (PR 2), the batch runs as ONE job whose panels split the
+/// composite's rows, and within a panel clients are folded in ascending
+/// task order. Per output element the addition sequence is exactly the
+/// sequential per-client fused accumulation — **bitwise identical to
+/// calling [`encode_accumulate`] once per task in order**, at any thread
+/// count — while the per-client job-submission overhead is paid once per
+/// batch.
+pub fn encode_accumulate_batch(
+    tasks: &[EncodeTask<'_>],
+    m: MatRef<'_>,
+    out: MatMut<'_>,
+    threads: usize,
+) -> Result<()> {
+    let (u, n) = (out.rows(), out.cols());
+    let mut total_l = 0usize;
+    for (k, task) in tasks.iter().enumerate() {
+        let l = task.idx.len();
+        ensure!(
+            task.g.shape() == (u, l),
+            "encode batch task {k}: generator is {:?} but the accumulator has {u} rows \
+             and the slice {l}",
+            task.g.shape()
+        );
+        ensure!(
+            task.w.len() == l,
+            "encode batch task {k}: weight vector covers {} rows but the slice has {l}",
+            task.w.len()
+        );
+        check_indices(task.idx, m.rows(), "encode batch")?;
+        total_l += l;
+    }
+    ensure!(
+        n == m.cols(),
+        "encode batch: accumulator has {n} columns but the source has {}",
+        m.cols()
+    );
+    if tasks.is_empty() {
+        return Ok(());
+    }
+    let t = effective_threads(threads, u, total_l * n);
+    par_row_panels(out, t, |first, mut panel| {
+        for pr in 0..panel.rows() {
+            let out_row = panel.row_mut(pr);
+            for task in tasks {
+                encode_row_accumulate(task.g.row(first + pr), task.w, m, Some(task.idx), out_row);
             }
         }
     });
@@ -871,6 +1029,74 @@ mod tests {
             .unwrap();
         assert_eq!(g.shape(), (4, 2));
         assert!(g.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn for_each_shard_covers_every_item_once_at_any_shard_count() {
+        for shards in [1, 2, 3, 8, 64] {
+            let mut items = vec![0u32; 29];
+            for_each_shard(&mut items, shards, |first, chunk| {
+                for (off, v) in chunk.iter_mut().enumerate() {
+                    *v += (first + off + 1) as u32;
+                }
+            });
+            for (i, v) in items.iter().enumerate() {
+                assert_eq!(*v, (i + 1) as u32, "shards={shards} item {i}");
+            }
+        }
+        // Empty input is a no-op, not a panic.
+        let mut empty: Vec<u32> = Vec::new();
+        for_each_shard(&mut empty, 4, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn batched_encode_is_bitwise_equal_to_sequential_fused_accumulation() {
+        let mut rng = Rng::new(21);
+        let (u, n, src_rows) = (9, 6, 40);
+        let m = Matrix::randn(src_rows, n, 0.0, 1.0, &mut rng);
+        let clients: Vec<(Matrix, Vec<f32>, Vec<usize>)> = (0..5)
+            .map(|j| {
+                let l = 3 + 2 * j;
+                let g = Matrix::randn(u, l, 0.0, 0.5, &mut rng);
+                let w: Vec<f32> =
+                    (0..l).map(|k| if k % 4 == 0 { 0.0 } else { 0.9 }).collect();
+                let idx: Vec<usize> = (0..l).map(|k| (k * 11 + j) % src_rows).collect();
+                (g, w, idx)
+            })
+            .collect();
+        // Oracle: the PR 2 sequential path — one fused accumulate per
+        // client, in client order.
+        let start = Matrix::randn(u, n, 0.0, 1.0, &mut rng);
+        let mut want = start.clone();
+        for (g, w, idx) in &clients {
+            gather_encode_accumulate(g.view(), w, m.view(), idx, want.view_mut()).unwrap();
+        }
+        let tasks: Vec<EncodeTask<'_>> = clients
+            .iter()
+            .map(|(g, w, idx)| EncodeTask { g: g.view(), w, idx })
+            .collect();
+        for t in [1, 2, 3, 8] {
+            let mut got = start.clone();
+            encode_accumulate_batch(&tasks, m.view(), got.view_mut(), t).unwrap();
+            assert_eq!(got, want, "{t}-thread batched encode differs");
+        }
+        // Shape mismatches are rejected with the offending task named.
+        let bad = [EncodeTask { g: clients[0].0.view(), w: &clients[0].1, idx: &[0, 1] }];
+        let mut acc = start.clone();
+        let err = encode_accumulate_batch(&bad, m.view(), acc.view_mut(), 2).unwrap_err();
+        assert!(err.to_string().contains("task 0"), "{err}");
+    }
+
+    #[test]
+    fn parallelism_knobs_clamp_and_default() {
+        let p = Parallelism::new(0, 0);
+        assert_eq!((p.threads, p.shards), (1, 1));
+        let q = Parallelism::new(4, 8).sequential();
+        assert_eq!((q.threads, q.shards), (4, 1));
+        let d = Parallelism::from_env();
+        assert_eq!(d.threads, num_threads());
+        assert_eq!(d.shards, num_shards());
+        assert!(num_shards() >= 1);
     }
 
     #[test]

@@ -1,78 +1,101 @@
-//! Persistent worker pool for the panel-parallel compute kernels.
+//! Persistent worker pool with a **concurrent-job scheduler** for the
+//! panel-parallel compute kernels.
 //!
-//! PR 1's kernels spawned a fresh `std::thread::scope` per call, which is
-//! fine for big server-side products but dominates the small per-client
-//! gradients (l ~ 100-400 rows): a spawn + join costs tens of
-//! microseconds while the panel itself runs for a few. This module keeps
-//! a process-wide set of long-lived workers ([`global`], sized by
-//! `CODEDFEDL_THREADS` via [`crate::mathx::par::num_threads`]) and feeds
-//! them *panel tasks* instead:
+//! PR 2 introduced the long-lived workers but serialized jobs behind a
+//! run lock: one panel queue in flight at a time, so independent
+//! per-client work (gradients, parity encodes, partial returns) queued
+//! up behind each other even though their outputs are disjoint. This
+//! module replaces the run lock with a shared **job injector**:
 //!
-//! * **One job at a time.** [`WorkerPool::run_panels`] splits the output
-//!   into disjoint row panels, publishes them as a task queue, runs tasks
-//!   on the calling thread too, and blocks until every panel is done.
-//!   Jobs are serialized by an internal run lock, so concurrent callers
-//!   (e.g. parallel tests) queue up instead of interleaving panels.
-//! * **Determinism.** Which worker executes which panel is racy, but the
-//!   panel *split* is a pure function of (rows, requested panel count)
-//!   and panels are disjoint output regions whose inner reduction order
-//!   is fixed — results are bitwise identical for any pool size, any
-//!   requested thread count, and identical to the scalar oracles.
-//! * **Panic propagation.** A panicking panel poisons the job: remaining
-//!   tasks are drained without running, sibling workers detach cleanly,
-//!   and the first panic payload is re-raised on the *calling* thread
-//!   ([`std::panic::resume_unwind`]). The pool itself stays usable.
+//! * **Concurrent jobs.** Any number of callers can submit jobs
+//!   ([`WorkerPool::run_tasks`] / [`WorkerPool::run_panels`])
+//!   simultaneously; the pool keeps a list of active jobs and idle
+//!   workers pick among them round-robin, so sibling jobs run
+//!   concurrently instead of serializing. A worker drains the job it
+//!   picked before picking again (task-level interleaving is not
+//!   guaranteed), but every submitting caller always drives its own
+//!   job's queue itself and blocks until that job (and only that job)
+//!   is done — no job ever waits behind a sibling for progress.
+//! * **Per-job completion + panic isolation.** Completion is tracked per
+//!   job (task queue drained + every attached worker detached). A
+//!   panicking task poisons *its* job only: remaining tasks of that job
+//!   drain without running, the first payload is re-raised on the
+//!   submitting caller ([`std::panic::resume_unwind`]), and sibling jobs
+//!   — including ones running at the same instant — are untouched. The
+//!   pool itself stays usable.
+//! * **Determinism.** Which worker executes which task is racy, but task
+//!   *splits* are pure functions of the input (e.g. the
+//!   [`split_panels`] row split) and tasks write disjoint output
+//!   regions with fixed inner reduction order — results are bitwise
+//!   identical for any pool size, any task count, and identical to the
+//!   scalar oracles.
+//! * **Nested submission is safe.** Without a run lock, a task body may
+//!   itself submit a job (the nested caller just participates in its own
+//!   sub-job); there is no lock to re-enter and no deadlock. The
+//!   `mathx::par` kernels still issue their stages from the caller; the
+//!   sharded trainer runs per-client kernels inline (single-panel)
+//!   inside shard tasks when the batch fills the pool, and falls back to
+//!   nested multi-panel jobs only for small batches (few deadline
+//!   survivors) so no phase uses fewer lanes than the sequential loop.
+//! * **Clean shutdown.** Dropping the pool flags shutdown, wakes every
+//!   worker, and **joins** all of them; workers finish the tasks they
+//!   already claimed, detach from their jobs, and exit — no detached
+//!   threads leak even when the drop races the tail of a job.
 //! * **No dependencies.** The offline crate universe has no rayon or
 //!   crossbeam; the scoped-lifetime hand-off is a contained `unsafe`
 //!   lifetime erasure, sound because the caller never returns before
-//!   every worker has detached from the job.
-//!
-//! Kernels must not call back into the pool from inside a panel closure
-//! (the run lock is not reentrant); the `mathx::par` kernels issue their
-//! stages sequentially from the caller, so this never arises there.
+//!   every worker has detached from its job.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread::JoinHandle;
 
 use crate::mathx::linalg::MatMut;
 
 /// Lock helper: the pool's internal mutexes never guard user invariants,
-/// so a poisoned lock (a panicking panel) is safe to keep using.
+/// so a poisoned lock (a panicking task) is safe to keep using.
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-/// A panel job: the task queue plus panic bookkeeping. Lives on the
-/// submitting caller's stack for the duration of one `run_panels` call.
-struct Job<'k, 'env> {
-    /// Remaining `(first_row, panel)` tasks; workers pop from the back.
-    tasks: Mutex<Vec<(usize, MatMut<'env>)>>,
-    kernel: &'k (dyn Fn(usize, MatMut<'env>) + Sync),
-    /// First panic payload raised by any panel (re-raised on the caller).
+/// One job: a task queue plus panic/attachment bookkeeping. Lives on the
+/// submitting caller's stack for the duration of one `run_tasks` call;
+/// `T` is the task payload (e.g. `(first_row, panel)` for the panel
+/// kernels, `(first_index, chunk)` for shard jobs).
+struct Job<'k, T> {
+    /// Remaining tasks; workers pop from the back (tasks are pushed in
+    /// reverse, so execution claims them in submission order).
+    tasks: Mutex<Vec<T>>,
+    kernel: &'k (dyn Fn(T) + Sync),
+    /// First panic payload raised by any task (re-raised on the caller).
     panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
-    /// Set on panic: remaining tasks are drained without running.
+    /// Set on panic: remaining tasks of THIS job drain without running.
     poisoned: AtomicBool,
+    /// Workers currently inside [`RunnableJob::run_until_drained`] for
+    /// this job. Mutated only under the pool's state lock; the caller
+    /// waits for it to reach zero before letting the job die.
+    attached: AtomicUsize,
 }
 
-/// Object-safe face of [`Job`] the workers see. `Sync` is a supertrait so
-/// a shared reference to a job is `Send` into the worker threads.
+/// Object-safe face of [`Job`] the scheduler sees. `Sync` is a supertrait
+/// so a shared reference to a job is `Send` into the worker threads.
 trait RunnableJob: Sync {
     fn run_until_drained(&self);
+    fn attach(&self);
+    fn detach(&self);
+    fn attached(&self) -> usize;
 }
 
-impl RunnableJob for Job<'_, '_> {
+impl<T: Send> RunnableJob for Job<'_, T> {
     fn run_until_drained(&self) {
         loop {
             let task = lock(&self.tasks).pop();
-            let Some((first, panel)) = task else { return };
+            let Some(task) = task else { return };
             if self.poisoned.load(Ordering::Relaxed) {
-                continue; // a sibling panicked; drain without running
+                continue; // a sibling task of THIS job panicked; drain
             }
-            if let Err(payload) =
-                catch_unwind(AssertUnwindSafe(|| (self.kernel)(first, panel)))
-            {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| (self.kernel)(task))) {
                 self.poisoned.store(true, Ordering::Relaxed);
                 let mut slot = lock(&self.panic);
                 if slot.is_none() {
@@ -81,21 +104,45 @@ impl RunnableJob for Job<'_, '_> {
             }
         }
     }
+
+    fn attach(&self) {
+        self.attached.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn detach(&self) {
+        self.attached.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn attached(&self) -> usize {
+        self.attached.load(Ordering::Relaxed)
+    }
 }
 
-/// SAFETY: callers of [`WorkerPool::run_panels`] keep the job (and every
+/// SAFETY: callers of [`WorkerPool::run_tasks`] keep the job (and every
 /// borrow inside it) alive until all workers have detached, so extending
-/// the reference to `'static` for the hand-off through the shared slot
+/// the reference to `'static` for the hand-off through the injector
 /// never lets a worker see a dangling job.
 unsafe fn erase<'a>(job: &'a (dyn RunnableJob + 'a)) -> &'static (dyn RunnableJob + 'static) {
     std::mem::transmute(job)
 }
 
-/// State behind the pool's mutex: the published job (if any), how many
-/// workers are currently attached to it, and the shutdown flag.
+/// Drop `job` from the active list (no-op if a sibling already did).
+fn retract(jobs: &mut Vec<&'static (dyn RunnableJob + 'static)>, job: &'static dyn RunnableJob) {
+    jobs.retain(|j| {
+        !std::ptr::eq(
+            *j as *const dyn RunnableJob as *const (),
+            job as *const dyn RunnableJob as *const (),
+        )
+    });
+}
+
+/// State behind the pool's mutex: the active jobs (each may still have
+/// queued tasks), a round-robin cursor, and the shutdown flag.
 struct Slot {
-    job: Option<&'static (dyn RunnableJob + 'static)>,
-    attached: usize,
+    jobs: Vec<&'static (dyn RunnableJob + 'static)>,
+    /// Round-robin pick cursor so concurrent jobs share the workers
+    /// instead of the first job starving the rest.
+    rr: usize,
     shutdown: bool,
 }
 
@@ -103,28 +150,27 @@ struct PoolShared {
     state: Mutex<Slot>,
     /// Workers wait here for a job (or shutdown).
     work_cv: Condvar,
-    /// The caller waits here for the last attached worker to detach.
+    /// Callers wait here for their job's last attached worker to detach.
     done_cv: Condvar,
 }
 
-/// A persistent pool of panel workers. The process-wide instance is
-/// [`global`]; tests build private pools via [`WorkerPool::with_workers`].
+/// A persistent pool of task workers with concurrent-job scheduling. The
+/// process-wide instance is [`global`]; tests build private pools via
+/// [`WorkerPool::with_workers`].
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
     handles: Vec<JoinHandle<()>>,
-    /// Serializes jobs: one panel queue in flight at a time.
-    run_lock: Mutex<()>,
     workers: usize,
 }
 
 impl WorkerPool {
     /// Spawn a pool with `workers` long-lived threads. The caller of
-    /// [`WorkerPool::run_panels`] always participates too, so a pool for
+    /// [`WorkerPool::run_tasks`] always participates too, so a pool for
     /// `n`-way parallelism wants `n - 1` workers (and `0` workers means
-    /// every kernel runs inline on the caller).
+    /// every job runs inline on its caller).
     pub fn with_workers(workers: usize) -> WorkerPool {
         let shared = Arc::new(PoolShared {
-            state: Mutex::new(Slot { job: None, attached: 0, shutdown: false }),
+            state: Mutex::new(Slot { jobs: Vec::new(), rr: 0, shutdown: false }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
         });
@@ -137,66 +183,64 @@ impl WorkerPool {
                 .expect("spawning pool worker");
             handles.push(h);
         }
-        WorkerPool { shared, handles, run_lock: Mutex::new(()), workers }
+        WorkerPool { shared, handles, workers }
     }
 
-    /// Number of long-lived worker threads (the caller adds one more
-    /// execution lane on top during [`WorkerPool::run_panels`]).
+    /// Number of long-lived worker threads (each submitting caller adds
+    /// one more execution lane on top of these for its own job).
     pub fn workers(&self) -> usize {
         self.workers
     }
 
-    /// Split `out` into at most `panels` contiguous row panels and run
-    /// `kernel(first_row, panel)` over all of them, using the pool's
-    /// workers plus the calling thread. Blocks until every panel is done;
-    /// re-raises the first panel panic on the caller.
+    /// Run `kernel` over every task in `tasks` as **one job**, using the
+    /// pool's workers plus the calling thread, concurrently with any
+    /// sibling jobs other callers have in flight. Tasks are claimed in
+    /// submission order; the call blocks until every task of THIS job is
+    /// done and re-raises the first task panic on the caller.
     ///
-    /// Requesting more panels than the pool has threads is allowed — the
-    /// extra panels simply queue (task granularity, not extra threads) —
-    /// and the result is bitwise identical either way.
-    pub fn run_panels<'env, F>(&self, out: MatMut<'env>, panels: usize, kernel: F)
+    /// With zero or one task, or a worker-less pool, the job runs inline
+    /// on the caller in submission order — bitwise the same results,
+    /// since tasks must write disjoint state.
+    pub fn run_tasks<T, F>(&self, mut tasks: Vec<T>, kernel: F)
     where
-        F: Fn(usize, MatMut<'env>) + Sync,
+        T: Send,
+        F: Fn(T) + Sync,
     {
-        let rows = out.rows();
-        let want = panels.max(1).min(rows.max(1));
-        if want <= 1 || self.workers == 0 {
-            // Inline: same panel split, executed sequentially in ascending
-            // row order (bitwise identical — panels are disjoint).
-            for (first, panel) in split_panels(out, want) {
-                kernel(first, panel);
+        if tasks.len() <= 1 || self.workers == 0 {
+            for task in tasks {
+                kernel(task);
             }
             return;
         }
-
-        let mut tasks = split_panels(out, want);
-        tasks.reverse(); // pop() hands out panels in ascending row order
+        tasks.reverse(); // pop() claims tasks in submission order
         let job = Job {
             tasks: Mutex::new(tasks),
             kernel: &kernel,
             panic: Mutex::new(None),
             poisoned: AtomicBool::new(false),
+            attached: AtomicUsize::new(0),
         };
 
-        let _run = lock(&self.run_lock);
+        // SAFETY: `job` outlives this scope; we retract it from the
+        // injector and wait for `attached == 0` before returning, so no
+        // worker touches it after it dies (workers attach only while the
+        // job is still listed, and both steps happen under the state
+        // lock).
+        let erased = unsafe { erase(&job) };
         {
-            // SAFETY: `job` outlives this scope; we retract it from the
-            // slot and wait for `attached == 0` before returning, so no
-            // worker touches it after it dies.
-            let erased = unsafe { erase(&job) };
             let mut st = lock(&self.shared.state);
-            st.job = Some(erased);
+            st.jobs.push(erased);
             drop(st);
             self.shared.work_cv.notify_all();
         }
 
-        // The caller is a worker too.
+        // The caller is a worker for its own job.
         job.run_until_drained();
 
         {
             let mut st = lock(&self.shared.state);
-            st.job = None; // stop further attaches to the spent job
-            while st.attached > 0 {
+            retract(&mut st.jobs, erased); // stop further attaches
+            while job.attached() > 0 {
                 st = self
                     .shared
                     .done_cv
@@ -208,6 +252,24 @@ impl WorkerPool {
         if let Some(payload) = lock(&job.panic).take() {
             resume_unwind(payload);
         }
+    }
+
+    /// Split `out` into at most `panels` contiguous row panels and run
+    /// `kernel(first_row, panel)` over all of them as one job (the
+    /// original panel-kernel entry point, now a [`WorkerPool::run_tasks`]
+    /// special case). Blocks until every panel is done; re-raises the
+    /// first panel panic on the caller.
+    ///
+    /// Requesting more panels than the pool has threads is allowed — the
+    /// extra panels simply queue (task granularity, not extra threads) —
+    /// and the result is bitwise identical either way.
+    pub fn run_panels<'env, F>(&self, out: MatMut<'env>, panels: usize, kernel: F)
+    where
+        F: Fn(usize, MatMut<'env>) + Sync,
+    {
+        let rows = out.rows();
+        let want = panels.max(1).min(rows.max(1));
+        self.run_tasks(split_panels(out, want), |(first, panel)| kernel(first, panel));
     }
 }
 
@@ -221,19 +283,22 @@ impl Drop for WorkerPool {
     }
 }
 
-/// Deterministic panel split: `panels` contiguous row ranges whose sizes
-/// differ by at most one, ordered by first row. Pure function of
-/// `(rows, panels)` — this is what keeps results independent of the pool.
+/// Deterministic contiguous split: at most `parts` chunks whose sizes
+/// differ by at most one, ordered by first element. Pure function of
+/// `(len, parts)` — this is what keeps results independent of the pool.
+pub(crate) fn split_sizes(len: usize, parts: usize) -> impl Iterator<Item = usize> {
+    let n = parts.max(1);
+    let base = len / n;
+    let rem = len % n;
+    (0..n).map(move |p| base + usize::from(p < rem))
+}
+
+/// Deterministic panel split over matrix rows (see [`split_sizes`]).
 fn split_panels(out: MatMut<'_>, panels: usize) -> Vec<(usize, MatMut<'_>)> {
-    let rows = out.rows();
-    let n = panels.max(1);
-    let base = rows / n;
-    let rem = rows % n;
-    let mut tasks = Vec::with_capacity(n);
+    let mut tasks = Vec::with_capacity(panels.max(1));
     let mut rest = out;
     let mut first = 0usize;
-    for p in 0..n {
-        let take = base + usize::from(p < rem);
+    for take in split_sizes(rest.rows(), panels) {
         let (head, tail) = rest.split_rows_at(take);
         rest = tail;
         tasks.push((first, head));
@@ -248,33 +313,30 @@ fn worker_loop(shared: &PoolShared) {
         if st.shutdown {
             return;
         }
-        if let Some(job) = st.job {
-            st.attached += 1;
-            drop(st);
-            job.run_until_drained();
-            st = lock(&shared.state);
-            // This worker saw the queue drain: retract the spent job so
-            // siblings stop attaching to it.
-            if let Some(cur) = st.job {
-                if std::ptr::eq(
-                    cur as *const dyn RunnableJob as *const (),
-                    job as *const dyn RunnableJob as *const (),
-                ) {
-                    st.job = None;
-                }
-            }
-            st.attached -= 1;
-            shared.done_cv.notify_all();
-        } else {
+        if st.jobs.is_empty() {
             st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            continue;
         }
+        // Round-robin across active jobs so siblings share the workers.
+        let job = st.jobs[st.rr % st.jobs.len()];
+        st.rr = st.rr.wrapping_add(1);
+        job.attach();
+        drop(st);
+        job.run_until_drained();
+        st = lock(&shared.state);
+        // This worker saw the queue drain: retract the spent job so
+        // siblings stop attaching to it, then detach and wake callers.
+        retract(&mut st.jobs, job);
+        job.detach();
+        shared.done_cv.notify_all();
     }
 }
 
-/// The process-wide pool: `num_threads() - 1` workers (the calling thread
-/// is the final lane), created on first use and alive for the process
-/// lifetime. `CODEDFEDL_THREADS` therefore bounds *total* compute
-/// threads, exactly as it did under the scoped executor.
+/// The process-wide pool: `num_threads() - 1` workers (each calling
+/// thread is its own extra lane), created on first use and alive for the
+/// process lifetime. `CODEDFEDL_THREADS` therefore bounds the pool's
+/// *resident* compute threads, exactly as it did under the serialized
+/// scheduler; concurrent callers add one lane each for their own jobs.
 pub fn global() -> &'static WorkerPool {
     static POOL: OnceLock<WorkerPool> = OnceLock::new();
     POOL.get_or_init(|| {
@@ -335,6 +397,45 @@ mod tests {
     }
 
     #[test]
+    fn generic_task_jobs_run_every_task_once() {
+        let pool = WorkerPool::with_workers(2);
+        let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_tasks((0..37).collect::<Vec<usize>>(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn concurrent_jobs_from_many_threads_complete_independently() {
+        let pool = WorkerPool::with_workers(3);
+        std::thread::scope(|scope| {
+            for t in 0..4usize {
+                let pool = &pool;
+                scope.spawn(move || {
+                    for round in 0..30 {
+                        let mut m = Matrix::zeros(19 + t, 3);
+                        pool.run_panels(m.view_mut(), 5, |first, mut panel| {
+                            for pr in 0..panel.rows() {
+                                panel.row_mut(pr).fill((t * 1000 + round + first + pr) as f32);
+                            }
+                        });
+                        for r in 0..m.rows() {
+                            assert_eq!(
+                                m.row(r)[0],
+                                (t * 1000 + round + r) as f32,
+                                "thread {t} round {round} row {r}"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
     fn worker_panic_propagates_and_pool_survives() {
         let pool = WorkerPool::with_workers(2);
         let mut m = Matrix::zeros(16, 2);
@@ -358,6 +459,80 @@ mod tests {
         });
         for r in 0..9 {
             assert_eq!(m2.row(r)[0], r as f32 + 1.0);
+        }
+    }
+
+    #[test]
+    fn panic_poisons_only_its_own_job() {
+        // A panicking job running concurrently with a healthy sibling
+        // must not corrupt the sibling's output or deadlock its caller.
+        let pool = WorkerPool::with_workers(3);
+        std::thread::scope(|scope| {
+            let panicker = {
+                let pool = &pool;
+                scope.spawn(move || {
+                    for _ in 0..20 {
+                        let mut bad = Matrix::zeros(24, 2);
+                        let caught = catch_unwind(AssertUnwindSafe(|| {
+                            pool.run_panels(bad.view_mut(), 6, |first, _p| {
+                                if first >= 8 {
+                                    panic!("boom");
+                                }
+                            });
+                        }));
+                        assert!(caught.is_err(), "panic must reach the submitting caller");
+                    }
+                })
+            };
+            let pool = &pool;
+            for round in 0..40 {
+                let mut ok = Matrix::zeros(33, 2);
+                pool.run_panels(ok.view_mut(), 8, |first, mut panel| {
+                    for pr in 0..panel.rows() {
+                        panel.row_mut(pr).fill((round + first + pr) as f32);
+                    }
+                });
+                for r in 0..33 {
+                    assert_eq!(ok.row(r)[0], (round + r) as f32, "round {round} row {r}");
+                }
+            }
+            panicker.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn drop_under_concurrent_load_joins_cleanly() {
+        // Many submitters hammer one shared pool; the pool is dropped by
+        // whichever Arc holder finishes last, with worker threads still
+        // warm from in-flight jobs. Drop must join every worker (no
+        // detached-thread leak) without hanging this test.
+        let pool = Arc::new(WorkerPool::with_workers(3));
+        let mut submitters = Vec::new();
+        for t in 0..4usize {
+            let p = Arc::clone(&pool);
+            submitters.push(std::thread::spawn(move || {
+                for round in 0..25 {
+                    let mut m = Matrix::zeros(48, 3);
+                    p.run_panels(m.view_mut(), 8, |first, mut panel| {
+                        for pr in 0..panel.rows() {
+                            // A little arithmetic so tasks overlap in time.
+                            let mut acc = 0.0f32;
+                            for k in 0..64 {
+                                acc += ((first + pr + k) as f32).sqrt();
+                            }
+                            std::hint::black_box(acc);
+                            panel.row_mut(pr).fill((t * 100 + round) as f32);
+                        }
+                    });
+                    assert_eq!(m.row(0)[0], (t * 100 + round) as f32);
+                }
+                // The last submitter to drop its Arc runs WorkerPool::drop
+                // right here, with its final job barely finished.
+            }));
+        }
+        drop(pool);
+        for h in submitters {
+            h.join().unwrap();
         }
     }
 

@@ -23,7 +23,7 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Result};
 
 use crate::mathx::linalg::{gradient_ref, Matrix};
-use crate::mathx::par;
+use crate::mathx::par::{self, Parallelism};
 
 /// A backend-resident input operand.
 ///
@@ -86,6 +86,27 @@ impl PreparedMatrix {
             PreparedMatrix::Xla(..) => bail!("operand was prepared for the XLA backend"),
         }
     }
+}
+
+/// One client's prepared operands for the batched per-round gradient
+/// entry point ([`ComputeBackend::grad_clients_p`]): the slice features,
+/// slice labels and processed-row mask, all prepared once at trainer
+/// construction.
+#[derive(Clone, Copy)]
+pub struct GradClientOperands<'a> {
+    pub x: &'a PreparedMatrix,
+    pub y: &'a PreparedMatrix,
+    pub mask: &'a PreparedMatrix,
+}
+
+/// One client's operands for the batched parity pass
+/// ([`ComputeBackend::encode_accumulate_batch`]): its private generator,
+/// §3.4 weights and the row-index set of its mini-batch slice.
+#[derive(Clone, Copy)]
+pub struct EncodeClientJob<'a> {
+    pub g: &'a Matrix,
+    pub w: &'a [f32],
+    pub idx: &'a [usize],
 }
 
 /// Compute operations of one shape profile. All matrices are row-major
@@ -235,6 +256,43 @@ pub trait ComputeBackend {
         self.predict_chunk(&x.as_dense()?, beta.as_native()?)
     }
 
+    /// Per-client masked gradients over a whole **client batch**, one
+    /// output per entry in `clients`, in batch order. The default runs
+    /// the clients sequentially through
+    /// [`ComputeBackend::grad_client_p`]; the native backend shards the
+    /// batch across concurrent pool jobs when `par.shards > 1`, with
+    /// bitwise-identical per-client results (each client's kernel is
+    /// deterministic at any thread count), so callers aggregating in
+    /// batch order see the exact sequential-path numbers.
+    fn grad_clients_p(
+        &self,
+        clients: &[GradClientOperands<'_>],
+        beta: &PreparedMatrix,
+        _par: Parallelism,
+    ) -> Result<Vec<Matrix>> {
+        clients.iter().map(|c| self.grad_client_p(c.x, c.y, beta, c.mask)).collect()
+    }
+
+    /// Streaming parity encode over a whole **client batch**:
+    /// `out += sum_j G_j @ (w_j .* source[idx_j])`, accumulated in batch
+    /// order. The default folds the clients in sequentially through
+    /// [`ComputeBackend::encode_accumulate_gather`]; the native backend
+    /// runs the batch as one fused pool job whose per-element addition
+    /// sequence is identical to the sequential fold (bitwise-equal
+    /// composite parity at any thread count).
+    fn encode_accumulate_batch(
+        &self,
+        jobs: &[EncodeClientJob<'_>],
+        source: &Matrix,
+        out: &mut Matrix,
+        _par: Parallelism,
+    ) -> Result<()> {
+        for j in jobs {
+            self.encode_accumulate_gather(j.g, j.w, source, j.idx, out)?;
+        }
+        Ok(())
+    }
+
     /// RFF-embed an arbitrary number of rows by streaming `chunk`-row
     /// slices through [`ComputeBackend::rff_chunk`], zero-padding the tail.
     fn rff_embed_all(&self, x: &Matrix, omega: &Matrix, delta: &Matrix, chunk: usize)
@@ -287,6 +345,60 @@ pub trait ComputeBackend {
 /// Prepared gathers stay zero-copy: the gradient, predict and encode
 /// paths read rows of the shared source in place.
 pub struct NativeBackend;
+
+/// A prepared operand resolved to plain host references, so sharded
+/// batch closures capture only `Sync` data (and unsupported operand
+/// kinds are rejected before any pool task runs).
+#[derive(Clone, Copy)]
+enum HostOperand<'a> {
+    Dense(&'a Matrix),
+    Gather { source: &'a Matrix, idx: &'a [usize] },
+}
+
+fn resolve_host(p: &PreparedMatrix) -> Result<HostOperand<'_>> {
+    match p {
+        PreparedMatrix::Native(m) => Ok(HostOperand::Dense(m)),
+        PreparedMatrix::Shared(m) => Ok(HostOperand::Dense(m)),
+        PreparedMatrix::Gather { source, idx } => {
+            Ok(HostOperand::Gather { source: source.as_ref(), idx: idx.as_slice() })
+        }
+        #[cfg(feature = "xla")]
+        PreparedMatrix::Xla(..) => bail!("operand was prepared for the XLA backend"),
+    }
+}
+
+/// One client's masked gradient over resolved host operands at an
+/// explicit panel count. Gather pairs run zero-copy; anything else is
+/// materialized and fed to the dense kernel. Bitwise identical for any
+/// `threads` (the panel split never changes accumulation order).
+fn native_grad_resolved(
+    x: HostOperand<'_>,
+    y: HostOperand<'_>,
+    beta: &Matrix,
+    mask: &[f32],
+    threads: usize,
+) -> Result<Matrix> {
+    match (x, y) {
+        (
+            HostOperand::Gather { source: xs, idx: xi },
+            HostOperand::Gather { source: ys, idx: yi },
+        ) => {
+            ensure!(xi == yi, "grad: x and y were prepared with different row-index sets");
+            par::gather_gradient_with_threads(xs.view(), ys.view(), xi, beta.view(), mask, threads)
+        }
+        (x, y) => {
+            let xd = match x {
+                HostOperand::Dense(m) => Cow::Borrowed(m),
+                HostOperand::Gather { source, idx } => Cow::Owned(source.select_rows(idx)),
+            };
+            let yd = match y {
+                HostOperand::Dense(m) => Cow::Borrowed(m),
+                HostOperand::Gather { source, idx } => Cow::Owned(source.select_rows(idx)),
+            };
+            par::gradient_with_threads(xd.view(), yd.view(), beta.view(), mask, threads)
+        }
+    }
+}
 
 impl ComputeBackend for NativeBackend {
     fn grad_client(&self, x: &Matrix, y: &Matrix, beta: &Matrix, mask: &[f32]) -> Result<Matrix> {
@@ -410,6 +522,65 @@ impl ComputeBackend for NativeBackend {
         // Parity data is dense (it is synthesized, not sliced), but the
         // gather path is honored for symmetry.
         self.grad_client_p(x, y, beta, mask)
+    }
+
+    fn grad_clients_p(
+        &self,
+        clients: &[GradClientOperands<'_>],
+        beta: &PreparedMatrix,
+        par_cfg: Parallelism,
+    ) -> Result<Vec<Matrix>> {
+        if clients.is_empty() {
+            return Ok(Vec::new());
+        }
+        let beta_m = beta.as_native()?;
+        // Resolve everything up front: shard closures then borrow only
+        // plain host references, and bad operands fail before any task.
+        let mut resolved = Vec::with_capacity(clients.len());
+        for c in clients {
+            resolved.push((resolve_host(c.x)?, resolve_host(c.y)?, c.mask.as_native()?.data()));
+        }
+        let shards = par_cfg.shards.max(1).min(clients.len());
+        if shards <= 1 {
+            // Sequential oracle path: one pool-parallel kernel per
+            // client, in batch order (the pre-sharding trainer loop).
+            return resolved
+                .iter()
+                .map(|&(x, y, mask)| native_grad_resolved(x, y, beta_m, mask, par_cfg.threads))
+                .collect();
+        }
+        // Sharded path: clients fan out across one concurrent pool job.
+        // Each client's kernel gets the thread budget left over after
+        // sharding (threads / shards): with a full batch that is 1 panel
+        // (inline, no nested job); with a small batch — e.g. two
+        // deadline survivors on an 8-thread pool — each client keeps
+        // multi-panel parallelism via a nested concurrent job, so the
+        // phase never uses fewer lanes than the pre-sharding loop.
+        // Either way the results are bitwise identical (panel counts
+        // never change accumulation order).
+        let per_client_threads = (par_cfg.threads / shards).max(1);
+        let mut slots: Vec<Option<Result<Matrix>>> = (0..clients.len()).map(|_| None).collect();
+        par::for_each_shard(&mut slots, shards, |first, chunk| {
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                let (x, y, mask) = resolved[first + off];
+                *slot = Some(native_grad_resolved(x, y, beta_m, mask, per_client_threads));
+            }
+        });
+        slots.into_iter().map(|s| s.expect("shard tasks fill every client slot")).collect()
+    }
+
+    fn encode_accumulate_batch(
+        &self,
+        jobs: &[EncodeClientJob<'_>],
+        source: &Matrix,
+        out: &mut Matrix,
+        par_cfg: Parallelism,
+    ) -> Result<()> {
+        let tasks: Vec<par::EncodeTask<'_>> = jobs
+            .iter()
+            .map(|j| par::EncodeTask { g: j.g.view(), w: j.w, idx: j.idx })
+            .collect();
+        par::encode_accumulate_batch(&tasks, source.view(), out.view_mut(), par_cfg.threads)
     }
 
     fn predict_chunk_p(&self, x: &PreparedMatrix, beta: &PreparedMatrix) -> Result<Matrix> {
@@ -601,6 +772,72 @@ mod tests {
         // Shape mismatch is rejected before touching the accumulator.
         let mut bad = Matrix::zeros(2, 2);
         assert!(nb.encode_accumulate_gather(&g, &w, &source, &idx, &mut bad).is_err());
+    }
+
+    #[test]
+    fn batched_gradients_match_per_client_calls_at_any_shard_count() {
+        let mut rng = Rng::new(31);
+        let nb = NativeBackend;
+        let source = Arc::new(Matrix::randn(60, 7, 0.0, 1.0, &mut rng));
+        let labels = Arc::new(Matrix::randn(60, 3, 0.0, 1.0, &mut rng));
+        let beta = Matrix::randn(7, 3, 0.0, 1.0, &mut rng);
+        let beta_p = nb.prepare(&beta).unwrap();
+        let prepared: Vec<_> = (0..6)
+            .map(|j| {
+                let idx: Vec<usize> = (0..8).map(|k| (j * 8 + k) % 60).collect();
+                let mask: Vec<f32> =
+                    (0..8).map(|k| if k % 3 == 0 { 0.0 } else { 1.0 }).collect();
+                (
+                    nb.prepare_gather(&source, &idx).unwrap(),
+                    nb.prepare_gather(&labels, &idx).unwrap(),
+                    nb.prepare_col(&mask).unwrap(),
+                )
+            })
+            .collect();
+        let clients: Vec<GradClientOperands<'_>> = prepared
+            .iter()
+            .map(|(px, py, pm)| GradClientOperands { x: px, y: py, mask: pm })
+            .collect();
+        // Oracle: the pre-batching per-client entry point.
+        let want: Vec<Matrix> = prepared
+            .iter()
+            .map(|(px, py, pm)| nb.grad_client_p(px, py, &beta_p, pm).unwrap())
+            .collect();
+        for shards in [1, 2, 4, 32] {
+            let got = nb
+                .grad_clients_p(&clients, &beta_p, Parallelism::new(2, shards))
+                .unwrap();
+            assert_eq!(got, want, "batched gradients diverged at {shards} shards");
+        }
+        // Empty batch is a no-op.
+        assert!(nb.grad_clients_p(&[], &beta_p, Parallelism::new(2, 4)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn batched_encode_matches_sequential_accumulate_gather() {
+        let mut rng = Rng::new(32);
+        let nb = NativeBackend;
+        let source = Matrix::randn(40, 6, 0.0, 1.0, &mut rng);
+        let per_client: Vec<(Matrix, Vec<f32>, Vec<usize>)> = (0..4)
+            .map(|j| {
+                let l = 5 + j;
+                let g = Matrix::randn(7, l, 0.0, 0.4, &mut rng);
+                let w: Vec<f32> = (0..l).map(|k| 0.3 + k as f32 * 0.1).collect();
+                let idx: Vec<usize> = (0..l).map(|k| (j * 9 + k * 3) % 40).collect();
+                (g, w, idx)
+            })
+            .collect();
+        let mut want = Matrix::randn(7, 6, 0.0, 1.0, &mut rng);
+        let mut got = want.clone();
+        for (g, w, idx) in &per_client {
+            nb.encode_accumulate_gather(g, w, &source, idx, &mut want).unwrap();
+        }
+        let jobs: Vec<EncodeClientJob<'_>> = per_client
+            .iter()
+            .map(|(g, w, idx)| EncodeClientJob { g, w, idx })
+            .collect();
+        nb.encode_accumulate_batch(&jobs, &source, &mut got, Parallelism::new(3, 2)).unwrap();
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -289,6 +289,132 @@ fn oversubscribed_panel_counts_are_exact() {
 }
 
 #[test]
+fn concurrent_jobs_from_two_threads_are_bitwise_correct() {
+    // Two threads drive independent kernel trains through the GLOBAL
+    // pool at the same time. Under the concurrent-job scheduler their
+    // panel tasks interleave on the shared workers; every result must
+    // still be bitwise equal to its scalar oracle.
+    std::thread::scope(|scope| {
+        for seed in [11u64, 22u64] {
+            scope.spawn(move || {
+                let mut g = Gen::new(seed);
+                for round in 0..12 {
+                    let m = 20 + (round * 31) % 90;
+                    let k = 10 + (round * 17) % 70;
+                    let a = rand_matrix(&mut g, m, k);
+                    let b = rand_matrix(&mut g, k, 4);
+                    assert_eq!(
+                        par::matmul_with_threads(a.view(), b.view(), 4),
+                        matmul_naive(a.view(), b.view()),
+                        "seed {seed} round {round}: matmul"
+                    );
+                    let y = rand_matrix(&mut g, m, 4);
+                    let beta = rand_matrix(&mut g, k, 4);
+                    let mask = rand_mask(&mut g, m);
+                    assert_eq!(
+                        par::gradient_with_threads(a.view(), y.view(), beta.view(), &mask, 3)
+                            .unwrap(),
+                        gradient_naive(&a, &y, &beta, &mask).unwrap(),
+                        "seed {seed} round {round}: gradient"
+                    );
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn panic_in_one_concurrent_job_leaves_the_sibling_job_intact() {
+    // One thread keeps submitting panicking jobs to the global pool
+    // while another runs oracle-checked kernels: the poison must stay
+    // confined to the panicking job (no corruption, no deadlock).
+    std::thread::scope(|scope| {
+        let panicker = scope.spawn(|| {
+            for _ in 0..15 {
+                let mut bad = Matrix::zeros(24, 2);
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    codedfedl::mathx::pool::global().run_panels(
+                        bad.view_mut(),
+                        6,
+                        |first, _p| {
+                            if first >= 8 {
+                                panic!("boom in concurrent job");
+                            }
+                        },
+                    );
+                }));
+                assert!(caught.is_err(), "panic must surface on its own caller");
+            }
+        });
+        let mut g = Gen::new(0xAB);
+        for round in 0..30 {
+            let a = rand_matrix(&mut g, 50, 33);
+            let b = rand_matrix(&mut g, 33, 5);
+            assert_eq!(
+                par::matmul_with_threads(a.view(), b.view(), 4),
+                matmul_naive(a.view(), b.view()),
+                "round {round}: sibling job corrupted by a panicking job"
+            );
+        }
+        panicker.join().unwrap();
+    });
+}
+
+#[test]
+fn shards_exceeding_workers_queue_cleanly() {
+    // Oversubscription at the *shard* level: far more shard tasks than
+    // the pool has threads just queue, every item is processed exactly
+    // once, and the sharded batched gradient stays bitwise equal to the
+    // sequential per-client loop.
+    let mut counters = vec![0u32; 300];
+    par::for_each_shard(&mut counters, 128, |first, chunk| {
+        for (off, v) in chunk.iter_mut().enumerate() {
+            *v += (first + off) as u32 + 1;
+        }
+    });
+    for (i, v) in counters.iter().enumerate() {
+        assert_eq!(*v, i as u32 + 1, "item {i} not processed exactly once");
+    }
+
+    use codedfedl::runtime::backend::{ComputeBackend, GradClientOperands, NativeBackend};
+    use std::sync::Arc;
+    let mut g = Gen::new(0xCC);
+    let (n_clients, l, q, c) = (10usize, 8usize, 12usize, 3usize);
+    let emb = Arc::new(rand_matrix(&mut g, n_clients * l, q));
+    let labels = Arc::new(rand_matrix(&mut g, n_clients * l, c));
+    let beta = rand_matrix(&mut g, q, c);
+    let nb = NativeBackend;
+    let beta_p = nb.prepare(&beta).unwrap();
+    let prepared: Vec<_> = (0..n_clients)
+        .map(|j| {
+            let idx: Vec<usize> = (j * l..(j + 1) * l).collect();
+            let mask = rand_mask(&mut g, l);
+            (
+                nb.prepare_gather(&emb, &idx).unwrap(),
+                nb.prepare_gather(&labels, &idx).unwrap(),
+                nb.prepare_col(&mask).unwrap(),
+            )
+        })
+        .collect();
+    let clients: Vec<GradClientOperands<'_>> = prepared
+        .iter()
+        .map(|(px, py, pm)| GradClientOperands { x: px, y: py, mask: pm })
+        .collect();
+    let want = nb
+        .grad_clients_p(&clients, &beta_p, par::Parallelism::new(2, 1))
+        .unwrap();
+    for shards in [2, 7, 64] {
+        let got = nb
+            .grad_clients_p(&clients, &beta_p, par::Parallelism::new(2, shards))
+            .unwrap();
+        assert_eq!(got.len(), want.len());
+        for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a, b, "client {j} gradient diverged at {shards} shards");
+        }
+    }
+}
+
+#[test]
 fn kernels_validate_before_computing() {
     // Descriptive errors, not index panics deep in a loop.
     let x = Matrix::zeros(8, 4);

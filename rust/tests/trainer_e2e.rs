@@ -1,9 +1,14 @@
-//! Integration: end-to-end training over the XLA runtime (tiny profile).
-//! Requires `make artifacts`; skips cleanly when they are absent.
+//! Integration: end-to-end training over the XLA runtime (tiny profile),
+//! plus native-backend round-parallelism invariants. The XLA tests
+//! require `make artifacts` and skip cleanly when they are absent; the
+//! sharded-determinism tests run everywhere.
+
+use std::sync::Arc;
 
 use codedfedl::config::{ExperimentConfig, Scheme};
-use codedfedl::fl::trainer::Trainer;
-use codedfedl::runtime::backend::NativeBackend;
+use codedfedl::fl::trainer::{SharedData, Trainer};
+use codedfedl::mathx::par::Parallelism;
+use codedfedl::runtime::backend::{ComputeBackend, NativeBackend};
 
 fn artifacts_ready() -> bool {
     let ok = std::path::Path::new("artifacts/manifest.json").exists();
@@ -99,6 +104,67 @@ fn coded_is_faster_per_step_without_losing_accuracy() {
         rc.best_accuracy(),
         ru.best_accuracy()
     );
+}
+
+/// Run the tiny config to completion at an explicit (threads, shards)
+/// and return the final model plus the eval trajectory.
+fn run_with_parallelism(
+    cfg: &ExperimentConfig,
+    shared: &Arc<SharedData>,
+    threads: usize,
+    shards: usize,
+) -> (codedfedl::mathx::linalg::Matrix, Vec<(f64, f64)>) {
+    let mut t = Trainer::with_shared_parallelism(
+        cfg,
+        Box::new(NativeBackend),
+        Arc::clone(shared),
+        Parallelism::new(threads, shards),
+    )
+    .unwrap();
+    let report = t.run().unwrap();
+    let curve = report.records.iter().map(|r| (r.accuracy, r.loss)).collect();
+    (t.beta().clone(), curve)
+}
+
+#[test]
+fn sharded_trainer_beta_is_bitwise_identical_across_threads_and_shards() {
+    // The tentpole invariant: the sharded round (concurrent pool jobs
+    // over clients) reproduces the sequential oracle path bit for bit —
+    // the final beta must be IDENTICAL (f32 equality, not tolerance) for
+    // every (threads, shards) combination, coded and uncoded alike.
+    for scheme in [Scheme::Coded, Scheme::Uncoded] {
+        let mut cfg = tiny(scheme, "native");
+        cfg.train.epochs = 4;
+        let backend: Box<dyn ComputeBackend> = Box::new(NativeBackend);
+        let shared = Arc::new(SharedData::build(&cfg, backend.as_ref()).unwrap());
+        let (beta_ref, curve_ref) = run_with_parallelism(&cfg, &shared, 1, 1);
+        for (threads, shards) in [(4, 1), (1, 8), (4, 8), (2, 3)] {
+            let (beta, curve) = run_with_parallelism(&cfg, &shared, threads, shards);
+            assert_eq!(
+                beta, beta_ref,
+                "{}: final beta diverged at threads={threads} shards={shards}",
+                scheme.name()
+            );
+            assert_eq!(
+                curve, curve_ref,
+                "{}: eval trajectory diverged at threads={threads} shards={shards}",
+                scheme.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn joint_scheme_is_shard_invariant_too() {
+    // CodedJoint exercises the optimizer-chosen redundancy path; the
+    // sharded parity pass must replay it exactly as well.
+    let mut cfg = tiny(Scheme::CodedJoint, "native");
+    cfg.train.epochs = 3;
+    let backend: Box<dyn ComputeBackend> = Box::new(NativeBackend);
+    let shared = Arc::new(SharedData::build(&cfg, backend.as_ref()).unwrap());
+    let (beta_ref, _) = run_with_parallelism(&cfg, &shared, 2, 1);
+    let (beta, _) = run_with_parallelism(&cfg, &shared, 2, 8);
+    assert_eq!(beta, beta_ref, "joint scheme diverged under sharding");
 }
 
 #[test]
