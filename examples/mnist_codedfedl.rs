@@ -16,8 +16,8 @@ use codedfedl::config::{ExperimentConfig, Scheme};
 use codedfedl::metrics::TrainReport;
 
 fn run(runner: &mut SweepRunner, cfg: &ExperimentConfig) -> anyhow::Result<TrainReport> {
-    let mut trainer = runner.trainer(cfg)?;
-    if let Some(plan) = &trainer.setup().plan {
+    let mut session = runner.session(cfg)?;
+    if let Some(plan) = &session.setup().plan {
         println!(
             "  allocation: t* = {:.3}s, u = {} parity rows, mean load {:.1}",
             plan.deadline,
@@ -25,7 +25,7 @@ fn run(runner: &mut SweepRunner, cfg: &ExperimentConfig) -> anyhow::Result<Train
             plan.loads.iter().sum::<usize>() as f64 / plan.loads.len() as f64
         );
     }
-    let report = trainer.run()?;
+    let report = session.run()?;
     println!(
         "  {}: final acc {:.4}, best {:.4}, sim {:.1}s, host {:.1}s, arrivals {:.2}",
         report.scheme,

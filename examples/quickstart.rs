@@ -5,29 +5,31 @@
 //! ```
 //!
 //! Walks the full pipeline — RFF embedding, load allocation, parity
-//! encoding, coded training over the simulated MEC network — and prints
-//! the accuracy curve. Falls back to the native backend when artifacts
-//! have not been built yet.
+//! encoding, coded training over the simulated MEC network — through the
+//! scenario API: a [`ScenarioBuilder`] compiles the experiment into a
+//! [`Session`], which streams or collects results. Falls back to the
+//! native backend when artifacts have not been built yet.
 
-use codedfedl::config::ExperimentConfig;
-use codedfedl::fl::trainer::Trainer;
+use codedfedl::scenario::ScenarioBuilder;
 
 fn main() -> anyhow::Result<()> {
     codedfedl::util::logging::init_from_env();
     // The preset's `auto` backend resolves through the registry: XLA when
     // compiled in and artifacts exist, the native pooled kernels otherwise.
-    let cfg = ExperimentConfig::preset("tiny")?;
+    let builder = ScenarioBuilder::from_preset("tiny")?;
+    let mut session = builder.build()?;
+    let cfg = &session.scenario().cfg;
 
     println!("CodedFedL quickstart");
     println!("  dataset    : {} ({} train / {} test)", cfg.dataset, cfg.m_train, cfg.m_test);
     println!("  clients    : {} (non-IID shards)", cfg.n_clients);
     println!("  redundancy : {:.0}%", 100.0 * cfg.train.redundancy);
-
-    let mut trainer = Trainer::from_config(&cfg)?;
-    if let Some(plan) = &trainer.setup().plan {
+    println!("  backend    : {}", session.backend_name());
+    if let Some(plan) = &session.setup().plan {
         println!("  deadline t*: {:.3} s, loads {:?}", plan.deadline, plan.loads);
     }
-    let report = trainer.run()?;
+
+    let report = session.run()?;
 
     println!("\n  epoch  step  sim-time(s)  accuracy   loss");
     for r in &report.records {
@@ -42,5 +44,7 @@ fn main() -> anyhow::Result<()> {
         report.total_sim_time_s,
         report.host_time_s
     );
+    println!("\nnext: try a dynamic population —");
+    println!("  cargo run --release --example population_scenario");
     Ok(())
 }

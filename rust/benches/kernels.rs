@@ -425,8 +425,24 @@ fn main() -> anyhow::Result<()> {
             Json::obj(vec![("cell", Json::Str(what.clone())), ("result", Json::Str(line.clone()))])
         })
         .collect();
+    // Refuse to emit placeholder output: this file's committed ancestor
+    // was once an unmeasured schema stub, and downstream perf tracking
+    // must never mistake a stub for data. Every cell must have really
+    // run (>= 1 iter, finite positive mean) before anything is written.
+    anyhow::ensure!(
+        !round_results.is_empty(),
+        "refusing to write BENCH_round.json: no round cells were measured"
+    );
+    for r in b.results().iter().filter(|r| round_names.contains(&r.name)) {
+        anyhow::ensure!(
+            r.iters >= 1 && r.mean_s.is_finite() && r.mean_s > 0.0,
+            "refusing to write BENCH_round.json: cell '{}' has no real measurement",
+            r.name
+        );
+    }
     let round_doc = Json::obj(vec![
         ("bench", Json::Str("round".into())),
+        ("status", Json::Str("measured".into())),
         ("quick", Json::Bool(quick)),
         ("threads_knob", Json::Num(par::num_threads() as f64)),
         ("shards_knob", Json::Num(par::num_shards() as f64)),

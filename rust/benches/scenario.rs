@@ -1,0 +1,141 @@
+//! Scenario-layer overhead benchmark: a static 256-client scenario run
+//! through the new `Session` API vs the same config through the legacy
+//! `Trainer` path, bitwise-gated before timing (the static scenario must
+//! reproduce the legacy trajectory exactly — the tentpole invariant of
+//! the scenario redesign). Also times a churn-enabled variant to price
+//! the dynamic path (roster computation + cached parity re-encodes).
+//!
+//! Emits `BENCH_scenario.json`. Like the `round` cell, this bench
+//! refuses to write placeholder numbers: the JSON is only written after
+//! real measured results exist.
+//!
+//! ```bash
+//! cargo bench --bench scenario            # full
+//! cargo bench --bench scenario -- --quick # CI smoke
+//! ```
+
+use codedfedl::benchx::Bencher;
+use codedfedl::config::Scheme;
+use codedfedl::fl::trainer::Trainer;
+use codedfedl::mathx::par;
+use codedfedl::runtime::backend::NativeBackend;
+use codedfedl::scenario::ScenarioBuilder;
+use codedfedl::simnet::ChurnSchedule;
+use codedfedl::util::json::Json;
+
+/// The 256-client static scenario both paths run.
+fn builder(epochs: usize) -> anyhow::Result<ScenarioBuilder> {
+    let mut b = ScenarioBuilder::from_preset("tiny")?;
+    // Population-scale ladders (k1/k2 decay per rank; see ScenarioBuilder
+    // docs) + a fixed parallelism-from-env setup.
+    b.set("net.k1", "0.995")?;
+    b.set("net.k2", "0.99")?;
+    b.set("backend", "native")?;
+    Ok(b.population(256).steps_per_epoch(1).epochs(epochs).scheme(Scheme::Coded))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let epochs = if quick { 2 } else { 4 };
+    let mut b = Bencher::new();
+    b.target_time_s = if quick { 0.0 } else { 0.5 };
+    b.max_iters = if quick { 1 } else { 3 };
+    b.warmup = 0;
+
+    // ---- bitwise gate: static scenario == legacy trainer, exactly. ----
+    let scenario = builder(epochs)?.compile()?;
+    let cfg = scenario.cfg.clone();
+    let mut session = builder(epochs)?.build_with_backend(Box::new(NativeBackend))?;
+    let session_report = session.run()?;
+    #[allow(deprecated)] // the deprecated shim IS the comparison target
+    let mut legacy = Trainer::with_backend(&cfg, Box::new(NativeBackend))?;
+    let legacy_report = legacy.run()?;
+    assert_eq!(
+        session.beta(),
+        legacy.beta(),
+        "static 256-client scenario diverged from the legacy trainer path"
+    );
+    assert_eq!(session_report.records.len(), legacy_report.records.len());
+    for (a, c) in session_report.records.iter().zip(&legacy_report.records) {
+        assert_eq!(a.accuracy, c.accuracy, "accuracy trajectory diverged");
+        assert_eq!(a.loss, c.loss, "loss trajectory diverged");
+        assert_eq!(a.sim_time_s, c.sim_time_s, "delay stream diverged");
+    }
+    println!(
+        "bitwise gate passed: session == legacy over {} evals (final acc {:.4})",
+        session_report.records.len(),
+        session_report.final_accuracy()
+    );
+
+    // ---- timing: build + run, end to end (the scenario spin-up cost is
+    // exactly what this cell tracks across PRs). ----
+    let session_name = format!("scenario n=256 static session ({epochs} epochs)");
+    b.bench(&session_name, || {
+        let mut s = builder(epochs)
+            .unwrap()
+            .build_with_backend(Box::new(NativeBackend))
+            .unwrap();
+        std::hint::black_box(s.run().unwrap());
+    });
+    let legacy_name = format!("scenario n=256 legacy trainer ({epochs} epochs)");
+    b.bench(&legacy_name, || {
+        #[allow(deprecated)]
+        let mut t = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap();
+        std::hint::black_box(t.run().unwrap());
+    });
+    let churn_name = format!("scenario n=256 churn session ({epochs} epochs)");
+    b.bench(&churn_name, || {
+        let mut s = builder(epochs)
+            .unwrap()
+            .churn(ChurnSchedule::Bernoulli { p_away: 0.25, min_active: 16 })
+            .build_with_backend(Box::new(NativeBackend))
+            .unwrap();
+        std::hint::black_box(s.run().unwrap());
+    });
+
+    b.report("scenario layer (static session vs legacy trainer, 256 clients)");
+    let mean = |name: &str| {
+        b.results().iter().find(|r| r.name == name).map(|r| r.mean_s).unwrap_or(f64::NAN)
+    };
+    let overhead = mean(&session_name) / mean(&legacy_name);
+    println!("\nsession/legacy time ratio: x{overhead:.3} (1.0 = free abstraction)");
+    println!(
+        "churn/static time ratio:   x{:.3} (roster + cached re-encodes)",
+        mean(&churn_name) / mean(&session_name)
+    );
+
+    // ---- machine-readable trajectory; refuse placeholder output. ----
+    let results: Vec<Json> = b
+        .results()
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("iters", Json::Num(r.iters as f64)),
+                ("mean_s", Json::Num(r.mean_s)),
+                ("p50_s", Json::Num(r.p50_s)),
+                ("p95_s", Json::Num(r.p95_s)),
+                ("min_s", Json::Num(r.min_s)),
+            ])
+        })
+        .collect();
+    anyhow::ensure!(
+        !results.is_empty()
+            && b.results().iter().all(|r| r.iters >= 1 && r.mean_s.is_finite() && r.mean_s > 0.0),
+        "refusing to write BENCH_scenario.json without real measurements"
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("scenario".into())),
+        ("status", Json::Str("measured".into())),
+        ("quick", Json::Bool(quick)),
+        ("clients", Json::Num(256.0)),
+        ("epochs", Json::Num(epochs as f64)),
+        ("threads_knob", Json::Num(par::num_threads() as f64)),
+        ("shards_knob", Json::Num(par::num_shards() as f64)),
+        ("session_over_legacy", Json::Num(overhead)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write("BENCH_scenario.json", doc.to_string())?;
+    println!("wrote BENCH_scenario.json");
+    Ok(())
+}

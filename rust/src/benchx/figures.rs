@@ -5,8 +5,8 @@
 use anyhow::Result;
 
 use crate::config::{ExperimentConfig, Scheme};
-use crate::fl::trainer::Trainer;
 use crate::metrics::TrainReport;
+use crate::scenario::Session;
 
 /// Resolve the bench preset: `CODEDFEDL_BENCH_PRESET` env var, else `small`
 /// (the right scale for this 1-core host; `paper` is supported but slow).
@@ -28,10 +28,9 @@ pub fn bench_config(dataset: &str, scheme: Scheme) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-/// Run one training experiment.
+/// Run one training experiment (a static scenario session over `cfg`).
 pub fn run(cfg: &ExperimentConfig) -> Result<TrainReport> {
-    let mut trainer = Trainer::from_config(cfg)?;
-    trainer.run()
+    Session::from_config(cfg)?.run()
 }
 
 /// Run the uncoded/coded pair on a dataset through the batched sweep

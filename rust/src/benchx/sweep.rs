@@ -7,6 +7,10 @@
 //! [`SharedData`] and reuses it whenever the next config's
 //! embedding key (dataset, seed, shapes, sigma, backend) matches,
 //! cutting sweep time by the embedding cost times the variant count.
+//!
+//! Variants are built as scenario [`Session`]s
+//! ([`SweepRunner::session`]); the old `trainer` entry survives as a
+//! deprecated shim.
 
 use std::sync::Arc;
 
@@ -17,6 +21,7 @@ use crate::fl::trainer::{SharedData, Trainer};
 use crate::mathx::par::Parallelism;
 use crate::metrics::TrainReport;
 use crate::runtime::registry::create_backend;
+use crate::scenario::Session;
 
 /// Runs experiment variants against a cached shared embedding.
 pub struct SweepRunner {
@@ -25,7 +30,7 @@ pub struct SweepRunner {
     hits: usize,
     /// How many had to (re)build the embedding.
     builds: usize,
-    /// Round parallelism every swept trainer runs with (sharding is
+    /// Round parallelism every swept session runs with (sharding is
     /// bitwise neutral, so sweeps saturate the pool for free).
     par: Parallelism,
 }
@@ -42,35 +47,53 @@ impl SweepRunner {
         SweepRunner::with_parallelism(Parallelism::from_env())
     }
 
-    /// Explicit round parallelism for every trainer this runner builds —
+    /// Explicit round parallelism for every session this runner builds —
     /// e.g. a thousands-of-client population sweep pinning `shards` to
     /// the pool size. Trajectories are bitwise independent of the choice.
     pub fn with_parallelism(par: Parallelism) -> SweepRunner {
         SweepRunner { shared: None, hits: 0, builds: 0, par }
     }
 
-    /// Build a trainer for `cfg`, reusing the cached embedding when the
-    /// config is compatible (otherwise the cache is rebuilt for it).
-    pub fn trainer(&mut self, cfg: &ExperimentConfig) -> Result<Trainer> {
-        let backend = create_backend(&cfg.backend, cfg)?;
-        let shared = match &self.shared {
+    /// The cached-or-rebuilt shared embedding state for `cfg`.
+    fn shared_for(
+        &mut self,
+        cfg: &ExperimentConfig,
+        backend: &dyn crate::runtime::backend::ComputeBackend,
+    ) -> Result<Arc<SharedData>> {
+        match &self.shared {
             Some(s) if s.compatible(cfg) => {
                 self.hits += 1;
-                Arc::clone(s)
+                Ok(Arc::clone(s))
             }
             _ => {
                 self.builds += 1;
-                let s = Arc::new(SharedData::build(cfg, backend.as_ref())?);
+                let s = Arc::new(SharedData::build(cfg, backend)?);
                 self.shared = Some(Arc::clone(&s));
-                s
+                Ok(s)
             }
-        };
-        Trainer::with_shared_parallelism(cfg, backend, shared, self.par)
+        }
+    }
+
+    /// Build a static-scenario [`Session`] for `cfg`, reusing the cached
+    /// embedding when the config is compatible (otherwise the cache is
+    /// rebuilt for it).
+    pub fn session(&mut self, cfg: &ExperimentConfig) -> Result<Session> {
+        let backend = create_backend(&cfg.backend, cfg)?;
+        let shared = self.shared_for(cfg, backend.as_ref())?;
+        Session::from_config_shared(cfg, backend, shared, self.par)
+    }
+
+    /// Legacy entry: a bare [`Trainer`] instead of a [`Session`].
+    #[deprecated(note = "use SweepRunner::session — sessions are the single way to run training")]
+    pub fn trainer(&mut self, cfg: &ExperimentConfig) -> Result<Trainer> {
+        let backend = create_backend(&cfg.backend, cfg)?;
+        let shared = self.shared_for(cfg, backend.as_ref())?;
+        Trainer::build_internal(cfg, backend, shared, self.par, None)
     }
 
     /// Run one variant end-to-end.
     pub fn run(&mut self, cfg: &ExperimentConfig) -> Result<TrainReport> {
-        self.trainer(cfg)?.run()
+        self.session(cfg)?.run()
     }
 
     /// `(embedding cache hits, embedding builds)` so far.
@@ -109,6 +132,7 @@ mod tests {
         let cfg = tiny(Scheme::Coded);
         let mut runner = SweepRunner::new();
         let swept = runner.run(&cfg).unwrap();
+        #[allow(deprecated)] // the legacy path is the bitwise oracle here
         let solo = Trainer::from_config(&cfg).unwrap().run().unwrap();
         assert_eq!(swept.records.len(), solo.records.len());
         for (a, b) in swept.records.iter().zip(&solo.records) {
@@ -125,5 +149,14 @@ mod tests {
         other.seed = 42;
         runner.run(&other).unwrap();
         assert_eq!(runner.cache_stats(), (0, 2));
+    }
+
+    #[test]
+    fn session_exposes_setup_like_the_trainer_did() {
+        let mut runner = SweepRunner::new();
+        let session = runner.session(&tiny(Scheme::Coded)).unwrap();
+        assert!(session.setup().plan.is_some());
+        assert_eq!(session.backend_name(), "native");
+        assert!(session.scenario().is_static());
     }
 }

@@ -389,19 +389,32 @@ impl ExperimentConfig {
 
     /// Load overrides from a `key = value` file (# comments, blank lines ok).
     pub fn apply_file(&mut self, path: &str) -> Result<()> {
-        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        for (lineno, line) in text.lines().enumerate() {
-            let line = line.split('#').next().unwrap().trim();
-            if line.is_empty() {
-                continue;
-            }
-            let (k, v) = line
-                .split_once('=')
-                .with_context(|| format!("{path}:{}: expected 'key = value'", lineno + 1))?;
-            self.set(k, v).with_context(|| format!("{path}:{}", lineno + 1))?;
-        }
+        parse_kv_file(path, &mut |k, v| self.set(k, v))?;
         self.validate()
     }
+}
+
+/// Parse a `key = value` file (`#` comments and blank lines allowed),
+/// feeding each pair to `apply` with line-number error context. Shared
+/// by [`ExperimentConfig::apply_file`] and the scenario spec parser
+/// ([`crate::scenario::ScenarioBuilder::apply_file`]), so both speak the
+/// same on-disk format.
+pub fn parse_kv_file(
+    path: &str,
+    apply: &mut dyn FnMut(&str, &str) -> Result<()>,
+) -> Result<()> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("{path}:{}: expected 'key = value'", lineno + 1))?;
+        apply(k, v).with_context(|| format!("{path}:{}", lineno + 1))?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -1,9 +1,11 @@
 //! The federated-learning runtime: per-client state, the learning-rate
-//! schedule, and the [`trainer::Trainer`] that runs both the uncoded
-//! baseline and the CodedFedL scheme over the simulated MEC network.
+//! schedule, and the [`trainer::Trainer`] engine that runs both the
+//! uncoded baseline and the CodedFedL scheme over the simulated MEC
+//! network. Construction goes through [`crate::scenario`] — the trainer
+//! constructors are deprecated shims kept for compatibility.
 
 pub mod embedding;
 pub mod lr;
 pub mod trainer;
 
-pub use trainer::{SharedData, Trainer, TrainerSetup};
+pub use trainer::{SharedData, StepOutcome, Trainer, TrainerSetup};

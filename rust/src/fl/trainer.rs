@@ -18,11 +18,24 @@
 //! Construction is split in two so sweeps can share the expensive part:
 //! [`SharedData`] holds the loaded dataset and the RFF-embedded
 //! train/test matrices (invariant across scheme/redundancy/network
-//! variants), and [`Trainer::with_shared`] builds the per-variant state
-//! (allocation plan, masks, parity, prepared-operand caches) on top of
-//! it. All heavy compute runs on the persistent worker pool
-//! ([`crate::mathx::pool`]), warmed at construction so the first
-//! training step pays no spawn cost.
+//! variants), and the per-variant state (allocation plan, masks, parity,
+//! prepared-operand caches) is built on top of it. All heavy compute
+//! runs on the persistent worker pool ([`crate::mathx::pool`]), warmed
+//! at construction so the first training step pays no spawn cost.
+//!
+//! **Construction now goes through the scenario layer**: build a
+//! [`crate::scenario::Session`] with a
+//! [`crate::scenario::ScenarioBuilder`] and run it with streaming
+//! [`crate::scenario::RoundObserver`]s. The four legacy constructors
+//! (`from_config`, `with_backend`, `with_shared`,
+//! `with_shared_parallelism`) survive as thin deprecated shims over the
+//! same engine; a static single-cell scenario reproduces their
+//! trajectories **bitwise** (enforced in `trainer_e2e`). The engine's
+//! round primitive, `Trainer::step_round`, additionally accepts a
+//! per-epoch round context (active-client subset, effective delay
+//! models, re-encoded parity) that the scenario session uses to drive
+//! churn and time-varying-rate dynamics; [`crate::scenario::Session`]
+//! owns that loop.
 
 use std::sync::Arc;
 
@@ -45,7 +58,10 @@ use crate::runtime::backend::{
     ComputeBackend, EncodeClientJob, GradClientOperands, PreparedMatrix,
 };
 use crate::runtime::registry::create_backend;
-use crate::simnet::topology::{build_population, Population};
+use crate::simnet::delay::ClientModel;
+use crate::simnet::topology::{
+    build_population, build_population_with_topology, Population, Topology,
+};
 
 /// Clients per batched backend call (parity encodes and per-client
 /// gradients): bounds the resident per-client intermediates — generator
@@ -71,6 +87,34 @@ pub struct TrainerSetup {
     pub population: Population,
     pub plan: Option<AllocationPlan>,
     pub rff: RffParams,
+}
+
+/// What one global mini-batch round did: the simulated step time, how
+/// many client gradients reached the server, and which active clients
+/// missed the deadline (coded rounds; uncoded rounds have none because
+/// the server waits for everyone).
+#[derive(Debug, Clone, Default)]
+pub struct StepOutcome {
+    pub step_time_s: f64,
+    pub arrivals: usize,
+    pub stragglers: Vec<usize>,
+}
+
+/// Scenario-layer overrides for one round, passed by
+/// [`crate::scenario::Session`]. `None` everywhere reproduces the
+/// static full-population round **bitwise** — the fields only *narrow*
+/// or *re-rate* the round, they never reorder it: clients are always
+/// visited in ascending id, so aggregation order (and therefore every
+/// f32 sum) is pinned regardless of which subset participates.
+pub(crate) struct RoundCtx<'a> {
+    /// Ascending ids of the clients present this epoch.
+    pub active: &'a [usize],
+    /// Effective per-client delay models for this epoch (length
+    /// `n_clients`; `None` = the construction-time population).
+    pub models: Option<&'a [ClientModel]>,
+    /// Re-encoded composite parity for this step (churn path; `None` =
+    /// the construction-time parity).
+    pub parity: Option<&'a (PreparedMatrix, PreparedMatrix, PreparedMatrix)>,
 }
 
 /// The config fields the shared dataset + embedding state depends on.
@@ -200,6 +244,9 @@ pub struct Trainer {
     /// indices (labels for the loss series are read in place).
     prep_batch: Vec<(Vec<PreparedMatrix>, Vec<usize>)>,
     setup: TrainerSetup,
+    /// `0..n_clients`, the default round roster (the static
+    /// full-population case of [`RoundCtx::active`]).
+    all_clients: Vec<usize>,
     /// Current model, `Arc`-shared so the per-step beta snapshot handed
     /// to the backend is a refcount bump instead of a host clone.
     beta: Arc<Matrix>,
@@ -218,31 +265,40 @@ impl Trainer {
     /// (`cfg.backend`) through the [`crate::runtime::registry`] — `auto`
     /// resolves to XLA when compiled in and artifacts exist, else to the
     /// native pooled kernels.
+    #[deprecated(note = "build a scenario::Session with ScenarioBuilder::from_config instead")]
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Trainer> {
         let backend = create_backend(&cfg.backend, cfg)?;
-        Self::with_backend(cfg, backend)
+        cfg.validate()?;
+        let shared = Arc::new(SharedData::build(cfg, backend.as_ref())?);
+        Self::build_internal(cfg, backend, shared, Parallelism::from_env(), None)
     }
 
     /// Build with an explicit backend (tests inject `NativeBackend`).
+    #[deprecated(
+        note = "build a scenario::Session with ScenarioBuilder::from_config(..).build_with_backend instead"
+    )]
     pub fn with_backend(
         cfg: &ExperimentConfig,
         backend: Box<dyn ComputeBackend>,
     ) -> Result<Trainer> {
         cfg.validate()?;
         let shared = Arc::new(SharedData::build(cfg, backend.as_ref())?);
-        Self::with_shared(cfg, backend, shared)
+        Self::build_internal(cfg, backend, shared, Parallelism::from_env(), None)
     }
 
     /// Build on top of pre-built [`SharedData`] (the sweep fast path:
     /// scheme/redundancy/network variants reuse one embedding), with the
     /// environment's parallelism knobs (`CODEDFEDL_THREADS` /
     /// `CODEDFEDL_SHARDS`).
+    #[deprecated(
+        note = "build a scenario::Session with ScenarioBuilder::from_config(..).build_with_shared instead"
+    )]
     pub fn with_shared(
         cfg: &ExperimentConfig,
         backend: Box<dyn ComputeBackend>,
         shared: Arc<SharedData>,
     ) -> Result<Trainer> {
-        Self::with_shared_parallelism(cfg, backend, shared, Parallelism::from_env())
+        Self::build_internal(cfg, backend, shared, Parallelism::from_env(), None)
     }
 
     /// [`Trainer::with_shared`] with explicit parallelism. `shards > 1`
@@ -254,11 +310,28 @@ impl Trainer {
     /// so the final model is **bitwise identical** for every
     /// `(threads, shards)` combination — the knobs trade only
     /// wall-clock.
+    #[deprecated(
+        note = "build a scenario::Session with ScenarioBuilder::from_config(..).parallelism(..) instead"
+    )]
     pub fn with_shared_parallelism(
         cfg: &ExperimentConfig,
         backend: Box<dyn ComputeBackend>,
         shared: Arc<SharedData>,
         par: Parallelism,
+    ) -> Result<Trainer> {
+        Self::build_internal(cfg, backend, shared, par, None)
+    }
+
+    /// The one real constructor, shared by the deprecated shims and the
+    /// scenario layer. `topo` applies a multi-cell topology on top of
+    /// the §A.2 population (`None` / trivial = the legacy single-cell
+    /// population, bitwise).
+    pub(crate) fn build_internal(
+        cfg: &ExperimentConfig,
+        backend: Box<dyn ComputeBackend>,
+        shared: Arc<SharedData>,
+        par: Parallelism,
+        topo: Option<&Topology>,
     ) -> Result<Trainer> {
         cfg.validate()?;
         ensure!(
@@ -283,7 +356,10 @@ impl Trainer {
         let shards = crate::data::noniid::shard_non_iid(&shared.train, cfg.n_clients)?;
 
         // 2. MEC population + load allocation.
-        let population = build_population(cfg, &mut topo_rng);
+        let population = match topo {
+            Some(t) => build_population_with_topology(cfg, t, &mut topo_rng),
+            None => build_population(cfg, &mut topo_rng),
+        };
         let steps = cfg.steps_per_epoch();
         let caps = vec![p.l; cfg.n_clients];
         let plan = match cfg.scheme {
@@ -514,6 +590,7 @@ impl Trainer {
             prep_test,
             prep_batch,
             setup: TrainerSetup { population, plan, rff },
+            all_clients: (0..cfg.n_clients).collect(),
             beta,
             delay_rng,
             sched,
@@ -524,6 +601,11 @@ impl Trainer {
     /// Setup diagnostics (population, allocation plan, RFF params).
     pub fn setup(&self) -> &TrainerSetup {
         &self.setup
+    }
+
+    /// The backend the scenario layer re-encodes parity through.
+    pub(crate) fn backend(&self) -> &dyn ComputeBackend {
+        self.backend.as_ref()
     }
 
     /// Name of the backend actually executing the compute (which may be
@@ -607,9 +689,9 @@ impl Trainer {
         for epoch in 0..self.cfg.train.epochs {
             let lr = self.sched.at(epoch) as f32;
             for s in 0..steps {
-                let (step_time, arrivals) = self.one_step(s, lr, lam, m_batch)?;
-                sim_time += step_time;
-                arrival_frac_sum += arrivals as f64 / self.cfg.n_clients as f64;
+                let out = self.step_round(s, lr, lam, m_batch, None)?;
+                sim_time += out.step_time_s;
+                arrival_frac_sum += out.arrivals as f64 / self.cfg.n_clients as f64;
                 global_step += 1;
                 let last = epoch + 1 == self.cfg.train.epochs && s + 1 == steps;
                 if global_step % self.cfg.train.eval_every_steps == 0 || last {
@@ -634,14 +716,36 @@ impl Trainer {
         Ok(report)
     }
 
-    /// Execute one global mini-batch step. Returns (simulated step time,
-    /// number of client gradients that reached the server).
-    fn one_step(&mut self, s: usize, lr: f32, lam: f32, m_batch: f32) -> Result<(f64, usize)> {
+    /// Execute one global mini-batch round. With `ctx = None` this is
+    /// the static full-population round (the legacy `Trainer::run`
+    /// path); the scenario [`crate::scenario::Session`] passes a
+    /// [`RoundCtx`] to narrow the roster to the epoch's active clients,
+    /// swap in epoch-effective delay models, or substitute re-encoded
+    /// parity. The roster is always walked in **ascending client id**,
+    /// so the aggregation order — and with it every f32 rounding — is
+    /// identical whether the roster came from the static default or a
+    /// churn schedule.
+    pub(crate) fn step_round(
+        &mut self,
+        s: usize,
+        lr: f32,
+        lam: f32,
+        m_batch: f32,
+        ctx: Option<&RoundCtx<'_>>,
+    ) -> Result<StepOutcome> {
         let p = &self.cfg.profile;
-        let n = self.cfg.n_clients;
         let mut grad_sum = Matrix::zeros(p.q, p.c);
         let arrivals: usize;
-        let step_time;
+        let step_time: f64;
+        let mut stragglers = Vec::new();
+        let active: &[usize] = match ctx {
+            Some(c) => c.active,
+            None => &self.all_clients,
+        };
+        let models: &[ClientModel] = match ctx.and_then(|c| c.models) {
+            Some(m) => m,
+            None => &self.setup.population.clients,
+        };
         // One beta snapshot per step, shared by every gradient call
         // (§Perf); on the native backend this is a refcount bump, on XLA
         // a single literal build.
@@ -649,29 +753,33 @@ impl Trainer {
 
         match &self.setup.plan {
             None => {
-                // Uncoded: all clients compute full slices; wait for max.
-                // Delay sampling stays sequential (one shared rng
-                // stream); the gradients fan out as a batched, sharded
-                // pool round and are summed in ascending client order —
-                // bitwise the per-client sequential loop.
+                // Uncoded: every present client computes its full slice;
+                // the server waits for the slowest. Delay sampling stays
+                // sequential (one shared rng stream); the gradients fan
+                // out as a batched, sharded pool round and are summed in
+                // ascending client order — bitwise the per-client
+                // sequential loop.
                 let mut t_max = 0.0f64;
-                for j in 0..n {
-                    let t = self.setup.population.clients[j].sample(p.l, &mut self.delay_rng);
+                for &j in active {
+                    let t = models[j].sample(p.l, &mut self.delay_rng);
                     t_max = t_max.max(t.total());
                 }
                 // Chunked so the resident per-client gradient set stays
                 // O(CLIENT_BATCH * q * c) at any population size; the
                 // ascending-client sum order is unchanged.
-                for chunk in self.prep_slices[s].chunks(CLIENT_BATCH) {
+                for chunk in active.chunks(CLIENT_BATCH) {
                     let clients: Vec<GradClientOperands<'_>> = chunk
                         .iter()
-                        .map(|(px, py, pm)| GradClientOperands { x: px, y: py, mask: pm })
+                        .map(|&j| {
+                            let (px, py, pm) = &self.prep_slices[s][j];
+                            GradClientOperands { x: px, y: py, mask: pm }
+                        })
                         .collect();
                     for g in &self.backend.grad_clients_p(&clients, &beta_p, self.par)? {
                         grad_sum.axpy_inplace(1.0, g);
                     }
                 }
-                arrivals = n;
+                arrivals = active.len();
                 step_time = t_max;
             }
             Some(plan) => {
@@ -679,15 +787,17 @@ impl Trainer {
                 // added. Arrivals are decided first (sequential delay
                 // stream), then the arrived clients' gradients run as
                 // one sharded batch, summed in ascending client order.
-                let mut arrived = Vec::with_capacity(n);
-                for j in 0..n {
+                let mut arrived = Vec::with_capacity(active.len());
+                for &j in active {
                     let load = plan.loads[j];
                     if load == 0 {
                         continue; // client sits this round out entirely
                     }
-                    let t = self.setup.population.clients[j].sample(load, &mut self.delay_rng);
+                    let t = models[j].sample(load, &mut self.delay_rng);
                     if t.total() <= plan.deadline {
                         arrived.push(j);
+                    } else {
+                        stragglers.push(j);
                     }
                 }
                 for chunk in arrived.chunks(CLIENT_BATCH) {
@@ -703,7 +813,13 @@ impl Trainer {
                     }
                 }
                 arrivals = arrived.len();
-                let (px, py, pm) = &self.prep_parity[s];
+                let (px, py, pm) = match ctx.and_then(|c| c.parity) {
+                    Some((px, py, pm)) => (px, py, pm),
+                    None => {
+                        let (px, py, pm) = &self.prep_parity[s];
+                        (px, py, pm)
+                    }
+                };
                 let gc = self.backend.grad_server_p(px, py, &beta_p, pm)?;
                 grad_sum.axpy_inplace(1.0, &gc);
                 step_time = plan.deadline;
@@ -712,11 +828,11 @@ impl Trainer {
 
         let g_mean = grad_sum.scale(1.0 / m_batch);
         self.beta = Arc::new(self.backend.update(&self.beta, &g_mean, lr, lam)?);
-        Ok((step_time, arrivals))
+        Ok(StepOutcome { step_time_s: step_time, arrivals, stragglers })
     }
 
     /// Test accuracy + current-batch ridge loss (prepared chunks).
-    fn evaluate(&self, s: usize) -> Result<(f64, f64)> {
+    pub(crate) fn evaluate(&self, s: usize) -> Result<(f64, f64)> {
         let beta_p = self.backend.prepare_shared(&self.beta)?;
         let logits = self.predict_prepared(&self.prep_test, self.shared.test.len(), &beta_p)?;
         let acc = self.shared.test.accuracy(&logits);
@@ -761,6 +877,11 @@ impl Trainer {
 
 #[cfg(test)]
 mod tests {
+    // These tests deliberately exercise the deprecated constructor shims:
+    // they are the legacy-path oracles the scenario layer is tested
+    // against (static scenarios must reproduce them bitwise).
+    #![allow(deprecated)]
+
     use super::*;
     use crate::runtime::backend::NativeBackend;
 

@@ -53,10 +53,42 @@
 //! size**; seeded experiments replay exactly. Worker panics propagate to
 //! the submitting caller and the pool stays usable.
 //!
+//! ## Running experiments: scenarios, sessions, observers
+//!
+//! Training is constructed through the **[`scenario`]** layer — the
+//! experiment surface redesigned for population scale:
+//!
+//! * [`scenario::ScenarioBuilder`] declaratively describes an edge-FL
+//!   experiment: base preset/config, population size (with automatic
+//!   `m_train` re-derivation), a multi-cell [`simnet::Topology`], a
+//!   client [`simnet::ChurnSchedule`], time-varying
+//!   [`simnet::RateProcess`]es layered on the §2.2 delay model, the
+//!   compute-backend name and the round parallelism.
+//! * It compiles into a [`scenario::Session`] — **the single way to
+//!   build and run training**. `Session::run()` returns the classic
+//!   [`metrics::TrainReport`]; `Session::run_observed` streams
+//!   per-round / per-eval / per-epoch / churn events to a
+//!   [`scenario::RoundObserver`] with O(1) session memory, which is how
+//!   thousand-client populations report progress. `TrainReport`
+//!   collection is just the built-in [`scenario::CollectingObserver`];
+//!   [`scenario::JsonlObserver`] streams JSON lines incrementally.
+//! * A *static* single-cell scenario reproduces the legacy trainer
+//!   trajectories **bitwise** at any thread/shard count; churn scenarios
+//!   re-encode composite parity through
+//!   [`coding::encoder::ReencodeCache`] whenever the active set changes
+//!   (re-reading ~zero slice rows, freshly drawing every generator).
+//!
+//! The four `fl::Trainer` constructors (`from_config`, `with_backend`,
+//! `with_shared`, `with_shared_parallelism`) and `SweepRunner::trainer`
+//! are **deprecated shims** over the same engine and will keep working;
+//! new code should build sessions.
+//!
 //! Backends are selected by *name* through the [`runtime::registry`]
-//! (`native` / `xla` / `auto` via `ExperimentConfig::backend`), and
-//! multi-variant experiment sweeps share one dataset + RFF embedding
-//! build through [`benchx::sweep::SweepRunner`].
+//! (`native` / `xla` / `auto` via `ExperimentConfig::backend`) — the
+//! builder resolves the name at `build()` — and multi-variant experiment
+//! sweeps share one dataset + RFF embedding build through
+//! [`benchx::sweep::SweepRunner`], whose `session` method is the
+//! scenario-aware entry.
 //!
 //! The offline crate universe contains only `xla` + `anyhow`, so this crate
 //! carries its own substrates: PRNG and distributions ([`mathx`]), JSON and
@@ -73,6 +105,7 @@ pub mod fl;
 pub mod mathx;
 pub mod metrics;
 pub mod runtime;
+pub mod scenario;
 pub mod simnet;
 pub mod testx;
 pub mod util;

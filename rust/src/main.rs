@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   train      run one training experiment (scheme/preset/overrides)
+//!   scenario   run a declarative population-scale scenario (churn,
+//!              multi-cell topology, time-varying rates), streaming
+//!              per-round metrics
 //!   allocate   print the load-allocation plan for a configuration
 //!   reproduce  run uncoded + coded back-to-back and report the speedup
 //!   info       show the resolved config and artifact status
@@ -10,7 +13,7 @@ use anyhow::{bail, Result};
 
 use codedfedl::cli::{flag, switch, Cli};
 use codedfedl::config::{ExperimentConfig, Scheme};
-use codedfedl::fl::trainer::Trainer;
+use codedfedl::scenario::{ConsoleObserver, JsonlObserver, ScenarioBuilder, Session};
 use codedfedl::util::logging;
 
 fn common_flags() -> Vec<codedfedl::cli::FlagSpec> {
@@ -27,6 +30,24 @@ fn common_flags() -> Vec<codedfedl::cli::FlagSpec> {
         flag("backend", "compute backend registry name: native|xla|auto", None),
         switch("native", "shorthand for --backend native (no PJRT/artifacts)"),
     ]
+}
+
+/// Apply the comma-separated `--set key=value` overrides through `set`
+/// (shared by `train`-style commands and `scenario`, so the override
+/// syntax cannot drift between them).
+fn apply_set_overrides(
+    args: &codedfedl::cli::Args,
+    set: &mut dyn FnMut(&str, &str) -> Result<()>,
+) -> Result<()> {
+    if let Some(kvs) = args.get("set") {
+        for kv in kvs.split(',') {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{kv}'"))?;
+            set(k, v)?;
+        }
+    }
+    Ok(())
 }
 
 fn build_config(args: &codedfedl::cli::Args) -> Result<ExperimentConfig> {
@@ -49,14 +70,7 @@ fn build_config(args: &codedfedl::cli::Args) -> Result<ExperimentConfig> {
     if let Some(r) = args.get("redundancy") {
         cfg.set("train.redundancy", r)?;
     }
-    if let Some(kvs) = args.get("set") {
-        for kv in kvs.split(',') {
-            let (k, v) = kv
-                .split_once('=')
-                .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{kv}'"))?;
-            cfg.set(k, v)?;
-        }
-    }
+    apply_set_overrides(args, &mut |k, v| cfg.set(k, v))?;
     if let Some(b) = args.get("backend") {
         cfg.set("backend", b)?;
     }
@@ -69,16 +83,16 @@ fn build_config(args: &codedfedl::cli::Args) -> Result<ExperimentConfig> {
 
 fn cmd_train(args: &codedfedl::cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
-    let mut trainer = Trainer::from_config(&cfg)?;
+    let mut session = Session::from_config(&cfg)?;
     println!(
         "training: scheme={} dataset={} preset={} epochs={} backend={}",
         cfg.scheme.name(),
         cfg.dataset,
         cfg.profile.name,
         cfg.train.epochs,
-        trainer.backend_name()
+        session.backend_name()
     );
-    let report = trainer.run()?;
+    let report = session.run()?;
     println!(
         "done: final_acc={:.4} best_acc={:.4} sim_time={:.1}s host_time={:.1}s mean_arrivals={:.3}",
         report.final_accuracy(),
@@ -92,6 +106,126 @@ fn cmd_train(args: &codedfedl::cli::Args) -> Result<()> {
         println!("curve written to {path}");
     }
     println!("{}", report.to_json().to_string());
+    Ok(())
+}
+
+fn scenario_flags() -> Vec<codedfedl::cli::FlagSpec> {
+    // `--preset` loses its default here: a named `--scenario` fixes its
+    // own base preset, and a silently-ignored explicit preset would be
+    // worse than an error, so the conflict must be detectable.
+    let mut flags: Vec<codedfedl::cli::FlagSpec> = common_flags()
+        .into_iter()
+        .map(|f| match f.name {
+            "preset" => flag(
+                "preset",
+                "config preset: tiny|small|medium|paper (default small; conflicts with --scenario)",
+                None,
+            ),
+            "out" => flag("out", "stream events here as JSON lines (round/eval/epoch/churn)", None),
+            _ => f,
+        })
+        .collect();
+    flags.extend([
+        flag("scenario", "named scenario preset: static-tiny|churn-cells|edge-1k", None),
+        flag("population", "population size (m_train re-derived)", None),
+        flag("cells", "MEC cells (graded ladder)", None),
+        flag("churn", "churn schedule: none|bernoulli:P[:MIN]|block:FRAC:PERIOD", None),
+        flag("link-rates", "link rate process: static|diurnal:PERIOD:DEPTH|jitter:SIGMA", None),
+        flag("compute-rates", "compute rate process (same forms as link-rates)", None),
+        flag("steps", "global mini-batch steps per epoch", None),
+        flag("spec", "scenario spec file (key = value, scenario.* + config keys)", None),
+    ]);
+    flags
+}
+
+/// Run a declarative scenario, streaming metrics either to the console
+/// or, with `--out`, as one JSON object per line (round/eval/epoch/churn
+/// events) — nothing is buffered, so 1024+-client populations report
+/// incrementally.
+fn cmd_scenario(args: &codedfedl::cli::Args) -> Result<()> {
+    let mut b = match (args.get("scenario"), args.get("preset")) {
+        (Some(_), Some(_)) => bail!(
+            "--scenario and --preset conflict: a named scenario fixes its own base preset \
+             (drop one of the two flags)"
+        ),
+        (Some(name), None) => ScenarioBuilder::named(name)?,
+        (None, preset) => ScenarioBuilder::from_preset(preset.unwrap_or("small"))?,
+    };
+    if let Some(path) = args.get("spec") {
+        b.apply_file(path)?;
+    }
+    if let Some(path) = args.get("config") {
+        b.apply_file(path)?;
+    }
+    for (key, flag_name) in [
+        ("scheme", "scheme"),
+        ("dataset", "dataset"),
+        ("train.epochs", "epochs"),
+        ("seed", "seed"),
+        ("train.redundancy", "redundancy"),
+        ("backend", "backend"),
+        ("scenario.population", "population"),
+        ("scenario.cells", "cells"),
+        ("scenario.churn", "churn"),
+        ("scenario.link_rates", "link-rates"),
+        ("scenario.compute_rates", "compute-rates"),
+        ("scenario.steps_per_epoch", "steps"),
+    ] {
+        if let Some(v) = args.get(flag_name) {
+            b.set(key, v)?;
+        }
+    }
+    apply_set_overrides(args, &mut |k, v| b.set(k, v))?;
+    if args.has("native") {
+        b.set("backend", "native")?;
+    }
+
+    let mut session = b.build()?;
+    let sc = session.scenario().clone();
+    println!(
+        "scenario: {} clients over {} cell(s), churn={}, link={}, compute={}, scheme={}, \
+         backend={}, {} epochs x {} steps",
+        sc.cfg.n_clients,
+        sc.topology.n_cells(),
+        sc.churn.spec(),
+        sc.link_rates.spec(),
+        sc.compute_rates.spec(),
+        sc.cfg.scheme.name(),
+        session.backend_name(),
+        sc.cfg.train.epochs,
+        sc.cfg.steps_per_epoch(),
+    );
+    if let Some(plan) = &session.setup().plan {
+        println!("  allocation: t* = {:.3}s, u = {} parity rows", plan.deadline, plan.u);
+    }
+
+    let summary = match args.get("out") {
+        Some(path) => {
+            let mut obs = JsonlObserver::create(path)?;
+            let summary = session.run_observed(&mut obs)?;
+            let events = obs.events();
+            obs.finish()?;
+            println!("  streamed {events} events to {path}");
+            summary
+        }
+        None => {
+            let mut obs = ConsoleObserver;
+            session.run_observed(&mut obs)?
+        }
+    };
+    let (reencodes, rows_reread, cache_calls) = session.reencode_stats();
+    println!(
+        "done: steps={} sim_time={:.1}s host_time={:.2}s final_acc={:.4} \
+         mean_arrival_frac={:.3} parity_reencodes={} (cache: {} encodes, {} rows re-read)",
+        summary.steps,
+        summary.total_sim_time_s,
+        summary.host_time_s,
+        summary.final_accuracy,
+        summary.mean_arrival_frac,
+        reencodes,
+        cache_calls,
+        rows_reread,
+    );
     Ok(())
 }
 
@@ -132,8 +266,7 @@ fn cmd_reproduce(args: &codedfedl::cli::Args) -> Result<()> {
         let mut cfg = base.clone();
         cfg.scheme = scheme;
         println!("== running {} ==", scheme.name());
-        let mut trainer = Trainer::from_config(&cfg)?;
-        let report = trainer.run()?;
+        let report = Session::from_config(&cfg)?.run()?;
         println!(
             "   final_acc={:.4} sim_time={:.1}s",
             report.final_accuracy(),
@@ -215,6 +348,11 @@ fn main() -> Result<()> {
         about: "coded computing for federated learning at the edge (reproduction)",
         subcommands: vec![
             ("train", "run one training experiment", common_flags()),
+            (
+                "scenario",
+                "run a declarative population-scale scenario (streaming metrics)",
+                scenario_flags(),
+            ),
             ("allocate", "print the load-allocation plan", common_flags()),
             ("reproduce", "uncoded vs coded speedup comparison", common_flags()),
             ("trace", "emit one epoch's per-client event timeline (CSV)", common_flags()),
@@ -231,6 +369,7 @@ fn main() -> Result<()> {
     };
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("scenario") => cmd_scenario(&args),
         Some("allocate") => cmd_allocate(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("trace") => cmd_trace(&args),

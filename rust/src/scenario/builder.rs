@@ -1,0 +1,443 @@
+//! Declarative construction of population-scale experiments.
+//!
+//! A [`ScenarioBuilder`] describes *what to run* — base experiment
+//! config, population size, multi-cell [`Topology`], a
+//! [`ChurnSchedule`], time-varying [`RateProcess`]es, backend name and
+//! parallelism — and compiles it into a validated [`Scenario`], which
+//! [`ScenarioBuilder::build`] turns into a runnable
+//! [`crate::scenario::Session`]. This is the single construction path
+//! for training: the legacy `Trainer` constructors and
+//! `SweepRunner::trainer` are deprecated shims over it.
+//!
+//! Population sizing is handled declaratively: setting
+//! [`ScenarioBuilder::population`] re-derives `m_train` as
+//! `n * l * steps_per_epoch`, so "the same experiment at 1024 clients"
+//! is one call instead of a hand-solved divisibility puzzle.
+//!
+//! Scenario specs can also be given as `key = value` text (the same
+//! format as experiment config files): scenario keys
+//! (`scenario.population`, `scenario.cells`, `scenario.churn`,
+//! `scenario.link_rates`, `scenario.compute_rates`,
+//! `scenario.steps_per_epoch`) are handled by the builder, everything
+//! else forwards to [`ExperimentConfig::set`].
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ExperimentConfig, Scheme};
+use crate::fl::trainer::SharedData;
+use crate::mathx::par::Parallelism;
+use crate::runtime::backend::ComputeBackend;
+use crate::runtime::registry::create_backend;
+use crate::scenario::session::Session;
+use crate::simnet::churn::ChurnSchedule;
+use crate::simnet::rates::RateProcess;
+use crate::simnet::topology::Topology;
+
+/// A fully-resolved, validated scenario: everything a
+/// [`crate::scenario::Session`] needs to run.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub cfg: ExperimentConfig,
+    pub topology: Topology,
+    pub churn: ChurnSchedule,
+    /// Per-epoch modulation of client compute rates (`mu`).
+    pub compute_rates: RateProcess,
+    /// Per-epoch modulation of client link rates (`tau` divides by it).
+    pub link_rates: RateProcess,
+    pub par: Parallelism,
+    /// Amortize churn parity re-encodes through
+    /// [`crate::coding::encoder::ReencodeCache`] (`false` = the full
+    /// re-encode oracle path, kept for the bitwise cache tests).
+    pub use_reencode_cache: bool,
+}
+
+impl Scenario {
+    /// A static full-population scenario around an existing config (the
+    /// compatibility path the deprecated shims and the sweep runner use).
+    pub fn static_from(cfg: &ExperimentConfig, par: Parallelism) -> Scenario {
+        Scenario {
+            cfg: cfg.clone(),
+            topology: Topology::single_cell(),
+            churn: ChurnSchedule::None,
+            compute_rates: RateProcess::Static,
+            link_rates: RateProcess::Static,
+            par,
+            use_reencode_cache: true,
+        }
+    }
+
+    /// `true` when per-epoch dynamics never deviate from the static
+    /// full-population run (topology may still be multi-cell — it is
+    /// applied once at construction, not per epoch).
+    pub fn is_static(&self) -> bool {
+        self.churn.is_none() && self.compute_rates.is_static() && self.link_rates.is_static()
+    }
+
+    /// Validate the scenario as a whole.
+    pub fn validate(&self) -> Result<()> {
+        self.cfg.validate()?;
+        self.topology.validate()?;
+        self.churn.validate(self.cfg.n_clients)?;
+        self.compute_rates.validate().context("compute_rates")?;
+        self.link_rates.validate().context("link_rates")?;
+        Ok(())
+    }
+}
+
+/// Declarative scenario construction. All setters are chainable; call
+/// [`ScenarioBuilder::build`] to compile + run-prepare.
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    cfg: ExperimentConfig,
+    population: Option<usize>,
+    steps_per_epoch: Option<usize>,
+    topology: Topology,
+    churn: ChurnSchedule,
+    compute_rates: RateProcess,
+    link_rates: RateProcess,
+    par: Option<Parallelism>,
+    use_reencode_cache: bool,
+}
+
+impl ScenarioBuilder {
+    /// Start from a named experiment preset (`tiny|small|medium|paper`).
+    pub fn from_preset(name: &str) -> Result<ScenarioBuilder> {
+        Ok(Self::from_config(&ExperimentConfig::preset(name)?))
+    }
+
+    /// Start from an existing experiment config (static scenario until
+    /// dynamics are added).
+    pub fn from_config(cfg: &ExperimentConfig) -> ScenarioBuilder {
+        ScenarioBuilder {
+            cfg: cfg.clone(),
+            population: None,
+            steps_per_epoch: None,
+            topology: Topology::single_cell(),
+            churn: ChurnSchedule::None,
+            compute_rates: RateProcess::Static,
+            link_rates: RateProcess::Static,
+            par: None,
+            use_reencode_cache: true,
+        }
+    }
+
+    /// Named scenario presets — worked examples of the builder:
+    ///
+    /// * `static-tiny` — the tiny experiment preset, unchanged (the
+    ///   bitwise-equivalence baseline);
+    /// * `churn-cells` — 64 clients over 2 cells with Bernoulli churn
+    ///   and diurnal link rates (a laptop-scale dynamic scenario);
+    /// * `edge-1k` — 1024 clients over 2 cells with churn, diurnal
+    ///   links and compute jitter (the CI population-scale smoke).
+    ///   Population-scale runs soften the §A.2 geometric ladders
+    ///   (`k1`/`k2` are *per-rank* decay factors, so their defaults
+    ///   starve rank-1000 clients to numerically dead rates).
+    pub fn named(name: &str) -> Result<ScenarioBuilder> {
+        match name {
+            "static-tiny" => Self::from_preset("tiny"),
+            "churn-cells" => {
+                let mut b = Self::from_preset("tiny")?;
+                b.set("net.k1", "0.99")?;
+                b.set("net.k2", "0.97")?;
+                Ok(b
+                    .population(64)
+                    .steps_per_epoch(2)
+                    .cells(2)
+                    .churn(ChurnSchedule::Bernoulli { p_away: 0.25, min_active: 8 })
+                    .link_rates(RateProcess::Diurnal { period_epochs: 6.0, depth: 0.4 }))
+            }
+            "edge-1k" => {
+                let mut b = Self::from_preset("tiny")?;
+                b.set("net.k1", "0.997")?;
+                b.set("net.k2", "0.995")?;
+                b.set("train.epochs", "12")?;
+                Ok(b
+                    .population(1024)
+                    .steps_per_epoch(1)
+                    .cells(2)
+                    .churn(ChurnSchedule::Bernoulli { p_away: 0.25, min_active: 32 })
+                    .link_rates(RateProcess::Diurnal { period_epochs: 8.0, depth: 0.3 })
+                    .compute_rates(RateProcess::Jitter { sigma: 0.1 }))
+            }
+            _ => bail!("unknown scenario preset '{name}' (static-tiny|churn-cells|edge-1k)"),
+        }
+    }
+
+    /// Set the population size; `m_train` is re-derived at build time as
+    /// `n * l * steps_per_epoch` so the config stays consistent.
+    pub fn population(mut self, n: usize) -> ScenarioBuilder {
+        self.population = Some(n);
+        self
+    }
+
+    /// Global mini-batch steps per epoch (defaults to the base config's).
+    pub fn steps_per_epoch(mut self, steps: usize) -> ScenarioBuilder {
+        self.steps_per_epoch = Some(steps);
+        self
+    }
+
+    pub fn scheme(mut self, scheme: Scheme) -> ScenarioBuilder {
+        self.cfg.scheme = scheme;
+        self
+    }
+
+    pub fn epochs(mut self, epochs: usize) -> ScenarioBuilder {
+        self.cfg.train.epochs = epochs;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> ScenarioBuilder {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn dataset(mut self, dataset: &str) -> ScenarioBuilder {
+        self.cfg.dataset = dataset.to_string();
+        self
+    }
+
+    /// Compute backend registry name (`native` / `xla` / `auto`) —
+    /// backend selection lives in the builder; `build` resolves the name
+    /// through [`crate::runtime::registry`].
+    pub fn backend(mut self, name: &str) -> ScenarioBuilder {
+        self.cfg.backend = name.to_string();
+        self
+    }
+
+    pub fn topology(mut self, topo: Topology) -> ScenarioBuilder {
+        self.topology = topo;
+        self
+    }
+
+    /// Shorthand: a graded `k`-cell topology ([`Topology::graded`]).
+    pub fn cells(self, k: usize) -> ScenarioBuilder {
+        self.topology(Topology::graded(k))
+    }
+
+    pub fn churn(mut self, churn: ChurnSchedule) -> ScenarioBuilder {
+        self.churn = churn;
+        self
+    }
+
+    pub fn compute_rates(mut self, p: RateProcess) -> ScenarioBuilder {
+        self.compute_rates = p;
+        self
+    }
+
+    pub fn link_rates(mut self, p: RateProcess) -> ScenarioBuilder {
+        self.link_rates = p;
+        self
+    }
+
+    /// Explicit round parallelism (defaults to the `CODEDFEDL_THREADS` /
+    /// `CODEDFEDL_SHARDS` environment knobs). Bitwise-neutral.
+    pub fn parallelism(mut self, par: Parallelism) -> ScenarioBuilder {
+        self.par = Some(par);
+        self
+    }
+
+    /// Disable the [`crate::coding::encoder::ReencodeCache`] on the
+    /// churn parity path (test oracle: the uncached full re-encode).
+    pub fn reencode_cache(mut self, on: bool) -> ScenarioBuilder {
+        self.use_reencode_cache = on;
+        self
+    }
+
+    /// Apply one `key = value` override. Scenario keys are prefixed
+    /// `scenario.`; everything else forwards to
+    /// [`ExperimentConfig::set`].
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim();
+        match key.trim() {
+            "scenario.population" => self.population = Some(v.parse()?),
+            "scenario.steps_per_epoch" => self.steps_per_epoch = Some(v.parse()?),
+            "scenario.cells" => self.topology = Topology::parse(v)?,
+            "scenario.churn" => self.churn = ChurnSchedule::parse(v)?,
+            "scenario.link_rates" => self.link_rates = RateProcess::parse(v)?,
+            "scenario.compute_rates" => self.compute_rates = RateProcess::parse(v)?,
+            "scenario.reencode_cache" => self.use_reencode_cache = v.parse()?,
+            other => self.cfg.set(other, value)?,
+        }
+        Ok(())
+    }
+
+    /// Apply a `key = value` scenario spec file (same syntax as config
+    /// files; `scenario.*` keys plus config overrides).
+    pub fn apply_file(&mut self, path: &str) -> Result<()> {
+        crate::config::parse_kv_file(path, &mut |k, v| self.set(k, v))
+    }
+
+    /// Compile into a validated [`Scenario`] (resolving the population
+    /// and step-count declarations into a consistent config).
+    pub fn compile(self) -> Result<Scenario> {
+        let mut cfg = self.cfg;
+        let steps = match self.steps_per_epoch {
+            Some(s) => {
+                anyhow::ensure!(s >= 1, "steps_per_epoch must be >= 1");
+                s
+            }
+            None => cfg.steps_per_epoch().max(1),
+        };
+        if self.population.is_some() || self.steps_per_epoch.is_some() {
+            if let Some(n) = self.population {
+                anyhow::ensure!(n >= 1, "population must be >= 1");
+                cfg.n_clients = n;
+            }
+            cfg.m_train = cfg.n_clients * cfg.profile.l * steps;
+        }
+        let scenario = Scenario {
+            cfg,
+            topology: self.topology,
+            churn: self.churn,
+            compute_rates: self.compute_rates,
+            link_rates: self.link_rates,
+            par: self.par.unwrap_or_else(Parallelism::from_env),
+            use_reencode_cache: self.use_reencode_cache,
+        };
+        scenario.validate()?;
+        Ok(scenario)
+    }
+
+    /// Compile and build a runnable [`Session`]. The backend is resolved
+    /// by name through the registry and the dataset + RFF embedding are
+    /// built here.
+    pub fn build(self) -> Result<Session> {
+        let scenario = self.compile()?;
+        let backend = create_backend(&scenario.cfg.backend, &scenario.cfg)?;
+        let shared = Arc::new(SharedData::build(&scenario.cfg, backend.as_ref())?);
+        Session::new(scenario, backend, shared)
+    }
+
+    /// [`ScenarioBuilder::build`] with an injected backend (tests).
+    pub fn build_with_backend(self, backend: Box<dyn ComputeBackend>) -> Result<Session> {
+        let scenario = self.compile()?;
+        let shared = Arc::new(SharedData::build(&scenario.cfg, backend.as_ref())?);
+        Session::new(scenario, backend, shared)
+    }
+
+    /// [`ScenarioBuilder::build`] on pre-built [`SharedData`] (the sweep
+    /// fast path: variants share one embedding).
+    pub fn build_with_shared(
+        self,
+        backend: Box<dyn ComputeBackend>,
+        shared: Arc<SharedData>,
+    ) -> Result<Session> {
+        let scenario = self.compile()?;
+        Session::new(scenario, backend, shared)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn population_rescales_m_train() {
+        let s = ScenarioBuilder::from_preset("tiny")
+            .unwrap()
+            .population(64)
+            .steps_per_epoch(2)
+            .compile()
+            .unwrap();
+        assert_eq!(s.cfg.n_clients, 64);
+        assert_eq!(s.cfg.m_train, 64 * s.cfg.profile.l * 2);
+        assert_eq!(s.cfg.steps_per_epoch(), 2);
+        s.cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn default_is_a_static_single_cell_scenario() {
+        let base = ExperimentConfig::preset("tiny").unwrap();
+        let s = ScenarioBuilder::from_config(&base).compile().unwrap();
+        assert!(s.is_static());
+        assert!(s.topology.is_trivial());
+        // No population/steps declaration: the config is untouched.
+        assert_eq!(s.cfg.m_train, base.m_train);
+        assert_eq!(s.cfg.n_clients, base.n_clients);
+    }
+
+    #[test]
+    fn dynamics_make_it_non_static() {
+        let s = ScenarioBuilder::from_preset("tiny")
+            .unwrap()
+            .churn(ChurnSchedule::Bernoulli { p_away: 0.2, min_active: 1 })
+            .compile()
+            .unwrap();
+        assert!(!s.is_static());
+        let s2 = ScenarioBuilder::from_preset("tiny")
+            .unwrap()
+            .link_rates(RateProcess::Jitter { sigma: 0.1 })
+            .compile()
+            .unwrap();
+        assert!(!s2.is_static());
+    }
+
+    #[test]
+    fn spec_keys_parse_and_forward() {
+        let mut b = ScenarioBuilder::from_preset("tiny").unwrap();
+        b.set("scenario.population", "32").unwrap();
+        b.set("scenario.cells", "2").unwrap();
+        b.set("scenario.churn", "bernoulli:0.3:4").unwrap();
+        b.set("scenario.link_rates", "diurnal:8:0.4").unwrap();
+        b.set("scenario.compute_rates", "jitter:0.2").unwrap();
+        b.set("scenario.steps_per_epoch", "1").unwrap();
+        b.set("train.epochs", "3").unwrap(); // forwarded to the config
+        let s = b.compile().unwrap();
+        assert_eq!(s.cfg.n_clients, 32);
+        assert_eq!(s.topology.n_cells(), 2);
+        assert_eq!(s.churn, ChurnSchedule::Bernoulli { p_away: 0.3, min_active: 4 });
+        assert_eq!(s.cfg.train.epochs, 3);
+        assert!(!s.is_static());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let mut b = ScenarioBuilder::from_preset("tiny").unwrap();
+        assert!(b.set("scenario.churn", "sometimes").is_err());
+        assert!(b.set("scenario.cells", "0").is_err());
+        assert!(b.set("nope.key", "1").is_err());
+        // Churn floor above the population fails at compile time.
+        let bad = ScenarioBuilder::from_preset("tiny")
+            .unwrap()
+            .population(8)
+            .churn(ChurnSchedule::Bernoulli { p_away: 0.5, min_active: 9 });
+        assert!(bad.compile().is_err());
+    }
+
+    #[test]
+    fn named_presets_compile() {
+        for name in ["static-tiny", "churn-cells", "edge-1k"] {
+            let s = ScenarioBuilder::named(name).unwrap().compile().unwrap();
+            s.validate().unwrap();
+            if name == "edge-1k" {
+                assert_eq!(s.cfg.n_clients, 1024);
+                assert_eq!(s.topology.n_cells(), 2);
+                assert!(!s.is_static());
+            }
+        }
+        assert!(ScenarioBuilder::named("mystery").is_err());
+    }
+
+    #[test]
+    fn spec_file_roundtrip() {
+        let dir = std::env::temp_dir().join("codedfedl_scenario_spec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("edge.scenario");
+        std::fs::write(
+            &path,
+            "# population-scale spec\nscenario.population = 16\nscenario.churn = block:0.25:2\ntrain.epochs = 2\n",
+        )
+        .unwrap();
+        let mut b = ScenarioBuilder::from_preset("tiny").unwrap();
+        b.apply_file(path.to_str().unwrap()).unwrap();
+        let s = b.compile().unwrap();
+        assert_eq!(s.cfg.n_clients, 16);
+        assert_eq!(s.cfg.train.epochs, 2);
+        assert_eq!(
+            s.churn,
+            ChurnSchedule::RotatingBlock { fraction_away: 0.25, period_epochs: 2 }
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! Declarative population-scale experiments: describe an edge-FL
+//! scenario, compile it, run it, stream the results.
+//!
+//! ```text
+//! ScenarioBuilder          Scenario              Session
+//! (what to run)   compile  (validated spec)  new  (runnable)
+//!   population  ─────────►  cfg + dynamics ─────► trainer engine
+//!   topology                                      + churn roster
+//!   churn                                         + rate modulation
+//!   rate processes                                + parity re-encode
+//!   backend/parallelism                           │ run_observed
+//!                                                 ▼
+//!                                        RoundObserver events
+//!                                 (rounds, evals, epochs, churn)
+//! ```
+//!
+//! * [`ScenarioBuilder`] — the single construction surface for training:
+//!   base preset/config, population size (with automatic `m_train`
+//!   re-derivation), multi-cell [`crate::simnet::Topology`],
+//!   [`crate::simnet::ChurnSchedule`], time-varying
+//!   [`crate::simnet::RateProcess`]es, backend name, parallelism; plus
+//!   `key = value` spec parsing (`scenario.*` keys) and named presets
+//!   ([`ScenarioBuilder::named`]).
+//! * [`Session`] — the compiled, runnable experiment. `run()` collects
+//!   the legacy [`crate::metrics::TrainReport`]; `run_observed(&mut
+//!   obs)` streams [`RoundEvent`]s/evals/epochs/churn transitions with
+//!   O(1) session memory, which is how thousand-client populations
+//!   report progress.
+//! * [`RoundObserver`] — the streaming interface; built-ins:
+//!   [`CollectingObserver`] (→ `TrainReport`), [`JsonlObserver`]
+//!   (incremental JSON lines), [`ConsoleObserver`], [`EventLog`]
+//!   (determinism tests), [`Fanout`].
+//!
+//! Static single-cell scenarios are **bitwise identical** to the legacy
+//! deprecated `Trainer` constructors at any thread/shard count; dynamic
+//! scenarios are bitwise reproducible from the seed (all dynamics are
+//! derived on the driving thread from dedicated seed forks).
+
+pub mod builder;
+pub mod observer;
+pub mod session;
+
+pub use builder::{Scenario, ScenarioBuilder};
+pub use observer::{
+    ChurnEvent, CollectingObserver, ConsoleObserver, EpochEvent, EventLog, Fanout,
+    JsonlObserver, RoundEvent, RoundObserver,
+};
+pub use session::{Session, SessionSummary};

@@ -1,0 +1,420 @@
+//! Streaming round observers: how a running [`crate::scenario::Session`]
+//! reports progress.
+//!
+//! The legacy API buffered everything into one end-of-run
+//! [`TrainReport`]; at population scale (thousands of clients, long
+//! churn scenarios) that is both too coarse (no per-round visibility)
+//! and too monolithic (nothing is observable until the run ends). A
+//! [`RoundObserver`] receives events *as they happen*:
+//!
+//! * [`RoundEvent`] — one global mini-batch round: simulated times,
+//!   arrival counts, straggler ids;
+//! * [`crate::metrics::EvalRecord`] — an evaluation checkpoint (test
+//!   accuracy + batch loss), exactly the record the legacy report kept;
+//! * [`EpochEvent`] — end of an epoch (learning rate, cumulative time);
+//! * [`ChurnEvent`] — clients joined/left between epochs.
+//!
+//! [`TrainReport`] is now just the built-in *collecting* observer
+//! ([`CollectingObserver`]): `Session::run` installs it and returns the
+//! same report the legacy trainer produced. Streaming consumers use
+//! [`JsonlObserver`] (one JSON object per line, written incrementally —
+//! nothing is buffered), [`ConsoleObserver`], or their own impl.
+
+use anyhow::Result;
+
+use crate::metrics::{EvalRecord, TrainReport};
+use crate::util::json::Json;
+
+/// One global mini-batch round, as seen by the server.
+#[derive(Debug, Clone)]
+pub struct RoundEvent {
+    pub epoch: usize,
+    /// Global step count (1-based, cumulative across epochs).
+    pub step: usize,
+    /// Mini-batch index within the epoch.
+    pub batch: usize,
+    /// Simulated wall-clock after this round.
+    pub sim_time_s: f64,
+    /// This round's simulated duration (deadline `t*` for coded rounds,
+    /// `max_j T_j` for uncoded).
+    pub step_time_s: f64,
+    /// Clients present this epoch.
+    pub active: usize,
+    /// Client gradients that reached the server in time.
+    pub arrivals: usize,
+    /// Active clients with nonzero load that missed the deadline (coded
+    /// rounds only; uncoded rounds wait for everyone).
+    pub stragglers: Vec<usize>,
+}
+
+/// End of one epoch.
+#[derive(Debug, Clone, Copy)]
+pub struct EpochEvent {
+    pub epoch: usize,
+    pub sim_time_s: f64,
+    pub active: usize,
+    pub lr: f64,
+}
+
+/// Active-set change between epochs (only emitted when it changed).
+#[derive(Debug, Clone)]
+pub struct ChurnEvent {
+    pub epoch: usize,
+    pub joined: Vec<usize>,
+    pub left: Vec<usize>,
+    pub active: usize,
+}
+
+/// Streaming receiver for session progress. All methods default to
+/// no-ops so observers implement only what they consume; errors abort
+/// the run (a full disk should not silently drop the metrics stream).
+pub trait RoundObserver {
+    fn on_round(&mut self, _ev: &RoundEvent) -> Result<()> {
+        Ok(())
+    }
+    fn on_eval(&mut self, _ev: &EvalRecord) -> Result<()> {
+        Ok(())
+    }
+    fn on_epoch(&mut self, _ev: &EpochEvent) -> Result<()> {
+        Ok(())
+    }
+    fn on_churn(&mut self, _ev: &ChurnEvent) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// The built-in collecting observer: buffers evaluation checkpoints and
+/// finalizes into the legacy [`TrainReport`]. This is exactly what
+/// `Trainer::run` always produced — collection is now one observer among
+/// many instead of the only reporting mode.
+pub struct CollectingObserver {
+    scheme: String,
+    dataset: String,
+    deadline_s: f64,
+    records: Vec<EvalRecord>,
+}
+
+impl CollectingObserver {
+    pub fn new(scheme: &str, dataset: &str, deadline_s: f64) -> CollectingObserver {
+        CollectingObserver {
+            scheme: scheme.to_string(),
+            dataset: dataset.to_string(),
+            deadline_s,
+            records: Vec::new(),
+        }
+    }
+
+    /// Finalize into a [`TrainReport`] using the run totals.
+    pub fn into_report(self, summary: &crate::scenario::SessionSummary) -> TrainReport {
+        TrainReport {
+            scheme: self.scheme,
+            dataset: self.dataset,
+            records: self.records,
+            total_sim_time_s: summary.total_sim_time_s,
+            host_time_s: summary.host_time_s,
+            deadline_s: self.deadline_s,
+            mean_arrivals: summary.mean_arrival_frac,
+        }
+    }
+}
+
+impl RoundObserver for CollectingObserver {
+    fn on_eval(&mut self, ev: &EvalRecord) -> Result<()> {
+        self.records.push(*ev);
+        Ok(())
+    }
+}
+
+/// Streams every event as one JSON object per line to any writer.
+/// Nothing is buffered beyond the writer's own block buffer, so a
+/// thousand-client churn run reports incrementally with O(1) memory.
+pub struct JsonlObserver<W: std::io::Write> {
+    out: W,
+    events: usize,
+}
+
+impl JsonlObserver<std::io::BufWriter<std::fs::File>> {
+    /// Stream to a file (created/truncated).
+    pub fn create(path: &str) -> Result<Self> {
+        let file = std::fs::File::create(path)?;
+        Ok(JsonlObserver::new(std::io::BufWriter::new(file)))
+    }
+}
+
+impl<W: std::io::Write> JsonlObserver<W> {
+    pub fn new(out: W) -> Self {
+        JsonlObserver { out, events: 0 }
+    }
+
+    /// Events written so far.
+    pub fn events(&self) -> usize {
+        self.events
+    }
+
+    /// Flush and hand back the writer.
+    pub fn finish(mut self) -> Result<W> {
+        self.out.flush()?;
+        Ok(self.out)
+    }
+
+    fn emit(&mut self, doc: Json) -> Result<()> {
+        writeln!(self.out, "{}", doc.to_string())?;
+        self.events += 1;
+        Ok(())
+    }
+}
+
+fn ids_json(ids: &[usize]) -> Json {
+    Json::Arr(ids.iter().map(|&j| Json::Num(j as f64)).collect())
+}
+
+impl<W: std::io::Write> RoundObserver for JsonlObserver<W> {
+    fn on_round(&mut self, ev: &RoundEvent) -> Result<()> {
+        self.emit(Json::obj(vec![
+            ("type", Json::Str("round".into())),
+            ("epoch", Json::Num(ev.epoch as f64)),
+            ("step", Json::Num(ev.step as f64)),
+            ("batch", Json::Num(ev.batch as f64)),
+            ("sim_time_s", Json::Num(ev.sim_time_s)),
+            ("step_time_s", Json::Num(ev.step_time_s)),
+            ("active", Json::Num(ev.active as f64)),
+            ("arrivals", Json::Num(ev.arrivals as f64)),
+            ("stragglers", ids_json(&ev.stragglers)),
+        ]))
+    }
+
+    fn on_eval(&mut self, ev: &EvalRecord) -> Result<()> {
+        self.emit(Json::obj(vec![
+            ("type", Json::Str("eval".into())),
+            ("epoch", Json::Num(ev.epoch as f64)),
+            ("step", Json::Num(ev.step as f64)),
+            ("sim_time_s", Json::Num(ev.sim_time_s)),
+            ("accuracy", Json::Num(ev.accuracy)),
+            ("loss", Json::Num(ev.loss)),
+        ]))
+    }
+
+    fn on_epoch(&mut self, ev: &EpochEvent) -> Result<()> {
+        self.emit(Json::obj(vec![
+            ("type", Json::Str("epoch".into())),
+            ("epoch", Json::Num(ev.epoch as f64)),
+            ("sim_time_s", Json::Num(ev.sim_time_s)),
+            ("active", Json::Num(ev.active as f64)),
+            ("lr", Json::Num(ev.lr)),
+        ]))
+    }
+
+    fn on_churn(&mut self, ev: &ChurnEvent) -> Result<()> {
+        self.emit(Json::obj(vec![
+            ("type", Json::Str("churn".into())),
+            ("epoch", Json::Num(ev.epoch as f64)),
+            ("joined", ids_json(&ev.joined)),
+            ("left", ids_json(&ev.left)),
+            ("active", Json::Num(ev.active as f64)),
+        ]))
+    }
+}
+
+/// Prints evaluation checkpoints and churn transitions to stdout (the
+/// CLI's default progress view).
+#[derive(Default)]
+pub struct ConsoleObserver;
+
+impl RoundObserver for ConsoleObserver {
+    fn on_eval(&mut self, ev: &EvalRecord) -> Result<()> {
+        println!(
+            "  epoch {:>4} step {:>6} sim {:>10.1}s  acc {:.4}  loss {:.5}",
+            ev.epoch, ev.step, ev.sim_time_s, ev.accuracy, ev.loss
+        );
+        Ok(())
+    }
+
+    fn on_churn(&mut self, ev: &ChurnEvent) -> Result<()> {
+        println!(
+            "  epoch {:>4} churn: +{} -{} -> {} active",
+            ev.epoch,
+            ev.joined.len(),
+            ev.left.len(),
+            ev.active
+        );
+        Ok(())
+    }
+}
+
+/// Records every event as a canonical text line — the determinism tests
+/// compare whole event streams across thread/shard configurations with
+/// exact (round-trip `{:?}`) float formatting.
+#[derive(Default)]
+pub struct EventLog {
+    pub lines: Vec<String>,
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog::default()
+    }
+}
+
+impl RoundObserver for EventLog {
+    fn on_round(&mut self, ev: &RoundEvent) -> Result<()> {
+        self.lines.push(format!(
+            "round e{} s{} b{} t{:?} dt{:?} act{} arr{} strag{:?}",
+            ev.epoch,
+            ev.step,
+            ev.batch,
+            ev.sim_time_s,
+            ev.step_time_s,
+            ev.active,
+            ev.arrivals,
+            ev.stragglers
+        ));
+        Ok(())
+    }
+
+    fn on_eval(&mut self, ev: &EvalRecord) -> Result<()> {
+        self.lines.push(format!(
+            "eval e{} s{} t{:?} acc{:?} loss{:?}",
+            ev.epoch, ev.step, ev.sim_time_s, ev.accuracy, ev.loss
+        ));
+        Ok(())
+    }
+
+    fn on_epoch(&mut self, ev: &EpochEvent) -> Result<()> {
+        self.lines
+            .push(format!("epoch e{} t{:?} act{} lr{:?}", ev.epoch, ev.sim_time_s, ev.active, ev.lr));
+        Ok(())
+    }
+
+    fn on_churn(&mut self, ev: &ChurnEvent) -> Result<()> {
+        self.lines.push(format!(
+            "churn e{} +{:?} -{:?} act{}",
+            ev.epoch, ev.joined, ev.left, ev.active
+        ));
+        Ok(())
+    }
+}
+
+/// Forwards every event to several observers (e.g. collect + stream).
+pub struct Fanout<'a> {
+    pub observers: Vec<&'a mut dyn RoundObserver>,
+}
+
+impl<'a> Fanout<'a> {
+    pub fn new(observers: Vec<&'a mut dyn RoundObserver>) -> Fanout<'a> {
+        Fanout { observers }
+    }
+}
+
+impl RoundObserver for Fanout<'_> {
+    fn on_round(&mut self, ev: &RoundEvent) -> Result<()> {
+        for o in self.observers.iter_mut() {
+            o.on_round(ev)?;
+        }
+        Ok(())
+    }
+
+    fn on_eval(&mut self, ev: &EvalRecord) -> Result<()> {
+        for o in self.observers.iter_mut() {
+            o.on_eval(ev)?;
+        }
+        Ok(())
+    }
+
+    fn on_epoch(&mut self, ev: &EpochEvent) -> Result<()> {
+        for o in self.observers.iter_mut() {
+            o.on_epoch(ev)?;
+        }
+        Ok(())
+    }
+
+    fn on_churn(&mut self, ev: &ChurnEvent) -> Result<()> {
+        for o in self.observers.iter_mut() {
+            o.on_churn(ev)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_ev() -> RoundEvent {
+        RoundEvent {
+            epoch: 1,
+            step: 6,
+            batch: 0,
+            sim_time_s: 12.5,
+            step_time_s: 2.5,
+            active: 5,
+            arrivals: 4,
+            stragglers: vec![3],
+        }
+    }
+
+    #[test]
+    fn collecting_observer_builds_a_report() {
+        let mut col = CollectingObserver::new("coded", "synth-mnist", 2.0);
+        col.on_eval(&EvalRecord { epoch: 0, step: 5, sim_time_s: 10.0, accuracy: 0.8, loss: 0.4 })
+            .unwrap();
+        col.on_round(&round_ev()).unwrap(); // ignored by collection
+        let summary = crate::scenario::SessionSummary {
+            total_sim_time_s: 10.0,
+            host_time_s: 0.1,
+            mean_arrival_frac: 0.9,
+            ..Default::default()
+        };
+        let report = col.into_report(&summary);
+        assert_eq!(report.scheme, "coded");
+        assert_eq!(report.records.len(), 1);
+        assert_eq!(report.final_accuracy(), 0.8);
+        assert_eq!(report.deadline_s, 2.0);
+        assert_eq!(report.mean_arrivals, 0.9);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let mut obs = JsonlObserver::new(Vec::<u8>::new());
+        obs.on_round(&round_ev()).unwrap();
+        obs.on_eval(&EvalRecord { epoch: 0, step: 5, sim_time_s: 1.0, accuracy: 0.5, loss: 1.0 })
+            .unwrap();
+        obs.on_churn(&ChurnEvent { epoch: 2, joined: vec![1], left: vec![0, 4], active: 3 })
+            .unwrap();
+        assert_eq!(obs.events(), 3);
+        let buf = obs.finish().unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let round = Json::parse(lines[0]).unwrap();
+        assert_eq!(round.get("type").unwrap().as_str().unwrap(), "round");
+        assert_eq!(round.get("arrivals").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(round.get("stragglers").unwrap().as_usize_vec().unwrap(), vec![3]);
+        let churn = Json::parse(lines[2]).unwrap();
+        assert_eq!(churn.get("left").unwrap().as_usize_vec().unwrap(), vec![0, 4]);
+    }
+
+    #[test]
+    fn event_log_is_exact_and_ordered() {
+        let mut log = EventLog::new();
+        log.on_round(&round_ev()).unwrap();
+        log.on_epoch(&EpochEvent { epoch: 1, sim_time_s: 12.5, active: 5, lr: 2.0 }).unwrap();
+        assert_eq!(log.lines.len(), 2);
+        assert!(log.lines[0].starts_with("round e1 s6"));
+        assert!(log.lines[1].starts_with("epoch e1"));
+        // {:?} float formatting round-trips, so equal streams imply
+        // bitwise-equal trajectories.
+        assert!(log.lines[0].contains("t12.5"));
+    }
+
+    #[test]
+    fn fanout_forwards_to_all() {
+        let mut a = EventLog::new();
+        let mut b = EventLog::new();
+        {
+            let mut fan = Fanout::new(vec![&mut a, &mut b]);
+            fan.on_round(&round_ev()).unwrap();
+        }
+        assert_eq!(a.lines, b.lines);
+        assert_eq!(a.lines.len(), 1);
+    }
+}

@@ -1,0 +1,540 @@
+//! A [`Session`] is one runnable experiment compiled from a
+//! [`Scenario`]: the trainer engine plus the per-epoch scenario dynamics
+//! (churn roster, rate modulation, parity re-encoding), driven by one
+//! canonical epoch/step/eval loop that streams progress to
+//! [`RoundObserver`]s.
+//!
+//! **Bitwise contract.** A static scenario (no churn, static rates)
+//! drives `Trainer::step_round` with no round context — byte-for-byte
+//! the legacy `Trainer::run` path — so its final model and evaluation
+//! trajectory are **bitwise identical** to the deprecated constructor
+//! API at any thread/shard count (enforced in `trainer_e2e`). Dynamic
+//! scenarios compute all per-epoch state (active sets, rate factors,
+//! generator streams) on the driving thread from dedicated seed forks,
+//! and the round itself visits clients in ascending id regardless of the
+//! roster — so churn runs are bitwise reproducible too, and independent
+//! of `CODEDFEDL_THREADS`/`CODEDFEDL_SHARDS`.
+//!
+//! **Churn parity.** When the active set changes between epochs, the
+//! composite parity no longer matches the data actually present, so the
+//! session re-encodes it over the active clients — the in-product home
+//! of [`ReencodeCache`]: each (step, client) keeps its materialized
+//! slice, and since slice row-sets are fixed across epochs the cache
+//! re-reads **zero rows** after its first fill, paying only the
+//! (mandatory, privacy-preserving) fresh generator draw plus the encode
+//! kernel. The cached path is bitwise identical to a full re-encode
+//! (oracle-tested; see `ScenarioBuilder::reencode_cache(false)`). The
+//! amortization trades memory for gather time: each (step, client) that
+//! has re-encoded at least once keeps its dense slice resident, so over
+//! a long churn run the caches grow toward one extra copy of the
+//! training embedding (clients that never re-encode cost nothing);
+//! memory-constrained callers can opt out with `reencode_cache(false)`
+//! and pay the full gather each time. Observer streaming itself stays
+//! O(1) regardless.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::coding::encoder::{encode_client_rows, CompositeParity, ReencodeCache};
+use crate::coding::weights::build_weights;
+use crate::config::ExperimentConfig;
+use crate::fl::lr::LrSchedule;
+use crate::fl::trainer::{RoundCtx, SharedData, Trainer, TrainerSetup};
+use crate::mathx::linalg::Matrix;
+use crate::mathx::par::Parallelism;
+use crate::mathx::rng::Rng;
+use crate::metrics::{EvalRecord, TrainReport};
+use crate::runtime::backend::{ComputeBackend, PreparedMatrix};
+use crate::scenario::builder::Scenario;
+use crate::scenario::observer::{
+    ChurnEvent, CollectingObserver, EpochEvent, RoundEvent, RoundObserver,
+};
+use crate::simnet::delay::ClientModel;
+
+/// End-of-run totals (everything the streaming path needs that is not an
+/// event; the collecting observer combines them into a [`TrainReport`]).
+#[derive(Debug, Clone, Default)]
+pub struct SessionSummary {
+    pub epochs: usize,
+    /// Global mini-batch rounds executed.
+    pub steps: usize,
+    pub total_sim_time_s: f64,
+    pub host_time_s: f64,
+    /// Mean per-round fraction of *active* clients that arrived in time
+    /// (for static scenarios this is the legacy mean-arrivals number).
+    pub mean_arrival_frac: f64,
+    /// Coded deadline `t*` (0 for uncoded).
+    pub deadline_s: f64,
+    pub evals: usize,
+    /// Last evaluated test accuracy (0 if never evaluated).
+    pub final_accuracy: f64,
+    /// How many times churn forced a parity re-encode.
+    pub parity_reencodes: usize,
+}
+
+/// One prepared, runnable experiment. Built by
+/// [`crate::scenario::ScenarioBuilder`]; this is the single way to run
+/// training (the deprecated `Trainer` constructors shim onto the same
+/// engine).
+pub struct Session {
+    scenario: Scenario,
+    trainer: Trainer,
+    churn_root: Rng,
+    compute_rate_root: Rng,
+    link_rate_root: Rng,
+    reencode_root: Rng,
+    /// The active set the currently-installed parity was encoded for.
+    encoded_for: Vec<usize>,
+    /// Per-step re-encoded parity operands (None = construction parity).
+    parity_override: Option<Vec<(PreparedMatrix, PreparedMatrix, PreparedMatrix)>>,
+    /// Per-(step, client) slice caches for churn re-encodes (sized
+    /// lazily on the first re-encode).
+    caches: Vec<Vec<ReencodeCache>>,
+    reencodes: usize,
+}
+
+/// Split two ascending id lists into (joined, left).
+fn sorted_diff(prev: &[usize], next: &[usize]) -> (Vec<usize>, Vec<usize>) {
+    let (mut joined, mut left) = (Vec::new(), Vec::new());
+    let (mut i, mut k) = (0usize, 0usize);
+    while i < prev.len() || k < next.len() {
+        match (prev.get(i), next.get(k)) {
+            (Some(&a), Some(&b)) if a == b => {
+                i += 1;
+                k += 1;
+            }
+            (Some(&a), Some(&b)) if a < b => {
+                left.push(a);
+                i += 1;
+            }
+            (Some(_), Some(&b)) => {
+                joined.push(b);
+                k += 1;
+            }
+            (Some(&a), None) => {
+                left.push(a);
+                i += 1;
+            }
+            (None, Some(&b)) => {
+                joined.push(b);
+                k += 1;
+            }
+            (None, None) => unreachable!(),
+        }
+    }
+    (joined, left)
+}
+
+impl Session {
+    /// Build a session from a compiled scenario, an explicit backend and
+    /// pre-built shared data. Most callers use
+    /// [`crate::scenario::ScenarioBuilder::build`] instead.
+    pub fn new(
+        scenario: Scenario,
+        backend: Box<dyn ComputeBackend>,
+        shared: Arc<SharedData>,
+    ) -> Result<Session> {
+        scenario.validate()?;
+        let topo =
+            if scenario.topology.is_trivial() { None } else { Some(&scenario.topology) };
+        let trainer =
+            Trainer::build_internal(&scenario.cfg, backend, shared, scenario.par, topo)?;
+        let root = Rng::new(scenario.cfg.seed);
+        let n = scenario.cfg.n_clients;
+        Ok(Session {
+            trainer,
+            // Dedicated seed forks so scenario dynamics never perturb the
+            // data (1), topology (2), RFF (3), delay (4) or per-client
+            // parity (1000+) streams the engine already consumes.
+            churn_root: root.fork(7),
+            compute_rate_root: root.fork(8),
+            reencode_root: root.fork(9),
+            link_rate_root: root.fork(10),
+            encoded_for: (0..n).collect(),
+            parity_override: None,
+            caches: Vec::new(),
+            reencodes: 0,
+            scenario,
+        })
+    }
+
+    /// A static full-population session over an existing config (the
+    /// compatibility path used by the deprecated shims, the sweep runner
+    /// and the CLI).
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Session> {
+        crate::scenario::ScenarioBuilder::from_config(cfg).build()
+    }
+
+    /// Static session on pre-built shared state with explicit
+    /// parallelism (the sweep fast path).
+    pub fn from_config_shared(
+        cfg: &ExperimentConfig,
+        backend: Box<dyn ComputeBackend>,
+        shared: Arc<SharedData>,
+        par: Parallelism,
+    ) -> Result<Session> {
+        Session::new(Scenario::static_from(cfg, par), backend, shared)
+    }
+
+    /// The compiled scenario this session runs.
+    pub fn scenario(&self) -> &Scenario {
+        &self.scenario
+    }
+
+    /// The underlying engine (diagnostics: population, plan, pool, ...).
+    pub fn trainer(&self) -> &Trainer {
+        &self.trainer
+    }
+
+    /// Setup diagnostics (population, allocation plan, RFF params).
+    pub fn setup(&self) -> &TrainerSetup {
+        self.trainer.setup()
+    }
+
+    /// Current model.
+    pub fn beta(&self) -> &Matrix {
+        self.trainer.beta()
+    }
+
+    /// Name of the backend actually executing the compute.
+    pub fn backend_name(&self) -> &'static str {
+        self.trainer.backend_name()
+    }
+
+    /// Round parallelism this session runs with.
+    pub fn parallelism(&self) -> Parallelism {
+        self.trainer.parallelism()
+    }
+
+    /// The shared dataset + embedding state (sweep reuse, diagnostics).
+    pub fn shared_data(&self) -> &Arc<SharedData> {
+        self.trainer.shared_data()
+    }
+
+    /// `(parity re-encodes, slice rows re-read, cached encode calls)` —
+    /// the churn-path amortization: a full re-encode would re-read
+    /// `encode calls * l` rows; fixed slice row-sets re-read ~0.
+    pub fn reencode_stats(&self) -> (usize, usize, usize) {
+        let (mut rows, mut calls) = (0usize, 0usize);
+        for row in &self.caches {
+            for c in row {
+                let (r, n) = c.stats();
+                rows += r;
+                calls += n;
+            }
+        }
+        (self.reencodes, rows, calls)
+    }
+
+    /// Run to completion, collecting the legacy [`TrainReport`] via the
+    /// built-in [`CollectingObserver`]. Population-scale callers should
+    /// prefer [`Session::run_observed`] with a streaming observer.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let scheme = self.scenario.cfg.scheme.name();
+        let dataset = self.scenario.cfg.dataset.clone();
+        let deadline =
+            self.trainer.setup().plan.as_ref().map(|p| p.deadline).unwrap_or(0.0);
+        let mut col = CollectingObserver::new(scheme, &dataset, deadline);
+        let summary = self.run_observed(&mut col)?;
+        Ok(col.into_report(&summary))
+    }
+
+    /// Run to completion, streaming every round/eval/epoch/churn event
+    /// to `obs`. Nothing per-round is buffered in the session itself, so
+    /// thousand-client populations report incrementally in O(1) memory.
+    pub fn run_observed(&mut self, obs: &mut dyn RoundObserver) -> Result<SessionSummary> {
+        let host_t0 = Instant::now();
+        let cfg = self.scenario.cfg.clone();
+        let steps = cfg.steps_per_epoch();
+        let m_batch = cfg.global_batch() as f32;
+        let lam = cfg.train.lambda as f32;
+        let n = cfg.n_clients;
+        let sched = LrSchedule {
+            lr0: cfg.train.lr0,
+            decay: cfg.train.decay,
+            decay_epochs: cfg.train.decay_epochs.clone(),
+        };
+        let is_static = self.scenario.is_static();
+        let rates_static =
+            self.scenario.compute_rates.is_static() && self.scenario.link_rates.is_static();
+
+        let mut sim_time = 0.0f64;
+        let mut global_step = 0usize;
+        let mut arrival_frac_sum = 0.0f64;
+        let mut evals = 0usize;
+        let mut last_acc = 0.0f64;
+        let mut prev_active: Vec<usize> = (0..n).collect();
+
+        for epoch in 0..cfg.train.epochs {
+            let lr64 = sched.at(epoch);
+            let lr = lr64 as f32;
+
+            // 1. This epoch's roster; emit join/leave transitions.
+            let active = self.scenario.churn.active_set(n, epoch, &self.churn_root);
+            if active != prev_active {
+                let (joined, left) = sorted_diff(&prev_active, &active);
+                obs.on_churn(&ChurnEvent { epoch, joined, left, active: active.len() })?;
+            }
+
+            // 2. Epoch-effective delay models (rate modulation).
+            let models: Option<Vec<ClientModel>> = if rates_static {
+                None
+            } else {
+                let cf =
+                    self.scenario.compute_rates.factors(n, epoch, &self.compute_rate_root);
+                let lf = self.scenario.link_rates.factors(n, epoch, &self.link_rate_root);
+                let base = &self.trainer.setup().population.clients;
+                Some(
+                    (0..n)
+                        .map(|j| {
+                            let mut m = base[j].clone();
+                            m.mu *= cf[j];
+                            m.tau /= lf[j];
+                            m
+                        })
+                        .collect(),
+                )
+            };
+
+            // 3. Re-encode parity when the present data changed.
+            let needs_parity =
+                self.trainer.setup().plan.as_ref().map(|p| p.u > 0).unwrap_or(false);
+            if needs_parity && active != self.encoded_for {
+                self.reencode_parity(epoch, &active)?;
+            }
+
+            // 4. The rounds. Static scenarios pass no context — the
+            // byte-identical legacy path. Dynamic rounds normalize the
+            // gradient mean by the rows actually *present* this epoch
+            // (|active| * l — the standard partial-participation
+            // convention): the round's estimator covers only active
+            // clients' slices, so dividing by the full-population batch
+            // would silently shrink every update by the absenteeism
+            // fraction. With the full roster the two counts coincide
+            // exactly, so the static bitwise contract is untouched.
+            let m_round = (active.len() * cfg.profile.l) as f32;
+            for s in 0..steps {
+                let out = if is_static {
+                    self.trainer.step_round(s, lr, lam, m_batch, None)?
+                } else {
+                    let ctx = RoundCtx {
+                        active: &active,
+                        models: models.as_deref(),
+                        parity: self.parity_override.as_ref().map(|v| &v[s]),
+                    };
+                    self.trainer.step_round(s, lr, lam, m_round, Some(&ctx))?
+                };
+                sim_time += out.step_time_s;
+                arrival_frac_sum += out.arrivals as f64 / active.len().max(1) as f64;
+                global_step += 1;
+                obs.on_round(&RoundEvent {
+                    epoch,
+                    step: global_step,
+                    batch: s,
+                    sim_time_s: sim_time,
+                    step_time_s: out.step_time_s,
+                    active: active.len(),
+                    arrivals: out.arrivals,
+                    stragglers: out.stragglers,
+                })?;
+                let last = epoch + 1 == cfg.train.epochs && s + 1 == steps;
+                if global_step % cfg.train.eval_every_steps == 0 || last {
+                    let (acc, loss) = self.trainer.evaluate(s)?;
+                    evals += 1;
+                    last_acc = acc;
+                    obs.on_eval(&EvalRecord {
+                        epoch,
+                        step: global_step,
+                        sim_time_s: sim_time,
+                        accuracy: acc,
+                        loss,
+                    })?;
+                }
+            }
+            obs.on_epoch(&EpochEvent {
+                epoch,
+                sim_time_s: sim_time,
+                active: active.len(),
+                lr: lr64,
+            })?;
+            prev_active = active;
+        }
+
+        Ok(SessionSummary {
+            epochs: cfg.train.epochs,
+            steps: global_step,
+            total_sim_time_s: sim_time,
+            host_time_s: host_t0.elapsed().as_secs_f64(),
+            mean_arrival_frac: arrival_frac_sum / global_step.max(1) as f64,
+            deadline_s: self.trainer.setup().plan.as_ref().map(|p| p.deadline).unwrap_or(0.0),
+            evals,
+            final_accuracy: last_acc,
+            parity_reencodes: self.reencodes,
+        })
+    }
+
+    /// Rebuild the per-step composite parity over `active` clients. The
+    /// generator matrices are freshly drawn per (epoch, step, client)
+    /// from a dedicated seed fork (re-using a generator across encodes
+    /// would correlate parity noise, Remark 2); the expensive slice
+    /// gathers are amortized through the per-(step, client)
+    /// [`ReencodeCache`] — slice row-sets never change across epochs, so
+    /// after the first fill the cache re-reads zero rows.
+    ///
+    /// Clients are dispatched one at a time (each encode kernel still
+    /// runs multi-threaded panels on the pool); fusing the cached dense
+    /// encodes into one batched pool job — the churn-path analogue of
+    /// `encode_accumulate_batch` — would need a dense-batch backend
+    /// entry point and is left as a perf follow-up. The re-encode is a
+    /// per-epoch cost of `O(|active| * u * l * (q + c))` MACs, far below
+    /// a single round's gradient work at the profiles shipped here.
+    fn reencode_parity(&mut self, epoch: usize, active: &[usize]) -> Result<()> {
+        let plan = self
+            .trainer
+            .setup()
+            .plan
+            .clone()
+            .expect("reencode_parity is only called on coded plans");
+        let p = self.scenario.cfg.profile.clone();
+        let steps = self.scenario.cfg.steps_per_epoch();
+        let n = self.scenario.cfg.n_clients;
+        ensure!(
+            active.iter().all(|&j| j < n),
+            "active set references client out of range"
+        );
+        if self.scenario.use_reencode_cache && self.caches.is_empty() {
+            self.caches = (0..steps)
+                .map(|_| (0..n).map(|_| ReencodeCache::new()).collect())
+                .collect();
+        }
+        let mut overrides = Vec::with_capacity(steps);
+        for s in 0..steps {
+            let mut comp = CompositeParity::zeros(plan.u, p.u_max, p.q, p.c);
+            for &j in active {
+                // Replay the §3.4 weights from the stored processed mask
+                // (identical to the construction pass: w[k] =
+                // sqrt(pnr_j) on processed rows, 1 elsewhere).
+                let mask = &self.trainer.processed_masks()[s][j];
+                let processed: Vec<usize> = mask
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(k, &m)| if m == 1.0 { Some(k) } else { None })
+                    .collect();
+                let w = build_weights(p.l, &processed, plan.pnr[j]);
+                let idx = &self.trainer.batch_slices()[s][j];
+                let mut rng =
+                    self.reencode_root.fork(((epoch * steps + s) * n + j) as u64);
+                let (xc, yc) = if self.scenario.use_reencode_cache {
+                    self.caches[s][j].encode_client_rows(
+                        self.trainer.backend(),
+                        self.trainer.train_embedding(),
+                        self.trainer.train_labels(),
+                        idx,
+                        &w,
+                        plan.u,
+                        p.u_max,
+                        &mut rng,
+                    )?
+                } else {
+                    // Full re-encode oracle: gathers every row again.
+                    encode_client_rows(
+                        self.trainer.backend(),
+                        self.trainer.train_embedding(),
+                        self.trainer.train_labels(),
+                        idx,
+                        &w,
+                        plan.u,
+                        p.u_max,
+                        &mut rng,
+                    )?
+                };
+                comp.add(&xc, &yc);
+            }
+            overrides.push((
+                self.trainer.backend().prepare(&comp.x)?,
+                self.trainer.backend().prepare(&comp.y)?,
+                self.trainer.backend().prepare_col(&comp.mask())?,
+            ));
+        }
+        self.parity_override = Some(overrides);
+        self.encoded_for = active.to_vec();
+        self.reencodes += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+    use crate::runtime::backend::NativeBackend;
+    use crate::scenario::builder::ScenarioBuilder;
+    use crate::scenario::observer::EventLog;
+    use crate::simnet::churn::ChurnSchedule;
+
+    fn tiny_builder(scheme: Scheme) -> ScenarioBuilder {
+        let mut b = ScenarioBuilder::from_preset("tiny").unwrap().scheme(scheme).epochs(4);
+        b.set("backend", "native").unwrap();
+        b
+    }
+
+    #[test]
+    fn sorted_diff_splits_joins_and_leaves() {
+        let (j, l) = sorted_diff(&[0, 1, 2, 5], &[1, 3, 5, 6]);
+        assert_eq!(j, vec![3, 6]);
+        assert_eq!(l, vec![0, 2]);
+        let (j, l) = sorted_diff(&[0, 1], &[0, 1]);
+        assert!(j.is_empty() && l.is_empty());
+    }
+
+    #[test]
+    fn static_session_runs_and_reports() {
+        let mut s =
+            tiny_builder(Scheme::Coded).build_with_backend(Box::new(NativeBackend)).unwrap();
+        assert!(s.scenario().is_static());
+        let report = s.run().unwrap();
+        assert!(!report.records.is_empty());
+        assert!(report.final_accuracy() > 0.5, "acc {}", report.final_accuracy());
+        assert!(report.deadline_s > 0.0);
+        // Static runs never re-encode parity.
+        assert_eq!(s.reencode_stats().0, 0);
+    }
+
+    #[test]
+    fn observers_see_every_round() {
+        let mut s =
+            tiny_builder(Scheme::Uncoded).build_with_backend(Box::new(NativeBackend)).unwrap();
+        let mut log = EventLog::new();
+        let summary = s.run_observed(&mut log).unwrap();
+        let rounds = log.lines.iter().filter(|l| l.starts_with("round ")).count();
+        let epochs = log.lines.iter().filter(|l| l.starts_with("epoch ")).count();
+        let evals = log.lines.iter().filter(|l| l.starts_with("eval ")).count();
+        assert_eq!(rounds, summary.steps);
+        assert_eq!(epochs, summary.epochs);
+        assert_eq!(evals, summary.evals);
+        assert!(summary.total_sim_time_s > 0.0);
+        assert!((summary.mean_arrival_frac - 1.0).abs() < 1e-12); // uncoded waits for all
+    }
+
+    #[test]
+    fn churn_session_runs_and_reencodes() {
+        let mut s = tiny_builder(Scheme::Coded)
+            .churn(ChurnSchedule::Bernoulli { p_away: 0.5, min_active: 2 })
+            .build_with_backend(Box::new(NativeBackend))
+            .unwrap();
+        let mut log = EventLog::new();
+        let summary = s.run_observed(&mut log).unwrap();
+        assert!(summary.steps > 0);
+        let churns = log.lines.iter().filter(|l| l.starts_with("churn ")).count();
+        assert!(churns > 0, "p_away=0.5 over 4 epochs should churn: {:?}", log.lines);
+        let (reencodes, rows, calls) = s.reencode_stats();
+        assert_eq!(summary.parity_reencodes, reencodes);
+        assert!(reencodes > 0);
+        assert!(calls > 0);
+        // Fixed slice row-sets: each (step, client) cache fills once (l
+        // rows) and re-reads nothing afterwards.
+        assert!(rows <= calls * 20, "rows {rows} vs calls {calls}");
+    }
+}

@@ -1,0 +1,273 @@
+//! Client churn schedules: which subset of the population participates
+//! in each training epoch.
+//!
+//! The paper's experiments fix the client set for the whole run, but its
+//! motivating MEC setting — and the companion works on low-latency and
+//! stochastic coded FL — stress *time-varying availability*: devices
+//! join and leave cells as users move, sleep, or lose coverage. A
+//! [`ChurnSchedule`] is a pure function `(population, epoch, seed) ->
+//! active set`, so churn replays bit-identically from the experiment
+//! seed and is independent of thread/shard counts by construction.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::mathx::rng::Rng;
+
+/// Declarative description of client join/leave behavior over epochs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChurnSchedule {
+    /// The full population participates in every epoch (the paper's
+    /// static setting).
+    None,
+    /// Every epoch, each client is independently away with probability
+    /// `p_away` (fresh coins per epoch). At least `min_active` clients
+    /// are always kept: if too many coins come up "away", the absentees
+    /// whose coins were closest to staying are recalled, making the
+    /// floor deterministic too.
+    Bernoulli { p_away: f64, min_active: usize },
+    /// A rotating contiguous block of `round(fraction_away * n)` clients
+    /// is away; the block advances by its own size every
+    /// `period_epochs`, so over time every client takes its turn off the
+    /// network. Fully deterministic (no coins).
+    RotatingBlock { fraction_away: f64, period_epochs: usize },
+}
+
+impl ChurnSchedule {
+    /// `true` when every epoch runs the full population.
+    pub fn is_none(&self) -> bool {
+        matches!(self, ChurnSchedule::None)
+    }
+
+    /// Parse a compact spec string:
+    ///
+    /// * `none`
+    /// * `bernoulli:P` or `bernoulli:P:MIN` (away probability, active floor)
+    /// * `block:FRAC:PERIOD` (away fraction, epochs per rotation)
+    pub fn parse(s: &str) -> Result<ChurnSchedule> {
+        let s = s.trim();
+        if s == "none" || s.is_empty() {
+            return Ok(ChurnSchedule::None);
+        }
+        if let Some(rest) = s.strip_prefix("bernoulli:") {
+            let mut parts = rest.split(':');
+            let p_away: f64 = parts
+                .next()
+                .context("bernoulli churn needs an away probability")?
+                .trim()
+                .parse()
+                .context("bernoulli churn: bad away probability")?;
+            let min_active: usize = match parts.next() {
+                Some(m) => m.trim().parse().context("bernoulli churn: bad active floor")?,
+                None => 1,
+            };
+            return Ok(ChurnSchedule::Bernoulli { p_away, min_active });
+        }
+        if let Some(rest) = s.strip_prefix("block:") {
+            let (frac, period) = rest
+                .split_once(':')
+                .context("block churn spec is block:FRAC:PERIOD")?;
+            return Ok(ChurnSchedule::RotatingBlock {
+                fraction_away: frac.trim().parse().context("block churn: bad fraction")?,
+                period_epochs: period.trim().parse().context("block churn: bad period")?,
+            });
+        }
+        bail!("unknown churn spec '{s}' (expected none | bernoulli:P[:MIN] | block:FRAC:PERIOD)")
+    }
+
+    /// Compact display name (logs, JSONL headers).
+    pub fn spec(&self) -> String {
+        match self {
+            ChurnSchedule::None => "none".into(),
+            ChurnSchedule::Bernoulli { p_away, min_active } => {
+                format!("bernoulli:{p_away}:{min_active}")
+            }
+            ChurnSchedule::RotatingBlock { fraction_away, period_epochs } => {
+                format!("block:{fraction_away}:{period_epochs}")
+            }
+        }
+    }
+
+    /// Sanity-check against a population of `n` clients.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        ensure!(n > 0, "churn schedule needs a non-empty population");
+        match self {
+            ChurnSchedule::None => {}
+            ChurnSchedule::Bernoulli { p_away, min_active } => {
+                ensure!(
+                    (0.0..=1.0).contains(p_away),
+                    "bernoulli churn p_away {p_away} outside [0, 1]"
+                );
+                ensure!(*min_active >= 1, "bernoulli churn needs min_active >= 1");
+                ensure!(
+                    *min_active <= n,
+                    "bernoulli churn min_active {min_active} exceeds population {n}"
+                );
+            }
+            ChurnSchedule::RotatingBlock { fraction_away, period_epochs } => {
+                ensure!(
+                    (0.0..1.0).contains(fraction_away),
+                    "block churn fraction_away {fraction_away} outside [0, 1)"
+                );
+                ensure!(*period_epochs >= 1, "block churn needs period_epochs >= 1");
+            }
+        }
+        Ok(())
+    }
+
+    /// The ascending client ids active at `epoch`. Deterministic in
+    /// `(self, n, epoch, root)`; `root` should be a dedicated fork of the
+    /// experiment seed so churn never perturbs the data/delay streams.
+    pub fn active_set(&self, n: usize, epoch: usize, root: &Rng) -> Vec<usize> {
+        match self {
+            ChurnSchedule::None => (0..n).collect(),
+            ChurnSchedule::Bernoulli { p_away, min_active } => {
+                let mut r = root.fork(epoch as u64);
+                let coins: Vec<f64> = (0..n).map(|_| r.next_f64()).collect();
+                let mut active: Vec<usize> = (0..n).filter(|&j| coins[j] >= *p_away).collect();
+                let floor = (*min_active).clamp(1, n);
+                if active.len() < floor {
+                    let mut absent: Vec<usize> =
+                        (0..n).filter(|&j| coins[j] < *p_away).collect();
+                    // Highest coin = closest to staying; ties by id.
+                    absent.sort_by(|&a, &b| {
+                        coins[b].partial_cmp(&coins[a]).unwrap().then(a.cmp(&b))
+                    });
+                    let need = floor - active.len();
+                    active.extend(absent.into_iter().take(need));
+                    active.sort_unstable();
+                }
+                active
+            }
+            ChurnSchedule::RotatingBlock { fraction_away, period_epochs } => {
+                let away =
+                    ((fraction_away * n as f64).round() as usize).min(n.saturating_sub(1));
+                if away == 0 {
+                    return (0..n).collect();
+                }
+                let window = epoch / (*period_epochs).max(1);
+                let start = (window * away) % n;
+                (0..n)
+                    .filter(|&j| (j + n - start) % n >= away)
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_full_population() {
+        let root = Rng::new(1);
+        for e in 0..5 {
+            assert_eq!(ChurnSchedule::None.active_set(7, e, &root), (0..7).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn bernoulli_is_deterministic_and_sorted() {
+        let c = ChurnSchedule::Bernoulli { p_away: 0.4, min_active: 2 };
+        let root = Rng::new(9);
+        for e in 0..10 {
+            let a = c.active_set(50, e, &root);
+            let b = c.active_set(50, e, &root);
+            assert_eq!(a, b);
+            assert!(a.windows(2).all(|w| w[0] < w[1]), "unsorted at epoch {e}");
+            assert!(a.len() >= 2);
+            assert!(a.len() <= 50);
+        }
+    }
+
+    #[test]
+    fn bernoulli_epochs_differ() {
+        let c = ChurnSchedule::Bernoulli { p_away: 0.5, min_active: 1 };
+        let root = Rng::new(3);
+        let sets: Vec<Vec<usize>> = (0..6).map(|e| c.active_set(40, e, &root)).collect();
+        assert!(sets.windows(2).any(|w| w[0] != w[1]), "churn never changed the set");
+    }
+
+    #[test]
+    fn bernoulli_floor_is_enforced() {
+        // p_away = 1.0 sends everyone away; the floor recalls exactly
+        // min_active clients, deterministically.
+        let c = ChurnSchedule::Bernoulli { p_away: 1.0, min_active: 3 };
+        let root = Rng::new(4);
+        for e in 0..5 {
+            let a = c.active_set(20, e, &root);
+            assert_eq!(a.len(), 3, "epoch {e}");
+            assert_eq!(a, c.active_set(20, e, &root));
+        }
+    }
+
+    #[test]
+    fn rotating_block_covers_everyone_over_time() {
+        let c = ChurnSchedule::RotatingBlock { fraction_away: 0.25, period_epochs: 1 };
+        let n = 12;
+        let root = Rng::new(5);
+        let mut ever_away = vec![false; n];
+        for e in 0..8 {
+            let a = c.active_set(n, e, &root);
+            assert_eq!(a.len(), n - 3); // round(0.25 * 12) = 3 away
+            for j in 0..n {
+                if !a.contains(&j) {
+                    ever_away[j] = true;
+                }
+            }
+        }
+        assert!(ever_away.iter().all(|&x| x), "rotation missed a client: {ever_away:?}");
+    }
+
+    #[test]
+    fn rotating_block_holds_within_a_period() {
+        let c = ChurnSchedule::RotatingBlock { fraction_away: 0.5, period_epochs: 3 };
+        let root = Rng::new(6);
+        let a0 = c.active_set(10, 0, &root);
+        let a2 = c.active_set(10, 2, &root);
+        let a3 = c.active_set(10, 3, &root);
+        assert_eq!(a0, a2, "set changed inside a period");
+        assert_ne!(a0, a3, "set did not rotate at the period boundary");
+    }
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        assert_eq!(ChurnSchedule::parse("none").unwrap(), ChurnSchedule::None);
+        assert_eq!(
+            ChurnSchedule::parse("bernoulli:0.3").unwrap(),
+            ChurnSchedule::Bernoulli { p_away: 0.3, min_active: 1 }
+        );
+        assert_eq!(
+            ChurnSchedule::parse("bernoulli:0.3:8").unwrap(),
+            ChurnSchedule::Bernoulli { p_away: 0.3, min_active: 8 }
+        );
+        assert_eq!(
+            ChurnSchedule::parse("block:0.25:4").unwrap(),
+            ChurnSchedule::RotatingBlock { fraction_away: 0.25, period_epochs: 4 }
+        );
+        for c in ["bernoulli:0.3", "block:0.25:4", "none"] {
+            let parsed = ChurnSchedule::parse(c).unwrap();
+            assert_eq!(ChurnSchedule::parse(&parsed.spec()).unwrap(), parsed);
+        }
+        assert!(ChurnSchedule::parse("wat").is_err());
+        assert!(ChurnSchedule::parse("block:0.25").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        assert!(ChurnSchedule::Bernoulli { p_away: 1.5, min_active: 1 }.validate(10).is_err());
+        assert!(ChurnSchedule::Bernoulli { p_away: 0.5, min_active: 0 }.validate(10).is_err());
+        assert!(ChurnSchedule::Bernoulli { p_away: 0.5, min_active: 11 }.validate(10).is_err());
+        assert!(
+            ChurnSchedule::RotatingBlock { fraction_away: 1.0, period_epochs: 1 }
+                .validate(10)
+                .is_err()
+        );
+        assert!(
+            ChurnSchedule::RotatingBlock { fraction_away: 0.2, period_epochs: 0 }
+                .validate(10)
+                .is_err()
+        );
+        assert!(ChurnSchedule::None.validate(10).is_ok());
+    }
+}

@@ -1,16 +1,26 @@
 //! MEC edge-network substrate: the paper's §2.2 stochastic models for
-//! client compute and wireless communication, and the §A.2 heterogeneous
-//! population generator.
+//! client compute and wireless communication, the §A.2 heterogeneous
+//! population generator, and the scenario-layer dynamics on top of them
+//! — multi-cell topologies ([`topology::Topology`]), client churn
+//! schedules ([`churn::ChurnSchedule`]) and time-varying rate processes
+//! ([`rates::RateProcess`]).
 //!
 //! The trainer uses this module as its "testbed": every epoch it samples
 //! per-client execution times `T^(j)` and the simulated wall clock
-//! advances accordingly, so speedup results are host-independent.
+//! advances accordingly, so speedup results are host-independent. All
+//! scenario dynamics are pure functions of `(spec, epoch, seed)` and run
+//! on the driving thread, so they are bitwise independent of thread and
+//! shard counts.
 
 pub mod asym;
+pub mod churn;
 pub mod delay;
+pub mod rates;
 pub mod topology;
 pub mod trace;
 
 pub use asym::AsymClientModel;
+pub use churn::ChurnSchedule;
 pub use delay::{ClientModel, DelaySample};
-pub use topology::{build_population, Population};
+pub use rates::RateProcess;
+pub use topology::{build_population, build_population_with_topology, CellSpec, Population, Topology};

@@ -1,0 +1,182 @@
+//! Time-varying client rate processes, layered on the §2.2 delay model.
+//!
+//! The base [`crate::simnet::topology::Population`] fixes each client's
+//! compute rate `mu_j` and per-packet time `tau_j` for the whole run. A
+//! [`RateProcess`] modulates those rates *per epoch* with a multiplicative
+//! factor — diurnal load curves, per-epoch jitter — modelling the
+//! stochastically fluctuating MEC links the paper's setting assumes. The
+//! factors are pure functions of `(process, epoch, client, seed)` (or
+//! deterministic outright), so modulated runs replay bit-identically and
+//! are independent of thread/shard counts.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::mathx::distributions::{Normal, Sample};
+use crate::mathx::rng::Rng;
+
+/// Multiplicative jitter clamp: a single epoch can speed a client up or
+/// slow it down by at most this factor, keeping delays finite-ish.
+const JITTER_CLAMP: f64 = 4.0;
+
+/// A per-epoch multiplicative modulation of client rates (1.0 = base).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RateProcess {
+    /// Rates never change (the paper's setting).
+    Static,
+    /// Deterministic sinusoidal (diurnal) load curve with client-staggered
+    /// phases: client `j`'s factor at `epoch` is
+    /// `1 - depth/2 * (1 - cos(2*pi*(epoch/period + j/n)))`, i.e. it
+    /// oscillates in `[1 - depth, 1]` with period `period_epochs`.
+    Diurnal { period_epochs: f64, depth: f64 },
+    /// Independent per-(epoch, client) lognormal jitter:
+    /// `factor = exp(sigma * z)`, `z ~ N(0,1)`, clamped to
+    /// `[1/JITTER_CLAMP, JITTER_CLAMP]`.
+    Jitter { sigma: f64 },
+}
+
+impl RateProcess {
+    /// `true` when the factor is identically 1 (no modulation at all).
+    pub fn is_static(&self) -> bool {
+        matches!(self, RateProcess::Static)
+    }
+
+    /// Parse a compact spec string:
+    ///
+    /// * `static`
+    /// * `diurnal:PERIOD:DEPTH`
+    /// * `jitter:SIGMA`
+    pub fn parse(s: &str) -> Result<RateProcess> {
+        let s = s.trim();
+        if s == "static" || s.is_empty() {
+            return Ok(RateProcess::Static);
+        }
+        if let Some(rest) = s.strip_prefix("diurnal:") {
+            let (period, depth) = rest
+                .split_once(':')
+                .context("diurnal spec is diurnal:PERIOD:DEPTH")?;
+            return Ok(RateProcess::Diurnal {
+                period_epochs: period.trim().parse().context("diurnal: bad period")?,
+                depth: depth.trim().parse().context("diurnal: bad depth")?,
+            });
+        }
+        if let Some(rest) = s.strip_prefix("jitter:") {
+            return Ok(RateProcess::Jitter {
+                sigma: rest.trim().parse().context("jitter: bad sigma")?,
+            });
+        }
+        bail!("unknown rate process '{s}' (expected static | diurnal:PERIOD:DEPTH | jitter:SIGMA)")
+    }
+
+    /// Compact display name (logs, JSONL headers).
+    pub fn spec(&self) -> String {
+        match self {
+            RateProcess::Static => "static".into(),
+            RateProcess::Diurnal { period_epochs, depth } => {
+                format!("diurnal:{period_epochs}:{depth}")
+            }
+            RateProcess::Jitter { sigma } => format!("jitter:{sigma}"),
+        }
+    }
+
+    /// Sanity-check parameters.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            RateProcess::Static => {}
+            RateProcess::Diurnal { period_epochs, depth } => {
+                ensure!(*period_epochs > 0.0, "diurnal period must be positive");
+                ensure!(
+                    (0.0..1.0).contains(depth),
+                    "diurnal depth {depth} outside [0, 1)"
+                );
+            }
+            RateProcess::Jitter { sigma } => {
+                ensure!(*sigma >= 0.0, "jitter sigma must be non-negative");
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-client rate factors for `epoch` (length `n`, all in `(0, 4]`).
+    /// `root` must be a dedicated fork of the experiment seed; stochastic
+    /// processes draw from `root.fork(epoch)` so each epoch's factors are
+    /// independent yet replayable.
+    pub fn factors(&self, n: usize, epoch: usize, root: &Rng) -> Vec<f64> {
+        match self {
+            RateProcess::Static => vec![1.0; n],
+            RateProcess::Diurnal { period_epochs, depth } => (0..n)
+                .map(|j| {
+                    let phase = epoch as f64 / period_epochs + j as f64 / n.max(1) as f64;
+                    1.0 - 0.5 * depth * (1.0 - (std::f64::consts::TAU * phase).cos())
+                })
+                .collect(),
+            RateProcess::Jitter { sigma } => {
+                let mut r = root.fork(epoch as u64);
+                let z = Normal::standard();
+                (0..n)
+                    .map(|_| {
+                        (sigma * z.sample(&mut r)).exp().clamp(1.0 / JITTER_CLAMP, JITTER_CLAMP)
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_factors_are_exactly_one() {
+        let root = Rng::new(1);
+        let f = RateProcess::Static.factors(9, 3, &root);
+        assert_eq!(f, vec![1.0; 9]); // exact: the static path must be bitwise-neutral
+    }
+
+    #[test]
+    fn diurnal_is_bounded_and_periodic() {
+        let p = RateProcess::Diurnal { period_epochs: 8.0, depth: 0.5 };
+        let root = Rng::new(2);
+        for e in 0..20 {
+            for &f in &p.factors(10, e, &root) {
+                assert!((0.5..=1.0).contains(&f), "factor {f} outside [1-depth, 1]");
+            }
+        }
+        // Same phase one full period later.
+        let a = p.factors(10, 1, &root);
+        let b = p.factors(10, 9, &root);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn jitter_is_deterministic_clamped_and_varies() {
+        let p = RateProcess::Jitter { sigma: 0.5 };
+        let root = Rng::new(3);
+        let a = p.factors(40, 4, &root);
+        let b = p.factors(40, 4, &root);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&f| (0.25..=4.0).contains(&f)));
+        assert!(a.iter().any(|&f| (f - 1.0).abs() > 1e-3), "jitter did nothing");
+        assert_ne!(a, p.factors(40, 5, &root), "epochs share factors");
+    }
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        for s in ["static", "diurnal:8:0.4", "jitter:0.2"] {
+            let p = RateProcess::parse(s).unwrap();
+            assert_eq!(RateProcess::parse(&p.spec()).unwrap(), p);
+        }
+        assert!(RateProcess::parse("diurnal:8").is_err());
+        assert!(RateProcess::parse("sine:1").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        assert!(RateProcess::Diurnal { period_epochs: 0.0, depth: 0.2 }.validate().is_err());
+        assert!(RateProcess::Diurnal { period_epochs: 4.0, depth: 1.0 }.validate().is_err());
+        assert!(RateProcess::Jitter { sigma: -0.1 }.validate().is_err());
+        assert!(RateProcess::Static.validate().is_ok());
+    }
+}

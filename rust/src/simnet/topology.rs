@@ -1,10 +1,21 @@
-//! Heterogeneous client population generation (paper Appendix A.2).
+//! Heterogeneous client population generation (paper Appendix A.2), and
+//! the multi-cell MEC topology layered on top of it for population-scale
+//! scenarios.
 //!
 //! Normalized link capacities follow the geometric ladder `{1, k1, k1^2,
 //! ...}` and processing powers `{1, k2, k2^2, ...}`; each ladder is
 //! *independently* randomly permuted across clients, so a client may have
 //! a fast link but a slow CPU. Absolute scales: best link 216 kbps, best
 //! processor 3.072e6 MAC/s.
+//!
+//! A [`Topology`] partitions the population round-robin across MEC
+//! cells; each [`CellSpec`] scales its hosted clients' link and compute
+//! rates (and may override the erasure probability), modelling e.g. a
+//! congested outer cell next to a well-provisioned core cell. The
+//! single-cell topology is **bitwise-neutral**: it returns exactly the
+//! legacy [`build_population`] result.
+
+use anyhow::{ensure, Context, Result};
 
 use crate::config::ExperimentConfig;
 use crate::mathx::rng::Rng;
@@ -23,6 +34,105 @@ pub struct Population {
 impl Population {
     pub fn n(&self) -> usize {
         self.clients.len()
+    }
+}
+
+/// One MEC cell: a scaling regime applied to the clients it hosts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellSpec {
+    /// Multiplier on hosted clients' link rates (`tau` divides by it).
+    pub link_scale: f64,
+    /// Multiplier on hosted clients' MAC rates (`mu` multiplies by it).
+    pub mac_scale: f64,
+    /// Override of the link erasure probability (`None` = config value).
+    pub p_fail: Option<f64>,
+}
+
+impl CellSpec {
+    /// A cell that changes nothing.
+    pub fn unit() -> CellSpec {
+        CellSpec { link_scale: 1.0, mac_scale: 1.0, p_fail: None }
+    }
+
+    fn is_unit(&self) -> bool {
+        self.link_scale == 1.0 && self.mac_scale == 1.0 && self.p_fail.is_none()
+    }
+}
+
+/// A multi-cell MEC deployment: clients are assigned to cells round-robin
+/// (`client % n_cells`), and each cell scales its clients' rates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    pub cells: Vec<CellSpec>,
+}
+
+/// Per-cell link-rate decay used by [`Topology::graded`]: each further
+/// cell's backhaul is this fraction of the previous one's.
+const GRADED_LINK_STEP: f64 = 0.7;
+/// Per-cell compute decay used by [`Topology::graded`].
+const GRADED_MAC_STEP: f64 = 0.85;
+
+impl Topology {
+    /// The trivial single-cell topology (the paper's setting).
+    pub fn single_cell() -> Topology {
+        Topology { cells: vec![CellSpec::unit()] }
+    }
+
+    /// `k` cells on a graded ladder: cell `i` scales link rates by
+    /// `0.7^i` and MAC rates by `0.85^i` — outer cells are slower, the
+    /// core cell is untouched. `graded(1)` is the trivial topology;
+    /// `k = 0` panics (the spec-string and validate paths reject it, so
+    /// the programmatic path must not silently coerce it).
+    pub fn graded(k: usize) -> Topology {
+        assert!(k >= 1, "topology needs at least one cell");
+        let cells = (0..k)
+            .map(|i| CellSpec {
+                link_scale: GRADED_LINK_STEP.powi(i as i32),
+                mac_scale: GRADED_MAC_STEP.powi(i as i32),
+                p_fail: None,
+            })
+            .collect();
+        Topology { cells }
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Which cell hosts client `j` (round-robin assignment).
+    pub fn cell_of(&self, j: usize) -> usize {
+        j % self.cells.len()
+    }
+
+    /// `true` when applying this topology is a no-op (single unit cell).
+    pub fn is_trivial(&self) -> bool {
+        self.cells.len() == 1 && self.cells[0].is_unit()
+    }
+
+    /// Parse `K` (graded ladder with `K` cells).
+    pub fn parse(s: &str) -> Result<Topology> {
+        let k: usize = s.trim().parse().context("topology spec is a cell count")?;
+        ensure!(k >= 1, "topology needs at least one cell");
+        Ok(Topology::graded(k))
+    }
+
+    /// Sanity-check the cell parameters.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.cells.is_empty(), "topology needs at least one cell");
+        for (i, c) in self.cells.iter().enumerate() {
+            ensure!(
+                c.link_scale > 0.0 && c.link_scale.is_finite(),
+                "cell {i}: link_scale must be positive"
+            );
+            ensure!(
+                c.mac_scale > 0.0 && c.mac_scale.is_finite(),
+                "cell {i}: mac_scale must be positive"
+            );
+            if let Some(p) = c.p_fail {
+                ensure!((0.0..1.0).contains(&p), "cell {i}: p_fail {p} outside [0, 1)");
+            }
+        }
+        Ok(())
     }
 }
 
@@ -53,6 +163,35 @@ pub fn build_population(cfg: &ExperimentConfig, rng: &mut Rng) -> Population {
         mac_rate.push(macs);
     }
     Population { clients, link_rate_bps, mac_rate }
+}
+
+/// [`build_population`] with a multi-cell [`Topology`] applied on top:
+/// the §A.2 ladders are drawn exactly as in the single-cell case (same
+/// rng consumption), then each client's rates are scaled by its hosting
+/// cell. A trivial topology returns the legacy population **bitwise
+/// unchanged**, which is what makes static single-cell scenarios replay
+/// the paper's experiments exactly.
+pub fn build_population_with_topology(
+    cfg: &ExperimentConfig,
+    topo: &Topology,
+    rng: &mut Rng,
+) -> Population {
+    let mut pop = build_population(cfg, rng);
+    if topo.is_trivial() {
+        return pop;
+    }
+    for j in 0..pop.clients.len() {
+        let cell = &topo.cells[topo.cell_of(j)];
+        pop.link_rate_bps[j] *= cell.link_scale;
+        pop.mac_rate[j] *= cell.mac_scale;
+        let c = &mut pop.clients[j];
+        c.tau /= cell.link_scale;
+        c.mu *= cell.mac_scale;
+        if let Some(p) = cell.p_fail {
+            c.p_fail = p;
+        }
+    }
+    pop
 }
 
 #[cfg(test)]
@@ -127,6 +266,59 @@ mod tests {
         let (_, b) = pop(5);
         assert_eq!(a.link_rate_bps, b.link_rate_bps);
         assert_eq!(a.mac_rate, b.mac_rate);
+    }
+
+    #[test]
+    fn trivial_topology_is_bitwise_neutral() {
+        let cfg = ExperimentConfig::preset("small").unwrap();
+        let mut ra = Rng::new(11);
+        let mut rb = Rng::new(11);
+        let base = build_population(&cfg, &mut ra);
+        let topo = build_population_with_topology(&cfg, &Topology::single_cell(), &mut rb);
+        assert_eq!(base.link_rate_bps, topo.link_rate_bps);
+        assert_eq!(base.mac_rate, topo.mac_rate);
+        assert_eq!(base.clients, topo.clients);
+        assert!(Topology::single_cell().is_trivial());
+        assert!(Topology::graded(1).is_trivial());
+        assert!(!Topology::graded(2).is_trivial());
+    }
+
+    #[test]
+    fn graded_cells_scale_their_clients() {
+        let cfg = ExperimentConfig::preset("small").unwrap();
+        let topo = Topology::graded(2);
+        let mut ra = Rng::new(12);
+        let mut rb = Rng::new(12);
+        let base = build_population(&cfg, &mut ra);
+        let multi = build_population_with_topology(&cfg, &topo, &mut rb);
+        for j in 0..base.clients.len() {
+            let cell = &topo.cells[topo.cell_of(j)];
+            assert_eq!(topo.cell_of(j), j % 2);
+            assert!(
+                (multi.link_rate_bps[j] - base.link_rate_bps[j] * cell.link_scale).abs() < 1e-9
+            );
+            assert!((multi.mac_rate[j] - base.mac_rate[j] * cell.mac_scale).abs() < 1e-9);
+            assert!((multi.clients[j].tau - base.clients[j].tau / cell.link_scale).abs() < 1e-12);
+            assert!((multi.clients[j].mu - base.clients[j].mu * cell.mac_scale).abs() < 1e-9);
+        }
+        // Cell 1 is strictly slower on both axes.
+        assert!(topo.cells[1].link_scale < 1.0 && topo.cells[1].mac_scale < 1.0);
+    }
+
+    #[test]
+    fn topology_parse_and_validate() {
+        assert_eq!(Topology::parse("3").unwrap().n_cells(), 3);
+        assert!(Topology::parse("0").is_err());
+        assert!(Topology::parse("lots").is_err());
+        assert!(Topology::graded(4).validate().is_ok());
+        let bad = Topology {
+            cells: vec![CellSpec { link_scale: 0.0, mac_scale: 1.0, p_fail: None }],
+        };
+        assert!(bad.validate().is_err());
+        let bad_p = Topology {
+            cells: vec![CellSpec { link_scale: 1.0, mac_scale: 1.0, p_fail: Some(1.0) }],
+        };
+        assert!(bad_p.validate().is_err());
     }
 
     #[test]

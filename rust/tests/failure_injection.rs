@@ -2,6 +2,10 @@
 //! break the allocator or the trainer, and the coded scheme must stay
 //! robust where the uncoded baseline degrades.
 
+// These tests intentionally keep driving the deprecated legacy
+// constructors: extreme regimes must not break the compatibility shims.
+#![allow(deprecated)]
+
 use codedfedl::allocation::optimizer::plan_fixed_u;
 use codedfedl::config::{ExperimentConfig, Scheme};
 use codedfedl::fl::trainer::Trainer;

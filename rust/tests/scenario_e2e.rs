@@ -1,0 +1,234 @@
+//! Scenario-layer integration: churn/rate dynamics end to end.
+//!
+//! * determinism — same seed + same churn schedule produce an identical
+//!   event stream and final beta at every `(threads, shards)` setting;
+//! * the churn parity path with `ReencodeCache` is bitwise equal to the
+//!   full re-encode oracle;
+//! * population sizing, multi-cell topologies and JSONL streaming work
+//!   end to end.
+//!
+//! (Static-scenario ⇔ legacy-`Trainer` bitwise equivalence lives in
+//! `trainer_e2e`, next to the sharded-determinism invariants it extends.)
+
+use std::sync::Arc;
+
+use codedfedl::config::Scheme;
+use codedfedl::fl::trainer::SharedData;
+use codedfedl::mathx::linalg::Matrix;
+use codedfedl::mathx::par::Parallelism;
+use codedfedl::runtime::backend::NativeBackend;
+use codedfedl::scenario::{EventLog, JsonlObserver, RoundObserver, ScenarioBuilder, Session};
+use codedfedl::simnet::{ChurnSchedule, RateProcess};
+use codedfedl::util::json::Json;
+
+/// A small but fully-dynamic scenario: 16 clients, two cells, Bernoulli
+/// churn, diurnal links, jittered compute.
+fn churn_builder(scheme: Scheme, par: Parallelism) -> ScenarioBuilder {
+    let mut b = ScenarioBuilder::from_preset("tiny")
+        .unwrap()
+        .scheme(scheme)
+        .epochs(4)
+        .population(16)
+        .steps_per_epoch(2)
+        .cells(2)
+        .churn(ChurnSchedule::Bernoulli { p_away: 0.35, min_active: 2 })
+        .link_rates(RateProcess::Diurnal { period_epochs: 4.0, depth: 0.3 })
+        .compute_rates(RateProcess::Jitter { sigma: 0.1 })
+        .parallelism(par);
+    b.set("backend", "native").unwrap();
+    b
+}
+
+fn shared_for(b: ScenarioBuilder) -> Arc<SharedData> {
+    let cfg = b.compile().unwrap().cfg;
+    Arc::new(SharedData::build(&cfg, &NativeBackend).unwrap())
+}
+
+fn run_logged(b: ScenarioBuilder, shared: &Arc<SharedData>) -> (Matrix, Vec<String>) {
+    let mut session =
+        b.build_with_shared(Box::new(NativeBackend), Arc::clone(shared)).unwrap();
+    let mut log = EventLog::new();
+    session.run_observed(&mut log).unwrap();
+    (session.beta().clone(), log.lines)
+}
+
+#[test]
+fn churn_scenario_is_deterministic_across_threads_and_shards() {
+    // The satellite invariant: the full event stream (rounds with
+    // straggler ids, evals with exact f64s, churn transitions) and the
+    // final model replay bitwise at every parallelism setting — all
+    // dynamics live on the driving thread and every kernel is
+    // bitwise-deterministic.
+    for scheme in [Scheme::Coded, Scheme::Uncoded] {
+        let shared = shared_for(churn_builder(scheme, Parallelism::new(1, 1)));
+        let (beta_ref, lines_ref) =
+            run_logged(churn_builder(scheme, Parallelism::new(1, 1)), &shared);
+        assert!(
+            lines_ref.iter().any(|l| l.starts_with("churn ")),
+            "{}: schedule produced no churn events",
+            scheme.name()
+        );
+        for (threads, shards) in [(4, 1), (1, 8), (4, 8), (2, 3)] {
+            let (beta, lines) =
+                run_logged(churn_builder(scheme, Parallelism::new(threads, shards)), &shared);
+            assert_eq!(
+                beta, beta_ref,
+                "{}: final beta diverged at threads={threads} shards={shards}",
+                scheme.name()
+            );
+            assert_eq!(
+                lines, lines_ref,
+                "{}: event stream diverged at threads={threads} shards={shards}",
+                scheme.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn churn_reencode_cache_matches_full_reencode_bitwise() {
+    // Satellite: the ReencodeCache-amortized churn parity path must be
+    // bitwise identical to re-encoding every client slice from scratch.
+    let par = Parallelism::new(2, 2);
+    let shared = shared_for(churn_builder(Scheme::Coded, par));
+    let mut cached = churn_builder(Scheme::Coded, par)
+        .build_with_shared(Box::new(NativeBackend), Arc::clone(&shared))
+        .unwrap();
+    let mut full = churn_builder(Scheme::Coded, par)
+        .reencode_cache(false)
+        .build_with_shared(Box::new(NativeBackend), Arc::clone(&shared))
+        .unwrap();
+    let mut log_cached = EventLog::new();
+    let mut log_full = EventLog::new();
+    let sum_cached = cached.run_observed(&mut log_cached).unwrap();
+    let sum_full = full.run_observed(&mut log_full).unwrap();
+    assert_eq!(log_cached.lines, log_full.lines, "cached parity changed the trajectory");
+    assert_eq!(cached.beta(), full.beta(), "cached parity changed the final model");
+    assert_eq!(sum_cached.parity_reencodes, sum_full.parity_reencodes);
+    assert!(sum_cached.parity_reencodes > 0, "churn never forced a re-encode");
+
+    // And the cache really amortized: the full path re-reads l rows per
+    // encode; the cache fills each (step, client) slice once and then
+    // re-reads nothing (slice row-sets are fixed across epochs).
+    let (_, rows_cached, calls) = cached.reencode_stats();
+    let (_, rows_full, _) = full.reencode_stats();
+    assert_eq!(rows_full, 0, "the uncached oracle path must not touch the caches");
+    assert!(calls > 0);
+    let l = cached.scenario().cfg.profile.l;
+    assert!(
+        rows_cached < calls * l,
+        "cache never saved a row read: {rows_cached} rows over {calls} encodes (l = {l})"
+    );
+}
+
+#[test]
+fn population_resize_matches_equivalent_plain_config() {
+    // Declaring the preset's own shape through the builder (population +
+    // steps_per_epoch that re-derive the same m_train) is bitwise
+    // neutral: the compiled config is identical, so the run is too.
+    let base = ScenarioBuilder::from_preset("tiny").unwrap().epochs(3);
+    let sized = ScenarioBuilder::from_preset("tiny")
+        .unwrap()
+        .epochs(3)
+        .population(5)
+        .steps_per_epoch(5);
+    let cfg_a = base.clone().compile().unwrap().cfg;
+    let cfg_b = sized.clone().compile().unwrap().cfg;
+    assert_eq!(cfg_a.m_train, cfg_b.m_train);
+    assert_eq!(cfg_a.n_clients, cfg_b.n_clients);
+    let ra = base.build_with_backend(Box::new(NativeBackend)).unwrap().run().unwrap();
+    let rb = sized.build_with_backend(Box::new(NativeBackend)).unwrap().run().unwrap();
+    assert_eq!(ra.records, rb.records);
+}
+
+#[test]
+fn multi_cell_static_scenario_trains_and_replays() {
+    let build = || {
+        let mut b = ScenarioBuilder::from_preset("tiny").unwrap().epochs(6).cells(2);
+        b.set("backend", "native").unwrap();
+        b.build_with_backend(Box::new(NativeBackend)).unwrap()
+    };
+    let mut s1 = build();
+    let r1 = s1.run().unwrap();
+    assert!(r1.final_accuracy() > 0.5, "2-cell acc {}", r1.final_accuracy());
+    // Multi-cell is static: no churn machinery engages.
+    assert_eq!(s1.reencode_stats().0, 0);
+    let mut s2 = build();
+    let r2 = s2.run().unwrap();
+    assert_eq!(r1.records, r2.records, "multi-cell scenario did not replay");
+    assert_eq!(s1.beta(), s2.beta());
+    // The topology really applied: the session population is the legacy
+    // §A.2 population with cell 1's clients scaled down.
+    let cfg = s1.scenario().cfg.clone();
+    let mut rng = codedfedl::mathx::rng::Rng::new(cfg.seed).fork(2);
+    let base = codedfedl::simnet::build_population(&cfg, &mut rng);
+    let topo = &s1.scenario().topology;
+    let pop = &s1.setup().population;
+    for j in 0..pop.n() {
+        let cell = &topo.cells[topo.cell_of(j)];
+        let want = base.link_rate_bps[j] * cell.link_scale;
+        assert!((pop.link_rate_bps[j] - want).abs() < 1e-9, "client {j}");
+        if j % 2 == 1 {
+            assert!(pop.link_rate_bps[j] < base.link_rate_bps[j]);
+        }
+    }
+}
+
+#[test]
+fn jsonl_stream_is_parseable_and_complete() {
+    let par = Parallelism::new(2, 2);
+    let shared = shared_for(churn_builder(Scheme::Coded, par));
+    let mut session = churn_builder(Scheme::Coded, par)
+        .build_with_shared(Box::new(NativeBackend), Arc::clone(&shared))
+        .unwrap();
+    let path = std::env::temp_dir().join("codedfedl_scenario_stream.jsonl");
+    let mut obs = JsonlObserver::create(path.to_str().unwrap()).unwrap();
+    let summary = session.run_observed(&mut obs).unwrap();
+    let events = obs.events();
+    obs.finish().unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut counts = std::collections::BTreeMap::new();
+    for line in text.lines() {
+        let doc = Json::parse(line).unwrap();
+        let ty = doc.get("type").unwrap().as_str().unwrap().to_string();
+        *counts.entry(ty).or_insert(0usize) += 1;
+    }
+    assert_eq!(text.lines().count(), events);
+    assert_eq!(counts.get("round").copied().unwrap_or(0), summary.steps);
+    assert_eq!(counts.get("epoch").copied().unwrap_or(0), summary.epochs);
+    assert_eq!(counts.get("eval").copied().unwrap_or(0), summary.evals);
+    assert!(counts.get("churn").copied().unwrap_or(0) > 0);
+}
+
+#[test]
+fn observer_errors_abort_the_run() {
+    struct Failing;
+    impl RoundObserver for Failing {
+        fn on_round(&mut self, _: &codedfedl::scenario::RoundEvent) -> anyhow::Result<()> {
+            anyhow::bail!("stream sink is full")
+        }
+    }
+    let mut cfg = codedfedl::config::ExperimentConfig::preset("tiny").unwrap();
+    cfg.backend = "native".into();
+    cfg.train.epochs = 1;
+    let mut session = Session::from_config(&cfg).unwrap();
+    let err = session.run_observed(&mut Failing).unwrap_err();
+    assert!(err.to_string().contains("stream sink"), "{err}");
+}
+
+#[test]
+fn joint_scheme_churn_scenario_runs() {
+    // CodedJoint exercises the optimizer-chosen redundancy inside the
+    // churn re-encode path (plan.u from the joint optimization).
+    let par = Parallelism::new(2, 2);
+    let mut session = churn_builder(Scheme::CodedJoint, par)
+        .build_with_backend(Box::new(NativeBackend))
+        .unwrap();
+    let plan = session.setup().plan.clone().unwrap();
+    assert!(plan.u > 0);
+    let mut log = EventLog::new();
+    let summary = session.run_observed(&mut log).unwrap();
+    assert!(summary.steps > 0);
+    assert!(summary.parity_reencodes > 0);
+}

@@ -1,7 +1,13 @@
 //! Integration: end-to-end training over the XLA runtime (tiny profile),
-//! plus native-backend round-parallelism invariants. The XLA tests
-//! require `make artifacts` and skip cleanly when they are absent; the
-//! sharded-determinism tests run everywhere.
+//! plus native-backend round-parallelism invariants and the scenario
+//! redesign's tentpole contract — a static single-cell `Session` is
+//! **bitwise identical** to the legacy `Trainer` path at any
+//! thread/shard count. The XLA tests require `make artifacts` and skip
+//! cleanly when they are absent; everything else runs everywhere.
+
+// The deprecated constructor shims are exercised on purpose: they are
+// the legacy oracles the scenario layer is proven against.
+#![allow(deprecated)]
 
 use std::sync::Arc;
 
@@ -9,6 +15,7 @@ use codedfedl::config::{ExperimentConfig, Scheme};
 use codedfedl::fl::trainer::{SharedData, Trainer};
 use codedfedl::mathx::par::Parallelism;
 use codedfedl::runtime::backend::{ComputeBackend, NativeBackend};
+use codedfedl::scenario::ScenarioBuilder;
 
 fn artifacts_ready() -> bool {
     let ok = std::path::Path::new("artifacts/manifest.json").exists();
@@ -150,6 +157,54 @@ fn sharded_trainer_beta_is_bitwise_identical_across_threads_and_shards() {
                 "{}: eval trajectory diverged at threads={threads} shards={shards}",
                 scheme.name()
             );
+        }
+    }
+}
+
+#[test]
+fn static_scenario_session_is_bitwise_equal_to_legacy_trainer() {
+    // The tentpole acceptance invariant: a static scenario (no churn,
+    // single cell, static rates) must produce bitwise-identical final
+    // beta AND the full eval trajectory (accuracy, loss, sim-time — f64
+    // equality, no tolerance) to the legacy Trainer path, for every
+    // scheme and every (threads, shards) combination.
+    for scheme in [Scheme::Coded, Scheme::Uncoded, Scheme::CodedJoint] {
+        let mut cfg = tiny(scheme, "native");
+        cfg.train.epochs = 4;
+        let backend: Box<dyn ComputeBackend> = Box::new(NativeBackend);
+        let shared = Arc::new(SharedData::build(&cfg, backend.as_ref()).unwrap());
+        for (threads, shards) in [(1, 1), (4, 8), (2, 3)] {
+            let par = Parallelism::new(threads, shards);
+            let mut legacy = Trainer::with_shared_parallelism(
+                &cfg,
+                Box::new(NativeBackend),
+                Arc::clone(&shared),
+                par,
+            )
+            .unwrap();
+            let legacy_report = legacy.run().unwrap();
+
+            let mut session = ScenarioBuilder::from_config(&cfg)
+                .parallelism(par)
+                .build_with_shared(Box::new(NativeBackend), Arc::clone(&shared))
+                .unwrap();
+            assert!(session.scenario().is_static());
+            let session_report = session.run().unwrap();
+
+            assert_eq!(
+                session.beta(),
+                legacy.beta(),
+                "{}: session beta diverged at threads={threads} shards={shards}",
+                scheme.name()
+            );
+            assert_eq!(
+                session_report.records, legacy_report.records,
+                "{}: eval trajectory diverged at threads={threads} shards={shards}",
+                scheme.name()
+            );
+            assert_eq!(session_report.total_sim_time_s, legacy_report.total_sim_time_s);
+            assert_eq!(session_report.deadline_s, legacy_report.deadline_s);
+            assert_eq!(session_report.mean_arrivals, legacy_report.mean_arrivals);
         }
     }
 }
