@@ -1,0 +1,154 @@
+//! Adaptive-control bench: drift-triggered online load re-allocation vs
+//! the static construction plan, on a deterministic drift schedule
+//! (`ramp` rate process — the network gets steadily faster than the
+//! statistics the static plan was solved with, so the static deadline
+//! over-waits every round).
+//!
+//! Before any timing, the acceptance gate runs: the adaptive session
+//! must re-solve at least once and achieve a **lower mean per-round
+//! simulated wall-clock** than the static session of the same
+//! seed/preset (both are deterministic, so this is a hard invariant,
+//! not a statistical one). Then the host-time cells price the control
+//! plane itself (estimators + warm re-solves + mask redraws + parity
+//! re-encodes).
+//!
+//! Emits `BENCH_control.json`. Like the `round` and `scenario` cells,
+//! this bench refuses to write placeholder numbers.
+//!
+//! ```bash
+//! cargo bench --bench control            # full
+//! cargo bench --bench control -- --quick # CI smoke
+//! ```
+
+use codedfedl::benchx::Bencher;
+use codedfedl::config::Scheme;
+use codedfedl::control::ControlPolicy;
+use codedfedl::mathx::par;
+use codedfedl::runtime::backend::NativeBackend;
+use codedfedl::scenario::{EventLog, ScenarioBuilder, SessionSummary};
+use codedfedl::simnet::RateProcess;
+use codedfedl::util::json::Json;
+
+/// The deterministic drift scenario both variants run: 16 clients whose
+/// compute and link rates ramp to 3x the construction-time statistics
+/// over 6 epochs. (16 clients keeps u at the full 10% redundancy of the
+/// tiny profile — at larger populations u_max pins the redundancy
+/// fraction so low that the allocation has no slack to adapt.)
+fn builder(epochs: usize) -> anyhow::Result<ScenarioBuilder> {
+    let mut b = ScenarioBuilder::from_preset("tiny")?;
+    b.set("backend", "native")?;
+    Ok(b
+        .population(16)
+        .steps_per_epoch(2)
+        .epochs(epochs)
+        .scheme(Scheme::Coded)
+        .compute_rates(RateProcess::Ramp { from: 1.0, to: 3.0, ramp_epochs: 6 })
+        .link_rates(RateProcess::Ramp { from: 1.0, to: 3.0, ramp_epochs: 6 }))
+}
+
+fn adaptive(epochs: usize) -> anyhow::Result<ScenarioBuilder> {
+    Ok(builder(epochs)?.adaptive(ControlPolicy::Drift { threshold: 0.05 }))
+}
+
+fn run(b: ScenarioBuilder) -> anyhow::Result<(SessionSummary, usize)> {
+    let mut session = b.build_with_backend(Box::new(NativeBackend))?;
+    let mut log = EventLog::new();
+    let summary = session.run_observed(&mut log)?;
+    let control_events = log.lines.iter().filter(|l| l.starts_with("control ")).count();
+    Ok((summary, control_events))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let epochs = if quick { 10 } else { 14 };
+    let mut b = Bencher::new();
+    b.target_time_s = if quick { 0.0 } else { 0.5 };
+    b.max_iters = if quick { 1 } else { 3 };
+    b.warmup = 0;
+
+    // ---- acceptance gate (deterministic): adaptive re-plans and beats
+    // the static plan on mean per-round simulated wall-clock. ----
+    let (stat, stat_events) = run(builder(epochs)?)?;
+    let (adap, adap_events) = run(adaptive(epochs)?)?;
+    assert_eq!(stat.replans, 0, "static session must never re-plan");
+    assert_eq!(stat_events, 0, "static session must stream no control events");
+    assert!(adap.replans >= 1, "drift policy never re-planned on the ramp schedule");
+    assert_eq!(adap_events, adap.replans, "every re-plan must stream a ControlEvent");
+    let mean_static = stat.total_sim_time_s / stat.steps as f64;
+    let mean_adaptive = adap.total_sim_time_s / adap.steps as f64;
+    assert!(
+        mean_adaptive <= mean_static,
+        "adaptive mean round {mean_adaptive:.4}s exceeds static {mean_static:.4}s"
+    );
+    println!(
+        "gate passed: {} re-plans, mean round {:.4}s adaptive vs {:.4}s static (x{:.2} faster)",
+        adap.replans,
+        mean_adaptive,
+        mean_static,
+        mean_static / mean_adaptive
+    );
+
+    // ---- host-time cells: what the control plane itself costs. ----
+    let static_name = format!("control n=16 static session ({epochs} epochs)");
+    b.bench(&static_name, || {
+        std::hint::black_box(run(builder(epochs).unwrap()).unwrap());
+    });
+    let adaptive_name = format!("control n=16 drift session ({epochs} epochs)");
+    b.bench(&adaptive_name, || {
+        std::hint::black_box(run(adaptive(epochs).unwrap()).unwrap());
+    });
+
+    b.report("adaptive control plane (drift-triggered vs static allocation)");
+    let mean = |name: &str| {
+        b.results().iter().find(|r| r.name == name).map(|r| r.mean_s).unwrap_or(f64::NAN)
+    };
+    let overhead = mean(&adaptive_name) / mean(&static_name);
+    println!(
+        "\nadaptive/static host-time ratio: x{overhead:.3} (controller + re-solves + re-encodes)"
+    );
+    println!(
+        "simulated mean round: {mean_adaptive:.4}s adaptive vs {mean_static:.4}s static \
+         (deadline tracking win, host-independent)"
+    );
+
+    // ---- machine-readable trajectory; refuse placeholder output. ----
+    let results: Vec<Json> = b
+        .results()
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("iters", Json::Num(r.iters as f64)),
+                ("mean_s", Json::Num(r.mean_s)),
+                ("p50_s", Json::Num(r.p50_s)),
+                ("p95_s", Json::Num(r.p95_s)),
+                ("min_s", Json::Num(r.min_s)),
+            ])
+        })
+        .collect();
+    anyhow::ensure!(
+        !results.is_empty()
+            && b.results().iter().all(|r| r.iters >= 1 && r.mean_s.is_finite() && r.mean_s > 0.0),
+        "refusing to write BENCH_control.json without real measurements"
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("control".into())),
+        ("status", Json::Str("measured".into())),
+        ("quick", Json::Bool(quick)),
+        ("clients", Json::Num(16.0)),
+        ("epochs", Json::Num(epochs as f64)),
+        ("threads_knob", Json::Num(par::num_threads() as f64)),
+        ("shards_knob", Json::Num(par::num_shards() as f64)),
+        ("policy", Json::Str("drift:0.05".into())),
+        ("drift_schedule", Json::Str("ramp:1:3:6 (compute + link)".into())),
+        ("replans", Json::Num(adap.replans as f64)),
+        ("mean_round_static_s", Json::Num(mean_static)),
+        ("mean_round_adaptive_s", Json::Num(mean_adaptive)),
+        ("sim_speedup", Json::Num(mean_static / mean_adaptive)),
+        ("host_overhead", Json::Num(overhead)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write("BENCH_control.json", doc.to_string())?;
+    println!("wrote BENCH_control.json");
+    Ok(())
+}

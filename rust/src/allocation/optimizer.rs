@@ -48,6 +48,25 @@ pub fn optimize_deadline(
     target: f64,
     epsilon: f64,
 ) -> Result<AllocationPlan> {
+    Ok(optimize_deadline_warm(models, caps, target, epsilon, None)?.0)
+}
+
+/// [`optimize_deadline`], optionally warm-started from `hint` — the
+/// deadline of a previously-solved plan for nearby statistics (the
+/// adaptive control plane's incremental re-solve). With a hint the
+/// bracket opens geometrically *around the hint* instead of growing from
+/// zero, so when the optimum moved only a little the bisection starts on
+/// a tight interval and hits its early-exit after far fewer aggregate
+/// evaluations. Returns the plan plus the number of aggregate
+/// evaluations spent (re-solve cost diagnostics). `hint = None`
+/// reproduces the cold [`optimize_deadline`] search bit for bit.
+pub fn optimize_deadline_warm(
+    models: &[ClientModel],
+    caps: &[usize],
+    target: f64,
+    epsilon: f64,
+    hint: Option<f64>,
+) -> Result<(AllocationPlan, usize)> {
     assert_eq!(models.len(), caps.len());
     let total_cap: f64 = caps.iter().map(|&c| c as f64).sum();
     if target > total_cap {
@@ -56,26 +75,80 @@ pub fn optimize_deadline(
     if target < 0.0 {
         bail!("negative target {target}");
     }
+    let mut evals = 0usize;
 
-    // Bracket: grow t until the optimized aggregate meets the target.
-    let mut t_lo = 0.0;
-    let mut t_hi = models
-        .iter()
-        .map(|m| 2.0 * m.tau / (1.0 - m.p_fail).max(1e-6))
-        .fold(1e-3, f64::max);
-    let mut guard = 0;
-    while aggregate_at(models, caps, t_hi) < target {
-        t_lo = t_hi;
-        t_hi *= 2.0;
-        guard += 1;
-        if guard > 200 {
-            bail!("deadline bracket failed to close (target {target})");
+    // Bracket the monotone aggregate around the hint when one is given,
+    // else grow from zero exactly as the cold search always has.
+    let mut t_lo;
+    let mut t_hi;
+    match hint {
+        Some(h) if h.is_finite() && h > 0.0 => {
+            evals += 1;
+            if aggregate_at(models, caps, h) >= target {
+                // Optimum at or below the hint: walk the lower edge down.
+                t_hi = h;
+                t_lo = 0.5 * h;
+                let mut guard = 0;
+                loop {
+                    evals += 1;
+                    if aggregate_at(models, caps, t_lo) < target {
+                        break;
+                    }
+                    t_hi = t_lo;
+                    t_lo *= 0.5;
+                    guard += 1;
+                    if t_lo <= f64::MIN_POSITIVE || guard > 200 {
+                        t_lo = 0.0;
+                        break;
+                    }
+                }
+            } else {
+                // Optimum above the hint: walk the upper edge up.
+                t_lo = h;
+                t_hi = 2.0 * h;
+                let mut guard = 0;
+                loop {
+                    evals += 1;
+                    if aggregate_at(models, caps, t_hi) >= target {
+                        break;
+                    }
+                    t_lo = t_hi;
+                    t_hi *= 2.0;
+                    guard += 1;
+                    if guard > 200 {
+                        bail!(
+                            "deadline bracket failed to close around warm hint (target {target})"
+                        );
+                    }
+                }
+            }
+        }
+        _ => {
+            t_lo = 0.0;
+            t_hi = models
+                .iter()
+                .map(|m| 2.0 * m.tau / (1.0 - m.p_fail).max(1e-6))
+                .fold(1e-3, f64::max);
+            let mut guard = 0;
+            loop {
+                evals += 1;
+                if aggregate_at(models, caps, t_hi) >= target {
+                    break;
+                }
+                t_lo = t_hi;
+                t_hi *= 2.0;
+                guard += 1;
+                if guard > 200 {
+                    bail!("deadline bracket failed to close (target {target})");
+                }
+            }
         }
     }
 
     // Binary search the monotone aggregate.
     for _ in 0..96 {
         let mid = 0.5 * (t_lo + t_hi);
+        evals += 1;
         let e = aggregate_at(models, caps, mid);
         if e < target {
             t_lo = mid;
@@ -89,7 +162,7 @@ pub fn optimize_deadline(
     }
     let deadline = t_hi;
 
-    Ok(finalize(models, caps, deadline, 0))
+    Ok((finalize(models, caps, deadline, 0), evals))
 }
 
 /// Assemble the plan at a fixed deadline: integer loads + pnr values.
@@ -125,6 +198,34 @@ pub fn plan_fixed_u(
         bail!("redundancy u={u} exceeds batch {m_batch}");
     }
     let mut plan = optimize_deadline(models, caps, (m_batch - u) as f64, epsilon)?;
+    plan.u = u;
+    Ok(plan)
+}
+
+/// Warm-started fixed-redundancy re-solve: [`plan_fixed_u`], but
+/// bracketing around `warm_deadline` (the deadline of the plan currently
+/// in force). This is the adaptive control plane's incremental re-solve:
+/// when churn or rate drift moves the statistics a little, the optimum
+/// moves a little, and the warm bracket converges in a fraction of the
+/// cold search's aggregate evaluations.
+pub fn replan_fixed_u(
+    models: &[ClientModel],
+    caps: &[usize],
+    m_batch: usize,
+    u: usize,
+    epsilon: f64,
+    warm_deadline: f64,
+) -> Result<AllocationPlan> {
+    if u > m_batch {
+        bail!("redundancy u={u} exceeds batch {m_batch}");
+    }
+    let (mut plan, _evals) = optimize_deadline_warm(
+        models,
+        caps,
+        (m_batch - u) as f64,
+        epsilon,
+        Some(warm_deadline),
+    )?;
     plan.u = u;
     Ok(plan)
 }
@@ -228,6 +329,56 @@ mod tests {
         let t10 = plan_fixed_u(&models, &caps, m_batch, 120, 1.0).unwrap().deadline;
         let t30 = plan_fixed_u(&models, &caps, m_batch, 360, 1.0).unwrap().deadline;
         assert!(t30 < t10, "more parity should allow earlier deadline: {t30} vs {t10}");
+    }
+
+    #[test]
+    fn warm_restart_matches_cold_within_tolerance_and_costs_no_more() {
+        let (models, caps) = fleet(12);
+        let target = 900.0;
+        let (cold, evals_cold) =
+            optimize_deadline_warm(&models, &caps, target, 1.0, None).unwrap();
+        // Warm-started at the cold optimum: same answer, no more evals.
+        let (warm, evals_warm) =
+            optimize_deadline_warm(&models, &caps, target, 1.0, Some(cold.deadline)).unwrap();
+        assert!(
+            (warm.deadline - cold.deadline).abs() <= 1e-6 * cold.deadline,
+            "warm {} vs cold {}",
+            warm.deadline,
+            cold.deadline
+        );
+        assert!(
+            evals_warm <= evals_cold,
+            "warm restart cost more aggregate evals ({evals_warm} > {evals_cold})"
+        );
+        // Cold path through the wrapper is the cold path, exactly.
+        let legacy = optimize_deadline(&models, &caps, target, 1.0).unwrap();
+        assert_eq!(legacy.deadline, cold.deadline);
+        assert_eq!(legacy.loads, cold.loads);
+    }
+
+    #[test]
+    fn warm_replan_tracks_drifted_statistics() {
+        // Clients get 1.5x faster: the warm re-solve from the stale
+        // deadline must land on the fresh (cold) optimum for the new
+        // statistics — and that optimum is strictly earlier.
+        let (models, caps) = fleet(10);
+        let stale = plan_fixed_u(&models, &caps, 1000, 100, 1.0).unwrap();
+        let faster: Vec<ClientModel> = models
+            .iter()
+            .map(|m| ClientModel { mu: m.mu * 1.5, tau: m.tau / 1.5, ..m.clone() })
+            .collect();
+        let fresh = plan_fixed_u(&faster, &caps, 1000, 100, 1.0).unwrap();
+        let rewarm = replan_fixed_u(&faster, &caps, 1000, 100, 1.0, stale.deadline).unwrap();
+        assert!(
+            (rewarm.deadline - fresh.deadline).abs() <= 1e-6 * fresh.deadline,
+            "warm re-solve {} diverged from fresh solve {}",
+            rewarm.deadline,
+            fresh.deadline
+        );
+        assert!(rewarm.deadline < stale.deadline, "faster fleet should shorten t*");
+        assert_eq!(rewarm.u, 100);
+        // Infeasible redundancy still rejected on the warm path.
+        assert!(replan_fixed_u(&faster, &caps, 100, 200, 1.0, stale.deadline).is_err());
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! The closed-loop adaptive load-allocation controller.
+//!
+//! An [`AdaptiveController`] sits between the scenario engine and the
+//! allocation optimizer: it ingests streaming round telemetry (it
+//! implements [`RoundObserver`], and the session additionally feeds it
+//! the realized per-client [`DelayObs`] ground truth), keeps the
+//! [`RateEstimator`] current, and at each epoch boundary decides —
+//! according to its [`ControlPolicy`] — whether to re-solve the paper's
+//! load allocation over the *active* roster, warm-started at the
+//! deadline currently in force
+//! ([`crate::allocation::optimizer::replan_fixed_u`]).
+//!
+//! A decision returns the full-population scatter of the re-solved plan
+//! (absent clients get load 0 / pnr 1) plus the [`ControlEvent`] the
+//! session emits into the observer stream; the session then installs the
+//! plan into the next rounds' `RoundCtx` and re-encodes composite parity
+//! with the new §3.4 weights. All decisions are pure functions of the
+//! (deterministic) telemetry, so adaptive sessions replay bitwise at any
+//! thread/shard count.
+
+use anyhow::{ensure, Result};
+
+use crate::allocation::expected_return::expected_return;
+use crate::allocation::optimizer::{replan_fixed_u, AllocationPlan};
+use crate::control::estimator::RateEstimator;
+use crate::control::policy::ControlPolicy;
+use crate::scenario::observer::{ControlEvent, RoundEvent, RoundObserver};
+use crate::simnet::delay::{ClientModel, DelayObs};
+
+/// One re-plan: the allocation to install plus the event to stream.
+#[derive(Debug, Clone)]
+pub struct ControlDecision {
+    pub plan: AllocationPlan,
+    pub event: ControlEvent,
+}
+
+/// Closed-loop re-planner (see module docs). Owned by the session when
+/// the scenario's [`ControlPolicy`] is not `off`.
+pub struct AdaptiveController {
+    policy: ControlPolicy,
+    est: RateEstimator,
+    /// Per-client slice capacity (`l` rows each).
+    caps: Vec<usize>,
+    epsilon: f64,
+    /// Allocation currently in force (starts as the construction plan).
+    current: AllocationPlan,
+    replans: usize,
+    /// Observer-side diagnostics from the round stream.
+    rounds_seen: usize,
+    arrival_frac: f64,
+}
+
+impl AdaptiveController {
+    /// `base_models` are the construction-time §2.2 statistics the
+    /// estimator is seeded from; `plan` is the construction allocation.
+    pub fn new(
+        policy: ControlPolicy,
+        ewma: f64,
+        base_models: &[ClientModel],
+        caps: Vec<usize>,
+        plan: AllocationPlan,
+        epsilon: f64,
+    ) -> Result<AdaptiveController> {
+        policy.validate()?;
+        ensure!(!policy.is_off(), "an off policy needs no controller");
+        ensure!(
+            base_models.len() == caps.len() && plan.loads.len() == caps.len(),
+            "controller population mismatch: {} models, {} caps, {} loads",
+            base_models.len(),
+            caps.len(),
+            plan.loads.len()
+        );
+        // `ewma` range enforcement lives in RateEstimator::new (panics —
+        // the scenario layer validates it as a Result long before this).
+        Ok(AdaptiveController {
+            policy,
+            est: RateEstimator::new(base_models, ewma),
+            caps,
+            epsilon,
+            current: plan,
+            replans: 0,
+            rounds_seen: 0,
+            arrival_frac: 1.0,
+        })
+    }
+
+    /// The allocation currently in force.
+    pub fn current_plan(&self) -> &AllocationPlan {
+        &self.current
+    }
+
+    /// Re-plans decided so far.
+    pub fn replans(&self) -> usize {
+        self.replans
+    }
+
+    /// The online estimator (diagnostics, tests).
+    pub fn estimator(&self) -> &RateEstimator {
+        &self.est
+    }
+
+    /// EWMA of the per-round arrival fraction seen on the observer
+    /// stream (diagnostics).
+    pub fn observed_arrival_frac(&self) -> f64 {
+        self.arrival_frac
+    }
+
+    /// Rounds observed on the event stream so far (diagnostics).
+    pub fn rounds_seen(&self) -> usize {
+        self.rounds_seen
+    }
+
+    /// Fold one round's realized delays into the estimator (the
+    /// session's per-round ground-truth feed).
+    pub fn observe_delays(&mut self, obs: &[DelayObs]) {
+        self.est.observe_all(obs);
+    }
+
+    /// Estimated aggregate epoch return of the plan in force over the
+    /// `active` roster under `models`.
+    fn estimated_return(&self, models: &[ClientModel], active: &[usize]) -> f64 {
+        active
+            .iter()
+            .map(|&j| {
+                expected_return(&models[j], self.current.loads[j] as f64, self.current.deadline)
+            })
+            .sum()
+    }
+
+    /// Estimated-over-promised return ratio (1.0 = the network still
+    /// matches the plan in force).
+    fn return_ratio(&self, models: &[ClientModel], active: &[usize]) -> f64 {
+        self.estimated_return(models, active) / self.current.expected_return.max(1e-9)
+    }
+
+    /// Epoch-boundary decision. `active` is this epoch's ascending
+    /// roster; `oracle_models` are the ground-truth epoch-effective
+    /// models when the scenario modulates rates (`None` = the base
+    /// population, i.e. rates are static this run).
+    pub fn epoch_decision(
+        &mut self,
+        epoch: usize,
+        active: &[usize],
+        oracle_models: Option<&[ClientModel]>,
+    ) -> Result<Option<ControlDecision>> {
+        // Cadence policies bail before materializing any model vector —
+        // only the drift trigger needs the ratio unconditionally.
+        let (reason, models, ratio) = match &self.policy {
+            ControlPolicy::Off => return Ok(None),
+            ControlPolicy::Oracle { every_epochs } => {
+                if epoch % every_epochs != 0 {
+                    return Ok(None);
+                }
+                let mv: Vec<ClientModel> = match oracle_models {
+                    Some(m) => m.to_vec(),
+                    None => self.est.base().to_vec(),
+                };
+                let r = self.return_ratio(&mv, active);
+                ("oracle", mv, r)
+            }
+            ControlPolicy::Periodic { every_epochs } => {
+                // Epoch 0 has no telemetry yet: re-solving from the seed
+                // estimates would reproduce the construction plan.
+                if epoch == 0 || epoch % every_epochs != 0 {
+                    return Ok(None);
+                }
+                let mv = self.est.models();
+                let r = self.return_ratio(&mv, active);
+                ("periodic", mv, r)
+            }
+            ControlPolicy::Drift { threshold } => {
+                let mv = self.est.models();
+                let r = self.return_ratio(&mv, active);
+                if (r - 1.0).abs() <= *threshold {
+                    return Ok(None);
+                }
+                ("drift", mv, r)
+            }
+        };
+
+        // Re-solve the paper's allocation over the active roster only,
+        // warm-started at the deadline in force; absent clients are
+        // scattered back as load 0 / pnr 1 (they never return).
+        let act_models: Vec<ClientModel> = active.iter().map(|&j| models[j].clone()).collect();
+        let act_caps: Vec<usize> = active.iter().map(|&j| self.caps[j]).collect();
+        let m_act: usize = act_caps.iter().sum();
+        let u = self.current.u;
+        // Strict: u == m_act would re-solve for a zero client-return
+        // target — a degenerate plan (deadline ~0, every load 0) that
+        // silently freezes training instead of failing.
+        ensure!(
+            u < m_act,
+            "redundancy u={u} leaves no client return in the active batch {m_act} \
+             (churn floor too low for adaptive control)"
+        );
+        let sub =
+            replan_fixed_u(&act_models, &act_caps, m_act, u, self.epsilon, self.current.deadline)?;
+        let n = self.caps.len();
+        let mut loads = vec![0usize; n];
+        let mut pnr = vec![1.0f64; n];
+        for (k, &j) in active.iter().enumerate() {
+            loads[j] = sub.loads[k];
+            pnr[j] = sub.pnr[k];
+        }
+        let plan = AllocationPlan {
+            deadline: sub.deadline,
+            loads,
+            pnr,
+            expected_return: sub.expected_return,
+            u,
+        };
+        let prev = self.current.deadline;
+        self.current = plan.clone();
+        self.replans += 1;
+        let event = ControlEvent {
+            epoch,
+            reason: reason.into(),
+            ratio,
+            prev_deadline_s: prev,
+            deadline_s: plan.deadline,
+            active: active.len(),
+            replans: self.replans,
+        };
+        Ok(Some(ControlDecision { plan, event }))
+    }
+}
+
+impl RoundObserver for AdaptiveController {
+    fn on_round(&mut self, ev: &RoundEvent) -> Result<()> {
+        self.rounds_seen += 1;
+        let frac = ev.arrivals as f64 / ev.active.max(1) as f64;
+        self.arrival_frac += 0.2 * (frac - self.arrival_frac);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::optimizer::plan_fixed_u;
+
+    fn fleet(n: usize) -> (Vec<ClientModel>, Vec<usize>) {
+        let models: Vec<ClientModel> = (0..n)
+            .map(|j| ClientModel {
+                mu: 100.0 * 0.8f64.powi((j % 7) as i32),
+                alpha: 2.0,
+                tau: 0.05 * 1.1f64.powi((j % 5) as i32),
+                p_fail: 0.1,
+            })
+            .collect();
+        let caps = vec![100usize; n];
+        (models, caps)
+    }
+
+    fn controller(policy: ControlPolicy) -> (AdaptiveController, Vec<ClientModel>) {
+        let (models, caps) = fleet(10);
+        let plan = plan_fixed_u(&models, &caps, 1000, 100, 1.0).unwrap();
+        let c = AdaptiveController::new(policy, 0.5, &models, caps, plan, 1.0).unwrap();
+        (c, models)
+    }
+
+    /// A noiseless observation at the per-client *mean* delay components
+    /// of `m` sped up by `factor`.
+    fn mean_obs(j: usize, m: &ClientModel, load: usize, factor: f64) -> DelayObs {
+        DelayObs {
+            client: j,
+            load,
+            compute_s: (load as f64 / m.mu) * (1.0 + 1.0 / m.alpha) / factor,
+            comm_s: 2.0 * m.tau / (1.0 - m.p_fail) / factor,
+        }
+    }
+
+    #[test]
+    fn drift_policy_holds_while_the_network_matches_the_plan() {
+        let (mut c, _models) = controller(ControlPolicy::Drift { threshold: 0.05 });
+        let active: Vec<usize> = (0..10).collect();
+        // No telemetry: estimates == assumptions, ratio == 1.
+        for epoch in 0..3 {
+            assert!(c.epoch_decision(epoch, &active, None).unwrap().is_none());
+        }
+        assert_eq!(c.replans(), 0);
+    }
+
+    #[test]
+    fn drift_policy_replans_when_clients_speed_up() {
+        let (mut c, models) = controller(ControlPolicy::Drift { threshold: 0.02 });
+        let active: Vec<usize> = (0..10).collect();
+        let stale = c.current_plan().clone();
+        // Feed noiseless 3x-faster telemetry until the EWMA converges.
+        for _ in 0..30 {
+            let obs: Vec<DelayObs> = (0..10)
+                .map(|j| mean_obs(j, &models[j], stale.loads[j].max(1), 3.0))
+                .collect();
+            c.observe_delays(&obs);
+        }
+        let d = c.epoch_decision(1, &active, None).unwrap().expect("drift should fire");
+        assert!(d.event.ratio > 1.02, "ratio {} did not exceed the band", d.event.ratio);
+        assert_eq!(d.event.reason, "drift");
+        assert_eq!(d.event.replans, 1);
+        assert!(
+            d.plan.deadline < stale.deadline,
+            "3x faster fleet should shorten t*: {} vs {}",
+            d.plan.deadline,
+            stale.deadline
+        );
+        assert_eq!(d.plan.u, stale.u);
+        assert_eq!(c.replans(), 1);
+        // Once re-planned at the new statistics the band closes again.
+        assert!(c.epoch_decision(2, &active, None).unwrap().is_none());
+    }
+
+    #[test]
+    fn drift_policy_replans_when_churn_shrinks_the_roster() {
+        let (mut c, _models) = controller(ControlPolicy::Drift { threshold: 0.1 });
+        // Half the fleet leaves: the active-set return falls far below
+        // what the full-population plan promised.
+        let active: Vec<usize> = (0..5).collect();
+        let d = c.epoch_decision(0, &active, None).unwrap().expect("churn should fire");
+        assert!(d.event.ratio < 0.9, "ratio {}", d.event.ratio);
+        assert_eq!(d.event.active, 5);
+        // Absent clients are scattered back as no-shows.
+        for j in 5..10 {
+            assert_eq!(d.plan.loads[j], 0);
+            assert_eq!(d.plan.pnr[j], 1.0);
+        }
+        assert!(d.plan.loads[..5].iter().any(|&l| l > 0));
+    }
+
+    #[test]
+    fn periodic_policy_fires_on_cadence_only() {
+        let (mut c, _models) = controller(ControlPolicy::Periodic { every_epochs: 2 });
+        let active: Vec<usize> = (0..10).collect();
+        assert!(c.epoch_decision(0, &active, None).unwrap().is_none(), "no telemetry at epoch 0");
+        assert!(c.epoch_decision(1, &active, None).unwrap().is_none());
+        assert!(c.epoch_decision(2, &active, None).unwrap().is_some());
+        assert!(c.epoch_decision(3, &active, None).unwrap().is_none());
+        assert!(c.epoch_decision(4, &active, None).unwrap().is_some());
+        assert_eq!(c.replans(), 2);
+    }
+
+    #[test]
+    fn oracle_policy_uses_the_supplied_ground_truth() {
+        let (mut c, models) = controller(ControlPolicy::Oracle { every_epochs: 1 });
+        let active: Vec<usize> = (0..10).collect();
+        let stale = c.current_plan().clone();
+        let truth: Vec<ClientModel> = models
+            .iter()
+            .map(|m| ClientModel { mu: m.mu * 2.0, tau: m.tau / 2.0, ..m.clone() })
+            .collect();
+        let d = c.epoch_decision(0, &active, Some(&truth)).unwrap().expect("oracle fires");
+        assert_eq!(d.event.reason, "oracle");
+        assert!(d.plan.deadline < stale.deadline);
+    }
+
+    #[test]
+    fn round_observer_tracks_arrival_fraction() {
+        let (mut c, _models) = controller(ControlPolicy::Drift { threshold: 0.1 });
+        assert_eq!(c.observed_arrival_frac(), 1.0);
+        c.on_round(&RoundEvent {
+            epoch: 0,
+            step: 1,
+            batch: 0,
+            sim_time_s: 1.0,
+            step_time_s: 1.0,
+            active: 10,
+            arrivals: 5,
+            stragglers: vec![1, 2],
+        })
+        .unwrap();
+        assert!(c.observed_arrival_frac() < 1.0);
+        assert_eq!(c.rounds_seen(), 1);
+    }
+
+    #[test]
+    fn infeasible_redundancy_is_a_clean_error() {
+        let (models, caps) = fleet(10);
+        let mut plan = plan_fixed_u(&models, &caps, 1000, 100, 1.0).unwrap();
+        plan.u = 150; // more parity than one active client's batch
+        let policy = ControlPolicy::Drift { threshold: 0.1 };
+        let mut c = AdaptiveController::new(policy, 0.5, &models, caps, plan, 1.0).unwrap();
+        let err = c.epoch_decision(0, &[0], None).unwrap_err();
+        assert!(err.to_string().contains("active batch"), "{err}");
+    }
+}

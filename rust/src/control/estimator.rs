@@ -1,0 +1,209 @@
+//! Online per-client delay-statistics estimators.
+//!
+//! The paper's load allocation (eq. 8-10) is computed from *known,
+//! stationary* §2.2 statistics. The scenario layer breaks both
+//! assumptions — churn changes who is present, and time-varying
+//! [`crate::simnet::RateProcess`]es move each client's compute rate
+//! `mu_j` and per-transmission time `tau_j` under the plan's feet. The
+//! [`RateEstimator`] closes that gap: it maintains exponentially-windowed
+//! least-squares (EWMA, the exponential-window MMSE fit) estimates of the
+//! two time-varying per-client rates, reconciled every round against the
+//! delays the simulated network actually realized
+//! ([`crate::simnet::delay::DelayObs`], recorded by the trainer).
+//!
+//! The shape parameters `alpha_j` (compute-vs-memory ratio) and `p_j`
+//! (link erasure probability) are protocol/hardware facts, not load, so
+//! they are treated as known constants; the two rates are then
+//! identifiable from the two observed delay components:
+//!
+//! ```text
+//! E[compute_s / load] = (1/mu)(1 + 1/alpha)   =>  mu  = (1 + 1/alpha) / cpp
+//! E[comm_s]           = 2 tau / (1 - p)       =>  tau = comm (1 - p) / 2
+//! ```
+//!
+//! where `cpp` / `comm` are the EWMA-averaged per-point compute seconds
+//! and per-round communication seconds. Everything is plain f64
+//! arithmetic on the driving thread, so adaptive sessions stay bitwise
+//! reproducible at any thread/shard count.
+
+use crate::simnet::delay::{ClientModel, DelayObs};
+
+/// Exponentially-windowed estimates of each client's effective delay
+/// statistics, seeded from the construction-time (assumed) models.
+#[derive(Debug, Clone)]
+pub struct RateEstimator {
+    /// Construction-time statistics; `alpha`/`p_fail` stay authoritative.
+    base: Vec<ClientModel>,
+    /// EWMA weight on the newest observation, in (0, 1].
+    ewma: f64,
+    /// Per-point compute seconds, exponentially averaged.
+    cpp: Vec<f64>,
+    /// Per-round communication seconds, exponentially averaged.
+    comm: Vec<f64>,
+    /// Observations folded in, per client.
+    seen: Vec<usize>,
+}
+
+impl RateEstimator {
+    /// Seed the estimator at the assumed statistics: with zero
+    /// observations the estimated models reproduce `base` (up to f64
+    /// round-trip), so an adaptive plan solved before any telemetry
+    /// arrives equals the static plan.
+    ///
+    /// Panics when `ewma` is outside `(0, 1]` (a programming error —
+    /// the scenario layer validates the knob as a `Result` up front).
+    pub fn new(base: &[ClientModel], ewma: f64) -> RateEstimator {
+        assert!(
+            ewma > 0.0 && ewma <= 1.0,
+            "estimator ewma weight {ewma} outside (0, 1]"
+        );
+        let cpp = base.iter().map(|m| (1.0 + 1.0 / m.alpha) / m.mu).collect();
+        let comm = base.iter().map(|m| 2.0 * m.tau / (1.0 - m.p_fail)).collect();
+        let seen = vec![0; base.len()];
+        RateEstimator { base: base.to_vec(), ewma, cpp, comm, seen }
+    }
+
+    /// Fold one realized delay into the client's estimates.
+    pub fn observe(&mut self, obs: &DelayObs) {
+        let j = obs.client;
+        if j >= self.base.len() {
+            return;
+        }
+        if obs.load > 0 && obs.compute_s > 0.0 {
+            let per_point = obs.compute_s / obs.load as f64;
+            self.cpp[j] += self.ewma * (per_point - self.cpp[j]);
+        }
+        if obs.comm_s > 0.0 {
+            self.comm[j] += self.ewma * (obs.comm_s - self.comm[j]);
+        }
+        self.seen[j] += 1;
+    }
+
+    /// Fold a whole round of realized delays.
+    pub fn observe_all(&mut self, obs: &[DelayObs]) {
+        for o in obs {
+            self.observe(o);
+        }
+    }
+
+    /// The construction-time (assumed) statistics.
+    pub fn base(&self) -> &[ClientModel] {
+        &self.base
+    }
+
+    /// Estimated effective model for client `j`.
+    pub fn model(&self, j: usize) -> ClientModel {
+        let b = &self.base[j];
+        ClientModel {
+            mu: (1.0 + 1.0 / b.alpha) / self.cpp[j],
+            alpha: b.alpha,
+            tau: self.comm[j] * (1.0 - b.p_fail) / 2.0,
+            p_fail: b.p_fail,
+        }
+    }
+
+    /// Estimated effective models for the whole population.
+    pub fn models(&self) -> Vec<ClientModel> {
+        (0..self.base.len()).map(|j| self.model(j)).collect()
+    }
+
+    /// Observations folded in for client `j`.
+    pub fn observations(&self, j: usize) -> usize {
+        self.seen[j]
+    }
+
+    /// Population size.
+    pub fn n(&self) -> usize {
+        self.base.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::rng::Rng;
+
+    fn model() -> ClientModel {
+        ClientModel { mu: 100.0, alpha: 2.0, tau: 0.05, p_fail: 0.1 }
+    }
+
+    fn obs_from(m: &ClientModel, load: usize, rng: &mut Rng) -> DelayObs {
+        let s = m.sample(load, rng);
+        DelayObs { client: 0, load, compute_s: s.compute_s(), comm_s: s.comm_s() }
+    }
+
+    #[test]
+    fn unobserved_estimates_reproduce_the_base_statistics() {
+        let base = vec![model(), ClientModel { mu: 40.0, ..model() }];
+        let est = RateEstimator::new(&base, 0.5);
+        for j in 0..base.len() {
+            let m = est.model(j);
+            assert!((m.mu - base[j].mu).abs() < 1e-9 * base[j].mu);
+            assert!((m.tau - base[j].tau).abs() < 1e-9 * base[j].tau);
+            assert_eq!(m.alpha, base[j].alpha);
+            assert_eq!(m.p_fail, base[j].p_fail);
+            assert_eq!(est.observations(j), 0);
+        }
+    }
+
+    #[test]
+    fn converges_near_the_true_rates() {
+        // Reconciliation against ground truth: feeding realized §2.2
+        // samples drives the estimates to the generating statistics.
+        let truth = model();
+        let stale = ClientModel { mu: 30.0, tau: 0.2, ..model() };
+        let mut est = RateEstimator::new(&[stale], 0.3);
+        let mut rng = Rng::new(7);
+        for _ in 0..400 {
+            est.observe(&obs_from(&truth, 50, &mut rng));
+        }
+        let m = est.model(0);
+        assert!(
+            (m.mu - truth.mu).abs() < 0.25 * truth.mu,
+            "mu estimate {} vs truth {}",
+            m.mu,
+            truth.mu
+        );
+        assert!(
+            (m.tau - truth.tau).abs() < 0.25 * truth.tau,
+            "tau estimate {} vs truth {}",
+            m.tau,
+            truth.tau
+        );
+        assert_eq!(est.observations(0), 400);
+    }
+
+    #[test]
+    fn tracks_drift_toward_faster_rates() {
+        let base = model();
+        let mut est = RateEstimator::new(&[base.clone()], 0.5);
+        let faster = ClientModel { mu: base.mu * 2.0, tau: base.tau / 2.0, ..base.clone() };
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            est.observe(&obs_from(&faster, 40, &mut rng));
+        }
+        let m = est.model(0);
+        assert!(m.mu > 1.5 * base.mu, "mu did not track the speedup: {}", m.mu);
+        assert!(m.tau < 0.75 * base.tau, "tau did not track the speedup: {}", m.tau);
+    }
+
+    #[test]
+    fn zero_load_and_out_of_range_observations_are_safe() {
+        let mut est = RateEstimator::new(&[model()], 0.5);
+        let before = est.model(0);
+        // Zero load carries no compute information; comm still updates.
+        est.observe(&DelayObs { client: 0, load: 0, compute_s: 0.0, comm_s: 0.11 });
+        let after = est.model(0);
+        assert_eq!(after.mu, before.mu);
+        assert_ne!(after.tau, before.tau);
+        // Unknown client ids are ignored outright.
+        est.observe(&DelayObs { client: 99, load: 10, compute_s: 1.0, comm_s: 1.0 });
+        assert_eq!(est.n(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "ewma")]
+    fn rejects_bad_ewma_weight() {
+        RateEstimator::new(&[model()], 0.0);
+    }
+}

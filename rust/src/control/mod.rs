@@ -1,0 +1,52 @@
+//! Adaptive control plane: online load re-allocation driven by streaming
+//! round telemetry.
+//!
+//! CodedFedL's headline result is the analytical load allocation `l*_j`
+//! (paper eq. 8-10) — computed once, from *known and stationary* §2.2
+//! delay statistics. The scenario layer deliberately breaks both
+//! assumptions: churn changes who is present every epoch, and
+//! time-varying [`crate::simnet::RateProcess`]es move the compute and
+//! link rates the plan was solved for. This module closes the loop:
+//!
+//! ```text
+//! RoundObserver events + realized DelayObs      (streaming telemetry)
+//!        │
+//!        ▼
+//! RateEstimator            windowed-MMSE / EWMA estimates of mu_j, tau_j
+//!        │                 reconciled against the realized simnet delays
+//!        ▼
+//! ControlPolicy            off | oracle[:K] | periodic:K | drift[:θ]
+//!        │                 (re-plan trigger: cadence or estimated-return
+//!        ▼                  drift of the plan in force)
+//! replan_fixed_u           warm-started incremental re-solve of eq. 10
+//!        │                 over the *active* roster
+//!        ▼
+//! RoundCtx plan/mask override + parity re-encode (ReencodeCache path)
+//!        │
+//!        ▼
+//! ControlEvent             streamed to every observer
+//! ```
+//!
+//! * [`RateEstimator`] — per-client online estimates of the two
+//!   time-varying rates, seeded from the assumed statistics.
+//! * [`ControlPolicy`] — when to re-plan (the policy suite experiments
+//!   compare: static baseline, ground-truth oracle, periodic, drift).
+//! * [`AdaptiveController`] — the closed loop: implements
+//!   [`crate::scenario::RoundObserver`], owns estimator + policy + the
+//!   plan in force, and produces [`ControlDecision`]s at epoch
+//!   boundaries.
+//!
+//! Sessions opt in through
+//! [`crate::scenario::ScenarioBuilder::adaptive`] (spec key
+//! `scenario.adaptive`, CLI `scenario --adaptive <policy>`). Everything
+//! runs on the driving thread from deterministic telemetry, so adaptive
+//! sessions are bitwise reproducible at any thread/shard count, and an
+//! `off` policy is bitwise-identical to a plain session.
+
+pub mod controller;
+pub mod estimator;
+pub mod policy;
+
+pub use controller::{AdaptiveController, ControlDecision};
+pub use estimator::RateEstimator;
+pub use policy::ControlPolicy;

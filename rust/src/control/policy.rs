@@ -1,0 +1,141 @@
+//! Adaptive load-allocation policies: *when* the control plane re-solves
+//! the paper's allocation.
+//!
+//! The policy suite spans the comparison an experiment wants to run:
+//!
+//! * [`ControlPolicy::Off`] — the paper's setting: the construction-time
+//!   plan stays in force for the whole run (the static baseline; an
+//!   adaptive session with this policy is bitwise-identical to a plain
+//!   session).
+//! * [`ControlPolicy::Oracle`] — re-solve on a fixed cadence from the
+//!   *ground-truth* epoch-effective delay models the simulator used
+//!   (perfect information: the upper bound adaptive tracking is judged
+//!   against).
+//! * [`ControlPolicy::Periodic`] — re-solve on a fixed cadence from the
+//!   online estimates (no trigger intelligence, pure re-planning cost).
+//! * [`ControlPolicy::Drift`] — re-solve only when the estimated epoch
+//!   return of the plan in force deviates from what the plan promised by
+//!   more than a relative threshold (churn shrinking the roster or rate
+//!   drift both move the ratio off 1).
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// When to re-solve the load allocation (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControlPolicy {
+    /// Never re-plan (the static baseline).
+    Off,
+    /// Re-solve every `every_epochs` epochs from the ground-truth
+    /// epoch-effective models (perfect-information upper bound).
+    Oracle { every_epochs: usize },
+    /// Re-solve every `every_epochs` epochs from the online estimates.
+    Periodic { every_epochs: usize },
+    /// Re-solve when `|estimated/promised - 1| > threshold` for the
+    /// epoch return of the plan in force.
+    Drift { threshold: f64 },
+}
+
+impl ControlPolicy {
+    /// `true` when the control plane never engages.
+    pub fn is_off(&self) -> bool {
+        matches!(self, ControlPolicy::Off)
+    }
+
+    /// Parse a compact spec string:
+    ///
+    /// * `off`
+    /// * `oracle` or `oracle:K` (re-solve every K epochs, default 1)
+    /// * `periodic:K`
+    /// * `drift` or `drift:THRESHOLD` (relative band, default 0.1)
+    pub fn parse(s: &str) -> Result<ControlPolicy> {
+        let s = s.trim();
+        if s == "off" || s.is_empty() {
+            return Ok(ControlPolicy::Off);
+        }
+        if s == "oracle" {
+            return Ok(ControlPolicy::Oracle { every_epochs: 1 });
+        }
+        if let Some(rest) = s.strip_prefix("oracle:") {
+            return Ok(ControlPolicy::Oracle {
+                every_epochs: rest.trim().parse().context("oracle: bad epoch cadence")?,
+            });
+        }
+        if let Some(rest) = s.strip_prefix("periodic:") {
+            return Ok(ControlPolicy::Periodic {
+                every_epochs: rest.trim().parse().context("periodic: bad epoch cadence")?,
+            });
+        }
+        if s == "drift" {
+            return Ok(ControlPolicy::Drift { threshold: 0.1 });
+        }
+        if let Some(rest) = s.strip_prefix("drift:") {
+            return Ok(ControlPolicy::Drift {
+                threshold: rest.trim().parse().context("drift: bad threshold")?,
+            });
+        }
+        bail!(
+            "unknown control policy '{s}' (expected off | oracle[:K] | periodic:K | \
+             drift[:THRESHOLD])"
+        )
+    }
+
+    /// Compact display name (logs, JSONL headers, round-trips `parse`).
+    pub fn spec(&self) -> String {
+        match self {
+            ControlPolicy::Off => "off".into(),
+            ControlPolicy::Oracle { every_epochs } => format!("oracle:{every_epochs}"),
+            ControlPolicy::Periodic { every_epochs } => format!("periodic:{every_epochs}"),
+            ControlPolicy::Drift { threshold } => format!("drift:{threshold}"),
+        }
+    }
+
+    /// Sanity-check parameters.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            ControlPolicy::Off => {}
+            ControlPolicy::Oracle { every_epochs } | ControlPolicy::Periodic { every_epochs } => {
+                ensure!(*every_epochs >= 1, "re-solve cadence must be >= 1 epoch");
+            }
+            ControlPolicy::Drift { threshold } => {
+                ensure!(
+                    threshold.is_finite() && *threshold > 0.0 && *threshold < 1.0,
+                    "drift threshold {threshold} outside (0, 1)"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["off", "oracle:1", "oracle:4", "periodic:2", "drift:0.1", "drift:0.05"] {
+            let p = ControlPolicy::parse(s).unwrap();
+            assert_eq!(ControlPolicy::parse(&p.spec()).unwrap(), p);
+        }
+        assert_eq!(
+            ControlPolicy::parse("oracle").unwrap(),
+            ControlPolicy::Oracle { every_epochs: 1 }
+        );
+        assert_eq!(ControlPolicy::parse("drift").unwrap(), ControlPolicy::Drift { threshold: 0.1 });
+        assert_eq!(ControlPolicy::parse("").unwrap(), ControlPolicy::Off);
+        assert!(ControlPolicy::parse("sometimes").is_err());
+        assert!(ControlPolicy::parse("periodic:x").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        assert!(ControlPolicy::Periodic { every_epochs: 0 }.validate().is_err());
+        assert!(ControlPolicy::Oracle { every_epochs: 0 }.validate().is_err());
+        assert!(ControlPolicy::Drift { threshold: 0.0 }.validate().is_err());
+        assert!(ControlPolicy::Drift { threshold: 1.0 }.validate().is_err());
+        assert!(ControlPolicy::Drift { threshold: 0.2 }.validate().is_ok());
+        assert!(ControlPolicy::Off.validate().is_ok());
+        assert!(ControlPolicy::Off.is_off());
+        assert!(!ControlPolicy::Drift { threshold: 0.1 }.is_off());
+    }
+}

@@ -58,7 +58,7 @@ use crate::runtime::backend::{
     ComputeBackend, EncodeClientJob, GradClientOperands, PreparedMatrix,
 };
 use crate::runtime::registry::create_backend;
-use crate::simnet::delay::ClientModel;
+use crate::simnet::delay::{ClientModel, DelayObs};
 use crate::simnet::topology::{
     build_population, build_population_with_topology, Population, Topology,
 };
@@ -98,6 +98,11 @@ pub struct StepOutcome {
     pub step_time_s: f64,
     pub arrivals: usize,
     pub stragglers: Vec<usize>,
+    /// Realized per-client delay components for the round, recorded only
+    /// when [`RoundCtx::record_delays`] is set (the adaptive control
+    /// plane's estimator ground truth; empty and allocation-free on
+    /// every other path).
+    pub delays: Vec<DelayObs>,
 }
 
 /// Scenario-layer overrides for one round, passed by
@@ -115,6 +120,18 @@ pub(crate) struct RoundCtx<'a> {
     /// Re-encoded composite parity for this step (churn path; `None` =
     /// the construction-time parity).
     pub parity: Option<&'a (PreparedMatrix, PreparedMatrix, PreparedMatrix)>,
+    /// Controller-supplied allocation overriding the construction plan
+    /// (adaptive control plane; `None` = the static plan). Drives the
+    /// per-client loads, the round deadline and the §3.4 pnr weights.
+    pub plan: Option<&'a AllocationPlan>,
+    /// Controller-supplied per-client prepared processed-row masks for
+    /// this step. Must accompany `plan`: the masks are drawn from the
+    /// plan's loads, so overriding one without the other would break the
+    /// §3.4 unbiasedness accounting.
+    pub masks: Option<&'a [PreparedMatrix]>,
+    /// Record realized per-client delays into [`StepOutcome::delays`]
+    /// (the adaptive controller's estimator ground truth).
+    pub record_delays: bool,
 }
 
 /// The config fields the shared dataset + embedding state depends on.
@@ -261,19 +278,46 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// The one shim behind the four deprecated constructors: validate
+    /// once (fail fast, before the expensive embedding build), build the
+    /// shared state when the caller did not bring one, and hand off to
+    /// [`Trainer::build_internal`]. Keeping the shared steps here — and
+    /// only here — means the shims cannot drift apart again.
+    fn deprecated_shim(
+        cfg: &ExperimentConfig,
+        backend: Box<dyn ComputeBackend>,
+        shared: Option<Arc<SharedData>>,
+        par: Parallelism,
+    ) -> Result<Trainer> {
+        cfg.validate()?;
+        let shared = match shared {
+            Some(s) => s,
+            None => Arc::new(SharedData::build(cfg, backend.as_ref())?),
+        };
+        Self::build_internal(cfg, backend, shared, par, None)
+    }
+
     /// Build a trainer from a config. The backend is constructed by name
     /// (`cfg.backend`) through the [`crate::runtime::registry`] — `auto`
     /// resolves to XLA when compiled in and artifacts exist, else to the
     /// native pooled kernels.
+    ///
+    /// **Deprecated** — build a [`crate::scenario::Session`] through
+    /// [`crate::scenario::ScenarioBuilder`] instead:
+    /// `ScenarioBuilder::from_config(cfg).build()?` runs the same engine
+    /// bitwise and adds population sizing, churn, rate processes and
+    /// adaptive control.
     #[deprecated(note = "build a scenario::Session with ScenarioBuilder::from_config instead")]
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Trainer> {
         let backend = create_backend(&cfg.backend, cfg)?;
-        cfg.validate()?;
-        let shared = Arc::new(SharedData::build(cfg, backend.as_ref())?);
-        Self::build_internal(cfg, backend, shared, Parallelism::from_env(), None)
+        Self::deprecated_shim(cfg, backend, None, Parallelism::from_env())
     }
 
     /// Build with an explicit backend (tests inject `NativeBackend`).
+    ///
+    /// **Deprecated** — use
+    /// [`crate::scenario::ScenarioBuilder::build_with_backend`] instead;
+    /// a static single-cell scenario reproduces this path bitwise.
     #[deprecated(
         note = "build a scenario::Session with ScenarioBuilder::from_config(..).build_with_backend instead"
     )]
@@ -281,15 +325,16 @@ impl Trainer {
         cfg: &ExperimentConfig,
         backend: Box<dyn ComputeBackend>,
     ) -> Result<Trainer> {
-        cfg.validate()?;
-        let shared = Arc::new(SharedData::build(cfg, backend.as_ref())?);
-        Self::build_internal(cfg, backend, shared, Parallelism::from_env(), None)
+        Self::deprecated_shim(cfg, backend, None, Parallelism::from_env())
     }
 
     /// Build on top of pre-built [`SharedData`] (the sweep fast path:
     /// scheme/redundancy/network variants reuse one embedding), with the
     /// environment's parallelism knobs (`CODEDFEDL_THREADS` /
     /// `CODEDFEDL_SHARDS`).
+    ///
+    /// **Deprecated** — use
+    /// [`crate::scenario::ScenarioBuilder::build_with_shared`] instead.
     #[deprecated(
         note = "build a scenario::Session with ScenarioBuilder::from_config(..).build_with_shared instead"
     )]
@@ -298,7 +343,7 @@ impl Trainer {
         backend: Box<dyn ComputeBackend>,
         shared: Arc<SharedData>,
     ) -> Result<Trainer> {
-        Self::build_internal(cfg, backend, shared, Parallelism::from_env(), None)
+        Self::deprecated_shim(cfg, backend, Some(shared), Parallelism::from_env())
     }
 
     /// [`Trainer::with_shared`] with explicit parallelism. `shards > 1`
@@ -310,6 +355,10 @@ impl Trainer {
     /// so the final model is **bitwise identical** for every
     /// `(threads, shards)` combination — the knobs trade only
     /// wall-clock.
+    ///
+    /// **Deprecated** — use
+    /// [`crate::scenario::ScenarioBuilder::parallelism`] with
+    /// [`crate::scenario::ScenarioBuilder::build_with_shared`] instead.
     #[deprecated(
         note = "build a scenario::Session with ScenarioBuilder::from_config(..).parallelism(..) instead"
     )]
@@ -319,7 +368,7 @@ impl Trainer {
         shared: Arc<SharedData>,
         par: Parallelism,
     ) -> Result<Trainer> {
-        Self::build_internal(cfg, backend, shared, par, None)
+        Self::deprecated_shim(cfg, backend, Some(shared), par)
     }
 
     /// The one real constructor, shared by the deprecated shims and the
@@ -720,11 +769,12 @@ impl Trainer {
     /// the static full-population round (the legacy `Trainer::run`
     /// path); the scenario [`crate::scenario::Session`] passes a
     /// [`RoundCtx`] to narrow the roster to the epoch's active clients,
-    /// swap in epoch-effective delay models, or substitute re-encoded
-    /// parity. The roster is always walked in **ascending client id**,
-    /// so the aggregation order — and with it every f32 rounding — is
-    /// identical whether the roster came from the static default or a
-    /// churn schedule.
+    /// swap in epoch-effective delay models, substitute re-encoded
+    /// parity, or install a controller-supplied allocation (loads +
+    /// deadline + masks). The roster is always walked in **ascending
+    /// client id**, so the aggregation order — and with it every f32
+    /// rounding — is identical whether the roster came from the static
+    /// default or a churn schedule.
     pub(crate) fn step_round(
         &mut self,
         s: usize,
@@ -746,6 +796,8 @@ impl Trainer {
             Some(m) => m,
             None => &self.setup.population.clients,
         };
+        let record = ctx.is_some_and(|c| c.record_delays);
+        let mut delays: Vec<DelayObs> = Vec::new();
         // One beta snapshot per step, shared by every gradient call
         // (§Perf); on the native backend this is a refcount bump, on XLA
         // a single literal build.
@@ -762,6 +814,14 @@ impl Trainer {
                 let mut t_max = 0.0f64;
                 for &j in active {
                     let t = models[j].sample(p.l, &mut self.delay_rng);
+                    if record {
+                        delays.push(DelayObs {
+                            client: j,
+                            load: p.l,
+                            compute_s: t.compute_s(),
+                            comm_s: t.comm_s(),
+                        });
+                    }
                     t_max = t_max.max(t.total());
                 }
                 // Chunked so the resident per-client gradient set stays
@@ -782,11 +842,16 @@ impl Trainer {
                 arrivals = active.len();
                 step_time = t_max;
             }
-            Some(plan) => {
+            Some(setup_plan) => {
                 // CodedFedL: deadline t*, stragglers dropped, parity
                 // added. Arrivals are decided first (sequential delay
                 // stream), then the arrived clients' gradients run as
                 // one sharded batch, summed in ascending client order.
+                // An adaptive controller may substitute the whole
+                // allocation (loads, deadline, §3.4 masks) for the
+                // construction plan; the walk order is unchanged.
+                let plan: &AllocationPlan = ctx.and_then(|c| c.plan).unwrap_or(setup_plan);
+                let step_masks: Option<&[PreparedMatrix]> = ctx.and_then(|c| c.masks);
                 let mut arrived = Vec::with_capacity(active.len());
                 for &j in active {
                     let load = plan.loads[j];
@@ -794,6 +859,14 @@ impl Trainer {
                         continue; // client sits this round out entirely
                     }
                     let t = models[j].sample(load, &mut self.delay_rng);
+                    if record {
+                        delays.push(DelayObs {
+                            client: j,
+                            load,
+                            compute_s: t.compute_s(),
+                            comm_s: t.comm_s(),
+                        });
+                    }
                     if t.total() <= plan.deadline {
                         arrived.push(j);
                     } else {
@@ -805,6 +878,10 @@ impl Trainer {
                         .iter()
                         .map(|&j| {
                             let (px, py, pm) = &self.prep_slices[s][j];
+                            let pm = match step_masks {
+                                Some(m) => &m[j],
+                                None => pm,
+                            };
                             GradClientOperands { x: px, y: py, mask: pm }
                         })
                         .collect();
@@ -828,7 +905,7 @@ impl Trainer {
 
         let g_mean = grad_sum.scale(1.0 / m_batch);
         self.beta = Arc::new(self.backend.update(&self.beta, &g_mean, lr, lam)?);
-        Ok(StepOutcome { step_time_s: step_time, arrivals, stragglers })
+        Ok(StepOutcome { step_time_s: step_time, arrivals, stragglers, delays })
     }
 
     /// Test accuracy + current-batch ridge loss (prepared chunks).

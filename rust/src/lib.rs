@@ -78,6 +78,28 @@
 //!   [`coding::encoder::ReencodeCache`] whenever the active set changes
 //!   (re-reading ~zero slice rows, freshly drawing every generator).
 //!
+//! On top of the streaming observers sits the **adaptive control plane**
+//! ([`control`]): the paper's load allocation `l*_j` is solved from
+//! *known, stationary* delay statistics, but churn and time-varying
+//! rates make those statistics neither — so an
+//! [`control::AdaptiveController`] (enabled per scenario with
+//! `ScenarioBuilder::adaptive` / `scenario.adaptive` spec keys /
+//! `scenario --adaptive`) closes the loop:
+//!
+//! ```text
+//! observer events + realized delays → RateEstimator (windowed MMSE)
+//!     → ControlPolicy trigger (oracle / periodic / drift)
+//!     → warm-started re-solve of eq. 10 over the active roster
+//!     → next epoch's RoundCtx (loads, deadline, §3.4 masks)
+//!     → parity re-encode through the ReencodeCache path
+//!     → ControlEvent in the observer stream
+//! ```
+//!
+//! All control computation runs on the driving thread from
+//! deterministic telemetry, so adaptive sessions replay bitwise at any
+//! thread/shard count, and the `off` policy is bitwise-identical to a
+//! plain session.
+//!
 //! The four `fl::Trainer` constructors (`from_config`, `with_backend`,
 //! `with_shared`, `with_shared_parallelism`) and `SweepRunner::trainer`
 //! are **deprecated shims** over the same engine and will keep working;
@@ -100,6 +122,7 @@ pub mod benchx;
 pub mod cli;
 pub mod coding;
 pub mod config;
+pub mod control;
 pub mod data;
 pub mod fl;
 pub mod mathx;

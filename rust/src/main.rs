@@ -133,6 +133,12 @@ fn scenario_flags() -> Vec<codedfedl::cli::FlagSpec> {
         flag("link-rates", "link rate process: static|diurnal:PERIOD:DEPTH|jitter:SIGMA", None),
         flag("compute-rates", "compute rate process (same forms as link-rates)", None),
         flag("steps", "global mini-batch steps per epoch", None),
+        flag(
+            "adaptive",
+            "control policy: off|oracle[:K]|periodic:K|drift[:THRESH] (spec keys: \
+             scenario.adaptive = <policy>, scenario.adaptive.ewma = <w in (0,1]>)",
+            None,
+        ),
         flag("spec", "scenario spec file (key = value, scenario.* + config keys)", None),
     ]);
     flags
@@ -170,6 +176,7 @@ fn cmd_scenario(args: &codedfedl::cli::Args) -> Result<()> {
         ("scenario.link_rates", "link-rates"),
         ("scenario.compute_rates", "compute-rates"),
         ("scenario.steps_per_epoch", "steps"),
+        ("scenario.adaptive", "adaptive"),
     ] {
         if let Some(v) = args.get(flag_name) {
             b.set(key, v)?;
@@ -183,13 +190,14 @@ fn cmd_scenario(args: &codedfedl::cli::Args) -> Result<()> {
     let mut session = b.build()?;
     let sc = session.scenario().clone();
     println!(
-        "scenario: {} clients over {} cell(s), churn={}, link={}, compute={}, scheme={}, \
-         backend={}, {} epochs x {} steps",
+        "scenario: {} clients over {} cell(s), churn={}, link={}, compute={}, adaptive={}, \
+         scheme={}, backend={}, {} epochs x {} steps",
         sc.cfg.n_clients,
         sc.topology.n_cells(),
         sc.churn.spec(),
         sc.link_rates.spec(),
         sc.compute_rates.spec(),
+        sc.adaptive.spec(),
         sc.cfg.scheme.name(),
         session.backend_name(),
         sc.cfg.train.epochs,
@@ -216,12 +224,14 @@ fn cmd_scenario(args: &codedfedl::cli::Args) -> Result<()> {
     let (reencodes, rows_reread, cache_calls) = session.reencode_stats();
     println!(
         "done: steps={} sim_time={:.1}s host_time={:.2}s final_acc={:.4} \
-         mean_arrival_frac={:.3} parity_reencodes={} (cache: {} encodes, {} rows re-read)",
+         mean_arrival_frac={:.3} replans={} parity_reencodes={} \
+         (cache: {} encodes, {} rows re-read)",
         summary.steps,
         summary.total_sim_time_s,
         summary.host_time_s,
         summary.final_accuracy,
         summary.mean_arrival_frac,
+        summary.replans,
         reencodes,
         cache_calls,
         rows_reread,

@@ -26,6 +26,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::config::{ExperimentConfig, Scheme};
+use crate::control::ControlPolicy;
 use crate::fl::trainer::SharedData;
 use crate::mathx::par::Parallelism;
 use crate::runtime::backend::ComputeBackend;
@@ -51,6 +52,11 @@ pub struct Scenario {
     /// [`crate::coding::encoder::ReencodeCache`] (`false` = the full
     /// re-encode oracle path, kept for the bitwise cache tests).
     pub use_reencode_cache: bool,
+    /// Adaptive control-plane policy (`Off` = the static plan stays in
+    /// force, bitwise the plain session).
+    pub adaptive: ControlPolicy,
+    /// EWMA weight of the control plane's online rate estimators.
+    pub adaptive_ewma: f64,
 }
 
 impl Scenario {
@@ -65,6 +71,8 @@ impl Scenario {
             link_rates: RateProcess::Static,
             par,
             use_reencode_cache: true,
+            adaptive: ControlPolicy::Off,
+            adaptive_ewma: DEFAULT_ADAPTIVE_EWMA,
         }
     }
 
@@ -82,9 +90,30 @@ impl Scenario {
         self.churn.validate(self.cfg.n_clients)?;
         self.compute_rates.validate().context("compute_rates")?;
         self.link_rates.validate().context("link_rates")?;
+        self.adaptive.validate().context("adaptive")?;
+        // The estimator weight is validated even with the policy off: a
+        // spec carrying an invalid knob should fail loudly, not ride
+        // along silently until someone flips the policy on.
+        anyhow::ensure!(
+            self.adaptive_ewma > 0.0 && self.adaptive_ewma <= 1.0,
+            "scenario.adaptive.ewma {} outside (0, 1]",
+            self.adaptive_ewma
+        );
+        if !self.adaptive.is_off() {
+            anyhow::ensure!(
+                self.cfg.scheme != Scheme::Uncoded,
+                "adaptive control re-solves the coded load allocation; \
+                 the uncoded scheme has no plan to adapt (use scenario.adaptive = off)"
+            );
+        }
         Ok(())
     }
 }
+
+/// Default EWMA weight of the adaptive estimators: half the mass on the
+/// newest round (responsive within ~2 epochs of telemetry without
+/// whipsawing on single-round noise).
+const DEFAULT_ADAPTIVE_EWMA: f64 = 0.5;
 
 /// Declarative scenario construction. All setters are chainable; call
 /// [`ScenarioBuilder::build`] to compile + run-prepare.
@@ -99,6 +128,8 @@ pub struct ScenarioBuilder {
     link_rates: RateProcess,
     par: Option<Parallelism>,
     use_reencode_cache: bool,
+    adaptive: ControlPolicy,
+    adaptive_ewma: f64,
 }
 
 impl ScenarioBuilder {
@@ -120,6 +151,8 @@ impl ScenarioBuilder {
             link_rates: RateProcess::Static,
             par: None,
             use_reencode_cache: true,
+            adaptive: ControlPolicy::Off,
+            adaptive_ewma: DEFAULT_ADAPTIVE_EWMA,
         }
     }
 
@@ -245,6 +278,23 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Adaptive control-plane policy ([`crate::control`]): `Off`
+    /// (default) keeps the construction plan in force for the whole run
+    /// — bitwise the plain session; any other policy closes the loop
+    /// from streaming round telemetry to online load re-allocation.
+    /// Requires a coded scheme (the uncoded baseline has no plan).
+    pub fn adaptive(mut self, policy: ControlPolicy) -> ScenarioBuilder {
+        self.adaptive = policy;
+        self
+    }
+
+    /// EWMA weight of the adaptive rate estimators, in (0, 1] (spec key
+    /// `scenario.adaptive.ewma`; default 0.5).
+    pub fn adaptive_ewma(mut self, w: f64) -> ScenarioBuilder {
+        self.adaptive_ewma = w;
+        self
+    }
+
     /// Apply one `key = value` override. Scenario keys are prefixed
     /// `scenario.`; everything else forwards to
     /// [`ExperimentConfig::set`].
@@ -258,6 +308,8 @@ impl ScenarioBuilder {
             "scenario.link_rates" => self.link_rates = RateProcess::parse(v)?,
             "scenario.compute_rates" => self.compute_rates = RateProcess::parse(v)?,
             "scenario.reencode_cache" => self.use_reencode_cache = v.parse()?,
+            "scenario.adaptive" => self.adaptive = ControlPolicy::parse(v)?,
+            "scenario.adaptive.ewma" => self.adaptive_ewma = v.parse()?,
             other => self.cfg.set(other, value)?,
         }
         Ok(())
@@ -295,6 +347,8 @@ impl ScenarioBuilder {
             link_rates: self.link_rates,
             par: self.par.unwrap_or_else(Parallelism::from_env),
             use_reencode_cache: self.use_reencode_cache,
+            adaptive: self.adaptive,
+            adaptive_ewma: self.adaptive_ewma,
         };
         scenario.validate()?;
         Ok(scenario)
@@ -393,10 +447,39 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_spec_keys_parse_and_validate() {
+        let mut b = ScenarioBuilder::from_preset("tiny").unwrap();
+        b.set("scenario.adaptive", "drift:0.08").unwrap();
+        b.set("scenario.adaptive.ewma", "0.3").unwrap();
+        let s = b.compile().unwrap();
+        assert_eq!(s.adaptive, ControlPolicy::Drift { threshold: 0.08 });
+        assert_eq!(s.adaptive_ewma, 0.3);
+        // Default stays off, and off is valid on any scheme.
+        let d = ScenarioBuilder::from_preset("tiny").unwrap().compile().unwrap();
+        assert!(d.adaptive.is_off());
+        // Adaptive control needs a coded plan to adapt.
+        let bad = ScenarioBuilder::from_preset("tiny")
+            .unwrap()
+            .scheme(Scheme::Uncoded)
+            .adaptive(ControlPolicy::Drift { threshold: 0.1 });
+        assert!(bad.compile().is_err());
+        // Bad estimator weight is rejected at compile time — even with
+        // the policy off (no invalid knob rides along silently).
+        let bad_ewma = ScenarioBuilder::from_preset("tiny")
+            .unwrap()
+            .adaptive(ControlPolicy::Periodic { every_epochs: 2 })
+            .adaptive_ewma(1.5);
+        assert!(bad_ewma.compile().is_err());
+        let bad_off = ScenarioBuilder::from_preset("tiny").unwrap().adaptive_ewma(0.0);
+        assert!(bad_off.compile().is_err());
+    }
+
+    #[test]
     fn bad_specs_are_rejected() {
         let mut b = ScenarioBuilder::from_preset("tiny").unwrap();
         assert!(b.set("scenario.churn", "sometimes").is_err());
         assert!(b.set("scenario.cells", "0").is_err());
+        assert!(b.set("scenario.adaptive", "sometimes").is_err());
         assert!(b.set("nope.key", "1").is_err());
         // Churn floor above the population fails at compile time.
         let bad = ScenarioBuilder::from_preset("tiny")

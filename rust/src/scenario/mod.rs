@@ -8,10 +8,18 @@
 //!   topology                                      + churn roster
 //!   churn                                         + rate modulation
 //!   rate processes                                + parity re-encode
+//!   adaptive policy                               + control plane
 //!   backend/parallelism                           │ run_observed
 //!                                                 ▼
 //!                                        RoundObserver events
-//!                                 (rounds, evals, epochs, churn)
+//!                          (rounds, evals, epochs, churn, control)
+//!                                                 │
+//!                              ┌──────────────────┘ (adaptive only)
+//!                              ▼
+//!               AdaptiveController (crate::control)
+//!       observer telemetry + realized delays → rate estimators
+//!              → drift/cadence trigger → warm re-solve of l*_j
+//!              → next epoch's RoundCtx plan + re-encoded parity
 //! ```
 //!
 //! * [`ScenarioBuilder`] — the single construction surface for training:
@@ -42,7 +50,7 @@ pub mod session;
 
 pub use builder::{Scenario, ScenarioBuilder};
 pub use observer::{
-    ChurnEvent, CollectingObserver, ConsoleObserver, EpochEvent, EventLog, Fanout,
+    ChurnEvent, CollectingObserver, ConsoleObserver, ControlEvent, EpochEvent, EventLog, Fanout,
     JsonlObserver, RoundEvent, RoundObserver,
 };
 pub use session::{Session, SessionSummary};

@@ -65,6 +65,28 @@ pub struct ChurnEvent {
     pub active: usize,
 }
 
+/// The adaptive control plane ([`crate::control`]) re-solved the load
+/// allocation. Emitted before the first round of the epoch the new plan
+/// takes effect in (sessions running a non-`off`
+/// [`crate::control::ControlPolicy`] only).
+#[derive(Debug, Clone)]
+pub struct ControlEvent {
+    pub epoch: usize,
+    /// What fired the re-plan: `drift`, `periodic`, or `oracle`.
+    pub reason: String,
+    /// Estimated-over-promised epoch return the trigger saw (1.0 = the
+    /// network still matches the plan in force).
+    pub ratio: f64,
+    /// Deadline `t*` of the plan being replaced.
+    pub prev_deadline_s: f64,
+    /// Deadline `t*` of the re-solved plan.
+    pub deadline_s: f64,
+    /// Active clients the new plan is solved over.
+    pub active: usize,
+    /// Cumulative re-plans including this one.
+    pub replans: usize,
+}
+
 /// Streaming receiver for session progress. All methods default to
 /// no-ops so observers implement only what they consume; errors abort
 /// the run (a full disk should not silently drop the metrics stream).
@@ -79,6 +101,9 @@ pub trait RoundObserver {
         Ok(())
     }
     fn on_churn(&mut self, _ev: &ChurnEvent) -> Result<()> {
+        Ok(())
+    }
+    fn on_control(&mut self, _ev: &ControlEvent) -> Result<()> {
         Ok(())
     }
 }
@@ -213,6 +238,19 @@ impl<W: std::io::Write> RoundObserver for JsonlObserver<W> {
             ("active", Json::Num(ev.active as f64)),
         ]))
     }
+
+    fn on_control(&mut self, ev: &ControlEvent) -> Result<()> {
+        self.emit(Json::obj(vec![
+            ("type", Json::Str("control".into())),
+            ("epoch", Json::Num(ev.epoch as f64)),
+            ("reason", Json::Str(ev.reason.clone())),
+            ("ratio", Json::Num(ev.ratio)),
+            ("prev_deadline_s", Json::Num(ev.prev_deadline_s)),
+            ("deadline_s", Json::Num(ev.deadline_s)),
+            ("active", Json::Num(ev.active as f64)),
+            ("replans", Json::Num(ev.replans as f64)),
+        ]))
+    }
 }
 
 /// Prints evaluation checkpoints and churn transitions to stdout (the
@@ -236,6 +274,14 @@ impl RoundObserver for ConsoleObserver {
             ev.joined.len(),
             ev.left.len(),
             ev.active
+        );
+        Ok(())
+    }
+
+    fn on_control(&mut self, ev: &ControlEvent) -> Result<()> {
+        println!(
+            "  epoch {:>4} control: {} re-plan #{} (return ratio {:.3}) t* {:.3}s -> {:.3}s",
+            ev.epoch, ev.reason, ev.replans, ev.ratio, ev.prev_deadline_s, ev.deadline_s
         );
         Ok(())
     }
@@ -292,6 +338,14 @@ impl RoundObserver for EventLog {
         ));
         Ok(())
     }
+
+    fn on_control(&mut self, ev: &ControlEvent) -> Result<()> {
+        self.lines.push(format!(
+            "control e{} {} r{:?} t{:?}->{:?} act{} n{}",
+            ev.epoch, ev.reason, ev.ratio, ev.prev_deadline_s, ev.deadline_s, ev.active, ev.replans
+        ));
+        Ok(())
+    }
 }
 
 /// Forwards every event to several observers (e.g. collect + stream).
@@ -330,6 +384,13 @@ impl RoundObserver for Fanout<'_> {
     fn on_churn(&mut self, ev: &ChurnEvent) -> Result<()> {
         for o in self.observers.iter_mut() {
             o.on_churn(ev)?;
+        }
+        Ok(())
+    }
+
+    fn on_control(&mut self, ev: &ControlEvent) -> Result<()> {
+        for o in self.observers.iter_mut() {
+            o.on_control(ev)?;
         }
         Ok(())
     }
@@ -372,6 +433,18 @@ mod tests {
         assert_eq!(report.mean_arrivals, 0.9);
     }
 
+    fn control_ev() -> ControlEvent {
+        ControlEvent {
+            epoch: 3,
+            reason: "drift".into(),
+            ratio: 1.25,
+            prev_deadline_s: 2.0,
+            deadline_s: 1.5,
+            active: 12,
+            replans: 2,
+        }
+    }
+
     #[test]
     fn jsonl_lines_parse_back() {
         let mut obs = JsonlObserver::new(Vec::<u8>::new());
@@ -380,17 +453,36 @@ mod tests {
             .unwrap();
         obs.on_churn(&ChurnEvent { epoch: 2, joined: vec![1], left: vec![0, 4], active: 3 })
             .unwrap();
-        assert_eq!(obs.events(), 3);
+        obs.on_control(&control_ev()).unwrap();
+        assert_eq!(obs.events(), 4);
         let buf = obs.finish().unwrap();
         let text = String::from_utf8(buf).unwrap();
         let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines.len(), 3);
+        assert_eq!(lines.len(), 4);
         let round = Json::parse(lines[0]).unwrap();
         assert_eq!(round.get("type").unwrap().as_str().unwrap(), "round");
         assert_eq!(round.get("arrivals").unwrap().as_usize().unwrap(), 4);
         assert_eq!(round.get("stragglers").unwrap().as_usize_vec().unwrap(), vec![3]);
         let churn = Json::parse(lines[2]).unwrap();
         assert_eq!(churn.get("left").unwrap().as_usize_vec().unwrap(), vec![0, 4]);
+        let control = Json::parse(lines[3]).unwrap();
+        assert_eq!(control.get("type").unwrap().as_str().unwrap(), "control");
+        assert_eq!(control.get("reason").unwrap().as_str().unwrap(), "drift");
+        assert_eq!(control.get("replans").unwrap().as_usize().unwrap(), 2);
+        assert!((control.get("deadline_s").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn event_log_and_fanout_carry_control_events() {
+        let mut a = EventLog::new();
+        let mut b = EventLog::new();
+        {
+            let mut fan = Fanout::new(vec![&mut a, &mut b]);
+            fan.on_control(&control_ev()).unwrap();
+        }
+        assert_eq!(a.lines, b.lines);
+        assert!(a.lines[0].starts_with("control e3 drift"), "{}", a.lines[0]);
+        assert!(a.lines[0].contains("n2"));
     }
 
     #[test]

@@ -35,11 +35,13 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
+use crate::allocation::optimizer::AllocationPlan;
 use crate::coding::encoder::{encode_client_rows, CompositeParity, ReencodeCache};
 use crate::coding::weights::build_weights;
 use crate::config::ExperimentConfig;
+use crate::control::AdaptiveController;
 use crate::fl::lr::LrSchedule;
 use crate::fl::trainer::{RoundCtx, SharedData, Trainer, TrainerSetup};
 use crate::mathx::linalg::Matrix;
@@ -53,6 +55,11 @@ use crate::scenario::observer::{
 };
 use crate::simnet::delay::ClientModel;
 
+/// Generator-stream base for control-plane parity re-encodes: keeps the
+/// per-(replan, step, client) forks disjoint from the churn path's
+/// per-(epoch, step, client) forks (no epoch count gets near 2^32).
+const CONTROL_STREAM_BASE: u64 = 1 << 32;
+
 /// End-of-run totals (everything the streaming path needs that is not an
 /// event; the collecting observer combines them into a [`TrainReport`]).
 #[derive(Debug, Clone, Default)]
@@ -65,13 +72,18 @@ pub struct SessionSummary {
     /// Mean per-round fraction of *active* clients that arrived in time
     /// (for static scenarios this is the legacy mean-arrivals number).
     pub mean_arrival_frac: f64,
-    /// Coded deadline `t*` (0 for uncoded).
+    /// Coded deadline `t*` of the allocation in force at run end (the
+    /// controller's latest re-solve on adaptive runs, else the
+    /// construction plan; 0 for uncoded).
     pub deadline_s: f64,
     pub evals: usize,
     /// Last evaluated test accuracy (0 if never evaluated).
     pub final_accuracy: f64,
     /// How many times churn forced a parity re-encode.
     pub parity_reencodes: usize,
+    /// How many times the adaptive control plane re-solved the
+    /// allocation (0 when the policy is `off`).
+    pub replans: usize,
 }
 
 /// One prepared, runnable experiment. Built by
@@ -85,6 +97,8 @@ pub struct Session {
     compute_rate_root: Rng,
     link_rate_root: Rng,
     reencode_root: Rng,
+    /// Seed fork for the control plane's processed-mask redraws.
+    ctrl_root: Rng,
     /// The active set the currently-installed parity was encoded for.
     encoded_for: Vec<usize>,
     /// Per-step re-encoded parity operands (None = construction parity).
@@ -93,6 +107,19 @@ pub struct Session {
     /// lazily on the first re-encode).
     caches: Vec<Vec<ReencodeCache>>,
     reencodes: usize,
+    /// The adaptive control plane (None when the policy is `off` — in
+    /// which case every control field below stays untouched and the
+    /// session is bitwise the plain static/churn session).
+    controller: Option<AdaptiveController>,
+    /// Allocation in force when the controller overrode the
+    /// construction plan.
+    ctrl_plan: Option<AllocationPlan>,
+    /// Controller-era §3.4 processed masks, per (step, client).
+    ctrl_masks: Option<Vec<Vec<Vec<f32>>>>,
+    /// Prepared columns of `ctrl_masks` (what `RoundCtx` hands the
+    /// gradient kernels).
+    ctrl_prep_masks: Option<Vec<Vec<PreparedMatrix>>>,
+    replan_count: usize,
 }
 
 /// Split two ascending id lists into (joined, left).
@@ -143,6 +170,26 @@ impl Session {
             Trainer::build_internal(&scenario.cfg, backend, shared, scenario.par, topo)?;
         let root = Rng::new(scenario.cfg.seed);
         let n = scenario.cfg.n_clients;
+        // The control plane engages only for a non-`off` policy — the
+        // scenario validation already requires a coded scheme then, so a
+        // plan always exists here.
+        let controller = if scenario.adaptive.is_off() {
+            None
+        } else {
+            let plan = trainer
+                .setup()
+                .plan
+                .clone()
+                .ok_or_else(|| anyhow!("adaptive control requires a coded allocation plan"))?;
+            Some(AdaptiveController::new(
+                scenario.adaptive.clone(),
+                scenario.adaptive_ewma,
+                &trainer.setup().population.clients,
+                vec![scenario.cfg.profile.l; n],
+                plan,
+                scenario.cfg.epsilon,
+            )?)
+        };
         Ok(Session {
             trainer,
             // Dedicated seed forks so scenario dynamics never perturb the
@@ -152,10 +199,16 @@ impl Session {
             compute_rate_root: root.fork(8),
             reencode_root: root.fork(9),
             link_rate_root: root.fork(10),
+            ctrl_root: root.fork(11),
             encoded_for: (0..n).collect(),
             parity_override: None,
             caches: Vec::new(),
             reencodes: 0,
+            controller,
+            ctrl_plan: None,
+            ctrl_masks: None,
+            ctrl_prep_masks: None,
+            replan_count: 0,
             scenario,
         })
     }
@@ -213,6 +266,19 @@ impl Session {
         self.trainer.shared_data()
     }
 
+    /// Adaptive-control re-plans decided so far (0 when the policy is
+    /// `off`).
+    pub fn replans(&self) -> usize {
+        self.replan_count
+    }
+
+    /// The allocation currently in force: the controller's latest
+    /// re-solve when one happened, else the construction plan (`None`
+    /// only for uncoded schemes).
+    pub fn active_plan(&self) -> Option<&AllocationPlan> {
+        self.ctrl_plan.as_ref().or_else(|| self.trainer.setup().plan.as_ref())
+    }
+
     /// `(parity re-encodes, slice rows re-read, cached encode calls)` —
     /// the churn-path amortization: a full re-encode would re-read
     /// `encode calls * l` rows; fixed slice row-sets re-read ~0.
@@ -238,7 +304,12 @@ impl Session {
             self.trainer.setup().plan.as_ref().map(|p| p.deadline).unwrap_or(0.0);
         let mut col = CollectingObserver::new(scheme, &dataset, deadline);
         let summary = self.run_observed(&mut col)?;
-        Ok(col.into_report(&summary))
+        let mut report = col.into_report(&summary);
+        // Adaptive runs may have re-solved the deadline mid-run; report
+        // the one in force (identical to the construction value on every
+        // non-adaptive path, so the static report is byte-unchanged).
+        report.deadline_s = summary.deadline_s;
+        Ok(report)
     }
 
     /// Run to completion, streaming every round/eval/epoch/churn event
@@ -257,6 +328,7 @@ impl Session {
             decay_epochs: cfg.train.decay_epochs.clone(),
         };
         let is_static = self.scenario.is_static();
+        let adaptive = self.controller.is_some();
         let rates_static =
             self.scenario.compute_rates.is_static() && self.scenario.link_rates.is_static();
 
@@ -298,38 +370,56 @@ impl Session {
                 )
             };
 
+            // 2b. Adaptive control: with every round of telemetry so far
+            // folded into the estimators, ask the controller whether the
+            // next rounds should run a re-solved allocation. A decision
+            // installs the plan override (masks + parity re-encode) and
+            // streams a ControlEvent *before* the rounds it governs.
+            if let Some(mut ctrl) = self.controller.take() {
+                let decision = ctrl.epoch_decision(epoch, &active, models.as_deref())?;
+                self.controller = Some(ctrl);
+                if let Some(d) = decision {
+                    self.apply_control_plan(d.plan, &active)?;
+                    obs.on_control(&d.event)?;
+                }
+            }
+
             // 3. Re-encode parity when the present data changed.
             let needs_parity =
                 self.trainer.setup().plan.as_ref().map(|p| p.u > 0).unwrap_or(false);
             if needs_parity && active != self.encoded_for {
-                self.reencode_parity(epoch, &active)?;
+                self.reencode_parity(epoch as u64, &active)?;
             }
 
-            // 4. The rounds. Static scenarios pass no context — the
-            // byte-identical legacy path. Dynamic rounds normalize the
-            // gradient mean by the rows actually *present* this epoch
-            // (|active| * l — the standard partial-participation
-            // convention): the round's estimator covers only active
-            // clients' slices, so dividing by the full-population batch
-            // would silently shrink every update by the absenteeism
-            // fraction. With the full roster the two counts coincide
-            // exactly, so the static bitwise contract is untouched.
+            // 4. The rounds. Static scenarios without a controller pass
+            // no context — the byte-identical legacy path. Dynamic
+            // rounds normalize the gradient mean by the rows actually
+            // *present* this epoch (|active| * l — the standard
+            // partial-participation convention): the round's estimator
+            // covers only active clients' slices, so dividing by the
+            // full-population batch would silently shrink every update
+            // by the absenteeism fraction. With the full roster the two
+            // counts coincide exactly, so the static bitwise contract is
+            // untouched.
             let m_round = (active.len() * cfg.profile.l) as f32;
             for s in 0..steps {
-                let out = if is_static {
+                let out = if is_static && !adaptive {
                     self.trainer.step_round(s, lr, lam, m_batch, None)?
                 } else {
                     let ctx = RoundCtx {
                         active: &active,
                         models: models.as_deref(),
                         parity: self.parity_override.as_ref().map(|v| &v[s]),
+                        plan: self.ctrl_plan.as_ref(),
+                        masks: self.ctrl_prep_masks.as_ref().map(|m| m[s].as_slice()),
+                        record_delays: adaptive,
                     };
                     self.trainer.step_round(s, lr, lam, m_round, Some(&ctx))?
                 };
                 sim_time += out.step_time_s;
                 arrival_frac_sum += out.arrivals as f64 / active.len().max(1) as f64;
                 global_step += 1;
-                obs.on_round(&RoundEvent {
+                let ev = RoundEvent {
                     epoch,
                     step: global_step,
                     batch: s,
@@ -338,7 +428,14 @@ impl Session {
                     active: active.len(),
                     arrivals: out.arrivals,
                     stragglers: out.stragglers,
-                })?;
+                };
+                // The controller rides the same observer stream (and
+                // additionally gets the realized delay ground truth).
+                if let Some(c) = self.controller.as_mut() {
+                    c.observe_delays(&out.delays);
+                    c.on_round(&ev)?;
+                }
+                obs.on_round(&ev)?;
                 let last = epoch + 1 == cfg.train.epochs && s + 1 == steps;
                 if global_step % cfg.train.eval_every_steps == 0 || last {
                     let (acc, loss) = self.trainer.evaluate(s)?;
@@ -368,20 +465,85 @@ impl Session {
             total_sim_time_s: sim_time,
             host_time_s: host_t0.elapsed().as_secs_f64(),
             mean_arrival_frac: arrival_frac_sum / global_step.max(1) as f64,
-            deadline_s: self.trainer.setup().plan.as_ref().map(|p| p.deadline).unwrap_or(0.0),
+            deadline_s: self.active_plan().map(|p| p.deadline).unwrap_or(0.0),
             evals,
             final_accuracy: last_acc,
             parity_reencodes: self.reencodes,
+            replans: self.replan_count,
         })
     }
 
+    /// Install a controller-supplied allocation: redraw the §3.4
+    /// processed masks for the new loads (per (step, client), from the
+    /// dedicated control seed fork — a fresh subset per re-plan, exactly
+    /// like the construction pass draws per client), prepare the mask
+    /// columns, and re-encode the composite parity over the active
+    /// clients with the new weights. The re-encode rides the
+    /// [`ReencodeCache`] path, so only the (mandatory) generator redraw
+    /// and the encode kernel are paid — the dense slices are already
+    /// resident from earlier churn/control re-encodes.
+    fn apply_control_plan(&mut self, plan: AllocationPlan, active: &[usize]) -> Result<()> {
+        let steps = self.scenario.cfg.steps_per_epoch();
+        let n = self.scenario.cfg.n_clients;
+        let l = self.scenario.cfg.profile.l;
+        ensure!(
+            plan.loads.len() == n && plan.pnr.len() == n,
+            "control plan population mismatch"
+        );
+        let replan = self.replan_count as u64;
+        let needs_parity = plan.u > 0;
+        let mut masks = vec![vec![Vec::new(); n]; steps];
+        let mut prep = Vec::with_capacity(steps);
+        for (s, masks_s) in masks.iter_mut().enumerate() {
+            let mut row = Vec::with_capacity(n);
+            for (j, slot) in masks_s.iter_mut().enumerate() {
+                let mut mask = vec![0.0f32; l];
+                let load = plan.loads[j].min(l);
+                if load > 0 {
+                    let mut rng = self
+                        .ctrl_root
+                        .fork((replan * steps as u64 + s as u64) * n as u64 + j as u64);
+                    for k in rng.sample_indices(l, load) {
+                        mask[k] = 1.0;
+                    }
+                    row.push(self.trainer.backend().prepare_col(&mask)?);
+                } else {
+                    // Zero-load clients are skipped before the gradient
+                    // gather (`step_round` `continue`s on load == 0), so
+                    // this slot is never read — an empty placeholder
+                    // keeps the per-step index space dense without
+                    // paying a backend prep per absent client.
+                    row.push(PreparedMatrix::Native(Matrix::zeros(0, 0)));
+                }
+                *slot = mask;
+            }
+            prep.push(row);
+        }
+        self.ctrl_masks = Some(masks);
+        self.ctrl_prep_masks = Some(prep);
+        self.ctrl_plan = Some(plan);
+        self.replan_count += 1;
+        // The §3.4 weights changed with the loads/pnr, so the installed
+        // parity no longer matches: re-encode over the active set on a
+        // control-plane generator stream (disjoint from churn epochs).
+        if needs_parity {
+            self.reencode_parity(CONTROL_STREAM_BASE + replan, active)?;
+        }
+        Ok(())
+    }
+
     /// Rebuild the per-step composite parity over `active` clients. The
-    /// generator matrices are freshly drawn per (epoch, step, client)
+    /// generator matrices are freshly drawn per (stream, step, client)
     /// from a dedicated seed fork (re-using a generator across encodes
-    /// would correlate parity noise, Remark 2); the expensive slice
+    /// would correlate parity noise, Remark 2) — churn re-encodes pass
+    /// the epoch as `stream_base`, control-plane re-encodes pass
+    /// `CONTROL_STREAM_BASE + replan index`, so no two installed
+    /// parities ever share a generator stream. The expensive slice
     /// gathers are amortized through the per-(step, client)
     /// [`ReencodeCache`] — slice row-sets never change across epochs, so
-    /// after the first fill the cache re-reads zero rows.
+    /// after the first fill the cache re-reads zero rows. Weights and
+    /// pnr come from the allocation *in force* (the controller's latest
+    /// re-solve when the adaptive plane replaced the construction plan).
     ///
     /// Clients are dispatched one at a time (each encode kernel still
     /// runs multi-threaded panels on the pool); fusing the cached dense
@@ -390,13 +552,14 @@ impl Session {
     /// entry point and is left as a perf follow-up. The re-encode is a
     /// per-epoch cost of `O(|active| * u * l * (q + c))` MACs, far below
     /// a single round's gradient work at the profiles shipped here.
-    fn reencode_parity(&mut self, epoch: usize, active: &[usize]) -> Result<()> {
-        let plan = self
+    fn reencode_parity(&mut self, stream_base: u64, active: &[usize]) -> Result<()> {
+        let setup_plan = self
             .trainer
             .setup()
             .plan
             .clone()
             .expect("reencode_parity is only called on coded plans");
+        let plan = self.ctrl_plan.clone().unwrap_or(setup_plan);
         let p = self.scenario.cfg.profile.clone();
         let steps = self.scenario.cfg.steps_per_epoch();
         let n = self.scenario.cfg.n_clients;
@@ -415,8 +578,13 @@ impl Session {
             for &j in active {
                 // Replay the §3.4 weights from the stored processed mask
                 // (identical to the construction pass: w[k] =
-                // sqrt(pnr_j) on processed rows, 1 elsewhere).
-                let mask = &self.trainer.processed_masks()[s][j];
+                // sqrt(pnr_j) on processed rows, 1 elsewhere). The mask
+                // set in force is the controller's when a re-plan
+                // happened, else the construction masks.
+                let mask: &[f32] = match &self.ctrl_masks {
+                    Some(m) => &m[s][j],
+                    None => &self.trainer.processed_masks()[s][j],
+                };
                 let processed: Vec<usize> = mask
                     .iter()
                     .enumerate()
@@ -424,8 +592,9 @@ impl Session {
                     .collect();
                 let w = build_weights(p.l, &processed, plan.pnr[j]);
                 let idx = &self.trainer.batch_slices()[s][j];
-                let mut rng =
-                    self.reencode_root.fork(((epoch * steps + s) * n + j) as u64);
+                let mut rng = self
+                    .reencode_root
+                    .fork((stream_base * steps as u64 + s as u64) * n as u64 + j as u64);
                 let (xc, yc) = if self.scenario.use_reencode_cache {
                     self.caches[s][j].encode_client_rows(
                         self.trainer.backend(),

@@ -49,6 +49,34 @@ impl DelaySample {
     pub fn total(&self) -> f64 {
         self.compute_det + self.compute_stoch + (self.n_down + self.n_up) as f64 * self.tau
     }
+
+    /// Compute component (deterministic + stochastic memory access).
+    pub fn compute_s(&self) -> f64 {
+        self.compute_det + self.compute_stoch
+    }
+
+    /// Communication component (all down- and uplink transmissions).
+    pub fn comm_s(&self) -> f64 {
+        (self.n_down + self.n_up) as f64 * self.tau
+    }
+}
+
+/// One realized per-client round delay, as the server eventually learns
+/// it: the (possibly late) update carries how long the client actually
+/// computed and transmitted. The trainer records these per round (see
+/// `StepOutcome::delays`) and the adaptive control plane's estimators
+/// ([`crate::control`]) reconcile them against the assumed §2.2
+/// statistics — this is the ground truth the online `mu`/`tau` estimates
+/// are fit to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DelayObs {
+    pub client: usize,
+    /// Rows the client processed this round (its allocated load).
+    pub load: usize,
+    /// Realized compute seconds (deterministic + memory access).
+    pub compute_s: f64,
+    /// Realized communication seconds (down + uplink transmissions).
+    pub comm_s: f64,
 }
 
 impl ClientModel {
@@ -114,6 +142,10 @@ mod tests {
             assert!(s.compute_stoch >= 0.0);
             assert!(s.n_down >= 1 && s.n_up >= 1);
             assert!(s.total() >= 0.5 + 2.0 * 0.05);
+            // Component accessors partition the total exactly.
+            assert_eq!(s.compute_s(), s.compute_det + s.compute_stoch);
+            assert_eq!(s.comm_s(), (s.n_down + s.n_up) as f64 * s.tau);
+            assert_eq!(s.total(), s.compute_s() + s.comm_s());
         }
     }
 

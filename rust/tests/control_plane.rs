@@ -1,0 +1,210 @@
+//! Adaptive control plane end to end: the closed loop from streaming
+//! round telemetry through online rate estimation and warm-started
+//! re-allocation back into the next round's context.
+//!
+//! * acceptance: on a deterministic drift schedule (ramp-up rates) the
+//!   drift policy re-solves at least once, streams `ControlEvent`s, and
+//!   achieves a lower mean per-round simulated wall-clock than the
+//!   static plan of the same seed/preset;
+//! * the policy suite behaves per spec (periodic cadence, oracle
+//!   tracking ground truth);
+//! * churn alone triggers a drift re-plan (the estimated epoch return
+//!   over the shrunken roster falls below what the plan promised).
+//!
+//! (`--adaptive off` bitwise identity and cross-(threads, shards)
+//! determinism of adaptive streams live in `scenario_e2e`, next to the
+//! other determinism regressions.)
+
+use codedfedl::config::Scheme;
+use codedfedl::control::ControlPolicy;
+use codedfedl::runtime::backend::NativeBackend;
+use codedfedl::scenario::{ControlEvent, EventLog, RoundObserver, ScenarioBuilder, SessionSummary};
+use codedfedl::simnet::{ChurnSchedule, RateProcess};
+
+/// Collects control events only (deadline-trajectory assertions).
+#[derive(Default)]
+struct ControlLog {
+    events: Vec<ControlEvent>,
+}
+
+impl RoundObserver for ControlLog {
+    fn on_control(&mut self, ev: &ControlEvent) -> anyhow::Result<()> {
+        self.events.push(ev.clone());
+        Ok(())
+    }
+}
+
+/// Deterministic drift scenario: 16 clients whose compute and link
+/// rates ramp to 3x the construction statistics over 6 epochs. 16
+/// clients keeps `u` at the tiny profile's full 10% redundancy, so the
+/// allocation has real slack to adapt.
+fn ramp_builder(epochs: usize) -> ScenarioBuilder {
+    let mut b = ScenarioBuilder::from_preset("tiny")
+        .unwrap()
+        .scheme(Scheme::Coded)
+        .epochs(epochs)
+        .population(16)
+        .steps_per_epoch(2)
+        .compute_rates(RateProcess::Ramp { from: 1.0, to: 3.0, ramp_epochs: 6 })
+        .link_rates(RateProcess::Ramp { from: 1.0, to: 3.0, ramp_epochs: 6 });
+    b.set("backend", "native").unwrap();
+    b
+}
+
+fn run_summary(b: ScenarioBuilder) -> (SessionSummary, Vec<String>) {
+    let mut session = b.build_with_backend(Box::new(NativeBackend)).unwrap();
+    let mut log = EventLog::new();
+    let summary = session.run_observed(&mut log).unwrap();
+    (summary, log.lines)
+}
+
+#[test]
+fn drift_policy_beats_static_wall_clock_on_a_deterministic_drift_schedule() {
+    // The acceptance invariant: same seed, same preset, same drift
+    // schedule — the adaptive run re-solves as the network speeds up
+    // and its mean per-round simulated wall-clock drops below the
+    // static run's (whose every coded round costs the stale t*).
+    let epochs = 12;
+    let (stat, stat_lines) = run_summary(ramp_builder(epochs));
+    let (adap, adap_lines) =
+        run_summary(ramp_builder(epochs).adaptive(ControlPolicy::Drift { threshold: 0.05 }));
+
+    assert_eq!(stat.replans, 0);
+    assert!(stat_lines.iter().all(|l| !l.starts_with("control ")));
+    assert!(adap.replans >= 1, "drift never fired on a 3x ramp");
+    let control_lines = adap_lines.iter().filter(|l| l.starts_with("control ")).count();
+    assert_eq!(control_lines, adap.replans, "every re-plan must stream a ControlEvent");
+
+    assert_eq!(stat.steps, adap.steps);
+    let mean_static = stat.total_sim_time_s / stat.steps as f64;
+    let mean_adaptive = adap.total_sim_time_s / adap.steps as f64;
+    assert!(
+        mean_adaptive <= mean_static,
+        "adaptive mean round {mean_adaptive} exceeds static {mean_static}"
+    );
+    // The run still learns under the tightened deadlines.
+    assert!(adap.final_accuracy > 0.4, "adaptive accuracy collapsed: {}", adap.final_accuracy);
+}
+
+#[test]
+fn drift_replans_reencode_parity_with_the_new_weights() {
+    // A re-plan changes loads/pnr, so the composite parity must be
+    // rebuilt even without churn — through the cache path.
+    let mut session = ramp_builder(10)
+        .adaptive(ControlPolicy::Drift { threshold: 0.05 })
+        .build_with_backend(Box::new(NativeBackend))
+        .unwrap();
+    let mut log = EventLog::new();
+    let summary = session.run_observed(&mut log).unwrap();
+    assert!(summary.replans >= 1);
+    let (reencodes, _rows, calls) = session.reencode_stats();
+    assert_eq!(
+        reencodes, summary.replans,
+        "every re-plan (and nothing else: no churn here) re-encodes parity"
+    );
+    assert!(calls > 0);
+    // The plan in force is the controller's latest re-solve.
+    let active = session.active_plan().unwrap().clone();
+    let construction = session.setup().plan.clone().unwrap();
+    assert!(
+        active.deadline < construction.deadline,
+        "3x faster network should shorten the in-force deadline: {} vs {}",
+        active.deadline,
+        construction.deadline
+    );
+}
+
+#[test]
+fn periodic_policy_replans_on_its_cadence() {
+    let mut session = ramp_builder(6)
+        .adaptive(ControlPolicy::Periodic { every_epochs: 2 })
+        .build_with_backend(Box::new(NativeBackend))
+        .unwrap();
+    let mut log = ControlLog::default();
+    let summary = session.run_observed(&mut log).unwrap();
+    // Epoch 0 has no telemetry; epochs 2 and 4 fire.
+    assert_eq!(summary.replans, 2, "periodic:2 over 6 epochs");
+    assert_eq!(log.events.len(), 2);
+    assert_eq!(log.events[0].epoch, 2);
+    assert_eq!(log.events[1].epoch, 4);
+    assert!(log.events.iter().all(|e| e.reason == "periodic"));
+    assert_eq!(log.events[1].replans, 2);
+}
+
+#[test]
+fn oracle_policy_tracks_the_ground_truth_ramp() {
+    // Perfect information every epoch: deadlines must follow the ramp
+    // down as the true rates improve.
+    let mut session = ramp_builder(10)
+        .adaptive(ControlPolicy::Oracle { every_epochs: 1 })
+        .build_with_backend(Box::new(NativeBackend))
+        .unwrap();
+    let mut log = ControlLog::default();
+    let summary = session.run_observed(&mut log).unwrap();
+    assert_eq!(summary.replans, 10, "oracle:1 re-solves every epoch");
+    let first = &log.events[0];
+    let last = log.events.last().unwrap();
+    assert_eq!(first.reason, "oracle");
+    // Epoch 0 runs at base rates: the oracle re-solve reproduces the
+    // construction deadline (same statistics, same target).
+    assert!(
+        (first.deadline_s - first.prev_deadline_s).abs() < 0.05 * first.prev_deadline_s,
+        "epoch-0 oracle re-solve moved the deadline: {} -> {}",
+        first.prev_deadline_s,
+        first.deadline_s
+    );
+    assert!(
+        last.deadline_s < 0.7 * first.deadline_s,
+        "oracle did not track the 3x speedup: {} -> {}",
+        first.deadline_s,
+        last.deadline_s
+    );
+}
+
+#[test]
+fn churn_alone_triggers_a_drift_replan() {
+    // Half the roster away pushes the estimated epoch return of the
+    // full-population plan far below what it promised — drift fires on
+    // churn with completely static rates.
+    let mut b = ScenarioBuilder::from_preset("tiny")
+        .unwrap()
+        .scheme(Scheme::Coded)
+        .epochs(6)
+        .population(16)
+        .steps_per_epoch(2)
+        .churn(ChurnSchedule::RotatingBlock { fraction_away: 0.5, period_epochs: 2 });
+    b.set("backend", "native").unwrap();
+    let mut session = b
+        .adaptive(ControlPolicy::Drift { threshold: 0.1 })
+        .build_with_backend(Box::new(NativeBackend))
+        .unwrap();
+    let mut log = ControlLog::default();
+    let summary = session.run_observed(&mut log).unwrap();
+    assert!(summary.replans >= 1, "churn never fired the drift trigger");
+    let first = &log.events[0];
+    assert_eq!(first.epoch, 0, "half the fleet is away from epoch 0");
+    assert!(first.ratio < 0.9, "ratio {}", first.ratio);
+    assert_eq!(first.active, 8);
+    // The re-solved plan concentrates load on the present clients: the
+    // 8 clients absent at the last re-plan were scattered back as 0.
+    let plan = session.active_plan().unwrap();
+    assert!(plan.loads.iter().filter(|&&l| l == 0).count() >= 8, "absent clients keep load 0");
+    assert!(plan.loads.iter().any(|&l| l > 0));
+}
+
+#[test]
+fn uncoded_adaptive_is_rejected_and_off_needs_no_plan() {
+    let bad = ScenarioBuilder::from_preset("tiny")
+        .unwrap()
+        .scheme(Scheme::Uncoded)
+        .adaptive(ControlPolicy::Drift { threshold: 0.1 })
+        .build_with_backend(Box::new(NativeBackend));
+    assert!(bad.is_err());
+    // Off on uncoded stays fine.
+    let mut b = ScenarioBuilder::from_preset("tiny").unwrap().scheme(Scheme::Uncoded).epochs(2);
+    b.set("backend", "native").unwrap();
+    let mut session =
+        b.adaptive(ControlPolicy::Off).build_with_backend(Box::new(NativeBackend)).unwrap();
+    let summary = session.run_observed(&mut EventLog::new()).unwrap();
+    assert_eq!(summary.replans, 0);
+}

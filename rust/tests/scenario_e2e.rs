@@ -13,6 +13,7 @@
 use std::sync::Arc;
 
 use codedfedl::config::Scheme;
+use codedfedl::control::ControlPolicy;
 use codedfedl::fl::trainer::SharedData;
 use codedfedl::mathx::linalg::Matrix;
 use codedfedl::mathx::par::Parallelism;
@@ -82,6 +83,87 @@ fn churn_scenario_is_deterministic_across_threads_and_shards() {
                 scheme.name()
             );
         }
+    }
+}
+
+/// The drift scenario of the adaptive determinism regressions: churn +
+/// a deterministic rate ramp, 16 clients (full 10% redundancy at the
+/// tiny profile).
+fn adaptive_builder(par: Parallelism) -> ScenarioBuilder {
+    let mut b = ScenarioBuilder::from_preset("tiny")
+        .unwrap()
+        .scheme(Scheme::Coded)
+        .epochs(8)
+        .population(16)
+        .steps_per_epoch(2)
+        .churn(ChurnSchedule::RotatingBlock { fraction_away: 0.25, period_epochs: 2 })
+        .compute_rates(RateProcess::Ramp { from: 1.0, to: 2.5, ramp_epochs: 5 })
+        .link_rates(RateProcess::Ramp { from: 1.0, to: 2.5, ramp_epochs: 5 })
+        .parallelism(par);
+    b.set("backend", "native").unwrap();
+    b
+}
+
+#[test]
+fn adaptive_session_is_bitwise_reproducible_across_threads_and_shards() {
+    // Satellite invariant: the adaptive event stream — rounds, evals,
+    // churn AND ControlEvents with exact f64 formatting — plus the
+    // final model replay bitwise at every parallelism setting. All
+    // control state (estimators, triggers, re-solves, mask redraws)
+    // lives on the driving thread and consumes only deterministic
+    // telemetry.
+    let policy = ControlPolicy::Drift { threshold: 0.05 };
+    let shared = shared_for(adaptive_builder(Parallelism::new(1, 1)));
+    let (beta_ref, lines_ref) = run_logged(
+        adaptive_builder(Parallelism::new(1, 1)).adaptive(policy.clone()),
+        &shared,
+    );
+    assert!(
+        lines_ref.iter().any(|l| l.starts_with("control ")),
+        "drift policy produced no ControlEvents: {lines_ref:?}"
+    );
+    for (threads, shards) in [(4, 1), (1, 8), (4, 8), (2, 3)] {
+        let (beta, lines) = run_logged(
+            adaptive_builder(Parallelism::new(threads, shards)).adaptive(policy.clone()),
+            &shared,
+        );
+        assert_eq!(
+            beta, beta_ref,
+            "adaptive final beta diverged at threads={threads} shards={shards}"
+        );
+        assert_eq!(
+            lines, lines_ref,
+            "adaptive event stream diverged at threads={threads} shards={shards}"
+        );
+    }
+}
+
+#[test]
+fn adaptive_off_is_bitwise_identical_to_the_static_session() {
+    // Satellite invariant: `--adaptive off` (explicit) is byte-for-byte
+    // the session that never heard of the control plane — on the plain
+    // static scenario and on a dynamic churn scenario alike.
+    let par = Parallelism::new(2, 2);
+    for dynamic in [false, true] {
+        let make = || {
+            if dynamic {
+                churn_builder(Scheme::Coded, par)
+            } else {
+                let mut b = ScenarioBuilder::from_preset("tiny")
+                    .unwrap()
+                    .scheme(Scheme::Coded)
+                    .epochs(4)
+                    .parallelism(par);
+                b.set("backend", "native").unwrap();
+                b
+            }
+        };
+        let shared = shared_for(make());
+        let (beta_plain, lines_plain) = run_logged(make(), &shared);
+        let (beta_off, lines_off) = run_logged(make().adaptive(ControlPolicy::Off), &shared);
+        assert_eq!(beta_off, beta_plain, "explicit off diverged (dynamic={dynamic})");
+        assert_eq!(lines_off, lines_plain, "explicit off stream diverged (dynamic={dynamic})");
+        assert!(lines_plain.iter().all(|l| !l.starts_with("control ")));
     }
 }
 
