@@ -8,7 +8,11 @@
 //!     where per-call spawn overhead dominated PR 1;
 //!   * `encode` — fused streaming encode-accumulate vs materialize-then-
 //!     add (the fused kernel's peak resident intermediate is 0 bytes and
-//!     does not scale with `u_max`).
+//!     does not scale with `u_max`);
+//!   * `simd` — every detected dispatch path (AVX2/NEON) vs the scalar
+//!     dispatch entry (the seed's unroll-by-8 autovectorizer-friendly
+//!     body) on matmul / gradient / fused-encode shapes, gated bitwise
+//!     against the scalar oracle before timing.
 //!
 //! Every parallel result is asserted **bitwise identical** to its scalar
 //! naive oracle at every thread count before timing, so this bench doubles
@@ -237,6 +241,152 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // --- SIMD dispatch cells: every detected dispatch path vs the
+    // scalar dispatch entry. The scalar table entry *is* the seed's
+    // unroll-by-8 autovectorizer-friendly body, so these ratios measure
+    // exactly "explicit `std::arch` vectors vs what the autovectorizer
+    // produced" on this host. Every forced path is gated bitwise against
+    // the scalar oracle on every cell shape before any timing. Cells run
+    // single-threaded so the ratio is a pure microkernel ratio, not a
+    // scheduling artifact.
+    let simd_json: Json;
+    {
+        use codedfedl::mathx::simd::{self, SimdIsa};
+        let prior = simd::active_isa();
+        // When CODEDFEDL_SIMD pins a path (CI's scalar leg), only the
+        // pinned path is timed against the scalar baseline so the pin
+        // stays honored for the rest of the bench; under `auto` every
+        // detected path is timed.
+        let pinned = std::env::var("CODEDFEDL_SIMD")
+            .ok()
+            .filter(|v| !v.is_empty() && v.to_ascii_lowercase() != "auto");
+        let mut isas: Vec<SimdIsa> = if pinned.is_some() {
+            vec![SimdIsa::Scalar, prior]
+        } else {
+            simd::available()
+        };
+        isas.dedup();
+
+        let s = if quick { 128usize } else { 512usize };
+        let a = Matrix::randn(s, s, 0.0, 1.0, &mut rng);
+        let cm = Matrix::randn(s, s, 0.0, 1.0, &mut rng);
+        let (m_total, gl, gq, gc) = (12_288usize, 256usize, 512usize, 10usize);
+        let gx = Matrix::randn(m_total, gq, 0.0, 1.0, &mut rng);
+        let gy = Matrix::randn(m_total, gc, 0.0, 1.0, &mut rng);
+        let gbeta = Matrix::randn(gq, gc, 0.0, 0.3, &mut rng);
+        let gidx: Vec<usize> = (0..gl).map(|i| (i * 23) % m_total).collect();
+        let gmask: Vec<f32> = (0..gl).map(|i| if i % 5 == 0 { 0.0 } else { 1.0 }).collect();
+        let eg = Matrix::randn(u_max, enc_l, 0.0, 0.05, &mut rng);
+        let em = Matrix::randn(4 * enc_l, enc_q, 0.0, 1.0, &mut rng);
+        let eidx: Vec<usize> = (0..enc_l).map(|i| (i * 13) % em.rows()).collect();
+        let ew: Vec<f32> = (0..enc_l).map(|i| if i % 7 == 0 { 0.0 } else { 0.8 }).collect();
+
+        let run_mm = || par::matmul_with_threads(a.view(), cm.view(), 1);
+        let run_gr = || {
+            par::gather_gradient_with_threads(gx.view(), gy.view(), &gidx, gbeta.view(), &gmask, 1)
+                .unwrap()
+        };
+        let run_enc = || {
+            let mut acc = Matrix::zeros(u_max, enc_q);
+            par::gather_encode_accumulate(eg.view(), &ew, em.view(), &eidx, acc.view_mut())
+                .unwrap();
+            acc
+        };
+
+        simd::force(SimdIsa::Scalar).expect("scalar dispatch path is always available");
+        let (want_mm, want_gr, want_enc) = (run_mm(), run_gr(), run_enc());
+
+        let mm_flops = 2.0 * (s * s * s) as f64;
+        let gr_flops = 4.0 * (gl * gq * gc) as f64;
+        let enc_flops = 2.0 * (u_max * enc_l * enc_q) as f64;
+        let kernels = [
+            ("matmul", format!("simd matmul {s}")),
+            ("gradient", format!("simd grad l={gl} q={gq}")),
+            ("fused-encode", format!("simd encode u={u_max}")),
+        ];
+        for &isa in &isas {
+            simd::force(isa).unwrap();
+            // Bitwise gate: the forced path must reproduce the scalar
+            // oracle exactly on every cell shape before it is timed.
+            assert_eq!(run_mm(), want_mm, "matmul '{}' diverged from scalar", isa.name());
+            assert_eq!(run_gr(), want_gr, "gradient '{}' diverged from scalar", isa.name());
+            assert_eq!(run_enc(), want_enc, "fused encode '{}' diverged from scalar", isa.name());
+            b.bench_with_work(&format!("{} {} 1t", kernels[0].1, isa.name()), Some(mm_flops), || {
+                std::hint::black_box(run_mm());
+            });
+            b.bench_with_work(&format!("{} {} 1t", kernels[1].1, isa.name()), Some(gr_flops), || {
+                std::hint::black_box(run_gr());
+            });
+            b.bench_with_work(
+                &format!("{} {} 1t", kernels[2].1, isa.name()),
+                Some(enc_flops),
+                || {
+                    std::hint::black_box(run_enc());
+                },
+            );
+        }
+        let mut cells: Vec<Json> = Vec::new();
+        for &isa in &isas {
+            for (kernel, prefix) in &kernels {
+                let name = format!("{prefix} {} 1t", isa.name());
+                cells.push(Json::obj(vec![
+                    ("kernel", Json::Str((*kernel).into())),
+                    ("isa", Json::Str(isa.name().into())),
+                    ("mean_s", Json::Num(mean_of(&b, &name))),
+                    (
+                        "ratio_vs_scalar",
+                        Json::Num(speedup(&b, &format!("{prefix} scalar 1t"), &name)),
+                    ),
+                ]));
+            }
+        }
+        for &isa in &isas {
+            if isa == SimdIsa::Scalar {
+                continue;
+            }
+            summaries.push((
+                format!("simd {}", isa.name()),
+                format!(
+                    "matmul x{:.2}, gradient x{:.2}, fused-encode x{:.2} vs scalar autovec (1t)",
+                    speedup(
+                        &b,
+                        &format!("{} scalar 1t", kernels[0].1),
+                        &format!("{} {} 1t", kernels[0].1, isa.name()),
+                    ),
+                    speedup(
+                        &b,
+                        &format!("{} scalar 1t", kernels[1].1),
+                        &format!("{} {} 1t", kernels[1].1, isa.name()),
+                    ),
+                    speedup(
+                        &b,
+                        &format!("{} scalar 1t", kernels[2].1),
+                        &format!("{} {} 1t", kernels[2].1, isa.name()),
+                    ),
+                ),
+            ));
+        }
+        if isas.len() == 1 {
+            let why =
+                if pinned.is_some() { "CODEDFEDL_SIMD pinned" } else { "no vector ISA detected" };
+            summaries.push(("simd".into(), format!("only '{}' timed ({why})", isas[0].name())));
+        }
+        simd_json = Json::obj(vec![
+            ("active", Json::Str(prior.name().into())),
+            ("pinned", pinned.map(Json::Str).unwrap_or(Json::Null)),
+            (
+                "available",
+                Json::Arr(
+                    simd::available().into_iter().map(|i| Json::Str(i.name().into())).collect(),
+                ),
+            ),
+            ("cells", Json::Arr(cells)),
+        ]);
+        // Restore whatever path the rest of the bench (round cells)
+        // should run under.
+        simd::force(prior).expect("restoring a previously active SIMD path cannot fail");
+    }
+
     // --- `round` cell: one trainer-shaped round (per-client masked
     // gradients + fused parity encode over a shared Arc embedding),
     // sequential per-client loop vs the concurrent-job sharded path.
@@ -352,9 +502,10 @@ fn main() -> anyhow::Result<()> {
         println!("  {what:<16} {line}");
     }
     println!(
-        "(host: {} compute threads; pool: {} workers + caller; quick={quick})",
+        "(host: {} compute threads; pool: {} workers + caller; simd={}; quick={quick})",
         par::num_threads(),
         codedfedl::mathx::pool::global().workers(),
+        codedfedl::mathx::simd::active_isa().name(),
     );
 
     // Machine-readable trajectory for cross-PR tracking.
@@ -390,6 +541,7 @@ fn main() -> anyhow::Result<()> {
             "pool_workers",
             Json::Num(codedfedl::mathx::pool::global().workers() as f64),
         ),
+        ("simd", simd_json),
         ("results", Json::Arr(results)),
         ("summary", Json::Arr(summary)),
     ]);

@@ -180,22 +180,15 @@ impl ReencodeCache {
         (self.rows_refreshed, self.calls)
     }
 
-    /// [`encode_client_rows`], but re-reading only the slice rows whose
-    /// index differs from the previous call. The generator is freshly
-    /// sampled from `client_rng` exactly as the uncached path does, so
-    /// the parity output is bitwise identical on the same rng stream.
-    #[allow(clippy::too_many_arguments)]
-    pub fn encode_client_rows(
-        &mut self,
-        backend: &dyn ComputeBackend,
-        x: &Matrix,
-        y: &Matrix,
-        idx: &[usize],
-        weights: &[f32],
-        u: usize,
-        u_max: usize,
-        client_rng: &mut Rng,
-    ) -> Result<(Matrix, Matrix)> {
+    /// Bring the cached dense slice up to date with `idx`, copying in
+    /// only the rows whose index differs from the previous call (counts
+    /// as one encode call in [`ReencodeCache::stats`]). After a
+    /// successful refresh, [`ReencodeCache::slice_x`] /
+    /// [`ReencodeCache::slice_y`] hold exactly `(X[idx], Y[idx])` — this
+    /// is the entry point the batched control/churn re-encode uses to
+    /// refresh a whole client batch before dispatching one dense-batch
+    /// encode pool job.
+    pub fn refresh(&mut self, x: &Matrix, y: &Matrix, idx: &[usize]) -> Result<()> {
         crate::mathx::par::check_indices(idx, x.rows(), "reencode(x)")?;
         crate::mathx::par::check_indices(idx, y.rows(), "reencode(y)")?;
         let l = idx.len();
@@ -223,6 +216,39 @@ impl ReencodeCache {
             }
         }
         self.calls += 1;
+        Ok(())
+    }
+
+    /// The cached dense feature slice `X[idx]` as of the last
+    /// [`ReencodeCache::refresh`].
+    pub fn slice_x(&self) -> &Matrix {
+        &self.x
+    }
+
+    /// The cached dense label slice `Y[idx]` as of the last
+    /// [`ReencodeCache::refresh`].
+    pub fn slice_y(&self) -> &Matrix {
+        &self.y
+    }
+
+    /// [`encode_client_rows`], but re-reading only the slice rows whose
+    /// index differs from the previous call. The generator is freshly
+    /// sampled from `client_rng` exactly as the uncached path does, so
+    /// the parity output is bitwise identical on the same rng stream.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_client_rows(
+        &mut self,
+        backend: &dyn ComputeBackend,
+        x: &Matrix,
+        y: &Matrix,
+        idx: &[usize],
+        weights: &[f32],
+        u: usize,
+        u_max: usize,
+        client_rng: &mut Rng,
+    ) -> Result<(Matrix, Matrix)> {
+        self.refresh(x, y, idx)?;
+        let l = idx.len();
         let g = sample_generator(u, u_max, l, client_rng);
         let xc = backend.encode(&g, weights, &self.x)?;
         let yc = backend.encode(&g, weights, &self.y)?;
@@ -383,6 +409,23 @@ mod tests {
         assert!(cache
             .encode_client_rows(&nb, &x, &y, &[30, 0, 0, 0, 0], &w, 3, 6, &mut base.fork(9))
             .is_err());
+    }
+
+    #[test]
+    fn refresh_exposes_exact_slices() {
+        let mut rng = Rng::new(25);
+        let x = Matrix::randn(10, 3, 0.0, 1.0, &mut rng);
+        let y = Matrix::randn(10, 2, 0.0, 1.0, &mut rng);
+        let mut cache = ReencodeCache::new();
+        let idx = vec![4usize, 0, 9];
+        cache.refresh(&x, &y, &idx).unwrap();
+        assert_eq!(cache.slice_x(), &x.select_rows(&idx));
+        assert_eq!(cache.slice_y(), &y.select_rows(&idx));
+        let idx2 = vec![4usize, 8, 9];
+        cache.refresh(&x, &y, &idx2).unwrap();
+        assert_eq!(cache.slice_x(), &x.select_rows(&idx2));
+        assert_eq!(cache.slice_y(), &y.select_rows(&idx2));
+        assert_eq!(cache.stats(), (4, 2)); // 3 initial + 1 changed row
     }
 
     #[test]

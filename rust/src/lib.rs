@@ -20,8 +20,10 @@
 //! [`mathx::linalg`] provides the owning [`mathx::Matrix`] plus borrowed
 //! [`mathx::MatRef`] / [`mathx::MatMut`] views; [`mathx::par`] provides
 //! cache-blocked kernels parallelized over row panels (matmul, transposed
-//! matmul, the masked gradient, parity encoding) with unroll-by-8
-//! autovectorizer-friendly inner loops, `gather_*` variants that compute
+//! matmul, the masked gradient, parity encoding) whose inner loops bottom
+//! out in the **runtime-dispatched SIMD microkernels** of [`mathx::simd`]
+//! (explicit AVX2 / NEON `std::arch` paths, scalar oracle fallback),
+//! `gather_*` variants that compute
 //! over a row-index set without materializing the gathered slice, and a
 //! fused streaming `encode_accumulate` that folds client parity straight
 //! into the composite block (no `(u_max, q)` intermediate). Every kernel
@@ -52,6 +54,33 @@
 //! **bitwise identical for any thread count, shard count and pool
 //! size**; seeded experiments replay exactly. Worker panics propagate to
 //! the submitting caller and the pool stays usable.
+//!
+//! ## SIMD dispatch
+//!
+//! Matrix elements are `f32` throughout (the `mathx::par` kernels *are*
+//! the reproduction oracle — there is no hidden higher-precision path),
+//! and the innermost mul/add loops of every hot kernel run through one
+//! process-wide [`mathx::simd::SimdDispatch`] table selected **once at
+//! first use** by runtime CPU-feature detection: `avx2` on x86_64 hosts
+//! with AVX2, `neon` on aarch64, `scalar` everywhere else. The scalar
+//! entry is the seed's unroll-by-8 autovectorizer-friendly loop and
+//! remains the reproduction oracle; the vector paths are hand-written
+//! `std::arch` microkernels (`axpy`, a 4-row fused `axpy4`, `scale`)
+//! that issue **separate multiply and add instructions — never FMA**.
+//! FMA contracts `a*b + c` into one rounding where scalar code rounds
+//! twice, so an FMA path would produce different low bits and break the
+//! crate-wide bitwise-replay guarantee; determinism is the contract,
+//! so every dispatch path is *lane-for-lane bitwise equal* to scalar
+//! (asserted by the kernel-oracle property suite and gated in the
+//! benches before any timing). `CODEDFEDL_SIMD={auto,avx2,neon,scalar}`
+//! overrides detection (unknown or undetected values warn once on
+//! stderr and fall back to `auto`); `mathx::simd::force` does the same
+//! in-process. Adding a new ISA path means: a new [`mathx::simd::SimdIsa`]
+//! variant, a `#[target_feature]` module implementing the three
+//! microkernels with separate mul/add (truncating `axpy4` rows to the
+//! global minimum length like scalar does), a `detected()` arm, and a
+//! `table()` row — the property tests then pick it up automatically
+//! from `mathx::simd::available()`.
 //!
 //! ## Running experiments: scenarios, sessions, observers
 //!

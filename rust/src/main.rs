@@ -85,12 +85,13 @@ fn cmd_train(args: &codedfedl::cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
     let mut session = Session::from_config(&cfg)?;
     println!(
-        "training: scheme={} dataset={} preset={} epochs={} backend={}",
+        "training: scheme={} dataset={} preset={} epochs={} backend={} simd={}",
         cfg.scheme.name(),
         cfg.dataset,
         cfg.profile.name,
         cfg.train.epochs,
-        session.backend_name()
+        session.backend_name(),
+        codedfedl::mathx::simd::active_isa().name()
     );
     let report = session.run()?;
     println!(

@@ -2,8 +2,10 @@
 //! function needed by the paper's closed-form load allocation (eq. 14),
 //! the dense linear-algebra toolkit with zero-copy [`linalg::MatRef`] /
 //! [`linalg::MatMut`] views, the cache-blocked multi-threaded kernels in
-//! [`par`] that the native compute path runs on, the persistent worker
-//! pool ([`pool`]) those kernels execute on, and summary statistics.
+//! [`par`] that the native compute path runs on, the runtime-dispatched
+//! SIMD microkernels ([`simd`]) those kernels bottom out in, the
+//! persistent worker pool ([`pool`]) they execute on, and summary
+//! statistics.
 
 pub mod distributions;
 pub mod lambertw;
@@ -11,6 +13,7 @@ pub mod linalg;
 pub mod par;
 pub mod pool;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 
 pub use distributions::{Exponential, Geometric, Normal, Uniform};

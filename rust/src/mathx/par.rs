@@ -10,10 +10,15 @@
 //!   no atomics, no reduction trees — and no per-call thread spawns (the
 //!   PR 1 `std::thread::scope` executor survives only as the
 //!   [`legacy`] bench baseline).
-//! * **Unrolled microkernel.** The inner loops are a single `axpy`-shaped
-//!   microkernel unrolled by 8 ([`axpy8`]) — elementwise independent, so
-//!   the autovectorizer can emit f32x8 SIMD while results stay bitwise
-//!   equal to the scalar `*_naive` oracles in [`crate::mathx::linalg`].
+//! * **Runtime-dispatched SIMD microkernel.** The inner loops bottom out
+//!   in one `axpy`-shaped primitive served by the active
+//!   [`crate::mathx::simd`] dispatch table — explicit AVX2/NEON bodies
+//!   (separate mul/add, no FMA) or the unroll-by-8 scalar oracle,
+//!   selected once per process (`CODEDFEDL_SIMD` overrides). Nonzero
+//!   terms are folded four at a time ([`fold_axpy`]) so the vector paths
+//!   load/store each output row once per group; every path is
+//!   elementwise independent and **bitwise equal** to the scalar
+//!   `*_naive` oracles in [`crate::mathx::linalg`].
 //! * **Determinism.** Within a panel the reduction dimension is walked in
 //!   a fixed order, the k-blocking preserves that order, and the panel
 //!   split is a pure function of the shape — results are **bitwise
@@ -39,6 +44,7 @@ use std::sync::OnceLock;
 use anyhow::{bail, ensure, Result};
 
 use crate::mathx::linalg::{check_gradient_shapes, MatMut, MatRef, Matrix};
+use crate::mathx::simd::{self, SimdDispatch};
 
 /// Reduction-dimension block width: one `KC x n` panel of the right-hand
 /// side stays resident in L1/L2 while it is reused across all rows of an
@@ -165,28 +171,42 @@ where
     crate::mathx::pool::global().run_tasks(tasks, |(f, chunk)| kernel(f, chunk));
 }
 
-/// `out[i] += alpha * b[i]`, unrolled by 8. Every output element is
-/// touched exactly once per call, so this is bitwise identical to the
-/// scalar loop while giving the autovectorizer a clean f32x8 body (no
-/// cross-lane reduction to reassociate).
-#[inline(always)]
-fn axpy8(alpha: f32, b: &[f32], out: &mut [f32]) {
-    let n = out.len().min(b.len());
-    let split = n - n % 8;
-    let (b_main, b_tail) = b[..n].split_at(split);
-    let (o_main, o_tail) = out[..n].split_at_mut(split);
-    for (o, bv) in o_main.chunks_exact_mut(8).zip(b_main.chunks_exact(8)) {
-        o[0] += alpha * bv[0];
-        o[1] += alpha * bv[1];
-        o[2] += alpha * bv[2];
-        o[3] += alpha * bv[3];
-        o[4] += alpha * bv[4];
-        o[5] += alpha * bv[5];
-        o[6] += alpha * bv[6];
-        o[7] += alpha * bv[7];
+/// Fold `out += sum_p coeff(p) * row(p)` for `p in lo..hi` through the
+/// active SIMD dispatch. Zero coefficients are skipped outright (never
+/// multiplied — `0.0 * b` could flip signed zeros), exactly like the
+/// scalar oracle; nonzero terms are grouped four at a time in ascending
+/// `p` order so the vector paths load and store the output row once per
+/// group instead of once per term. Per output element the addition
+/// sequence is exactly the sequential one-term-at-a-time fold, so the
+/// result is bitwise identical to the pre-dispatch `axpy8` loop on every
+/// ISA.
+#[inline]
+fn fold_axpy<'r>(
+    d: &SimdDispatch,
+    lo: usize,
+    hi: usize,
+    coeff: impl Fn(usize) -> f32,
+    row: impl Fn(usize) -> &'r [f32],
+    out: &mut [f32],
+) {
+    let mut alphas = [0.0f32; 4];
+    let mut rows: [&[f32]; 4] = [&[]; 4];
+    let mut pending = 0usize;
+    for p in lo..hi {
+        let a = coeff(p);
+        if a == 0.0 {
+            continue;
+        }
+        alphas[pending] = a;
+        rows[pending] = row(p);
+        pending += 1;
+        if pending == 4 {
+            d.axpy4(alphas, rows, out);
+            pending = 0;
+        }
     }
-    for (o, &bv) in o_tail.iter_mut().zip(b_tail) {
-        *o += alpha * bv;
+    for k in 0..pending {
+        d.axpy(alphas[k], rows[k], out);
     }
 }
 
@@ -262,6 +282,7 @@ fn matmul_panel(
     if n == 0 || panel.rows() == 0 {
         return;
     }
+    let d = simd::active();
     for kb in (0..k).step_by(KC) {
         let ke = (kb + KC).min(k);
         for pr in 0..panel.rows() {
@@ -271,13 +292,7 @@ fn matmul_panel(
             };
             let a_row = a.row(src);
             let out_row = panel.row_mut(pr);
-            for p in kb..ke {
-                let av = a_row[p];
-                if av == 0.0 {
-                    continue;
-                }
-                axpy8(av, b.row(p), out_row);
-            }
+            fold_axpy(&d, kb, ke, |p| a_row[p], |p| b.row(p), out_row);
         }
     }
 }
@@ -304,7 +319,11 @@ pub fn t_matmul_with_threads(a: MatRef<'_>, b: MatRef<'_>, threads: usize) -> Ma
 
 /// Output rows `[first, first + panel.rows())` of `A[idx]^T @ B`. The
 /// reduction walks rows `r` in ascending order regardless of panel
-/// boundaries — bitwise equal to the scalar kernel.
+/// boundaries — bitwise equal to the scalar kernel. Reduction rows are
+/// taken four at a time so each output row is loaded/stored once per
+/// quad when all four coefficients are nonzero; any zero in the quad
+/// falls back to per-term folds in the same ascending order, preserving
+/// the oracle's zero-skip bit for bit.
 fn t_matmul_panel(
     a: MatRef<'_>,
     a_idx: Option<&[usize]>,
@@ -316,21 +335,49 @@ fn t_matmul_panel(
     if n == 0 || panel.rows() == 0 {
         return;
     }
+    let d = simd::active();
     let red = a_idx.map_or(a.rows(), <[usize]>::len);
     debug_assert_eq!(b.rows(), red);
-    for r in 0..red {
-        let src = match a_idx {
-            Some(ix) => ix[r],
-            None => r,
-        };
-        let a_row = a.row(src);
+    let src_of = |r: usize| match a_idx {
+        Some(ix) => ix[r],
+        None => r,
+    };
+    let quads = red - red % 4;
+    for r in (0..quads).step_by(4) {
+        let a_rows = [
+            a.row(src_of(r)),
+            a.row(src_of(r + 1)),
+            a.row(src_of(r + 2)),
+            a.row(src_of(r + 3)),
+        ];
+        let b_rows = [b.row(r), b.row(r + 1), b.row(r + 2), b.row(r + 3)];
+        for pr in 0..panel.rows() {
+            let alphas = [
+                a_rows[0][first + pr],
+                a_rows[1][first + pr],
+                a_rows[2][first + pr],
+                a_rows[3][first + pr],
+            ];
+            if alphas.iter().all(|&av| av != 0.0) {
+                d.axpy4(alphas, b_rows, panel.row_mut(pr));
+            } else {
+                for k in 0..4 {
+                    if alphas[k] != 0.0 {
+                        d.axpy(alphas[k], b_rows[k], panel.row_mut(pr));
+                    }
+                }
+            }
+        }
+    }
+    for r in quads..red {
+        let a_row = a.row(src_of(r));
         let b_row = b.row(r);
         for pr in 0..panel.rows() {
             let av = a_row[first + pr];
             if av == 0.0 {
                 continue;
             }
-            axpy8(av, b_row, panel.row_mut(pr));
+            d.axpy(av, b_row, panel.row_mut(pr));
         }
     }
 }
@@ -347,13 +394,11 @@ pub fn scale_rows_with_threads(a: MatRef<'_>, w: &[f32], threads: usize) -> Matr
     assert_eq!(w.len(), a.rows(), "row-weight length mismatch");
     let mut out = Matrix::zeros(a.rows(), a.cols());
     let t = effective_threads(threads, a.rows(), a.cols());
+    let d = simd::active();
     par_row_panels(out.view_mut(), t, |first, mut panel| {
         for pr in 0..panel.rows() {
             let i = first + pr;
-            let wv = w[i];
-            for (o, &av) in panel.row_mut(pr).iter_mut().zip(a.row(i)) {
-                *o = av * wv;
-            }
+            d.scale(w[i], a.row(i), panel.row_mut(pr));
         }
     });
     out
@@ -428,6 +473,7 @@ fn grad_impl(
     // Rows with a zero mask stay zero and are skipped outright.
     let mut err = Matrix::zeros(rows, c);
     let t1 = effective_threads(threads, rows, q * c);
+    let d = simd::active();
     par_row_panels(err.view_mut(), t1, |first, mut panel| {
         for pr in 0..panel.rows() {
             let i = first + pr;
@@ -441,12 +487,7 @@ fn grad_impl(
             };
             let x_row = x.row(src);
             let out_row = panel.row_mut(pr);
-            for (p, &av) in x_row.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                axpy8(av, beta.row(p), out_row);
-            }
+            fold_axpy(&d, 0, x_row.len(), |p| x_row[p], |p| beta.row(p), out_row);
             for (o, &yv) in out_row.iter_mut().zip(y.row(src)) {
                 *o = (*o - yv) * w;
             }
@@ -554,11 +595,12 @@ fn encode_accumulate_impl(
     );
     let (u, n) = (g.rows(), m.cols());
     let t = effective_threads(threads, u, l * n);
+    let d = simd::active();
     par_row_panels(out, t, |first, mut panel| {
         for pr in 0..panel.rows() {
             let g_row = g.row(first + pr);
             let out_row = panel.row_mut(pr);
-            encode_row_accumulate(g_row, w, m, idx, out_row);
+            encode_row_accumulate(&d, g_row, w, m, idx, out_row);
         }
     });
     Ok(())
@@ -569,23 +611,28 @@ fn encode_accumulate_impl(
 /// every encode path shares).
 #[inline]
 fn encode_row_accumulate(
+    d: &SimdDispatch,
     g_row: &[f32],
     w: &[f32],
     m: MatRef<'_>,
     idx: Option<&[usize]>,
     out_row: &mut [f32],
 ) {
-    for (kk, (&gv, &wv)) in g_row.iter().zip(w).enumerate() {
-        let av = gv * wv;
-        if av == 0.0 {
-            continue;
-        }
-        let src = match idx {
-            Some(ix) => ix[kk],
-            None => kk,
-        };
-        axpy8(av, m.row(src), out_row);
-    }
+    let l = g_row.len().min(w.len());
+    fold_axpy(
+        d,
+        0,
+        l,
+        |k| g_row[k] * w[k],
+        |k| {
+            let src = match idx {
+                Some(ix) => ix[k],
+                None => k,
+            };
+            m.row(src)
+        },
+        out_row,
+    );
 }
 
 /// One client's operands for the batched fused encode: its private
@@ -641,11 +688,82 @@ pub fn encode_accumulate_batch(
         return Ok(());
     }
     let t = effective_threads(threads, u, total_l * n);
+    let d = simd::active();
     par_row_panels(out, t, |first, mut panel| {
         for pr in 0..panel.rows() {
             let out_row = panel.row_mut(pr);
             for task in tasks {
-                encode_row_accumulate(task.g.row(first + pr), task.w, m, Some(task.idx), out_row);
+                encode_row_accumulate(
+                    &d,
+                    task.g.row(first + pr),
+                    task.w,
+                    m,
+                    Some(task.idx),
+                    out_row,
+                );
+            }
+        }
+    });
+    Ok(())
+}
+
+/// One client's operands for the batched **dense** fused encode: its
+/// generator, §3.4 weights, and an already-materialized `(l, n)` source
+/// block (e.g. the `ReencodeCache` slices). Unlike [`EncodeTask`] there
+/// is no shared gathered source — each task streams its own dense block.
+#[derive(Clone, Copy)]
+pub struct DenseEncodeTask<'a> {
+    pub g: MatRef<'a>,
+    pub w: &'a [f32],
+    pub m: MatRef<'a>,
+}
+
+/// Batched dense fused streaming encode:
+/// `out += sum_j G_j @ (w_j .* M_j)`, accumulated in task order — the
+/// dense-source sibling of [`encode_accumulate_batch`], and the one pool
+/// job the control/churn parity re-encode dispatches per client batch
+/// instead of one job per client. Panels split the composite's rows;
+/// within a panel tasks fold in ascending order, so per output element
+/// the addition sequence is exactly the sequential per-client fused
+/// accumulation — **bitwise identical to calling [`encode_accumulate`]
+/// once per task in order**, at any thread count.
+pub fn encode_accumulate_batch_dense(
+    tasks: &[DenseEncodeTask<'_>],
+    out: MatMut<'_>,
+    threads: usize,
+) -> Result<()> {
+    let (u, n) = (out.rows(), out.cols());
+    let mut total_l = 0usize;
+    for (k, task) in tasks.iter().enumerate() {
+        let l = task.m.rows();
+        ensure!(
+            task.g.shape() == (u, l),
+            "dense encode batch task {k}: generator is {:?} but the accumulator has {u} rows \
+             and the source {l}",
+            task.g.shape()
+        );
+        ensure!(
+            task.w.len() == l,
+            "dense encode batch task {k}: weight vector covers {} rows but the source has {l}",
+            task.w.len()
+        );
+        ensure!(
+            task.m.cols() == n,
+            "dense encode batch task {k}: source has {} columns but the accumulator has {n}",
+            task.m.cols()
+        );
+        total_l += l;
+    }
+    if tasks.is_empty() {
+        return Ok(());
+    }
+    let t = effective_threads(threads, u, total_l * n);
+    let d = simd::active();
+    par_row_panels(out, t, |first, mut panel| {
+        for pr in 0..panel.rows() {
+            let out_row = panel.row_mut(pr);
+            for task in tasks {
+                encode_row_accumulate(&d, task.g.row(first + pr), task.w, task.m, None, out_row);
             }
         }
     });
@@ -1084,6 +1202,46 @@ mod tests {
         let bad = [EncodeTask { g: clients[0].0.view(), w: &clients[0].1, idx: &[0, 1] }];
         let mut acc = start.clone();
         let err = encode_accumulate_batch(&bad, m.view(), acc.view_mut(), 2).unwrap_err();
+        assert!(err.to_string().contains("task 0"), "{err}");
+    }
+
+    #[test]
+    fn dense_batched_encode_is_bitwise_equal_to_sequential_fused_accumulation() {
+        let mut rng = Rng::new(22);
+        let (u, n) = (9, 6);
+        let clients: Vec<(Matrix, Vec<f32>, Matrix)> = (0..5)
+            .map(|j| {
+                let l = 3 + 2 * j;
+                let g = Matrix::randn(u, l, 0.0, 0.5, &mut rng);
+                let w: Vec<f32> =
+                    (0..l).map(|k| if k % 4 == 0 { 0.0 } else { 0.9 }).collect();
+                let m = Matrix::randn(l, n, 0.0, 1.0, &mut rng);
+                (g, w, m)
+            })
+            .collect();
+        // Oracle: one fused accumulate per client, in client order.
+        let start = Matrix::randn(u, n, 0.0, 1.0, &mut rng);
+        let mut want = start.clone();
+        for (g, w, m) in &clients {
+            encode_accumulate(g.view(), w, m.view(), want.view_mut()).unwrap();
+        }
+        let tasks: Vec<DenseEncodeTask<'_>> = clients
+            .iter()
+            .map(|(g, w, m)| DenseEncodeTask { g: g.view(), w, m: m.view() })
+            .collect();
+        for t in [1, 2, 3, 8] {
+            let mut got = start.clone();
+            encode_accumulate_batch_dense(&tasks, got.view_mut(), t).unwrap();
+            assert_eq!(got, want, "{t}-thread dense batched encode differs");
+        }
+        // Shape mismatches are rejected with the offending task named.
+        let bad = [DenseEncodeTask {
+            g: clients[0].0.view(),
+            w: &clients[0].1,
+            m: clients[1].2.view(),
+        }];
+        let mut acc = start.clone();
+        let err = encode_accumulate_batch_dense(&bad, acc.view_mut(), 2).unwrap_err();
         assert!(err.to_string().contains("task 0"), "{err}");
     }
 

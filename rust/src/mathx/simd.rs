@@ -1,0 +1,617 @@
+//! Runtime-dispatched SIMD microkernels (AVX2 / NEON / scalar).
+//!
+//! The panel kernels in [`crate::mathx::par`] reduce to one `axpy`-shaped
+//! primitive: `out[i] += alpha * b[i]`. This module provides explicit
+//! `std::arch` implementations of that primitive — AVX2 on x86_64, NEON
+//! on aarch64 — selected **once at startup** by runtime CPU-feature
+//! detection behind a [`SimdDispatch`] table of plain function pointers,
+//! so the hot loops pay one indirect call per row-panel term instead of a
+//! per-element branch, and call sites never mention an ISA.
+//!
+//! Design rules:
+//!
+//! * **No FMA, ever.** The vector bodies use separate multiply and add
+//!   (`_mm256_mul_ps` + `_mm256_add_ps`, `vmulq_f32` + `vaddq_f32`), never
+//!   fused multiply-add. A contracted FMA rounds once where `a*b` then
+//!   `+` rounds twice, so FMA lanes would *not* be bitwise-equal to the
+//!   scalar oracle. With separate mul/add every lane performs exactly the
+//!   scalar sequence, so **every ISA path is bitwise identical to the
+//!   scalar path per element** — seeded experiments replay exactly no
+//!   matter which ISA the host picks.
+//! * **Zero coefficients are the caller's problem.** All paths compute
+//!   `o += a*b` unconditionally for the slice they are handed; callers
+//!   (the [`crate::mathx::par`] fold helpers) skip `alpha == 0.0` terms
+//!   *before* dispatch, exactly like the scalar oracle, because
+//!   `0.0 * b` can materialize `-0.0` and `-0.0 + 0.0 == +0.0` would
+//!   change bit patterns.
+//! * **Scalar is the oracle.** [`SimdIsa::Scalar`] is the unroll-by-8
+//!   autovectorizer-friendly body the repo shipped before this module; it
+//!   is always available, it is what `CODEDFEDL_SIMD=scalar` pins, and it
+//!   is the reference every other path is property-tested against
+//!   (`tests/kernel_oracle.rs`).
+//!
+//! Selection: `CODEDFEDL_SIMD={auto,avx2,neon,scalar}` (default `auto` =
+//! best detected path). Requesting an ISA the host lacks warns on stderr
+//! and falls back to auto-detection. Tests and benches switch paths
+//! in-process with [`force`] — safe to do at any time because all paths
+//! are bitwise-equal, so a concurrent switch changes only speed, never
+//! results.
+//!
+//! Adding a new ISA path: add a `SimdIsa` variant, a `cfg(target_arch)`
+//! module with `unsafe fn axpy / axpy4 / scale` bodies behind
+//! `#[target_feature]` (separate mul/add only), safe wrappers that are
+//! sound because the pointer is installed only after detection, a
+//! `detected()` arm, a `table()` arm, and a parse arm — the
+//! `kernel_oracle` property tests then cover it automatically via
+//! [`available`].
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+
+use anyhow::{ensure, Result};
+
+/// An instruction-set path the kernels can run on. `Scalar` is always
+/// available and is the reproduction oracle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SimdIsa {
+    /// Unroll-by-8 plain Rust (the autovectorizer baseline / oracle).
+    Scalar = 0,
+    /// 8-lane f32 AVX2 on x86_64 (separate mul/add, no FMA).
+    Avx2 = 1,
+    /// 4-lane f32 NEON on aarch64 (separate mul/add, no FMA).
+    Neon = 2,
+}
+
+impl SimdIsa {
+    /// The `CODEDFEDL_SIMD` spelling of this path.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdIsa::Scalar => "scalar",
+            SimdIsa::Avx2 => "avx2",
+            SimdIsa::Neon => "neon",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<SimdIsa> {
+        match v {
+            0 => Some(SimdIsa::Scalar),
+            1 => Some(SimdIsa::Avx2),
+            2 => Some(SimdIsa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether the running host can execute this path.
+    pub fn detected(self) -> bool {
+        match self {
+            SimdIsa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdIsa::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            SimdIsa::Avx2 => false,
+            #[cfg(target_arch = "aarch64")]
+            SimdIsa::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[cfg(not(target_arch = "aarch64"))]
+            SimdIsa::Neon => false,
+        }
+    }
+}
+
+/// The dispatch table: plain function pointers bound to one ISA's
+/// microkernels. `Copy`, `Send` and `Sync`, so panel closures hoist one
+/// table per kernel call and hand shared references to the pool workers.
+///
+/// All three entry points share the slice contract of the scalar oracle:
+/// the effective length is the minimum of `out` and every input row, and
+/// every output element is touched exactly once per call.
+#[derive(Clone, Copy)]
+pub struct SimdDispatch {
+    isa: SimdIsa,
+    axpy: fn(f32, &[f32], &mut [f32]),
+    axpy4: fn([f32; 4], [&[f32]; 4], &mut [f32]),
+    scale: fn(f32, &[f32], &mut [f32]),
+}
+
+impl SimdDispatch {
+    /// Which ISA this table runs on.
+    #[inline]
+    pub fn isa(&self) -> SimdIsa {
+        self.isa
+    }
+
+    /// `out[i] += alpha * b[i]`. Callers must skip `alpha == 0.0` terms
+    /// themselves (see the module docs).
+    #[inline]
+    pub fn axpy(&self, alpha: f32, b: &[f32], out: &mut [f32]) {
+        (self.axpy)(alpha, b, out)
+    }
+
+    /// Four folds in one pass: per element
+    /// `out[i] = (((out[i] + a0*b0[i]) + a1*b1[i]) + a2*b2[i]) + a3*b3[i]`
+    /// — bitwise identical to four sequential [`Self::axpy`] calls in
+    /// order, but the vector paths load and store `out` once per group
+    /// instead of once per term (the main win of explicit SIMD here,
+    /// since without FMA the single-term kernel is store-bound). All
+    /// four coefficients must be nonzero (callers group only nonzero
+    /// terms).
+    #[inline]
+    pub fn axpy4(&self, alphas: [f32; 4], rows: [&[f32]; 4], out: &mut [f32]) {
+        (self.axpy4)(alphas, rows, out)
+    }
+
+    /// `out[i] = alpha * a[i]` (row scaling).
+    #[inline]
+    pub fn scale(&self, alpha: f32, a: &[f32], out: &mut [f32]) {
+        (self.scale)(alpha, a, out)
+    }
+
+    fn table(isa: SimdIsa) -> SimdDispatch {
+        match isa {
+            SimdIsa::Scalar => SimdDispatch {
+                isa,
+                axpy: scalar::axpy,
+                axpy4: scalar::axpy4,
+                scale: scalar::scale,
+            },
+            #[cfg(target_arch = "x86_64")]
+            SimdIsa::Avx2 => SimdDispatch {
+                isa,
+                axpy: avx2_axpy,
+                axpy4: avx2_axpy4,
+                scale: avx2_scale,
+            },
+            #[cfg(target_arch = "aarch64")]
+            SimdIsa::Neon => SimdDispatch {
+                isa,
+                axpy: neon_axpy,
+                axpy4: neon_axpy4,
+                scale: neon_scale,
+            },
+            #[allow(unreachable_patterns)]
+            _ => unreachable!("ISA {} selected but not compiled for this target", isa.name()),
+        }
+    }
+}
+
+// ---- selection state ----
+
+/// Sentinel for "not yet initialized from the environment".
+const UNINIT: u8 = u8::MAX;
+
+/// The active ISA as a `SimdIsa as u8`, initialized lazily from
+/// `CODEDFEDL_SIMD` + detection on the first [`active`] call. A racy
+/// double-init is benign: both racers compute the same value.
+static ACTIVE: AtomicU8 = AtomicU8::new(UNINIT);
+
+/// The active dispatch table. First call reads `CODEDFEDL_SIMD` and runs
+/// feature detection; later calls are one relaxed atomic load plus a
+/// table build of three function pointers.
+pub fn active() -> SimdDispatch {
+    let mut v = ACTIVE.load(Ordering::Relaxed);
+    if v == UNINIT {
+        let isa = init_from_env();
+        ACTIVE.store(isa as u8, Ordering::Relaxed);
+        v = isa as u8;
+    }
+    SimdDispatch::table(SimdIsa::from_u8(v).unwrap_or(SimdIsa::Scalar))
+}
+
+/// The active ISA (for banners / bench labels) without building a table.
+pub fn active_isa() -> SimdIsa {
+    active().isa()
+}
+
+/// Pin the active path in-process (tests/benches). Fails if the host
+/// cannot execute `isa`. Safe at any time: every path is bitwise-equal,
+/// so kernels running concurrently with a switch change only speed.
+pub fn force(isa: SimdIsa) -> Result<()> {
+    ensure!(
+        isa.detected(),
+        "SIMD path '{}' is not available on this host (available: {})",
+        isa.name(),
+        available().iter().map(|i| i.name()).collect::<Vec<_>>().join(", ")
+    );
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Every path the running host can execute, scalar first. Detection
+/// only — the `CODEDFEDL_SIMD` override does not narrow this list (the
+/// property tests iterate it to cover all paths regardless of the env).
+pub fn available() -> Vec<SimdIsa> {
+    [SimdIsa::Scalar, SimdIsa::Avx2, SimdIsa::Neon]
+        .into_iter()
+        .filter(|isa| isa.detected())
+        .collect()
+}
+
+fn detect_best() -> SimdIsa {
+    // `available()` is ordered scalar -> widest, so the last entry is
+    // the best detected path.
+    *available().last().expect("scalar is always available")
+}
+
+fn init_from_env() -> SimdIsa {
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    let raw = match std::env::var("CODEDFEDL_SIMD") {
+        Ok(s) => s,
+        Err(_) => return detect_best(),
+    };
+    let req = raw.trim().to_ascii_lowercase();
+    let parsed = match req.as_str() {
+        "" | "auto" => return detect_best(),
+        "scalar" => Some(SimdIsa::Scalar),
+        "avx2" => Some(SimdIsa::Avx2),
+        "neon" => Some(SimdIsa::Neon),
+        _ => None,
+    };
+    match parsed {
+        Some(isa) if isa.detected() => isa,
+        _ => {
+            // Warn once (a benign init race may print twice) and fall
+            // back to detection rather than aborting a long experiment.
+            if !WARNED.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "CODEDFEDL_SIMD={raw}: {} — falling back to auto ({})",
+                    if parsed.is_some() { "not available on this host" } else { "unknown value" },
+                    detect_best().name()
+                );
+            }
+            detect_best()
+        }
+    }
+}
+
+// ---- scalar path (the oracle) ----
+
+mod scalar {
+    /// `out[i] += alpha * b[i]`, unrolled by 8: the pre-dispatch `axpy8`
+    /// body, kept verbatim as the autovectorizer baseline and the
+    /// bitwise oracle for every vector path.
+    pub fn axpy(alpha: f32, b: &[f32], out: &mut [f32]) {
+        let n = out.len().min(b.len());
+        let split = n - n % 8;
+        let (b_main, b_tail) = b[..n].split_at(split);
+        let (o_main, o_tail) = out[..n].split_at_mut(split);
+        for (o, bv) in o_main.chunks_exact_mut(8).zip(b_main.chunks_exact(8)) {
+            o[0] += alpha * bv[0];
+            o[1] += alpha * bv[1];
+            o[2] += alpha * bv[2];
+            o[3] += alpha * bv[3];
+            o[4] += alpha * bv[4];
+            o[5] += alpha * bv[5];
+            o[6] += alpha * bv[6];
+            o[7] += alpha * bv[7];
+        }
+        for (o, &bv) in o_tail.iter_mut().zip(b_tail) {
+            *o += alpha * bv;
+        }
+    }
+
+    /// Four sequential [`axpy`] folds over the common prefix — the
+    /// definitional semantics the vector `axpy4` kernels must reproduce
+    /// bitwise.
+    pub fn axpy4(alphas: [f32; 4], rows: [&[f32]; 4], out: &mut [f32]) {
+        let mut n = out.len();
+        for r in rows {
+            n = n.min(r.len());
+        }
+        let out = &mut out[..n];
+        for k in 0..4 {
+            axpy(alphas[k], &rows[k][..n], out);
+        }
+    }
+
+    /// `out[i] = alpha * a[i]` over the common prefix.
+    pub fn scale(alpha: f32, a: &[f32], out: &mut [f32]) {
+        for (o, &av) in out.iter_mut().zip(a) {
+            *o = alpha * av;
+        }
+    }
+}
+
+// ---- AVX2 path (x86_64) ----
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    // Safety contract for every fn here: the caller has verified
+    // `is_x86_feature_detected!("avx2")`. No FMA anywhere — separate
+    // `_mm256_mul_ps` + `_mm256_add_ps` keep lanes bitwise-equal to the
+    // scalar oracle (see the module docs).
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(alpha: f32, b: &[f32], out: &mut [f32]) {
+        let n = out.len().min(b.len());
+        let lanes = n - n % 8;
+        let a = _mm256_set1_ps(alpha);
+        let bp = b.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i < lanes {
+            let bv = _mm256_loadu_ps(bp.add(i));
+            let ov = _mm256_loadu_ps(op.add(i));
+            _mm256_storeu_ps(op.add(i), _mm256_add_ps(ov, _mm256_mul_ps(a, bv)));
+            i += 8;
+        }
+        while i < n {
+            *out.get_unchecked_mut(i) += alpha * *b.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy4(alphas: [f32; 4], rows: [&[f32]; 4], out: &mut [f32]) {
+        let mut n = out.len();
+        for r in rows {
+            n = n.min(r.len());
+        }
+        let lanes = n - n % 8;
+        let a0 = _mm256_set1_ps(alphas[0]);
+        let a1 = _mm256_set1_ps(alphas[1]);
+        let a2 = _mm256_set1_ps(alphas[2]);
+        let a3 = _mm256_set1_ps(alphas[3]);
+        let (p0, p1, p2, p3) =
+            (rows[0].as_ptr(), rows[1].as_ptr(), rows[2].as_ptr(), rows[3].as_ptr());
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i < lanes {
+            // One load/store of `out` per 8 elements, four mul+adds in
+            // registers — per element the exact sequence of four
+            // sequential axpy calls.
+            let mut ov = _mm256_loadu_ps(op.add(i));
+            ov = _mm256_add_ps(ov, _mm256_mul_ps(a0, _mm256_loadu_ps(p0.add(i))));
+            ov = _mm256_add_ps(ov, _mm256_mul_ps(a1, _mm256_loadu_ps(p1.add(i))));
+            ov = _mm256_add_ps(ov, _mm256_mul_ps(a2, _mm256_loadu_ps(p2.add(i))));
+            ov = _mm256_add_ps(ov, _mm256_mul_ps(a3, _mm256_loadu_ps(p3.add(i))));
+            _mm256_storeu_ps(op.add(i), ov);
+            i += 8;
+        }
+        while i < n {
+            let mut o = *out.get_unchecked(i);
+            o += alphas[0] * *rows[0].get_unchecked(i);
+            o += alphas[1] * *rows[1].get_unchecked(i);
+            o += alphas[2] * *rows[2].get_unchecked(i);
+            o += alphas[3] * *rows[3].get_unchecked(i);
+            *out.get_unchecked_mut(i) = o;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale(alpha: f32, a: &[f32], out: &mut [f32]) {
+        let n = out.len().min(a.len());
+        let lanes = n - n % 8;
+        let al = _mm256_set1_ps(alpha);
+        let ap = a.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i < lanes {
+            _mm256_storeu_ps(op.add(i), _mm256_mul_ps(al, _mm256_loadu_ps(ap.add(i))));
+            i += 8;
+        }
+        while i < n {
+            *out.get_unchecked_mut(i) = alpha * *a.get_unchecked(i);
+            i += 1;
+        }
+    }
+}
+
+// Safe wrappers: sound because `SimdDispatch::table` installs these
+// pointers only for `SimdIsa::Avx2`, which `force`/`init_from_env` hand
+// out only after `is_x86_feature_detected!("avx2")` returned true.
+#[cfg(target_arch = "x86_64")]
+fn avx2_axpy(alpha: f32, b: &[f32], out: &mut [f32]) {
+    unsafe { avx2::axpy(alpha, b, out) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_axpy4(alphas: [f32; 4], rows: [&[f32]; 4], out: &mut [f32]) {
+    unsafe { avx2::axpy4(alphas, rows, out) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_scale(alpha: f32, a: &[f32], out: &mut [f32]) {
+    unsafe { avx2::scale(alpha, a, out) }
+}
+
+// ---- NEON path (aarch64) ----
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    // Safety contract: caller verified NEON support. `vmulq_f32` +
+    // `vaddq_f32` only — `vfmaq_f32` would contract the rounding and
+    // break bitwise equality with the scalar oracle.
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(alpha: f32, b: &[f32], out: &mut [f32]) {
+        let n = out.len().min(b.len());
+        let lanes = n - n % 4;
+        let a = vdupq_n_f32(alpha);
+        let bp = b.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i < lanes {
+            let bv = vld1q_f32(bp.add(i));
+            let ov = vld1q_f32(op.add(i));
+            vst1q_f32(op.add(i), vaddq_f32(ov, vmulq_f32(a, bv)));
+            i += 4;
+        }
+        while i < n {
+            *out.get_unchecked_mut(i) += alpha * *b.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy4(alphas: [f32; 4], rows: [&[f32]; 4], out: &mut [f32]) {
+        let mut n = out.len();
+        for r in rows {
+            n = n.min(r.len());
+        }
+        let lanes = n - n % 4;
+        let a0 = vdupq_n_f32(alphas[0]);
+        let a1 = vdupq_n_f32(alphas[1]);
+        let a2 = vdupq_n_f32(alphas[2]);
+        let a3 = vdupq_n_f32(alphas[3]);
+        let (p0, p1, p2, p3) =
+            (rows[0].as_ptr(), rows[1].as_ptr(), rows[2].as_ptr(), rows[3].as_ptr());
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i < lanes {
+            let mut ov = vld1q_f32(op.add(i));
+            ov = vaddq_f32(ov, vmulq_f32(a0, vld1q_f32(p0.add(i))));
+            ov = vaddq_f32(ov, vmulq_f32(a1, vld1q_f32(p1.add(i))));
+            ov = vaddq_f32(ov, vmulq_f32(a2, vld1q_f32(p2.add(i))));
+            ov = vaddq_f32(ov, vmulq_f32(a3, vld1q_f32(p3.add(i))));
+            vst1q_f32(op.add(i), ov);
+            i += 4;
+        }
+        while i < n {
+            let mut o = *out.get_unchecked(i);
+            o += alphas[0] * *rows[0].get_unchecked(i);
+            o += alphas[1] * *rows[1].get_unchecked(i);
+            o += alphas[2] * *rows[2].get_unchecked(i);
+            o += alphas[3] * *rows[3].get_unchecked(i);
+            *out.get_unchecked_mut(i) = o;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale(alpha: f32, a: &[f32], out: &mut [f32]) {
+        let n = out.len().min(a.len());
+        let lanes = n - n % 4;
+        let al = vdupq_n_f32(alpha);
+        let ap = a.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i < lanes {
+            vst1q_f32(op.add(i), vmulq_f32(al, vld1q_f32(ap.add(i))));
+            i += 4;
+        }
+        while i < n {
+            *out.get_unchecked_mut(i) = alpha * *a.get_unchecked(i);
+            i += 1;
+        }
+    }
+}
+
+// Safe wrappers: sound because the pointers are installed only after
+// NEON detection (see the AVX2 wrappers above).
+#[cfg(target_arch = "aarch64")]
+fn neon_axpy(alpha: f32, b: &[f32], out: &mut [f32]) {
+    unsafe { neon::axpy(alpha, b, out) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_axpy4(alphas: [f32; 4], rows: [&[f32]; 4], out: &mut [f32]) {
+    unsafe { neon::axpy4(alphas, rows, out) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_scale(alpha: f32, a: &[f32], out: &mut [f32]) {
+    unsafe { neon::scale(alpha, a, out) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        // Mix magnitudes, exact zeros and negative zeros: the adversarial
+        // inputs for rounding/sign-of-zero divergence.
+        (0..n)
+            .map(|i| match i % 7 {
+                0 => 0.0,
+                1 => -0.0,
+                _ => (rng.next_f64() * 4.0 - 2.0) as f32 * 1000.0_f32.powi((i % 3) as i32 - 1),
+            })
+            .collect()
+    }
+
+    /// Every available vector path must be bitwise-equal to the scalar
+    /// oracle on every adversarial length (tails of every residue class,
+    /// empty slices, mismatched lengths).
+    #[test]
+    fn all_paths_match_scalar_bitwise() {
+        let mut rng = Rng::new(77);
+        for isa in available() {
+            let d = SimdDispatch::table(isa);
+            for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 67] {
+                let b = rand_vec(&mut rng, n + 3); // longer than out: min-prefix rule
+                let base = rand_vec(&mut rng, n);
+                for alpha in [1.0f32, -0.5, 3.25e-3, -1.75e4] {
+                    let mut got = base.clone();
+                    let mut want = base.clone();
+                    d.axpy(alpha, &b, &mut got);
+                    scalar::axpy(alpha, &b, &mut want);
+                    assert_eq!(got, want, "{} axpy n={n} alpha={alpha}", isa.name());
+
+                    let mut got = base.clone();
+                    let mut want = base.clone();
+                    d.scale(alpha, &b, &mut got);
+                    scalar::scale(alpha, &b, &mut want);
+                    assert_eq!(got, want, "{} scale n={n} alpha={alpha}", isa.name());
+                }
+                let alphas = [1.5f32, -0.25, 2.0e-3, -7.0];
+                let r0 = rand_vec(&mut rng, n);
+                let r1 = rand_vec(&mut rng, n + 1);
+                let r2 = rand_vec(&mut rng, n + 8);
+                let r3 = rand_vec(&mut rng, n);
+                let rows = [&r0[..], &r1[..], &r2[..], &r3[..]];
+                let mut got = base.clone();
+                let mut want = base.clone();
+                d.axpy4(alphas, rows, &mut got);
+                scalar::axpy4(alphas, rows, &mut want);
+                assert_eq!(got, want, "{} axpy4 n={n}", isa.name());
+            }
+        }
+    }
+
+    /// axpy4 is definitionally four sequential axpy calls — check the
+    /// scalar implementation honors that, so the cross-ISA test above
+    /// transitively pins every vector path to the same sequence.
+    #[test]
+    fn axpy4_is_four_sequential_axpys() {
+        let mut rng = Rng::new(78);
+        for n in [0usize, 1, 7, 8, 9, 33] {
+            let rows_v: Vec<Vec<f32>> = (0..4).map(|_| rand_vec(&mut rng, n)).collect();
+            let rows = [&rows_v[0][..], &rows_v[1][..], &rows_v[2][..], &rows_v[3][..]];
+            let alphas = [0.5f32, -1.25, 3.0, -0.125];
+            let base = rand_vec(&mut rng, n);
+            let mut got = base.clone();
+            scalar::axpy4(alphas, rows, &mut got);
+            let mut want = base;
+            for k in 0..4 {
+                scalar::axpy(alphas[k], rows[k], &mut want);
+            }
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn force_available_and_fallback_behave() {
+        // Single test for the global-state machinery so parallel unit
+        // tests never race on assertions about the active ISA.
+        let avail = available();
+        assert_eq!(avail[0], SimdIsa::Scalar, "scalar must always be first");
+        let prior = active_isa();
+        for &isa in &avail {
+            force(isa).unwrap();
+            assert_eq!(active_isa(), isa);
+        }
+        // An ISA this target cannot run must be refused by force().
+        for isa in [SimdIsa::Avx2, SimdIsa::Neon] {
+            if !avail.contains(&isa) {
+                let err = force(isa).unwrap_err();
+                assert!(err.to_string().contains(isa.name()), "{err}");
+            }
+        }
+        force(prior).unwrap();
+    }
+}

@@ -109,6 +109,19 @@ pub struct EncodeClientJob<'a> {
     pub idx: &'a [usize],
 }
 
+/// One client's operands for the batched **dense** parity pass
+/// ([`ComputeBackend::encode_accumulate_dense_batch`]): its private
+/// generator, §3.4 weights, and an already-materialized `(l, cols)`
+/// source block — the `ReencodeCache` slices of the control/churn
+/// re-encode path, where every client streams its own dense block
+/// instead of gathering rows from one shared source.
+#[derive(Clone, Copy)]
+pub struct DenseEncodeJob<'a> {
+    pub g: &'a Matrix,
+    pub w: &'a [f32],
+    pub m: &'a Matrix,
+}
+
 /// Compute operations of one shape profile. All matrices are row-major
 /// f32; shapes must match the profile exactly (the *callers* pad/mask).
 pub trait ComputeBackend {
@@ -293,6 +306,37 @@ pub trait ComputeBackend {
         Ok(())
     }
 
+    /// Streaming parity encode over a batch of **dense** per-client
+    /// source blocks: `out += sum_j G_j @ (w_j .* M_j)`, accumulated in
+    /// batch order — the cached control/churn re-encode analogue of
+    /// [`ComputeBackend::encode_accumulate_batch`], dispatching one pool
+    /// job per client batch instead of one encode per client. The
+    /// default materializes each job's parity block via
+    /// [`ComputeBackend::encode`] and folds it in (artifact-shape
+    /// backends); the native backend runs the batch as one fused pool
+    /// job whose per-element addition sequence is identical to the
+    /// sequential fused fold (bitwise-equal composite parity at any
+    /// thread count).
+    fn encode_accumulate_dense_batch(
+        &self,
+        jobs: &[DenseEncodeJob<'_>],
+        out: &mut Matrix,
+        _par: Parallelism,
+    ) -> Result<()> {
+        for j in jobs {
+            let block = self.encode(j.g, j.w, j.m)?;
+            ensure!(
+                out.shape() == block.shape(),
+                "encode_accumulate_dense_batch: accumulator is {:?} but the parity block \
+                 is {:?}",
+                out.shape(),
+                block.shape()
+            );
+            out.axpy_inplace(1.0, &block);
+        }
+        Ok(())
+    }
+
     /// RFF-embed an arbitrary number of rows by streaming `chunk`-row
     /// slices through [`ComputeBackend::rff_chunk`], zero-padding the tail.
     fn rff_embed_all(&self, x: &Matrix, omega: &Matrix, delta: &Matrix, chunk: usize)
@@ -339,11 +383,14 @@ pub trait ComputeBackend {
     }
 }
 
-/// Pure-rust implementation over [`crate::mathx::par`]: the pooled,
-/// unrolled panel kernels. Exact same math as the artifacts; used as the
-/// test oracle and for artifact-free runs (`backend = "native"`).
-/// Prepared gathers stay zero-copy: the gradient, predict and encode
-/// paths read rows of the shared source in place.
+/// Pure-rust implementation over [`crate::mathx::par`]: the pooled
+/// panel kernels, which bottom out in the runtime-dispatched SIMD
+/// microkernels of [`crate::mathx::simd`] (AVX2/NEON/scalar, selected
+/// once per process — no call-site changes here). Exact same math as
+/// the artifacts; used as the test oracle and for artifact-free runs
+/// (`backend = "native"`). Prepared gathers stay zero-copy: the
+/// gradient, predict and encode paths read rows of the shared source in
+/// place.
 pub struct NativeBackend;
 
 /// A prepared operand resolved to plain host references, so sharded
@@ -581,6 +628,19 @@ impl ComputeBackend for NativeBackend {
             .map(|j| par::EncodeTask { g: j.g.view(), w: j.w, idx: j.idx })
             .collect();
         par::encode_accumulate_batch(&tasks, source.view(), out.view_mut(), par_cfg.threads)
+    }
+
+    fn encode_accumulate_dense_batch(
+        &self,
+        jobs: &[DenseEncodeJob<'_>],
+        out: &mut Matrix,
+        par_cfg: Parallelism,
+    ) -> Result<()> {
+        let tasks: Vec<par::DenseEncodeTask<'_>> = jobs
+            .iter()
+            .map(|j| par::DenseEncodeTask { g: j.g.view(), w: j.w, m: j.m.view() })
+            .collect();
+        par::encode_accumulate_batch_dense(&tasks, out.view_mut(), par_cfg.threads)
     }
 
     fn predict_chunk_p(&self, x: &PreparedMatrix, beta: &PreparedMatrix) -> Result<Matrix> {
@@ -838,6 +898,38 @@ mod tests {
             .collect();
         nb.encode_accumulate_batch(&jobs, &source, &mut got, Parallelism::new(3, 2)).unwrap();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dense_batched_encode_matches_sequential_fused_fold() {
+        let mut rng = Rng::new(33);
+        let nb = NativeBackend;
+        let per_client: Vec<(Matrix, Vec<f32>, Matrix)> = (0..4)
+            .map(|j| {
+                let l = 5 + j;
+                let g = Matrix::randn(7, l, 0.0, 0.4, &mut rng);
+                let w: Vec<f32> = (0..l).map(|k| 0.3 + k as f32 * 0.1).collect();
+                let m = Matrix::randn(l, 6, 0.0, 1.0, &mut rng);
+                (g, w, m)
+            })
+            .collect();
+        // Oracle: one fused streaming encode per client, in batch order.
+        let mut want = Matrix::randn(7, 6, 0.0, 1.0, &mut rng);
+        let mut got = want.clone();
+        for (g, w, m) in &per_client {
+            crate::mathx::par::encode_accumulate(g.view(), w, m.view(), want.view_mut())
+                .unwrap();
+        }
+        let jobs: Vec<DenseEncodeJob<'_>> = per_client
+            .iter()
+            .map(|(g, w, m)| DenseEncodeJob { g, w, m })
+            .collect();
+        nb.encode_accumulate_dense_batch(&jobs, &mut got, Parallelism::new(3, 2)).unwrap();
+        assert_eq!(got, want);
+        // Empty batch is a no-op.
+        let before = got.clone();
+        nb.encode_accumulate_dense_batch(&[], &mut got, Parallelism::new(3, 2)).unwrap();
+        assert_eq!(got, before);
     }
 
     #[test]

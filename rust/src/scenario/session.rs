@@ -38,7 +38,8 @@ use std::time::Instant;
 use anyhow::{anyhow, ensure, Result};
 
 use crate::allocation::optimizer::AllocationPlan;
-use crate::coding::encoder::{encode_client_rows, CompositeParity, ReencodeCache};
+use crate::coding::encoder::{encode_client_rows_into, CompositeParity, ReencodeCache};
+use crate::coding::generator::sample_generator;
 use crate::coding::weights::build_weights;
 use crate::config::ExperimentConfig;
 use crate::control::AdaptiveController;
@@ -48,7 +49,7 @@ use crate::mathx::linalg::Matrix;
 use crate::mathx::par::Parallelism;
 use crate::mathx::rng::Rng;
 use crate::metrics::{EvalRecord, TrainReport};
-use crate::runtime::backend::{ComputeBackend, PreparedMatrix};
+use crate::runtime::backend::{ComputeBackend, DenseEncodeJob, PreparedMatrix};
 use crate::scenario::builder::Scenario;
 use crate::scenario::observer::{
     ChurnEvent, CollectingObserver, EpochEvent, RoundEvent, RoundObserver,
@@ -120,6 +121,39 @@ pub struct Session {
     /// gradient kernels).
     ctrl_prep_masks: Option<Vec<Vec<PreparedMatrix>>>,
     replan_count: usize,
+}
+
+/// Cached-reencode batch width: caps the per-chunk generator residency
+/// at `REENCODE_BATCH * u_max * l` floats while keeping per-chunk pool
+/// jobs large enough to amortize dispatch (mirrors the trainer's
+/// client-batch width).
+const REENCODE_BATCH: usize = 64;
+
+/// The §3.4 weights and slice row-set for one (step, client) re-encode.
+/// Masks come from the controller's redraw when a re-plan happened, else
+/// the construction masks (identical to the construction pass: `w[k] =
+/// sqrt(pnr_j)` on processed rows, 1 elsewhere). A free function over
+/// the individual fields so callers can hold it alongside a mutable
+/// borrow of the session's caches.
+fn reencode_operands<'t>(
+    ctrl_masks: &Option<Vec<Vec<Vec<f32>>>>,
+    trainer: &'t Trainer,
+    plan: &AllocationPlan,
+    l: usize,
+    s: usize,
+    j: usize,
+) -> (Vec<f32>, &'t [usize]) {
+    let mask: &[f32] = match ctrl_masks {
+        Some(m) => &m[s][j],
+        None => &trainer.processed_masks()[s][j],
+    };
+    let processed: Vec<usize> = mask
+        .iter()
+        .enumerate()
+        .filter_map(|(k, &m)| if m == 1.0 { Some(k) } else { None })
+        .collect();
+    let w = build_weights(l, &processed, plan.pnr[j]);
+    (w, &trainer.batch_slices()[s][j])
 }
 
 /// Split two ascending id lists into (joined, left).
@@ -545,11 +579,18 @@ impl Session {
     /// pnr come from the allocation *in force* (the controller's latest
     /// re-solve when the adaptive plane replaced the construction plan).
     ///
-    /// Clients are dispatched one at a time (each encode kernel still
-    /// runs multi-threaded panels on the pool); fusing the cached dense
-    /// encodes into one batched pool job — the churn-path analogue of
-    /// `encode_accumulate_batch` — would need a dense-batch backend
-    /// entry point and is left as a perf follow-up. The re-encode is a
+    /// The cached path is **batched**: per step the active clients are
+    /// taken in chunks of [`REENCODE_BATCH`], every cache in the chunk
+    /// is refreshed and its generator drawn up front, and the chunk then
+    /// dispatches as **one** dense-batch pool job per composite half
+    /// (`ComputeBackend::encode_accumulate_dense_batch`) instead of one
+    /// encode per client. Both the batched cached path and the uncached
+    /// oracle fold each client's parity **straight into the composite**
+    /// (fused accumulation, ascending client then ascending slice-row
+    /// order), so the two are bitwise identical on the same generator
+    /// streams — enforced by the `scenario_e2e` churn oracle test. The
+    /// chunking bounds generator residency at `REENCODE_BATCH * u_max *
+    /// l` floats without changing the fold order. The re-encode is a
     /// per-epoch cost of `O(|active| * u * l * (q + c))` MACs, far below
     /// a single round's gradient work at the profiles shipped here.
     fn reencode_parity(&mut self, stream_base: u64, active: &[usize]) -> Result<()> {
@@ -572,31 +613,75 @@ impl Session {
                 .map(|_| (0..n).map(|_| ReencodeCache::new()).collect())
                 .collect();
         }
+        let par_cfg = self.trainer.parallelism();
         let mut overrides = Vec::with_capacity(steps);
         for s in 0..steps {
             let mut comp = CompositeParity::zeros(plan.u, p.u_max, p.q, p.c);
-            for &j in active {
-                // Replay the §3.4 weights from the stored processed mask
-                // (identical to the construction pass: w[k] =
-                // sqrt(pnr_j) on processed rows, 1 elsewhere). The mask
-                // set in force is the controller's when a re-plan
-                // happened, else the construction masks.
-                let mask: &[f32] = match &self.ctrl_masks {
-                    Some(m) => &m[s][j],
-                    None => &self.trainer.processed_masks()[s][j],
-                };
-                let processed: Vec<usize> = mask
-                    .iter()
-                    .enumerate()
-                    .filter_map(|(k, &m)| if m == 1.0 { Some(k) } else { None })
-                    .collect();
-                let w = build_weights(p.l, &processed, plan.pnr[j]);
-                let idx = &self.trainer.batch_slices()[s][j];
-                let mut rng = self
-                    .reencode_root
-                    .fork((stream_base * steps as u64 + s as u64) * n as u64 + j as u64);
-                let (xc, yc) = if self.scenario.use_reencode_cache {
-                    self.caches[s][j].encode_client_rows(
+            if self.scenario.use_reencode_cache {
+                for chunk in active.chunks(REENCODE_BATCH) {
+                    // Phase 1: refresh every cache in the chunk (delta
+                    // row copies only) and draw the per-client §3.4
+                    // weights + fresh generators up front.
+                    let mut gens = Vec::with_capacity(chunk.len());
+                    let mut weights = Vec::with_capacity(chunk.len());
+                    for &j in chunk {
+                        let (w, idx) =
+                            reencode_operands(&self.ctrl_masks, &self.trainer, &plan, p.l, s, j);
+                        self.caches[s][j].refresh(
+                            self.trainer.train_embedding(),
+                            self.trainer.train_labels(),
+                            idx,
+                        )?;
+                        let mut rng = self
+                            .reencode_root
+                            .fork((stream_base * steps as u64 + s as u64) * n as u64 + j as u64);
+                        gens.push(sample_generator(plan.u, p.u_max, idx.len(), &mut rng));
+                        weights.push(w);
+                    }
+                    // Phase 2: one dense-batch pool job per composite
+                    // half, folding the chunk's clients in ascending
+                    // order straight into the accumulator.
+                    let jobs_x: Vec<DenseEncodeJob<'_>> = chunk
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &j)| DenseEncodeJob {
+                            g: &gens[i],
+                            w: &weights[i],
+                            m: self.caches[s][j].slice_x(),
+                        })
+                        .collect();
+                    self.trainer.backend().encode_accumulate_dense_batch(
+                        &jobs_x,
+                        &mut comp.x,
+                        par_cfg,
+                    )?;
+                    let jobs_y: Vec<DenseEncodeJob<'_>> = chunk
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &j)| DenseEncodeJob {
+                            g: &gens[i],
+                            w: &weights[i],
+                            m: self.caches[s][j].slice_y(),
+                        })
+                        .collect();
+                    self.trainer.backend().encode_accumulate_dense_batch(
+                        &jobs_y,
+                        &mut comp.y,
+                        par_cfg,
+                    )?;
+                }
+            } else {
+                // Full re-encode oracle: gathers every row again, one
+                // fused streaming accumulate per client in the same
+                // ascending order — bitwise identical to the batched
+                // cached path on the same generator streams.
+                for &j in active {
+                    let (w, idx) =
+                        reencode_operands(&self.ctrl_masks, &self.trainer, &plan, p.l, s, j);
+                    let mut rng = self
+                        .reencode_root
+                        .fork((stream_base * steps as u64 + s as u64) * n as u64 + j as u64);
+                    encode_client_rows_into(
                         self.trainer.backend(),
                         self.trainer.train_embedding(),
                         self.trainer.train_labels(),
@@ -604,22 +689,10 @@ impl Session {
                         &w,
                         plan.u,
                         p.u_max,
+                        &mut comp,
                         &mut rng,
-                    )?
-                } else {
-                    // Full re-encode oracle: gathers every row again.
-                    encode_client_rows(
-                        self.trainer.backend(),
-                        self.trainer.train_embedding(),
-                        self.trainer.train_labels(),
-                        idx,
-                        &w,
-                        plan.u,
-                        p.u_max,
-                        &mut rng,
-                    )?
-                };
-                comp.add(&xc, &yc);
+                    )?;
+                }
             }
             overrides.push((
                 self.trainer.backend().prepare(&comp.x)?,

@@ -415,6 +415,184 @@ fn shards_exceeding_workers_queue_cleanly() {
 }
 
 #[test]
+fn every_dispatch_path_matches_scalar_bitwise_over_adversarial_shapes() {
+    // The SIMD dispatch contract: every detected path (AVX2/NEON) is
+    // bitwise equal to the scalar table entry on every kernel, including
+    // non-multiple-of-lane remainders (AVX2 is 8 lanes, NEON 4 — the
+    // LANE_DIMS pool hits every remainder class), strided `MatRef` rows
+    // (a `subcols` slice of a wider parent, so `row_stride != cols`
+    // inside the kernel), and empty panels (u = 0, l = 0). Forcing an
+    // ISA is process-global, but that is safe under this very contract:
+    // a concurrent test observing a different path still sees identical
+    // bits.
+    use codedfedl::mathx::simd;
+    const LANE_DIMS: [usize; 12] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 33];
+    let prior = simd::active_isa();
+    check("simd dispatch vs scalar", 40, |g: &mut Gen| {
+        let m = *g.choose(&LANE_DIMS);
+        let k = *g.choose(&LANE_DIMS);
+        let n = *g.choose(&[1usize, 2, 3, 5, 9]);
+        let u = *g.choose(&[0usize, 1, 3, 5]);
+        let a = rand_matrix(g, m, k);
+        let b = rand_matrix(g, k, n);
+        let y = rand_matrix(g, m, n);
+        let beta = rand_matrix(g, k, n);
+        let mask = rand_mask(g, m);
+        // Strided operands: column windows of wider parents.
+        let wide_a = rand_matrix(g, m, k + 3);
+        let wide_b = rand_matrix(g, k, n + 2);
+        // Fused encode over the rows of `a`: G is u x m, out is u x k.
+        let gm = rand_matrix(g, u, m);
+        let w = rand_mask(g, m);
+        let start = rand_matrix(g, u, k);
+        // Gather-encode with its own lane-adversarial slice length.
+        let l2 = *g.choose(&LANE_DIMS);
+        let gm2 = rand_matrix(g, u, l2);
+        let w2 = rand_mask(g, l2);
+        let idx = if m > 0 { rand_indices(g, l2, m) } else { Vec::new() };
+
+        let mut per_isa: Vec<(simd::SimdIsa, Vec<Matrix>)> = Vec::new();
+        for &isa in &simd::available() {
+            simd::force(isa).unwrap();
+            let mut results: Vec<Matrix> = Vec::new();
+            for &t in &[1usize, 2] {
+                results.push(par::matmul_with_threads(a.view(), b.view(), t));
+                results.push(par::matmul_with_threads(
+                    wide_a.view().subcols(1..k + 1),
+                    wide_b.view().subcols(1..n + 1),
+                    t,
+                ));
+                results.push(par::t_matmul_with_threads(a.view(), y.view(), t));
+                results.push(
+                    par::gradient_with_threads(a.view(), y.view(), beta.view(), &mask, t)
+                        .unwrap(),
+                );
+                results.push(par::scale_rows_with_threads(a.view(), &mask, t));
+                let mut acc = start.clone();
+                par::encode_accumulate_with_threads(
+                    gm.view(),
+                    &w,
+                    a.view(),
+                    None,
+                    acc.view_mut(),
+                    t,
+                )
+                .unwrap();
+                results.push(acc);
+                let mut acc = start.clone();
+                par::encode_accumulate_with_threads(
+                    gm.view(),
+                    &w,
+                    wide_a.view().subcols(1..k + 1),
+                    None,
+                    acc.view_mut(),
+                    t,
+                )
+                .unwrap();
+                results.push(acc);
+                if m > 0 {
+                    let mut acc = start.clone();
+                    par::encode_accumulate_with_threads(
+                        gm2.view(),
+                        &w2,
+                        a.view(),
+                        Some(&idx),
+                        acc.view_mut(),
+                        t,
+                    )
+                    .unwrap();
+                    results.push(acc);
+                }
+            }
+            per_isa.push((isa, results));
+        }
+        // `available()` lists scalar first; it is the oracle.
+        let scalar = &per_isa[0].1;
+        for (isa, results) in &per_isa[1..] {
+            assert_eq!(results.len(), scalar.len());
+            for (i, (got, want)) in results.iter().zip(scalar.iter()).enumerate() {
+                assert_eq!(
+                    got,
+                    want,
+                    "path '{}' diverged from scalar (case {i}, m={m} k={k} n={n} u={u} l2={l2})",
+                    isa.name()
+                );
+            }
+        }
+    });
+    simd::force(prior).unwrap();
+}
+
+#[test]
+fn batched_entry_points_match_scalar_dispatch_at_thread_shard_grid() {
+    // The backend batch entry points (gather-batch and the dense batch
+    // used by control/churn re-encodes) must be bitwise equal to the
+    // scalar path at every (threads, shards) cell in {1,2} x {1,2} for
+    // every detected dispatch path. One client has an empty slice so
+    // the empty-panel edge rides through the batch machinery too.
+    use codedfedl::mathx::simd::{self, SimdIsa};
+    use codedfedl::runtime::backend::{
+        ComputeBackend, DenseEncodeJob, EncodeClientJob, NativeBackend,
+    };
+    use std::sync::Arc;
+    let prior = simd::active_isa();
+    let mut g = Gen::new(0x51D);
+    let (n_clients, l, q, u) = (6usize, 9usize, 13usize, 4usize);
+    let emb = Arc::new(rand_matrix(&mut g, n_clients * l, q));
+    let nb = NativeBackend;
+    let mut operands: Vec<(Matrix, Vec<f32>, Vec<usize>)> = Vec::new();
+    for j in 0..n_clients {
+        let lj = if j == 2 { 0 } else { l };
+        let idx: Vec<usize> = (j * l..j * l + lj).collect();
+        operands.push((rand_matrix(&mut g, u, lj), rand_mask(&mut g, lj), idx));
+    }
+    let dense_slices: Vec<Matrix> =
+        operands.iter().map(|(_, _, idx)| emb.select_rows(idx)).collect();
+    let jobs: Vec<EncodeClientJob<'_>> = operands
+        .iter()
+        .map(|(gm, w, idx)| EncodeClientJob { g: gm, w: w.as_slice(), idx: idx.as_slice() })
+        .collect();
+    let dense_jobs: Vec<DenseEncodeJob<'_>> = operands
+        .iter()
+        .zip(&dense_slices)
+        .map(|((gm, w, _), m)| DenseEncodeJob { g: gm, w: w.as_slice(), m })
+        .collect();
+    let run = |threads: usize, shards: usize| -> (Matrix, Matrix) {
+        let p = par::Parallelism::new(threads, shards);
+        let mut gathered = Matrix::zeros(u, q);
+        nb.encode_accumulate_batch(&jobs, &emb, &mut gathered, p).unwrap();
+        let mut dense = Matrix::zeros(u, q);
+        nb.encode_accumulate_dense_batch(&dense_jobs, &mut dense, p).unwrap();
+        (gathered, dense)
+    };
+    simd::force(SimdIsa::Scalar).unwrap();
+    let want = run(1, 1);
+    // The dense batch folds exactly the same per-row terms as the
+    // gather batch (the slices *are* the gathered rows), so the two
+    // entry points agree bitwise with each other as well.
+    assert_eq!(want.0, want.1, "dense batch != gather batch on identical operands");
+    for &isa in &simd::available() {
+        simd::force(isa).unwrap();
+        for t in [1usize, 2] {
+            for s in [1usize, 2] {
+                let got = run(t, s);
+                assert_eq!(
+                    got.0, want.0,
+                    "gather batch diverged from scalar on '{}' at ({t} threads, {s} shards)",
+                    isa.name()
+                );
+                assert_eq!(
+                    got.1, want.1,
+                    "dense batch diverged from scalar on '{}' at ({t} threads, {s} shards)",
+                    isa.name()
+                );
+            }
+        }
+    }
+    simd::force(prior).unwrap();
+}
+
+#[test]
 fn kernels_validate_before_computing() {
     // Descriptive errors, not index panics deep in a loop.
     let x = Matrix::zeros(8, 4);

@@ -210,6 +210,45 @@ fn static_scenario_session_is_bitwise_equal_to_legacy_trainer() {
 }
 
 #[test]
+fn trainer_beta_is_bitwise_identical_across_simd_dispatch_paths() {
+    // The SIMD tentpole's end-to-end contract: the entire tiny training
+    // run — every matmul, gradient, and fused parity encode — produces
+    // the SAME final beta and the SAME eval trajectory under every
+    // detected dispatch path (scalar / AVX2 / NEON), at both a serial
+    // and a sharded parallelism. This is the in-process equivalent of
+    // rerunning the suite under `CODEDFEDL_SIMD=scalar` (which CI also
+    // does): if any vector microkernel contracted a mul+add into an FMA
+    // or reassociated a reduction, the trajectories would diverge here.
+    use codedfedl::mathx::simd::{self, SimdIsa};
+    let prior = simd::active_isa();
+    let mut cfg = tiny(Scheme::Coded, "native");
+    cfg.train.epochs = 4;
+    let backend: Box<dyn ComputeBackend> = Box::new(NativeBackend);
+    let shared = Arc::new(SharedData::build(&cfg, backend.as_ref()).unwrap());
+    simd::force(SimdIsa::Scalar).unwrap();
+    let (beta_ref, curve_ref) = run_with_parallelism(&cfg, &shared, 1, 1);
+    for isa in simd::available() {
+        simd::force(isa).unwrap();
+        for (threads, shards) in [(1, 1), (2, 3)] {
+            let (beta, curve) = run_with_parallelism(&cfg, &shared, threads, shards);
+            assert_eq!(
+                beta,
+                beta_ref,
+                "final beta diverged on dispatch path '{}' at threads={threads} shards={shards}",
+                isa.name()
+            );
+            assert_eq!(
+                curve,
+                curve_ref,
+                "eval trajectory diverged on path '{}' at threads={threads} shards={shards}",
+                isa.name()
+            );
+        }
+    }
+    simd::force(prior).unwrap();
+}
+
+#[test]
 fn joint_scheme_is_shard_invariant_too() {
     // CodedJoint exercises the optimizer-chosen redundancy path; the
     // sharded parity pass must replay it exactly as well.
