@@ -5,6 +5,13 @@
 //! the scenario redesign). Also times a churn-enabled variant to price
 //! the dynamic path (roster computation + cached parity re-encodes).
 //!
+//! Also prices the hierarchical engine's memory claim: a 16384-client
+//! scenario is run twice — two-tier (on-demand rows, O(active) state)
+//! then flat (resident dense embedding) — and the peak-RSS ratio
+//! (`VmHWM`, Linux only) lands in the JSON as the `flat_over_hier`
+//! memory cell. The pair runs *first* because the high-water mark is
+//! process-wide and monotone.
+//!
 //! Emits `BENCH_scenario.json`. Like the `round` cell, this bench
 //! refuses to write placeholder numbers: the JSON is only written after
 //! real measured results exist.
@@ -34,9 +41,55 @@ fn builder(epochs: usize) -> anyhow::Result<ScenarioBuilder> {
     Ok(b.population(256).steps_per_epoch(1).epochs(epochs).scheme(Scheme::Coded))
 }
 
+/// Peak resident set size (`VmHWM`) in KiB. Linux only; `None` where
+/// `/proc/self/status` does not exist.
+fn peak_rss_kb() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = text.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// The 16384-client memory-pair scenario (1 epoch x 1 step, shallow
+/// rate ladders so the fleet stays feasible at this rank count).
+fn mem_builder(hier: bool) -> anyhow::Result<ScenarioBuilder> {
+    let mut b = ScenarioBuilder::from_preset("tiny")?;
+    b.set("net.k1", "0.99995")?;
+    b.set("net.k2", "0.99995")?;
+    b.set("backend", "native")?;
+    Ok(b.population(16384).steps_per_epoch(1).epochs(1).scheme(Scheme::Coded).hierarchical(hier))
+}
+
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let epochs = if quick { 2 } else { 4 };
+
+    // ---- memory pair FIRST (VmHWM is monotone): hierarchical, then
+    // flat. Each peak is read right after its run, so the hierarchical
+    // number is untainted by the flat session's resident embedding. ----
+    let mem_pair: Option<(u64, u64)> = if peak_rss_kb().is_some() {
+        {
+            let mut s = mem_builder(true)?.build_with_backend(Box::new(NativeBackend))?;
+            std::hint::black_box(s.run()?);
+        }
+        let hier_kb = peak_rss_kb().unwrap();
+        {
+            let mut s = mem_builder(false)?.build_with_backend(Box::new(NativeBackend))?;
+            std::hint::black_box(s.run()?);
+        }
+        let flat_kb = peak_rss_kb().unwrap();
+        println!(
+            "peak RSS @ 16384 clients: hier {:.1} MiB, flat {:.1} MiB \
+             (flat/hier x{:.2})",
+            hier_kb as f64 / 1024.0,
+            flat_kb as f64 / 1024.0,
+            flat_kb as f64 / hier_kb as f64
+        );
+        Some((hier_kb, flat_kb))
+    } else {
+        println!("peak RSS pair skipped: no /proc/self/status VmHWM on this OS");
+        None
+    };
+
     let mut b = Bencher::new();
     b.target_time_s = if quick { 0.0 } else { 0.5 };
     b.max_iters = if quick { 1 } else { 3 };
@@ -124,7 +177,7 @@ fn main() -> anyhow::Result<()> {
             && b.results().iter().all(|r| r.iters >= 1 && r.mean_s.is_finite() && r.mean_s > 0.0),
         "refusing to write BENCH_scenario.json without real measurements"
     );
-    let doc = Json::obj(vec![
+    let mut fields = vec![
         ("bench", Json::Str("scenario".into())),
         ("status", Json::Str("measured".into())),
         ("quick", Json::Bool(quick)),
@@ -133,8 +186,15 @@ fn main() -> anyhow::Result<()> {
         ("threads_knob", Json::Num(par::num_threads() as f64)),
         ("shards_knob", Json::Num(par::num_shards() as f64)),
         ("session_over_legacy", Json::Num(overhead)),
-        ("results", Json::Arr(results)),
-    ]);
+    ];
+    if let Some((hier_kb, flat_kb)) = mem_pair {
+        fields.push(("mem_clients", Json::Num(16384.0)));
+        fields.push(("peak_rss_hier_kb", Json::Num(hier_kb as f64)));
+        fields.push(("peak_rss_flat_kb", Json::Num(flat_kb as f64)));
+        fields.push(("flat_over_hier_peak_rss", Json::Num(flat_kb as f64 / hier_kb as f64)));
+    }
+    fields.push(("results", Json::Arr(results)));
+    let doc = Json::obj(fields);
     std::fs::write("BENCH_scenario.json", doc.to_string())?;
     println!("wrote BENCH_scenario.json");
     Ok(())

@@ -117,20 +117,19 @@ impl AdaptiveController {
     }
 
     /// Estimated aggregate epoch return of the plan in force over the
-    /// `active` roster under `models`.
-    fn estimated_return(&self, models: &[ClientModel], active: &[usize]) -> f64 {
+    /// `active` roster; `act_models[k]` is the model of `active[k]`.
+    fn estimated_return(&self, act_models: &[ClientModel], active: &[usize]) -> f64 {
         active
             .iter()
-            .map(|&j| {
-                expected_return(&models[j], self.current.loads[j] as f64, self.current.deadline)
-            })
+            .zip(act_models)
+            .map(|(&j, m)| expected_return(m, self.current.loads[j] as f64, self.current.deadline))
             .sum()
     }
 
     /// Estimated-over-promised return ratio (1.0 = the network still
     /// matches the plan in force).
-    fn return_ratio(&self, models: &[ClientModel], active: &[usize]) -> f64 {
-        self.estimated_return(models, active) / self.current.expected_return.max(1e-9)
+    fn return_ratio(&self, act_models: &[ClientModel], active: &[usize]) -> f64 {
+        self.estimated_return(act_models, active) / self.current.expected_return.max(1e-9)
     }
 
     /// Epoch-boundary decision. `active` is this epoch's ascending
@@ -143,17 +142,18 @@ impl AdaptiveController {
         active: &[usize],
         oracle_models: Option<&[ClientModel]>,
     ) -> Result<Option<ControlDecision>> {
-        // Cadence policies bail before materializing any model vector —
-        // only the drift trigger needs the ratio unconditionally.
-        let (reason, models, ratio) = match &self.policy {
+        // Every arm materializes models for the *active* roster only —
+        // O(active), never O(population) — so a churned-down 100k-client
+        // scenario pays for the clients that are present, not the fleet.
+        let (reason, act_models, ratio) = match &self.policy {
             ControlPolicy::Off => return Ok(None),
             ControlPolicy::Oracle { every_epochs } => {
                 if epoch % every_epochs != 0 {
                     return Ok(None);
                 }
                 let mv: Vec<ClientModel> = match oracle_models {
-                    Some(m) => m.to_vec(),
-                    None => self.est.base().to_vec(),
+                    Some(m) => active.iter().map(|&j| m[j].clone()).collect(),
+                    None => active.iter().map(|&j| self.est.base()[j].clone()).collect(),
                 };
                 let r = self.return_ratio(&mv, active);
                 ("oracle", mv, r)
@@ -164,12 +164,12 @@ impl AdaptiveController {
                 if epoch == 0 || epoch % every_epochs != 0 {
                     return Ok(None);
                 }
-                let mv = self.est.models();
+                let mv: Vec<ClientModel> = active.iter().map(|&j| self.est.model(j)).collect();
                 let r = self.return_ratio(&mv, active);
                 ("periodic", mv, r)
             }
             ControlPolicy::Drift { threshold } => {
-                let mv = self.est.models();
+                let mv: Vec<ClientModel> = active.iter().map(|&j| self.est.model(j)).collect();
                 let r = self.return_ratio(&mv, active);
                 if (r - 1.0).abs() <= *threshold {
                     return Ok(None);
@@ -181,7 +181,6 @@ impl AdaptiveController {
         // Re-solve the paper's allocation over the active roster only,
         // warm-started at the deadline in force; absent clients are
         // scattered back as load 0 / pnr 1 (they never return).
-        let act_models: Vec<ClientModel> = active.iter().map(|&j| models[j].clone()).collect();
         let act_caps: Vec<usize> = active.iter().map(|&j| self.caps[j]).collect();
         let m_act: usize = act_caps.iter().sum();
         let u = self.current.u;

@@ -9,7 +9,8 @@ pub mod noniid;
 pub mod synthetic;
 
 pub use dataset::Dataset;
-pub use noniid::shard_non_iid;
+pub use noniid::{balanced_sorted_row, shard_non_iid};
+pub use synthetic::SyntheticSource;
 
 use anyhow::{bail, Result};
 
@@ -36,4 +37,22 @@ pub fn load(cfg: &ExperimentConfig, rng: &mut Rng) -> Result<(Dataset, Dataset)>
         "mnist" => mnist::load_mnist(&cfg.data_dir, cfg.m_train, cfg.m_test, cfg.profile.c),
         other => bail!("unknown dataset '{other}' (synth-mnist|synth-fashion|mnist)"),
     }
+}
+
+/// Build the **streaming** source for the configured dataset — the
+/// on-demand counterpart of [`load`] used by hierarchical sessions.
+/// Only the synthetic generators can stream (their rows are
+/// counter-based); `mnist` and unknown names bail with a pointer at the
+/// flat session. Forking is non-mutating, so calling this and [`load`]
+/// with rngs in the same state yields bitwise-identical data.
+pub fn stream_source(cfg: &ExperimentConfig, rng: &Rng) -> Result<SyntheticSource> {
+    let spec = match cfg.dataset.as_str() {
+        "synth-mnist" => synthetic::SynthSpec::mnist_like(cfg.profile.d, cfg.profile.c),
+        "synth-fashion" => synthetic::SynthSpec::fashion_like(cfg.profile.d, cfg.profile.c),
+        other => bail!(
+            "dataset '{other}' cannot stream rows on demand — hierarchical sessions \
+             require a synthetic dataset (synth-mnist|synth-fashion)"
+        ),
+    };
+    Ok(SyntheticSource::new(spec, cfg.m_train, cfg.m_test, rng))
 }

@@ -23,6 +23,30 @@ pub fn shard_non_iid(data: &Dataset, n: usize) -> Result<Vec<Vec<usize>>> {
     Ok(order.chunks(shard).map(|c| c.to_vec()).collect())
 }
 
+/// Closed-form inverse of the balanced label-sorted order: for an
+/// `m`-row dataset whose labels are the round-robin `labels[r] = r % c`
+/// (what the counter-based synthetic generator produces), return the
+/// original row index sitting at position `p` of the stable
+/// sort-by-label order — i.e. `order[p]` of [`shard_non_iid`] without
+/// building (or holding) the `O(m)` permutation.
+///
+/// Class `k` occupies sorted positions `[cum(k), cum(k+1))` where
+/// `cum(k) = k*(m/c) + min(k, m % c)`, and within a class the stable
+/// sort preserves original order `k, k+c, k+2c, ...` — so
+/// `row = k + (p - cum(k)) * c`. This is what lets a hierarchical
+/// session derive any client's slice indices in O(l) with no resident
+/// roster-wide shard table.
+pub fn balanced_sorted_row(m: usize, c: usize, p: usize) -> usize {
+    debug_assert!(c > 0 && p < m, "position {p} out of range for {m} rows");
+    let base = m / c;
+    let rem = m % c;
+    // Classes 0..rem hold base+1 rows; classes rem..c hold base rows.
+    let fat = rem * (base + 1);
+    let k = if p < fat { p / (base + 1) } else { rem + (p - fat) / base };
+    let cum = k * base + k.min(rem);
+    k + (p - cum) * c
+}
+
 /// IID sharding (for the data-heterogeneity ablation): shuffled split.
 pub fn shard_iid(data: &Dataset, n: usize, rng: &mut crate::mathx::rng::Rng) -> Result<Vec<Vec<usize>>> {
     ensure!(n > 0, "need at least one client");
@@ -85,6 +109,36 @@ mod tests {
         let mut sorted = seq.clone();
         sorted.sort_unstable();
         assert_eq!(seq, sorted);
+    }
+
+    #[test]
+    fn balanced_sorted_row_matches_shard_non_iid() {
+        // Round-robin labels (the synthetic generator's assignment): the
+        // closed form must reproduce the sorted permutation exactly, for
+        // both even and uneven class counts.
+        for (m, c) in [(500usize, 10usize), (120, 6), (101, 7), (9, 9), (8, 3)] {
+            let labels: Vec<usize> = (0..m).map(|r| r % c).collect();
+            let d = Dataset::new(Matrix::zeros(m, 2), labels, c).unwrap();
+            let mut order: Vec<usize> = (0..m).collect();
+            order.sort_by_key(|&i| d.labels[i]);
+            for (p, &want) in order.iter().enumerate() {
+                assert_eq!(
+                    balanced_sorted_row(m, c, p),
+                    want,
+                    "m={m} c={c} position {p}"
+                );
+            }
+        }
+        // And therefore shard s of shard_non_iid is exactly the closed
+        // form over its position range.
+        let labels: Vec<usize> = (0..120).map(|r| r % 10).collect();
+        let d = Dataset::new(Matrix::zeros(120, 2), labels, 10).unwrap();
+        let shards = shard_non_iid(&d, 6).unwrap();
+        for (s, shard) in shards.iter().enumerate() {
+            let derived: Vec<usize> =
+                (0..20).map(|i| balanced_sorted_row(120, 10, s * 20 + i)).collect();
+            assert_eq!(&derived, shard, "shard {s}");
+        }
     }
 
     #[test]

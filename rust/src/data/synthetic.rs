@@ -13,6 +13,20 @@
 //! `fashion_like` raises intra-class variance and pulls class centers
 //! closer, mirroring Fashion-MNIST being harder than MNIST (lower
 //! accuracy ceiling, same shapes).
+//!
+//! ## Counter-based generation
+//!
+//! Generation is **counter-based**: the shared world (centers, mixing
+//! map, bias) comes from `rng.fork(0)`, the train and test splits own
+//! the stream roots `rng.fork(1)` / `rng.fork(2)`, and row `r` of a
+//! split is drawn entirely from `root.fork(r)` with its class fixed as
+//! `r % c` (no RNG). Any single row can therefore be regenerated in
+//! isolation, bitwise-identical to its position in the materialized
+//! matrix — the property the hierarchical session's on-demand data path
+//! is gated on. [`SyntheticSource`] is that streaming surface: it holds
+//! only the world (a few KB) and hands out rows, slices and one-hot
+//! label blocks on demand, so a 100k-client population never
+//! materializes its `(m_train, d)` matrix.
 
 use crate::data::dataset::Dataset;
 use crate::mathx::distributions::{Normal, Sample};
@@ -96,42 +110,169 @@ fn build_world(spec: &SynthSpec, rng: &mut Rng) -> World {
     World { centers, mix, bias }
 }
 
-fn sample_split(spec: &SynthSpec, world: &World, m: usize, rng: &mut Rng) -> Dataset {
+/// Draw one sample of class `class` into `out`, consuming only `rng`
+/// (the row's private fork). `latent` is caller-provided scratch of
+/// length `spec.latent`.
+fn sample_row_into(
+    spec: &SynthSpec,
+    world: &World,
+    class: usize,
+    rng: &mut Rng,
+    latent: &mut [f32],
+    out: &mut [f32],
+) {
+    let normal = Normal::standard();
+    let style = rng.next_below(spec.styles as u64) as usize;
+    let center = world.centers.row(class * spec.styles + style);
+    for (i, l) in latent.iter_mut().enumerate() {
+        *l = center[i] + (normal.sample(rng) * spec.noise) as f32;
+    }
+    // x = 0.5 * (tanh(latent @ mix + bias) + 1) + pixel noise, clipped.
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut acc = world.bias[j];
+        for (i, &l) in latent.iter().enumerate() {
+            acc += l * world.mix.get(i, j);
+        }
+        let v = 0.5 * (acc.tanh() + 1.0) + (normal.sample(rng) as f32) * spec.pixel_noise as f32;
+        *o = v.clamp(0.0, 1.0);
+    }
+}
+
+fn sample_split(spec: &SynthSpec, world: &World, m: usize, root: &Rng) -> Dataset {
     let mut x = Matrix::zeros(m, spec.d);
     let mut labels = Vec::with_capacity(m);
-    let normal = Normal::standard();
     let mut latent = vec![0.0f32; spec.latent];
     for r in 0..m {
-        // Balanced classes: round-robin + shuffled by the caller's rng use.
+        // Balanced classes by construction: round-robin assignment.
         let class = r % spec.c;
-        let style = rng.next_below(spec.styles as u64) as usize;
-        let center = world.centers.row(class * spec.styles + style);
-        for (i, l) in latent.iter_mut().enumerate() {
-            *l = center[i] + (normal.sample(rng) * spec.noise) as f32;
-        }
-        // x = 0.5 * (tanh(latent @ mix + bias) + 1) + pixel noise, clipped.
-        let row = x.row_mut(r);
-        for j in 0..spec.d {
-            let mut acc = world.bias[j];
-            for (i, &l) in latent.iter().enumerate() {
-                acc += l * world.mix.get(i, j);
-            }
-            let v = 0.5 * (acc.tanh() + 1.0)
-                + (normal.sample(rng) as f32) * spec.pixel_noise as f32;
-            row[j] = v.clamp(0.0, 1.0);
-        }
+        let mut row_rng = root.fork(r as u64);
+        sample_row_into(spec, world, class, &mut row_rng, &mut latent, x.row_mut(r));
         labels.push(class);
     }
     Dataset::new(x, labels, spec.c).expect("synthetic labels consistent")
 }
 
+/// A streaming view of one seeded synthetic (train, test) pair: rows are
+/// regenerated on demand from their per-row counter forks instead of
+/// living in a resident `(m, d)` matrix. Holds only the world — O(KB)
+/// regardless of `m_train`.
+///
+/// Built from the same base rng as [`generate_pair`], every row it
+/// produces is **bitwise identical** to the corresponding row of the
+/// materialized dataset (gated by this module's tests and the
+/// `scenario_hier` streaming property test).
+pub struct SyntheticSource {
+    spec: SynthSpec,
+    world: World,
+    train_root: Rng,
+    test_root: Rng,
+    m_train: usize,
+    m_test: usize,
+}
+
+impl SyntheticSource {
+    /// Build the source. `rng` is the same base stream `generate_pair`
+    /// takes (forking is non-mutating, so both can be built from one
+    /// seed and agree bitwise).
+    pub fn new(spec: SynthSpec, m_train: usize, m_test: usize, rng: &Rng) -> SyntheticSource {
+        let mut world_rng = rng.fork(0);
+        let world = build_world(&spec, &mut world_rng);
+        SyntheticSource {
+            train_root: rng.fork(1),
+            test_root: rng.fork(2),
+            spec,
+            world,
+            m_train,
+            m_test,
+        }
+    }
+
+    /// Feature dimension.
+    pub fn dim(&self) -> usize {
+        self.spec.d
+    }
+
+    /// Number of classes.
+    pub fn n_classes(&self) -> usize {
+        self.spec.c
+    }
+
+    /// Train-split row count.
+    pub fn len_train(&self) -> usize {
+        self.m_train
+    }
+
+    /// Test-split row count.
+    pub fn len_test(&self) -> usize {
+        self.m_test
+    }
+
+    /// Label of train row `r` — closed-form, no RNG.
+    pub fn label(&self, r: usize) -> usize {
+        r % self.spec.c
+    }
+
+    /// Regenerate train row `r` into `out` (length `d`).
+    pub fn train_row_into(&self, r: usize, out: &mut [f32]) {
+        debug_assert!(r < self.m_train, "train row {r} out of range {}", self.m_train);
+        let mut latent = vec![0.0f32; self.spec.latent];
+        let mut row_rng = self.train_root.fork(r as u64);
+        sample_row_into(&self.spec, &self.world, r % self.spec.c, &mut row_rng, &mut latent, out);
+    }
+
+    /// Materialize the train rows `idx` (in order) as an `(idx.len(), d)`
+    /// matrix — the on-demand gather the hierarchical session feeds to
+    /// the RFF embed + fused encode-accumulate.
+    pub fn train_rows(&self, idx: &[usize]) -> Matrix {
+        let mut x = Matrix::zeros(idx.len(), self.spec.d);
+        let mut latent = vec![0.0f32; self.spec.latent];
+        for (k, &r) in idx.iter().enumerate() {
+            debug_assert!(r < self.m_train, "train row {r} out of range {}", self.m_train);
+            let mut row_rng = self.train_root.fork(r as u64);
+            sample_row_into(
+                &self.spec,
+                &self.world,
+                r % self.spec.c,
+                &mut row_rng,
+                &mut latent,
+                x.row_mut(k),
+            );
+        }
+        x
+    }
+
+    /// One-hot labels for the train rows `idx` as an `(idx.len(), c)`
+    /// matrix (closed-form — no RNG, no resident label vector).
+    pub fn train_one_hot(&self, idx: &[usize]) -> Matrix {
+        let mut y = Matrix::zeros(idx.len(), self.spec.c);
+        for (k, &r) in idx.iter().enumerate() {
+            y.set(k, r % self.spec.c, 1.0);
+        }
+        y
+    }
+
+    /// Materialize the full train split (tests / flat sessions).
+    pub fn train_dataset(&self) -> Dataset {
+        sample_split(&self.spec, &self.world, self.m_train, &self.train_root)
+    }
+
+    /// Materialize the full test split (always resident — evaluation
+    /// reads it every eval step and it is small).
+    pub fn test_dataset(&self) -> Dataset {
+        sample_split(&self.spec, &self.world, self.m_test, &self.test_root)
+    }
+}
+
 /// Generate a (train, test) pair sharing one world. Deterministic in
 /// `rng`; the two splits are disjoint samples from the same distribution.
-pub fn generate_pair(spec: SynthSpec, m_train: usize, m_test: usize, rng: &mut Rng) -> (Dataset, Dataset) {
-    let world = build_world(&spec, rng);
-    let train = sample_split(&spec, &world, m_train, rng);
-    let test = sample_split(&spec, &world, m_test, rng);
-    (train, test)
+pub fn generate_pair(
+    spec: SynthSpec,
+    m_train: usize,
+    m_test: usize,
+    rng: &mut Rng,
+) -> (Dataset, Dataset) {
+    let source = SyntheticSource::new(spec, m_train, m_test, rng);
+    (source.train_dataset(), source.test_dataset())
 }
 
 #[cfg(test)]
@@ -176,6 +317,38 @@ mod tests {
         let (a, _) = gen(4);
         let (b, _) = gen(5);
         assert!(a.x != b.x);
+    }
+
+    #[test]
+    fn streamed_rows_are_bitwise_equal_to_materialized_split() {
+        // The on-demand data contract: any subset of rows regenerated
+        // through the source matches the same rows of the materialized
+        // matrix bit for bit, in any order, and so do the labels.
+        let rng = Rng::new(11);
+        let spec = SynthSpec::mnist_like(48, 10);
+        let source = SyntheticSource::new(spec.clone(), 300, 60, &rng);
+        let (tr, te) = {
+            let mut r2 = Rng::new(11);
+            generate_pair(spec, 300, 60, &mut r2)
+        };
+        let idx: Vec<usize> = vec![299, 0, 17, 17, 123, 42];
+        let got = source.train_rows(&idx);
+        for (k, &r) in idx.iter().enumerate() {
+            assert_eq!(got.row(k), tr.x.row(r), "streamed row {r} diverged");
+            assert_eq!(source.label(r), tr.labels[r]);
+        }
+        // Single-row entry agrees with the batched gather.
+        let mut one = vec![0.0f32; 48];
+        source.train_row_into(123, &mut one);
+        assert_eq!(&one[..], tr.x.row(123));
+        // One-hot blocks match the dataset's derived y.
+        let y = source.train_one_hot(&idx);
+        for (k, &r) in idx.iter().enumerate() {
+            assert_eq!(y.row(k), tr.y.row(r), "one-hot row {r} diverged");
+        }
+        // Full materializations through the source match generate_pair.
+        assert_eq!(source.train_dataset().x, tr.x);
+        assert_eq!(source.test_dataset().x, te.x);
     }
 
     #[test]

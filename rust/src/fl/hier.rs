@@ -1,0 +1,597 @@
+//! The hierarchical two-tier training engine (MEC follow-up, arXiv
+//! 2011.06223): each [`Topology`] cell runs its own coded sub-round over
+//! its clients and produces a per-cell composite; the server folds the
+//! per-cell results in ascending cell order. Built for population scale:
+//!
+//! * **O(active) state** — per-client state (prepared processed-row
+//!   masks) lives in a lazy store created on first activation and
+//!   evicted when the client churns out; resident memory follows the
+//!   active roster, not the population.
+//! * **On-demand data** — no resident `(m_train, q)` embedding. A
+//!   client's rows are re-derived at use time from the counter-based
+//!   synthetic generator ([`SyntheticSource`]) plus the closed-form
+//!   non-IID permutation ([`balanced_sorted_row`]), embedded in
+//!   [`CLIENT_BATCH`]-client blocks, consumed by the fused dense encode
+//!   and the gradient batch, and dropped.
+//!
+//! **The gating invariant**: over a trivial 1-cell topology this engine
+//! reproduces the flat [`crate::fl::trainer::Trainer`] **bitwise** — the
+//! same rng fork map (topology fork 2, delay fork 4, data fork 1, RFF
+//! fork 3, per-client parity forks `1000 + s*n + j`, re-encode forks off
+//! fork 9), the same ascending-client accumulation order, and dense
+//! blocks that equal the flat gather views element-for-element (the
+//! kernel-level guarantees `prepared_gather_gradient_matches_dense_path`
+//! and `dense_batched_encode_matches_sequential_fused_fold` are what
+//! make on-demand materialization invisible to the trajectory). Enforced
+//! end-to-end in `tests/scenario_hier.rs`.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::allocation::optimizer::plan_fixed_u;
+use crate::coding::encoder::CompositeParity;
+use crate::coding::generator::sample_generator;
+use crate::coding::weights::build_weights;
+use crate::config::{ExperimentConfig, Scheme};
+use crate::data::dataset::Dataset;
+use crate::data::{balanced_sorted_row, SyntheticSource};
+use crate::fl::embedding::from_seed;
+use crate::fl::trainer::{StepOutcome, TrainerSetup};
+use crate::mathx::linalg::Matrix;
+use crate::mathx::par::Parallelism;
+use crate::mathx::pool;
+use crate::mathx::rng::Rng;
+use crate::runtime::backend::{ComputeBackend, DenseEncodeJob, GradClientOperands, PreparedMatrix};
+use crate::simnet::delay::ClientModel;
+use crate::simnet::topology::{build_population_with_topology, Topology};
+
+/// Clients per batched materialize/encode/gradient call — bounds the
+/// resident on-demand block (`batch * l` embedded rows plus generators)
+/// while keeping the ascending-client accumulation order, so chunking is
+/// bitwise neutral. Matches the flat trainer's batch for stream parity.
+const CLIENT_BATCH: usize = 64;
+
+/// Per-client lazily-created state: one prepared processed-row mask per
+/// mini-batch step. Everything else a client contributes (slice indices,
+/// §3.4 weights, its private generator) is re-derived from its forked
+/// rng streams at use time, so eviction loses nothing.
+struct ClientState {
+    prep_masks: Vec<PreparedMatrix>,
+}
+
+/// Which rng stream a parity encode draws its generators from:
+/// construction replays the flat trainer's per-client forks
+/// (`1000 + s*n + j`, continuing after the processed-subset draw);
+/// re-encodes draw from the session's fork-9 stream, keyed by the same
+/// `(stream_base, step, client)` counter the flat session uses.
+enum ParityStream {
+    Construction,
+    Reencode(u64),
+}
+
+/// The two-tier engine: per-cell coded sub-rounds over an O(active)
+/// client store with on-demand data. Drop-in round primitive for
+/// [`crate::scenario::Session`] next to the flat [`Trainer`].
+pub struct HierTrainer {
+    cfg: ExperimentConfig,
+    backend: Box<dyn ComputeBackend>,
+    par: Parallelism,
+    topo: Topology,
+    /// Counter-based row source (synthetic datasets only): any train row
+    /// is re-derivable in O(d) from its index.
+    source: SyntheticSource,
+    test: Dataset,
+    prep_test: Vec<PreparedMatrix>,
+    setup: TrainerSetup,
+    all_clients: Vec<usize>,
+    beta: Arc<Matrix>,
+    /// Root stream; per-client construction forks (`1000 + s*n + j`) are
+    /// re-drawn from it at activation and encode time.
+    root: Rng,
+    delay_rng: Rng,
+    /// Fork 9 of the root — the session re-encode generator stream.
+    reencode_root: Rng,
+    /// The O(active) store: client id -> lazily-built state. Populated on
+    /// first activation, evicted on churn-out.
+    clients: HashMap<usize, ClientState>,
+    /// Shared all-ones mask for uncoded rounds (every client processes
+    /// its full slice; no per-client mask state needed at all).
+    ones_mask: PreparedMatrix,
+    /// Per-step, per-cell prepared composite parity `(x, y, mask)`;
+    /// empty for uncoded. Cells are indexed `0..topo.n_cells()`.
+    parity: Vec<Vec<(PreparedMatrix, PreparedMatrix, PreparedMatrix)>>,
+    /// Stream diagnostics: train rows materialized on demand, and
+    /// per-client encode passes folded into composites.
+    rows_streamed: usize,
+    encode_calls: usize,
+}
+
+impl HierTrainer {
+    /// Build the two-tier engine. Mirrors the flat trainer's
+    /// construction fork map exactly (the bitwise gate depends on it)
+    /// but materializes **no** roster-wide state: no dense embedding, no
+    /// per-client slice/mask tables — those are re-derived on demand.
+    pub(crate) fn build(
+        cfg: &ExperimentConfig,
+        backend: Box<dyn ComputeBackend>,
+        par: Parallelism,
+        topo: &Topology,
+    ) -> Result<HierTrainer> {
+        cfg.validate()?;
+        let p = &cfg.profile;
+        let n = cfg.n_clients;
+        ensure!(
+            cfg.m_train % n == 0,
+            "m_train {} not divisible by {} clients",
+            cfg.m_train,
+            n
+        );
+        let shard = cfg.m_train / n;
+        ensure!(
+            shard % p.l == 0,
+            "per-client shard {shard} not divisible by slice length {}",
+            p.l
+        );
+        let pool = pool::global();
+        crate::log_debug!("compute pool: {} workers (+ caller)", pool.workers());
+
+        let root = Rng::new(cfg.seed);
+        let mut topo_rng = root.fork(2);
+        let delay_rng = root.fork(4);
+        let reencode_root = root.fork(9);
+        // Fork 1 is the data stream; forking is non-mutating, so the
+        // counter-based source sees the exact state `data::load` would.
+        let source = crate::data::stream_source(cfg, &root.fork(1))?;
+        let rff = from_seed(&mut root.fork(3), p.d, p.q, cfg.train.sigma);
+
+        let population = build_population_with_topology(cfg, topo, &mut topo_rng);
+        let caps = vec![p.l; n];
+        let plan = match cfg.scheme {
+            Scheme::Uncoded => None,
+            Scheme::Coded => Some(plan_fixed_u(
+                &population.clients,
+                &caps,
+                cfg.global_batch(),
+                cfg.u(),
+                cfg.epsilon,
+            )?),
+            Scheme::CodedJoint => {
+                let max_mu = population.clients.iter().map(|c| c.mu).fold(0.0, f64::max);
+                let server = crate::simnet::delay::ClientModel {
+                    mu: max_mu * cfg.net.server_speedup,
+                    alpha: 10.0 * cfg.net.alpha,
+                    tau: 1e-6,
+                    p_fail: 0.0,
+                };
+                Some(crate::allocation::optimizer::optimize_with_server(
+                    &population.clients,
+                    &caps,
+                    &server,
+                    p.u_max,
+                    cfg.global_batch(),
+                    cfg.epsilon,
+                )?)
+            }
+        };
+        if let Some(pl) = &plan {
+            crate::log_info!(
+                "hier allocation: t*={:.3}s, u={}, {} cells",
+                pl.deadline,
+                pl.u,
+                topo.n_cells()
+            );
+        }
+
+        // The test set is the only materialized dataset (m_test rows —
+        // evaluation needs all of it every time anyway).
+        let test = source.test_dataset();
+        let test_emb = Arc::new(
+            rff.embed(backend.as_ref(), &test.x, p.chunk).context("embedding test set")?,
+        );
+        let test_idx: Vec<usize> = (0..test.len()).collect();
+        let prep_test = backend.prepare_gather_chunks(&test_emb, &test_idx, p.chunk)?;
+        let ones_mask = backend.prepare_col(&vec![1.0f32; p.l])?;
+
+        let beta = Arc::new(Matrix::zeros(p.q, p.c));
+        let mut t = HierTrainer {
+            cfg: cfg.clone(),
+            backend,
+            par,
+            topo: topo.clone(),
+            source,
+            test,
+            prep_test,
+            setup: TrainerSetup { population, plan, rff },
+            all_clients: (0..n).collect(),
+            beta,
+            root,
+            delay_rng,
+            reencode_root,
+            clients: HashMap::new(),
+            ones_mask,
+            parity: Vec::new(),
+            rows_streamed: 0,
+            encode_calls: 0,
+        };
+        if t.setup.plan.is_some() {
+            // Construction-time parity over the full roster, streamed in
+            // CLIENT_BATCH blocks (the full dataset is touched once, but
+            // never resident). A `u == 0` plan still gets its zero
+            // composites — the flat round unconditionally adds the
+            // (zero) server gradient, and so must we.
+            let roster = t.all_clients.clone();
+            t.parity = t.encode_parity(ParityStream::Construction, &roster)?;
+        }
+        Ok(t)
+    }
+
+    /// Append client `j`'s step-`s` slice (global row indices into the
+    /// label-sorted order) to `out` — the closed-form counterpart of the
+    /// flat trainer's resident `slices[s][j]` table, O(l) and stateless.
+    fn slice_into(&self, s: usize, j: usize, out: &mut Vec<usize>) {
+        let p = &self.cfg.profile;
+        let shard = self.cfg.m_train / self.cfg.n_clients;
+        let base = j * shard + s * p.l;
+        for i in 0..p.l {
+            out.push(balanced_sorted_row(self.cfg.m_train, p.c, base + i));
+        }
+    }
+
+    /// Materialize one client batch's step-`s` operands on demand:
+    /// generate the rows, embed them in a single blocked pass (row
+    /// panels are per-row independent, so a subset embed equals the
+    /// same rows of a whole-dataset embed bitwise), and split into
+    /// per-client `(x, y)` blocks.
+    fn materialize_chunk(&self, s: usize, chunk: &[usize]) -> Result<Vec<(Matrix, Matrix)>> {
+        let p = &self.cfg.profile;
+        let mut idx = Vec::with_capacity(chunk.len() * p.l);
+        for &j in chunk {
+            self.slice_into(s, j, &mut idx);
+        }
+        let raw = self.source.train_rows(&idx);
+        let emb = self
+            .setup
+            .rff
+            .embed(self.backend.as_ref(), &raw, p.chunk)
+            .context("embedding on-demand client block")?;
+        let mut blocks = Vec::with_capacity(chunk.len());
+        for i in 0..chunk.len() {
+            let rows: Vec<usize> = (i * p.l..(i + 1) * p.l).collect();
+            let x = emb.select_rows(&rows);
+            let y = self.source.train_one_hot(&idx[i * p.l..(i + 1) * p.l]);
+            blocks.push((x, y));
+        }
+        Ok(blocks)
+    }
+
+    /// Split an ascending roster into per-cell ascending member lists,
+    /// cells indexed `0..n_cells`.
+    fn partition_cells(topo: &Topology, roster: &[usize]) -> Vec<Vec<usize>> {
+        let mut cells = vec![Vec::new(); topo.n_cells()];
+        for &j in roster {
+            cells[topo.cell_of(j)].push(j);
+        }
+        cells
+    }
+
+    /// Encode per-step, per-cell composite parity over `active`,
+    /// streaming client blocks through the fused dense encode. Cell
+    /// composites are folded member-ascending within each cell; with one
+    /// cell the addition sequence equals the flat trainer's roster-wide
+    /// fold, so the composite is bitwise identical.
+    fn encode_parity(
+        &mut self,
+        stream: ParityStream,
+        active: &[usize],
+    ) -> Result<Vec<Vec<(PreparedMatrix, PreparedMatrix, PreparedMatrix)>>> {
+        let plan = self.setup.plan.clone().expect("parity encode requires a coded plan");
+        let p = self.cfg.profile.clone();
+        let n = self.cfg.n_clients;
+        let steps = self.cfg.steps_per_epoch();
+        let cells = Self::partition_cells(&self.topo, active);
+        let mut out = Vec::with_capacity(steps);
+        for s in 0..steps {
+            let mut row = Vec::with_capacity(cells.len());
+            for members in &cells {
+                let mut comp = CompositeParity::zeros(plan.u, p.u_max, p.q, p.c);
+                if plan.u > 0 {
+                    for chunk in members.chunks(CLIENT_BATCH) {
+                        let blocks = self.materialize_chunk(s, chunk)?;
+                        self.rows_streamed += chunk.len() * p.l;
+                        let mut weights = Vec::with_capacity(chunk.len());
+                        let mut gens = Vec::with_capacity(chunk.len());
+                        for &j in chunk {
+                            // The processed subset (and with it the §3.4
+                            // weights) always comes from the client's
+                            // construction fork — re-derived, never
+                            // stored, so new joiners replay it exactly.
+                            let mut rng = self.root.fork(1000 + (s * n + j) as u64);
+                            let processed = rng.sample_indices(p.l, plan.loads[j].min(p.l));
+                            weights.push(build_weights(p.l, &processed, plan.pnr[j]));
+                            let g = match stream {
+                                ParityStream::Construction => {
+                                    // Continue the construction fork:
+                                    // identical draw order to the flat
+                                    // trainer's parity pass.
+                                    sample_generator(plan.u, p.u_max, p.l, &mut rng)
+                                }
+                                ParityStream::Reencode(base) => {
+                                    let mut rr = self.reencode_root.fork(
+                                        (base * steps as u64 + s as u64) * n as u64 + j as u64,
+                                    );
+                                    sample_generator(plan.u, p.u_max, p.l, &mut rr)
+                                }
+                            };
+                            gens.push(g);
+                        }
+                        let jobs_x: Vec<DenseEncodeJob<'_>> = (0..chunk.len())
+                            .map(|i| DenseEncodeJob {
+                                g: &gens[i],
+                                w: &weights[i],
+                                m: &blocks[i].0,
+                            })
+                            .collect();
+                        self.backend.encode_accumulate_dense_batch(&jobs_x, &mut comp.x, self.par)?;
+                        let jobs_y: Vec<DenseEncodeJob<'_>> = (0..chunk.len())
+                            .map(|i| DenseEncodeJob {
+                                g: &gens[i],
+                                w: &weights[i],
+                                m: &blocks[i].1,
+                            })
+                            .collect();
+                        self.backend.encode_accumulate_dense_batch(&jobs_y, &mut comp.y, self.par)?;
+                        self.encode_calls += chunk.len();
+                    }
+                }
+                row.push((
+                    self.backend.prepare(&comp.x)?,
+                    self.backend.prepare(&comp.y)?,
+                    self.backend.prepare_col(&comp.mask())?,
+                ));
+            }
+            out.push(row);
+        }
+        Ok(out)
+    }
+
+    /// Re-encode every cell's parity for a changed active roster (the
+    /// churn path; same `(stream_base, step, client)` generator counter
+    /// as the flat session's re-encode, so one cell degenerates to it
+    /// bitwise).
+    pub(crate) fn reencode_parity(&mut self, stream_base: u64, active: &[usize]) -> Result<()> {
+        self.parity = self.encode_parity(ParityStream::Reencode(stream_base), active)?;
+        Ok(())
+    }
+
+    /// Reconcile the O(active) store with this epoch's roster: evict
+    /// churned-out clients, lazily build state for first-time joiners by
+    /// replaying their construction forks (coded plans only — uncoded
+    /// rounds use the shared all-ones mask and need no per-client state).
+    fn sync_roster(&mut self, active: &[usize]) -> Result<()> {
+        let Some(plan) = &self.setup.plan else {
+            return Ok(());
+        };
+        let keep: HashSet<usize> = active.iter().copied().collect();
+        self.clients.retain(|j, _| keep.contains(j));
+        let p = &self.cfg.profile;
+        let n = self.cfg.n_clients;
+        let steps = self.cfg.steps_per_epoch();
+        for &j in active {
+            if self.clients.contains_key(&j) {
+                continue;
+            }
+            let mut prep_masks = Vec::with_capacity(steps);
+            for s in 0..steps {
+                let mut rng = self.root.fork(1000 + (s * n + j) as u64);
+                let processed = rng.sample_indices(p.l, plan.loads[j].min(p.l));
+                let mut mask = vec![0.0f32; p.l];
+                for &k in &processed {
+                    mask[k] = 1.0;
+                }
+                prep_masks.push(self.backend.prepare_col(&mask)?);
+            }
+            self.clients.insert(j, ClientState { prep_masks });
+        }
+        Ok(())
+    }
+
+    /// One two-tier global round: delays are sampled over the whole
+    /// active roster in ascending id (one shared stream — identical to
+    /// the flat round), then each cell folds its arrived members'
+    /// gradients and its own composite parity gradient, cells ascending.
+    /// With one cell the fold order is exactly the flat round's:
+    /// members ascending, parity last.
+    pub(crate) fn step_round(
+        &mut self,
+        s: usize,
+        lr: f32,
+        lam: f32,
+        m_batch: f32,
+        active: &[usize],
+        models: Option<&[ClientModel]>,
+    ) -> Result<StepOutcome> {
+        self.sync_roster(active)?;
+        let p = &self.cfg.profile;
+        let mut grad_sum = Matrix::zeros(p.q, p.c);
+        let arrivals: usize;
+        let step_time: f64;
+        let mut stragglers = Vec::new();
+        let models: &[ClientModel] = match models {
+            Some(m) => m,
+            None => &self.setup.population.clients,
+        };
+        let beta_p = self.backend.prepare_shared(&self.beta)?;
+
+        match &self.setup.plan {
+            None => {
+                let mut t_max = 0.0f64;
+                for &j in active {
+                    let t = models[j].sample(p.l, &mut self.delay_rng);
+                    t_max = t_max.max(t.total());
+                }
+                let cells = Self::partition_cells(&self.topo, active);
+                for members in &cells {
+                    for chunk in members.chunks(CLIENT_BATCH) {
+                        let blocks = self.materialize_chunk(s, chunk)?;
+                        self.rows_streamed += chunk.len() * p.l;
+                        let prepared: Vec<(PreparedMatrix, PreparedMatrix)> = blocks
+                            .into_iter()
+                            .map(|(x, y)| (PreparedMatrix::Native(x), PreparedMatrix::Native(y)))
+                            .collect();
+                        let ops: Vec<GradClientOperands<'_>> = prepared
+                            .iter()
+                            .map(|(px, py)| GradClientOperands {
+                                x: px,
+                                y: py,
+                                mask: &self.ones_mask,
+                            })
+                            .collect();
+                        self.backend.grad_cell_p(&ops, &beta_p, &mut grad_sum, self.par)?;
+                    }
+                }
+                arrivals = active.len();
+                step_time = t_max;
+            }
+            Some(plan) => {
+                // Arrivals are decided first over the global roster —
+                // the delay stream must not depend on the cell split.
+                let mut arrived = Vec::with_capacity(active.len());
+                for &j in active {
+                    let load = plan.loads[j];
+                    if load == 0 {
+                        continue;
+                    }
+                    let t = models[j].sample(load, &mut self.delay_rng);
+                    if t.total() <= plan.deadline {
+                        arrived.push(j);
+                    } else {
+                        stragglers.push(j);
+                    }
+                }
+                let cells = Self::partition_cells(&self.topo, &arrived);
+                for (cell, members) in cells.iter().enumerate() {
+                    for chunk in members.chunks(CLIENT_BATCH) {
+                        let blocks = self.materialize_chunk(s, chunk)?;
+                        self.rows_streamed += chunk.len() * p.l;
+                        let prepared: Vec<(PreparedMatrix, PreparedMatrix)> = blocks
+                            .into_iter()
+                            .map(|(x, y)| (PreparedMatrix::Native(x), PreparedMatrix::Native(y)))
+                            .collect();
+                        let ops: Vec<GradClientOperands<'_>> = prepared
+                            .iter()
+                            .zip(chunk)
+                            .map(|((px, py), j)| GradClientOperands {
+                                x: px,
+                                y: py,
+                                mask: &self.clients[j].prep_masks[s],
+                            })
+                            .collect();
+                        self.backend.grad_cell_p(&ops, &beta_p, &mut grad_sum, self.par)?;
+                    }
+                    // The cell's composite parity gradient closes its
+                    // sub-round — added even when u == 0 (a zero matrix),
+                    // matching the flat round's unconditional server add.
+                    let (px, py, pm) = &self.parity[s][cell];
+                    let gc = self.backend.grad_server_p(px, py, &beta_p, pm)?;
+                    grad_sum.axpy_inplace(1.0, &gc);
+                }
+                arrivals = arrived.len();
+                step_time = plan.deadline;
+            }
+        }
+
+        let g_mean = grad_sum.scale(1.0 / m_batch);
+        self.beta = Arc::new(self.backend.update(&self.beta, &g_mean, lr, lam)?);
+        Ok(StepOutcome { step_time_s: step_time, arrivals, stragglers, delays: Vec::new() })
+    }
+
+    /// Test accuracy + current-batch ridge loss. The batch loss streams
+    /// the step's rows through the on-demand generator in the flat
+    /// trainer's exact global order (ascending client, slice order), so
+    /// the f64 accumulation sequence — and the loss — is bitwise equal.
+    pub(crate) fn evaluate(&self, s: usize) -> Result<(f64, f64)> {
+        let p = &self.cfg.profile;
+        let beta_p = self.backend.prepare_shared(&self.beta)?;
+        let logits = self.predict_prepared(&self.prep_test, self.test.len(), &beta_p)?;
+        let acc = self.test.accuracy(&logits);
+
+        let mut idx = Vec::with_capacity(self.cfg.global_batch());
+        for j in 0..self.cfg.n_clients {
+            self.slice_into(s, j, &mut idx);
+        }
+        let m = idx.len() as f64;
+        let mut se = 0.0f64;
+        for group in idx.chunks(p.chunk) {
+            let raw = self.source.train_rows(group);
+            let emb = self
+                .setup
+                .rff
+                .embed(self.backend.as_ref(), &raw, p.chunk)
+                .context("embedding eval batch")?;
+            let pred = self.backend.predict_chunk_p(&PreparedMatrix::Native(emb), &beta_p)?;
+            for (r, &gi) in group.iter().enumerate() {
+                let label = self.source.label(gi);
+                for (k, &a) in pred.row(r).iter().enumerate() {
+                    let b = if k == label { 1.0f32 } else { 0.0f32 };
+                    se += ((a - b) as f64).powi(2);
+                }
+            }
+        }
+        let reg: f64 = self.beta.data().iter().map(|&v| (v as f64).powi(2)).sum();
+        let loss = se / (2.0 * m) + 0.5 * self.cfg.train.lambda * reg;
+        Ok((acc, loss))
+    }
+
+    fn predict_prepared(
+        &self,
+        chunks: &[PreparedMatrix],
+        rows: usize,
+        beta_p: &PreparedMatrix,
+    ) -> Result<Matrix> {
+        let c = self.beta.cols();
+        let chunk = self.cfg.profile.chunk;
+        let mut out = Matrix::zeros(rows, c);
+        for (i, pc) in chunks.iter().enumerate() {
+            let logits = self.backend.predict_chunk_p(pc, beta_p)?;
+            let base = i * chunk;
+            let take = chunk.min(rows.saturating_sub(base));
+            for r in 0..take {
+                out.row_mut(base + r).copy_from_slice(logits.row(r));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Setup diagnostics (population, allocation plan, RFF params).
+    pub fn setup(&self) -> &TrainerSetup {
+        &self.setup
+    }
+
+    /// Current model.
+    pub fn beta(&self) -> &Matrix {
+        &self.beta
+    }
+
+    /// Name of the backend executing the compute.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The round-parallelism configuration.
+    pub fn parallelism(&self) -> Parallelism {
+        self.par
+    }
+
+    /// On-demand streaming counters: `(rows materialized, per-client
+    /// encode passes)` — the scale-run amortization diagnostics.
+    pub fn stream_stats(&self) -> (usize, usize) {
+        (self.rows_streamed, self.encode_calls)
+    }
+
+    /// Clients currently resident in the O(active) store.
+    pub fn resident_clients(&self) -> usize {
+        self.clients.len()
+    }
+}

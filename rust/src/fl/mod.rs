@@ -1,11 +1,15 @@
 //! The federated-learning runtime: per-client state, the learning-rate
-//! schedule, and the [`trainer::Trainer`] engine that runs both the
-//! uncoded baseline and the CodedFedL scheme over the simulated MEC
-//! network. Construction goes through [`crate::scenario`] — the trainer
-//! constructors are deprecated shims kept for compatibility.
+//! schedule, the flat [`trainer::Trainer`] engine, and the hierarchical
+//! two-tier [`hier::HierTrainer`] engine (per-cell coded sub-rounds,
+//! O(active) state, on-demand data) that runs both the uncoded baseline
+//! and the CodedFedL scheme over the simulated MEC network. Construction
+//! goes through [`crate::scenario`] — the trainer constructors are
+//! deprecated shims kept for compatibility.
 
 pub mod embedding;
+pub mod hier;
 pub mod lr;
 pub mod trainer;
 
+pub use hier::HierTrainer;
 pub use trainer::{SharedData, StepOutcome, Trainer, TrainerSetup};

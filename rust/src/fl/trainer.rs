@@ -835,9 +835,7 @@ impl Trainer {
                             GradClientOperands { x: px, y: py, mask: pm }
                         })
                         .collect();
-                    for g in &self.backend.grad_clients_p(&clients, &beta_p, self.par)? {
-                        grad_sum.axpy_inplace(1.0, g);
-                    }
+                    self.backend.grad_cell_p(&clients, &beta_p, &mut grad_sum, self.par)?;
                 }
                 arrivals = active.len();
                 step_time = t_max;
@@ -885,9 +883,7 @@ impl Trainer {
                             GradClientOperands { x: px, y: py, mask: pm }
                         })
                         .collect();
-                    for g in &self.backend.grad_clients_p(&clients, &beta_p, self.par)? {
-                        grad_sum.axpy_inplace(1.0, g);
-                    }
+                    self.backend.grad_cell_p(&clients, &beta_p, &mut grad_sum, self.par)?;
                 }
                 arrivals = arrived.len();
                 let (px, py, pm) = match ctx.and_then(|c| c.parity) {

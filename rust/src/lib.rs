@@ -106,6 +106,23 @@
 //!   re-encode composite parity through
 //!   [`coding::encoder::ReencodeCache`] whenever the active set changes
 //!   (re-reading ~zero slice rows, freshly drawing every generator).
+//! * For 100k–1M-client populations the session runs on the
+//!   **hierarchical two-tier engine** ([`fl::HierTrainer`], opted in
+//!   with `ScenarioBuilder::hierarchical` / `scenario.hierarchical` /
+//!   the `edge-100k` named preset): every [`simnet::Topology`] cell
+//!   executes its own coded sub-round — arrivals partitioned by cell,
+//!   per-cell composite parity, per-cell server-side decode — and the
+//!   coordinator folds the per-cell gradients in ascending cell order.
+//!   Client state lives in an **O(active)** lazy store (created on
+//!   first activation, evicted on churn-out) and training rows are
+//!   **generated on demand** from the counter-based synthetic source
+//!   ([`data`]) in fixed client-batch chunks, streamed through a fused
+//!   embed → encode/gradient accumulate — no resident `m_train × q`
+//!   embedding, so peak memory follows the active roster, not the
+//!   population. On a trivial 1-cell topology the two-tier engine is
+//!   **bitwise identical** to the flat session (gated in
+//!   `tests/scenario_hier.rs`); the flat-vs-hierarchical peak-RSS
+//!   ratio is tracked as a bench cell in `BENCH_scenario.json`.
 //!
 //! On top of the streaming observers sits the **adaptive control plane**
 //! ([`control`]): the paper's load allocation `l*_j` is solved from

@@ -127,13 +127,18 @@ fn scenario_flags() -> Vec<codedfedl::cli::FlagSpec> {
         })
         .collect();
     flags.extend([
-        flag("scenario", "named scenario preset: static-tiny|churn-cells|edge-1k", None),
+        flag("scenario", "named scenario preset: static-tiny|churn-cells|edge-1k|edge-100k", None),
         flag("population", "population size (m_train re-derived)", None),
         flag("cells", "MEC cells (graded ladder)", None),
         flag("churn", "churn schedule: none|bernoulli:P[:MIN]|block:FRAC:PERIOD", None),
         flag("link-rates", "link rate process: static|diurnal:PERIOD:DEPTH|jitter:SIGMA", None),
         flag("compute-rates", "compute rate process (same forms as link-rates)", None),
         flag("steps", "global mini-batch steps per epoch", None),
+        flag(
+            "hierarchical",
+            "two-tier per-cell engine with O(active) state + on-demand data: true|false",
+            None,
+        ),
         flag(
             "adaptive",
             "control policy: off|oracle[:K]|periodic:K|drift[:THRESH] (spec keys: \
@@ -177,6 +182,7 @@ fn cmd_scenario(args: &codedfedl::cli::Args) -> Result<()> {
         ("scenario.link_rates", "link-rates"),
         ("scenario.compute_rates", "compute-rates"),
         ("scenario.steps_per_epoch", "steps"),
+        ("scenario.hierarchical", "hierarchical"),
         ("scenario.adaptive", "adaptive"),
     ] {
         if let Some(v) = args.get(flag_name) {
@@ -225,13 +231,14 @@ fn cmd_scenario(args: &codedfedl::cli::Args) -> Result<()> {
     let (reencodes, rows_reread, cache_calls) = session.reencode_stats();
     println!(
         "done: steps={} sim_time={:.1}s host_time={:.2}s final_acc={:.4} \
-         mean_arrival_frac={:.3} replans={} parity_reencodes={} \
+         mean_arrival_frac={:.3} active={} replans={} parity_reencodes={} \
          (cache: {} encodes, {} rows re-read)",
         summary.steps,
         summary.total_sim_time_s,
         summary.host_time_s,
         summary.final_accuracy,
         summary.mean_arrival_frac,
+        summary.final_active,
         summary.replans,
         reencodes,
         cache_calls,

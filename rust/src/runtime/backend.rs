@@ -286,6 +286,32 @@ pub trait ComputeBackend {
         clients.iter().map(|c| self.grad_client_p(c.x, c.y, beta, c.mask)).collect()
     }
 
+    /// Fold a client batch's masked gradients straight into `out`, in
+    /// batch order — the per-cell sub-round aggregation primitive of the
+    /// hierarchical session (and the flat round's batch fold, which is
+    /// the 1-cell special case). The default computes the batch through
+    /// [`ComputeBackend::grad_clients_p`] and accumulates in batch
+    /// order, so the addition sequence equals the caller-side loop it
+    /// replaces — bitwise-neutral by construction.
+    fn grad_cell_p(
+        &self,
+        clients: &[GradClientOperands<'_>],
+        beta: &PreparedMatrix,
+        out: &mut Matrix,
+        par: Parallelism,
+    ) -> Result<()> {
+        for g in &self.grad_clients_p(clients, beta, par)? {
+            ensure!(
+                out.shape() == g.shape(),
+                "grad_cell_p: accumulator is {:?} but a client gradient is {:?}",
+                out.shape(),
+                g.shape()
+            );
+            out.axpy_inplace(1.0, g);
+        }
+        Ok(())
+    }
+
     /// Streaming parity encode over a whole **client batch**:
     /// `out += sum_j G_j @ (w_j .* source[idx_j])`, accumulated in batch
     /// order. The default folds the clients in sequentially through
@@ -871,6 +897,46 @@ mod tests {
         }
         // Empty batch is a no-op.
         assert!(nb.grad_clients_p(&[], &beta_p, Parallelism::new(2, 4)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn grad_cell_fold_matches_manual_batch_fold() {
+        // The cell fold must equal the caller-side loop it replaced:
+        // grad_clients_p then ascending axpy — bitwise, at any shards.
+        let mut rng = Rng::new(33);
+        let nb = NativeBackend;
+        let source = Arc::new(Matrix::randn(50, 6, 0.0, 1.0, &mut rng));
+        let labels = Arc::new(Matrix::randn(50, 3, 0.0, 1.0, &mut rng));
+        let beta = Matrix::randn(6, 3, 0.0, 1.0, &mut rng);
+        let beta_p = nb.prepare(&beta).unwrap();
+        let prepared: Vec<_> = (0..5)
+            .map(|j| {
+                let idx: Vec<usize> = (0..7).map(|k| (j * 7 + k) % 50).collect();
+                let mask: Vec<f32> = (0..7).map(|k| if k == j { 0.0 } else { 1.0 }).collect();
+                (
+                    nb.prepare_gather(&source, &idx).unwrap(),
+                    nb.prepare_gather(&labels, &idx).unwrap(),
+                    nb.prepare_col(&mask).unwrap(),
+                )
+            })
+            .collect();
+        let clients: Vec<GradClientOperands<'_>> = prepared
+            .iter()
+            .map(|(px, py, pm)| GradClientOperands { x: px, y: py, mask: pm })
+            .collect();
+        for shards in [1, 2, 8] {
+            let par = Parallelism::new(2, shards);
+            let mut want = Matrix::zeros(6, 3);
+            for g in &nb.grad_clients_p(&clients, &beta_p, par).unwrap() {
+                want.axpy_inplace(1.0, g);
+            }
+            let mut got = Matrix::zeros(6, 3);
+            nb.grad_cell_p(&clients, &beta_p, &mut got, par).unwrap();
+            assert_eq!(got, want, "cell fold diverged at {shards} shards");
+        }
+        // Shape mismatch is rejected before touching the accumulator.
+        let mut bad = Matrix::zeros(2, 2);
+        assert!(nb.grad_cell_p(&clients, &beta_p, &mut bad, Parallelism::new(1, 1)).is_err());
     }
 
     #[test]

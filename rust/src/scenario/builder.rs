@@ -57,6 +57,12 @@ pub struct Scenario {
     pub adaptive: ControlPolicy,
     /// EWMA weight of the control plane's online rate estimators.
     pub adaptive_ewma: f64,
+    /// Run on the hierarchical two-tier engine
+    /// ([`crate::fl::hier::HierTrainer`]): per-cell coded sub-rounds,
+    /// O(active) session state, on-demand data generation. Opt-in —
+    /// requires a synthetic (streamable) dataset; a trivial 1-cell
+    /// hierarchical run is bitwise-equal to the flat engine.
+    pub hierarchical: bool,
 }
 
 impl Scenario {
@@ -73,6 +79,7 @@ impl Scenario {
             use_reencode_cache: true,
             adaptive: ControlPolicy::Off,
             adaptive_ewma: DEFAULT_ADAPTIVE_EWMA,
+            hierarchical: false,
         }
     }
 
@@ -106,6 +113,20 @@ impl Scenario {
                  the uncoded scheme has no plan to adapt (use scenario.adaptive = off)"
             );
         }
+        if self.hierarchical {
+            anyhow::ensure!(
+                self.adaptive.is_off(),
+                "the adaptive control plane runs on the flat engine only — \
+                 disable scenario.hierarchical or set scenario.adaptive = off"
+            );
+            anyhow::ensure!(
+                self.cfg.dataset.starts_with("synth-"),
+                "hierarchical sessions generate rows on demand and need a \
+                 streamable synthetic dataset (synth-mnist|synth-fashion); \
+                 dataset '{}' must use the flat session",
+                self.cfg.dataset
+            );
+        }
         Ok(())
     }
 }
@@ -130,6 +151,7 @@ pub struct ScenarioBuilder {
     use_reencode_cache: bool,
     adaptive: ControlPolicy,
     adaptive_ewma: f64,
+    hierarchical: bool,
 }
 
 impl ScenarioBuilder {
@@ -153,6 +175,7 @@ impl ScenarioBuilder {
             use_reencode_cache: true,
             adaptive: ControlPolicy::Off,
             adaptive_ewma: DEFAULT_ADAPTIVE_EWMA,
+            hierarchical: false,
         }
     }
 
@@ -166,7 +189,12 @@ impl ScenarioBuilder {
     ///   links and compute jitter (the CI population-scale smoke).
     ///   Population-scale runs soften the §A.2 geometric ladders
     ///   (`k1`/`k2` are *per-rank* decay factors, so their defaults
-    ///   starve rank-1000 clients to numerically dead rates).
+    ///   starve rank-1000 clients to numerically dead rates);
+    /// * `edge-100k` — 100 000 clients over 32 cells on the
+    ///   **hierarchical** two-tier engine (O(active) state, on-demand
+    ///   data), with Bernoulli churn and diurnal link rates: the
+    ///   scale-smoke scenario whose peak RSS stays sublinear in the
+    ///   population.
     pub fn named(name: &str) -> Result<ScenarioBuilder> {
         match name {
             "static-tiny" => Self::from_preset("tiny"),
@@ -194,7 +222,27 @@ impl ScenarioBuilder {
                     .link_rates(RateProcess::Diurnal { period_epochs: 8.0, depth: 0.3 })
                     .compute_rates(RateProcess::Jitter { sigma: 0.1 }))
             }
-            _ => bail!("unknown scenario preset '{name}' (static-tiny|churn-cells|edge-1k)"),
+            "edge-100k" => {
+                let mut b = Self::from_preset("tiny")?;
+                // Rank ladders flattened so rank-100k rates stay finite.
+                b.set("net.k1", "0.99996")?;
+                b.set("net.k2", "0.99995")?;
+                b.set("train.epochs", "4")?;
+                // Only the final eval fires (a full eval streams the
+                // whole 100k-client batch through the generator).
+                b.set("train.eval_every_steps", "1000")?;
+                Ok(b
+                    .population(100_000)
+                    .steps_per_epoch(1)
+                    .cells(32)
+                    .hierarchical(true)
+                    .churn(ChurnSchedule::Bernoulli { p_away: 0.25, min_active: 4096 })
+                    .link_rates(RateProcess::Diurnal { period_epochs: 8.0, depth: 0.3 }))
+            }
+            _ => bail!(
+                "unknown scenario preset '{name}' \
+                 (static-tiny|churn-cells|edge-1k|edge-100k)"
+            ),
         }
     }
 
@@ -295,6 +343,15 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Run on the hierarchical two-tier engine (spec key
+    /// `scenario.hierarchical`): per-cell coded sub-rounds, O(active)
+    /// state, on-demand data. Requires a synthetic dataset; a 1-cell
+    /// hierarchical run is bitwise-equal to the flat session.
+    pub fn hierarchical(mut self, on: bool) -> ScenarioBuilder {
+        self.hierarchical = on;
+        self
+    }
+
     /// Apply one `key = value` override. Scenario keys are prefixed
     /// `scenario.`; everything else forwards to
     /// [`ExperimentConfig::set`].
@@ -310,6 +367,7 @@ impl ScenarioBuilder {
             "scenario.reencode_cache" => self.use_reencode_cache = v.parse()?,
             "scenario.adaptive" => self.adaptive = ControlPolicy::parse(v)?,
             "scenario.adaptive.ewma" => self.adaptive_ewma = v.parse()?,
+            "scenario.hierarchical" => self.hierarchical = v.parse()?,
             other => self.cfg.set(other, value)?,
         }
         Ok(())
@@ -349,17 +407,22 @@ impl ScenarioBuilder {
             use_reencode_cache: self.use_reencode_cache,
             adaptive: self.adaptive,
             adaptive_ewma: self.adaptive_ewma,
+            hierarchical: self.hierarchical,
         };
         scenario.validate()?;
         Ok(scenario)
     }
 
     /// Compile and build a runnable [`Session`]. The backend is resolved
-    /// by name through the registry and the dataset + RFF embedding are
-    /// built here.
+    /// by name through the registry. Flat scenarios build the dataset +
+    /// RFF embedding here; hierarchical scenarios build **no** shared
+    /// dense state at all (their rows are generated on demand).
     pub fn build(self) -> Result<Session> {
         let scenario = self.compile()?;
         let backend = create_backend(&scenario.cfg.backend, &scenario.cfg)?;
+        if scenario.hierarchical {
+            return Session::new_hier(scenario, backend);
+        }
         let shared = Arc::new(SharedData::build(&scenario.cfg, backend.as_ref())?);
         Session::new(scenario, backend, shared)
     }
@@ -367,18 +430,26 @@ impl ScenarioBuilder {
     /// [`ScenarioBuilder::build`] with an injected backend (tests).
     pub fn build_with_backend(self, backend: Box<dyn ComputeBackend>) -> Result<Session> {
         let scenario = self.compile()?;
+        if scenario.hierarchical {
+            return Session::new_hier(scenario, backend);
+        }
         let shared = Arc::new(SharedData::build(&scenario.cfg, backend.as_ref())?);
         Session::new(scenario, backend, shared)
     }
 
     /// [`ScenarioBuilder::build`] on pre-built [`SharedData`] (the sweep
-    /// fast path: variants share one embedding).
+    /// fast path: variants share one embedding). Flat scenarios only —
+    /// a hierarchical session holds no shared dense state to reuse.
     pub fn build_with_shared(
         self,
         backend: Box<dyn ComputeBackend>,
         shared: Arc<SharedData>,
     ) -> Result<Session> {
         let scenario = self.compile()?;
+        anyhow::ensure!(
+            !scenario.hierarchical,
+            "hierarchical scenarios build no SharedData — use build/build_with_backend"
+        );
         Session::new(scenario, backend, shared)
     }
 }
@@ -491,7 +562,7 @@ mod tests {
 
     #[test]
     fn named_presets_compile() {
-        for name in ["static-tiny", "churn-cells", "edge-1k"] {
+        for name in ["static-tiny", "churn-cells", "edge-1k", "edge-100k"] {
             let s = ScenarioBuilder::named(name).unwrap().compile().unwrap();
             s.validate().unwrap();
             if name == "edge-1k" {
@@ -499,8 +570,39 @@ mod tests {
                 assert_eq!(s.topology.n_cells(), 2);
                 assert!(!s.is_static());
             }
+            if name == "edge-100k" {
+                assert_eq!(s.cfg.n_clients, 100_000);
+                assert_eq!(s.cfg.m_train, 100_000 * s.cfg.profile.l);
+                assert_eq!(s.topology.n_cells(), 32);
+                assert!(s.hierarchical, "edge-100k runs the two-tier engine");
+                assert!(!s.is_static());
+                assert_eq!(
+                    s.churn,
+                    ChurnSchedule::Bernoulli { p_away: 0.25, min_active: 4096 }
+                );
+            }
         }
         assert!(ScenarioBuilder::named("mystery").is_err());
+    }
+
+    #[test]
+    fn hierarchical_flag_parses_and_validates() {
+        let mut b = ScenarioBuilder::from_preset("tiny").unwrap();
+        b.set("scenario.hierarchical", "true").unwrap();
+        let s = b.compile().unwrap();
+        assert!(s.hierarchical);
+        // Hierarchical + adaptive control is rejected (flat engine only).
+        let bad = ScenarioBuilder::from_preset("tiny")
+            .unwrap()
+            .hierarchical(true)
+            .adaptive(ControlPolicy::Periodic { every_epochs: 2 });
+        assert!(bad.compile().is_err());
+        // Hierarchical needs a streamable synthetic dataset.
+        let bad = ScenarioBuilder::from_preset("tiny")
+            .unwrap()
+            .hierarchical(true)
+            .dataset("mnist");
+        assert!(bad.compile().is_err());
     }
 
     #[test]

@@ -2,19 +2,27 @@
 //! scenario, compile it, run it, stream the results.
 //!
 //! ```text
-//! ScenarioBuilder          Scenario              Session
-//! (what to run)   compile  (validated spec)  new  (runnable)
-//!   population  ─────────►  cfg + dynamics ─────► trainer engine
-//!   topology                                      + churn roster
-//!   churn                                         + rate modulation
-//!   rate processes                                + parity re-encode
-//!   adaptive policy                               + control plane
-//!   backend/parallelism                           │ run_observed
+//! ScenarioBuilder          Scenario                   Session
+//! (what to run)   compile  (validated spec)  build    (runnable)
+//!   population  ─────────►  cfg + dynamics ──┬──────► flat engine (Trainer)
+//!   topology                                 │          resident SharedData
+//!   churn                     hierarchical?  │          + churn roster
+//!   rate processes                           │          + parity re-encode
+//!   adaptive policy                          │          + control plane
+//!   backend/parallelism                      └──────► two-tier engine
+//!   hierarchical                                       (HierTrainer)
+//!                                                      O(active) client store
+//!                                                      on-demand row streams
+//!                                                      per-cell sub-rounds:
+//!                                                        cell 0 ─┐ composite
+//!                                                        cell 1 ─┼► fold in
+//!                                                        cell k ─┘ cell order
+//!                                                 │ run_observed
 //!                                                 ▼
 //!                                        RoundObserver events
 //!                          (rounds, evals, epochs, churn, control)
 //!                                                 │
-//!                              ┌──────────────────┘ (adaptive only)
+//!                              ┌──────────────────┘ (adaptive, flat only)
 //!                              ▼
 //!               AdaptiveController (crate::control)
 //!       observer telemetry + realized delays → rate estimators
@@ -39,8 +47,22 @@
 //!   (incremental JSON lines), [`ConsoleObserver`], [`EventLog`]
 //!   (determinism tests), [`Fanout`].
 //!
+//! Sessions run on one of two engines. The default **flat** engine
+//! ([`crate::fl::Trainer`]) keeps the whole dense embedding resident and
+//! serves any population that fits in memory. The **hierarchical
+//! two-tier** engine ([`crate::fl::HierTrainer`], opted in with
+//! [`ScenarioBuilder::hierarchical`], the `scenario.hierarchical` spec
+//! key, or the `edge-100k` preset) targets 100k–1M-client populations:
+//! each topology cell runs its own coded sub-round and the coordinator
+//! folds per-cell composites in ascending cell order; client state is an
+//! O(active) lazy store (evicted on churn-out) and training rows are
+//! generated on demand from the counter-based synthetic source, so peak
+//! memory tracks the active roster instead of `m_train`.
+//!
 //! Static single-cell scenarios are **bitwise identical** to the legacy
-//! deprecated `Trainer` constructors at any thread/shard count; dynamic
+//! deprecated `Trainer` constructors at any thread/shard count; a
+//! trivial 1-cell hierarchical session is **bitwise identical** to the
+//! flat session (`tests/scenario_hier.rs`); dynamic
 //! scenarios are bitwise reproducible from the seed (all dynamics are
 //! derived on the driving thread from dedicated seed forks).
 

@@ -43,6 +43,7 @@ use crate::coding::generator::sample_generator;
 use crate::coding::weights::build_weights;
 use crate::config::ExperimentConfig;
 use crate::control::AdaptiveController;
+use crate::fl::hier::HierTrainer;
 use crate::fl::lr::LrSchedule;
 use crate::fl::trainer::{RoundCtx, SharedData, Trainer, TrainerSetup};
 use crate::mathx::linalg::Matrix;
@@ -85,6 +86,19 @@ pub struct SessionSummary {
     /// How many times the adaptive control plane re-solved the
     /// allocation (0 when the policy is `off`).
     pub replans: usize,
+    /// Size of the active roster in the final epoch (scale runs report
+    /// occupancy without replaying the JSONL).
+    pub final_active: usize,
+}
+
+/// The round engine a session drives: the flat single-tier
+/// [`Trainer`] (full roster + dataset resident, the legacy-bitwise
+/// path) or the hierarchical two-tier [`HierTrainer`] (per-cell
+/// sub-rounds, O(active) state, on-demand data — opt-in via
+/// [`crate::scenario::ScenarioBuilder::hierarchical`]).
+enum Engine {
+    Flat(Trainer),
+    Hier(HierTrainer),
 }
 
 /// One prepared, runnable experiment. Built by
@@ -93,7 +107,7 @@ pub struct SessionSummary {
 /// engine).
 pub struct Session {
     scenario: Scenario,
-    trainer: Trainer,
+    engine: Engine,
     churn_root: Rng,
     compute_rate_root: Rng,
     link_rate_root: Rng,
@@ -198,6 +212,11 @@ impl Session {
         shared: Arc<SharedData>,
     ) -> Result<Session> {
         scenario.validate()?;
+        ensure!(
+            !scenario.hierarchical,
+            "hierarchical scenarios carry no shared dense state — build through \
+             ScenarioBuilder::build / Session::new_hier"
+        );
         let topo =
             if scenario.topology.is_trivial() { None } else { Some(&scenario.topology) };
         let trainer =
@@ -225,7 +244,7 @@ impl Session {
             )?)
         };
         Ok(Session {
-            trainer,
+            engine: Engine::Flat(trainer),
             // Dedicated seed forks so scenario dynamics never perturb the
             // data (1), topology (2), RFF (3), delay (4) or per-client
             // parity (1000+) streams the engine already consumes.
@@ -239,6 +258,43 @@ impl Session {
             caches: Vec::new(),
             reencodes: 0,
             controller,
+            ctrl_plan: None,
+            ctrl_masks: None,
+            ctrl_prep_masks: None,
+            replan_count: 0,
+            scenario,
+        })
+    }
+
+    /// Build a session on the hierarchical two-tier engine (per-cell
+    /// coded sub-rounds, O(active) client store, on-demand data). No
+    /// [`SharedData`] — that is the point: nothing roster- or
+    /// dataset-sized is materialized. Requires
+    /// [`Scenario::hierarchical`]; the adaptive control plane is
+    /// rejected at scenario validation (flat engine only, for now).
+    pub fn new_hier(scenario: Scenario, backend: Box<dyn ComputeBackend>) -> Result<Session> {
+        scenario.validate()?;
+        ensure!(
+            scenario.hierarchical,
+            "Session::new_hier requires a hierarchical scenario \
+             (ScenarioBuilder::hierarchical(true))"
+        );
+        let trainer =
+            HierTrainer::build(&scenario.cfg, backend, scenario.par, &scenario.topology)?;
+        let root = Rng::new(scenario.cfg.seed);
+        let n = scenario.cfg.n_clients;
+        Ok(Session {
+            engine: Engine::Hier(trainer),
+            churn_root: root.fork(7),
+            compute_rate_root: root.fork(8),
+            reencode_root: root.fork(9),
+            link_rate_root: root.fork(10),
+            ctrl_root: root.fork(11),
+            encoded_for: (0..n).collect(),
+            parity_override: None,
+            caches: Vec::new(),
+            reencodes: 0,
+            controller: None,
             ctrl_plan: None,
             ctrl_masks: None,
             ctrl_prep_masks: None,
@@ -270,34 +326,71 @@ impl Session {
         &self.scenario
     }
 
-    /// The underlying engine (diagnostics: population, plan, pool, ...).
+    /// The flat engine, for flat-only accessors. Panics on hierarchical
+    /// sessions — every caller below documents the restriction.
+    fn flat(&self) -> &Trainer {
+        match &self.engine {
+            Engine::Flat(t) => t,
+            Engine::Hier(_) => panic!(
+                "this accessor needs the flat engine; hierarchical sessions \
+                 hold no roster-wide trainer state"
+            ),
+        }
+    }
+
+    /// The underlying flat engine (diagnostics: population, plan, pool,
+    /// ...). **Flat sessions only** — panics on hierarchical sessions,
+    /// which expose no dense trainer state.
     pub fn trainer(&self) -> &Trainer {
-        &self.trainer
+        self.flat()
     }
 
     /// Setup diagnostics (population, allocation plan, RFF params).
     pub fn setup(&self) -> &TrainerSetup {
-        self.trainer.setup()
+        match &self.engine {
+            Engine::Flat(t) => t.setup(),
+            Engine::Hier(h) => h.setup(),
+        }
     }
 
     /// Current model.
     pub fn beta(&self) -> &Matrix {
-        self.trainer.beta()
+        match &self.engine {
+            Engine::Flat(t) => t.beta(),
+            Engine::Hier(h) => h.beta(),
+        }
     }
 
     /// Name of the backend actually executing the compute.
     pub fn backend_name(&self) -> &'static str {
-        self.trainer.backend_name()
+        match &self.engine {
+            Engine::Flat(t) => t.backend_name(),
+            Engine::Hier(h) => h.backend_name(),
+        }
     }
 
     /// Round parallelism this session runs with.
     pub fn parallelism(&self) -> Parallelism {
-        self.trainer.parallelism()
+        match &self.engine {
+            Engine::Flat(t) => t.parallelism(),
+            Engine::Hier(h) => h.parallelism(),
+        }
     }
 
     /// The shared dataset + embedding state (sweep reuse, diagnostics).
+    /// **Flat sessions only** — hierarchical sessions generate rows on
+    /// demand and hold no shared dense state.
     pub fn shared_data(&self) -> &Arc<SharedData> {
-        self.trainer.shared_data()
+        self.flat().shared_data()
+    }
+
+    /// Clients resident in the hierarchical engine's O(active) store
+    /// (0 for flat sessions, whose state is population-sized by design).
+    pub fn resident_clients(&self) -> usize {
+        match &self.engine {
+            Engine::Flat(_) => 0,
+            Engine::Hier(h) => h.resident_clients(),
+        }
     }
 
     /// Adaptive-control re-plans decided so far (0 when the policy is
@@ -310,13 +403,21 @@ impl Session {
     /// re-solve when one happened, else the construction plan (`None`
     /// only for uncoded schemes).
     pub fn active_plan(&self) -> Option<&AllocationPlan> {
-        self.ctrl_plan.as_ref().or_else(|| self.trainer.setup().plan.as_ref())
+        self.ctrl_plan.as_ref().or_else(|| self.setup().plan.as_ref())
     }
 
-    /// `(parity re-encodes, slice rows re-read, cached encode calls)` —
-    /// the churn-path amortization: a full re-encode would re-read
-    /// `encode calls * l` rows; fixed slice row-sets re-read ~0.
+    /// `(parity re-encodes, slice rows touched, encode calls)` — the
+    /// re-encode amortization. Flat sessions report the
+    /// [`ReencodeCache`] churn path (a full re-encode would re-read
+    /// `encode calls * l` rows; fixed slice row-sets re-read ~0).
+    /// Hierarchical sessions report the on-demand stream instead: rows
+    /// materialized from the generator and per-client encode passes —
+    /// there is no cache, by design.
     pub fn reencode_stats(&self) -> (usize, usize, usize) {
+        if let Engine::Hier(h) = &self.engine {
+            let (rows, calls) = h.stream_stats();
+            return (self.reencodes, rows, calls);
+        }
         let (mut rows, mut calls) = (0usize, 0usize);
         for row in &self.caches {
             for c in row {
@@ -334,8 +435,7 @@ impl Session {
     pub fn run(&mut self) -> Result<TrainReport> {
         let scheme = self.scenario.cfg.scheme.name();
         let dataset = self.scenario.cfg.dataset.clone();
-        let deadline =
-            self.trainer.setup().plan.as_ref().map(|p| p.deadline).unwrap_or(0.0);
+        let deadline = self.setup().plan.as_ref().map(|p| p.deadline).unwrap_or(0.0);
         let mut col = CollectingObserver::new(scheme, &dataset, deadline);
         let summary = self.run_observed(&mut col)?;
         let mut report = col.into_report(&summary);
@@ -391,7 +491,7 @@ impl Session {
                 let cf =
                     self.scenario.compute_rates.factors(n, epoch, &self.compute_rate_root);
                 let lf = self.scenario.link_rates.factors(n, epoch, &self.link_rate_root);
-                let base = &self.trainer.setup().population.clients;
+                let base = &self.setup().population.clients;
                 Some(
                     (0..n)
                         .map(|j| {
@@ -418,11 +518,19 @@ impl Session {
                 }
             }
 
-            // 3. Re-encode parity when the present data changed.
-            let needs_parity =
-                self.trainer.setup().plan.as_ref().map(|p| p.u > 0).unwrap_or(false);
+            // 3. Re-encode parity when the present data changed. The
+            // hierarchical engine re-encodes per cell on its own copy of
+            // the fork-9 generator stream (same (epoch, step, client)
+            // counters — one cell degenerates to the flat path bitwise).
+            let needs_parity = self.setup().plan.as_ref().map(|p| p.u > 0).unwrap_or(false);
             if needs_parity && active != self.encoded_for {
-                self.reencode_parity(epoch as u64, &active)?;
+                if let Engine::Hier(h) = &mut self.engine {
+                    h.reencode_parity(epoch as u64, &active)?;
+                    self.encoded_for = active.clone();
+                    self.reencodes += 1;
+                } else {
+                    self.reencode_parity(epoch as u64, &active)?;
+                }
             }
 
             // 4. The rounds. Static scenarios without a controller pass
@@ -437,18 +545,27 @@ impl Session {
             // untouched.
             let m_round = (active.len() * cfg.profile.l) as f32;
             for s in 0..steps {
-                let out = if is_static && !adaptive {
-                    self.trainer.step_round(s, lr, lam, m_batch, None)?
-                } else {
-                    let ctx = RoundCtx {
-                        active: &active,
-                        models: models.as_deref(),
-                        parity: self.parity_override.as_ref().map(|v| &v[s]),
-                        plan: self.ctrl_plan.as_ref(),
-                        masks: self.ctrl_prep_masks.as_ref().map(|m| m[s].as_slice()),
-                        record_delays: adaptive,
-                    };
-                    self.trainer.step_round(s, lr, lam, m_round, Some(&ctx))?
+                let out = match &mut self.engine {
+                    // The hierarchical engine consumes the roster and
+                    // rate models directly — its parity is per cell, so
+                    // the flat RoundCtx override set does not apply.
+                    Engine::Hier(h) => {
+                        h.step_round(s, lr, lam, m_round, &active, models.as_deref())?
+                    }
+                    Engine::Flat(trainer) if is_static && !adaptive => {
+                        trainer.step_round(s, lr, lam, m_batch, None)?
+                    }
+                    Engine::Flat(trainer) => {
+                        let ctx = RoundCtx {
+                            active: &active,
+                            models: models.as_deref(),
+                            parity: self.parity_override.as_ref().map(|v| &v[s]),
+                            plan: self.ctrl_plan.as_ref(),
+                            masks: self.ctrl_prep_masks.as_ref().map(|m| m[s].as_slice()),
+                            record_delays: adaptive,
+                        };
+                        trainer.step_round(s, lr, lam, m_round, Some(&ctx))?
+                    }
                 };
                 sim_time += out.step_time_s;
                 arrival_frac_sum += out.arrivals as f64 / active.len().max(1) as f64;
@@ -472,7 +589,10 @@ impl Session {
                 obs.on_round(&ev)?;
                 let last = epoch + 1 == cfg.train.epochs && s + 1 == steps;
                 if global_step % cfg.train.eval_every_steps == 0 || last {
-                    let (acc, loss) = self.trainer.evaluate(s)?;
+                    let (acc, loss) = match &self.engine {
+                        Engine::Flat(t) => t.evaluate(s)?,
+                        Engine::Hier(h) => h.evaluate(s)?,
+                    };
                     evals += 1;
                     last_acc = acc;
                     obs.on_eval(&EvalRecord {
@@ -504,6 +624,7 @@ impl Session {
             final_accuracy: last_acc,
             parity_reencodes: self.reencodes,
             replans: self.replan_count,
+            final_active: prev_active.len(),
         })
     }
 
@@ -526,6 +647,11 @@ impl Session {
         );
         let replan = self.replan_count as u64;
         let needs_parity = plan.u > 0;
+        // Adaptive control engages only on the flat engine (scenario
+        // validation rejects hierarchical + adaptive).
+        let Engine::Flat(trainer) = &self.engine else {
+            unreachable!("adaptive control runs on the flat engine only")
+        };
         let mut masks = vec![vec![Vec::new(); n]; steps];
         let mut prep = Vec::with_capacity(steps);
         for (s, masks_s) in masks.iter_mut().enumerate() {
@@ -540,7 +666,7 @@ impl Session {
                     for k in rng.sample_indices(l, load) {
                         mask[k] = 1.0;
                     }
-                    row.push(self.trainer.backend().prepare_col(&mask)?);
+                    row.push(trainer.backend().prepare_col(&mask)?);
                 } else {
                     // Zero-load clients are skipped before the gradient
                     // gather (`step_round` `continue`s on load == 0), so
@@ -594,8 +720,12 @@ impl Session {
     /// per-epoch cost of `O(|active| * u * l * (q + c))` MACs, far below
     /// a single round's gradient work at the profiles shipped here.
     fn reencode_parity(&mut self, stream_base: u64, active: &[usize]) -> Result<()> {
-        let setup_plan = self
-            .trainer
+        // The hierarchical engine owns its own per-cell re-encode
+        // (`HierTrainer::reencode_parity`); this is the flat path.
+        let Engine::Flat(trainer) = &self.engine else {
+            unreachable!("flat reencode_parity called on the hierarchical engine")
+        };
+        let setup_plan = trainer
             .setup()
             .plan
             .clone()
@@ -613,7 +743,7 @@ impl Session {
                 .map(|_| (0..n).map(|_| ReencodeCache::new()).collect())
                 .collect();
         }
-        let par_cfg = self.trainer.parallelism();
+        let par_cfg = trainer.parallelism();
         let mut overrides = Vec::with_capacity(steps);
         for s in 0..steps {
             let mut comp = CompositeParity::zeros(plan.u, p.u_max, p.q, p.c);
@@ -626,10 +756,10 @@ impl Session {
                     let mut weights = Vec::with_capacity(chunk.len());
                     for &j in chunk {
                         let (w, idx) =
-                            reencode_operands(&self.ctrl_masks, &self.trainer, &plan, p.l, s, j);
+                            reencode_operands(&self.ctrl_masks, trainer, &plan, p.l, s, j);
                         self.caches[s][j].refresh(
-                            self.trainer.train_embedding(),
-                            self.trainer.train_labels(),
+                            trainer.train_embedding(),
+                            trainer.train_labels(),
                             idx,
                         )?;
                         let mut rng = self
@@ -650,7 +780,7 @@ impl Session {
                             m: self.caches[s][j].slice_x(),
                         })
                         .collect();
-                    self.trainer.backend().encode_accumulate_dense_batch(
+                    trainer.backend().encode_accumulate_dense_batch(
                         &jobs_x,
                         &mut comp.x,
                         par_cfg,
@@ -664,7 +794,7 @@ impl Session {
                             m: self.caches[s][j].slice_y(),
                         })
                         .collect();
-                    self.trainer.backend().encode_accumulate_dense_batch(
+                    trainer.backend().encode_accumulate_dense_batch(
                         &jobs_y,
                         &mut comp.y,
                         par_cfg,
@@ -677,14 +807,14 @@ impl Session {
                 // cached path on the same generator streams.
                 for &j in active {
                     let (w, idx) =
-                        reencode_operands(&self.ctrl_masks, &self.trainer, &plan, p.l, s, j);
+                        reencode_operands(&self.ctrl_masks, trainer, &plan, p.l, s, j);
                     let mut rng = self
                         .reencode_root
                         .fork((stream_base * steps as u64 + s as u64) * n as u64 + j as u64);
                     encode_client_rows_into(
-                        self.trainer.backend(),
-                        self.trainer.train_embedding(),
-                        self.trainer.train_labels(),
+                        trainer.backend(),
+                        trainer.train_embedding(),
+                        trainer.train_labels(),
                         idx,
                         &w,
                         plan.u,
@@ -695,9 +825,9 @@ impl Session {
                 }
             }
             overrides.push((
-                self.trainer.backend().prepare(&comp.x)?,
-                self.trainer.backend().prepare(&comp.y)?,
-                self.trainer.backend().prepare_col(&comp.mask())?,
+                trainer.backend().prepare(&comp.x)?,
+                trainer.backend().prepare(&comp.y)?,
+                trainer.backend().prepare_col(&comp.mask())?,
             ));
         }
         self.parity_override = Some(overrides);

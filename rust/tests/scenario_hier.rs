@@ -1,0 +1,130 @@
+//! Hierarchical two-tier session gates.
+//!
+//! * the **gating invariant**: on a trivial single-cell topology the
+//!   hierarchical engine (per-cell sub-rounds, O(active) client state,
+//!   on-demand row generation) is **bitwise identical** to the flat
+//!   session — final beta, full event stream, summary — for coded,
+//!   coded + churn, and uncoded runs, at every `(threads, shards)` in
+//!   {1,2}²;
+//! * multi-cell hierarchical runs are bitwise-deterministic across the
+//!   same parallelism grid and actually train;
+//! * the O(active) store evicts: after a churn run the resident-client
+//!   count tracks the final roster, not the population.
+
+use codedfedl::config::Scheme;
+use codedfedl::mathx::linalg::Matrix;
+use codedfedl::mathx::par::Parallelism;
+use codedfedl::runtime::backend::NativeBackend;
+use codedfedl::scenario::{EventLog, ScenarioBuilder, SessionSummary};
+use codedfedl::simnet::ChurnSchedule;
+
+const PAR_GRID: [(usize, usize); 4] = [(1, 1), (2, 1), (1, 2), (2, 2)];
+
+/// Tiny-profile scenario, 16 clients so coded plans carry real parity.
+fn builder(scheme: Scheme, par: Parallelism, churn: bool) -> ScenarioBuilder {
+    let mut b = ScenarioBuilder::from_preset("tiny")
+        .unwrap()
+        .scheme(scheme)
+        .epochs(4)
+        .population(16)
+        .steps_per_epoch(2)
+        .parallelism(par);
+    if churn {
+        b = b.churn(ChurnSchedule::Bernoulli { p_away: 0.4, min_active: 4 });
+    }
+    b.set("backend", "native").unwrap();
+    b
+}
+
+fn run(b: ScenarioBuilder) -> (Matrix, Vec<String>, SessionSummary, usize) {
+    let mut session = b.build_with_backend(Box::new(NativeBackend)).unwrap();
+    let mut log = EventLog::new();
+    let summary = session.run_observed(&mut log).unwrap();
+    (session.beta().clone(), log.lines, summary, session.resident_clients())
+}
+
+#[test]
+fn one_cell_hierarchical_is_bitwise_equal_to_flat() {
+    // The acceptance gate: the two engines share every seed fork, every
+    // accumulation order and every f32 kernel, so a trivial 1-cell
+    // topology must reproduce the flat trajectory *bitwise* — identical
+    // final model and identical event stream (evals carry exact f64s) —
+    // under coded, coded + churn, and uncoded dynamics.
+    for (scheme, churn) in
+        [(Scheme::Coded, false), (Scheme::Coded, true), (Scheme::Uncoded, false)]
+    {
+        let (beta_flat, lines_flat, sum_flat, _) =
+            run(builder(scheme, Parallelism::new(1, 1), churn));
+        for (threads, shards) in PAR_GRID {
+            let par = Parallelism::new(threads, shards);
+            let (beta_h, lines_h, sum_h, _) =
+                run(builder(scheme, par, churn).hierarchical(true));
+            let tag = format!(
+                "{} churn={churn} threads={threads} shards={shards}",
+                scheme.name()
+            );
+            assert_eq!(beta_h, beta_flat, "{tag}: final beta diverged");
+            assert_eq!(lines_h, lines_flat, "{tag}: event stream diverged");
+            assert_eq!(sum_h.steps, sum_flat.steps, "{tag}");
+            assert_eq!(sum_h.total_sim_time_s, sum_flat.total_sim_time_s, "{tag}");
+            assert_eq!(sum_h.final_accuracy, sum_flat.final_accuracy, "{tag}");
+            assert_eq!(sum_h.mean_arrival_frac, sum_flat.mean_arrival_frac, "{tag}");
+            assert_eq!(sum_h.final_active, sum_flat.final_active, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn multi_cell_hierarchical_is_deterministic_and_trains() {
+    // Per-cell composites fold in ascending cell order on the driving
+    // thread, so the two-tier trajectory replays bitwise at any
+    // parallelism — and it still learns.
+    for churn in [false, true] {
+        let make = |par| builder(Scheme::Coded, par, churn).cells(2).hierarchical(true);
+        let (beta_ref, lines_ref, sum_ref, _) = run(make(Parallelism::new(1, 1)));
+        assert!(
+            sum_ref.final_accuracy > 0.5,
+            "2-cell hierarchical run failed to train (churn={churn}): acc {}",
+            sum_ref.final_accuracy
+        );
+        if churn {
+            assert!(
+                lines_ref.iter().any(|l| l.starts_with("churn ")),
+                "schedule produced no churn events"
+            );
+        }
+        for (threads, shards) in PAR_GRID {
+            let (beta, lines, _, _) = run(make(Parallelism::new(threads, shards)));
+            assert_eq!(
+                beta, beta_ref,
+                "2-cell beta diverged (churn={churn}, threads={threads}, shards={shards})"
+            );
+            assert_eq!(
+                lines, lines_ref,
+                "2-cell stream diverged (churn={churn}, threads={threads}, shards={shards})"
+            );
+        }
+    }
+}
+
+#[test]
+fn hierarchical_state_is_bounded_by_the_active_roster() {
+    // O(active), not O(population): churned-out clients are evicted from
+    // the lazy store, so residency equals the *final* roster while the
+    // static run keeps everyone.
+    let (_, lines, sum, resident) =
+        run(builder(Scheme::Coded, Parallelism::new(2, 2), true).hierarchical(true));
+    assert_eq!(
+        resident, sum.final_active,
+        "resident clients must track the final active roster"
+    );
+    assert!(
+        lines.iter().any(|l| l.starts_with("churn ")),
+        "schedule produced no churn events"
+    );
+
+    let (_, _, sum_static, resident_static) =
+        run(builder(Scheme::Coded, Parallelism::new(2, 2), false).hierarchical(true));
+    assert_eq!(resident_static, 16);
+    assert_eq!(sum_static.final_active, 16);
+}
