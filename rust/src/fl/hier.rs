@@ -411,6 +411,7 @@ impl HierTrainer {
         m_batch: f32,
         active: &[usize],
         models: Option<&[ClientModel]>,
+        aborts: &[usize],
     ) -> Result<StepOutcome> {
         self.sync_roster(active)?;
         let p = &self.cfg.profile;
@@ -418,6 +419,11 @@ impl HierTrainer {
         let arrivals: usize;
         let step_time: f64;
         let mut stragglers = Vec::new();
+        let mut aborted = 0usize;
+        // Rows withheld by aborts of deadline-beating clients (coded arm
+        // only); drives the same divisor renormalization as the flat
+        // engine, so 1-cell hier stays bitwise-equal under faults too.
+        let mut withheld_rows = 0usize;
         let models: &[ClientModel] = match models {
             Some(m) => m,
             None => &self.setup.population.clients,
@@ -431,7 +437,15 @@ impl HierTrainer {
                     let t = models[j].sample(p.l, &mut self.delay_rng);
                     t_max = t_max.max(t.total());
                 }
-                let cells = Self::partition_cells(&self.topo, active);
+                // Aborted clients' gradients are simply lost (full-batch
+                // divisor kept) — same semantics as the flat uncoded arm.
+                let folded: Vec<usize> = active
+                    .iter()
+                    .copied()
+                    .filter(|j| aborts.binary_search(j).is_err())
+                    .collect();
+                aborted = active.len() - folded.len();
+                let cells = Self::partition_cells(&self.topo, &folded);
                 for members in &cells {
                     for chunk in members.chunks(CLIENT_BATCH) {
                         let blocks = self.materialize_chunk(s, chunk)?;
@@ -451,7 +465,7 @@ impl HierTrainer {
                         self.backend.grad_cell_p(&ops, &beta_p, &mut grad_sum, self.par)?;
                     }
                 }
-                arrivals = active.len();
+                arrivals = folded.len();
                 step_time = t_max;
             }
             Some(plan) => {
@@ -464,10 +478,13 @@ impl HierTrainer {
                         continue;
                     }
                     let t = models[j].sample(load, &mut self.delay_rng);
-                    if t.total() <= plan.deadline {
-                        arrived.push(j);
-                    } else {
+                    if t.total() > plan.deadline {
                         stragglers.push(j);
+                    } else if aborts.binary_search(&j).is_ok() {
+                        aborted += 1;
+                        withheld_rows += load;
+                    } else {
+                        arrived.push(j);
                     }
                 }
                 let cells = Self::partition_cells(&self.topo, &arrived);
@@ -502,9 +519,22 @@ impl HierTrainer {
             }
         }
 
-        let g_mean = grad_sum.scale(1.0 / m_batch);
+        // Coded decode renormalization over the rows actually folded —
+        // identical to the flat engine (no aborts → exactly m_batch).
+        let m_eff = if withheld_rows > 0 {
+            (m_batch - withheld_rows as f32).max(1.0)
+        } else {
+            m_batch
+        };
+        let g_mean = grad_sum.scale(1.0 / m_eff);
         self.beta = Arc::new(self.backend.update(&self.beta, &g_mean, lr, lam)?);
-        Ok(StepOutcome { step_time_s: step_time, arrivals, stragglers, delays: Vec::new() })
+        Ok(StepOutcome {
+            step_time_s: step_time,
+            arrivals,
+            stragglers,
+            aborted,
+            delays: Vec::new(),
+        })
     }
 
     /// Test accuracy + current-batch ridge loss. The batch loss streams

@@ -98,6 +98,10 @@ pub struct StepOutcome {
     pub step_time_s: f64,
     pub arrivals: usize,
     pub stragglers: Vec<usize>,
+    /// Clients whose delay said "arrived" but whose partial gradient was
+    /// withheld by an injected mid-round abort
+    /// ([`crate::simnet::FaultPlan`]); always zero with faults off.
+    pub aborted: usize,
     /// Realized per-client delay components for the round, recorded only
     /// when [`RoundCtx::record_delays`] is set (the adaptive control
     /// plane's estimator ground truth; empty and allocation-free on
@@ -132,6 +136,12 @@ pub(crate) struct RoundCtx<'a> {
     /// Record realized per-client delays into [`StepOutcome::delays`]
     /// (the adaptive controller's estimator ground truth).
     pub record_delays: bool,
+    /// Ascending ids of clients whose arrived gradient is withheld this
+    /// round by an injected fault (empty = no aborts). Drawn on the
+    /// driving thread from the session's dedicated fault stream; the
+    /// coded decode renormalizes over the rows actually folded, the
+    /// uncoded baseline just loses the contribution.
+    pub aborts: &'a [usize],
 }
 
 /// The config fields the shared dataset + embedding state depends on.
@@ -797,6 +807,12 @@ impl Trainer {
             None => &self.setup.population.clients,
         };
         let record = ctx.is_some_and(|c| c.record_delays);
+        let aborts: &[usize] = ctx.map(|c| c.aborts).unwrap_or(&[]);
+        let mut aborted = 0usize;
+        // Rows the coded decode expected but never received (aborts of
+        // clients whose delay beat the deadline); drives the divisor
+        // renormalization below. Stays zero on the uncoded arm.
+        let mut withheld_rows = 0usize;
         let mut delays: Vec<DelayObs> = Vec::new();
         // One beta snapshot per step, shared by every gradient call
         // (§Perf); on the native backend this is a refcount bump, on XLA
@@ -826,8 +842,19 @@ impl Trainer {
                 }
                 // Chunked so the resident per-client gradient set stays
                 // O(CLIENT_BATCH * q * c) at any population size; the
-                // ascending-client sum order is unchanged.
-                for chunk in active.chunks(CLIENT_BATCH) {
+                // ascending-client sum order is unchanged. An injected
+                // abort withholds the client's gradient after the server
+                // already waited for it — the uncoded baseline has no
+                // parity to compensate, so the contribution is simply
+                // lost (full-batch divisor kept: the estimate is biased,
+                // which is exactly the paper's uncoded fragility).
+                let folded: Vec<usize> = active
+                    .iter()
+                    .copied()
+                    .filter(|j| aborts.binary_search(j).is_err())
+                    .collect();
+                aborted = active.len() - folded.len();
+                for chunk in folded.chunks(CLIENT_BATCH) {
                     let clients: Vec<GradClientOperands<'_>> = chunk
                         .iter()
                         .map(|&j| {
@@ -837,7 +864,7 @@ impl Trainer {
                         .collect();
                     self.backend.grad_cell_p(&clients, &beta_p, &mut grad_sum, self.par)?;
                 }
-                arrivals = active.len();
+                arrivals = folded.len();
                 step_time = t_max;
             }
             Some(setup_plan) => {
@@ -865,10 +892,13 @@ impl Trainer {
                             comm_s: t.comm_s(),
                         });
                     }
-                    if t.total() <= plan.deadline {
-                        arrived.push(j);
-                    } else {
+                    if t.total() > plan.deadline {
                         stragglers.push(j);
+                    } else if aborts.binary_search(&j).is_ok() {
+                        aborted += 1;
+                        withheld_rows += load;
+                    } else {
+                        arrived.push(j);
                     }
                 }
                 for chunk in arrived.chunks(CLIENT_BATCH) {
@@ -899,9 +929,20 @@ impl Trainer {
             }
         }
 
-        let g_mean = grad_sum.scale(1.0 / m_batch);
+        // Graceful degradation under injected aborts: the coded decode
+        // renormalizes over the rows actually folded (withheld rows are
+        // subtracted from the divisor), so the gradient stays a mean
+        // over the data actually received. With no aborts — every
+        // existing path — `withheld_rows` is 0 and this is exactly
+        // `m_batch`, bitwise unchanged.
+        let m_eff = if withheld_rows > 0 {
+            (m_batch - withheld_rows as f32).max(1.0)
+        } else {
+            m_batch
+        };
+        let g_mean = grad_sum.scale(1.0 / m_eff);
         self.beta = Arc::new(self.backend.update(&self.beta, &g_mean, lr, lam)?);
-        Ok(StepOutcome { step_time_s: step_time, arrivals, stragglers, delays })
+        Ok(StepOutcome { step_time_s: step_time, arrivals, stragglers, aborted, delays })
     }
 
     /// Test accuracy + current-batch ridge loss (prepared chunks).

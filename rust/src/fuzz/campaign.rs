@@ -1,0 +1,311 @@
+//! The campaign executor: generate → execute → check → shrink → emit.
+//!
+//! A campaign is deterministic in its seed: scenario `i` is drawn from
+//! `Rng::new(seed).fork(SCENARIO_STREAM_BASE + i)`, executed at
+//! `(threads, shards) = (1, 1)` with a `(2, 2)` replay (plus the
+//! coded/uncoded × faulted/clean companion quadrant when the scenario
+//! is coded and faulted), and checked against the invariant set. On a
+//! violation the scenario is shrunk ([`crate::fuzz::shrink`]) against a
+//! predicate pinned to the violated invariant and the minimal spec is
+//! written to the output directory as a committable `*.scenario` file.
+//! [`replay_dir`] re-runs every committed spec — the CI regression job.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::mathx::par::Parallelism;
+use crate::mathx::rng::Rng;
+use crate::scenario::{EventLog, ScenarioBuilder, Session, SessionSummary};
+use crate::simnet::FaultPlan;
+
+use super::gen::gen_scenario;
+use super::invariants::Invariant;
+use super::shrink::{shrink, spec_text};
+use super::{Companions, RunRecord};
+
+/// All generated scenarios ride this preset; spec pairs override it.
+const BASE_PRESET: &str = "tiny";
+
+/// Stream offset of per-scenario generator forks (clear of the small
+/// fork ids the session engines reserve, purely for legibility — the
+/// campaign rng is independent of every experiment seed anyway).
+const SCENARIO_STREAM_BASE: u64 = 100;
+
+/// Campaign parameters (the `fuzz` CLI subcommand maps 1:1 onto this).
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    /// Campaign seed: fixes every generated scenario.
+    pub seed: u64,
+    /// Scenarios to generate and execute.
+    pub iters: usize,
+    /// Optional wall-clock budget; the campaign stops cleanly (no
+    /// mid-scenario abort) once it is exhausted.
+    pub budget_s: Option<f64>,
+    /// Where shrunken failing specs are written (`None` = don't write).
+    pub out_dir: Option<String>,
+}
+
+/// One invariant violation, shrunk to its minimal reproducing spec.
+#[derive(Debug, Clone)]
+pub struct Failure {
+    /// Scenario index within the campaign (or the spec path on replays).
+    pub scenario: String,
+    /// Name of the violated invariant (`executes` = the scenario
+    /// errored before any invariant could run).
+    pub invariant: String,
+    /// The violation message from the invariant (or the execution error).
+    pub message: String,
+    /// The minimal spec still reproducing the violation.
+    pub minimal_kvs: Vec<(String, String)>,
+    /// Where the minimal spec was written, when an out dir was given.
+    pub spec_path: Option<String>,
+}
+
+/// Campaign outcome. `failures.is_empty()` is the green/red signal.
+#[derive(Debug, Clone, Default)]
+pub struct CampaignReport {
+    /// Scenarios actually executed (< `iters` when the budget hit).
+    pub executed: usize,
+    pub failures: Vec<Failure>,
+    /// The wall-clock budget stopped the campaign early.
+    pub hit_budget: bool,
+}
+
+fn build_session(kvs: &[(String, String)], par: Parallelism) -> Result<Session> {
+    let mut b = ScenarioBuilder::from_preset(BASE_PRESET)?;
+    b.set("backend", "native")?;
+    for (k, v) in kvs {
+        b.set(k, v).with_context(|| format!("applying spec pair {k} = {v}"))?;
+    }
+    b.parallelism(par).build()
+}
+
+/// Execute one spec at one parallelism.
+fn run_one(
+    kvs: &[(String, String)],
+    par: Parallelism,
+) -> Result<(Vec<f32>, Vec<String>, SessionSummary, Option<usize>, usize, usize)> {
+    let mut s = build_session(kvs, par)?;
+    let mut log = EventLog::new();
+    let summary = s.run_observed(&mut log)?;
+    let final_u = s.active_plan().map(|p| p.u);
+    let u_max = s.scenario().cfg.profile.u_max;
+    let n = s.scenario().cfg.n_clients;
+    Ok((s.beta().data().to_vec(), log.lines, summary, final_u, u_max, n))
+}
+
+/// Last-wins lookup (spec pairs apply in order, like the file format).
+fn get<'a>(kvs: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    kvs.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn without_key(kvs: &[(String, String)], key: &str) -> Vec<(String, String)> {
+    kvs.iter().filter(|(k, _)| k != key).cloned().collect()
+}
+
+/// The same scenario on the uncoded scheme: scheme flipped, and the
+/// coded-only knobs (adaptive control, redundancy) dropped so the spec
+/// stays valid.
+fn to_uncoded(kvs: &[(String, String)]) -> Vec<(String, String)> {
+    let mut out: Vec<(String, String)> = kvs
+        .iter()
+        .filter(|(k, _)| {
+            k != "scheme"
+                && k != "scenario.adaptive"
+                && k != "scenario.adaptive.ewma"
+                && k != "train.redundancy"
+        })
+        .cloned()
+        .collect();
+    out.push(("scheme".to_string(), "uncoded".to_string()));
+    out
+}
+
+/// Execute a spec into the full [`RunRecord`] the invariants consume:
+/// primary run, thread/shard replay, and — when coded and faulted — the
+/// matched-budget companion quadrant.
+pub fn execute_scenario(kvs: &[(String, String)]) -> Result<RunRecord> {
+    let (beta, lines, summary, final_plan_u, u_max, n_clients) =
+        run_one(kvs, Parallelism::new(1, 1))?;
+    let (replay_beta, replay_lines, ..) = run_one(kvs, Parallelism::new(2, 2))?;
+
+    // The tiny base preset's scheme is coded; spec pairs override it.
+    let coded = get(kvs, "scheme").map(|v| v.trim() != "uncoded").unwrap_or(true);
+    let has_churn = get(kvs, "scenario.churn").map(|v| v.trim() != "none").unwrap_or(false);
+    let faults = match get(kvs, "scenario.faults") {
+        Some(v) => FaultPlan::parse(v)?,
+        None => FaultPlan::none(),
+    };
+    let has_faults = !faults.is_none();
+
+    let companions = if coded && has_faults {
+        let clean = without_key(kvs, "scenario.faults");
+        let unc_faulted = to_uncoded(kvs);
+        let unc_clean = without_key(&unc_faulted, "scenario.faults");
+        Some(Companions {
+            coded_faulted_acc: summary.final_accuracy,
+            coded_clean_acc: run_one(&clean, Parallelism::new(1, 1))?.2.final_accuracy,
+            uncoded_faulted_acc: run_one(&unc_faulted, Parallelism::new(1, 1))?
+                .2
+                .final_accuracy,
+            uncoded_clean_acc: run_one(&unc_clean, Parallelism::new(1, 1))?.2.final_accuracy,
+        })
+    } else {
+        None
+    };
+
+    Ok(RunRecord {
+        kvs: kvs.to_vec(),
+        summary,
+        beta,
+        lines,
+        final_plan_u,
+        u_max,
+        n_clients,
+        has_churn,
+        has_faults,
+        coded,
+        replay_beta,
+        replay_lines,
+        companions,
+    })
+}
+
+/// Name of the pseudo-invariant recorded when a scenario errors before
+/// any invariant can run (build or run failure).
+const EXECUTES: &str = "executes";
+
+/// Execute and return the first violated invariant as
+/// `Some((name, message))`; `Err` = the scenario itself failed to run.
+fn first_violation(
+    kvs: &[(String, String)],
+    invariants: &[Box<dyn Invariant>],
+) -> Result<Option<(String, String)>> {
+    let run = execute_scenario(kvs)?;
+    for inv in invariants {
+        if let Err(e) = inv.check(&run) {
+            return Ok(Some((inv.name().to_string(), format!("{e:#}"))));
+        }
+    }
+    Ok(None)
+}
+
+/// Shrink a failing spec against a predicate pinned to the violated
+/// invariant: a candidate reproduces only if the *same* invariant (or
+/// the same failure-to-execute) fires again, so shrinking cannot wander
+/// onto an unrelated failure.
+fn shrink_failure(
+    kvs: &[(String, String)],
+    invariant: &str,
+    invariants: &[Box<dyn Invariant>],
+) -> Vec<(String, String)> {
+    shrink(kvs, |cand| match first_violation(cand, invariants) {
+        Ok(Some((name, _))) => name == invariant,
+        Ok(None) => false,
+        Err(_) => invariant == EXECUTES,
+    })
+}
+
+fn record_failure(
+    cfg: &CampaignConfig,
+    scenario: String,
+    invariant: String,
+    message: String,
+    kvs: &[(String, String)],
+    invariants: &[Box<dyn Invariant>],
+) -> Result<Failure> {
+    let minimal = shrink_failure(kvs, &invariant, invariants);
+    let spec_path = match &cfg.out_dir {
+        Some(dir) => {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating fuzz out dir {dir}"))?;
+            let path = format!("{dir}/fail-{scenario}-{invariant}.scenario");
+            let header = format!(
+                "shrunken fuzz failure: invariant '{invariant}'\n\
+                 campaign seed {}, scenario {scenario}\n\
+                 {message}",
+                cfg.seed
+            );
+            std::fs::write(&path, spec_text(&minimal, &header))
+                .with_context(|| format!("writing {path}"))?;
+            Some(path)
+        }
+        None => None,
+    };
+    Ok(Failure { scenario, invariant, message, minimal_kvs: minimal, spec_path })
+}
+
+/// Run a seeded campaign: generate `iters` scenarios, execute and check
+/// each, shrink and emit every failure. Failures never abort the
+/// campaign — the report carries all of them.
+pub fn run_campaign(
+    cfg: &CampaignConfig,
+    invariants: &[Box<dyn Invariant>],
+) -> Result<CampaignReport> {
+    let t0 = Instant::now();
+    let root = Rng::new(cfg.seed);
+    let mut report = CampaignReport::default();
+    for i in 0..cfg.iters {
+        if let Some(budget) = cfg.budget_s {
+            if t0.elapsed().as_secs_f64() > budget {
+                report.hit_budget = true;
+                break;
+            }
+        }
+        let mut rng = root.fork(SCENARIO_STREAM_BASE + i as u64);
+        let kvs = gen_scenario(&mut rng);
+        let violation = match first_violation(&kvs, invariants) {
+            Ok(v) => v,
+            Err(e) => Some((EXECUTES.to_string(), format!("{e:#}"))),
+        };
+        report.executed += 1;
+        if let Some((invariant, message)) = violation {
+            report.failures.push(record_failure(
+                cfg,
+                format!("{i:04}"),
+                invariant,
+                message,
+                &kvs,
+                invariants,
+            )?);
+        }
+    }
+    Ok(report)
+}
+
+/// Replay every committed `*.scenario` spec under `dir` against the
+/// invariant set (the CI regression job). Specs are applied over the
+/// `tiny` base preset, exactly as the campaign wrote them.
+pub fn replay_dir(dir: &str, invariants: &[Box<dyn Invariant>]) -> Result<CampaignReport> {
+    let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading regression dir {dir}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "scenario").unwrap_or(false))
+        .collect();
+    paths.sort();
+    let mut report = CampaignReport::default();
+    for path in paths {
+        let path_str = path.to_string_lossy().to_string();
+        let mut kvs: Vec<(String, String)> = Vec::new();
+        crate::config::parse_kv_file(&path_str, &mut |k: &str, v: &str| {
+            kvs.push((k.to_string(), v.to_string()));
+            Ok(())
+        })?;
+        report.executed += 1;
+        let violation = match first_violation(&kvs, invariants) {
+            Ok(v) => v,
+            Err(e) => Some((EXECUTES.to_string(), format!("{e:#}"))),
+        };
+        if let Some((invariant, message)) = violation {
+            report.failures.push(Failure {
+                scenario: path_str.clone(),
+                invariant,
+                message,
+                minimal_kvs: kvs,
+                spec_path: Some(path_str),
+            });
+        }
+    }
+    Ok(report)
+}

@@ -1,0 +1,131 @@
+//! Random scenario generation: seeded, valid by construction.
+//!
+//! A generated scenario is an ordered list of `key = value` pairs over
+//! the `tiny` base preset — the exact input surface of
+//! [`crate::scenario::ScenarioBuilder::set`], so every draw is also a
+//! writeable spec file. The generator never emits a combination the
+//! scenario validator rejects (hierarchical + adaptive, adaptive on an
+//! uncoded scheme, fault probabilities outside `[0, 1)`, churn floors
+//! above the population): fuzzing hunts for *invariant* violations, not
+//! for the validator's own error paths, which have their own tests.
+//!
+//! Sizes are kept laptop-tiny on purpose (populations 5–12, 2–3 epochs)
+//! — a campaign's power comes from how many corners of the combination
+//! space it visits under a CI budget, not from any single run's scale.
+
+use crate::mathx::rng::Rng;
+
+/// One random pick from a fixed menu.
+fn pick<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[rng.next_below(xs.len() as u64) as usize]
+}
+
+/// Bernoulli coin.
+fn coin(rng: &mut Rng, p: f64) -> bool {
+    rng.next_f64() < p
+}
+
+/// Draw one valid scenario spec. Deterministic in the `rng` state: the
+/// campaign forks a dedicated stream per scenario index, so scenario
+/// `i` of a campaign seed is identical on every machine.
+pub fn gen_scenario(rng: &mut Rng) -> Vec<(String, String)> {
+    let mut kvs: Vec<(String, String)> = Vec::new();
+    let mut push = |k: &str, v: String| kvs.push((k.to_string(), v));
+
+    let coded = coin(rng, 0.7);
+    push("scheme", if coded { "coded" } else { "uncoded" }.to_string());
+    push("seed", rng.next_below(10_000).to_string());
+    push("scenario.population", pick(rng, &[5usize, 8, 12]).to_string());
+    push("scenario.steps_per_epoch", (1 + rng.next_below(2)).to_string());
+    push("train.epochs", (2 + rng.next_below(2)).to_string());
+    if coded {
+        // The full redundancy range the ISSUE space allows; u() clamps
+        // to the profile's u_max so every value here is a valid plan.
+        push("train.redundancy", pick(rng, &[0.05, 0.1, 0.2, 0.3]).to_string());
+    }
+
+    let hierarchical = coin(rng, 0.25);
+    if hierarchical {
+        push("scenario.hierarchical", "true".to_string());
+    }
+    if coin(rng, 0.4) {
+        push("scenario.cells", "2".to_string());
+    }
+
+    if coin(rng, 0.5) {
+        let spec = if coin(rng, 0.6) {
+            format!("bernoulli:{}:2", pick(rng, &[0.2, 0.3, 0.4]))
+        } else {
+            "block:0.25:2".to_string()
+        };
+        push("scenario.churn", spec);
+    }
+    if coin(rng, 0.4) {
+        push("scenario.link_rates", "diurnal:6:0.3".to_string());
+    }
+    if coin(rng, 0.3) {
+        push("scenario.compute_rates", "jitter:0.1".to_string());
+    }
+
+    // Adaptive control runs on the flat engine over a coded plan only.
+    if coded && !hierarchical && coin(rng, 0.4) {
+        let policy = if coin(rng, 0.5) { "drift:0.1" } else { "periodic:2" };
+        push("scenario.adaptive", policy.to_string());
+    }
+
+    if coin(rng, 0.6) {
+        let abort = *pick(rng, &[0.1, 0.2, 0.3]);
+        let telemetry = *pick(rng, &[0.0, 0.2]);
+        let mut spec = format!("abort:{abort}");
+        if telemetry > 0.0 {
+            spec.push_str(&format!("+telemetry:{telemetry}"));
+        }
+        spec.push_str(&format!("+seed:{}", 1 + rng.next_below(1000)));
+        push("scenario.faults", spec);
+    }
+
+    kvs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::ScenarioBuilder;
+
+    fn compile(kvs: &[(String, String)]) -> crate::Result<()> {
+        let mut b = ScenarioBuilder::from_preset("tiny")?;
+        b.set("backend", "native")?;
+        for (k, v) in kvs {
+            b.set(k, v)?;
+        }
+        b.compile()?;
+        Ok(())
+    }
+
+    #[test]
+    fn generation_is_deterministic_in_the_seed() {
+        let a = gen_scenario(&mut Rng::new(42).fork(3));
+        let b = gen_scenario(&mut Rng::new(42).fork(3));
+        assert_eq!(a, b);
+        let c = gen_scenario(&mut Rng::new(42).fork(4));
+        assert_ne!(a, c, "different streams should draw different scenarios");
+    }
+
+    #[test]
+    fn every_draw_compiles_into_a_valid_scenario() {
+        let root = Rng::new(7);
+        let mut saw_faults = false;
+        let mut saw_hier = false;
+        let mut saw_adaptive = false;
+        for i in 0..60u64 {
+            let kvs = gen_scenario(&mut root.fork(i));
+            compile(&kvs).unwrap_or_else(|e| panic!("draw {i} invalid: {e:#}\n{kvs:?}"));
+            saw_faults |= kvs.iter().any(|(k, _)| k == "scenario.faults");
+            saw_hier |= kvs.iter().any(|(k, _)| k == "scenario.hierarchical");
+            saw_adaptive |= kvs.iter().any(|(k, _)| k == "scenario.adaptive");
+        }
+        assert!(saw_faults, "60 draws never injected faults");
+        assert!(saw_hier, "60 draws never used the hierarchical engine");
+        assert!(saw_adaptive, "60 draws never enabled adaptive control");
+    }
+}

@@ -1,0 +1,319 @@
+//! The pluggable invariant set a campaign checks against every
+//! executed scenario's [`RunRecord`].
+//!
+//! Invariants are *universal* claims — they must hold on any valid
+//! scenario, which is what makes random generation useful. To add one,
+//! implement [`Invariant`] and register it in [`default_invariants`].
+
+use anyhow::{bail, ensure, Result};
+
+use super::RunRecord;
+
+/// One universal claim over an executed scenario.
+pub trait Invariant {
+    /// Stable kebab-case name (failure files and reports key on it).
+    fn name(&self) -> &'static str;
+    /// `Err` = the claim is violated on this run.
+    fn check(&self, run: &RunRecord) -> Result<()>;
+}
+
+/// The shipping invariant set.
+pub fn default_invariants() -> Vec<Box<dyn Invariant>> {
+    vec![
+        Box::new(ReplayBitwise),
+        Box::new(UmaxRespected),
+        Box::new(StreamSane),
+        Box::new(CodedDegradesGracefully),
+    ]
+}
+
+/// Strip a known prefix off an event-log token.
+fn field<'a>(line: &'a str, tok: &'a str, prefix: &str) -> Result<&'a str> {
+    tok.strip_prefix(prefix)
+        .ok_or_else(|| anyhow::anyhow!("malformed event line (expected {prefix}...): {line}"))
+}
+
+/// The whole trajectory — final model and full event stream — must be
+/// bitwise identical between the primary `(1, 1)` run and the `(2, 2)`
+/// replay. This is the crate's core determinism contract, now enforced
+/// over *arbitrary* generated scenarios (faults included).
+pub struct ReplayBitwise;
+
+impl Invariant for ReplayBitwise {
+    fn name(&self) -> &'static str {
+        "replay-bitwise"
+    }
+
+    fn check(&self, run: &RunRecord) -> Result<()> {
+        ensure!(
+            run.beta == run.replay_beta,
+            "final beta diverged between (1,1) and (2,2)"
+        );
+        if run.lines != run.replay_lines {
+            let i = run
+                .lines
+                .iter()
+                .zip(&run.replay_lines)
+                .position(|(a, b)| a != b)
+                .unwrap_or_else(|| run.lines.len().min(run.replay_lines.len()));
+            bail!(
+                "event stream diverged at line {i}: {:?} vs {:?}",
+                run.lines.get(i),
+                run.replay_lines.get(i)
+            );
+        }
+        Ok(())
+    }
+}
+
+/// No allocation ever in force — construction plan or any adaptive
+/// re-solve, telemetry faults included — may exceed the profile's
+/// parity budget `u_max`.
+pub struct UmaxRespected;
+
+impl Invariant for UmaxRespected {
+    fn name(&self) -> &'static str {
+        "umax-respected"
+    }
+
+    fn check(&self, run: &RunRecord) -> Result<()> {
+        if let Some(u) = run.final_plan_u {
+            ensure!(
+                u <= run.u_max,
+                "plan in force has u = {u} > u_max = {} after {} re-plans",
+                run.u_max,
+                run.summary.replans
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The streamed event log is internally sane: simulated time is
+/// monotone, no round reports more arrivals than active clients, every
+/// evaluation is a finite accuracy in [0, 1] — and when nothing removes
+/// clients (no churn), every round sees the full roster; when nothing
+/// removes *gradients* either (uncoded, no faults), aggregation is
+/// unbiased: every active client's contribution arrives.
+pub struct StreamSane;
+
+impl Invariant for StreamSane {
+    fn name(&self) -> &'static str {
+        "stream-sane"
+    }
+
+    fn check(&self, run: &RunRecord) -> Result<()> {
+        let mut prev_t = 0.0f64;
+        let mut rounds = 0usize;
+        for line in &run.lines {
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            match toks.first().copied() {
+                Some("round") => {
+                    rounds += 1;
+                    let t: f64 = field(line, toks[4], "t")?.parse()?;
+                    let act: usize = field(line, toks[6], "act")?.parse()?;
+                    let arr: usize = field(line, toks[7], "arr")?.parse()?;
+                    ensure!(t.is_finite() && t >= prev_t, "sim time not monotone: {line}");
+                    prev_t = t;
+                    ensure!(arr <= act, "more arrivals than active clients: {line}");
+                    ensure!(act <= run.n_clients, "roster larger than population: {line}");
+                    if !run.has_churn {
+                        ensure!(
+                            act == run.n_clients,
+                            "no churn, yet a round ran a partial roster: {line}"
+                        );
+                    }
+                    if !run.coded && !run.has_faults {
+                        ensure!(
+                            arr == act,
+                            "uncoded unfaulted round lost a gradient (biased mean): {line}"
+                        );
+                    }
+                }
+                Some("eval") => {
+                    let acc: f64 = field(line, toks[4], "acc")?.parse()?;
+                    ensure!(
+                        acc.is_finite() && (0.0..=1.0).contains(&acc),
+                        "evaluation accuracy out of range: {line}"
+                    );
+                }
+                _ => {}
+            }
+        }
+        ensure!(rounds == run.summary.steps, "log rounds != summary steps");
+        ensure!(run.summary.final_accuracy.is_finite(), "summary accuracy not finite");
+        ensure!(
+            run.beta.iter().all(|v| v.is_finite()),
+            "final model contains non-finite values"
+        );
+        Ok(())
+    }
+}
+
+/// Accuracy tolerance of the degradation comparison: final accuracies
+/// on these tiny populations carry a little evaluation noise, so coded
+/// is required to match uncoded's fault drop up to this slack, not to
+/// beat it exactly.
+const DEGRADATION_TOL: f64 = 0.05;
+
+/// Under the same fault plan at matched budgets, the coded session must
+/// not lose more final accuracy than the uncoded session does — parity
+/// absorbs withheld gradients (the decode renormalizes over the rows
+/// actually folded) while the uncoded mean silently shrinks.
+pub struct CodedDegradesGracefully;
+
+impl Invariant for CodedDegradesGracefully {
+    fn name(&self) -> &'static str {
+        "coded-degrades-gracefully"
+    }
+
+    fn check(&self, run: &RunRecord) -> Result<()> {
+        let Some(c) = run.companions else { return Ok(()) };
+        let coded_drop = c.coded_clean_acc - c.coded_faulted_acc;
+        let uncoded_drop = c.uncoded_clean_acc - c.uncoded_faulted_acc;
+        ensure!(
+            coded_drop <= uncoded_drop + DEGRADATION_TOL,
+            "faulted coded lost more accuracy than faulted uncoded: \
+             coded {:.4} -> {:.4} (drop {coded_drop:.4}), \
+             uncoded {:.4} -> {:.4} (drop {uncoded_drop:.4})",
+            c.coded_clean_acc,
+            c.coded_faulted_acc,
+            c.uncoded_clean_acc,
+            c.uncoded_faulted_acc
+        );
+        Ok(())
+    }
+}
+
+/// An invariant that rejects every run — the *negative-test* harness:
+/// the shrinking and spec-emission machinery must be exercised by a
+/// guaranteed failure without waiting for a real bug. Never registered
+/// in [`default_invariants`].
+pub struct AlwaysFails;
+
+impl Invariant for AlwaysFails {
+    fn name(&self) -> &'static str {
+        "always-fails"
+    }
+
+    fn check(&self, _run: &RunRecord) -> Result<()> {
+        bail!("deliberately failing invariant (negative-test harness)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fuzz::Companions;
+    use crate::scenario::SessionSummary;
+
+    /// A hand-built record that satisfies every default invariant.
+    fn sane_record() -> RunRecord {
+        let lines = vec![
+            "round e0 s1 b0 t1.5 dt1.5 act5 arr5 strag[]".to_string(),
+            "round e0 s2 b1 t3.0 dt1.5 act5 arr5 strag[]".to_string(),
+            "eval e0 s2 t3.0 acc0.8 loss0.4".to_string(),
+            "epoch e0 t3.0 act5 lr2.0".to_string(),
+        ];
+        RunRecord {
+            kvs: vec![("scheme".into(), "uncoded".into())],
+            summary: SessionSummary {
+                steps: 2,
+                final_accuracy: 0.8,
+                ..Default::default()
+            },
+            beta: vec![0.25, -0.5],
+            lines: lines.clone(),
+            final_plan_u: None,
+            u_max: 30,
+            n_clients: 5,
+            has_churn: false,
+            has_faults: false,
+            coded: false,
+            replay_beta: vec![0.25, -0.5],
+            replay_lines: lines,
+            companions: None,
+        }
+    }
+
+    #[test]
+    fn sane_record_passes_all_defaults() {
+        let run = sane_record();
+        for inv in default_invariants() {
+            inv.check(&run).unwrap_or_else(|e| panic!("{} failed: {e:#}", inv.name()));
+        }
+    }
+
+    #[test]
+    fn replay_divergence_is_caught() {
+        let mut run = sane_record();
+        run.replay_beta[0] += 1.0;
+        assert!(ReplayBitwise.check(&run).is_err());
+        let mut run = sane_record();
+        run.replay_lines[1] = "round e0 s2 b1 t3.0 dt1.5 act5 arr4 strag[]".into();
+        let msg = format!("{:#}", ReplayBitwise.check(&run).unwrap_err());
+        assert!(msg.contains("line 1"), "{msg}");
+    }
+
+    #[test]
+    fn umax_violations_are_caught() {
+        let mut run = sane_record();
+        run.final_plan_u = Some(31);
+        assert!(UmaxRespected.check(&run).is_err());
+        run.final_plan_u = Some(30);
+        UmaxRespected.check(&run).unwrap();
+    }
+
+    #[test]
+    fn stream_insanity_is_caught() {
+        // Non-monotone time.
+        let mut run = sane_record();
+        run.lines[1] = "round e0 s2 b1 t0.5 dt1.5 act5 arr5 strag[]".into();
+        run.replay_lines = run.lines.clone();
+        assert!(StreamSane.check(&run).is_err());
+        // More arrivals than active.
+        let mut run = sane_record();
+        run.lines[0] = "round e0 s1 b0 t1.5 dt1.5 act5 arr6 strag[]".into();
+        run.replay_lines = run.lines.clone();
+        assert!(StreamSane.check(&run).is_err());
+        // Lost gradient on an uncoded unfaulted run (biased mean).
+        let mut run = sane_record();
+        run.lines[0] = "round e0 s1 b0 t1.5 dt1.5 act5 arr4 strag[]".into();
+        run.replay_lines = run.lines.clone();
+        assert!(StreamSane.check(&run).is_err());
+        // ...but the same line is legal once faults are in play.
+        run.has_faults = true;
+        StreamSane.check(&run).unwrap();
+        // Partial roster without churn.
+        let mut run = sane_record();
+        run.lines[0] = "round e0 s1 b0 t1.5 dt1.5 act4 arr4 strag[]".into();
+        run.replay_lines = run.lines.clone();
+        assert!(StreamSane.check(&run).is_err());
+        run.has_churn = true;
+        StreamSane.check(&run).unwrap();
+    }
+
+    #[test]
+    fn degradation_gate_compares_matched_drops() {
+        let mut run = sane_record();
+        run.companions = Some(Companions {
+            coded_faulted_acc: 0.78,
+            coded_clean_acc: 0.80,
+            uncoded_faulted_acc: 0.60,
+            uncoded_clean_acc: 0.80,
+        });
+        CodedDegradesGracefully.check(&run).unwrap();
+        run.companions = Some(Companions {
+            coded_faulted_acc: 0.50,
+            coded_clean_acc: 0.80,
+            uncoded_faulted_acc: 0.79,
+            uncoded_clean_acc: 0.80,
+        });
+        assert!(CodedDegradesGracefully.check(&run).is_err());
+    }
+
+    #[test]
+    fn the_negative_harness_always_fails() {
+        assert!(AlwaysFails.check(&sane_record()).is_err());
+    }
+}

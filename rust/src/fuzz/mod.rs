@@ -1,0 +1,93 @@
+//! Seeded scenario fuzzing and invariant campaigns.
+//!
+//! The scenario layer exposes a large configuration space — population,
+//! churn, rate processes, topology, control policy, redundancy, engine,
+//! injected faults ([`crate::simnet::FaultPlan`]) — and the crate's core
+//! guarantees (bitwise replay, `u_max` discipline, unbiased aggregation,
+//! graceful fault degradation) are supposed to hold on *all* of it, not
+//! just on the hand-picked regression points. This module grinds that
+//! claim the way a foundry-style invariant executor grinds a contract:
+//!
+//! 1. [`gen`] draws random **valid-by-construction** scenarios from a
+//!    seeded [`crate::mathx::rng::Rng`] stream as ordered
+//!    `key = value` pairs over the `tiny` base preset — exactly the spec
+//!    format [`crate::scenario::ScenarioBuilder::set`] consumes, so
+//!    every generated scenario is also a writeable, replayable file.
+//! 2. [`campaign`] executes each scenario (primary run at
+//!    `(threads, shards) = (1, 1)`, a replay at `(2, 2)`, and — when the
+//!    scenario is coded *and* faulted — unfaulted/uncoded companion runs
+//!    at matched budgets) into a [`RunRecord`].
+//! 3. [`invariants`] checks a pluggable [`Invariant`] set against the
+//!    record: event streams replay bitwise, re-plans never exceed
+//!    `u_max`, the streamed log is sane (monotone time, `arrivals <=
+//!    active`, full rosters when nothing removes clients), and faulted
+//!    coded never loses more accuracy than faulted uncoded.
+//! 4. On a violation, [`shrink`] greedily removes spec pairs while the
+//!    same invariant keeps failing, and the campaign writes the minimal
+//!    scenario as a `*.scenario` spec file — ready to be committed under
+//!    `presets/regressions/` and replayed forever by
+//!    [`campaign::replay_dir`] (the CI regression job).
+//!
+//! Everything is deterministic in the campaign seed: scenario `i` of
+//! campaign seed `S` is the same scenario on every machine, so a CI
+//! failure is reproducible locally with `codedfedl fuzz --seed S`.
+//!
+//! To add an invariant, implement [`Invariant`] over [`RunRecord`] and
+//! register it in [`invariants::default_invariants`].
+
+pub mod campaign;
+pub mod gen;
+pub mod invariants;
+pub mod shrink;
+
+pub use campaign::{
+    execute_scenario, replay_dir, run_campaign, CampaignConfig, CampaignReport, Failure,
+};
+pub use gen::gen_scenario;
+pub use invariants::{default_invariants, Invariant};
+pub use shrink::{shrink, spec_text};
+
+use crate::scenario::SessionSummary;
+
+/// Everything one executed scenario exposes to the [`Invariant`] set.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// The generated spec, as ordered `key = value` pairs over the
+    /// `tiny` base preset.
+    pub kvs: Vec<(String, String)>,
+    /// Summary of the primary run (`threads = shards = 1`).
+    pub summary: SessionSummary,
+    /// Final model of the primary run (raw `f32` data, bitwise-compared).
+    pub beta: Vec<f32>,
+    /// Full canonical event stream of the primary run.
+    pub lines: Vec<String>,
+    /// `u` of the allocation in force at run end (`None` for uncoded).
+    pub final_plan_u: Option<usize>,
+    /// The profile's hard parity budget.
+    pub u_max: usize,
+    /// Population size the scenario compiled to.
+    pub n_clients: usize,
+    /// Scenario removes clients between epochs (churn schedule present).
+    pub has_churn: bool,
+    /// Scenario injects faults (non-`none` [`crate::simnet::FaultPlan`]).
+    pub has_faults: bool,
+    /// Scenario runs a coded scheme.
+    pub coded: bool,
+    /// Final model of the replay run (`threads = shards = 2`).
+    pub replay_beta: Vec<f32>,
+    /// Event stream of the replay run.
+    pub replay_lines: Vec<String>,
+    /// Matched-budget companion accuracies — present only when the
+    /// scenario is coded *and* faulted.
+    pub companions: Option<Companions>,
+}
+
+/// Final accuracies of the degradation quadrant: the same scenario with
+/// scheme × fault-plan flipped, everything else identical.
+#[derive(Debug, Clone, Copy)]
+pub struct Companions {
+    pub coded_faulted_acc: f64,
+    pub coded_clean_acc: f64,
+    pub uncoded_faulted_acc: f64,
+    pub uncoded_clean_acc: f64,
+}

@@ -1,0 +1,104 @@
+//! Greedy shrinking of failing scenarios to a minimal spec.
+//!
+//! A fuzz failure on a 10-pair scenario is a lousy bug report; the same
+//! failure on the 2 pairs that actually matter is a regression test.
+//! [`shrink`] repeatedly deletes spec pairs while the caller's predicate
+//! still reports the *same* failure, to a fixpoint — the classic
+//! delta-debugging greedy pass, which is O(k²) scenario executions for
+//! k pairs and entirely sufficient at the sizes the generator emits.
+
+/// Minimize `kvs` under `still_fails` (which must return `true` when the
+/// candidate spec still reproduces the original failure — the campaign
+/// passes a predicate pinned to the violated invariant's name, so
+/// shrinking can never wander onto a *different* failure). Returns a
+/// subsequence of `kvs`; the result still satisfies `still_fails`
+/// whenever the input did.
+pub fn shrink<F>(kvs: &[(String, String)], still_fails: F) -> Vec<(String, String)>
+where
+    F: Fn(&[(String, String)]) -> bool,
+{
+    let mut cur = kvs.to_vec();
+    loop {
+        let mut removed_any = false;
+        let mut i = 0;
+        while i < cur.len() {
+            let mut cand = cur.clone();
+            cand.remove(i);
+            if still_fails(&cand) {
+                cur = cand;
+                removed_any = true;
+                // Re-test index i: the next pair slid into this slot.
+            } else {
+                i += 1;
+            }
+        }
+        if !removed_any {
+            return cur;
+        }
+    }
+}
+
+/// Render a spec as the `key = value` file format
+/// [`crate::scenario::ScenarioBuilder::apply_file`] consumes, with a
+/// provenance header. The base preset is part of the contract: replays
+/// apply the pairs over `tiny`.
+pub fn spec_text(kvs: &[(String, String)], header: &str) -> String {
+    let mut out = String::new();
+    for line in header.lines() {
+        out.push_str("# ");
+        out.push_str(line);
+        out.push('\n');
+    }
+    out.push_str("# base preset: tiny\n");
+    for (k, v) in kvs {
+        out.push_str(&format!("{k} = {v}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(k: &str, v: &str) -> (String, String) {
+        (k.to_string(), v.to_string())
+    }
+
+    #[test]
+    fn shrinks_to_the_failure_inducing_core() {
+        let kvs = vec![kv("a", "1"), kv("b", "2"), kv("c", "3"), kv("d", "4")];
+        // The "failure" needs b AND d together.
+        let fails = |c: &[(String, String)]| {
+            c.iter().any(|(k, _)| k == "b") && c.iter().any(|(k, _)| k == "d")
+        };
+        let min = shrink(&kvs, fails);
+        assert_eq!(min, vec![kv("b", "2"), kv("d", "4")]);
+        assert!(fails(&min));
+    }
+
+    #[test]
+    fn an_irreducible_failure_is_left_alone() {
+        let kvs = vec![kv("a", "1")];
+        let min = shrink(&kvs, |c| c.iter().any(|(k, _)| k == "a"));
+        assert_eq!(min, kvs);
+    }
+
+    #[test]
+    fn spec_text_is_a_parseable_kv_file() {
+        let kvs = vec![kv("scheme", "coded"), kv("scenario.faults", "abort:0.2+seed:5")];
+        let text = spec_text(&kvs, "invariant 'replay-bitwise' (seed 1, iter 4)");
+        assert!(text.starts_with("# invariant"));
+        assert!(text.contains("# base preset: tiny\n"));
+        let dir = std::env::temp_dir().join("codedfedl_shrink_spec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("min.scenario");
+        std::fs::write(&path, &text).unwrap();
+        let mut back: Vec<(String, String)> = Vec::new();
+        crate::config::parse_kv_file(path.to_str().unwrap(), &mut |k: &str, v: &str| {
+            back.push((k.to_string(), v.to_string()));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(back, kvs);
+    }
+}

@@ -146,6 +146,33 @@
 //! thread/shard count, and the `off` policy is bitwise-identical to a
 //! plain session.
 //!
+//! ## Fault injection and scenario fuzzing
+//!
+//! Robustness is tested the same way correctness is: deterministically.
+//! A [`simnet::FaultPlan`] (`scenario.faults` spec key, e.g.
+//! `abort:0.1+telemetry:0.2+seed:3`) injects **mid-round client aborts**
+//! — a client's delay said "arrived" but the partial gradient is
+//! withheld; the coded decode renormalizes over the rows actually folded
+//! while the uncoded arm silently loses them — and **transient telemetry
+//! loss** to the adaptive controller's rate estimators, which then coast
+//! on stale estimates without ever emitting a plan that violates
+//! `u_max`. Observer-sink failures degrade structurally instead of
+//! aborting when wrapped in [`scenario::RetryObserver`] /
+//! [`scenario::Fanout`]. Every fault draw comes from a dedicated seed
+//! fork (root stream 12), so faulted runs replay bitwise at any
+//! (threads, shards) and fault seeds never perturb unfaulted streams.
+//!
+//! The [`fuzz`] module turns this surface into a **seeded scenario
+//! campaign** (`codedfedl fuzz`): a generator samples valid scenarios
+//! over (population, churn, rates, topology, policy, redundancy,
+//! faults), an executor runs each one (plus a thread/shard replay and
+//! coded/uncoded fault companions), and a pluggable `fuzz::Invariant`
+//! set checks the streamed event log — replay is bitwise, re-plans
+//! respect `u_max`, full-roster aggregation is unbiased, faulted coded
+//! never degrades more than faulted uncoded. Failures are greedily
+//! shrunk to a minimal `scenario.*` spec file; shrunken regressions are
+//! committed under `presets/regressions/` and replayed in CI.
+//!
 //! The four `fl::Trainer` constructors (`from_config`, `with_backend`,
 //! `with_shared`, `with_shared_parallelism`) and `SweepRunner::trainer`
 //! are **deprecated shims** over the same engine and will keep working;
@@ -171,6 +198,7 @@ pub mod config;
 pub mod control;
 pub mod data;
 pub mod fl;
+pub mod fuzz;
 pub mod mathx;
 pub mod metrics;
 pub mod runtime;

@@ -7,6 +7,8 @@
 //!              per-round metrics
 //!   allocate   print the load-allocation plan for a configuration
 //!   reproduce  run uncoded + coded back-to-back and report the speedup
+//!   fuzz       seeded scenario-fuzzing campaign (invariant checks,
+//!              shrunken failing specs) or regression-spec replay
 //!   info       show the resolved config and artifact status
 
 use anyhow::{bail, Result};
@@ -145,6 +147,12 @@ fn scenario_flags() -> Vec<codedfedl::cli::FlagSpec> {
              scenario.adaptive = <policy>, scenario.adaptive.ewma = <w in (0,1]>)",
             None,
         ),
+        flag(
+            "faults",
+            "injected-fault plan: none|abort:P[+telemetry:P][+seed:N] \
+             (deterministic; spec key scenario.faults)",
+            None,
+        ),
         flag("spec", "scenario spec file (key = value, scenario.* + config keys)", None),
     ]);
     flags
@@ -184,6 +192,7 @@ fn cmd_scenario(args: &codedfedl::cli::Args) -> Result<()> {
         ("scenario.steps_per_epoch", "steps"),
         ("scenario.hierarchical", "hierarchical"),
         ("scenario.adaptive", "adaptive"),
+        ("scenario.faults", "faults"),
     ] {
         if let Some(v) = args.get(flag_name) {
             b.set(key, v)?;
@@ -198,13 +207,14 @@ fn cmd_scenario(args: &codedfedl::cli::Args) -> Result<()> {
     let sc = session.scenario().clone();
     println!(
         "scenario: {} clients over {} cell(s), churn={}, link={}, compute={}, adaptive={}, \
-         scheme={}, backend={}, {} epochs x {} steps",
+         faults={}, scheme={}, backend={}, {} epochs x {} steps",
         sc.cfg.n_clients,
         sc.topology.n_cells(),
         sc.churn.spec(),
         sc.link_rates.spec(),
         sc.compute_rates.spec(),
         sc.adaptive.spec(),
+        sc.faults.spec(),
         sc.cfg.scheme.name(),
         session.backend_name(),
         sc.cfg.train.epochs,
@@ -244,7 +254,76 @@ fn cmd_scenario(args: &codedfedl::cli::Args) -> Result<()> {
         cache_calls,
         rows_reread,
     );
+    if summary.fault_aborts + summary.telemetry_drops + summary.observer_errors > 0 {
+        println!(
+            "  faults: {} aborted uploads, {} telemetry drops, {} observer drops",
+            summary.fault_aborts, summary.telemetry_drops, summary.observer_errors
+        );
+    }
     Ok(())
+}
+
+fn fuzz_flags() -> Vec<codedfedl::cli::FlagSpec> {
+    vec![
+        flag("seed", "campaign seed (fixes every generated scenario)", Some("1")),
+        flag("iters", "scenarios to generate and execute", Some("100")),
+        flag("budget-s", "wall-clock budget in seconds (campaign stops cleanly)", None),
+        flag("out-dir", "write shrunken failing specs here", Some("fuzz_out")),
+        flag(
+            "replay",
+            "replay every *.scenario spec in this directory instead of generating \
+             (the CI regression job)",
+            None,
+        ),
+    ]
+}
+
+/// Seeded scenario-fuzzing campaign: generate random valid scenarios
+/// (faults included), execute each with a thread/shard replay, check the
+/// invariant set, shrink every failure to a minimal committable spec.
+/// Exits nonzero on any violation.
+fn cmd_fuzz(args: &codedfedl::cli::Args) -> Result<()> {
+    use codedfedl::fuzz::{default_invariants, replay_dir, run_campaign, CampaignConfig};
+    let invariants = default_invariants();
+    let report = if let Some(dir) = args.get("replay") {
+        println!("replaying regression specs from {dir}/");
+        replay_dir(dir, &invariants)?
+    } else {
+        let cfg = CampaignConfig {
+            seed: args.req("seed")?.parse()?,
+            iters: args.req("iters")?.parse()?,
+            budget_s: args.get("budget-s").map(str::parse).transpose()?,
+            out_dir: args.get("out-dir").map(str::to_string),
+        };
+        println!(
+            "fuzz campaign: seed={} iters={} budget_s={:?} invariants=[{}]",
+            cfg.seed,
+            cfg.iters,
+            cfg.budget_s,
+            invariants.iter().map(|i| i.name()).collect::<Vec<_>>().join(", ")
+        );
+        run_campaign(&cfg, &invariants)?
+    };
+    println!(
+        "executed {} scenario(s){}",
+        report.executed,
+        if report.hit_budget { " (wall-clock budget reached)" } else { "" }
+    );
+    if report.failures.is_empty() {
+        println!("all invariants green");
+        return Ok(());
+    }
+    for f in &report.failures {
+        println!("FAIL {} — invariant '{}': {}", f.scenario, f.invariant, f.message);
+        println!("  minimal spec ({} pair(s)):", f.minimal_kvs.len());
+        for (k, v) in &f.minimal_kvs {
+            println!("    {k} = {v}");
+        }
+        if let Some(p) = &f.spec_path {
+            println!("  written to {p}");
+        }
+    }
+    bail!("{} invariant violation(s)", report.failures.len())
 }
 
 fn cmd_allocate(args: &codedfedl::cli::Args) -> Result<()> {
@@ -373,6 +452,11 @@ fn main() -> Result<()> {
             ),
             ("allocate", "print the load-allocation plan", common_flags()),
             ("reproduce", "uncoded vs coded speedup comparison", common_flags()),
+            (
+                "fuzz",
+                "seeded scenario-fuzzing campaign with invariant checks + shrinking",
+                fuzz_flags(),
+            ),
             ("trace", "emit one epoch's per-client event timeline (CSV)", common_flags()),
             ("info", "show resolved config + artifact status", common_flags()),
         ],
@@ -390,6 +474,7 @@ fn main() -> Result<()> {
         Some("scenario") => cmd_scenario(&args),
         Some("allocate") => cmd_allocate(&args),
         Some("reproduce") => cmd_reproduce(&args),
+        Some("fuzz") => cmd_fuzz(&args),
         Some("trace") => cmd_trace(&args),
         Some("info") => cmd_info(&args),
         _ => bail!("missing subcommand\n\n{}", cli.usage()),

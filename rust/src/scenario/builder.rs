@@ -33,6 +33,7 @@ use crate::runtime::backend::ComputeBackend;
 use crate::runtime::registry::create_backend;
 use crate::scenario::session::Session;
 use crate::simnet::churn::ChurnSchedule;
+use crate::simnet::faults::FaultPlan;
 use crate::simnet::rates::RateProcess;
 use crate::simnet::topology::Topology;
 
@@ -63,6 +64,11 @@ pub struct Scenario {
     /// requires a synthetic (streamable) dataset; a trivial 1-cell
     /// hierarchical run is bitwise-equal to the flat engine.
     pub hierarchical: bool,
+    /// Injected faults ([`crate::simnet::FaultPlan`]): mid-round client
+    /// aborts and controller telemetry loss, drawn from a dedicated seed
+    /// fork so faulted runs replay bitwise. `none` (default) never
+    /// touches the fault stream.
+    pub faults: FaultPlan,
 }
 
 impl Scenario {
@@ -80,6 +86,7 @@ impl Scenario {
             adaptive: ControlPolicy::Off,
             adaptive_ewma: DEFAULT_ADAPTIVE_EWMA,
             hierarchical: false,
+            faults: FaultPlan::none(),
         }
     }
 
@@ -87,7 +94,10 @@ impl Scenario {
     /// full-population run (topology may still be multi-cell — it is
     /// applied once at construction, not per epoch).
     pub fn is_static(&self) -> bool {
-        self.churn.is_none() && self.compute_rates.is_static() && self.link_rates.is_static()
+        self.churn.is_none()
+            && self.compute_rates.is_static()
+            && self.link_rates.is_static()
+            && self.faults.is_none()
     }
 
     /// Validate the scenario as a whole.
@@ -98,6 +108,7 @@ impl Scenario {
         self.compute_rates.validate().context("compute_rates")?;
         self.link_rates.validate().context("link_rates")?;
         self.adaptive.validate().context("adaptive")?;
+        self.faults.validate().context("faults")?;
         // The estimator weight is validated even with the policy off: a
         // spec carrying an invalid knob should fail loudly, not ride
         // along silently until someone flips the policy on.
@@ -152,6 +163,7 @@ pub struct ScenarioBuilder {
     adaptive: ControlPolicy,
     adaptive_ewma: f64,
     hierarchical: bool,
+    faults: FaultPlan,
 }
 
 impl ScenarioBuilder {
@@ -176,6 +188,7 @@ impl ScenarioBuilder {
             adaptive: ControlPolicy::Off,
             adaptive_ewma: DEFAULT_ADAPTIVE_EWMA,
             hierarchical: false,
+            faults: FaultPlan::none(),
         }
     }
 
@@ -352,6 +365,15 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Injected-fault plan (spec key `scenario.faults`, e.g.
+    /// `abort:0.1+telemetry:0.2+seed:3`): mid-round client aborts and
+    /// controller telemetry loss, drawn from a dedicated fault seed fork
+    /// so faulted runs replay bitwise and faults-off runs are untouched.
+    pub fn faults(mut self, plan: FaultPlan) -> ScenarioBuilder {
+        self.faults = plan;
+        self
+    }
+
     /// Apply one `key = value` override. Scenario keys are prefixed
     /// `scenario.`; everything else forwards to
     /// [`ExperimentConfig::set`].
@@ -368,6 +390,7 @@ impl ScenarioBuilder {
             "scenario.adaptive" => self.adaptive = ControlPolicy::parse(v)?,
             "scenario.adaptive.ewma" => self.adaptive_ewma = v.parse()?,
             "scenario.hierarchical" => self.hierarchical = v.parse()?,
+            "scenario.faults" => self.faults = FaultPlan::parse(v)?,
             other => self.cfg.set(other, value)?,
         }
         Ok(())
@@ -408,6 +431,7 @@ impl ScenarioBuilder {
             adaptive: self.adaptive,
             adaptive_ewma: self.adaptive_ewma,
             hierarchical: self.hierarchical,
+            faults: self.faults,
         };
         scenario.validate()?;
         Ok(scenario)
@@ -546,11 +570,35 @@ mod tests {
     }
 
     #[test]
+    fn fault_spec_key_parses_and_gates_staticness() {
+        let mut b = ScenarioBuilder::from_preset("tiny").unwrap();
+        b.set("scenario.faults", "abort:0.1+telemetry:0.2+seed:3").unwrap();
+        let s = b.compile().unwrap();
+        assert_eq!(
+            s.faults,
+            FaultPlan { abort_p: 0.1, telemetry_loss_p: 0.2, seed: 3 }
+        );
+        // An otherwise-static scenario with faults is not static: the
+        // session must take the RoundCtx path to thread the abort sets.
+        assert!(!s.is_static());
+        // The default plan keeps scenarios static, and bad plans are
+        // rejected at compile time.
+        let d = ScenarioBuilder::from_preset("tiny").unwrap().compile().unwrap();
+        assert!(d.faults.is_none());
+        assert!(d.is_static());
+        let bad = ScenarioBuilder::from_preset("tiny")
+            .unwrap()
+            .faults(FaultPlan { abort_p: 1.0, telemetry_loss_p: 0.0, seed: 0 });
+        assert!(bad.compile().is_err());
+    }
+
+    #[test]
     fn bad_specs_are_rejected() {
         let mut b = ScenarioBuilder::from_preset("tiny").unwrap();
         assert!(b.set("scenario.churn", "sometimes").is_err());
         assert!(b.set("scenario.cells", "0").is_err());
         assert!(b.set("scenario.adaptive", "sometimes").is_err());
+        assert!(b.set("scenario.faults", "sometimes").is_err());
         assert!(b.set("nope.key", "1").is_err());
         // Churn floor above the population fails at compile time.
         let bad = ScenarioBuilder::from_preset("tiny")

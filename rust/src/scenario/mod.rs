@@ -65,6 +65,43 @@
 //! flat session (`tests/scenario_hier.rs`); dynamic
 //! scenarios are bitwise reproducible from the seed (all dynamics are
 //! derived on the driving thread from dedicated seed forks).
+//!
+//! # Fault model
+//!
+//! Scenarios can inject deterministic faults via the `scenario.faults`
+//! spec key (or [`ScenarioBuilder::faults`]), parsed into a
+//! [`crate::simnet::FaultPlan`]:
+//!
+//! * **Mid-round client aborts** (`abort:P`) — per round, each roster
+//!   member is withheld with probability `P` *after* its delay said it
+//!   arrived: the client went silent mid-upload. The coded decode
+//!   renormalizes the gradient mean over the rows actually folded, so
+//!   parity absorbs the loss; the uncoded arm simply loses those
+//!   gradients while keeping the full-batch divisor — the paper's
+//!   fragility, reproduced on purpose.
+//! * **Telemetry loss** (`telemetry:P`) — per round, with probability
+//!   `P` the adaptive controller's `observe_delays` feed is dropped and
+//!   it coasts on stale rate estimates. Re-plans still never exceed
+//!   `u_max` (clamped in `CodedConfig::u`).
+//! * **Observer-sink failures** — not seeded: wrap a flaky sink in
+//!   [`RetryObserver`] (bounded attempt-counted retries, then
+//!   count-and-drop) and/or [`Fanout`] (per-sink error isolation). A
+//!   bare failing observer still aborts the run.
+//!
+//! All fault draws come from a dedicated seed stream — root fork 12,
+//! re-forked by `FaultPlan::seed`, then per-kind (`abort` = 1,
+//! `telemetry` = 2) and per-round — disjoint from the data (1), delay
+//! (4), churn (7), rate (8/10), and control (11 + `1<<32`) streams. A
+//! faulted run is therefore bitwise replayable at any (threads, shards),
+//! and changing the fault seed leaves an *unfaulted* run untouched.
+//! `SessionSummary` reports `fault_aborts`, `telemetry_drops` and
+//! `observer_errors`.
+//!
+//! The seeded scenario-fuzzing campaign over this fault surface — random
+//! scenario generation, pluggable invariants, greedy shrinking of
+//! failures to minimal spec files — lives in [`crate::fuzz`]; to add an
+//! invariant, implement `fuzz::Invariant` over a `fuzz::RunRecord` and
+//! register it in `fuzz::invariants::default_invariants`.
 
 pub mod builder;
 pub mod observer;
@@ -73,6 +110,6 @@ pub mod session;
 pub use builder::{Scenario, ScenarioBuilder};
 pub use observer::{
     ChurnEvent, CollectingObserver, ConsoleObserver, ControlEvent, EpochEvent, EventLog, Fanout,
-    JsonlObserver, RoundEvent, RoundObserver,
+    JsonlObserver, RetryObserver, RoundEvent, RoundObserver,
 };
 pub use session::{Session, SessionSummary};

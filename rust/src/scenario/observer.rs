@@ -88,8 +88,14 @@ pub struct ControlEvent {
 }
 
 /// Streaming receiver for session progress. All methods default to
-/// no-ops so observers implement only what they consume; errors abort
-/// the run (a full disk should not silently drop the metrics stream).
+/// no-ops so observers implement only what they consume.
+///
+/// Error semantics: an error returned by a *bare* observer aborts the
+/// run (a full disk should not silently drop the metrics stream). Runs
+/// that must survive sink failures opt into degradation by wrapping the
+/// sink in [`RetryObserver`] (bounded retries, then count-and-drop) or
+/// by fanning out through [`Fanout`], which isolates per-sink errors so
+/// one failing sink cannot poison its healthy siblings.
 pub trait RoundObserver {
     fn on_round(&mut self, _ev: &RoundEvent) -> Result<()> {
         Ok(())
@@ -105,6 +111,13 @@ pub trait RoundObserver {
     }
     fn on_control(&mut self, _ev: &ControlEvent) -> Result<()> {
         Ok(())
+    }
+    /// Events this observer failed to deliver but structurally absorbed
+    /// (dropped after retries, or swallowed per-sink by a fanout). Plain
+    /// observers never absorb errors, so the default is zero; the
+    /// session surfaces this in `SessionSummary::observer_errors`.
+    fn error_count(&self) -> usize {
+        0
     }
 }
 
@@ -349,50 +362,152 @@ impl RoundObserver for EventLog {
 }
 
 /// Forwards every event to several observers (e.g. collect + stream).
+///
+/// Per-sink errors are *isolated*: every event is delivered to every
+/// sink even when an earlier sink fails, failures are tallied per sink
+/// (see [`Fanout::sink_errors`]), and the fanout itself only errors —
+/// aborting the run — when *every* sink rejected the same event (at
+/// that point nobody is recording anything and continuing would
+/// silently discard the whole stream).
 pub struct Fanout<'a> {
     pub observers: Vec<&'a mut dyn RoundObserver>,
+    errors: Vec<usize>,
 }
 
 impl<'a> Fanout<'a> {
     pub fn new(observers: Vec<&'a mut dyn RoundObserver>) -> Fanout<'a> {
-        Fanout { observers }
+        let errors = vec![0; observers.len()];
+        Fanout { observers, errors }
+    }
+
+    /// Delivery failures per sink, index-aligned with `observers`.
+    pub fn sink_errors(&self) -> &[usize] {
+        &self.errors
+    }
+
+    fn dispatch<F>(&mut self, mut call: F) -> Result<()>
+    where
+        F: FnMut(&mut dyn RoundObserver) -> Result<()>,
+    {
+        if self.observers.is_empty() {
+            return Ok(());
+        }
+        // `observers` is a pub field, so sinks may have been pushed
+        // after construction; keep the tally index-aligned.
+        if self.errors.len() < self.observers.len() {
+            self.errors.resize(self.observers.len(), 0);
+        }
+        let mut delivered = 0usize;
+        let mut last_err = None;
+        for (i, o) in self.observers.iter_mut().enumerate() {
+            match call(&mut **o) {
+                Ok(()) => delivered += 1,
+                Err(e) => {
+                    self.errors[i] += 1;
+                    last_err = Some(e);
+                }
+            }
+        }
+        match last_err {
+            Some(e) if delivered == 0 => Err(e.context("every fanout sink failed")),
+            _ => Ok(()),
+        }
     }
 }
 
 impl RoundObserver for Fanout<'_> {
     fn on_round(&mut self, ev: &RoundEvent) -> Result<()> {
-        for o in self.observers.iter_mut() {
-            o.on_round(ev)?;
-        }
-        Ok(())
+        self.dispatch(|o| o.on_round(ev))
     }
 
     fn on_eval(&mut self, ev: &EvalRecord) -> Result<()> {
-        for o in self.observers.iter_mut() {
-            o.on_eval(ev)?;
-        }
-        Ok(())
+        self.dispatch(|o| o.on_eval(ev))
     }
 
     fn on_epoch(&mut self, ev: &EpochEvent) -> Result<()> {
-        for o in self.observers.iter_mut() {
-            o.on_epoch(ev)?;
-        }
-        Ok(())
+        self.dispatch(|o| o.on_epoch(ev))
     }
 
     fn on_churn(&mut self, ev: &ChurnEvent) -> Result<()> {
-        for o in self.observers.iter_mut() {
-            o.on_churn(ev)?;
-        }
-        Ok(())
+        self.dispatch(|o| o.on_churn(ev))
     }
 
     fn on_control(&mut self, ev: &ControlEvent) -> Result<()> {
-        for o in self.observers.iter_mut() {
-            o.on_control(ev)?;
+        self.dispatch(|o| o.on_control(ev))
+    }
+
+    fn error_count(&self) -> usize {
+        let absorbed: usize = self.errors.iter().sum();
+        let nested: usize = self.observers.iter().map(|o| o.error_count()).sum();
+        absorbed + nested
+    }
+}
+
+/// Fault-tolerant wrapper: re-attempts each failed delivery up to
+/// `max_attempts` times (attempt-counted, no wall-clock sleeps — the
+/// simulation stays deterministic), then *drops* the event, counts it,
+/// and reports success so a flaky sink degrades the metrics stream
+/// instead of aborting the session. Opt-in: a bare observer's errors
+/// still abort the run.
+pub struct RetryObserver<O: RoundObserver> {
+    inner: O,
+    max_attempts: usize,
+    dropped: usize,
+}
+
+impl<O: RoundObserver> RetryObserver<O> {
+    /// `max_attempts` is clamped to at least 1 (the initial delivery).
+    pub fn new(inner: O, max_attempts: usize) -> RetryObserver<O> {
+        RetryObserver { inner, max_attempts: max_attempts.max(1), dropped: 0 }
+    }
+
+    /// Events dropped after exhausting every retry.
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// Unwrap the inner observer (e.g. to finalize a collector).
+    pub fn into_inner(self) -> O {
+        self.inner
+    }
+
+    fn guard<F>(&mut self, mut call: F) -> Result<()>
+    where
+        F: FnMut(&mut O) -> Result<()>,
+    {
+        for _ in 0..self.max_attempts {
+            if call(&mut self.inner).is_ok() {
+                return Ok(());
+            }
         }
+        self.dropped += 1;
         Ok(())
+    }
+}
+
+impl<O: RoundObserver> RoundObserver for RetryObserver<O> {
+    fn on_round(&mut self, ev: &RoundEvent) -> Result<()> {
+        self.guard(|o| o.on_round(ev))
+    }
+
+    fn on_eval(&mut self, ev: &EvalRecord) -> Result<()> {
+        self.guard(|o| o.on_eval(ev))
+    }
+
+    fn on_epoch(&mut self, ev: &EpochEvent) -> Result<()> {
+        self.guard(|o| o.on_epoch(ev))
+    }
+
+    fn on_churn(&mut self, ev: &ChurnEvent) -> Result<()> {
+        self.guard(|o| o.on_churn(ev))
+    }
+
+    fn on_control(&mut self, ev: &ControlEvent) -> Result<()> {
+        self.guard(|o| o.on_control(ev))
+    }
+
+    fn error_count(&self) -> usize {
+        self.dropped + self.inner.error_count()
     }
 }
 
@@ -508,5 +623,96 @@ mod tests {
         }
         assert_eq!(a.lines, b.lines);
         assert_eq!(a.lines.len(), 1);
+    }
+
+    /// Fails every `on_round` delivery; other events succeed.
+    struct FailingSink {
+        calls: usize,
+    }
+
+    impl RoundObserver for FailingSink {
+        fn on_round(&mut self, _ev: &RoundEvent) -> Result<()> {
+            self.calls += 1;
+            anyhow::bail!("stream sink is full")
+        }
+    }
+
+    #[test]
+    fn fanout_isolates_a_failing_sink() {
+        let mut bad = FailingSink { calls: 0 };
+        let mut a = EventLog::new();
+        let mut b = EventLog::new();
+        let (errors, total);
+        {
+            let mut fan = Fanout::new(vec![&mut bad, &mut a, &mut b]);
+            // Healthy siblings keep receiving even though sink 0 fails.
+            fan.on_round(&round_ev()).unwrap();
+            fan.on_round(&round_ev()).unwrap();
+            errors = fan.sink_errors().to_vec();
+            total = fan.error_count();
+        }
+        assert_eq!(bad.calls, 2, "failing sink still sees every event");
+        assert_eq!(a.lines.len(), 2);
+        assert_eq!(a.lines, b.lines);
+        assert_eq!(errors, vec![2, 0, 0]);
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn fanout_errs_only_when_every_sink_fails() {
+        let mut bad1 = FailingSink { calls: 0 };
+        let mut bad2 = FailingSink { calls: 0 };
+        let mut fan = Fanout::new(vec![&mut bad1, &mut bad2]);
+        let err = fan.on_round(&round_ev()).unwrap_err();
+        assert!(format!("{err:#}").contains("every fanout sink failed"), "{err:#}");
+        // Non-failing event kinds still flow.
+        fan.on_epoch(&EpochEvent { epoch: 0, sim_time_s: 1.0, active: 5, lr: 2.0 }).unwrap();
+        assert_eq!(fan.sink_errors(), &[1, 1]);
+    }
+
+    /// Succeeds only on every `period`-th attempt for a given event.
+    struct FlakySink {
+        attempts: usize,
+        period: usize,
+        delivered: usize,
+    }
+
+    impl RoundObserver for FlakySink {
+        fn on_round(&mut self, _ev: &RoundEvent) -> Result<()> {
+            self.attempts += 1;
+            if self.attempts % self.period == 0 {
+                self.delivered += 1;
+                Ok(())
+            } else {
+                anyhow::bail!("transient sink error")
+            }
+        }
+    }
+
+    #[test]
+    fn retry_observer_retries_then_delivers() {
+        // Needs 3 attempts per event; 3 are allowed, so nothing drops.
+        let flaky = FlakySink { attempts: 0, period: 3, delivered: 0 };
+        let mut obs = RetryObserver::new(flaky, 3);
+        obs.on_round(&round_ev()).unwrap();
+        obs.on_round(&round_ev()).unwrap();
+        assert_eq!(obs.dropped(), 0);
+        assert_eq!(obs.error_count(), 0);
+        let inner = obs.into_inner();
+        assert_eq!(inner.delivered, 2);
+    }
+
+    #[test]
+    fn retry_observer_drops_after_exhaustion_without_erroring() {
+        // Needs 3 attempts per event but only 2 are allowed: every event
+        // drops, yet the wrapper reports success so the run continues.
+        let flaky = FlakySink { attempts: 0, period: 3, delivered: 0 };
+        let mut obs = RetryObserver::new(flaky, 2);
+        obs.on_round(&round_ev()).unwrap();
+        assert_eq!(obs.dropped(), 1);
+        assert_eq!(obs.error_count(), 1);
+        // Unimplemented (default no-op) events never drop.
+        obs.on_epoch(&EpochEvent { epoch: 0, sim_time_s: 1.0, active: 5, lr: 2.0 }).unwrap();
+        assert_eq!(obs.error_count(), 1);
     }
 }

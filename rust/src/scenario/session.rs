@@ -89,6 +89,18 @@ pub struct SessionSummary {
     /// Size of the active roster in the final epoch (scale runs report
     /// occupancy without replaying the JSONL).
     pub final_active: usize,
+    /// Injected mid-round aborts over the whole run (arrived clients
+    /// whose gradient was withheld; 0 with faults off).
+    pub fault_aborts: usize,
+    /// Rounds whose realized-delay telemetry was lost before reaching
+    /// the controller (counted only when a controller is present).
+    pub telemetry_drops: usize,
+    /// Events the observer chain failed to deliver but absorbed instead
+    /// of aborting the run (per-sink counts from [`RoundObserver::
+    /// error_count`] — nonzero only with fault-tolerant observers like
+    /// [`crate::scenario::RetryObserver`] or an isolated
+    /// [`crate::scenario::Fanout`] sink).
+    pub observer_errors: usize,
 }
 
 /// The round engine a session drives: the flat single-tier
@@ -114,6 +126,11 @@ pub struct Session {
     reencode_root: Rng,
     /// Seed fork for the control plane's processed-mask redraws.
     ctrl_root: Rng,
+    /// Seed fork for injected faults (stream 12, further forked by the
+    /// fault plan's own seed): abort coins and telemetry-loss coins draw
+    /// from here and nowhere else, so a faults-off run never touches the
+    /// stream and a fault-seed change leaves every other stream intact.
+    fault_root: Rng,
     /// The active set the currently-installed parity was encoded for.
     encoded_for: Vec<usize>,
     /// Per-step re-encoded parity operands (None = construction parity).
@@ -253,6 +270,7 @@ impl Session {
             reencode_root: root.fork(9),
             link_rate_root: root.fork(10),
             ctrl_root: root.fork(11),
+            fault_root: root.fork(12).fork(scenario.faults.seed),
             encoded_for: (0..n).collect(),
             parity_override: None,
             caches: Vec::new(),
@@ -290,6 +308,7 @@ impl Session {
             reencode_root: root.fork(9),
             link_rate_root: root.fork(10),
             ctrl_root: root.fork(11),
+            fault_root: root.fork(12).fork(scenario.faults.seed),
             encoded_for: (0..n).collect(),
             parity_override: None,
             caches: Vec::new(),
@@ -465,12 +484,15 @@ impl Session {
         let adaptive = self.controller.is_some();
         let rates_static =
             self.scenario.compute_rates.is_static() && self.scenario.link_rates.is_static();
+        let faults = self.scenario.faults.clone();
 
         let mut sim_time = 0.0f64;
         let mut global_step = 0usize;
         let mut arrival_frac_sum = 0.0f64;
         let mut evals = 0usize;
         let mut last_acc = 0.0f64;
+        let mut fault_aborts = 0usize;
+        let mut telemetry_drops = 0usize;
         let mut prev_active: Vec<usize> = (0..n).collect();
 
         for epoch in 0..cfg.train.epochs {
@@ -545,13 +567,24 @@ impl Session {
             // untouched.
             let m_round = (active.len() * cfg.profile.l) as f32;
             for s in 0..steps {
+                // Fault decisions for this global round, drawn on the
+                // driving thread from the dedicated fault stream (a
+                // faults-off plan returns instantly without drawing).
+                let round_idx = (epoch * steps + s) as u64;
+                let abort_set = faults.round_aborts(&self.fault_root, round_idx, &active);
                 let out = match &mut self.engine {
                     // The hierarchical engine consumes the roster and
                     // rate models directly — its parity is per cell, so
                     // the flat RoundCtx override set does not apply.
-                    Engine::Hier(h) => {
-                        h.step_round(s, lr, lam, m_round, &active, models.as_deref())?
-                    }
+                    Engine::Hier(h) => h.step_round(
+                        s,
+                        lr,
+                        lam,
+                        m_round,
+                        &active,
+                        models.as_deref(),
+                        &abort_set,
+                    )?,
                     Engine::Flat(trainer) if is_static && !adaptive => {
                         trainer.step_round(s, lr, lam, m_batch, None)?
                     }
@@ -563,10 +596,12 @@ impl Session {
                             plan: self.ctrl_plan.as_ref(),
                             masks: self.ctrl_prep_masks.as_ref().map(|m| m[s].as_slice()),
                             record_delays: adaptive,
+                            aborts: &abort_set,
                         };
                         trainer.step_round(s, lr, lam, m_round, Some(&ctx))?
                     }
                 };
+                fault_aborts += out.aborted;
                 sim_time += out.step_time_s;
                 arrival_frac_sum += out.arrivals as f64 / active.len().max(1) as f64;
                 global_step += 1;
@@ -582,8 +617,17 @@ impl Session {
                 };
                 // The controller rides the same observer stream (and
                 // additionally gets the realized delay ground truth).
+                // An injected telemetry loss drops only the delay
+                // observations — the controller still sees the round
+                // event and coasts on stale estimates; its re-solves are
+                // u-preserving, so `u_max` can never be violated by a
+                // plan decided on stale telemetry.
                 if let Some(c) = self.controller.as_mut() {
-                    c.observe_delays(&out.delays);
+                    if faults.telemetry_lost(&self.fault_root, round_idx) {
+                        telemetry_drops += 1;
+                    } else {
+                        c.observe_delays(&out.delays);
+                    }
                     c.on_round(&ev)?;
                 }
                 obs.on_round(&ev)?;
@@ -625,6 +669,9 @@ impl Session {
             parity_reencodes: self.reencodes,
             replans: self.replan_count,
             final_active: prev_active.len(),
+            fault_aborts,
+            telemetry_drops,
+            observer_errors: obs.error_count(),
         })
     }
 
@@ -888,6 +935,32 @@ mod tests {
         assert_eq!(evals, summary.evals);
         assert!(summary.total_sim_time_s > 0.0);
         assert!((summary.mean_arrival_frac - 1.0).abs() < 1e-12); // uncoded waits for all
+    }
+
+    #[test]
+    fn faulted_session_degrades_gracefully_and_replays() {
+        use crate::simnet::faults::FaultPlan;
+        let plan = FaultPlan { abort_p: 0.3, telemetry_loss_p: 0.0, seed: 1 };
+        let run = |p: FaultPlan| {
+            let mut s = tiny_builder(Scheme::Coded)
+                .faults(p)
+                .build_with_backend(Box::new(NativeBackend))
+                .unwrap();
+            let mut log = EventLog::new();
+            let summary = s.run_observed(&mut log).unwrap();
+            (s.beta().clone(), log.lines, summary)
+        };
+        let (b1, l1, s1) = run(plan.clone());
+        let (b2, l2, s2) = run(plan);
+        // A faulted run is bitwise replayable from the seed.
+        assert_eq!(b1.data(), b2.data());
+        assert_eq!(l1, l2);
+        assert_eq!(s1.fault_aborts, s2.fault_aborts);
+        // At p=0.3 over 4 epochs some arrived gradients must be withheld,
+        // and the session still completes with a sane model.
+        assert!(s1.fault_aborts > 0, "no aborts fired at p=0.3");
+        assert!(s1.final_accuracy.is_finite());
+        assert!(b1.data().iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -15,12 +15,14 @@
 pub mod asym;
 pub mod churn;
 pub mod delay;
+pub mod faults;
 pub mod rates;
 pub mod topology;
 pub mod trace;
 
 pub use asym::AsymClientModel;
 pub use churn::ChurnSchedule;
+pub use faults::FaultPlan;
 pub use delay::{ClientModel, DelaySample};
 pub use rates::RateProcess;
 pub use topology::{build_population, build_population_with_topology, CellSpec, Population, Topology};

@@ -1,16 +1,17 @@
 //! Failure-injection integration tests: extreme network regimes must not
 //! break the allocator or the trainer, and the coded scheme must stay
 //! robust where the uncoded baseline degrades.
-
-// These tests intentionally keep driving the deprecated legacy
-// constructors: extreme regimes must not break the compatibility shims.
-#![allow(deprecated)]
+//!
+//! These drive the Scenario/Session API (one deliberately-kept
+//! deprecated-shim case aside) — extreme regimes are checked on the
+//! construction path users actually run, on both the flat and the
+//! hierarchical two-tier engine.
 
 use codedfedl::allocation::optimizer::plan_fixed_u;
 use codedfedl::config::{ExperimentConfig, Scheme};
-use codedfedl::fl::trainer::Trainer;
 use codedfedl::mathx::rng::Rng;
 use codedfedl::runtime::backend::NativeBackend;
+use codedfedl::scenario::ScenarioBuilder;
 use codedfedl::simnet::delay::ClientModel;
 use codedfedl::simnet::topology::build_population;
 
@@ -22,12 +23,35 @@ fn tiny(scheme: Scheme) -> ExperimentConfig {
     cfg
 }
 
+fn tiny_builder(scheme: Scheme) -> ScenarioBuilder {
+    let mut b = ScenarioBuilder::from_preset("tiny").unwrap().scheme(scheme).epochs(5);
+    b.set("backend", "native").unwrap();
+    b
+}
+
 #[test]
 fn high_erasure_probability_still_trains() {
-    let mut cfg = tiny(Scheme::Coded);
-    cfg.net.p_fail = 0.6; // six in ten transmissions lost
-    cfg.train.redundancy = 0.30;
-    let report = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap().run().unwrap();
+    let mut b = tiny_builder(Scheme::Coded);
+    b.set("net.p_fail", "0.6").unwrap(); // six in ten transmissions lost
+    b.set("train.redundancy", "0.30").unwrap();
+    let report =
+        b.build_with_backend(Box::new(NativeBackend)).unwrap().run().unwrap();
+    assert!(report.final_accuracy() > 0.4, "acc {}", report.final_accuracy());
+}
+
+#[test]
+fn high_erasure_probability_still_trains_hierarchically() {
+    // The same extreme-erasure regime on the two-tier engine: per-cell
+    // sub-rounds and on-demand data must not change the robustness story.
+    let mut b = tiny_builder(Scheme::Coded)
+        .population(16)
+        .steps_per_epoch(2)
+        .cells(2)
+        .hierarchical(true);
+    b.set("net.p_fail", "0.6").unwrap();
+    b.set("train.redundancy", "0.30").unwrap();
+    let report =
+        b.build_with_backend(Box::new(NativeBackend)).unwrap().run().unwrap();
     assert!(report.final_accuracy() > 0.4, "acc {}", report.final_accuracy());
 }
 
@@ -51,6 +75,22 @@ fn extreme_compute_heterogeneity_still_plans() {
         slow_avg <= fast_avg,
         "slow clients got more load: {slow_avg} vs {fast_avg}"
     );
+}
+
+#[test]
+fn extreme_compute_heterogeneity_trains_hierarchically() {
+    // A steep compute ladder across a 16-client two-cell population on
+    // the hierarchical engine: per-cell plans must still converge.
+    let mut b = tiny_builder(Scheme::Coded)
+        .population(16)
+        .steps_per_epoch(2)
+        .cells(2)
+        .hierarchical(true);
+    b.set("net.k2", "0.6").unwrap(); // rank-16 client at ~0.6^16 of the fastest
+    b.set("train.redundancy", "0.30").unwrap();
+    let report =
+        b.build_with_backend(Box::new(NativeBackend)).unwrap().run().unwrap();
+    assert!(report.final_accuracy() > 0.4, "acc {}", report.final_accuracy());
 }
 
 #[test]
@@ -83,14 +123,14 @@ fn one_dead_slow_client_does_not_stall_coded() {
 
 #[test]
 fn zero_failure_network_is_fastest() {
-    let mut flaky = tiny(Scheme::Coded);
-    flaky.net.p_fail = 0.4;
-    let mut clean = tiny(Scheme::Coded);
-    clean.net.p_fail = 0.0;
-    let rf = Trainer::with_backend(&flaky, Box::new(NativeBackend)).unwrap();
-    let rc = Trainer::with_backend(&clean, Box::new(NativeBackend)).unwrap();
-    let df = rf.setup().plan.as_ref().unwrap().deadline;
-    let dc = rc.setup().plan.as_ref().unwrap().deadline;
+    let deadline = |p_fail: &str| {
+        let mut b = tiny_builder(Scheme::Coded);
+        b.set("net.p_fail", p_fail).unwrap();
+        let s = b.build_with_backend(Box::new(NativeBackend)).unwrap();
+        s.setup().plan.as_ref().unwrap().deadline
+    };
+    let df = deadline("0.4");
+    let dc = deadline("0.0");
     assert!(dc < df, "clean network deadline {dc} not below flaky {df}");
 }
 
@@ -98,10 +138,10 @@ fn zero_failure_network_is_fastest() {
 fn redundancy_sweep_never_panics_and_improves_deadline() {
     let mut last = f64::INFINITY;
     for r in [0.02, 0.05, 0.1, 0.2, 0.3] {
-        let mut cfg = tiny(Scheme::Coded);
-        cfg.train.redundancy = r;
-        let t = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap();
-        let d = t.setup().plan.as_ref().unwrap().deadline;
+        let mut b = tiny_builder(Scheme::Coded);
+        b.set("train.redundancy", &r.to_string()).unwrap();
+        let s = b.build_with_backend(Box::new(NativeBackend)).unwrap();
+        let d = s.setup().plan.as_ref().unwrap().deadline;
         assert!(d <= last * 1.0001, "deadline rose at redundancy {r}: {d} vs {last}");
         last = d;
     }
@@ -110,16 +150,41 @@ fn redundancy_sweep_never_panics_and_improves_deadline() {
 #[test]
 fn uncoded_suffers_under_stragglers_more_than_coded() {
     // Inject heavy tail: higher alpha variance via low alpha.
-    let mut cu = tiny(Scheme::Uncoded);
-    cu.net.alpha = 0.3;
-    let mut cc = tiny(Scheme::Coded);
-    cc.net.alpha = 0.3;
-    let ru = Trainer::with_backend(&cu, Box::new(NativeBackend)).unwrap().run().unwrap();
-    let rc = Trainer::with_backend(&cc, Box::new(NativeBackend)).unwrap().run().unwrap();
+    let run = |scheme: Scheme| {
+        let mut b = tiny_builder(scheme);
+        b.set("net.alpha", "0.3").unwrap();
+        b.build_with_backend(Box::new(NativeBackend)).unwrap().run().unwrap()
+    };
+    let ru = run(Scheme::Uncoded);
+    let rc = run(Scheme::Coded);
     let per_step_u = ru.total_sim_time_s / ru.records.last().unwrap().step as f64;
     let per_step_c = rc.total_sim_time_s / rc.records.last().unwrap().step as f64;
     assert!(
         per_step_c < per_step_u,
         "coded per-step {per_step_c} not below uncoded {per_step_u}"
     );
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_shim_survives_extreme_regimes() {
+    // The one intentionally-kept legacy case: the deprecated constructor
+    // must keep absorbing extreme regimes AND stay bitwise the session
+    // path it shims onto.
+    use codedfedl::fl::trainer::Trainer;
+    let mut cfg = tiny(Scheme::Coded);
+    cfg.net.p_fail = 0.6;
+    cfg.train.redundancy = 0.30;
+    let shim = Trainer::with_backend(&cfg, Box::new(NativeBackend)).unwrap().run().unwrap();
+    assert!(shim.final_accuracy() > 0.4, "acc {}", shim.final_accuracy());
+    let mut b = tiny_builder(Scheme::Coded);
+    b.set("net.p_fail", "0.6").unwrap();
+    b.set("train.redundancy", "0.30").unwrap();
+    let session = b.build_with_backend(Box::new(NativeBackend)).unwrap().run().unwrap();
+    assert_eq!(
+        shim.final_accuracy(),
+        session.final_accuracy(),
+        "shim and session diverged"
+    );
+    assert_eq!(shim.total_sim_time_s, session.total_sim_time_s);
 }

@@ -1,0 +1,214 @@
+//! Fault-injection determinism gates.
+//!
+//! * faulted runs are **bitwise replayable**: the same scenario + fault
+//!   plan yields the identical final model and event stream at every
+//!   `(threads, shards)` in {1,2}², on both the flat and the
+//!   hierarchical engine;
+//! * the fault stream is a dedicated seed fork: injecting (or reseeding)
+//!   faults never perturbs churn, delay, or topology draws;
+//! * under a matched fault plan the coded scheme degrades no worse than
+//!   uncoded (the decode renormalizes over the rows actually folded);
+//! * transient telemetry loss makes the adaptive controller coast on
+//!   stale estimates — it never panics and never emits a plan past
+//!   `u_max`;
+//! * a fault-tolerant observer chain absorbs sink failures into
+//!   `SessionSummary::observer_errors` instead of aborting the run.
+
+use codedfedl::config::Scheme;
+use codedfedl::control::ControlPolicy;
+use codedfedl::mathx::linalg::Matrix;
+use codedfedl::mathx::par::Parallelism;
+use codedfedl::runtime::backend::NativeBackend;
+use codedfedl::scenario::{
+    EventLog, RetryObserver, RoundObserver, ScenarioBuilder, SessionSummary,
+};
+use codedfedl::simnet::{ChurnSchedule, FaultPlan};
+
+const PAR_GRID: [(usize, usize); 4] = [(1, 1), (2, 1), (1, 2), (2, 2)];
+
+/// 16-client tiny scenario so coded plans carry real parity.
+fn builder(scheme: Scheme, par: Parallelism, churn: bool) -> ScenarioBuilder {
+    let mut b = ScenarioBuilder::from_preset("tiny")
+        .unwrap()
+        .scheme(scheme)
+        .epochs(4)
+        .population(16)
+        .steps_per_epoch(2)
+        .parallelism(par);
+    if churn {
+        b = b.churn(ChurnSchedule::Bernoulli { p_away: 0.4, min_active: 4 });
+    }
+    b.set("backend", "native").unwrap();
+    b
+}
+
+fn abort_plan(seed: u64) -> FaultPlan {
+    FaultPlan { abort_p: 0.25, telemetry_loss_p: 0.0, seed }
+}
+
+fn run(b: ScenarioBuilder) -> (Matrix, Vec<String>, SessionSummary) {
+    let mut session = b.build_with_backend(Box::new(NativeBackend)).unwrap();
+    let mut log = EventLog::new();
+    let summary = session.run_observed(&mut log).unwrap();
+    (session.beta().clone(), log.lines, summary)
+}
+
+#[test]
+fn faulted_runs_replay_bitwise_across_the_parallelism_grid() {
+    // Faults + churn together, on the flat engine: every (threads,
+    // shards) must reproduce the (1, 1) trajectory bitwise.
+    let make = |par| builder(Scheme::Coded, par, true).faults(abort_plan(3));
+    let (beta_ref, lines_ref, sum_ref) = run(make(Parallelism::new(1, 1)));
+    assert!(sum_ref.fault_aborts > 0, "abort plan never fired");
+    for (threads, shards) in PAR_GRID {
+        let (beta, lines, sum) = run(make(Parallelism::new(threads, shards)));
+        let tag = format!("threads={threads} shards={shards}");
+        assert_eq!(beta, beta_ref, "{tag}: final beta diverged under faults");
+        assert_eq!(lines, lines_ref, "{tag}: event stream diverged under faults");
+        assert_eq!(sum.fault_aborts, sum_ref.fault_aborts, "{tag}");
+        assert_eq!(sum.final_accuracy, sum_ref.final_accuracy, "{tag}");
+        assert_eq!(sum.total_sim_time_s, sum_ref.total_sim_time_s, "{tag}");
+    }
+}
+
+#[test]
+fn hierarchical_faulted_runs_replay_bitwise() {
+    // The same gate on the two-tier engine, with and without churn, on a
+    // 2-cell topology: per-cell sub-rounds draw the *same* per-round
+    // abort set, so the grid must agree bitwise with the (1, 1) run.
+    for churn in [false, true] {
+        let make = |par| {
+            builder(Scheme::Coded, par, churn)
+                .cells(2)
+                .hierarchical(true)
+                .faults(abort_plan(3))
+        };
+        let (beta_ref, lines_ref, sum_ref) = run(make(Parallelism::new(1, 1)));
+        assert!(sum_ref.fault_aborts > 0, "abort plan never fired (churn={churn})");
+        for (threads, shards) in PAR_GRID {
+            let (beta, lines, _) = run(make(Parallelism::new(threads, shards)));
+            let tag = format!("churn={churn} threads={threads} shards={shards}");
+            assert_eq!(beta, beta_ref, "{tag}: hier beta diverged under faults");
+            assert_eq!(lines, lines_ref, "{tag}: hier stream diverged under faults");
+        }
+    }
+}
+
+#[test]
+fn one_cell_hierarchical_matches_flat_under_the_same_fault_plan() {
+    // On a trivial 1-cell topology the two engines must stay bitwise
+    // interchangeable even with the fault layer active.
+    let (beta_flat, lines_flat, sum_flat) =
+        run(builder(Scheme::Coded, Parallelism::new(1, 1), true).faults(abort_plan(3)));
+    let (beta_h, lines_h, sum_h) = run(
+        builder(Scheme::Coded, Parallelism::new(2, 2), true)
+            .hierarchical(true)
+            .faults(abort_plan(3)),
+    );
+    assert_eq!(beta_h, beta_flat, "1-cell hier beta diverged under faults");
+    assert_eq!(lines_h, lines_flat, "1-cell hier stream diverged under faults");
+    assert_eq!(sum_h.fault_aborts, sum_flat.fault_aborts);
+}
+
+#[test]
+fn fault_stream_is_disjoint_from_the_other_seed_forks() {
+    let churn_lines = |lines: &[String]| -> Vec<String> {
+        lines.iter().filter(|l| l.starts_with("churn ")).cloned().collect()
+    };
+    // Injecting faults must not perturb the churn trajectory: the fault
+    // root is a dedicated fork, so the roster evolution of a faulted run
+    // is bitwise the unfaulted one.
+    let (_, lines_clean, sum_clean) = run(builder(Scheme::Coded, Parallelism::new(1, 1), true));
+    assert_eq!(sum_clean.fault_aborts, 0);
+    let (_, lines_f3, sum_f3) =
+        run(builder(Scheme::Coded, Parallelism::new(1, 1), true).faults(abort_plan(3)));
+    assert!(!churn_lines(&lines_clean).is_empty(), "schedule produced no churn events");
+    assert_eq!(
+        churn_lines(&lines_f3),
+        churn_lines(&lines_clean),
+        "fault injection perturbed the churn stream"
+    );
+    // Reseeding only the fault plan changes the abort pattern but still
+    // leaves every other stream untouched.
+    let (_, lines_f4, sum_f4) =
+        run(builder(Scheme::Coded, Parallelism::new(1, 1), true).faults(abort_plan(4)));
+    assert_eq!(churn_lines(&lines_f4), churn_lines(&lines_clean));
+    assert!(sum_f3.fault_aborts > 0 && sum_f4.fault_aborts > 0);
+    assert_ne!(lines_f3, lines_f4, "fault seed had no effect on the trajectory");
+    // An all-zero plan is no plan: bitwise identical to running clean,
+    // whatever its seed (the gating determinism regressions rest on it).
+    let (_, lines_zero, _) = run(builder(Scheme::Coded, Parallelism::new(1, 1), true)
+        .faults(FaultPlan { abort_p: 0.0, telemetry_loss_p: 0.0, seed: 99 }));
+    assert_eq!(lines_zero, lines_clean, "zero-probability plan changed the run");
+}
+
+#[test]
+fn coded_absorbs_matched_faults_no_worse_than_uncoded() {
+    // Same population, same fault plan, matched budgets: the coded
+    // decode renormalizes over the rows actually folded, while the
+    // uncoded mean silently loses the withheld gradients — so coded's
+    // accuracy drop must not exceed uncoded's (up to a small slack for
+    // evaluation noise on these tiny runs).
+    let plan = FaultPlan { abort_p: 0.3, telemetry_loss_p: 0.0, seed: 5 };
+    let acc = |scheme, faulted: bool| {
+        let mut b = builder(scheme, Parallelism::new(1, 1), false).epochs(5);
+        if faulted {
+            b = b.faults(plan.clone());
+        }
+        run(b).2.final_accuracy
+    };
+    let coded_drop = acc(Scheme::Coded, false) - acc(Scheme::Coded, true);
+    let uncoded_drop = acc(Scheme::Uncoded, false) - acc(Scheme::Uncoded, true);
+    assert!(
+        coded_drop <= uncoded_drop + 0.05,
+        "coded lost more accuracy than uncoded under the same fault plan: \
+         coded drop {coded_drop:.4}, uncoded drop {uncoded_drop:.4}"
+    );
+}
+
+#[test]
+fn telemetry_loss_coasts_and_never_violates_umax() {
+    // Half the rounds lose their realized-delay telemetry; the adaptive
+    // controller coasts on stale estimates. The run must complete and
+    // the plan in force can never exceed the profile's parity budget.
+    let mut session = builder(Scheme::Coded, Parallelism::new(1, 1), true)
+        .adaptive(ControlPolicy::Periodic { every_epochs: 1 })
+        .faults(FaultPlan { abort_p: 0.1, telemetry_loss_p: 0.5, seed: 2 })
+        .build_with_backend(Box::new(NativeBackend))
+        .unwrap();
+    let mut log = EventLog::new();
+    let summary = session.run_observed(&mut log).unwrap();
+    assert!(summary.telemetry_drops > 0, "telemetry fault never fired");
+    assert!(summary.replans > 0, "periodic policy never re-planned");
+    let u_max = session.scenario().cfg.profile.u_max;
+    let plan = session.active_plan().expect("coded session must end with a plan");
+    assert!(
+        plan.u <= u_max,
+        "plan in force has u = {} > u_max = {u_max} after telemetry loss",
+        plan.u
+    );
+}
+
+#[test]
+fn fault_tolerant_observer_chain_degrades_instead_of_aborting() {
+    // A sink that always fails would normally abort the session (bare
+    // observer errors propagate); behind a RetryObserver the failures
+    // are absorbed and surfaced as SessionSummary::observer_errors.
+    struct Failing;
+    impl RoundObserver for Failing {
+        fn on_round(&mut self, _: &codedfedl::scenario::RoundEvent) -> anyhow::Result<()> {
+            anyhow::bail!("stream sink is full")
+        }
+    }
+    let mut session = builder(Scheme::Coded, Parallelism::new(1, 1), false)
+        .faults(abort_plan(3))
+        .build_with_backend(Box::new(NativeBackend))
+        .unwrap();
+    let mut obs = RetryObserver::new(Failing, 2);
+    let summary = session.run_observed(&mut obs).unwrap();
+    assert_eq!(
+        summary.observer_errors, summary.steps,
+        "every round event should have been dropped after retry exhaustion"
+    );
+    assert!(summary.final_accuracy > 0.0, "session still ran to completion");
+}

@@ -1,0 +1,112 @@
+//! End-to-end gates on the fuzz subsystem: a small seeded campaign runs
+//! green against the shipping invariant set, a deliberately-broken
+//! invariant produces a shrunken minimal spec file (the negative-test
+//! harness), shrinking pins a genuine failure to its inducing spec
+//! pairs, and every committed regression spec replays green.
+
+use codedfedl::fuzz::invariants::AlwaysFails;
+use codedfedl::fuzz::{
+    default_invariants, execute_scenario, replay_dir, run_campaign, shrink, CampaignConfig,
+    Invariant, RunRecord,
+};
+
+fn kv(k: &str, v: &str) -> (String, String) {
+    (k.to_string(), v.to_string())
+}
+
+#[test]
+fn a_small_seeded_campaign_runs_green() {
+    // Same seed as the CI job, fewer iterations: any invariant violation
+    // here is a real bug in the crate (or in the invariant).
+    let cfg = CampaignConfig { seed: 1, iters: 10, budget_s: None, out_dir: None };
+    let report = run_campaign(&cfg, &default_invariants()).unwrap();
+    assert_eq!(report.executed, 10);
+    assert!(!report.hit_budget);
+    assert!(report.failures.is_empty(), "campaign found violations: {:#?}", report.failures);
+}
+
+#[test]
+fn an_exhausted_budget_stops_the_campaign_cleanly() {
+    let cfg =
+        CampaignConfig { seed: 1, iters: 100, budget_s: Some(0.0), out_dir: None };
+    let report = run_campaign(&cfg, &default_invariants()).unwrap();
+    assert!(report.hit_budget);
+    assert_eq!(report.executed, 0);
+    assert!(report.failures.is_empty());
+}
+
+#[test]
+fn a_broken_invariant_yields_a_shrunken_spec_file() {
+    // The guarded negative test: register the always-failing invariant
+    // and the campaign must (a) report the violation, (b) shrink the
+    // scenario — for a spec-independent failure that bottoms out at the
+    // empty spec — and (c) write a committable spec file.
+    let dir = std::env::temp_dir().join("codedfedl_fuzz_negative_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = CampaignConfig {
+        seed: 7,
+        iters: 1,
+        budget_s: None,
+        out_dir: Some(dir.to_str().unwrap().to_string()),
+    };
+    let mut invariants = default_invariants();
+    invariants.push(Box::new(AlwaysFails));
+    let report = run_campaign(&cfg, &invariants).unwrap();
+    assert_eq!(report.failures.len(), 1);
+    let f = &report.failures[0];
+    assert_eq!(f.invariant, "always-fails");
+    assert!(
+        f.minimal_kvs.is_empty(),
+        "a spec-independent failure must shrink to the empty spec, got {:?}",
+        f.minimal_kvs
+    );
+    let path = f.spec_path.as_ref().expect("spec file must be written");
+    let text = std::fs::read_to_string(path).unwrap();
+    assert!(text.contains("# base preset: tiny"), "missing base-preset contract: {text}");
+    assert!(text.contains("always-fails"), "missing provenance header: {text}");
+}
+
+#[test]
+fn shrinking_pins_a_genuine_failure_to_its_inducing_pairs() {
+    // An invariant that fires exactly when faults are configured: the
+    // greedy shrinker must strip every unrelated pair and keep only the
+    // fault plan.
+    struct FailsOnFaults;
+    impl Invariant for FailsOnFaults {
+        fn name(&self) -> &'static str {
+            "fails-on-faults"
+        }
+        fn check(&self, run: &RunRecord) -> anyhow::Result<()> {
+            anyhow::ensure!(!run.has_faults, "scenario injects faults");
+            Ok(())
+        }
+    }
+    let kvs = vec![
+        kv("scheme", "coded"),
+        kv("scenario.population", "8"),
+        kv("train.epochs", "2"),
+        kv("scenario.churn", "bernoulli:0.3:2"),
+        kv("scenario.faults", "abort:0.2+seed:3"),
+    ];
+    let fails = |cand: &[(String, String)]| match execute_scenario(cand) {
+        Ok(run) => FailsOnFaults.check(&run).is_err(),
+        Err(_) => false,
+    };
+    assert!(fails(&kvs), "the full scenario must reproduce the failure");
+    let minimal = shrink(&kvs, fails);
+    assert_eq!(
+        minimal,
+        vec![kv("scenario.faults", "abort:0.2+seed:3")],
+        "shrinking kept more than the failure-inducing pair"
+    );
+}
+
+#[test]
+fn committed_regression_specs_replay_green() {
+    // The same check CI's regression job runs: every spec under
+    // presets/regressions/ must satisfy the shipping invariant set.
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/presets/regressions");
+    let report = replay_dir(dir, &default_invariants()).unwrap();
+    assert!(report.executed >= 1, "no committed regression specs found in {dir}");
+    assert!(report.failures.is_empty(), "regressions went red: {:#?}", report.failures);
+}
