@@ -1,0 +1,136 @@
+//! Serve-driven sessions: host a training session behind the
+//! `codedfedl serve` protocol, watch its live event stream over TCP,
+//! checkpoint it at a round boundary, and fork a counterfactual branch
+//! off the checkpoint — all in one process.
+//!
+//!     cargo run --release --example serve_session
+//!
+//! The same protocol works against a standalone `codedfedl serve`
+//! process; here the server is embedded so the example is
+//! self-contained. Every stream line wraps the *canonical* event
+//! document the JSONL observer writes to files — the wire format and
+//! the file format share one encoder.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+use codedfedl::serve::{ServeConfig, Server};
+use codedfedl::util::json::Json;
+
+/// Send one request line and read lines until the response, printing
+/// any stream events that arrive in between.
+fn call(w: &mut TcpStream, r: &mut BufReader<TcpStream>, req: &str) -> Result<Json> {
+    writeln!(w, "{req}")?;
+    w.flush()?;
+    loop {
+        let mut line = String::new();
+        ensure!(r.read_line(&mut line)? > 0, "server closed the connection");
+        let j = Json::parse(line.trim())?;
+        if let Some(stream) = j.get("stream") {
+            let ev = j.req("event")?;
+            let kind = ev.req("type")?.as_str()?;
+            if matches!(kind, "eval" | "churn" | "control" | "done") {
+                println!("  [{}] {}", stream.as_str()?, ev.to_string());
+            }
+            continue;
+        }
+        ensure!(
+            j.req("ok")? == &Json::Bool(true),
+            "rpc failed: {}",
+            j.req("error")?.as_str().unwrap_or("?")
+        );
+        return Ok(j.req("result")?.clone());
+    }
+}
+
+/// Block until the named session's stream delivers its `"type": "done"`
+/// summary, printing the interesting events along the way.
+fn drain_until_done(r: &mut BufReader<TcpStream>, name: &str) -> Result<Json> {
+    loop {
+        let mut line = String::new();
+        ensure!(r.read_line(&mut line)? > 0, "server closed the connection");
+        let j = Json::parse(line.trim())?;
+        let Some(stream) = j.get("stream") else { continue };
+        if stream.as_str()? != name {
+            continue;
+        }
+        let ev = j.req("event")?.clone();
+        let kind = ev.req("type")?.as_str()?.to_string();
+        if matches!(kind.as_str(), "eval" | "churn" | "control" | "done") {
+            println!("  [{name}] {}", ev.to_string());
+        }
+        if kind == "done" {
+            return Ok(ev);
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    // 1. Boot the server on an ephemeral port, checkpoints to a temp dir.
+    let dir = std::env::temp_dir().join(format!("codedfedl-serve-example-{}", std::process::id()));
+    let dir_s = dir.to_str().unwrap().to_string();
+    let server = Server::bind(&ServeConfig { port: 0, checkpoint_dir: dir_s.clone() })?;
+    let port = server.port();
+    println!("serve: listening on 127.0.0.1:{port}");
+    let srv = thread::spawn(move || server.run());
+
+    let sock = TcpStream::connect(("127.0.0.1", port))?;
+    sock.set_read_timeout(Some(Duration::from_secs(120)))?;
+    let mut w = sock.try_clone()?;
+    let mut r = BufReader::new(sock);
+
+    // 2. Create + start a churn scenario, watching its live stream on
+    // this connection (subscribe-then-start, so nothing is missed).
+    call(
+        &mut w,
+        &mut r,
+        r#"{"id":1,"method":"create","params":{"name":"run","scenario":"churn-cells","spec":[["train.epochs","8"]]}}"#,
+    )?;
+    call(&mut w, &mut r, r#"{"id":2,"method":"start","params":{"name":"run","watch":true}}"#)?;
+
+    // 3. Checkpoint at the next round boundary, mid-run.
+    let ckpt = call(
+        &mut w,
+        &mut r,
+        &format!(r#"{{"id":3,"method":"checkpoint","params":{{"name":"run","path":"{dir_s}/run.json"}}}}"#),
+    )?;
+    let path = ckpt.req("path")?.as_str()?.to_string();
+    println!("checkpointed to {path}");
+
+    // 4. Let the original run to completion.
+    let done = drain_until_done(&mut r, "run")?;
+    println!(
+        "original finished: {} steps, final_acc {}",
+        done.req("steps")?.as_usize()?,
+        done.req("final_accuracy")?.as_f64()?
+    );
+
+    // 5. Fork a counterfactual branch off the checkpoint: same shared
+    // history, but the branch trains a longer horizon with churn turned
+    // off. (An empty "set" would be a bitwise resume instead.)
+    call(
+        &mut w,
+        &mut r,
+        &format!(
+            r#"{{"id":4,"method":"fork","params":{{"name":"calm","path":"{path}","set":[["scenario.churn","none"],["train.epochs","12"]],"watch":true}}}}"#
+        ),
+    )?;
+    let forked = drain_until_done(&mut r, "calm")?;
+    println!(
+        "fork finished: {} epochs (extended horizon), final_acc {}",
+        forked.req("epochs")?.as_usize()?,
+        forked.req("final_accuracy")?.as_f64()?
+    );
+
+    // 6. Status + graceful shutdown: the server drains and run() returns.
+    let status = call(&mut w, &mut r, r#"{"id":5,"method":"status","params":{"name":"calm"}}"#)?;
+    println!("fork status: state={}", status.req("state")?.as_str()?);
+    call(&mut w, &mut r, r#"{"id":6,"method":"shutdown"}"#)?;
+    srv.join().unwrap()?;
+    println!("server drained and shut down cleanly");
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

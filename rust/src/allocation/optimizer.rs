@@ -26,6 +26,46 @@ pub struct AllocationPlan {
     pub u: usize,
 }
 
+impl AllocationPlan {
+    /// Bit-exact JSON encoding for checkpoint files: floats are stored
+    /// as hex bit patterns (see [`crate::util::json`]) so the restored
+    /// plan-in-force is byte-for-byte the plan that was running.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json as uj;
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("deadline", Json::Str(uj::f64_to_hex(self.deadline))),
+            (
+                "loads",
+                Json::Arr(self.loads.iter().map(|&l| Json::Num(l as f64)).collect()),
+            ),
+            ("pnr", uj::arr_f64_hex(&self.pnr)),
+            ("expected_return", Json::Str(uj::f64_to_hex(self.expected_return))),
+            ("u", Json::Num(self.u as f64)),
+        ])
+    }
+
+    /// Inverse of [`AllocationPlan::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> Result<AllocationPlan> {
+        use crate::util::json as uj;
+        let plan = AllocationPlan {
+            deadline: uj::hex_to_f64(j.req("deadline")?.as_str()?)?,
+            loads: j.req("loads")?.as_usize_vec()?,
+            pnr: uj::f64_vec_from_hex(j.req("pnr")?)?,
+            expected_return: uj::hex_to_f64(j.req("expected_return")?.as_str()?)?,
+            u: j.req("u")?.as_usize()?,
+        };
+        if plan.pnr.len() != plan.loads.len() {
+            bail!(
+                "allocation plan with {} loads but {} pnr entries",
+                plan.loads.len(),
+                plan.pnr.len()
+            );
+        }
+        Ok(plan)
+    }
+}
+
 /// Expected aggregate return with per-client optimal loads at deadline `t`.
 fn aggregate_at(models: &[ClientModel], caps: &[usize], t: f64) -> f64 {
     models
@@ -256,6 +296,31 @@ pub fn optimize_with_server(
 mod tests {
     use super::*;
     use crate::allocation::expected_return::expected_return;
+
+    #[test]
+    fn plan_json_roundtrip_is_bit_exact() {
+        let plan = AllocationPlan {
+            deadline: 1.0 / 3.0,
+            loads: vec![5, 0, 17],
+            pnr: vec![0.1, 1.0, 1.0e-17],
+            expected_return: 21.999999999999996,
+            u: 12,
+        };
+        let back = AllocationPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back.deadline.to_bits(), plan.deadline.to_bits());
+        assert_eq!(back.loads, plan.loads);
+        assert_eq!(back.pnr.len(), plan.pnr.len());
+        for (a, b) in back.pnr.iter().zip(&plan.pnr) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.expected_return.to_bits(), plan.expected_return.to_bits());
+        assert_eq!(back.u, plan.u);
+        // The encoding survives a text round-trip (file on disk).
+        let text = plan.to_json().to_string();
+        let back2 =
+            AllocationPlan::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back2.deadline.to_bits(), plan.deadline.to_bits());
+    }
 
     fn fleet(n: usize) -> (Vec<ClientModel>, Vec<usize>) {
         let models: Vec<ClientModel> = (0..n)

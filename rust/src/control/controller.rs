@@ -116,6 +116,44 @@ impl AdaptiveController {
         self.est.observe_all(obs);
     }
 
+    /// Bit-exact JSON encoding of the controller's *mutable* state for
+    /// session checkpoints: the plan in force, the replan counter, the
+    /// observer-side diagnostics, and the estimator state. Policy, caps
+    /// and epsilon are construction facts a restored session re-derives
+    /// from its scenario.
+    pub fn state_to_json(&self) -> crate::util::json::Json {
+        use crate::util::json as uj;
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("plan", self.current.to_json()),
+            ("replans", Json::Num(self.replans as f64)),
+            ("rounds_seen", Json::Num(self.rounds_seen as f64)),
+            ("arrival_frac", Json::Str(uj::f64_to_hex(self.arrival_frac))),
+            ("estimator", self.est.state_to_json()),
+        ])
+    }
+
+    /// Inverse of [`AdaptiveController::state_to_json`]: overwrite the
+    /// mutable state on a freshly-constructed controller. Errors when the
+    /// stored plan or estimator state does not match this controller's
+    /// population.
+    pub fn state_from_json(&mut self, j: &crate::util::json::Json) -> Result<()> {
+        use crate::util::json as uj;
+        let plan = AllocationPlan::from_json(j.req("plan")?)?;
+        ensure!(
+            plan.loads.len() == self.caps.len(),
+            "controller plan for {} clients restored into a {}-client controller",
+            plan.loads.len(),
+            self.caps.len()
+        );
+        self.est.state_from_json(j.req("estimator")?)?;
+        self.current = plan;
+        self.replans = j.req("replans")?.as_usize()?;
+        self.rounds_seen = j.req("rounds_seen")?.as_usize()?;
+        self.arrival_frac = uj::hex_to_f64(j.req("arrival_frac")?.as_str()?)?;
+        Ok(())
+    }
+
     /// Estimated aggregate epoch return of the plan in force over the
     /// `active` roster; `act_models[k]` is the model of `active[k]`.
     fn estimated_return(&self, act_models: &[ClientModel], active: &[usize]) -> f64 {
@@ -368,6 +406,79 @@ mod tests {
         .unwrap();
         assert!(c.observed_arrival_frac() < 1.0);
         assert_eq!(c.rounds_seen(), 1);
+    }
+
+    #[test]
+    fn controller_state_roundtrip_restores_the_plan_and_telemetry() {
+        let (mut c, models) = controller(ControlPolicy::Drift { threshold: 0.02 });
+        let active: Vec<usize> = (0..10).collect();
+        let stale = c.current_plan().clone();
+        for _ in 0..20 {
+            let obs: Vec<DelayObs> = (0..10)
+                .map(|j| mean_obs(j, &models[j], stale.loads[j].max(1), 3.0))
+                .collect();
+            c.observe_delays(&obs);
+        }
+        c.on_round(&RoundEvent {
+            epoch: 0,
+            step: 1,
+            batch: 0,
+            sim_time_s: 1.0,
+            step_time_s: 1.0,
+            active: 10,
+            arrivals: 7,
+            stragglers: vec![],
+        })
+        .unwrap();
+        c.epoch_decision(1, &active, None).unwrap().expect("drift should fire");
+
+        // Restore into a freshly-constructed controller (construction
+        // plan, zero telemetry) through serialized text.
+        let snap = c.state_to_json().to_string();
+        let (mut fresh, _) = controller(ControlPolicy::Drift { threshold: 0.02 });
+        fresh
+            .state_from_json(&crate::util::json::Json::parse(&snap).unwrap())
+            .unwrap();
+        assert_eq!(fresh.replans(), c.replans());
+        assert_eq!(fresh.rounds_seen(), c.rounds_seen());
+        assert_eq!(
+            fresh.observed_arrival_frac().to_bits(),
+            c.observed_arrival_frac().to_bits()
+        );
+        assert_eq!(
+            fresh.current_plan().deadline.to_bits(),
+            c.current_plan().deadline.to_bits()
+        );
+        assert_eq!(fresh.current_plan().loads, c.current_plan().loads);
+        for j in 0..10 {
+            assert_eq!(
+                fresh.estimator().model(j).mu.to_bits(),
+                c.estimator().model(j).mu.to_bits()
+            );
+        }
+        // Restored controller makes the same next decision as the original.
+        let a = c.epoch_decision(2, &active, None).unwrap();
+        let b = fresh.epoch_decision(2, &active, None).unwrap();
+        assert_eq!(a.is_some(), b.is_some());
+        if let (Some(da), Some(db)) = (a, b) {
+            assert_eq!(da.plan.deadline.to_bits(), db.plan.deadline.to_bits());
+            assert_eq!(da.plan.loads, db.plan.loads);
+        }
+        // Wrong population is rejected.
+        let (small_models, small_caps) = fleet(5);
+        let small_plan = plan_fixed_u(&small_models, &small_caps, 500, 50, 1.0).unwrap();
+        let mut small = AdaptiveController::new(
+            ControlPolicy::Drift { threshold: 0.02 },
+            0.5,
+            &small_models,
+            small_caps,
+            small_plan,
+            1.0,
+        )
+        .unwrap();
+        assert!(small
+            .state_from_json(&crate::util::json::Json::parse(&snap).unwrap())
+            .is_err());
     }
 
     #[test]

@@ -116,6 +116,44 @@ impl RateEstimator {
     pub fn n(&self) -> usize {
         self.base.len()
     }
+
+    /// Bit-exact JSON encoding of the *mutable* estimator state (`cpp`,
+    /// `comm`, `seen`) for session checkpoints. `base` and `ewma` are
+    /// construction facts the restored session re-derives from its
+    /// scenario, so they are not stored.
+    pub fn state_to_json(&self) -> crate::util::json::Json {
+        use crate::util::json as uj;
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("cpp", uj::arr_f64_hex(&self.cpp)),
+            ("comm", uj::arr_f64_hex(&self.comm)),
+            (
+                "seen",
+                Json::Arr(self.seen.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Inverse of [`RateEstimator::state_to_json`]: overwrite the mutable
+    /// state on a freshly-constructed estimator. Errors when the stored
+    /// vectors do not match this estimator's population.
+    pub fn state_from_json(&mut self, j: &crate::util::json::Json) -> anyhow::Result<()> {
+        use crate::util::json as uj;
+        let cpp = uj::f64_vec_from_hex(j.req("cpp")?)?;
+        let comm = uj::f64_vec_from_hex(j.req("comm")?)?;
+        let seen = j.req("seen")?.as_usize_vec()?;
+        anyhow::ensure!(
+            cpp.len() == self.base.len() && comm.len() == self.base.len()
+                && seen.len() == self.base.len(),
+            "estimator state for {} clients restored into a {}-client estimator",
+            cpp.len(),
+            self.base.len()
+        );
+        self.cpp = cpp;
+        self.comm = comm;
+        self.seen = seen;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -205,5 +243,30 @@ mod tests {
     #[should_panic(expected = "ewma")]
     fn rejects_bad_ewma_weight() {
         RateEstimator::new(&[model()], 0.0);
+    }
+
+    #[test]
+    fn state_json_roundtrip_is_bit_exact() {
+        let base = vec![model(), ClientModel { mu: 40.0, ..model() }];
+        let mut est = RateEstimator::new(&base, 0.5);
+        let mut rng = Rng::new(11);
+        for i in 0..25 {
+            let mut o = obs_from(&model(), 30 + i, &mut rng);
+            o.client = i % 2;
+            est.observe(&o);
+        }
+        let snap = est.state_to_json();
+        let mut fresh = RateEstimator::new(&base, 0.5);
+        fresh
+            .state_from_json(&crate::util::json::Json::parse(&snap.to_string()).unwrap())
+            .unwrap();
+        for j in 0..base.len() {
+            assert_eq!(fresh.model(j).mu.to_bits(), est.model(j).mu.to_bits());
+            assert_eq!(fresh.model(j).tau.to_bits(), est.model(j).tau.to_bits());
+            assert_eq!(fresh.observations(j), est.observations(j));
+        }
+        // Wrong population is rejected.
+        let mut small = RateEstimator::new(&base[..1], 0.5);
+        assert!(small.state_from_json(&snap).is_err());
     }
 }

@@ -604,6 +604,35 @@ impl HierTrainer {
         &self.beta
     }
 
+    /// Checkpoint surface: the raw xoshiro state of the delay-sampling
+    /// stream (the only sequentially-mutated rng here — `root` and
+    /// `reencode_root` are forked counter-based, never advanced).
+    pub(crate) fn delay_rng_state(&self) -> [u64; 4] {
+        self.delay_rng.state()
+    }
+
+    /// Checkpoint surface: reinstall a captured delay-stream state.
+    pub(crate) fn set_delay_rng_state(&mut self, s: [u64; 4]) {
+        self.delay_rng = Rng::from_state(s);
+    }
+
+    /// Checkpoint surface: overwrite the model (restore / fork). Errors
+    /// on a shape mismatch — a snapshot from a different scenario. The
+    /// O(active) client store needs no restore: it is rebuilt lazily and
+    /// bit-identically from counter-based streams on the next round.
+    pub(crate) fn set_beta(&mut self, beta: Matrix) -> Result<()> {
+        ensure!(
+            beta.rows() == self.beta.rows() && beta.cols() == self.beta.cols(),
+            "model shape {}x{} restored into a {}x{} trainer",
+            beta.rows(),
+            beta.cols(),
+            self.beta.rows(),
+            self.beta.cols()
+        );
+        self.beta = Arc::new(beta);
+        Ok(())
+    }
+
     /// Name of the backend executing the compute.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()

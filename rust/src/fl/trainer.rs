@@ -729,6 +729,34 @@ impl Trainer {
         &self.beta
     }
 
+    /// Checkpoint surface: the raw xoshiro state of the delay-sampling
+    /// stream — the *only* sequentially-mutated rng in the engine (every
+    /// other stream is counter-based and re-derivable), so capturing it
+    /// plus the model is enough to resume the trajectory bitwise.
+    pub(crate) fn delay_rng_state(&self) -> [u64; 4] {
+        self.delay_rng.state()
+    }
+
+    /// Checkpoint surface: reinstall a captured delay-stream state.
+    pub(crate) fn set_delay_rng_state(&mut self, s: [u64; 4]) {
+        self.delay_rng = Rng::from_state(s);
+    }
+
+    /// Checkpoint surface: overwrite the model (restore / fork). Errors
+    /// on a shape mismatch — a snapshot from a different scenario.
+    pub(crate) fn set_beta(&mut self, beta: Matrix) -> Result<()> {
+        ensure!(
+            beta.rows() == self.beta.rows() && beta.cols() == self.beta.cols(),
+            "model shape {}x{} restored into a {}x{} trainer",
+            beta.rows(),
+            beta.cols(),
+            self.beta.rows(),
+            self.beta.cols()
+        );
+        self.beta = Arc::new(beta);
+        Ok(())
+    }
+
     /// Run the configured number of epochs, returning the full report.
     pub fn run(&mut self) -> Result<TrainReport> {
         let host_t0 = std::time::Instant::now();

@@ -173,6 +173,28 @@
 //! shrunk to a minimal `scenario.*` spec file; shrunken regressions are
 //! committed under `presets/regressions/` and replayed in CI.
 //!
+//! ## Serving sessions: `codedfedl serve`
+//!
+//! Sessions are also **servable**: the [`serve`] subsystem hosts many
+//! concurrent sessions in one long-running process behind a
+//! line-delimited JSON protocol on localhost TCP (`codedfedl serve`).
+//! Clients `create` sessions from scenario specs, `start` them, `watch`
+//! their live event streams (each stream line wraps **exactly** the
+//! canonical event document the [`scenario::JsonlObserver`] writes — one
+//! shared encoder, so file and wire formats cannot drift), and drive the
+//! checkpoint lifecycle: `checkpoint` snapshots a running session at the
+//! next round boundary, `resume` restores a snapshot **bitwise
+//! identically** at any thread/shard count, and `fork` branches a
+//! counterfactual run (different churn/faults/policy/horizon) off a
+//! shared history. The underlying primitives are plain library calls —
+//! [`scenario::Session::advance`] over a [`scenario::RunCursor`],
+//! [`scenario::Session::snapshot_string`],
+//! [`scenario::Session::resume_from_str`],
+//! [`scenario::Session::fork_from_str`] — so embedded callers get the
+//! same guarantees without the server. Graceful shutdown (the `shutdown`
+//! RPC or SIGINT) finishes in-flight rounds, checkpoints every
+//! unfinished session, and exits 0.
+//!
 //! The four `fl::Trainer` constructors (`from_config`, `with_backend`,
 //! `with_shared`, `with_shared_parallelism`) and `SweepRunner::trainer`
 //! are **deprecated shims** over the same engine and will keep working;
@@ -203,6 +225,7 @@ pub mod mathx;
 pub mod metrics;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod simnet;
 pub mod testx;
 pub mod util;

@@ -9,6 +9,9 @@
 //!   reproduce  run uncoded + coded back-to-back and report the speedup
 //!   fuzz       seeded scenario-fuzzing campaign (invariant checks,
 //!              shrunken failing specs) or regression-spec replay
+//!   serve      long-running session server: host many concurrent
+//!              sessions over a line-delimited JSON protocol, with
+//!              checkpoint / resume / fork at round boundaries
 //!   info       show the resolved config and artifact status
 
 use anyhow::{bail, Result};
@@ -423,6 +426,38 @@ fn cmd_trace(args: &codedfedl::cli::Args) -> Result<()> {
     Ok(())
 }
 
+fn serve_flags() -> Vec<codedfedl::cli::FlagSpec> {
+    vec![
+        flag("port", "TCP port on 127.0.0.1 (0 = ephemeral)", Some("7070")),
+        flag(
+            "checkpoint-dir",
+            "directory for shutdown checkpoints and default checkpoint paths",
+            Some("serve-checkpoints"),
+        ),
+    ]
+}
+
+/// Boot the session server and block until a `shutdown` RPC or SIGINT
+/// completes the graceful drain (in-flight rounds finish, unfinished
+/// sessions checkpoint, runners join), then exit 0.
+fn cmd_serve(args: &codedfedl::cli::Args) -> Result<()> {
+    use codedfedl::serve::{install_sigint_handler, ServeConfig, Server};
+    let cfg = ServeConfig {
+        port: args.req("port")?.parse()?,
+        checkpoint_dir: args.req("checkpoint-dir")?.to_string(),
+    };
+    install_sigint_handler();
+    let server = Server::bind(&cfg)?;
+    println!(
+        "codedfedl serve: listening on 127.0.0.1:{} (checkpoints -> {}/)",
+        server.port(),
+        cfg.checkpoint_dir
+    );
+    server.run()?;
+    println!("codedfedl serve: drained and shut down cleanly");
+    Ok(())
+}
+
 fn cmd_info(args: &codedfedl::cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
     println!("{cfg:#?}");
@@ -458,6 +493,11 @@ fn main() -> Result<()> {
                 fuzz_flags(),
             ),
             ("trace", "emit one epoch's per-client event timeline (CSV)", common_flags()),
+            (
+                "serve",
+                "host concurrent sessions over TCP with checkpoint/resume/fork",
+                serve_flags(),
+            ),
             ("info", "show resolved config + artifact status", common_flags()),
         ],
     };
@@ -476,6 +516,7 @@ fn main() -> Result<()> {
         Some("reproduce") => cmd_reproduce(&args),
         Some("fuzz") => cmd_fuzz(&args),
         Some("trace") => cmd_trace(&args),
+        Some("serve") => cmd_serve(&args),
         Some("info") => cmd_info(&args),
         _ => bail!("missing subcommand\n\n{}", cli.usage()),
     }

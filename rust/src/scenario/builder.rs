@@ -69,6 +69,18 @@ pub struct Scenario {
     /// fork so faulted runs replay bitwise. `none` (default) never
     /// touches the fault stream.
     pub faults: FaultPlan,
+    /// The `key = value` pairs that reproduce this scenario through
+    /// [`ScenarioBuilder::from_spec_pairs`]: the base preset
+    /// (`("preset", name)`) followed by every override in application
+    /// order. Recorded by the builder; empty when the scenario was built
+    /// from a raw config (see [`Scenario::replayable`]).
+    pub spec: Vec<(String, String)>,
+    /// `false` when the construction path cannot be reproduced from
+    /// `spec` alone (built from a raw [`ExperimentConfig`] or given a
+    /// hand-rolled topology). Checkpointing requires a replayable
+    /// scenario — the snapshot stores the spec, not the binary state of
+    /// every knob.
+    pub replayable: bool,
 }
 
 impl Scenario {
@@ -87,6 +99,8 @@ impl Scenario {
             adaptive_ewma: DEFAULT_ADAPTIVE_EWMA,
             hierarchical: false,
             faults: FaultPlan::none(),
+            spec: Vec::new(),
+            replayable: false,
         }
     }
 
@@ -164,16 +178,27 @@ pub struct ScenarioBuilder {
     adaptive_ewma: f64,
     hierarchical: bool,
     faults: FaultPlan,
+    /// Replay journal: the base preset + every recorded override, in
+    /// application order (see [`Scenario::spec`]).
+    spec: Vec<(String, String)>,
+    replayable: bool,
 }
 
 impl ScenarioBuilder {
     /// Start from a named experiment preset (`tiny|small|medium|paper`).
     pub fn from_preset(name: &str) -> Result<ScenarioBuilder> {
-        Ok(Self::from_config(&ExperimentConfig::preset(name)?))
+        let mut b = Self::from_config(&ExperimentConfig::preset(name)?);
+        b.spec.push(("preset".into(), name.into()));
+        b.replayable = true;
+        Ok(b)
     }
 
     /// Start from an existing experiment config (static scenario until
-    /// dynamics are added).
+    /// dynamics are added). Scenarios built this way are **not**
+    /// spec-replayable (the raw config has no recorded provenance), so
+    /// sessions over them cannot be checkpointed — start from
+    /// [`ScenarioBuilder::from_preset`] plus overrides when snapshots
+    /// are needed.
     pub fn from_config(cfg: &ExperimentConfig) -> ScenarioBuilder {
         ScenarioBuilder {
             cfg: cfg.clone(),
@@ -189,7 +214,32 @@ impl ScenarioBuilder {
             adaptive_ewma: DEFAULT_ADAPTIVE_EWMA,
             hierarchical: false,
             faults: FaultPlan::none(),
+            spec: Vec::new(),
+            replayable: false,
         }
+    }
+
+    /// Reconstruct a builder from recorded [`Scenario::spec`] pairs (the
+    /// checkpoint-restore and serve-protocol construction path). The
+    /// first pair must be the `("preset", name)` base; every subsequent
+    /// pair is applied through [`ScenarioBuilder::set`] in order.
+    pub fn from_spec_pairs(pairs: &[(String, String)]) -> Result<ScenarioBuilder> {
+        let Some(((k0, v0), rest)) = pairs.split_first() else {
+            bail!("empty scenario spec (expected a leading ('preset', name) pair)");
+        };
+        anyhow::ensure!(
+            k0 == "preset",
+            "scenario spec must start with a ('preset', name) pair, got ('{k0}', '{v0}')"
+        );
+        let mut b = Self::from_preset(v0)?;
+        for (k, v) in rest {
+            b.set(k, v).with_context(|| format!("replaying spec pair '{k} = {v}'"))?;
+        }
+        Ok(b)
+    }
+
+    fn record(&mut self, key: &str, value: String) {
+        self.spec.push((key.to_string(), value));
     }
 
     /// Named scenario presets — worked examples of the builder:
@@ -262,32 +312,38 @@ impl ScenarioBuilder {
     /// Set the population size; `m_train` is re-derived at build time as
     /// `n * l * steps_per_epoch` so the config stays consistent.
     pub fn population(mut self, n: usize) -> ScenarioBuilder {
+        self.record("scenario.population", n.to_string());
         self.population = Some(n);
         self
     }
 
     /// Global mini-batch steps per epoch (defaults to the base config's).
     pub fn steps_per_epoch(mut self, steps: usize) -> ScenarioBuilder {
+        self.record("scenario.steps_per_epoch", steps.to_string());
         self.steps_per_epoch = Some(steps);
         self
     }
 
     pub fn scheme(mut self, scheme: Scheme) -> ScenarioBuilder {
+        self.record("scheme", scheme.name().to_string());
         self.cfg.scheme = scheme;
         self
     }
 
     pub fn epochs(mut self, epochs: usize) -> ScenarioBuilder {
+        self.record("train.epochs", epochs.to_string());
         self.cfg.train.epochs = epochs;
         self
     }
 
     pub fn seed(mut self, seed: u64) -> ScenarioBuilder {
+        self.record("seed", seed.to_string());
         self.cfg.seed = seed;
         self
     }
 
     pub fn dataset(mut self, dataset: &str) -> ScenarioBuilder {
+        self.record("dataset", dataset.to_string());
         self.cfg.dataset = dataset.to_string();
         self
     }
@@ -296,31 +352,41 @@ impl ScenarioBuilder {
     /// backend selection lives in the builder; `build` resolves the name
     /// through [`crate::runtime::registry`].
     pub fn backend(mut self, name: &str) -> ScenarioBuilder {
+        self.record("backend", name.to_string());
         self.cfg.backend = name.to_string();
         self
     }
 
+    /// Hand-rolled topology. Cell lists have no spec-string form, so
+    /// this makes the scenario non-replayable (not checkpointable); use
+    /// [`ScenarioBuilder::cells`] for the graded ladder, which is.
     pub fn topology(mut self, topo: Topology) -> ScenarioBuilder {
+        self.replayable = false;
         self.topology = topo;
         self
     }
 
     /// Shorthand: a graded `k`-cell topology ([`Topology::graded`]).
-    pub fn cells(self, k: usize) -> ScenarioBuilder {
-        self.topology(Topology::graded(k))
+    pub fn cells(mut self, k: usize) -> ScenarioBuilder {
+        self.record("scenario.cells", k.to_string());
+        self.topology = Topology::graded(k);
+        self
     }
 
     pub fn churn(mut self, churn: ChurnSchedule) -> ScenarioBuilder {
+        self.record("scenario.churn", churn.spec());
         self.churn = churn;
         self
     }
 
     pub fn compute_rates(mut self, p: RateProcess) -> ScenarioBuilder {
+        self.record("scenario.compute_rates", p.spec());
         self.compute_rates = p;
         self
     }
 
     pub fn link_rates(mut self, p: RateProcess) -> ScenarioBuilder {
+        self.record("scenario.link_rates", p.spec());
         self.link_rates = p;
         self
     }
@@ -335,6 +401,7 @@ impl ScenarioBuilder {
     /// Disable the [`crate::coding::encoder::ReencodeCache`] on the
     /// churn parity path (test oracle: the uncached full re-encode).
     pub fn reencode_cache(mut self, on: bool) -> ScenarioBuilder {
+        self.record("scenario.reencode_cache", on.to_string());
         self.use_reencode_cache = on;
         self
     }
@@ -345,6 +412,7 @@ impl ScenarioBuilder {
     /// from streaming round telemetry to online load re-allocation.
     /// Requires a coded scheme (the uncoded baseline has no plan).
     pub fn adaptive(mut self, policy: ControlPolicy) -> ScenarioBuilder {
+        self.record("scenario.adaptive", policy.spec());
         self.adaptive = policy;
         self
     }
@@ -352,6 +420,9 @@ impl ScenarioBuilder {
     /// EWMA weight of the adaptive rate estimators, in (0, 1] (spec key
     /// `scenario.adaptive.ewma`; default 0.5).
     pub fn adaptive_ewma(mut self, w: f64) -> ScenarioBuilder {
+        // `{}` on f64 prints the shortest decimal that parses back to
+        // the same bits, so the recorded pair replays exactly.
+        self.record("scenario.adaptive.ewma", format!("{w}"));
         self.adaptive_ewma = w;
         self
     }
@@ -361,6 +432,7 @@ impl ScenarioBuilder {
     /// state, on-demand data. Requires a synthetic dataset; a 1-cell
     /// hierarchical run is bitwise-equal to the flat session.
     pub fn hierarchical(mut self, on: bool) -> ScenarioBuilder {
+        self.record("scenario.hierarchical", on.to_string());
         self.hierarchical = on;
         self
     }
@@ -370,13 +442,15 @@ impl ScenarioBuilder {
     /// controller telemetry loss, drawn from a dedicated fault seed fork
     /// so faulted runs replay bitwise and faults-off runs are untouched.
     pub fn faults(mut self, plan: FaultPlan) -> ScenarioBuilder {
+        self.record("scenario.faults", plan.spec());
         self.faults = plan;
         self
     }
 
     /// Apply one `key = value` override. Scenario keys are prefixed
     /// `scenario.`; everything else forwards to
-    /// [`ExperimentConfig::set`].
+    /// [`ExperimentConfig::set`]. Applied pairs are recorded in the
+    /// replay journal ([`Scenario::spec`]).
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         let v = value.trim();
         match key.trim() {
@@ -393,6 +467,7 @@ impl ScenarioBuilder {
             "scenario.faults" => self.faults = FaultPlan::parse(v)?,
             other => self.cfg.set(other, value)?,
         }
+        self.record(key.trim(), v.to_string());
         Ok(())
     }
 
@@ -432,6 +507,8 @@ impl ScenarioBuilder {
             adaptive_ewma: self.adaptive_ewma,
             hierarchical: self.hierarchical,
             faults: self.faults,
+            spec: self.spec,
+            replayable: self.replayable,
         };
         scenario.validate()?;
         Ok(scenario)
@@ -651,6 +728,61 @@ mod tests {
             .hierarchical(true)
             .dataset("mnist");
         assert!(bad.compile().is_err());
+    }
+
+    #[test]
+    fn recorded_spec_pairs_replay_the_scenario() {
+        // Chainable setters, `set` overrides and named presets all record
+        // into the replay journal; rebuilding from the journal yields an
+        // identical scenario (the checkpoint-restore construction path).
+        let mut b = ScenarioBuilder::from_preset("tiny")
+            .unwrap()
+            .scheme(Scheme::Coded)
+            .epochs(3)
+            .population(16)
+            .steps_per_epoch(2)
+            .cells(2)
+            .churn(ChurnSchedule::Bernoulli { p_away: 0.3, min_active: 4 })
+            .link_rates(RateProcess::Diurnal { period_epochs: 4.0, depth: 0.3 })
+            .adaptive(ControlPolicy::Drift { threshold: 0.07 })
+            .adaptive_ewma(0.4)
+            .faults(FaultPlan { abort_p: 0.05, telemetry_loss_p: 0.0, seed: 2 });
+        b.set("backend", "native").unwrap();
+        let s = b.compile().unwrap();
+        assert!(s.replayable);
+        assert_eq!(s.spec[0], ("preset".to_string(), "tiny".to_string()));
+        let s2 = ScenarioBuilder::from_spec_pairs(&s.spec).unwrap().compile().unwrap();
+        assert_eq!(s2.spec, s.spec);
+        assert_eq!(s2.cfg.n_clients, s.cfg.n_clients);
+        assert_eq!(s2.cfg.m_train, s.cfg.m_train);
+        assert_eq!(s2.cfg.seed, s.cfg.seed);
+        assert_eq!(s2.cfg.scheme, s.cfg.scheme);
+        assert_eq!(s2.cfg.backend, s.cfg.backend);
+        assert_eq!(s2.churn, s.churn);
+        assert_eq!(s2.link_rates, s.link_rates);
+        assert_eq!(s2.adaptive, s.adaptive);
+        assert_eq!(s2.adaptive_ewma, s.adaptive_ewma);
+        assert_eq!(s2.faults, s.faults);
+        assert_eq!(s2.topology.n_cells(), s.topology.n_cells());
+        assert_eq!(s2.hierarchical, s.hierarchical);
+
+        // Named presets replay too (their construction is recorded).
+        let e = ScenarioBuilder::named("edge-1k").unwrap().compile().unwrap();
+        assert!(e.replayable);
+        let e2 = ScenarioBuilder::from_spec_pairs(&e.spec).unwrap().compile().unwrap();
+        assert_eq!(e2.cfg.n_clients, e.cfg.n_clients);
+        assert_eq!(e2.churn, e.churn);
+
+        // Raw-config and hand-rolled-topology paths are not replayable.
+        let base = ExperimentConfig::preset("tiny").unwrap();
+        assert!(!ScenarioBuilder::from_config(&base).compile().unwrap().replayable);
+        let custom = ScenarioBuilder::from_preset("tiny")
+            .unwrap()
+            .topology(Topology::graded(2))
+            .compile()
+            .unwrap();
+        assert!(!custom.replayable);
+        assert!(ScenarioBuilder::from_spec_pairs(&[]).is_err());
     }
 
     #[test]

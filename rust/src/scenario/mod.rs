@@ -102,10 +102,47 @@
 //! failures to minimal spec files — lives in [`crate::fuzz`]; to add an
 //! invariant, implement `fuzz::Invariant` over a `fuzz::RunRecord` and
 //! register it in `fuzz::invariants::default_invariants`.
+//!
+//! # Serving: checkpoints, resume, fork
+//!
+//! Long-running sessions are driven incrementally instead of to
+//! completion: [`Session::cursor`] yields a [`RunCursor`] at round 0,
+//! [`Session::advance`] executes up to `max_rounds` global rounds
+//! (streaming events to the observer as it goes), and
+//! [`Session::summary`] finalizes the totals once the cursor reports
+//! done. `Session::run_observed` is exactly that loop with an unbounded
+//! budget. Every **round boundary** is a checkpointable state:
+//!
+//! * [`Session::snapshot`] / [`Session::snapshot_string`] capture the
+//!   complete run state as one versioned JSON document
+//!   ([`snapshot::SNAPSHOT_FORMAT`] v[`snapshot::SNAPSHOT_VERSION`]):
+//!   the recorded construction spec, the cursor, the model's f32 bit
+//!   patterns, the delay stream's raw rng words, parity re-encode
+//!   provenance and the adaptive control plane. Replayable sessions only
+//!   — i.e. those built from presets/spec pairs, which record their
+//!   construction journal in [`Scenario::spec`].
+//! * [`Session::restore`] / [`Session::resume_from_str`] rebuild a
+//!   session + cursor that continues the run **bitwise identically** —
+//!   same remaining event stream, same final model — at any
+//!   thread/shard count (parallelism is bitwise-neutral and not part of
+//!   the snapshot).
+//! * [`Session::fork`] / [`Session::fork_from_str`] restore with
+//!   amended spec overrides: the counterfactual branch. A fork shares
+//!   the original history up to the snapshot and diverges only where
+//!   the overrides change future dynamics (churn, faults, policy, an
+//!   extended `train.epochs` horizon). Structure (population, steps per
+//!   epoch, scheme, engine kind) must match; empty overrides make fork
+//!   a bitwise resume.
+//!
+//! The `codedfedl serve` subcommand ([`crate::serve`]) hosts many such
+//! sessions concurrently over a line-delimited JSON protocol, streaming
+//! each one's observer events to subscribers and exposing
+//! checkpoint/resume/fork as RPCs.
 
 pub mod builder;
 pub mod observer;
 pub mod session;
+pub mod snapshot;
 
 pub use builder::{Scenario, ScenarioBuilder};
 pub use observer::{
@@ -113,3 +150,4 @@ pub use observer::{
     JsonlObserver, RetryObserver, RoundEvent, RoundObserver,
 };
 pub use session::{Session, SessionSummary};
+pub use snapshot::{RunCursor, SNAPSHOT_FORMAT, SNAPSHOT_VERSION};

@@ -197,72 +197,131 @@ impl<W: std::io::Write> JsonlObserver<W> {
 
     fn emit(&mut self, doc: Json) -> Result<()> {
         writeln!(self.out, "{}", doc.to_string())?;
+        // Flush per line: a live consumer (socket client, `tail -f` on
+        // `--out`) must see each round as it completes, not whenever the
+        // writer's block buffer happens to spill.
+        self.out.flush()?;
         self.events += 1;
         Ok(())
     }
 }
 
-fn ids_json(ids: &[usize]) -> Json {
+/// `[usize]` id list as a JSON array.
+pub fn ids_json(ids: &[usize]) -> Json {
     Json::Arr(ids.iter().map(|&j| Json::Num(j as f64)).collect())
+}
+
+// ---- canonical event encoding ----------------------------------------
+//
+// One encoder for every surface that speaks session events: the
+// [`JsonlObserver`] file/stream format, the `codedfedl serve` wire
+// protocol (each event rides a `{"stream": .., "event": <doc>}` line),
+// and checkpoint metadata. Factored here so the formats cannot drift —
+// an event doc is the same JSON object no matter who emits it.
+
+/// Canonical JSON document for a [`RoundEvent`] (`"type": "round"`).
+pub fn round_doc(ev: &RoundEvent) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("round".into())),
+        ("epoch", Json::Num(ev.epoch as f64)),
+        ("step", Json::Num(ev.step as f64)),
+        ("batch", Json::Num(ev.batch as f64)),
+        ("sim_time_s", Json::Num(ev.sim_time_s)),
+        ("step_time_s", Json::Num(ev.step_time_s)),
+        ("active", Json::Num(ev.active as f64)),
+        ("arrivals", Json::Num(ev.arrivals as f64)),
+        ("stragglers", ids_json(&ev.stragglers)),
+    ])
+}
+
+/// Canonical JSON document for an [`EvalRecord`] (`"type": "eval"`).
+pub fn eval_doc(ev: &EvalRecord) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("eval".into())),
+        ("epoch", Json::Num(ev.epoch as f64)),
+        ("step", Json::Num(ev.step as f64)),
+        ("sim_time_s", Json::Num(ev.sim_time_s)),
+        ("accuracy", Json::Num(ev.accuracy)),
+        ("loss", Json::Num(ev.loss)),
+    ])
+}
+
+/// Canonical JSON document for an [`EpochEvent`] (`"type": "epoch"`).
+pub fn epoch_doc(ev: &EpochEvent) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("epoch".into())),
+        ("epoch", Json::Num(ev.epoch as f64)),
+        ("sim_time_s", Json::Num(ev.sim_time_s)),
+        ("active", Json::Num(ev.active as f64)),
+        ("lr", Json::Num(ev.lr)),
+    ])
+}
+
+/// Canonical JSON document for a [`ChurnEvent`] (`"type": "churn"`).
+pub fn churn_doc(ev: &ChurnEvent) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("churn".into())),
+        ("epoch", Json::Num(ev.epoch as f64)),
+        ("joined", ids_json(&ev.joined)),
+        ("left", ids_json(&ev.left)),
+        ("active", Json::Num(ev.active as f64)),
+    ])
+}
+
+/// Canonical JSON document for a [`ControlEvent`] (`"type": "control"`).
+pub fn control_doc(ev: &ControlEvent) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("control".into())),
+        ("epoch", Json::Num(ev.epoch as f64)),
+        ("reason", Json::Str(ev.reason.clone())),
+        ("ratio", Json::Num(ev.ratio)),
+        ("prev_deadline_s", Json::Num(ev.prev_deadline_s)),
+        ("deadline_s", Json::Num(ev.deadline_s)),
+        ("active", Json::Num(ev.active as f64)),
+        ("replans", Json::Num(ev.replans as f64)),
+    ])
+}
+
+/// Canonical JSON document for a [`crate::scenario::SessionSummary`]
+/// (`"type": "done"` — the serve protocol's end-of-stream record).
+pub fn summary_doc(s: &crate::scenario::SessionSummary) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("done".into())),
+        ("epochs", Json::Num(s.epochs as f64)),
+        ("steps", Json::Num(s.steps as f64)),
+        ("total_sim_time_s", Json::Num(s.total_sim_time_s)),
+        ("mean_arrival_frac", Json::Num(s.mean_arrival_frac)),
+        ("deadline_s", Json::Num(s.deadline_s)),
+        ("evals", Json::Num(s.evals as f64)),
+        ("final_accuracy", Json::Num(s.final_accuracy)),
+        ("parity_reencodes", Json::Num(s.parity_reencodes as f64)),
+        ("replans", Json::Num(s.replans as f64)),
+        ("final_active", Json::Num(s.final_active as f64)),
+        ("fault_aborts", Json::Num(s.fault_aborts as f64)),
+        ("telemetry_drops", Json::Num(s.telemetry_drops as f64)),
+        ("observer_errors", Json::Num(s.observer_errors as f64)),
+    ])
 }
 
 impl<W: std::io::Write> RoundObserver for JsonlObserver<W> {
     fn on_round(&mut self, ev: &RoundEvent) -> Result<()> {
-        self.emit(Json::obj(vec![
-            ("type", Json::Str("round".into())),
-            ("epoch", Json::Num(ev.epoch as f64)),
-            ("step", Json::Num(ev.step as f64)),
-            ("batch", Json::Num(ev.batch as f64)),
-            ("sim_time_s", Json::Num(ev.sim_time_s)),
-            ("step_time_s", Json::Num(ev.step_time_s)),
-            ("active", Json::Num(ev.active as f64)),
-            ("arrivals", Json::Num(ev.arrivals as f64)),
-            ("stragglers", ids_json(&ev.stragglers)),
-        ]))
+        self.emit(round_doc(ev))
     }
 
     fn on_eval(&mut self, ev: &EvalRecord) -> Result<()> {
-        self.emit(Json::obj(vec![
-            ("type", Json::Str("eval".into())),
-            ("epoch", Json::Num(ev.epoch as f64)),
-            ("step", Json::Num(ev.step as f64)),
-            ("sim_time_s", Json::Num(ev.sim_time_s)),
-            ("accuracy", Json::Num(ev.accuracy)),
-            ("loss", Json::Num(ev.loss)),
-        ]))
+        self.emit(eval_doc(ev))
     }
 
     fn on_epoch(&mut self, ev: &EpochEvent) -> Result<()> {
-        self.emit(Json::obj(vec![
-            ("type", Json::Str("epoch".into())),
-            ("epoch", Json::Num(ev.epoch as f64)),
-            ("sim_time_s", Json::Num(ev.sim_time_s)),
-            ("active", Json::Num(ev.active as f64)),
-            ("lr", Json::Num(ev.lr)),
-        ]))
+        self.emit(epoch_doc(ev))
     }
 
     fn on_churn(&mut self, ev: &ChurnEvent) -> Result<()> {
-        self.emit(Json::obj(vec![
-            ("type", Json::Str("churn".into())),
-            ("epoch", Json::Num(ev.epoch as f64)),
-            ("joined", ids_json(&ev.joined)),
-            ("left", ids_json(&ev.left)),
-            ("active", Json::Num(ev.active as f64)),
-        ]))
+        self.emit(churn_doc(ev))
     }
 
     fn on_control(&mut self, ev: &ControlEvent) -> Result<()> {
-        self.emit(Json::obj(vec![
-            ("type", Json::Str("control".into())),
-            ("epoch", Json::Num(ev.epoch as f64)),
-            ("reason", Json::Str(ev.reason.clone())),
-            ("ratio", Json::Num(ev.ratio)),
-            ("prev_deadline_s", Json::Num(ev.prev_deadline_s)),
-            ("deadline_s", Json::Num(ev.deadline_s)),
-            ("active", Json::Num(ev.active as f64)),
-            ("replans", Json::Num(ev.replans as f64)),
-        ]))
+        self.emit(control_doc(ev))
     }
 }
 
@@ -585,6 +644,54 @@ mod tests {
         assert_eq!(control.get("reason").unwrap().as_str().unwrap(), "drift");
         assert_eq!(control.get("replans").unwrap().as_usize().unwrap(), 2);
         assert!((control.get("deadline_s").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-12);
+    }
+
+    /// Writer that records how many times it was flushed.
+    struct FlushProbe {
+        buf: Vec<u8>,
+        flushes: usize,
+    }
+
+    impl std::io::Write for &mut FlushProbe {
+        fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+            self.buf.extend_from_slice(data);
+            Ok(data.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            self.flushes += 1;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn jsonl_flushes_once_per_event_line() {
+        let mut probe = FlushProbe { buf: Vec::new(), flushes: 0 };
+        {
+            let mut obs = JsonlObserver::new(&mut probe);
+            obs.on_round(&round_ev()).unwrap();
+            obs.on_churn(&ChurnEvent { epoch: 2, joined: vec![1], left: vec![], active: 3 })
+                .unwrap();
+            obs.finish().unwrap();
+        }
+        // One flush per emitted line (plus the final finish() flush):
+        // a live consumer sees each event as the round completes.
+        assert_eq!(probe.flushes, 3);
+        assert_eq!(String::from_utf8(probe.buf).unwrap().lines().count(), 2);
+    }
+
+    #[test]
+    fn jsonl_stream_uses_the_canonical_encoders() {
+        // The wire format IS the file format: the observer's output line
+        // for each event is exactly the canonical doc's serialization.
+        let mut obs = JsonlObserver::new(Vec::<u8>::new());
+        let r = round_ev();
+        let c = control_ev();
+        obs.on_round(&r).unwrap();
+        obs.on_control(&c).unwrap();
+        let text = String::from_utf8(obs.finish().unwrap()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], round_doc(&r).to_string());
+        assert_eq!(lines[1], control_doc(&c).to_string());
     }
 
     #[test]

@@ -35,7 +35,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::allocation::optimizer::AllocationPlan;
 use crate::coding::encoder::{encode_client_rows_into, CompositeParity, ReencodeCache};
@@ -51,11 +51,16 @@ use crate::mathx::par::Parallelism;
 use crate::mathx::rng::Rng;
 use crate::metrics::{EvalRecord, TrainReport};
 use crate::runtime::backend::{ComputeBackend, DenseEncodeJob, PreparedMatrix};
-use crate::scenario::builder::Scenario;
+use crate::scenario::builder::{Scenario, ScenarioBuilder};
 use crate::scenario::observer::{
-    ChurnEvent, CollectingObserver, EpochEvent, RoundEvent, RoundObserver,
+    ids_json, ChurnEvent, CollectingObserver, EpochEvent, RoundEvent, RoundObserver,
+};
+use crate::scenario::snapshot::{
+    matrix_from_json, matrix_to_json, spec_from_json, spec_to_json, RunCursor, SNAPSHOT_FORMAT,
+    SNAPSHOT_VERSION,
 };
 use crate::simnet::delay::ClientModel;
+use crate::util::json::{self as uj, Json};
 
 /// Generator-stream base for control-plane parity re-encodes: keeps the
 /// per-(replan, step, client) forks disjoint from the churn path's
@@ -139,6 +144,10 @@ pub struct Session {
     /// lazily on the first re-encode).
     caches: Vec<Vec<ReencodeCache>>,
     reencodes: usize,
+    /// Provenance of the re-encode currently in force: `(stream_base,
+    /// active set)`. Snapshots record it and restore *replays* it — the
+    /// encoded matrices are re-derived, never serialized.
+    last_reencode: Option<(u64, Vec<usize>)>,
     /// The adaptive control plane (None when the policy is `off` — in
     /// which case every control field below stays untouched and the
     /// session is bitwise the plain static/churn session).
@@ -275,6 +284,7 @@ impl Session {
             parity_override: None,
             caches: Vec::new(),
             reencodes: 0,
+            last_reencode: None,
             controller,
             ctrl_plan: None,
             ctrl_masks: None,
@@ -313,6 +323,7 @@ impl Session {
             parity_override: None,
             caches: Vec::new(),
             reencodes: 0,
+            last_reencode: None,
             controller: None,
             ctrl_plan: None,
             ctrl_masks: None,
@@ -468,7 +479,75 @@ impl Session {
     /// Run to completion, streaming every round/eval/epoch/churn event
     /// to `obs`. Nothing per-round is buffered in the session itself, so
     /// thousand-client populations report incrementally in O(1) memory.
+    /// Equivalent to [`Session::cursor`] plus one unbounded
+    /// [`Session::advance`] plus [`Session::summary`] — long-running
+    /// callers (the serve loop) drive those pieces directly so they can
+    /// interleave checkpoints and commands at round boundaries.
     pub fn run_observed(&mut self, obs: &mut dyn RoundObserver) -> Result<SessionSummary> {
+        let mut cur = self.cursor();
+        self.advance(&mut cur, obs, usize::MAX)?;
+        Ok(self.summary(&cur, obs.error_count()))
+    }
+
+    /// A fresh cursor at the start of the run (round 0 of epoch 0).
+    pub fn cursor(&self) -> RunCursor {
+        let n = self.scenario.cfg.n_clients;
+        RunCursor {
+            epoch: 0,
+            batch: 0,
+            global_step: 0,
+            sim_time_s: 0.0,
+            arrival_frac_sum: 0.0,
+            evals: 0,
+            last_accuracy: 0.0,
+            fault_aborts: 0,
+            telemetry_drops: 0,
+            prev_active: (0..n).collect(),
+            done: self.scenario.cfg.train.epochs == 0,
+            host_time_s: 0.0,
+        }
+    }
+
+    /// The end-of-run totals for a cursor. Callers driving the
+    /// incremental [`Session::advance`] loop build their summary here;
+    /// `observer_errors` comes from the observer chain's
+    /// [`RoundObserver::error_count`].
+    pub fn summary(&self, cur: &RunCursor, observer_errors: usize) -> SessionSummary {
+        SessionSummary {
+            epochs: cur.epoch,
+            steps: cur.global_step,
+            total_sim_time_s: cur.sim_time_s,
+            host_time_s: cur.host_time_s,
+            mean_arrival_frac: cur.arrival_frac_sum / cur.global_step.max(1) as f64,
+            deadline_s: self.active_plan().map(|p| p.deadline).unwrap_or(0.0),
+            evals: cur.evals,
+            final_accuracy: cur.last_accuracy,
+            parity_reencodes: self.reencodes,
+            replans: self.replan_count,
+            final_active: cur.prev_active.len(),
+            fault_aborts: cur.fault_aborts,
+            telemetry_drops: cur.telemetry_drops,
+            observer_errors,
+        }
+    }
+
+    /// Execute up to `max_rounds` global mini-batch rounds from `cur`,
+    /// streaming events to `obs`; returns how many rounds actually ran
+    /// (fewer only when the run completes). Driving a session one round
+    /// at a time produces the **identical** event stream and final model
+    /// as one unbounded call — begin-of-epoch work (churn transition,
+    /// control decision, parity re-encode) fires exactly when the cursor
+    /// stands on an epoch's first round, and the epoch-end event rides
+    /// the same call as the epoch's last round, so the slicing is
+    /// invisible in the stream. This also makes the round boundary the
+    /// checkpoint granularity: between any two `advance` calls,
+    /// [`Session::snapshot`] captures a state that resumes bitwise.
+    pub fn advance(
+        &mut self,
+        cur: &mut RunCursor,
+        obs: &mut dyn RoundObserver,
+        max_rounds: usize,
+    ) -> Result<usize> {
         let host_t0 = Instant::now();
         let cfg = self.scenario.cfg.clone();
         let steps = cfg.steps_per_epoch();
@@ -485,26 +564,17 @@ impl Session {
         let rates_static =
             self.scenario.compute_rates.is_static() && self.scenario.link_rates.is_static();
         let faults = self.scenario.faults.clone();
+        let mut executed = 0usize;
 
-        let mut sim_time = 0.0f64;
-        let mut global_step = 0usize;
-        let mut arrival_frac_sum = 0.0f64;
-        let mut evals = 0usize;
-        let mut last_acc = 0.0f64;
-        let mut fault_aborts = 0usize;
-        let mut telemetry_drops = 0usize;
-        let mut prev_active: Vec<usize> = (0..n).collect();
-
-        for epoch in 0..cfg.train.epochs {
+        while !cur.done && executed < max_rounds {
+            let epoch = cur.epoch;
             let lr64 = sched.at(epoch);
             let lr = lr64 as f32;
 
-            // 1. This epoch's roster; emit join/leave transitions.
+            // 1. This epoch's roster — a pure counter-based function of
+            // the epoch, so recomputing it on every slice (including a
+            // mid-epoch resume) is bitwise free.
             let active = self.scenario.churn.active_set(n, epoch, &self.churn_root);
-            if active != prev_active {
-                let (joined, left) = sorted_diff(&prev_active, &active);
-                obs.on_churn(&ChurnEvent { epoch, joined, left, active: active.len() })?;
-            }
 
             // 2. Epoch-effective delay models (rate modulation).
             let models: Option<Vec<ClientModel>> = if rates_static {
@@ -526,32 +596,49 @@ impl Session {
                 )
             };
 
-            // 2b. Adaptive control: with every round of telemetry so far
-            // folded into the estimators, ask the controller whether the
-            // next rounds should run a re-solved allocation. A decision
-            // installs the plan override (masks + parity re-encode) and
-            // streams a ControlEvent *before* the rounds it governs.
-            if let Some(mut ctrl) = self.controller.take() {
-                let decision = ctrl.epoch_decision(epoch, &active, models.as_deref())?;
-                self.controller = Some(ctrl);
-                if let Some(d) = decision {
-                    self.apply_control_plan(d.plan, &active)?;
-                    obs.on_control(&d.event)?;
+            // Begin-of-epoch work fires exactly once per epoch — on its
+            // first round. A cursor restored mid-epoch skips it: the
+            // churn transition was already streamed before the snapshot,
+            // and the control plan / re-encoded parity were reinstated
+            // by the restore path.
+            if cur.batch == 0 {
+                // 2a. Emit join/leave transitions.
+                if active != cur.prev_active {
+                    let (joined, left) = sorted_diff(&cur.prev_active, &active);
+                    obs.on_churn(&ChurnEvent { epoch, joined, left, active: active.len() })?;
                 }
-            }
 
-            // 3. Re-encode parity when the present data changed. The
-            // hierarchical engine re-encodes per cell on its own copy of
-            // the fork-9 generator stream (same (epoch, step, client)
-            // counters — one cell degenerates to the flat path bitwise).
-            let needs_parity = self.setup().plan.as_ref().map(|p| p.u > 0).unwrap_or(false);
-            if needs_parity && active != self.encoded_for {
-                if let Engine::Hier(h) = &mut self.engine {
-                    h.reencode_parity(epoch as u64, &active)?;
-                    self.encoded_for = active.clone();
-                    self.reencodes += 1;
-                } else {
-                    self.reencode_parity(epoch as u64, &active)?;
+                // 2b. Adaptive control: with every round of telemetry so
+                // far folded into the estimators, ask the controller
+                // whether the next rounds should run a re-solved
+                // allocation. A decision installs the plan override
+                // (masks + parity re-encode) and streams a ControlEvent
+                // *before* the rounds it governs.
+                if let Some(mut ctrl) = self.controller.take() {
+                    let decision = ctrl.epoch_decision(epoch, &active, models.as_deref())?;
+                    self.controller = Some(ctrl);
+                    if let Some(d) = decision {
+                        self.apply_control_plan(d.plan, &active)?;
+                        obs.on_control(&d.event)?;
+                    }
+                }
+
+                // 3. Re-encode parity when the present data changed. The
+                // hierarchical engine re-encodes per cell on its own copy
+                // of the fork-9 generator stream (same (epoch, step,
+                // client) counters — one cell degenerates to the flat
+                // path bitwise).
+                let needs_parity =
+                    self.setup().plan.as_ref().map(|p| p.u > 0).unwrap_or(false);
+                if needs_parity && active != self.encoded_for {
+                    if let Engine::Hier(h) = &mut self.engine {
+                        h.reencode_parity(epoch as u64, &active)?;
+                        self.encoded_for = active.clone();
+                        self.reencodes += 1;
+                        self.last_reencode = Some((epoch as u64, active.clone()));
+                    } else {
+                        self.reencode_parity(epoch as u64, &active)?;
+                    }
                 }
             }
 
@@ -566,7 +653,8 @@ impl Session {
             // counts coincide exactly, so the static bitwise contract is
             // untouched.
             let m_round = (active.len() * cfg.profile.l) as f32;
-            for s in 0..steps {
+            while cur.batch < steps && executed < max_rounds {
+                let s = cur.batch;
                 // Fault decisions for this global round, drawn on the
                 // driving thread from the dedicated fault stream (a
                 // faults-off plan returns instantly without drawing).
@@ -601,15 +689,17 @@ impl Session {
                         trainer.step_round(s, lr, lam, m_round, Some(&ctx))?
                     }
                 };
-                fault_aborts += out.aborted;
-                sim_time += out.step_time_s;
-                arrival_frac_sum += out.arrivals as f64 / active.len().max(1) as f64;
-                global_step += 1;
+                cur.fault_aborts += out.aborted;
+                cur.sim_time_s += out.step_time_s;
+                cur.arrival_frac_sum += out.arrivals as f64 / active.len().max(1) as f64;
+                cur.global_step += 1;
+                cur.batch += 1;
+                executed += 1;
                 let ev = RoundEvent {
                     epoch,
-                    step: global_step,
+                    step: cur.global_step,
                     batch: s,
-                    sim_time_s: sim_time,
+                    sim_time_s: cur.sim_time_s,
                     step_time_s: out.step_time_s,
                     active: active.len(),
                     arrivals: out.arrivals,
@@ -624,7 +714,7 @@ impl Session {
                 // plan decided on stale telemetry.
                 if let Some(c) = self.controller.as_mut() {
                     if faults.telemetry_lost(&self.fault_root, round_idx) {
-                        telemetry_drops += 1;
+                        cur.telemetry_drops += 1;
                     } else {
                         c.observe_delays(&out.delays);
                     }
@@ -632,47 +722,41 @@ impl Session {
                 }
                 obs.on_round(&ev)?;
                 let last = epoch + 1 == cfg.train.epochs && s + 1 == steps;
-                if global_step % cfg.train.eval_every_steps == 0 || last {
+                if cur.global_step % cfg.train.eval_every_steps == 0 || last {
                     let (acc, loss) = match &self.engine {
                         Engine::Flat(t) => t.evaluate(s)?,
                         Engine::Hier(h) => h.evaluate(s)?,
                     };
-                    evals += 1;
-                    last_acc = acc;
+                    cur.evals += 1;
+                    cur.last_accuracy = acc;
                     obs.on_eval(&EvalRecord {
                         epoch,
-                        step: global_step,
-                        sim_time_s: sim_time,
+                        step: cur.global_step,
+                        sim_time_s: cur.sim_time_s,
                         accuracy: acc,
                         loss,
                     })?;
                 }
             }
-            obs.on_epoch(&EpochEvent {
-                epoch,
-                sim_time_s: sim_time,
-                active: active.len(),
-                lr: lr64,
-            })?;
-            prev_active = active;
+            // Epoch end rides the same call as the epoch's last round,
+            // so the cursor never rests at `batch == steps`.
+            if cur.batch == steps {
+                obs.on_epoch(&EpochEvent {
+                    epoch,
+                    sim_time_s: cur.sim_time_s,
+                    active: active.len(),
+                    lr: lr64,
+                })?;
+                cur.prev_active = active;
+                cur.epoch += 1;
+                cur.batch = 0;
+                if cur.epoch == cfg.train.epochs {
+                    cur.done = true;
+                }
+            }
         }
-
-        Ok(SessionSummary {
-            epochs: cfg.train.epochs,
-            steps: global_step,
-            total_sim_time_s: sim_time,
-            host_time_s: host_t0.elapsed().as_secs_f64(),
-            mean_arrival_frac: arrival_frac_sum / global_step.max(1) as f64,
-            deadline_s: self.active_plan().map(|p| p.deadline).unwrap_or(0.0),
-            evals,
-            final_accuracy: last_acc,
-            parity_reencodes: self.reencodes,
-            replans: self.replan_count,
-            final_active: prev_active.len(),
-            fault_aborts,
-            telemetry_drops,
-            observer_errors: obs.error_count(),
-        })
+        cur.host_time_s += host_t0.elapsed().as_secs_f64();
+        Ok(executed)
     }
 
     /// Install a controller-supplied allocation: redraw the §3.4
@@ -685,6 +769,27 @@ impl Session {
     /// and the encode kernel are paid — the dense slices are already
     /// resident from earlier churn/control re-encodes.
     fn apply_control_plan(&mut self, plan: AllocationPlan, active: &[usize]) -> Result<()> {
+        let replan = self.replan_count as u64;
+        let needs_parity = plan.u > 0;
+        self.install_control_masks(plan, replan)?;
+        self.replan_count += 1;
+        // The §3.4 weights changed with the loads/pnr, so the installed
+        // parity no longer matches: re-encode over the active set on a
+        // control-plane generator stream (disjoint from churn epochs).
+        if needs_parity {
+            self.reencode_parity(CONTROL_STREAM_BASE + replan, active)?;
+        }
+        Ok(())
+    }
+
+    /// The mask-derivation half of [`Session::apply_control_plan`],
+    /// shared with snapshot restore: the mask redraw is a pure
+    /// counter-based function of `(replan index, step, client)` on the
+    /// dedicated control fork, so restoring a session re-derives the
+    /// masks in force by calling this with the snapshot's plan at
+    /// `replan_count - 1` — bit-identical to the masks the original run
+    /// installed, with no mask state in the snapshot.
+    fn install_control_masks(&mut self, plan: AllocationPlan, replan: u64) -> Result<()> {
         let steps = self.scenario.cfg.steps_per_epoch();
         let n = self.scenario.cfg.n_clients;
         let l = self.scenario.cfg.profile.l;
@@ -692,12 +797,11 @@ impl Session {
             plan.loads.len() == n && plan.pnr.len() == n,
             "control plan population mismatch"
         );
-        let replan = self.replan_count as u64;
-        let needs_parity = plan.u > 0;
         // Adaptive control engages only on the flat engine (scenario
-        // validation rejects hierarchical + adaptive).
+        // validation rejects hierarchical + adaptive; restore re-checks
+        // because a snapshot is external input).
         let Engine::Flat(trainer) = &self.engine else {
-            unreachable!("adaptive control runs on the flat engine only")
+            bail!("adaptive control plans apply to the flat engine only")
         };
         let mut masks = vec![vec![Vec::new(); n]; steps];
         let mut prep = Vec::with_capacity(steps);
@@ -729,13 +833,6 @@ impl Session {
         self.ctrl_masks = Some(masks);
         self.ctrl_prep_masks = Some(prep);
         self.ctrl_plan = Some(plan);
-        self.replan_count += 1;
-        // The §3.4 weights changed with the loads/pnr, so the installed
-        // parity no longer matches: re-encode over the active set on a
-        // control-plane generator stream (disjoint from churn epochs).
-        if needs_parity {
-            self.reencode_parity(CONTROL_STREAM_BASE + replan, active)?;
-        }
         Ok(())
     }
 
@@ -880,7 +977,290 @@ impl Session {
         self.parity_override = Some(overrides);
         self.encoded_for = active.to_vec();
         self.reencodes += 1;
+        self.last_reencode = Some((stream_base, active.to_vec()));
         Ok(())
+    }
+
+    // ---- checkpoint / resume / fork -----------------------------------
+
+    /// Serialize the complete resumable state of this session at the
+    /// round boundary `cur` points at, as a versioned JSON document
+    /// ([`SNAPSHOT_FORMAT`] v[`SNAPSHOT_VERSION`]). The snapshot stores
+    /// the scenario's recorded spec (construction is *replayed* on
+    /// restore, never serialized), the cursor, the model and delay-rng
+    /// bits, the parity re-encode provenance, and the control plane's
+    /// mutable state — everything floats as hex bit patterns, so
+    /// [`Session::restore`] resumes **bitwise identically** at any
+    /// thread/shard count. Only spec-replayable scenarios (built from a
+    /// preset, possibly with recorded overrides) can snapshot; note that
+    /// parallelism is deliberately *not* recorded — it is
+    /// bitwise-neutral, so a run may checkpoint at (1,1) and resume at
+    /// (2,2).
+    pub fn snapshot(&self, cur: &RunCursor) -> Result<Json> {
+        ensure!(
+            self.scenario.replayable,
+            "only spec-replayable scenarios can be checkpointed — build from a preset \
+             (ScenarioBuilder::from_preset / named / from_spec_pairs), not from_config() \
+             or a hand-rolled topology()"
+        );
+        let (kind, drs, beta) = match &self.engine {
+            Engine::Flat(t) => ("flat", t.delay_rng_state(), t.beta()),
+            Engine::Hier(h) => ("hier", h.delay_rng_state(), h.beta()),
+        };
+        let cfg = &self.scenario.cfg;
+        let guard = Json::obj(vec![
+            ("n_clients", Json::Num(cfg.n_clients as f64)),
+            ("steps_per_epoch", Json::Num(cfg.steps_per_epoch() as f64)),
+            ("hierarchical", Json::Bool(self.scenario.hierarchical)),
+            ("scheme", Json::Str(cfg.scheme.name().into())),
+        ]);
+        let engine = Json::obj(vec![
+            ("kind", Json::Str(kind.into())),
+            (
+                "delay_rng",
+                Json::Arr(drs.iter().map(|&w| Json::Str(uj::u64_to_hex(w))).collect()),
+            ),
+            ("beta", matrix_to_json(beta)),
+        ]);
+        let parity = Json::obj(vec![
+            ("encoded_for", ids_json(&self.encoded_for)),
+            ("reencodes", Json::Num(self.reencodes as f64)),
+            (
+                "last",
+                match &self.last_reencode {
+                    None => Json::Null,
+                    Some((base, act)) => Json::obj(vec![
+                        ("stream_base", Json::Str(uj::u64_to_hex(*base))),
+                        ("active", ids_json(act)),
+                    ]),
+                },
+            ),
+        ]);
+        let control = Json::obj(vec![
+            ("replan_count", Json::Num(self.replan_count as f64)),
+            (
+                "plan",
+                self.ctrl_plan.as_ref().map(|p| p.to_json()).unwrap_or(Json::Null),
+            ),
+            (
+                "controller",
+                self.controller.as_ref().map(|c| c.state_to_json()).unwrap_or(Json::Null),
+            ),
+        ]);
+        Ok(Json::obj(vec![
+            ("format", Json::Str(SNAPSHOT_FORMAT.into())),
+            ("version", Json::Num(SNAPSHOT_VERSION as f64)),
+            ("spec", spec_to_json(&self.scenario.spec)),
+            ("guard", guard),
+            ("cursor", cur.to_json()),
+            ("engine", engine),
+            ("parity", parity),
+            ("control", control),
+        ]))
+    }
+
+    /// [`Session::snapshot`] as one line of JSON text (the on-disk and
+    /// wire form).
+    pub fn snapshot_string(&self, cur: &RunCursor) -> Result<String> {
+        Ok(self.snapshot(cur)?.to_string())
+    }
+
+    /// Rebuild a session + cursor from a snapshot document. The restored
+    /// session continues the recorded run **bitwise identically**: same
+    /// remaining event stream, same final model, at any thread/shard
+    /// count (`par` overrides the environment's parallelism and is
+    /// bitwise-neutral).
+    pub fn restore(doc: &Json, par: Option<Parallelism>) -> Result<(Session, RunCursor)> {
+        Self::restore_with_overrides(doc, &[], par)
+    }
+
+    /// [`Session::restore`] from serialized snapshot text.
+    pub fn resume_from_str(
+        text: &str,
+        par: Option<Parallelism>,
+    ) -> Result<(Session, RunCursor)> {
+        let doc = Json::parse(text)?;
+        Self::restore(&doc, par)
+    }
+
+    /// Fork: restore the snapshot with amended scenario overrides — the
+    /// counterfactual-branching primitive. The fork shares the original
+    /// run's entire history up to the snapshot point (it *is* a restore)
+    /// and diverges only where the overrides change future dynamics:
+    /// e.g. a different churn schedule, fault plan, adaptive policy, or
+    /// an extended `train.epochs` to keep training past the recorded
+    /// horizon. Structural overrides are rejected — population, steps
+    /// per epoch, scheme and engine kind must match the snapshot, since
+    /// the recorded per-client state is meaningless under a different
+    /// structure. With empty overrides a fork *is* a resume, bitwise.
+    pub fn fork(
+        doc: &Json,
+        overrides: &[(String, String)],
+        par: Option<Parallelism>,
+    ) -> Result<(Session, RunCursor)> {
+        Self::restore_with_overrides(doc, overrides, par)
+    }
+
+    /// [`Session::fork`] from serialized snapshot text.
+    pub fn fork_from_str(
+        text: &str,
+        overrides: &[(String, String)],
+        par: Option<Parallelism>,
+    ) -> Result<(Session, RunCursor)> {
+        let doc = Json::parse(text)?;
+        Self::fork(&doc, overrides, par)
+    }
+
+    fn restore_with_overrides(
+        doc: &Json,
+        overrides: &[(String, String)],
+        par: Option<Parallelism>,
+    ) -> Result<(Session, RunCursor)> {
+        let format = doc.req("format")?.as_str()?;
+        ensure!(format == SNAPSHOT_FORMAT, "not a session snapshot (format '{format}')");
+        let version = doc.req("version")?.as_usize()?;
+        ensure!(
+            version == SNAPSHOT_VERSION,
+            "snapshot version {version} is not supported (this build reads v{SNAPSHOT_VERSION})"
+        );
+        // 1. Replay construction from the recorded spec (+ fork
+        // overrides, applied after — later pairs win).
+        let mut spec = spec_from_json(doc.req("spec")?)?;
+        spec.extend(overrides.iter().cloned());
+        let mut b = ScenarioBuilder::from_spec_pairs(&spec)?;
+        if let Some(p) = par {
+            b = b.parallelism(p);
+        }
+        let mut session = b.build()?;
+        let n = session.scenario.cfg.n_clients;
+        let steps = session.scenario.cfg.steps_per_epoch();
+        let epochs = session.scenario.cfg.train.epochs;
+
+        // 2. Structural guard: the per-client state below is only
+        // meaningful if the (possibly forked) scenario preserves the
+        // run's structure.
+        let g = doc.req("guard")?;
+        let g_n = g.req("n_clients")?.as_usize()?;
+        ensure!(
+            g_n == n,
+            "fork changed the population ({g_n} -> {n}) — snapshots carry per-client state"
+        );
+        let g_steps = g.req("steps_per_epoch")?.as_usize()?;
+        ensure!(
+            g_steps == steps,
+            "fork changed steps_per_epoch ({g_steps} -> {steps}) — the mask and parity \
+             stream counters depend on it"
+        );
+        let g_hier = matches!(g.req("hierarchical")?, Json::Bool(true));
+        ensure!(
+            g_hier == session.scenario.hierarchical,
+            "fork switched engines (hierarchical {g_hier} -> {})",
+            session.scenario.hierarchical
+        );
+        let g_scheme = g.req("scheme")?.as_str()?;
+        ensure!(
+            g_scheme == session.scenario.cfg.scheme.name(),
+            "fork changed the coding scheme ({g_scheme} -> {}) — the snapshot's parity \
+             state would be meaningless",
+            session.scenario.cfg.scheme.name()
+        );
+
+        // 3. Cursor (`done` re-derived, so a fork may extend
+        // train.epochs and keep training past the recorded horizon).
+        let mut cur = RunCursor::from_json(doc.req("cursor")?)?;
+        ensure!(
+            cur.prev_active.iter().all(|&j| j < n),
+            "cursor roster references a client outside the population"
+        );
+        ensure!(cur.batch < steps, "cursor batch {} outside 0..{steps}", cur.batch);
+        ensure!(
+            cur.epoch < epochs || (cur.epoch <= epochs && cur.batch == 0),
+            "cursor at epoch {} is beyond the configured {epochs} epochs",
+            cur.epoch
+        );
+        cur.done = cur.epoch >= epochs;
+
+        // 4. Engine state: the model and the delay stream position.
+        let e = doc.req("engine")?;
+        let kind = e.req("kind")?.as_str()?;
+        let want = if session.scenario.hierarchical { "hier" } else { "flat" };
+        ensure!(kind == want, "snapshot engine '{kind}' does not match scenario engine '{want}'");
+        let words = e.req("delay_rng")?.as_arr()?;
+        ensure!(words.len() == 4, "delay_rng must be 4 xoshiro words, got {}", words.len());
+        let mut drs = [0u64; 4];
+        for (i, w) in words.iter().enumerate() {
+            drs[i] = uj::hex_to_u64(w.as_str()?)?;
+        }
+        let beta = matrix_from_json(e.req("beta")?)?;
+        match &mut session.engine {
+            Engine::Flat(t) => {
+                t.set_beta(beta)?;
+                t.set_delay_rng_state(drs);
+            }
+            Engine::Hier(h) => {
+                h.set_beta(beta)?;
+                h.set_delay_rng_state(drs);
+            }
+        }
+
+        // 5. Control plane — before the parity replay, because a
+        // re-encode reads the plan and masks in force. The masks are
+        // re-derived counter-based at the last replan's index; the
+        // snapshot carries none. A fork that turns the adaptive policy
+        // *on* gets a fresh controller (null state is fine); one that
+        // turns it *off* keeps the installed plan in force with no
+        // further re-solves.
+        let c = doc.req("control")?;
+        let replan_count = c.req("replan_count")?.as_usize()?;
+        if replan_count > 0 {
+            let plan = match c.req("plan")? {
+                Json::Null => bail!("snapshot records {replan_count} replans but no plan"),
+                p => AllocationPlan::from_json(p)?,
+            };
+            session.install_control_masks(plan, (replan_count - 1) as u64)?;
+        }
+        session.replan_count = replan_count;
+        let ctrl_state = c.req("controller")?;
+        if let Some(ctrl) = session.controller.as_mut() {
+            if !matches!(ctrl_state, Json::Null) {
+                ctrl.state_from_json(ctrl_state)?;
+            }
+        }
+
+        // 6. Parity provenance: *replay* the last re-encode on the same
+        // generator stream it originally used — the composite matrices
+        // are re-derived bit-identically, never shipped.
+        let p = doc.req("parity")?;
+        let last = p.req("last")?;
+        let last_reencode = match last {
+            Json::Null => None,
+            obj => {
+                let base = uj::hex_to_u64(obj.req("stream_base")?.as_str()?)?;
+                let act = obj.req("active")?.as_usize_vec()?;
+                ensure!(
+                    act.iter().all(|&j| j < n),
+                    "re-encode roster references a client outside the population"
+                );
+                Some((base, act))
+            }
+        };
+        if let Some((base, act)) = &last_reencode {
+            let has_parity =
+                session.setup().plan.as_ref().map(|pl| pl.u > 0).unwrap_or(false);
+            ensure!(
+                has_parity,
+                "snapshot records a parity re-encode but the plan carries no parity rows"
+            );
+            if let Engine::Hier(h) = &mut session.engine {
+                h.reencode_parity(*base, act)?;
+            } else {
+                session.reencode_parity(*base, act)?;
+            }
+        }
+        session.encoded_for = p.req("encoded_for")?.as_usize_vec()?;
+        session.reencodes = p.req("reencodes")?.as_usize()?;
+        session.last_reencode = last_reencode;
+        Ok((session, cur))
     }
 }
 
@@ -961,6 +1341,112 @@ mod tests {
         assert!(s1.fault_aborts > 0, "no aborts fired at p=0.3");
         assert!(s1.final_accuracy.is_finite());
         assert!(b1.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn single_round_advances_match_the_unbounded_run() {
+        let builder = || {
+            tiny_builder(Scheme::Coded)
+                .churn(ChurnSchedule::Bernoulli { p_away: 0.5, min_active: 2 })
+                .build_with_backend(Box::new(NativeBackend))
+                .unwrap()
+        };
+        // Reference: one unbounded run.
+        let mut a = builder();
+        let mut log_a = EventLog::new();
+        let sum_a = a.run_observed(&mut log_a).unwrap();
+        // Same session driven strictly one round per advance call.
+        let mut b = builder();
+        let mut log_b = EventLog::new();
+        let mut cur = b.cursor();
+        while !cur.is_done() {
+            assert_eq!(b.advance(&mut cur, &mut log_b, 1).unwrap(), 1);
+        }
+        assert_eq!(b.advance(&mut cur, &mut log_b, 1).unwrap(), 0);
+        let sum_b = b.summary(&cur, log_b.error_count());
+        assert_eq!(log_a.lines, log_b.lines);
+        assert_eq!(a.beta().data(), b.beta().data());
+        assert_eq!(sum_a.steps, sum_b.steps);
+        assert_eq!(sum_a.epochs, sum_b.epochs);
+        assert_eq!(sum_a.total_sim_time_s.to_bits(), sum_b.total_sim_time_s.to_bits());
+    }
+
+    #[test]
+    fn checkpoint_mid_run_resumes_bitwise() {
+        let builder = || {
+            tiny_builder(Scheme::Coded)
+                .churn(ChurnSchedule::Bernoulli { p_away: 0.5, min_active: 2 })
+                .build_with_backend(Box::new(NativeBackend))
+                .unwrap()
+        };
+        // Reference run, remembering the event tail after round 5.
+        let mut a = builder();
+        let mut log_a = EventLog::new();
+        let mut cur_a = a.cursor();
+        a.advance(&mut cur_a, &mut log_a, 5).unwrap();
+        let tail_start = log_a.lines.len();
+        a.advance(&mut cur_a, &mut log_a, usize::MAX).unwrap();
+        // Checkpointed run: snapshot at round 5 (serialize through text,
+        // the real on-disk path), resume, finish.
+        let mut b = builder();
+        let mut log_b = EventLog::new();
+        let mut cur_b = b.cursor();
+        b.advance(&mut cur_b, &mut log_b, 5).unwrap();
+        let text = b.snapshot_string(&cur_b).unwrap();
+        drop(b);
+        let (mut c, mut cur_c) = Session::resume_from_str(&text, None).unwrap();
+        assert_eq!(cur_c.rounds_done(), 5);
+        let mut log_c = EventLog::new();
+        c.advance(&mut cur_c, &mut log_c, usize::MAX).unwrap();
+        assert_eq!(&log_a.lines[tail_start..], &log_c.lines[..]);
+        assert_eq!(a.beta().data(), c.beta().data());
+        // Snapshot of a finished cursor restores as done.
+        let text2 = c.snapshot_string(&cur_c).unwrap();
+        let (_, cur_d) = Session::resume_from_str(&text2, None).unwrap();
+        assert!(cur_d.is_done());
+    }
+
+    #[test]
+    fn fork_diverges_only_after_the_fork_point() {
+        let mut a = tiny_builder(Scheme::Coded)
+            .churn(ChurnSchedule::Bernoulli { p_away: 0.5, min_active: 2 })
+            .build_with_backend(Box::new(NativeBackend))
+            .unwrap();
+        let mut log_a = EventLog::new();
+        let mut cur_a = a.cursor();
+        a.advance(&mut cur_a, &mut log_a, 6).unwrap();
+        let text = a.snapshot_string(&cur_a).unwrap();
+        // Empty overrides: a fork IS a resume, bitwise.
+        let (mut r, mut cur_r) = Session::fork_from_str(&text, &[], None).unwrap();
+        // A counterfactual fork: extend the training horizon past the
+        // recorded one (`done` is re-derived from the forked config).
+        let (mut f, mut cur_f) = Session::fork_from_str(
+            &text,
+            &[("train.epochs".to_string(), "6".to_string())],
+            None,
+        )
+        .unwrap();
+        assert!(!cur_f.is_done());
+        let mut log_r = EventLog::new();
+        let mut log_f = EventLog::new();
+        r.advance(&mut cur_r, &mut log_r, usize::MAX).unwrap();
+        f.advance(&mut cur_f, &mut log_f, usize::MAX).unwrap();
+        let mut log_a2 = EventLog::new();
+        a.advance(&mut cur_a, &mut log_a2, usize::MAX).unwrap();
+        assert_eq!(log_a2.lines, log_r.lines);
+        assert_eq!(a.beta().data(), r.beta().data());
+        // The fork shares the original's remaining rounds, then keeps
+        // training two epochs past the recorded horizon.
+        assert_eq!(cur_f.epoch(), 6);
+        assert!(log_f.lines.len() > log_a2.lines.len());
+        assert_eq!(&log_f.lines[..log_a2.lines.len() - 1], &log_a2.lines[..log_a2.lines.len() - 1]);
+        // Structural overrides are rejected.
+        assert!(Session::fork_from_str(
+            &text,
+            &[("scheme".to_string(), "uncoded".to_string())],
+            None,
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,249 @@
+//! The versioned session-snapshot format (`codedfedl-snapshot` v1).
+//!
+//! A snapshot is one JSON object capturing *everything* a
+//! [`crate::scenario::Session`] needs to resume a run **bitwise
+//! identically** at a round boundary:
+//!
+//! * the scenario's recorded spec pairs ([`crate::scenario::Scenario::
+//!   spec`]) — construction is replayed, never serialized, so a snapshot
+//!   stays small no matter the population;
+//! * the [`RunCursor`] — where in the epoch/step grid the run stands,
+//!   plus the streaming aggregates (sim clock, arrival fractions, eval
+//!   count) that feed the final [`crate::scenario::SessionSummary`];
+//! * the engine's mutable state — the model (f32 bit patterns) and the
+//!   delay stream's raw xoshiro words, the only sequentially-mutated rng
+//!   in the system (every other stream is counter-based and re-derived);
+//! * parity provenance — which `(stream_base, active set)` re-encode is
+//!   in force, replayed on restore rather than shipping the encoded
+//!   matrices;
+//! * the control plane — replan count, the allocation in force, and the
+//!   controller's estimator/diagnostic state.
+//!
+//! Every float crosses the wire as a hex bit pattern
+//! ([`crate::util::json`] helpers), so restore is exact, not
+//! shortest-decimal-close. The snapshot/restore/fork entry points live
+//! on [`crate::scenario::Session`]; this module owns the cursor type,
+//! the format constants, and the leaf encoders.
+
+use anyhow::{ensure, Result};
+
+use crate::mathx::linalg::Matrix;
+use crate::util::json::{self as uj, Json};
+
+/// `"format"` tag every snapshot document carries.
+pub const SNAPSHOT_FORMAT: &str = "codedfedl-snapshot";
+/// Current snapshot schema version. Bump on any incompatible change;
+/// restore rejects versions it does not understand.
+pub const SNAPSHOT_VERSION: usize = 1;
+
+/// Resumable position in a session's epoch/step grid plus the streaming
+/// aggregates of the run so far. Obtained from
+/// [`crate::scenario::Session::cursor`], advanced by
+/// [`crate::scenario::Session::advance`], and embedded verbatim in
+/// snapshots. `batch` is the next step *within* the current epoch to
+/// execute (`0` = the epoch's begin-of-epoch work — churn roster,
+/// control decision, parity re-encode — has not run yet).
+#[derive(Debug, Clone)]
+pub struct RunCursor {
+    pub(crate) epoch: usize,
+    pub(crate) batch: usize,
+    pub(crate) global_step: usize,
+    pub(crate) sim_time_s: f64,
+    pub(crate) arrival_frac_sum: f64,
+    pub(crate) evals: usize,
+    pub(crate) last_accuracy: f64,
+    pub(crate) fault_aborts: usize,
+    pub(crate) telemetry_drops: usize,
+    /// Roster of the previously-completed epoch (churn transitions are
+    /// emitted against it).
+    pub(crate) prev_active: Vec<usize>,
+    pub(crate) done: bool,
+    /// Host seconds spent driving this cursor (accumulated across
+    /// `advance` calls; survives checkpoint/resume as a total).
+    pub(crate) host_time_s: f64,
+}
+
+impl RunCursor {
+    /// Epochs fully completed.
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Next step index within the current epoch.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Global mini-batch rounds executed so far.
+    pub fn rounds_done(&self) -> usize {
+        self.global_step
+    }
+
+    /// Simulated seconds elapsed so far.
+    pub fn sim_time_s(&self) -> f64 {
+        self.sim_time_s
+    }
+
+    /// Whether the run has completed every configured epoch.
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Last evaluated test accuracy (0 until the first eval fires).
+    pub fn last_accuracy(&self) -> f64 {
+        self.last_accuracy
+    }
+
+    pub(crate) fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("global_step", Json::Num(self.global_step as f64)),
+            ("sim_time_s", Json::Str(uj::f64_to_hex(self.sim_time_s))),
+            (
+                "arrival_frac_sum",
+                Json::Str(uj::f64_to_hex(self.arrival_frac_sum)),
+            ),
+            ("evals", Json::Num(self.evals as f64)),
+            ("last_accuracy", Json::Str(uj::f64_to_hex(self.last_accuracy))),
+            ("fault_aborts", Json::Num(self.fault_aborts as f64)),
+            ("telemetry_drops", Json::Num(self.telemetry_drops as f64)),
+            (
+                "prev_active",
+                crate::scenario::observer::ids_json(&self.prev_active),
+            ),
+            ("done", Json::Bool(self.done)),
+            ("host_time_s", Json::Str(uj::f64_to_hex(self.host_time_s))),
+        ])
+    }
+
+    pub(crate) fn from_json(j: &Json) -> Result<RunCursor> {
+        Ok(RunCursor {
+            epoch: j.req("epoch")?.as_usize()?,
+            batch: j.req("batch")?.as_usize()?,
+            global_step: j.req("global_step")?.as_usize()?,
+            sim_time_s: uj::hex_to_f64(j.req("sim_time_s")?.as_str()?)?,
+            arrival_frac_sum: uj::hex_to_f64(j.req("arrival_frac_sum")?.as_str()?)?,
+            evals: j.req("evals")?.as_usize()?,
+            last_accuracy: uj::hex_to_f64(j.req("last_accuracy")?.as_str()?)?,
+            fault_aborts: j.req("fault_aborts")?.as_usize()?,
+            telemetry_drops: j.req("telemetry_drops")?.as_usize()?,
+            prev_active: j.req("prev_active")?.as_usize_vec()?,
+            done: match j.req("done")? {
+                Json::Bool(b) => *b,
+                other => anyhow::bail!("cursor 'done' must be a bool, got {other:?}"),
+            },
+            host_time_s: uj::hex_to_f64(j.req("host_time_s")?.as_str()?)?,
+        })
+    }
+}
+
+/// Bit-exact matrix encoding: shape plus every f32 as a hex bit pattern.
+pub(crate) fn matrix_to_json(m: &Matrix) -> Json {
+    Json::obj(vec![
+        ("rows", Json::Num(m.rows() as f64)),
+        ("cols", Json::Num(m.cols() as f64)),
+        ("data", uj::arr_f32_hex(m.data())),
+    ])
+}
+
+/// Inverse of [`matrix_to_json`].
+pub(crate) fn matrix_from_json(j: &Json) -> Result<Matrix> {
+    let rows = j.req("rows")?.as_usize()?;
+    let cols = j.req("cols")?.as_usize()?;
+    let data = uj::f32_vec_from_hex(j.req("data")?)?;
+    ensure!(
+        data.len() == rows * cols,
+        "matrix data length {} does not match shape {rows}x{cols}",
+        data.len()
+    );
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Spec pairs as a JSON array of `[key, value]` arrays (order matters —
+/// the journal replays in application order).
+pub(crate) fn spec_to_json(spec: &[(String, String)]) -> Json {
+    Json::Arr(
+        spec.iter()
+            .map(|(k, v)| Json::Arr(vec![Json::Str(k.clone()), Json::Str(v.clone())]))
+            .collect(),
+    )
+}
+
+/// Inverse of [`spec_to_json`].
+pub(crate) fn spec_from_json(j: &Json) -> Result<Vec<(String, String)>> {
+    j.as_arr()?
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr()?;
+            ensure!(p.len() == 2, "spec pair must be [key, value], got {pair:?}");
+            Ok((p[0].as_str()?.to_string(), p[1].as_str()?.to_string()))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cursor_json_roundtrip_is_exact() {
+        let cur = RunCursor {
+            epoch: 3,
+            batch: 1,
+            global_step: 13,
+            sim_time_s: 1234.567890123,
+            arrival_frac_sum: 9.87654321,
+            evals: 2,
+            last_accuracy: 0.912345,
+            fault_aborts: 4,
+            telemetry_drops: 1,
+            prev_active: vec![0, 2, 5],
+            done: false,
+            host_time_s: 0.25,
+        };
+        let j = Json::parse(&cur.to_json().to_string()).unwrap();
+        let back = RunCursor::from_json(&j).unwrap();
+        assert_eq!(back.epoch, cur.epoch);
+        assert_eq!(back.batch, cur.batch);
+        assert_eq!(back.global_step, cur.global_step);
+        assert_eq!(back.sim_time_s.to_bits(), cur.sim_time_s.to_bits());
+        assert_eq!(
+            back.arrival_frac_sum.to_bits(),
+            cur.arrival_frac_sum.to_bits()
+        );
+        assert_eq!(back.last_accuracy.to_bits(), cur.last_accuracy.to_bits());
+        assert_eq!(back.prev_active, cur.prev_active);
+        assert!(!back.done);
+    }
+
+    #[test]
+    fn matrix_json_roundtrip_is_bit_exact() {
+        let m = Matrix::from_vec(2, 3, vec![0.1, -0.0, 3.5e-8, f32::MIN_POSITIVE, 7.0, -2.5]);
+        let j = Json::parse(&matrix_to_json(&m).to_string()).unwrap();
+        let back = matrix_from_json(&j).unwrap();
+        assert_eq!(back.rows(), 2);
+        assert_eq!(back.cols(), 3);
+        for (a, b) in back.data().iter().zip(m.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Shape mismatch is rejected.
+        let bad = Json::obj(vec![
+            ("rows", Json::Num(2.0)),
+            ("cols", Json::Num(2.0)),
+            ("data", uj::arr_f32_hex(&[1.0, 2.0, 3.0])),
+        ]);
+        assert!(matrix_from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn spec_pairs_roundtrip_in_order() {
+        let spec = vec![
+            ("preset".to_string(), "tiny".to_string()),
+            ("seed".to_string(), "7".to_string()),
+            ("scenario.churn".to_string(), "bernoulli:0.25:2".to_string()),
+        ];
+        let j = Json::parse(&spec_to_json(&spec).to_string()).unwrap();
+        assert_eq!(spec_from_json(&j).unwrap(), spec);
+    }
+}

@@ -1,0 +1,41 @@
+//! `codedfedl serve` — a long-running session server with checkpoint,
+//! resume, and fork.
+//!
+//! One process hosts many concurrent [`crate::scenario::Session`]s
+//! behind a line-delimited JSON protocol on localhost TCP
+//! ([`protocol`]). Each session runs on its own runner thread driving
+//! the cursor-based [`crate::scenario::Session::advance`] loop one round
+//! at a time, so round boundaries double as the command-service point
+//! and the checkpoint granularity ([`server`]).
+//!
+//! The protocol methods:
+//!
+//! | method       | params                                | effect |
+//! |--------------|---------------------------------------|--------|
+//! | `create`     | `name`, `scenario`? and/or `spec`?    | register a session from a named scenario and/or `[key,value]` spec pairs (validated immediately) |
+//! | `start`      | `name`, `watch`?                      | attach a runner thread; optionally subscribe this connection first |
+//! | `watch`      | `name`                                | subscribe this connection to the session's event stream |
+//! | `status`     | `name`                                | latest per-round status (state, epoch, round, accuracy, model digest) |
+//! | `list`       |                                       | all sessions with their states |
+//! | `checkpoint` | `name`, `path`?                       | snapshot at the next round boundary (blocks until written) |
+//! | `stop`       | `name`, `checkpoint`? (default true)  | stop after the in-flight round, checkpointing first |
+//! | `resume`     | `name`, `path`, `watch`?              | restore a snapshot file as a new session and start it |
+//! | `fork`       | `name`, `path`, `set`?, `watch`?      | restore with spec overrides — the counterfactual branch |
+//! | `shutdown`   |                                       | graceful drain: finish in-flight rounds, checkpoint, exit |
+//!
+//! Stream lines wrap the **canonical** event documents of
+//! [`crate::scenario::observer`] — the same encoder the
+//! [`crate::scenario::JsonlObserver`] file format uses — as
+//! `{"stream": <session>, "event": <doc>}`, ending with the
+//! `"type": "done"` summary document. Because sessions are bitwise
+//! deterministic at any thread/shard count, two concurrent sessions on
+//! one shared worker pool each reproduce their solo-run streams exactly,
+//! and a checkpoint → resume round-trip continues bitwise.
+
+pub mod protocol;
+pub mod server;
+
+pub use protocol::{
+    err_line, ok_line, parse_request, stream_line, Request,
+};
+pub use server::{beta_digest, install_sigint_handler, ServeConfig, Server};

@@ -1,0 +1,176 @@
+//! The `codedfedl serve` wire protocol: line-delimited JSON over
+//! localhost TCP.
+//!
+//! Every request is one line — a JSON object with a `method`, an
+//! optional client-chosen `id` (echoed verbatim in the response), and an
+//! optional `params` object:
+//!
+//! ```json
+//! {"id": 1, "method": "create", "params": {"name": "a", "scenario": "edge-1k"}}
+//! ```
+//!
+//! Every response is one line, either `{"id", "ok": true, "result"}` or
+//! `{"id", "ok": false, "error"}`. Subscribed sessions additionally
+//! stream event lines of the form `{"stream": <session>, "event":
+//! <doc>}`, where `<doc>` is **exactly** the canonical event document
+//! the [`crate::scenario::JsonlObserver`] writes to files — the wire
+//! format and the file format share one encoder
+//! ([`crate::scenario::observer::round_doc`] and friends), so they
+//! cannot drift. Stream lines are distinguishable from responses by
+//! their `stream` key; a client multiplexing both on one connection
+//! routes on that.
+
+use anyhow::{ensure, Result};
+
+use crate::util::json::Json;
+
+/// One parsed request line.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Client-chosen correlation id (echoed back; `null` if absent).
+    pub id: Json,
+    pub method: String,
+    /// Method parameters (`null` if absent).
+    pub params: Json,
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = Json::parse(line.trim())?;
+    let method = j.req("method")?.as_str()?.to_string();
+    let id = j.get("id").cloned().unwrap_or(Json::Null);
+    let params = j.get("params").cloned().unwrap_or(Json::Null);
+    Ok(Request { id, method, params })
+}
+
+/// Success response line (no trailing newline).
+pub fn ok_line(id: &Json, result: Json) -> String {
+    Json::obj(vec![("id", id.clone()), ("ok", Json::Bool(true)), ("result", result)])
+        .to_string()
+}
+
+/// Error response line (no trailing newline).
+pub fn err_line(id: &Json, msg: &str) -> String {
+    Json::obj(vec![
+        ("id", id.clone()),
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+    .to_string()
+}
+
+/// Stream line carrying one canonical event document for a subscribed
+/// session (no trailing newline).
+pub fn stream_line(stream: &str, event: Json) -> String {
+    Json::obj(vec![("stream", Json::Str(stream.to_string())), ("event", event)]).to_string()
+}
+
+/// Required string parameter.
+pub fn param_str<'a>(params: &'a Json, key: &str) -> Result<&'a str> {
+    params.req(key)?.as_str()
+}
+
+/// Optional string parameter.
+pub fn param_opt_str<'a>(params: &'a Json, key: &str) -> Result<Option<&'a str>> {
+    match params.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(v.as_str()?)),
+    }
+}
+
+/// Optional boolean parameter with a default.
+pub fn param_bool(params: &Json, key: &str, default: bool) -> Result<bool> {
+    match params.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(other) => anyhow::bail!("'{key}' must be a bool, got {other:?}"),
+    }
+}
+
+/// Optional `[[key, value], ...]` spec-pair parameter (`[]` if absent).
+/// Shares the shape of a snapshot's recorded spec, so `create` specs and
+/// `fork` overrides read the same way.
+pub fn param_pairs(params: &Json, key: &str) -> Result<Vec<(String, String)>> {
+    let Some(v) = params.get(key) else {
+        return Ok(Vec::new());
+    };
+    if matches!(v, Json::Null) {
+        return Ok(Vec::new());
+    }
+    v.as_arr()?
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr()?;
+            ensure!(p.len() == 2, "'{key}' entries must be [key, value] pairs, got {pair:?}");
+            Ok((p[0].as_str()?.to_string(), p[1].as_str()?.to_string()))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_parse_with_defaults() {
+        let r = parse_request(r#"{"id": 7, "method": "status", "params": {"name": "a"}}"#)
+            .unwrap();
+        assert_eq!(r.method, "status");
+        assert_eq!(r.id, Json::Num(7.0));
+        assert_eq!(param_str(&r.params, "name").unwrap(), "a");
+        // id and params are optional.
+        let r = parse_request(r#"{"method": "list"}"#).unwrap();
+        assert_eq!(r.id, Json::Null);
+        assert_eq!(r.params, Json::Null);
+        // method is not.
+        assert!(parse_request(r#"{"id": 1}"#).is_err());
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn response_lines_round_trip() {
+        let ok = Json::parse(&ok_line(&Json::Num(3.0), Json::Str("x".into()))).unwrap();
+        assert_eq!(ok.req("id").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(ok.req("ok").unwrap(), &Json::Bool(true));
+        assert_eq!(ok.req("result").unwrap().as_str().unwrap(), "x");
+        let err = Json::parse(&err_line(&Json::Null, "boom")).unwrap();
+        assert_eq!(err.req("ok").unwrap(), &Json::Bool(false));
+        assert_eq!(err.req("error").unwrap().as_str().unwrap(), "boom");
+        // Single lines: embedded newlines are escaped by the emitter.
+        assert!(!err_line(&Json::Null, "two\nlines").contains('\n'));
+    }
+
+    #[test]
+    fn stream_lines_wrap_the_canonical_doc_verbatim() {
+        let doc = Json::obj(vec![("type", Json::Str("round".into())), ("step", Json::Num(4.0))]);
+        let line = stream_line("sess-a", doc.clone());
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.req("stream").unwrap().as_str().unwrap(), "sess-a");
+        // The embedded event is the canonical doc, byte-for-byte on
+        // re-serialization (same sorted-key emitter).
+        assert_eq!(j.req("event").unwrap().to_string(), doc.to_string());
+    }
+
+    #[test]
+    fn param_helpers_validate() {
+        let p = Json::parse(
+            r#"{"watch": true, "set": [["scenario.churn", "none"], ["seed", "9"]]}"#,
+        )
+        .unwrap();
+        assert!(param_bool(&p, "watch", false).unwrap());
+        assert!(!param_bool(&p, "missing", false).unwrap());
+        assert_eq!(
+            param_pairs(&p, "set").unwrap(),
+            vec![
+                ("scenario.churn".to_string(), "none".to_string()),
+                ("seed".to_string(), "9".to_string()),
+            ]
+        );
+        assert!(param_pairs(&p, "absent").unwrap().is_empty());
+        assert!(param_opt_str(&p, "missing").unwrap().is_none());
+        let bad = Json::parse(r#"{"set": [["only-one"]]}"#).unwrap();
+        assert!(param_pairs(&bad, "set").is_err());
+        let bad = Json::parse(r#"{"watch": "yes"}"#).unwrap();
+        assert!(param_bool(&bad, "watch", false).is_err());
+    }
+}

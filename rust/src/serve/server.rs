@@ -1,0 +1,747 @@
+//! The session server: many concurrent [`Session`]s, one process.
+//!
+//! [`Server`] listens on localhost TCP and hosts a registry of named
+//! sessions. Each started session runs on its own runner thread, driving
+//! the cursor-based [`Session::advance`] loop **one round at a time** so
+//! that between any two rounds the runner can (a) answer checkpoint
+//! commands, (b) honor a stop request, and (c) notice a server-wide
+//! shutdown — the round boundary is simultaneously the command-service
+//! point and the checkpoint granularity, which is what makes a serve
+//! checkpoint resume bitwise.
+//!
+//! Sessions are *constructed on the runner thread* (a session's compute
+//! backend is not required to be `Send`), so the registry holds only
+//! `Send` control state: the command channel, a published status
+//! document, and the subscriber list. Event streaming fans each
+//! canonical event document out to every subscribed connection; a dead
+//! subscriber is dropped and counted, never fatal to the run
+//! (`observer_errors` in the final summary reports the losses).
+//!
+//! Graceful shutdown (the `shutdown` RPC or SIGINT) finishes each
+//! session's in-flight round, checkpoints every unfinished session to
+//! the checkpoint directory, joins all runners, and returns from
+//! [`Server::run`] so the CLI exits 0.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::mathx::linalg::Matrix;
+use crate::metrics::EvalRecord;
+use crate::scenario::observer::{
+    churn_doc, control_doc, epoch_doc, eval_doc, round_doc, summary_doc, ChurnEvent,
+    ControlEvent, EpochEvent, RoundEvent, RoundObserver,
+};
+use crate::scenario::{RunCursor, ScenarioBuilder, Session};
+use crate::serve::protocol::{
+    err_line, ok_line, param_bool, param_opt_str, param_pairs, param_str, parse_request,
+    stream_line, Request,
+};
+use crate::util::json::Json;
+
+/// Server configuration (the `codedfedl serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// TCP port on 127.0.0.1 (0 = ephemeral; see [`Server::port`]).
+    pub port: u16,
+    /// Directory shutdown checkpoints and default `checkpoint` paths go
+    /// to (created on demand).
+    pub checkpoint_dir: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { port: 7070, checkpoint_dir: "serve-checkpoints".into() }
+    }
+}
+
+/// Where a session's state comes from when its runner builds it.
+enum Origin {
+    /// A scenario spec: a named scenario and/or `key=value` pairs.
+    Spec { scenario: Option<String>, set: Vec<(String, String)> },
+    /// A serialized snapshot (the `resume` RPC).
+    Snapshot { text: String },
+    /// A snapshot plus spec overrides (the `fork` RPC).
+    Fork { text: String, set: Vec<(String, String)> },
+}
+
+/// Event-stream subscribers: write halves of client connections, shared
+/// between the runner (writes) and connection handlers (subscribe).
+type Subs = Arc<Mutex<Vec<Arc<Mutex<TcpStream>>>>>;
+
+/// Session runner commands, serviced between rounds.
+enum Cmd {
+    /// Snapshot to `path`; reply carries the path actually written.
+    Checkpoint { path: String, reply: mpsc::Sender<Result<String>> },
+    /// Stop after the in-flight round; optionally checkpoint first.
+    Stop { checkpoint: bool },
+}
+
+/// Registry entry: the `Send` control surface of one session.
+struct Entry {
+    /// Present until `start` hands it to the runner thread.
+    origin: Option<Origin>,
+    /// Published status document, updated by the runner each round.
+    status: Arc<Mutex<Json>>,
+    subs: Subs,
+    /// Present while a runner is (or was) attached; a closed channel
+    /// means the runner exited.
+    cmds: Option<mpsc::Sender<Cmd>>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+struct Ctx {
+    registry: Mutex<HashMap<String, Entry>>,
+    stop: AtomicBool,
+    checkpoint_dir: String,
+}
+
+/// Process-wide SIGINT latch (see [`install_sigint_handler`]).
+static SIGINT: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_sigint(_sig: i32) {
+    SIGINT.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGINT into a graceful serve shutdown: the accept loop notices
+/// the latch, stops accepting, checkpoints and joins every running
+/// session, and [`Server::run`] returns `Ok` so the process exits 0.
+/// Call once from the CLI entry point only — it replaces the process's
+/// SIGINT disposition.
+pub fn install_sigint_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT_NUM: i32 = 2;
+    unsafe {
+        signal(SIGINT_NUM, on_sigint as extern "C" fn(i32) as usize);
+    }
+}
+
+/// Lock helper that survives a poisoned mutex (a panicked peer thread
+/// must not wedge the server's control plane).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// FNV-1a over the model's f32 bit patterns: a cheap order-sensitive
+/// digest two runs can compare for bitwise model equality without
+/// shipping the matrix.
+pub fn beta_digest(m: &Matrix) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in m.data() {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    format!("{h:016x}")
+}
+
+/// Fans every canonical event doc out to the session's subscribers as
+/// `{"stream", "event"}` lines. Subscriber failures drop that subscriber
+/// and count toward [`RoundObserver::error_count`]; they never abort the
+/// session (a viewer hanging up must not kill training).
+struct StreamFan {
+    name: String,
+    subs: Subs,
+    errors: usize,
+}
+
+impl StreamFan {
+    fn send(&mut self, doc: Json) {
+        let line = stream_line(&self.name, doc);
+        let mut dropped = 0usize;
+        let mut subs = lock(&self.subs);
+        subs.retain(|s| {
+            let mut w = lock(s);
+            let sent = w
+                .write_all(line.as_bytes())
+                .and_then(|()| w.write_all(b"\n"))
+                .and_then(|()| w.flush());
+            if sent.is_err() {
+                dropped += 1;
+            }
+            sent.is_ok()
+        });
+        drop(subs);
+        self.errors += dropped;
+    }
+}
+
+impl RoundObserver for StreamFan {
+    fn on_round(&mut self, ev: &RoundEvent) -> Result<()> {
+        self.send(round_doc(ev));
+        Ok(())
+    }
+    fn on_eval(&mut self, ev: &EvalRecord) -> Result<()> {
+        self.send(eval_doc(ev));
+        Ok(())
+    }
+    fn on_epoch(&mut self, ev: &EpochEvent) -> Result<()> {
+        self.send(epoch_doc(ev));
+        Ok(())
+    }
+    fn on_churn(&mut self, ev: &ChurnEvent) -> Result<()> {
+        self.send(churn_doc(ev));
+        Ok(())
+    }
+    fn on_control(&mut self, ev: &ControlEvent) -> Result<()> {
+        self.send(control_doc(ev));
+        Ok(())
+    }
+    fn error_count(&self) -> usize {
+        self.errors
+    }
+}
+
+fn publish(status: &Arc<Mutex<Json>>, doc: Json) {
+    *lock(status) = doc;
+}
+
+fn status_doc(state: &str, session: &Session, cur: &RunCursor, extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("state", Json::Str(state.to_string())),
+        ("epoch", Json::Num(cur.epoch() as f64)),
+        ("round", Json::Num(cur.rounds_done() as f64)),
+        ("sim_time_s", Json::Num(cur.sim_time_s())),
+        ("accuracy", Json::Num(cur.last_accuracy())),
+        ("beta_digest", Json::Str(beta_digest(session.beta()))),
+        ("reencodes", Json::Num(session.reencode_stats().0 as f64)),
+        ("replans", Json::Num(session.replans() as f64)),
+    ];
+    pairs.extend(extra);
+    Json::obj(pairs)
+}
+
+fn build_origin(origin: Origin) -> Result<(Session, RunCursor)> {
+    match origin {
+        Origin::Spec { scenario, set } => {
+            let b = match scenario {
+                Some(name) => {
+                    let mut b = ScenarioBuilder::named(&name)?;
+                    for (k, v) in &set {
+                        b.set(k, v)?;
+                    }
+                    b
+                }
+                None => ScenarioBuilder::from_spec_pairs(&set)?,
+            };
+            let session = b.build()?;
+            let cur = session.cursor();
+            Ok((session, cur))
+        }
+        Origin::Snapshot { text } => Session::resume_from_str(&text, None),
+        Origin::Fork { text, set } => Session::fork_from_str(&text, &set, None),
+    }
+}
+
+fn write_snapshot(session: &Session, cur: &RunCursor, path: &str) -> Result<()> {
+    let text = session.snapshot_string(cur)?;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+        }
+    }
+    std::fs::write(path, text + "\n").with_context(|| format!("writing snapshot '{path}'"))?;
+    Ok(())
+}
+
+/// The per-session runner: build the session from its origin, then
+/// alternate (service commands) → (run one round) until done, stopped,
+/// or shut down. Runs detached from the registry lock — the only shared
+/// state it touches is its own status slot, subscriber list, and command
+/// receiver.
+fn run_session(
+    name: String,
+    origin: Origin,
+    status: Arc<Mutex<Json>>,
+    subs: Subs,
+    cmds: mpsc::Receiver<Cmd>,
+    ctx: Arc<Ctx>,
+) {
+    let mut fan = StreamFan { name: name.clone(), subs, errors: 0 };
+    let (mut session, mut cur) = match build_origin(origin) {
+        Ok(x) => x,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            fan.send(Json::obj(vec![
+                ("type", Json::Str("error".into())),
+                ("error", Json::Str(msg.clone())),
+            ]));
+            publish(
+                &status,
+                Json::obj(vec![
+                    ("state", Json::Str("error".into())),
+                    ("error", Json::Str(msg)),
+                ]),
+            );
+            return;
+        }
+    };
+    publish(&status, status_doc("running", &session, &cur, vec![]));
+    loop {
+        // 1. Service commands that arrived since the last round.
+        let mut stopping = false;
+        let mut stop_checkpoint = true;
+        while let Ok(cmd) = cmds.try_recv() {
+            match cmd {
+                Cmd::Checkpoint { path, reply } => {
+                    let r = write_snapshot(&session, &cur, &path).map(|()| path);
+                    let _ = reply.send(r);
+                }
+                Cmd::Stop { checkpoint } => {
+                    stopping = true;
+                    stop_checkpoint = checkpoint;
+                }
+            }
+        }
+        // 2. A server-wide shutdown stops (and checkpoints) everyone.
+        if ctx.stop.load(Ordering::SeqCst) {
+            stopping = true;
+        }
+        if stopping {
+            if !cur.is_done() && stop_checkpoint {
+                let path = format!("{}/{}.json", ctx.checkpoint_dir, name);
+                match write_snapshot(&session, &cur, &path) {
+                    Ok(()) => publish(
+                        &status,
+                        status_doc(
+                            "checkpointed",
+                            &session,
+                            &cur,
+                            vec![("checkpoint", Json::Str(path))],
+                        ),
+                    ),
+                    Err(e) => publish(
+                        &status,
+                        status_doc(
+                            "error",
+                            &session,
+                            &cur,
+                            vec![("error", Json::Str(format!("{e:#}")))],
+                        ),
+                    ),
+                }
+            } else if !cur.is_done() {
+                publish(&status, status_doc("stopped", &session, &cur, vec![]));
+            }
+            return;
+        }
+        // 3. One round. Everything the round streams goes through the
+        // fan; round errors end the session with an error status.
+        match session.advance(&mut cur, &mut fan, 1) {
+            Ok(_) => {}
+            Err(e) => {
+                let msg = format!("{e:#}");
+                fan.send(Json::obj(vec![
+                    ("type", Json::Str("error".into())),
+                    ("error", Json::Str(msg.clone())),
+                ]));
+                publish(
+                    &status,
+                    status_doc("error", &session, &cur, vec![("error", Json::Str(msg))]),
+                );
+                return;
+            }
+        }
+        if cur.is_done() {
+            // The end-of-stream record is the canonical summary doc
+            // (`"type": "done"`), then the status carries it too.
+            let summary = session.summary(&cur, fan.error_count());
+            let done = summary_doc(&summary);
+            fan.send(done.clone());
+            publish(
+                &status,
+                status_doc("finished", &session, &cur, vec![("summary", done)]),
+            );
+            return;
+        }
+        publish(&status, status_doc("running", &session, &cur, vec![]));
+    }
+}
+
+/// The `codedfedl serve` server. [`Server::bind`] then [`Server::run`];
+/// `run` returns after a `shutdown` RPC or SIGINT completes the graceful
+/// drain.
+pub struct Server {
+    listener: TcpListener,
+    ctx: Arc<Ctx>,
+}
+
+impl Server {
+    /// Bind 127.0.0.1 on the configured port (0 picks an ephemeral one).
+    pub fn bind(cfg: &ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+            .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
+        Ok(Server {
+            listener,
+            ctx: Arc::new(Ctx {
+                registry: Mutex::new(HashMap::new()),
+                stop: AtomicBool::new(false),
+                checkpoint_dir: cfg.checkpoint_dir.clone(),
+            }),
+        })
+    }
+
+    /// The port actually bound (the ephemeral port when configured 0).
+    pub fn port(&self) -> u16 {
+        self.listener.local_addr().map(|a| a.port()).unwrap_or(0)
+    }
+
+    /// Request a graceful shutdown from the hosting process (tests; the
+    /// wire path is the `shutdown` RPC, the signal path is SIGINT).
+    pub fn request_shutdown(&self) {
+        self.ctx.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Accept connections until shutdown, then drain: every running
+    /// session finishes its in-flight round, checkpoints to the
+    /// checkpoint directory, and is joined before this returns.
+    pub fn run(&self) -> Result<()> {
+        self.listener.set_nonblocking(true)?;
+        loop {
+            if SIGINT.load(Ordering::SeqCst) {
+                self.ctx.stop.store(true, Ordering::SeqCst);
+            }
+            if self.ctx.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _addr)) => {
+                    let ctx = self.ctx.clone();
+                    thread::spawn(move || handle_conn(stream, ctx));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => return Err(e).context("accepting serve connection"),
+            }
+        }
+        // Drain: runners see the stop flag themselves (checkpointing
+        // unfinished sessions); joining them makes the drain visible.
+        let handles: Vec<(String, thread::JoinHandle<()>)> = {
+            let mut reg = lock(&self.ctx.registry);
+            reg.iter_mut()
+                .filter_map(|(name, e)| e.join.take().map(|h| (name.clone(), h)))
+                .collect()
+        };
+        for (_name, h) in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Per-connection read loop: parse request lines, dispatch, write one
+/// response line each. The write half is shared (via `Arc<Mutex<..>>`)
+/// with any session streams this connection subscribed to, so responses
+/// and stream lines interleave without tearing.
+fn handle_conn(stream: TcpStream, ctx: Arc<Ctx>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let write_half = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if ctx.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // client hung up
+            Ok(_) => {
+                let text = std::mem::take(&mut line);
+                if text.trim().is_empty() {
+                    continue;
+                }
+                let reply = match parse_request(&text) {
+                    Err(e) => err_line(&Json::Null, &format!("{e:#}")),
+                    Ok(req) => {
+                        let id = req.id.clone();
+                        match dispatch(&req, &write_half, &ctx) {
+                            Ok(result) => ok_line(&id, result),
+                            Err(e) => err_line(&id, &format!("{e:#}")),
+                        }
+                    }
+                };
+                let mut w = lock(&write_half);
+                if writeln!(w, "{reply}").and_then(|()| w.flush()).is_err() {
+                    return;
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Read timeout: partial input (if any) stays accumulated
+                // in `line`; loop to re-check the stop flag.
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+fn valid_name(name: &str) -> Result<()> {
+    ensure!(
+        !name.is_empty()
+            && name.len() <= 64
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')),
+        "session names are 1-64 chars of [A-Za-z0-9._-], got '{name}'"
+    );
+    Ok(())
+}
+
+/// Register a session under `name` and (optionally) immediately attach a
+/// runner. Shared by `create`(+`start`) and the one-shot `resume`/`fork`
+/// methods.
+fn register(
+    ctx: &Arc<Ctx>,
+    name: &str,
+    origin: Origin,
+    start_now: bool,
+    watcher: Option<Arc<Mutex<TcpStream>>>,
+) -> Result<()> {
+    valid_name(name)?;
+    let mut reg = lock(&ctx.registry);
+    ensure!(!reg.contains_key(name), "session '{name}' already exists");
+    let mut entry = Entry {
+        origin: Some(origin),
+        status: Arc::new(Mutex::new(Json::obj(vec![("state", Json::Str("created".into()))]))),
+        subs: Arc::new(Mutex::new(Vec::new())),
+        cmds: None,
+        join: None,
+    };
+    if let Some(w) = watcher {
+        lock(&entry.subs).push(w);
+    }
+    if start_now {
+        start_entry(name, &mut entry, ctx)?;
+    }
+    reg.insert(name.to_string(), entry);
+    Ok(())
+}
+
+/// Attach a runner thread to a created entry (origin must still be
+/// present — a session starts exactly once).
+fn start_entry(name: &str, entry: &mut Entry, ctx: &Arc<Ctx>) -> Result<()> {
+    let origin = entry
+        .origin
+        .take()
+        .ok_or_else(|| anyhow!("session '{name}' was already started"))?;
+    let (tx, rx) = mpsc::channel();
+    entry.cmds = Some(tx);
+    let status = entry.status.clone();
+    let subs = entry.subs.clone();
+    let ctx2 = ctx.clone();
+    let name2 = name.to_string();
+    entry.join = Some(thread::spawn(move || {
+        run_session(name2, origin, status, subs, rx, ctx2)
+    }));
+    Ok(())
+}
+
+fn dispatch(req: &Request, conn: &Arc<Mutex<TcpStream>>, ctx: &Arc<Ctx>) -> Result<Json> {
+    let p = &req.params;
+    match req.method.as_str() {
+        // create {"name", "scenario"?: named scenario, "spec"?: [[k,v],..]}
+        // A raw spec must lead with ["preset", name]; a named scenario
+        // takes extra pairs via "spec" too.
+        "create" => {
+            let name = param_str(p, "name")?;
+            let scenario = param_opt_str(p, "scenario")?.map(str::to_string);
+            let set = param_pairs(p, "spec")?;
+            ensure!(
+                scenario.is_some() || !set.is_empty(),
+                "create needs a 'scenario' (named) or a 'spec' (pairs, leading with preset)"
+            );
+            // Validate the spec compiles now, so `create` fails fast
+            // instead of the runner dying at `start`.
+            {
+                let b = match &scenario {
+                    Some(n) => {
+                        let mut b = ScenarioBuilder::named(n)?;
+                        for (k, v) in &set {
+                            b.set(k, v)?;
+                        }
+                        b
+                    }
+                    None => ScenarioBuilder::from_spec_pairs(&set)?,
+                };
+                b.compile()?;
+            }
+            register(ctx, name, Origin::Spec { scenario, set }, false, None)?;
+            Ok(Json::obj(vec![("name", Json::Str(name.into()))]))
+        }
+        // start {"name", "watch"?: subscribe this connection first}
+        "start" => {
+            let name = param_str(p, "name")?;
+            let watch = param_bool(p, "watch", false)?;
+            let mut reg = lock(&ctx.registry);
+            let entry =
+                reg.get_mut(name).ok_or_else(|| anyhow!("unknown session '{name}'"))?;
+            if watch {
+                lock(&entry.subs).push(conn.clone());
+            }
+            start_entry(name, entry, ctx)?;
+            Ok(Json::obj(vec![("name", Json::Str(name.into()))]))
+        }
+        // watch {"name"}: subscribe this connection to the stream.
+        "watch" => {
+            let name = param_str(p, "name")?;
+            let reg = lock(&ctx.registry);
+            let entry = reg.get(name).ok_or_else(|| anyhow!("unknown session '{name}'"))?;
+            lock(&entry.subs).push(conn.clone());
+            Ok(Json::obj(vec![("name", Json::Str(name.into()))]))
+        }
+        // status {"name"} -> the runner's latest status document.
+        "status" => {
+            let name = param_str(p, "name")?;
+            let reg = lock(&ctx.registry);
+            let entry = reg.get(name).ok_or_else(|| anyhow!("unknown session '{name}'"))?;
+            Ok(lock(&entry.status).clone())
+        }
+        // list -> [{"name", "state"}], name-sorted.
+        "list" => {
+            let reg = lock(&ctx.registry);
+            let mut names: Vec<&String> = reg.keys().collect();
+            names.sort();
+            Ok(Json::Arr(
+                names
+                    .into_iter()
+                    .map(|n| {
+                        let state = lock(&reg[n].status)
+                            .get("state")
+                            .and_then(|s| s.as_str().ok().map(str::to_string))
+                            .unwrap_or_else(|| "unknown".into());
+                        Json::obj(vec![
+                            ("name", Json::Str(n.clone())),
+                            ("state", Json::Str(state)),
+                        ])
+                    })
+                    .collect(),
+            ))
+        }
+        // checkpoint {"name", "path"?}: snapshot at the next round
+        // boundary; blocks until written. Default path is
+        // <checkpoint_dir>/<name>.json.
+        "checkpoint" => {
+            let name = param_str(p, "name")?;
+            let path = match param_opt_str(p, "path")? {
+                Some(s) => s.to_string(),
+                None => format!("{}/{}.json", ctx.checkpoint_dir, name),
+            };
+            let tx = {
+                let reg = lock(&ctx.registry);
+                let entry =
+                    reg.get(name).ok_or_else(|| anyhow!("unknown session '{name}'"))?;
+                entry
+                    .cmds
+                    .clone()
+                    .ok_or_else(|| anyhow!("session '{name}' was never started"))?
+            };
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Cmd::Checkpoint { path, reply: rtx })
+                .map_err(|_| anyhow!("session '{name}' is no longer running"))?;
+            let written = rrx
+                .recv_timeout(Duration::from_secs(120))
+                .map_err(|_| anyhow!("session '{name}' did not reach a round boundary"))??;
+            Ok(Json::obj(vec![("path", Json::Str(written))]))
+        }
+        // stop {"name", "checkpoint"?: default true}: stop after the
+        // in-flight round (checkpointing first unless told not to).
+        "stop" => {
+            let name = param_str(p, "name")?;
+            let checkpoint = param_bool(p, "checkpoint", true)?;
+            let tx = {
+                let reg = lock(&ctx.registry);
+                let entry =
+                    reg.get(name).ok_or_else(|| anyhow!("unknown session '{name}'"))?;
+                entry
+                    .cmds
+                    .clone()
+                    .ok_or_else(|| anyhow!("session '{name}' was never started"))?
+            };
+            tx.send(Cmd::Stop { checkpoint })
+                .map_err(|_| anyhow!("session '{name}' is no longer running"))?;
+            Ok(Json::obj(vec![("name", Json::Str(name.into()))]))
+        }
+        // resume {"name", "path", "watch"?}: restore a checkpoint file
+        // as a new session and start it immediately.
+        "resume" => {
+            let name = param_str(p, "name")?;
+            let path = param_str(p, "path")?;
+            let watch = param_bool(p, "watch", false)?;
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading snapshot '{path}'"))?;
+            let watcher = watch.then(|| conn.clone());
+            register(ctx, name, Origin::Snapshot { text }, true, watcher)?;
+            Ok(Json::obj(vec![("name", Json::Str(name.into()))]))
+        }
+        // fork {"name", "path", "set"?: [[k,v],..], "watch"?}: restore a
+        // checkpoint with spec overrides — the counterfactual branch —
+        // and start it immediately.
+        "fork" => {
+            let name = param_str(p, "name")?;
+            let path = param_str(p, "path")?;
+            let set = param_pairs(p, "set")?;
+            let watch = param_bool(p, "watch", false)?;
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading snapshot '{path}'"))?;
+            let watcher = watch.then(|| conn.clone());
+            register(ctx, name, Origin::Fork { text, set }, true, watcher)?;
+            Ok(Json::obj(vec![("name", Json::Str(name.into()))]))
+        }
+        // shutdown: graceful server-wide drain (every running session
+        // checkpoints); the response is written before the drain begins.
+        "shutdown" => {
+            ctx.stop.store(true, Ordering::SeqCst);
+            Ok(Json::obj(vec![("stopping", Json::Bool(true))]))
+        }
+        other => bail!(
+            "unknown method '{other}' (expected create|start|watch|status|list|checkpoint|\
+             stop|resume|fork|shutdown)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_digest_is_order_and_bit_sensitive() {
+        let a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let c = Matrix::from_vec(1, 3, vec![3.0, 2.0, 1.0]);
+        let d = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0000001]);
+        assert_eq!(beta_digest(&a), beta_digest(&b));
+        assert_ne!(beta_digest(&a), beta_digest(&c));
+        assert_ne!(beta_digest(&a), beta_digest(&d));
+        // -0.0 and 0.0 differ in bits, so they must differ in digest.
+        let z = Matrix::from_vec(1, 1, vec![0.0]);
+        let nz = Matrix::from_vec(1, 1, vec![-0.0]);
+        assert_ne!(beta_digest(&z), beta_digest(&nz));
+    }
+
+    #[test]
+    fn session_names_are_validated() {
+        assert!(valid_name("edge-1k.run_2").is_ok());
+        assert!(valid_name("").is_err());
+        assert!(valid_name("has space").is_err());
+        assert!(valid_name("no/slashes").is_err());
+        assert!(valid_name(&"x".repeat(65)).is_err());
+    }
+}

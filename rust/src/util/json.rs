@@ -141,6 +141,65 @@ impl Json {
     }
 }
 
+// ---- exact bit-pattern encoding --------------------------------------
+//
+// `Json::Num` is an `f64`, so `u64` counters and exact `f32`/`f64` values
+// (rng state words, model weights, plan deadlines) cannot round-trip
+// through decimal text. Checkpoint formats instead store such values as
+// fixed-width lowercase-hex strings of their bit patterns; these helpers
+// are the single encode/decode point so every format agrees byte-for-byte.
+
+/// `u64` → fixed-width (16-char) lowercase hex.
+pub fn u64_to_hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Inverse of [`u64_to_hex`].
+pub fn hex_to_u64(s: &str) -> Result<u64> {
+    u64::from_str_radix(s.trim(), 16).with_context(|| format!("bad u64 hex '{s}'"))
+}
+
+/// `f64` → the hex of its IEEE-754 bit pattern (exact round-trip).
+pub fn f64_to_hex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+/// Inverse of [`f64_to_hex`].
+pub fn hex_to_f64(s: &str) -> Result<f64> {
+    Ok(f64::from_bits(hex_to_u64(s)?))
+}
+
+/// `f32` → the hex of its IEEE-754 bit pattern (exact round-trip).
+pub fn f32_to_hex(v: f32) -> String {
+    format!("{:08x}", v.to_bits())
+}
+
+/// Inverse of [`f32_to_hex`].
+pub fn hex_to_f32(s: &str) -> Result<f32> {
+    let b = u32::from_str_radix(s.trim(), 16).with_context(|| format!("bad f32 hex '{s}'"))?;
+    Ok(f32::from_bits(b))
+}
+
+/// A `Json` array of [`f64_to_hex`] strings.
+pub fn arr_f64_hex(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Str(f64_to_hex(x))).collect())
+}
+
+/// Inverse of [`arr_f64_hex`].
+pub fn f64_vec_from_hex(j: &Json) -> Result<Vec<f64>> {
+    j.as_arr()?.iter().map(|v| hex_to_f64(v.as_str()?)).collect()
+}
+
+/// A `Json` array of [`f32_to_hex`] strings.
+pub fn arr_f32_hex(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Str(f32_to_hex(x))).collect())
+}
+
+/// Inverse of [`arr_f32_hex`].
+pub fn f32_vec_from_hex(j: &Json) -> Result<Vec<f32>> {
+    j.as_arr()?.iter().map(|v| hex_to_f32(v.as_str()?)).collect()
+}
+
 impl From<f64> for Json {
     fn from(v: f64) -> Json {
         Json::Num(v)
@@ -386,5 +445,25 @@ mod tests {
     fn unicode_string() {
         let j = Json::parse(r#""héllo ☃""#).unwrap();
         assert_eq!(j.as_str().unwrap(), "héllo ☃");
+    }
+
+    #[test]
+    fn hex_bit_patterns_round_trip_exactly() {
+        for v in [0u64, 1, u64::MAX, 0xdead_beef_cafe_f00d] {
+            assert_eq!(hex_to_u64(&u64_to_hex(v)).unwrap(), v);
+        }
+        for v in [0.0f64, -0.0, 1.0 / 3.0, f64::MIN_POSITIVE, -1e300, f64::NAN] {
+            let back = hex_to_f64(&f64_to_hex(v)).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
+        for v in [0.0f32, -0.0, 0.1, f32::MIN_POSITIVE, f32::NAN] {
+            let back = hex_to_f32(&f32_to_hex(v)).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
+        let xs = vec![0.25f32, -1.5, 3.0e-8];
+        assert_eq!(f32_vec_from_hex(&arr_f32_hex(&xs)).unwrap(), xs);
+        let ys = vec![0.1f64, 7.0, -2.5e-11];
+        assert_eq!(f64_vec_from_hex(&arr_f64_hex(&ys)).unwrap(), ys);
+        assert!(hex_to_u64("zz").is_err());
     }
 }

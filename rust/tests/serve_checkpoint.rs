@@ -1,0 +1,358 @@
+//! Serve-layer integration: checkpoint / resume / fork are **bitwise**,
+//! and the session server hosts concurrent sessions whose streams
+//! reproduce solo runs exactly.
+//!
+//! * a snapshot taken mid-run resumes bitwise — identical remaining
+//!   event stream and final model bits — at every `(threads, shards)`
+//!   setting, on both the flat engine (with churn *and* an adaptive
+//!   plan in force) and the hierarchical engine (with churn);
+//! * a fork shares the snapshot's history and diverges only where its
+//!   overrides change the future (here: an extended horizon);
+//! * an in-process `Server` hosts two concurrent sessions on the one
+//!   shared worker pool, each reproducing its solo-run event stream
+//!   byte for byte; a third session checkpoints mid-run over the wire,
+//!   resumes via RPC, and converges to the solo run's exact model bits;
+//!   `shutdown` drains cleanly.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use codedfedl::mathx::par::Parallelism;
+use codedfedl::scenario::{EventLog, JsonlObserver, ScenarioBuilder, Session};
+use codedfedl::serve::{beta_digest, ServeConfig, Server};
+use codedfedl::util::json::Json;
+
+fn pairs(kvs: &[(&str, &str)]) -> Vec<(String, String)> {
+    kvs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+/// Flat dynamic scenario: 16 clients over 2 cells, Bernoulli churn,
+/// diurnal links, and a periodic adaptive re-plan — every snapshot field
+/// (roster, control plane, parity provenance) is exercised.
+fn flat_adaptive_spec() -> Vec<(String, String)> {
+    pairs(&[
+        ("preset", "tiny"),
+        ("backend", "native"),
+        ("scheme", "coded"),
+        ("train.epochs", "6"),
+        ("scenario.population", "16"),
+        ("scenario.steps_per_epoch", "2"),
+        ("scenario.cells", "2"),
+        ("scenario.churn", "bernoulli:0.3:4"),
+        ("scenario.link_rates", "diurnal:4:0.3"),
+        ("scenario.adaptive", "periodic:2"),
+    ])
+}
+
+/// Hierarchical two-tier scenario with churn (the adaptive plane is
+/// flat-only by design).
+fn hier_churn_spec() -> Vec<(String, String)> {
+    pairs(&[
+        ("preset", "tiny"),
+        ("backend", "native"),
+        ("scheme", "coded"),
+        ("train.epochs", "6"),
+        ("scenario.population", "32"),
+        ("scenario.steps_per_epoch", "1"),
+        ("scenario.cells", "2"),
+        ("scenario.hierarchical", "true"),
+        ("scenario.churn", "bernoulli:0.25:8"),
+    ])
+}
+
+fn build(spec: &[(String, String)]) -> Session {
+    ScenarioBuilder::from_spec_pairs(spec).unwrap().build().unwrap()
+}
+
+/// Snapshot after `split` rounds, finish the original, then resume the
+/// snapshot at every (threads, shards) combination and demand the exact
+/// same tail stream and final model bits.
+fn assert_resume_bitwise_at_any_parallelism(spec: &[(String, String)], split: usize) {
+    let mut session = build(spec);
+    let mut cur = session.cursor();
+    let mut head = EventLog::new();
+    session.advance(&mut cur, &mut head, split).unwrap();
+    assert_eq!(cur.rounds_done(), split);
+    assert!(!cur.is_done());
+    let text = session.snapshot_string(&cur).unwrap();
+
+    let mut tail = EventLog::new();
+    session.advance(&mut cur, &mut tail, usize::MAX).unwrap();
+    assert!(cur.is_done());
+    let beta = session.beta().clone();
+
+    for (threads, shards) in [(1, 1), (1, 2), (2, 1), (2, 2)] {
+        let par = Parallelism::new(threads, shards);
+        let (mut rs, mut rc) = Session::resume_from_str(&text, Some(par)).unwrap();
+        assert_eq!(rc.rounds_done(), split, "threads={threads} shards={shards}");
+        let mut rlog = EventLog::new();
+        rs.advance(&mut rc, &mut rlog, usize::MAX).unwrap();
+        assert!(rc.is_done());
+        assert_eq!(rlog.lines, tail.lines, "tail stream diverged at ({threads},{shards})");
+        assert_eq!(rs.beta().rows(), beta.rows());
+        for (i, (a, b)) in rs.beta().data().iter().zip(beta.data()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "beta[{i}] diverged at ({threads},{shards})"
+            );
+        }
+    }
+}
+
+#[test]
+fn flat_adaptive_churn_snapshot_resumes_bitwise_at_any_parallelism() {
+    // Split mid-epoch (epoch 3, batch 1) with replans already in force.
+    assert_resume_bitwise_at_any_parallelism(&flat_adaptive_spec(), 7);
+}
+
+#[test]
+fn hier_churn_snapshot_resumes_bitwise_at_any_parallelism() {
+    assert_resume_bitwise_at_any_parallelism(&hier_churn_spec(), 3);
+}
+
+#[test]
+fn fork_extends_the_horizon_and_shares_history_under_parallelism_override() {
+    let spec = flat_adaptive_spec();
+    let mut session = build(&spec);
+    let mut cur = session.cursor();
+    session.advance(&mut cur, &mut EventLog::new(), 5).unwrap();
+    let text = session.snapshot_string(&cur).unwrap();
+
+    let par = Parallelism::new(2, 2);
+    let (mut base, mut cb) = Session::resume_from_str(&text, Some(par)).unwrap();
+    let mut lb = EventLog::new();
+    base.advance(&mut cb, &mut lb, usize::MAX).unwrap();
+
+    let ext = pairs(&[("train.epochs", "8")]);
+    let (mut fork, mut cf) = Session::fork_from_str(&text, &ext, Some(par)).unwrap();
+    let mut lf = EventLog::new();
+    fork.advance(&mut cf, &mut lf, usize::MAX).unwrap();
+
+    assert_eq!(cf.epoch(), 8, "the fork trains past the recorded horizon");
+    assert!(lf.lines.len() > lb.lines.len());
+    let shared = lb.lines.len() - 1;
+    assert_eq!(&lf.lines[..shared], &lb.lines[..shared], "histories diverged before the horizon");
+}
+
+// ---- the server, over a real socket -----------------------------------
+
+/// Line-protocol client: one connection multiplexing responses and
+/// subscribed stream lines (routed on the `stream` key).
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+    /// Stream lines observed while waiting for responses.
+    streams: Vec<Json>,
+}
+
+impl Client {
+    fn connect(port: u16) -> Client {
+        let s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        Client { w: s.try_clone().unwrap(), r: BufReader::new(s), streams: Vec::new() }
+    }
+
+    fn read_json(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.r.read_line(&mut line).expect("server read");
+        assert!(n > 0, "server closed the connection");
+        Json::parse(line.trim()).unwrap()
+    }
+
+    /// Send one request line, collect stream lines until the response.
+    fn call(&mut self, req: &str) -> Json {
+        writeln!(self.w, "{req}").unwrap();
+        self.w.flush().unwrap();
+        loop {
+            let j = self.read_json();
+            if j.get("stream").is_some() {
+                self.streams.push(j);
+                continue;
+            }
+            return j;
+        }
+    }
+
+    fn ok(&mut self, req: &str) -> Json {
+        let j = self.call(req);
+        assert_eq!(j.req("ok").unwrap(), &Json::Bool(true), "rpc failed: {}", j.to_string());
+        j.req("result").unwrap().clone()
+    }
+
+    /// Read stream lines until `name`'s `"type": "done"` summary.
+    fn drain_until_done(&mut self, name: &str) {
+        loop {
+            if self.done_seen(name) {
+                return;
+            }
+            let j = self.read_json();
+            assert!(j.get("stream").is_some(), "unexpected response while draining");
+            self.streams.push(j);
+        }
+    }
+
+    fn done_seen(&self, name: &str) -> bool {
+        self.events_for(name).iter().any(|e| {
+            e.get("type").and_then(|t| t.as_str().ok()) == Some("done")
+        })
+    }
+
+    /// Event docs for one session, in arrival order.
+    fn events_for(&self, name: &str) -> Vec<Json> {
+        self.streams
+            .iter()
+            .filter(|j| {
+                j.get("stream").and_then(|s| s.as_str().ok()) == Some(name)
+            })
+            .map(|j| j.req("event").unwrap().clone())
+            .collect()
+    }
+}
+
+/// The canonical JSONL lines of a solo run (file format == wire format),
+/// plus the final model digest.
+fn solo_run(spec: &[(String, String)]) -> (Vec<String>, String) {
+    let mut session = build(spec);
+    let mut obs = JsonlObserver::new(Vec::<u8>::new());
+    session.run_observed(&mut obs).unwrap();
+    let buf = obs.finish().unwrap();
+    let lines = String::from_utf8(buf).unwrap().lines().map(str::to_string).collect();
+    (lines, beta_digest(session.beta()))
+}
+
+fn spec_json(spec: &[(String, String)]) -> String {
+    let doc = Json::Arr(
+        spec.iter()
+            .map(|(k, v)| Json::Arr(vec![Json::Str(k.clone()), Json::Str(v.clone())]))
+            .collect(),
+    );
+    doc.to_string()
+}
+
+fn tiny_session_spec(seed: &str) -> Vec<(String, String)> {
+    pairs(&[
+        ("preset", "tiny"),
+        ("backend", "native"),
+        ("scheme", "coded"),
+        ("seed", seed),
+        ("train.epochs", "2"),
+        ("scenario.churn", "bernoulli:0.2:2"),
+    ])
+}
+
+#[test]
+fn server_hosts_concurrent_sessions_checkpoints_and_resumes_over_the_wire() {
+    let dir = std::env::temp_dir().join(format!("codedfedl-serve-test-{}", std::process::id()));
+    let dir_s = dir.to_str().unwrap().to_string();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let server =
+        Server::bind(&ServeConfig { port: 0, checkpoint_dir: dir_s.clone() }).unwrap();
+    let port = server.port();
+    let srv = thread::spawn(move || server.run().unwrap());
+
+    // Two concurrent sessions with different seeds, each watched from
+    // its own connection; both run on the one shared worker pool.
+    let spec_a = tiny_session_spec("7");
+    let spec_b = tiny_session_spec("11");
+    let (solo_a, _) = solo_run(&spec_a);
+    let (solo_b, _) = solo_run(&spec_b);
+
+    let mut ca = Client::connect(port);
+    let mut cb = Client::connect(port);
+    ca.ok(&format!(
+        r#"{{"id":1,"method":"create","params":{{"name":"a","spec":{}}}}}"#,
+        spec_json(&spec_a)
+    ));
+    cb.ok(&format!(
+        r#"{{"id":1,"method":"create","params":{{"name":"b","spec":{}}}}}"#,
+        spec_json(&spec_b)
+    ));
+    // Subscribe-then-start is race-free: the watcher is registered
+    // before the runner thread exists, so no event can be missed.
+    ca.ok(r#"{"id":2,"method":"start","params":{"name":"a","watch":true}}"#);
+    cb.ok(r#"{"id":2,"method":"start","params":{"name":"b","watch":true}}"#);
+    ca.drain_until_done("a");
+    cb.drain_until_done("b");
+
+    // Each stream is byte-for-byte the solo run's JSONL output (same
+    // canonical encoder), closed by the `"type": "done"` summary.
+    for (client, name, solo) in [(&ca, "a", &solo_a), (&cb, "b", &solo_b)] {
+        let events = client.events_for(name);
+        let (done, rounds): (Vec<&Json>, Vec<&Json>) = events
+            .iter()
+            .partition(|e| e.get("type").and_then(|t| t.as_str().ok()) == Some("done"));
+        assert_eq!(done.len(), 1, "session '{name}' must end with exactly one summary");
+        let lines: Vec<String> = rounds.iter().map(|e| e.to_string()).collect();
+        assert_eq!(&lines, solo, "session '{name}' stream diverged from its solo run");
+    }
+
+    // Third session: long enough to checkpoint mid-run over the wire.
+    let spec_c = pairs(&[
+        ("preset", "tiny"),
+        ("backend", "native"),
+        ("scheme", "coded"),
+        ("train.epochs", "40"),
+        ("scenario.population", "64"),
+        ("scenario.steps_per_epoch", "2"),
+        ("scenario.churn", "bernoulli:0.25:8"),
+    ]);
+    let (_, solo_digest) = solo_run(&spec_c);
+    ca.ok(&format!(
+        r#"{{"id":3,"method":"create","params":{{"name":"c","spec":{}}}}}"#,
+        spec_json(&spec_c)
+    ));
+    ca.ok(r#"{"id":4,"method":"start","params":{"name":"c"}}"#);
+    let ckpt = ca.ok(&format!(
+        r#"{{"id":5,"method":"checkpoint","params":{{"name":"c","path":"{dir_s}/c.json"}}}}"#
+    ));
+    let path = ckpt.req("path").unwrap().as_str().unwrap().to_string();
+    ca.ok(r#"{"id":6,"method":"stop","params":{"name":"c","checkpoint":false}}"#);
+
+    // The snapshot on disk is a valid mid-run state.
+    let snap = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+    assert_eq!(snap.req("format").unwrap().as_str().unwrap(), "codedfedl-snapshot");
+    let at_round =
+        snap.req("cursor").unwrap().req("global_step").unwrap().as_usize().unwrap();
+    assert!(at_round < 80, "checkpoint landed after the run ended");
+
+    // Resume it server-side under a new name; bitwise resume means the
+    // continued run converges to the solo run's exact model bits.
+    ca.ok(&format!(
+        r#"{{"id":7,"method":"resume","params":{{"name":"c2","path":"{path}"}}}}"#
+    ));
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let status = loop {
+        let s = ca.ok(r#"{"id":8,"method":"status","params":{"name":"c2"}}"#);
+        match s.req("state").unwrap().as_str().unwrap() {
+            "finished" => break s,
+            "error" => panic!("resumed session failed: {}", s.to_string()),
+            _ => {
+                assert!(Instant::now() < deadline, "resumed session never finished");
+                thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    assert_eq!(status.req("round").unwrap().as_usize().unwrap(), 80);
+    assert_eq!(
+        status.req("beta_digest").unwrap().as_str().unwrap(),
+        solo_digest,
+        "resumed run's final model diverged from the solo run"
+    );
+
+    // `list` sees all four sessions; graceful shutdown drains.
+    let list = ca.ok(r#"{"id":9,"method":"list"}"#);
+    let names: Vec<String> = list
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|e| e.req("name").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(names, vec!["a", "b", "c", "c2"]);
+    ca.ok(r#"{"id":10,"method":"shutdown"}"#);
+    srv.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
