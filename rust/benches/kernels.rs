@@ -47,6 +47,14 @@ fn mean_of(b: &Bencher, name: &str) -> f64 {
         .unwrap_or(f64::NAN)
 }
 
+fn min_of(b: &Bencher, name: &str) -> f64 {
+    b.results()
+        .iter()
+        .find(|r| r.name == name)
+        .map(|r| r.min_s)
+        .unwrap_or(f64::NAN)
+}
+
 fn speedup(b: &Bencher, base: &str, new: &str) -> f64 {
     mean_of(b, base) / mean_of(b, new)
 }
@@ -394,6 +402,8 @@ fn main() -> anyhow::Result<()> {
     // sequential round exactly at any shard count.
     let client_counts: &[usize] = if quick { &[16] } else { &[16, 64, 256] };
     let mut round_names: Vec<String> = Vec::new();
+    // Telemetry overhead on the round cell: (min_s off, min_s on).
+    let mut tel_overhead: Option<(f64, f64)> = None;
     {
         let (l, q, c, u) = if quick {
             (48usize, 128usize, 10usize, 32usize)
@@ -493,6 +503,55 @@ fn main() -> anyhow::Result<()> {
             ));
             round_names.push(seq_name);
             round_names.push(shd_name);
+
+            // --- telemetry overhead cells (first size only): the same
+            // sharded round timed with recording disabled vs enabled.
+            // The observe-only contract says the work is identical; the
+            // measured cost is the registry's atomics and clock reads,
+            // gated at <= 3% on the min (the least noise-sensitive
+            // statistic). The pair gets extra iterations so the minima
+            // are real measurements, not single samples.
+            if n == client_counts[0] {
+                use codedfedl::telemetry;
+                let was = telemetry::enabled();
+                let (saved_iters, saved_target) = (b.max_iters, b.target_time_s);
+                b.max_iters = saved_iters.max(30);
+                b.target_time_s = saved_target.max(0.2);
+                let off_name = format!("round n={n} sharded telemetry-off");
+                telemetry::set_enabled(false);
+                b.bench_with_work(&off_name, Some(flops), || {
+                    std::hint::black_box(run_round(shd));
+                });
+                let on_name = format!("round n={n} sharded telemetry-on");
+                telemetry::set_enabled(true);
+                b.bench_with_work(&on_name, Some(flops), || {
+                    std::hint::black_box(run_round(shd));
+                });
+                telemetry::set_enabled(was);
+                b.max_iters = saved_iters;
+                b.target_time_s = saved_target;
+                let (off_min, on_min) = (min_of(&b, &off_name), min_of(&b, &on_name));
+                anyhow::ensure!(
+                    off_min.is_finite() && off_min > 0.0 && on_min.is_finite() && on_min > 0.0,
+                    "telemetry overhead cells were not measured"
+                );
+                anyhow::ensure!(
+                    on_min <= off_min * 1.03,
+                    "telemetry overhead exceeds the 3% gate on the round cell: \
+                     on {on_min:.6}s vs off {off_min:.6}s (x{:.4})",
+                    on_min / off_min
+                );
+                summaries.push((
+                    "telemetry".into(),
+                    format!(
+                        "round n={n} on/off min ratio x{:.4} (gate <= 1.03)",
+                        on_min / off_min
+                    ),
+                ));
+                tel_overhead = Some((off_min, on_min));
+                round_names.push(off_name);
+                round_names.push(on_name);
+            }
         }
     }
 
@@ -533,6 +592,17 @@ fn main() -> anyhow::Result<()> {
             Json::obj(vec![("cell", Json::Str(what.clone())), ("result", Json::Str(line.clone()))])
         })
         .collect();
+    // The measured telemetry on/off cost — always real numbers by this
+    // point (the gate above refuses to proceed on unmeasured cells).
+    let telemetry_json = match tel_overhead {
+        Some((off_min, on_min)) => Json::obj(vec![
+            ("off_min_s", Json::Num(off_min)),
+            ("on_min_s", Json::Num(on_min)),
+            ("ratio", Json::Num(on_min / off_min)),
+            ("gate", Json::Num(1.03)),
+        ]),
+        None => Json::Null,
+    };
     let doc = Json::obj(vec![
         ("bench", Json::Str("kernels".into())),
         ("quick", Json::Bool(quick)),
@@ -542,6 +612,7 @@ fn main() -> anyhow::Result<()> {
             Json::Num(codedfedl::mathx::pool::global().workers() as f64),
         ),
         ("simd", simd_json),
+        ("telemetry_overhead", telemetry_json),
         ("results", Json::Arr(results)),
         ("summary", Json::Arr(summary)),
     ]);

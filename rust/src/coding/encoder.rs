@@ -194,6 +194,7 @@ impl ReencodeCache {
         let l = idx.len();
         let src_key =
             Some((x.data().as_ptr() as usize, x.shape(), y.data().as_ptr() as usize, y.shape()));
+        let before = self.rows_refreshed;
         if self.src != src_key
             || self.idx.len() != l
             || self.x.shape() != (l, x.cols())
@@ -216,6 +217,14 @@ impl ReencodeCache {
             }
         }
         self.calls += 1;
+        // Observe-only cache accounting: rows re-read vs rows the cache
+        // saved this call (a full re-encode re-reads all `l`).
+        if crate::telemetry::enabled() {
+            let reread = (self.rows_refreshed - before) as u64;
+            crate::telemetry::counter("reencode.calls").incr();
+            crate::telemetry::counter("reencode.rows_reread").add(reread);
+            crate::telemetry::counter("reencode.rows_cached").add(l as u64 - reread);
+        }
         Ok(())
     }
 

@@ -114,6 +114,11 @@ impl AdaptiveController {
     /// session's per-round ground-truth feed).
     pub fn observe_delays(&mut self, obs: &[DelayObs]) {
         self.est.observe_all(obs);
+        // Observe-only: the drift gauge reads the estimator, never the
+        // other way round — decisions see identical state either way.
+        if crate::telemetry::enabled() {
+            crate::telemetry::gauge("control.estimator_drift").set(self.est.drift());
+        }
     }
 
     /// Bit-exact JSON encoding of the controller's *mutable* state for

@@ -117,6 +117,24 @@ impl RateEstimator {
         self.base.len()
     }
 
+    /// Mean relative compute-rate drift of the estimates away from the
+    /// assumed statistics: `mean_j |mu_est(j) - mu_base(j)| / mu_base(j)`.
+    /// 0 = the network still looks exactly as assumed. Telemetry-only
+    /// (feeds the `control.estimator_drift` gauge); never consulted by a
+    /// control decision.
+    pub fn drift(&self) -> f64 {
+        if self.base.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = (0..self.base.len())
+            .map(|j| {
+                let b = self.base[j].mu;
+                (self.model(j).mu - b).abs() / b.max(1e-12)
+            })
+            .sum();
+        sum / self.base.len() as f64
+    }
+
     /// Bit-exact JSON encoding of the *mutable* estimator state (`cpp`,
     /// `comm`, `seen`) for session checkpoints. `base` and `ewma` are
     /// construction facts the restored session re-derives from its
@@ -223,6 +241,13 @@ mod tests {
         let m = est.model(0);
         assert!(m.mu > 1.5 * base.mu, "mu did not track the speedup: {}", m.mu);
         assert!(m.tau < 0.75 * base.tau, "tau did not track the speedup: {}", m.tau);
+        assert!(est.drift() > 0.5, "drift gauge should see the 2x mu move: {}", est.drift());
+    }
+
+    #[test]
+    fn drift_is_zero_before_any_observation() {
+        let est = RateEstimator::new(&[model(), ClientModel { mu: 40.0, ..model() }], 0.5);
+        assert!(est.drift() < 1e-9, "seeded estimates equal base: {}", est.drift());
     }
 
     #[test]

@@ -187,9 +187,11 @@ impl HierTrainer {
         // The test set is the only materialized dataset (m_test rows —
         // evaluation needs all of it every time anyway).
         let test = source.test_dataset();
+        let embed_span = crate::telemetry::span("phase.embed");
         let test_emb = Arc::new(
             rff.embed(backend.as_ref(), &test.x, p.chunk).context("embedding test set")?,
         );
+        drop(embed_span);
         let test_idx: Vec<usize> = (0..test.len()).collect();
         let prep_test = backend.prepare_gather_chunks(&test_emb, &test_idx, p.chunk)?;
         let ones_mask = backend.prepare_col(&vec![1.0f32; p.l])?;
@@ -251,11 +253,15 @@ impl HierTrainer {
             self.slice_into(s, j, &mut idx);
         }
         let raw = self.source.train_rows(&idx);
+        // Phase note: the hier engine embeds on demand, so `phase.embed`
+        // time here nests inside the enclosing encode/gradient phase.
+        let embed_span = crate::telemetry::span("phase.embed");
         let emb = self
             .setup
             .rff
             .embed(self.backend.as_ref(), &raw, p.chunk)
             .context("embedding on-demand client block")?;
+        drop(embed_span);
         let mut blocks = Vec::with_capacity(chunk.len());
         for i in 0..chunk.len() {
             let rows: Vec<usize> = (i * p.l..(i + 1) * p.l).collect();
@@ -287,6 +293,7 @@ impl HierTrainer {
         active: &[usize],
     ) -> Result<Vec<Vec<(PreparedMatrix, PreparedMatrix, PreparedMatrix)>>> {
         let plan = self.setup.plan.clone().expect("parity encode requires a coded plan");
+        let _encode_span = crate::telemetry::span("phase.encode");
         let p = self.cfg.profile.clone();
         let n = self.cfg.n_clients;
         let steps = self.cfg.steps_per_epoch();
@@ -429,14 +436,31 @@ impl HierTrainer {
             None => &self.setup.population.clients,
         };
         let beta_p = self.backend.prepare_shared(&self.beta)?;
+        // Observe-only round telemetry (host clocks + delay histograms);
+        // mirrors the flat engine's instrumentation.
+        let tel = crate::telemetry::enabled();
 
         match &self.setup.plan {
             None => {
                 let mut t_max = 0.0f64;
+                let sample_span = crate::telemetry::span("phase.delay_sample");
                 for &j in active {
                     let t = models[j].sample(p.l, &mut self.delay_rng);
+                    if tel {
+                        crate::telemetry::histogram(
+                            "delay.realized_s",
+                            crate::telemetry::seconds_edges(),
+                        )
+                        .record(t.total());
+                        crate::telemetry::histogram(
+                            "delay.assumed_s",
+                            crate::telemetry::seconds_edges(),
+                        )
+                        .record(models[j].mean_delay(p.l));
+                    }
                     t_max = t_max.max(t.total());
                 }
+                drop(sample_span);
                 // Aborted clients' gradients are simply lost (full-batch
                 // divisor kept) — same semantics as the flat uncoded arm.
                 let folded: Vec<usize> = active
@@ -445,6 +469,7 @@ impl HierTrainer {
                     .filter(|j| aborts.binary_search(j).is_err())
                     .collect();
                 aborted = active.len() - folded.len();
+                let _grad_span = crate::telemetry::span("phase.gradient");
                 let cells = Self::partition_cells(&self.topo, &folded);
                 for members in &cells {
                     for chunk in members.chunks(CLIENT_BATCH) {
@@ -472,12 +497,25 @@ impl HierTrainer {
                 // Arrivals are decided first over the global roster —
                 // the delay stream must not depend on the cell split.
                 let mut arrived = Vec::with_capacity(active.len());
+                let sample_span = crate::telemetry::span("phase.delay_sample");
                 for &j in active {
                     let load = plan.loads[j];
                     if load == 0 {
                         continue;
                     }
                     let t = models[j].sample(load, &mut self.delay_rng);
+                    if tel {
+                        crate::telemetry::histogram(
+                            "delay.realized_s",
+                            crate::telemetry::seconds_edges(),
+                        )
+                        .record(t.total());
+                        crate::telemetry::histogram(
+                            "delay.assumed_s",
+                            crate::telemetry::seconds_edges(),
+                        )
+                        .record(models[j].mean_delay(load));
+                    }
                     if t.total() > plan.deadline {
                         stragglers.push(j);
                     } else if aborts.binary_search(&j).is_ok() {
@@ -487,8 +525,22 @@ impl HierTrainer {
                         arrived.push(j);
                     }
                 }
+                drop(sample_span);
+                if tel {
+                    let arrived_rows: usize = arrived.iter().map(|&j| plan.loads[j]).sum();
+                    let margin = (arrived_rows + plan.u) as f64 - m_batch as f64;
+                    crate::telemetry::histogram(
+                        "round.decode_margin_rows",
+                        crate::telemetry::count_edges(),
+                    )
+                    .record(margin.max(0.0));
+                    if margin < 0.0 {
+                        crate::telemetry::counter("round.decode_shortfalls").incr();
+                    }
+                }
                 let cells = Self::partition_cells(&self.topo, &arrived);
                 for (cell, members) in cells.iter().enumerate() {
+                    let grad_span = crate::telemetry::span("phase.gradient");
                     for chunk in members.chunks(CLIENT_BATCH) {
                         let blocks = self.materialize_chunk(s, chunk)?;
                         self.rows_streamed += chunk.len() * p.l;
@@ -507,18 +559,26 @@ impl HierTrainer {
                             .collect();
                         self.backend.grad_cell_p(&ops, &beta_p, &mut grad_sum, self.par)?;
                     }
+                    drop(grad_span);
                     // The cell's composite parity gradient closes its
                     // sub-round — added even when u == 0 (a zero matrix),
                     // matching the flat round's unconditional server add.
+                    let decode_span = crate::telemetry::span("phase.decode_fold");
                     let (px, py, pm) = &self.parity[s][cell];
                     let gc = self.backend.grad_server_p(px, py, &beta_p, pm)?;
                     grad_sum.axpy_inplace(1.0, &gc);
+                    drop(decode_span);
                 }
                 arrivals = arrived.len();
                 step_time = plan.deadline;
             }
         }
 
+        if tel {
+            crate::telemetry::counter("round.stragglers").add(stragglers.len() as u64);
+            crate::telemetry::histogram("round.arrival_frac", crate::telemetry::unit_edges())
+                .record(arrivals as f64 / active.len().max(1) as f64);
+        }
         // Coded decode renormalization over the rows actually folded —
         // identical to the flat engine (no aborts → exactly m_batch).
         let m_eff = if withheld_rows > 0 {

@@ -222,10 +222,12 @@ impl SharedData {
         let p = &cfg.profile;
         let rff = from_seed(&mut rff_rng, p.d, p.q, cfg.train.sigma);
         crate::log_info!("embedding {} train + {} test rows (q={})", train.len(), test.len(), p.q);
+        let embed_span = crate::telemetry::span("phase.embed");
         let train_emb =
             Arc::new(rff.embed(backend, &train.x, p.chunk).context("embedding training set")?);
         let test_emb =
             Arc::new(rff.embed(backend, &test.x, p.chunk).context("embedding test set")?);
+        drop(embed_span);
         // The label matrix is shared (zero-copy) with every prepared
         // gather, so it is wrapped once and never row-copied again.
         let train_y = Arc::new(train.y.clone());
@@ -475,6 +477,7 @@ impl Trainer {
         //    intermediate ever exists on the native path.
         let mut masks = vec![vec![Vec::new(); cfg.n_clients]; steps];
         let mut parity = Vec::new();
+        let encode_span = crate::telemetry::span("phase.encode");
         match &plan {
             None => {
                 // Allocator-bound, no arithmetic — not worth a pool job.
@@ -591,6 +594,7 @@ impl Trainer {
                 }
             }
         }
+        drop(encode_span);
 
         // 5. §Perf prepared-operand cache: every operand that is invariant
         //    across epochs is prepared once. Client slices and eval
@@ -846,6 +850,9 @@ impl Trainer {
         // (§Perf); on the native backend this is a refcount bump, on XLA
         // a single literal build.
         let beta_p = self.backend.prepare_shared(&self.beta)?;
+        // Observe-only round telemetry: host clocks + realized/assumed
+        // delay distributions. Never read back into any computation.
+        let tel = crate::telemetry::enabled();
 
         match &self.setup.plan {
             None => {
@@ -856,6 +863,7 @@ impl Trainer {
                 // ascending client order — bitwise the per-client
                 // sequential loop.
                 let mut t_max = 0.0f64;
+                let sample_span = crate::telemetry::span("phase.delay_sample");
                 for &j in active {
                     let t = models[j].sample(p.l, &mut self.delay_rng);
                     if record {
@@ -866,8 +874,21 @@ impl Trainer {
                             comm_s: t.comm_s(),
                         });
                     }
+                    if tel {
+                        crate::telemetry::histogram(
+                            "delay.realized_s",
+                            crate::telemetry::seconds_edges(),
+                        )
+                        .record(t.total());
+                        crate::telemetry::histogram(
+                            "delay.assumed_s",
+                            crate::telemetry::seconds_edges(),
+                        )
+                        .record(models[j].mean_delay(p.l));
+                    }
                     t_max = t_max.max(t.total());
                 }
+                drop(sample_span);
                 // Chunked so the resident per-client gradient set stays
                 // O(CLIENT_BATCH * q * c) at any population size; the
                 // ascending-client sum order is unchanged. An injected
@@ -882,6 +903,7 @@ impl Trainer {
                     .filter(|j| aborts.binary_search(j).is_err())
                     .collect();
                 aborted = active.len() - folded.len();
+                let grad_span = crate::telemetry::span("phase.gradient");
                 for chunk in folded.chunks(CLIENT_BATCH) {
                     let clients: Vec<GradClientOperands<'_>> = chunk
                         .iter()
@@ -892,6 +914,7 @@ impl Trainer {
                         .collect();
                     self.backend.grad_cell_p(&clients, &beta_p, &mut grad_sum, self.par)?;
                 }
+                drop(grad_span);
                 arrivals = folded.len();
                 step_time = t_max;
             }
@@ -906,6 +929,7 @@ impl Trainer {
                 let plan: &AllocationPlan = ctx.and_then(|c| c.plan).unwrap_or(setup_plan);
                 let step_masks: Option<&[PreparedMatrix]> = ctx.and_then(|c| c.masks);
                 let mut arrived = Vec::with_capacity(active.len());
+                let sample_span = crate::telemetry::span("phase.delay_sample");
                 for &j in active {
                     let load = plan.loads[j];
                     if load == 0 {
@@ -920,6 +944,18 @@ impl Trainer {
                             comm_s: t.comm_s(),
                         });
                     }
+                    if tel {
+                        crate::telemetry::histogram(
+                            "delay.realized_s",
+                            crate::telemetry::seconds_edges(),
+                        )
+                        .record(t.total());
+                        crate::telemetry::histogram(
+                            "delay.assumed_s",
+                            crate::telemetry::seconds_edges(),
+                        )
+                        .record(models[j].mean_delay(load));
+                    }
                     if t.total() > plan.deadline {
                         stragglers.push(j);
                     } else if aborts.binary_search(&j).is_ok() {
@@ -929,6 +965,22 @@ impl Trainer {
                         arrived.push(j);
                     }
                 }
+                drop(sample_span);
+                if tel {
+                    // Decode margin in rows: what arrived plus the parity
+                    // block, against the m_batch rows the decode needs.
+                    let arrived_rows: usize = arrived.iter().map(|&j| plan.loads[j]).sum();
+                    let margin = (arrived_rows + plan.u) as f64 - m_batch as f64;
+                    crate::telemetry::histogram(
+                        "round.decode_margin_rows",
+                        crate::telemetry::count_edges(),
+                    )
+                    .record(margin.max(0.0));
+                    if margin < 0.0 {
+                        crate::telemetry::counter("round.decode_shortfalls").incr();
+                    }
+                }
+                let grad_span = crate::telemetry::span("phase.gradient");
                 for chunk in arrived.chunks(CLIENT_BATCH) {
                     let clients: Vec<GradClientOperands<'_>> = chunk
                         .iter()
@@ -943,7 +995,9 @@ impl Trainer {
                         .collect();
                     self.backend.grad_cell_p(&clients, &beta_p, &mut grad_sum, self.par)?;
                 }
+                drop(grad_span);
                 arrivals = arrived.len();
+                let decode_span = crate::telemetry::span("phase.decode_fold");
                 let (px, py, pm) = match ctx.and_then(|c| c.parity) {
                     Some((px, py, pm)) => (px, py, pm),
                     None => {
@@ -953,8 +1007,14 @@ impl Trainer {
                 };
                 let gc = self.backend.grad_server_p(px, py, &beta_p, pm)?;
                 grad_sum.axpy_inplace(1.0, &gc);
+                drop(decode_span);
                 step_time = plan.deadline;
             }
+        }
+        if tel {
+            crate::telemetry::counter("round.stragglers").add(stragglers.len() as u64);
+            crate::telemetry::histogram("round.arrival_frac", crate::telemetry::unit_edges())
+                .record(arrivals as f64 / active.len().max(1) as f64);
         }
 
         // Graceful degradation under injected aborts: the coded decode

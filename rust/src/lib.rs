@@ -207,6 +207,32 @@
 //! [`benchx::sweep::SweepRunner`], whose `session` method is the
 //! scenario-aware entry.
 //!
+//! ## Observability
+//!
+//! The [`telemetry`] subsystem is the crate's *host-side* lens: a
+//! process-global registry of counters, gauges and fixed-bucket
+//! histograms, fed by phase-timer spans in every hot layer — pool job
+//! queueing ([`mathx::pool`]), per-round training phases
+//! (embed/encode/gradient/decode-fold in [`fl`]), straggler and
+//! realized-vs-assumed delay distributions, parity re-encode cache
+//! efficiency ([`coding`]), session round wall-clock ([`scenario`]) and
+//! per-RPC serve latency ([`serve`]). One snapshot encoder
+//! ([`telemetry::MetricsSnapshot::to_json`]) backs all three exports:
+//! the `metrics` RPC of `codedfedl serve`, the periodic
+//! `"type":"metrics"` event in observer streams
+//! (`scenario.metrics_every`), and the `--metrics-out` end-of-run dump.
+//! Telemetry is **observe-only by construction**: it reads host clocks
+//! and atomic tallies but never feeds simulation state, RNG draws, or
+//! control decisions, so event streams and final models are bitwise
+//! identical with telemetry on or off (regression-gated in
+//! `tests/telemetry.rs`), and the measured overhead is a bench cell,
+//! not an assumption. `CODEDFEDL_TELEMETRY=off` disables recording;
+//! `CODEDFEDL_LOG={off,error,warn,info,debug,trace}` sets the console
+//! log level ([`util::logging`]). The [`metrics`] module is distinct on
+//! purpose: it holds the *paper-facing* simulated-time results
+//! ([`metrics::TrainReport`]), while [`telemetry`] holds host-side
+//! execution diagnostics.
+//!
 //! The offline crate universe contains only `xla` + `anyhow`, so this crate
 //! carries its own substrates: PRNG and distributions ([`mathx`]), JSON and
 //! CSV ([`util`]), a CLI parser ([`cli`]), a bench harness ([`benchx`]) and
@@ -227,6 +253,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod serve;
 pub mod simnet;
+pub mod telemetry;
 pub mod testx;
 pub mod util;
 

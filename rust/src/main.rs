@@ -34,7 +34,38 @@ fn common_flags() -> Vec<codedfedl::cli::FlagSpec> {
         flag("out", "write the accuracy curve CSV here", None),
         flag("backend", "compute backend registry name: native|xla|auto", None),
         switch("native", "shorthand for --backend native (no PJRT/artifacts)"),
+        flag(
+            "metrics-out",
+            "write the end-of-run host-telemetry snapshot (canonical metrics doc) here",
+            None,
+        ),
     ]
+}
+
+/// ` phases=[...]` done-line suffix: the top-3 host-time phases from the
+/// telemetry snapshot, or empty when telemetry is off / nothing recorded.
+fn phase_summary() -> String {
+    if !codedfedl::telemetry::enabled() {
+        return String::new();
+    }
+    let top = codedfedl::telemetry::snapshot().top_phases(3);
+    if top.is_empty() {
+        return String::new();
+    }
+    let items: Vec<String> = top.iter().map(|(n, s)| format!("{n}:{s:.2}s")).collect();
+    format!(" phases=[{}]", items.join(","))
+}
+
+/// Honor `--metrics-out`: dump the process-wide telemetry snapshot as the
+/// canonical metrics doc (same encoder as the `metrics` RPC and the
+/// periodic `"type":"metrics"` stream event).
+fn write_metrics_out(args: &codedfedl::cli::Args) -> Result<()> {
+    if let Some(path) = args.get("metrics-out") {
+        let doc = codedfedl::telemetry::snapshot().to_json();
+        std::fs::write(path, doc.to_string() + "\n")?;
+        println!("telemetry snapshot written to {path}");
+    }
+    Ok(())
 }
 
 /// Apply the comma-separated `--set key=value` overrides through `set`
@@ -100,18 +131,21 @@ fn cmd_train(args: &codedfedl::cli::Args) -> Result<()> {
     );
     let report = session.run()?;
     println!(
-        "done: final_acc={:.4} best_acc={:.4} sim_time={:.1}s host_time={:.1}s mean_arrivals={:.3}",
+        "done: final_acc={:.4} best_acc={:.4} sim_time={:.1}s host_time={:.1}s \
+         mean_arrivals={:.3}{}",
         report.final_accuracy(),
         report.best_accuracy(),
         report.total_sim_time_s,
         report.host_time_s,
-        report.mean_arrivals
+        report.mean_arrivals,
+        phase_summary(),
     );
     if let Some(path) = args.get("out") {
         report.write_csv(path)?;
         println!("curve written to {path}");
     }
     println!("{}", report.to_json().to_string());
+    write_metrics_out(args)?;
     Ok(())
 }
 
@@ -156,6 +190,11 @@ fn scenario_flags() -> Vec<codedfedl::cli::FlagSpec> {
              (deterministic; spec key scenario.faults)",
             None,
         ),
+        flag(
+            "metrics-every",
+            "emit a \"type\":\"metrics\" telemetry event every N global steps (0 = off)",
+            None,
+        ),
         flag("spec", "scenario spec file (key = value, scenario.* + config keys)", None),
     ]);
     flags
@@ -196,6 +235,7 @@ fn cmd_scenario(args: &codedfedl::cli::Args) -> Result<()> {
         ("scenario.hierarchical", "hierarchical"),
         ("scenario.adaptive", "adaptive"),
         ("scenario.faults", "faults"),
+        ("scenario.metrics_every", "metrics-every"),
     ] {
         if let Some(v) = args.get(flag_name) {
             b.set(key, v)?;
@@ -245,7 +285,7 @@ fn cmd_scenario(args: &codedfedl::cli::Args) -> Result<()> {
     println!(
         "done: steps={} sim_time={:.1}s host_time={:.2}s final_acc={:.4} \
          mean_arrival_frac={:.3} active={} replans={} parity_reencodes={} \
-         (cache: {} encodes, {} rows re-read)",
+         (cache: {} encodes, {} rows re-read){}",
         summary.steps,
         summary.total_sim_time_s,
         summary.host_time_s,
@@ -256,6 +296,7 @@ fn cmd_scenario(args: &codedfedl::cli::Args) -> Result<()> {
         reencodes,
         cache_calls,
         rows_reread,
+        phase_summary(),
     );
     if summary.fault_aborts + summary.telemetry_drops + summary.observer_errors > 0 {
         println!(
@@ -263,6 +304,7 @@ fn cmd_scenario(args: &codedfedl::cli::Args) -> Result<()> {
             summary.fault_aborts, summary.telemetry_drops, summary.observer_errors
         );
     }
+    write_metrics_out(args)?;
     Ok(())
 }
 
@@ -448,13 +490,19 @@ fn cmd_serve(args: &codedfedl::cli::Args) -> Result<()> {
     };
     install_sigint_handler();
     let server = Server::bind(&cfg)?;
-    println!(
-        "codedfedl serve: listening on 127.0.0.1:{} (checkpoints -> {}/)",
-        server.port(),
-        cfg.checkpoint_dir
-    );
+    // The banner respects `CODEDFEDL_LOG=off` (scripted clients discover
+    // the port via `--port` or the `status` RPC, not by scraping stdout).
+    if logging::enabled(logging::Level::Info) {
+        println!(
+            "codedfedl serve: listening on 127.0.0.1:{} (checkpoints -> {}/)",
+            server.port(),
+            cfg.checkpoint_dir
+        );
+    }
     server.run()?;
-    println!("codedfedl serve: drained and shut down cleanly");
+    if logging::enabled(logging::Level::Info) {
+        println!("codedfedl serve: drained and shut down cleanly");
+    }
     Ok(())
 }
 

@@ -206,12 +206,29 @@ impl WorkerPool {
         T: Send,
         F: Fn(T) + Sync,
     {
+        // Telemetry below is observe-only (host clocks + counters): it
+        // never influences scheduling, task order, or results.
+        let tel = crate::telemetry::enabled();
         if tasks.len() <= 1 || self.workers == 0 {
+            if tel {
+                crate::telemetry::counter("pool.jobs_inline").incr();
+                crate::telemetry::counter("pool.tasks").add(tasks.len() as u64);
+            }
+            let _run = if tel {
+                crate::telemetry::span("pool.job_run_s")
+            } else {
+                crate::telemetry::Span::noop()
+            };
             for task in tasks {
                 kernel(task);
             }
             return;
         }
+        if tel {
+            crate::telemetry::counter("pool.jobs").incr();
+            crate::telemetry::counter("pool.tasks").add(tasks.len() as u64);
+        }
+        let t0 = tel.then(std::time::Instant::now);
         tasks.reverse(); // pop() claims tasks in submission order
         let job = Job {
             tasks: Mutex::new(tasks),
@@ -237,6 +254,18 @@ impl WorkerPool {
         // The caller is a worker for its own job.
         job.run_until_drained();
 
+        // Occupancy at caller-drain time: workers still attached to this
+        // job when its own caller ran out of tasks to claim.
+        let drained_at = if let Some(t0) = t0 {
+            crate::telemetry::histogram("pool.job_attached", crate::telemetry::count_edges())
+                .record(job.attached() as f64);
+            crate::telemetry::histogram("pool.job_run_s", crate::telemetry::seconds_edges())
+                .record(t0.elapsed().as_secs_f64());
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
+
         {
             let mut st = lock(&self.shared.state);
             retract(&mut st.jobs, erased); // stop further attaches
@@ -247,6 +276,10 @@ impl WorkerPool {
                     .wait(st)
                     .unwrap_or_else(|e| e.into_inner());
             }
+        }
+        if let Some(d) = drained_at {
+            crate::telemetry::histogram("pool.job_tail_wait_s", crate::telemetry::seconds_edges())
+                .record(d.elapsed().as_secs_f64());
         }
 
         if let Some(payload) = lock(&job.panic).take() {

@@ -251,7 +251,7 @@ fn init_from_env() -> SimdIsa {
             // Warn once (a benign init race may print twice) and fall
             // back to detection rather than aborting a long experiment.
             if !WARNED.swap(true, Ordering::Relaxed) {
-                eprintln!(
+                crate::log_warn!(
                     "CODEDFEDL_SIMD={raw}: {} — falling back to auto ({})",
                     if parsed.is_some() { "not available on this host" } else { "unknown value" },
                     detect_best().name()

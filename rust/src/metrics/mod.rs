@@ -1,6 +1,14 @@
 //! Training metrics: per-evaluation records, time-to-accuracy extraction
 //! (the paper's Table 1 quantity), and CSV/JSON emission for the figure
 //! benches.
+//!
+//! These are the **paper-facing results** — accuracy and *simulated*
+//! time, deterministic functions of the seed. Host-side diagnostics —
+//! phase timers, straggler/delay histograms, RPC latencies, all
+//! wall-clock derived and non-deterministic — live in
+//! [`crate::telemetry`] instead. The split is intentional: nothing in
+//! this module may depend on host clocks, and nothing in `telemetry`
+//! may feed back into training.
 
 use anyhow::Result;
 

@@ -69,6 +69,12 @@ pub struct Scenario {
     /// fork so faulted runs replay bitwise. `none` (default) never
     /// touches the fault stream.
     pub faults: FaultPlan,
+    /// Emit a `"type":"metrics"` telemetry-snapshot event to the
+    /// observer every this-many global steps (0 = off, the default).
+    /// Host-clock derived and observe-only: the event rides the stream
+    /// but never enters the deterministic [`crate::scenario::EventLog`],
+    /// so enabling it cannot perturb replay comparisons.
+    pub metrics_every: usize,
     /// The `key = value` pairs that reproduce this scenario through
     /// [`ScenarioBuilder::from_spec_pairs`]: the base preset
     /// (`("preset", name)`) followed by every override in application
@@ -99,6 +105,7 @@ impl Scenario {
             adaptive_ewma: DEFAULT_ADAPTIVE_EWMA,
             hierarchical: false,
             faults: FaultPlan::none(),
+            metrics_every: 0,
             spec: Vec::new(),
             replayable: false,
         }
@@ -178,6 +185,7 @@ pub struct ScenarioBuilder {
     adaptive_ewma: f64,
     hierarchical: bool,
     faults: FaultPlan,
+    metrics_every: usize,
     /// Replay journal: the base preset + every recorded override, in
     /// application order (see [`Scenario::spec`]).
     spec: Vec<(String, String)>,
@@ -214,6 +222,7 @@ impl ScenarioBuilder {
             adaptive_ewma: DEFAULT_ADAPTIVE_EWMA,
             hierarchical: false,
             faults: FaultPlan::none(),
+            metrics_every: 0,
             spec: Vec::new(),
             replayable: false,
         }
@@ -447,6 +456,17 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Telemetry-snapshot event cadence (spec key
+    /// `scenario.metrics_every`; 0 = off, the default): every this-many
+    /// global steps the session emits the current
+    /// [`crate::telemetry::snapshot`] as a `"type":"metrics"` stream
+    /// event. Observe-only — never perturbs the deterministic streams.
+    pub fn metrics_every(mut self, every: usize) -> ScenarioBuilder {
+        self.record("scenario.metrics_every", every.to_string());
+        self.metrics_every = every;
+        self
+    }
+
     /// Apply one `key = value` override. Scenario keys are prefixed
     /// `scenario.`; everything else forwards to
     /// [`ExperimentConfig::set`]. Applied pairs are recorded in the
@@ -465,6 +485,7 @@ impl ScenarioBuilder {
             "scenario.adaptive.ewma" => self.adaptive_ewma = v.parse()?,
             "scenario.hierarchical" => self.hierarchical = v.parse()?,
             "scenario.faults" => self.faults = FaultPlan::parse(v)?,
+            "scenario.metrics_every" => self.metrics_every = v.parse()?,
             other => self.cfg.set(other, value)?,
         }
         self.record(key.trim(), v.to_string());
@@ -507,6 +528,7 @@ impl ScenarioBuilder {
             adaptive_ewma: self.adaptive_ewma,
             hierarchical: self.hierarchical,
             faults: self.faults,
+            metrics_every: self.metrics_every,
             spec: self.spec,
             replayable: self.replayable,
         };
@@ -644,6 +666,21 @@ mod tests {
         assert!(bad_ewma.compile().is_err());
         let bad_off = ScenarioBuilder::from_preset("tiny").unwrap().adaptive_ewma(0.0);
         assert!(bad_off.compile().is_err());
+    }
+
+    #[test]
+    fn metrics_every_spec_key_parses_and_defaults_off() {
+        let d = ScenarioBuilder::from_preset("tiny").unwrap().compile().unwrap();
+        assert_eq!(d.metrics_every, 0, "metrics events are opt-in");
+        let mut b = ScenarioBuilder::from_preset("tiny").unwrap();
+        b.set("scenario.metrics_every", "5").unwrap();
+        let s = b.compile().unwrap();
+        assert_eq!(s.metrics_every, 5);
+        // Observe-only: the knob never flips a scenario to dynamic.
+        assert!(s.is_static());
+        // And it rides the replay journal like every other knob.
+        let s2 = ScenarioBuilder::from_spec_pairs(&s.spec).unwrap().compile().unwrap();
+        assert_eq!(s2.metrics_every, 5);
     }
 
     #[test]

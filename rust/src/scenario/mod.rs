@@ -138,6 +138,28 @@
 //! sessions concurrently over a line-delimited JSON protocol, streaming
 //! each one's observer events to subscribers and exposing
 //! checkpoint/resume/fork as RPCs.
+//!
+//! # Observability
+//!
+//! Sessions feed the host-side [`crate::telemetry`] registry: each
+//! engine round records a `session.round_s` histogram sample and every
+//! [`Session::snapshot`] a `session.checkpoint_s` span, on top of the
+//! per-phase spans the engines record themselves (`phase.embed`,
+//! `phase.encode`, `phase.gradient`, `phase.decode_fold`, ...). The
+//! accumulated host time is surfaced as [`RunCursor::host_time_s`] and
+//! in [`SessionSummary`].
+//!
+//! With `scenario.metrics_every = N` (spec key, `--metrics-every`, or
+//! [`ScenarioBuilder::metrics_every`]; default 0 = off), the session
+//! additionally emits a periodic `"type": "metrics"` snapshot document
+//! every `N` global steps through [`RoundObserver::on_metrics`] —
+//! encoded once by [`crate::telemetry::MetricsSnapshot::to_json`] and
+//! forwarded verbatim by [`JsonlObserver`] and the serve stream fan.
+//! Telemetry is strictly observe-only: it reads host clocks and never
+//! feeds the simulation, so the deterministic event stream and the
+//! final model are bitwise identical with telemetry on or off
+//! (`tests/telemetry.rs`), and [`EventLog`] ignores metrics docs by
+//! design.
 
 pub mod builder;
 pub mod observer;

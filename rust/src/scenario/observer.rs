@@ -112,6 +112,16 @@ pub trait RoundObserver {
     fn on_control(&mut self, _ev: &ControlEvent) -> Result<()> {
         Ok(())
     }
+    /// Periodic host-telemetry snapshot (`"type": "metrics"`), emitted
+    /// by sessions running with `scenario.metrics_every > 0`. The doc is
+    /// already encoded — [`crate::telemetry::MetricsSnapshot::to_json`]
+    /// is the canonical encoder, shared with the `metrics` RPC and
+    /// `--metrics-out` — so sinks forward it verbatim. Host-clock
+    /// derived and therefore *not* part of the deterministic event
+    /// stream: [`EventLog`] ignores it by design.
+    fn on_metrics(&mut self, _doc: &Json) -> Result<()> {
+        Ok(())
+    }
     /// Events this observer failed to deliver but structurally absorbed
     /// (dropped after retries, or swallowed per-sink by a fanout). Plain
     /// observers never absorb errors, so the default is zero; the
@@ -323,38 +333,57 @@ impl<W: std::io::Write> RoundObserver for JsonlObserver<W> {
     fn on_control(&mut self, ev: &ControlEvent) -> Result<()> {
         self.emit(control_doc(ev))
     }
+
+    fn on_metrics(&mut self, doc: &Json) -> Result<()> {
+        self.emit(doc.clone())
+    }
 }
 
 /// Prints evaluation checkpoints and churn transitions to stdout (the
-/// CLI's default progress view).
+/// CLI's default progress view). Honors the global log level:
+/// `CODEDFEDL_LOG=off` silences it entirely (the lines are progress
+/// chatter, not results — the done-line and any `--out` stream carry
+/// the actual outputs).
 #[derive(Default)]
 pub struct ConsoleObserver;
 
+impl ConsoleObserver {
+    fn chatty() -> bool {
+        crate::util::logging::enabled(crate::util::logging::Level::Info)
+    }
+}
+
 impl RoundObserver for ConsoleObserver {
     fn on_eval(&mut self, ev: &EvalRecord) -> Result<()> {
-        println!(
-            "  epoch {:>4} step {:>6} sim {:>10.1}s  acc {:.4}  loss {:.5}",
-            ev.epoch, ev.step, ev.sim_time_s, ev.accuracy, ev.loss
-        );
+        if ConsoleObserver::chatty() {
+            println!(
+                "  epoch {:>4} step {:>6} sim {:>10.1}s  acc {:.4}  loss {:.5}",
+                ev.epoch, ev.step, ev.sim_time_s, ev.accuracy, ev.loss
+            );
+        }
         Ok(())
     }
 
     fn on_churn(&mut self, ev: &ChurnEvent) -> Result<()> {
-        println!(
-            "  epoch {:>4} churn: +{} -{} -> {} active",
-            ev.epoch,
-            ev.joined.len(),
-            ev.left.len(),
-            ev.active
-        );
+        if ConsoleObserver::chatty() {
+            println!(
+                "  epoch {:>4} churn: +{} -{} -> {} active",
+                ev.epoch,
+                ev.joined.len(),
+                ev.left.len(),
+                ev.active
+            );
+        }
         Ok(())
     }
 
     fn on_control(&mut self, ev: &ControlEvent) -> Result<()> {
-        println!(
-            "  epoch {:>4} control: {} re-plan #{} (return ratio {:.3}) t* {:.3}s -> {:.3}s",
-            ev.epoch, ev.reason, ev.replans, ev.ratio, ev.prev_deadline_s, ev.deadline_s
-        );
+        if ConsoleObserver::chatty() {
+            println!(
+                "  epoch {:>4} control: {} re-plan #{} (return ratio {:.3}) t* {:.3}s -> {:.3}s",
+                ev.epoch, ev.reason, ev.replans, ev.ratio, ev.prev_deadline_s, ev.deadline_s
+            );
+        }
         Ok(())
     }
 }
@@ -495,6 +524,10 @@ impl RoundObserver for Fanout<'_> {
         self.dispatch(|o| o.on_control(ev))
     }
 
+    fn on_metrics(&mut self, doc: &Json) -> Result<()> {
+        self.dispatch(|o| o.on_metrics(doc))
+    }
+
     fn error_count(&self) -> usize {
         let absorbed: usize = self.errors.iter().sum();
         let nested: usize = self.observers.iter().map(|o| o.error_count()).sum();
@@ -563,6 +596,10 @@ impl<O: RoundObserver> RoundObserver for RetryObserver<O> {
 
     fn on_control(&mut self, ev: &ControlEvent) -> Result<()> {
         self.guard(|o| o.on_control(ev))
+    }
+
+    fn on_metrics(&mut self, doc: &Json) -> Result<()> {
+        self.guard(|o| o.on_metrics(doc))
     }
 
     fn error_count(&self) -> usize {
@@ -692,6 +729,30 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines[0], round_doc(&r).to_string());
         assert_eq!(lines[1], control_doc(&c).to_string());
+    }
+
+    #[test]
+    fn metrics_docs_stream_verbatim_and_skip_the_event_log() {
+        // A metrics doc rides the jsonl stream exactly as encoded, but
+        // never enters the deterministic EventLog (host-clock derived).
+        let doc = Json::obj(vec![
+            ("type", Json::Str("metrics".into())),
+            ("counters", Json::obj(vec![("pool.jobs", Json::Num(3.0))])),
+        ]);
+        let mut obs = JsonlObserver::new(Vec::<u8>::new());
+        obs.on_metrics(&doc).unwrap();
+        let text = String::from_utf8(obs.finish().unwrap()).unwrap();
+        assert_eq!(text.lines().next().unwrap(), doc.to_string());
+        let mut log = EventLog::new();
+        log.on_metrics(&doc).unwrap();
+        assert!(log.lines.is_empty(), "EventLog must ignore metrics docs");
+        // Fanout + retry forward it like any other event.
+        let mut sink = JsonlObserver::new(Vec::<u8>::new());
+        {
+            let mut fan = Fanout::new(vec![&mut sink]);
+            fan.on_metrics(&doc).unwrap();
+        }
+        assert_eq!(sink.events(), 1);
     }
 
     #[test]

@@ -564,6 +564,8 @@ impl Session {
         let rates_static =
             self.scenario.compute_rates.is_static() && self.scenario.link_rates.is_static();
         let faults = self.scenario.faults.clone();
+        let metrics_every = self.scenario.metrics_every;
+        let tel = crate::telemetry::enabled();
         let mut executed = 0usize;
 
         while !cur.done && executed < max_rounds {
@@ -660,6 +662,7 @@ impl Session {
                 // faults-off plan returns instantly without drawing).
                 let round_idx = (epoch * steps + s) as u64;
                 let abort_set = faults.round_aborts(&self.fault_root, round_idx, &active);
+                let round_t0 = tel.then(Instant::now);
                 let out = match &mut self.engine {
                     // The hierarchical engine consumes the roster and
                     // rate models directly — its parity is per cell, so
@@ -689,6 +692,13 @@ impl Session {
                         trainer.step_round(s, lr, lam, m_round, Some(&ctx))?
                     }
                 };
+                if let Some(t0) = round_t0 {
+                    crate::telemetry::histogram(
+                        "session.round_s",
+                        crate::telemetry::seconds_edges(),
+                    )
+                    .record(t0.elapsed().as_secs_f64());
+                }
                 cur.fault_aborts += out.aborted;
                 cur.sim_time_s += out.step_time_s;
                 cur.arrival_frac_sum += out.arrivals as f64 / active.len().max(1) as f64;
@@ -736,6 +746,15 @@ impl Session {
                         accuracy: acc,
                         loss,
                     })?;
+                }
+                // Periodic telemetry-snapshot event (opt-in via
+                // `scenario.metrics_every`). The doc is host-clock
+                // derived and rides the observer stream only — it never
+                // touches simulation state, and the deterministic
+                // EventLog ignores it, so replay comparisons hold with
+                // the knob on or off.
+                if metrics_every > 0 && cur.global_step % metrics_every == 0 {
+                    obs.on_metrics(&crate::telemetry::snapshot().to_json())?;
                 }
             }
             // Epoch end rides the same call as the epoch's last round,
@@ -997,6 +1016,7 @@ impl Session {
     /// bitwise-neutral, so a run may checkpoint at (1,1) and resume at
     /// (2,2).
     pub fn snapshot(&self, cur: &RunCursor) -> Result<Json> {
+        let _span = crate::telemetry::span("session.checkpoint_s");
         ensure!(
             self.scenario.replayable,
             "only spec-replayable scenarios can be checkpointed — build from a preset \

@@ -94,6 +94,14 @@ impl RunCursor {
         self.last_accuracy
     }
 
+    /// Host seconds spent driving this cursor so far (accumulated across
+    /// `advance` calls; survives checkpoint/resume as a running total).
+    /// Host-clock derived — diagnostic only, never fed back into the
+    /// simulation.
+    pub fn host_time_s(&self) -> f64 {
+        self.host_time_s
+    }
+
     pub(crate) fn to_json(&self) -> Json {
         Json::obj(vec![
             ("epoch", Json::Num(self.epoch as f64)),

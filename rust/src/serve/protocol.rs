@@ -19,6 +19,12 @@
 //! cannot drift. Stream lines are distinguishable from responses by
 //! their `stream` key; a client multiplexing both on one connection
 //! routes on that.
+//!
+//! The `metrics` method returns the process-wide host-telemetry
+//! snapshot ([`crate::telemetry::snapshot`]), encoded by the same
+//! canonical encoder ([`crate::telemetry::MetricsSnapshot::to_json`])
+//! as the periodic `"type":"metrics"` stream event and the CLI's
+//! `--metrics-out` dump — one snapshot shape across all three exports.
 
 use anyhow::{ensure, Result};
 

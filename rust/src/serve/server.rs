@@ -157,6 +157,13 @@ struct StreamFan {
 
 impl StreamFan {
     fn send(&mut self, doc: Json) {
+        // Fan-out cost is a telemetry histogram: a slow or wedged
+        // subscriber shows up as serve.fanout_s tail latency.
+        let _span = if crate::telemetry::enabled() {
+            crate::telemetry::span("serve.fanout_s")
+        } else {
+            crate::telemetry::Span::noop()
+        };
         let line = stream_line(&self.name, doc);
         let mut dropped = 0usize;
         let mut subs = lock(&self.subs);
@@ -197,6 +204,10 @@ impl RoundObserver for StreamFan {
         self.send(control_doc(ev));
         Ok(())
     }
+    fn on_metrics(&mut self, doc: &Json) -> Result<()> {
+        self.send(doc.clone());
+        Ok(())
+    }
     fn error_count(&self) -> usize {
         self.errors
     }
@@ -216,7 +227,26 @@ fn status_doc(state: &str, session: &Session, cur: &RunCursor, extra: Vec<(&str,
         ("beta_digest", Json::Str(beta_digest(session.beta()))),
         ("reencodes", Json::Num(session.reencode_stats().0 as f64)),
         ("replans", Json::Num(session.replans() as f64)),
+        ("host_time_s", Json::Num(cur.host_time_s())),
     ];
+    // Where the host time went: the top phase timers, process-wide
+    // (diagnostic only — absent with telemetry disabled).
+    if crate::telemetry::enabled() {
+        let top = crate::telemetry::snapshot().top_phases(3);
+        pairs.push((
+            "phases",
+            Json::Arr(
+                top.into_iter()
+                    .map(|(name, secs)| {
+                        Json::obj(vec![
+                            ("phase", Json::Str(name)),
+                            ("seconds", Json::Num(secs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
     pairs.extend(extra);
     Json::obj(pairs)
 }
@@ -339,7 +369,11 @@ fn run_session(
         // 3. One round. Everything the round streams goes through the
         // fan; round errors end the session with an error status.
         match session.advance(&mut cur, &mut fan, 1) {
-            Ok(_) => {}
+            Ok(k) => {
+                if crate::telemetry::enabled() {
+                    crate::telemetry::counter("serve.rounds").add(k as u64);
+                }
+            }
             Err(e) => {
                 let msg = format!("{e:#}");
                 fan.send(Json::obj(vec![
@@ -441,6 +475,27 @@ impl Server {
     }
 }
 
+/// Every method [`dispatch`] understands, in its match order (also the
+/// bound on `serve.rpc.<method>` counter names — an unknown method
+/// counts as `serve.rpc.unknown`, so hostile method strings cannot grow
+/// the registry).
+const METHODS: &[&str] = &[
+    "create", "start", "watch", "status", "list", "checkpoint", "stop", "resume", "fork",
+    "metrics", "shutdown",
+];
+
+/// Telemetry for one RPC: a per-method call counter plus the shared
+/// `serve.rpc_s` latency histogram (recorded when the returned span
+/// drops, i.e. after dispatch finishes).
+fn rpc_span(method: &str) -> crate::telemetry::Span {
+    if !crate::telemetry::enabled() {
+        return crate::telemetry::Span::noop();
+    }
+    let m = if METHODS.contains(&method) { method } else { "unknown" };
+    crate::telemetry::counter(&format!("serve.rpc.{m}")).incr();
+    crate::telemetry::span("serve.rpc_s")
+}
+
 /// Per-connection read loop: parse request lines, dispatch, write one
 /// response line each. The write half is shared (via `Arc<Mutex<..>>`)
 /// with any session streams this connection subscribed to, so responses
@@ -468,7 +523,11 @@ fn handle_conn(stream: TcpStream, ctx: Arc<Ctx>) {
                     Err(e) => err_line(&Json::Null, &format!("{e:#}")),
                     Ok(req) => {
                         let id = req.id.clone();
-                        match dispatch(&req, &write_half, &ctx) {
+                        let result = {
+                            let _span = rpc_span(&req.method);
+                            dispatch(&req, &write_half, &ctx)
+                        };
+                        match result {
                             Ok(result) => ok_line(&id, result),
                             Err(e) => err_line(&id, &format!("{e:#}")),
                         }
@@ -704,6 +763,11 @@ fn dispatch(req: &Request, conn: &Arc<Mutex<TcpStream>>, ctx: &Arc<Ctx>) -> Resu
             register(ctx, name, Origin::Fork { text, set }, true, watcher)?;
             Ok(Json::obj(vec![("name", Json::Str(name.into()))]))
         }
+        // metrics -> the process-wide telemetry snapshot, encoded by the
+        // same canonical encoder as the periodic `"type":"metrics"`
+        // stream event and the CLI's --metrics-out dump. Served even
+        // with telemetry disabled (the snapshot is just empty then).
+        "metrics" => Ok(crate::telemetry::snapshot().to_json()),
         // shutdown: graceful server-wide drain (every running session
         // checkpoints); the response is written before the drain begins.
         "shutdown" => {
@@ -712,7 +776,7 @@ fn dispatch(req: &Request, conn: &Arc<Mutex<TcpStream>>, ctx: &Arc<Ctx>) -> Resu
         }
         other => bail!(
             "unknown method '{other}' (expected create|start|watch|status|list|checkpoint|\
-             stop|resume|fork|shutdown)"
+             stop|resume|fork|metrics|shutdown)"
         ),
     }
 }

@@ -1,0 +1,670 @@
+//! Host-side runtime telemetry: a process-global metrics registry
+//! (counters, gauges, fixed-bucket histograms) plus lightweight phase
+//! timer [`Span`]s, wired through the hot layers (worker pool, trainers,
+//! re-encode paths, session loop, serve RPCs).
+//!
+//! **Observe-only rule.** Telemetry reads host clocks and counts events;
+//! it never feeds back into the simulation — no metric value ever
+//! reaches an rng stream, a delay model, a control decision, or an event
+//! the bitwise contract covers. Enabling or disabling telemetry
+//! therefore leaves every event stream and the final model **bitwise
+//! identical** (regression-gated in `tests/telemetry.rs` across
+//! (threads, shards) on both engines), and its overhead is measured, not
+//! assumed (telemetry-on vs -off round cells in `benches/kernels.rs`).
+//!
+//! **Determinism of the snapshot shape.** Histogram bucket edges are
+//! fixed at registration from deterministic generators
+//! ([`seconds_edges`], [`unit_edges`], [`count_edges`]), and snapshots
+//! carry no timestamps, so two snapshots of the same run stage are
+//! stably comparable: only the recorded values differ, never the schema.
+//!
+//! One encoder, three exports ([`MetricsSnapshot::to_json`] is the
+//! single `{"type":"metrics", ...}` doc builder):
+//!
+//! * the `metrics` RPC on `codedfedl serve` returns a point-in-time
+//!   snapshot;
+//! * sessions with `scenario.metrics_every = N` emit the same doc as a
+//!   periodic stream/file event through
+//!   [`crate::scenario::RoundObserver::on_metrics`] (wire format ==
+//!   file format);
+//! * `codedfedl train`/`scenario --metrics-out <path>` dump the
+//!   end-of-run snapshot to disk.
+//!
+//! The split against [`crate::metrics`] is intentional: `metrics` holds
+//! the *paper-facing* report types (accuracy/sim-time trajectories,
+//! [`crate::metrics::TrainReport`]); this module holds *host-side*
+//! runtime measurements (where wall-clock goes, queue behavior,
+//! realized-vs-assumed delay distributions). The knobs:
+//! `CODEDFEDL_TELEMETRY=off` disables recording at startup;
+//! [`set_enabled`] toggles it at runtime (the bench off-cell).
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{OnceLock, RwLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Stripes per counter: bounds cross-core cache-line bouncing when pool
+/// workers bump the same counter. 8 covers the pool sizes shipped here.
+const STRIPES: usize = 8;
+
+// ---- enable / disable ------------------------------------------------
+
+fn enabled_flag() -> &'static AtomicBool {
+    static FLAG: OnceLock<AtomicBool> = OnceLock::new();
+    FLAG.get_or_init(|| {
+        let off = std::env::var("CODEDFEDL_TELEMETRY")
+            .map(|v| {
+                let v = v.trim().to_ascii_lowercase();
+                v == "off" || v == "0" || v == "false"
+            })
+            .unwrap_or(false);
+        AtomicBool::new(!off)
+    })
+}
+
+/// Whether recording is currently enabled (default: yes, unless
+/// `CODEDFEDL_TELEMETRY=off`). Recording sites check this before taking
+/// clocks or touching atomics, so a disabled process pays one relaxed
+/// load per site.
+pub fn enabled() -> bool {
+    enabled_flag().load(Ordering::Relaxed)
+}
+
+/// Toggle recording at runtime. Observe-only either way: the setting
+/// changes what is *measured*, never what is *computed*.
+pub fn set_enabled(on: bool) {
+    enabled_flag().store(on, Ordering::Relaxed);
+}
+
+// ---- deterministic bucket edge families ------------------------------
+
+/// Power-of-two second edges `1e-6 * 2^i`, i = 0..=27 (1 µs … ~134 s):
+/// the shared time axis for every duration histogram, so phase timings,
+/// RPC latencies and delay distributions are directly comparable.
+pub fn seconds_edges() -> &'static [f64] {
+    static EDGES: OnceLock<Vec<f64>> = OnceLock::new();
+    EDGES.get_or_init(|| (0..=27).map(|i| 1e-6 * f64::powi(2.0, i)).collect())
+}
+
+/// Linear edges over the unit interval, `i / 20` for i = 1..=20: the
+/// axis for fractions (arrival fraction, occupancy).
+pub fn unit_edges() -> &'static [f64] {
+    static EDGES: OnceLock<Vec<f64>> = OnceLock::new();
+    EDGES.get_or_init(|| (1..=20).map(|i| i as f64 / 20.0).collect())
+}
+
+/// Power-of-two count edges `2^i`, i = 0..=24: the axis for sizes and
+/// margins (rows, tasks, attached workers).
+pub fn count_edges() -> &'static [f64] {
+    static EDGES: OnceLock<Vec<f64>> = OnceLock::new();
+    EDGES.get_or_init(|| (0..=24).map(|i| f64::powi(2.0, i)).collect())
+}
+
+// ---- metric primitives -----------------------------------------------
+
+/// A cache-line-padded atomic so counter stripes never share a line.
+#[repr(align(64))]
+struct PaddedU64(AtomicU64);
+
+/// Monotone event counter, striped across [`STRIPES`] cache lines;
+/// reads sum the stripes.
+pub struct Counter {
+    stripes: Vec<PaddedU64>,
+}
+
+fn thread_stripe() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static STRIPE: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    STRIPE.with(|c| {
+        let v = c.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = NEXT.fetch_add(1, Ordering::Relaxed) % STRIPES;
+        c.set(v);
+        v
+    })
+}
+
+impl Counter {
+    fn new() -> Counter {
+        Counter { stripes: (0..STRIPES).map(|_| PaddedU64(AtomicU64::new(0))).collect() }
+    }
+
+    /// Add `n` events (no-op while telemetry is disabled).
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.stripes[thread_stripe()].0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Add one event.
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Current total across stripes.
+    pub fn value(&self) -> u64 {
+        self.stripes.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+
+    fn reset(&self) {
+        for s in &self.stripes {
+            s.0.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as IEEE-754 bits).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    /// Set the gauge (no-op while telemetry is disabled).
+    pub fn set(&self, v: f64) {
+        if enabled() {
+            self.bits.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    fn reset(&self) {
+        self.bits.store(0f64.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Fixed-bucket histogram: `edges.len() + 1` buckets where bucket `i`
+/// counts values `<= edges[i]` (first matching edge) and the last bucket
+/// is the overflow. Edges are fixed at registration and never change, so
+/// snapshots of the same metric always share an axis.
+pub struct Histogram {
+    edges: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(edges: &[f64]) -> Histogram {
+        assert!(
+            edges.windows(2).all(|w| w[0] < w[1]),
+            "histogram edges must be strictly ascending"
+        );
+        Histogram {
+            edges: edges.to_vec(),
+            counts: (0..=edges.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Record one observation (no-op while telemetry is disabled).
+    pub fn record(&self, v: f64) {
+        if !enabled() {
+            return;
+        }
+        let idx = self.edges.partition_point(|&e| e < v);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        // CAS fold for the f64 running sum; contention here is per-round
+        // scale, not per-element.
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded values.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// The registration-time bucket edges.
+    pub fn edges(&self) -> &[f64] {
+        &self.edges
+    }
+
+    fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_bits.store(0f64.to_bits(), Ordering::Relaxed);
+    }
+}
+
+// ---- the process-global registry -------------------------------------
+
+enum Metric {
+    C(&'static Counter),
+    G(&'static Gauge),
+    H(&'static Histogram),
+}
+
+fn registry() -> &'static RwLock<BTreeMap<String, Metric>> {
+    static REG: OnceLock<RwLock<BTreeMap<String, Metric>>> = OnceLock::new();
+    REG.get_or_init(|| RwLock::new(BTreeMap::new()))
+}
+
+/// Look up or register the named counter. Handles are `'static` (leaked
+/// once per name), so hot sites may cache them. Panics if the name is
+/// already registered as a different metric kind — a programming error.
+pub fn counter(name: &str) -> &'static Counter {
+    if let Some(m) = registry().read().unwrap().get(name) {
+        match m {
+            Metric::C(c) => return c,
+            _ => panic!("telemetry metric '{name}' is not a counter"),
+        }
+    }
+    let mut w = registry().write().unwrap();
+    match w
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::C(Box::leak(Box::new(Counter::new()))))
+    {
+        Metric::C(c) => c,
+        _ => panic!("telemetry metric '{name}' is not a counter"),
+    }
+}
+
+/// Look up or register the named gauge (see [`counter`] for semantics).
+pub fn gauge(name: &str) -> &'static Gauge {
+    if let Some(m) = registry().read().unwrap().get(name) {
+        match m {
+            Metric::G(g) => return g,
+            _ => panic!("telemetry metric '{name}' is not a gauge"),
+        }
+    }
+    let mut w = registry().write().unwrap();
+    match w
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::G(Box::leak(Box::new(Gauge::new()))))
+    {
+        Metric::G(g) => g,
+        _ => panic!("telemetry metric '{name}' is not a gauge"),
+    }
+}
+
+/// Look up or register the named histogram. The first registration fixes
+/// the bucket edges; later calls return the existing histogram (edges
+/// are never re-negotiated — determinism of the snapshot shape).
+pub fn histogram(name: &str, edges: &[f64]) -> &'static Histogram {
+    if let Some(m) = registry().read().unwrap().get(name) {
+        match m {
+            Metric::H(h) => return h,
+            _ => panic!("telemetry metric '{name}' is not a histogram"),
+        }
+    }
+    let mut w = registry().write().unwrap();
+    match w
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::H(Box::leak(Box::new(Histogram::new(edges)))))
+    {
+        Metric::H(h) => h,
+        _ => panic!("telemetry metric '{name}' is not a histogram"),
+    }
+}
+
+/// Zero every registered metric (registrations and edges stay). Used by
+/// per-run isolation (`--metrics-out` dumps one run, not the process
+/// history) and tests.
+pub fn reset() {
+    for m in registry().read().unwrap().values() {
+        match m {
+            Metric::C(c) => c.reset(),
+            Metric::G(g) => g.reset(),
+            Metric::H(h) => h.reset(),
+        }
+    }
+}
+
+// ---- phase-timer spans -----------------------------------------------
+
+/// A lightweight phase timer: records elapsed host seconds into a
+/// duration histogram on drop. While telemetry is disabled, constructing
+/// one takes no clock and dropping it records nothing.
+pub struct Span {
+    live: Option<(&'static Histogram, Instant)>,
+}
+
+impl Span {
+    /// A span that records nothing (the disabled arm).
+    pub fn noop() -> Span {
+        Span { live: None }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((h, t0)) = self.live.take() {
+            h.record(t0.elapsed().as_secs_f64());
+        }
+    }
+}
+
+/// Start a phase timer recording into histogram `name` (registered on
+/// the shared [`seconds_edges`] axis).
+pub fn span(name: &str) -> Span {
+    if !enabled() {
+        return Span::noop();
+    }
+    Span { live: Some((histogram(name, seconds_edges()), Instant::now())) }
+}
+
+// ---- snapshots -------------------------------------------------------
+
+/// Point-in-time state of one histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnapshot {
+    pub edges: Vec<f64>,
+    /// Per-bucket counts (`edges.len() + 1`, last is overflow).
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+/// Point-in-time state of the whole registry: the one value every
+/// export path shares.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+/// Capture the registry.
+pub fn snapshot() -> MetricsSnapshot {
+    let mut s = MetricsSnapshot::default();
+    for (name, m) in registry().read().unwrap().iter() {
+        match m {
+            Metric::C(c) => {
+                s.counters.insert(name.clone(), c.value());
+            }
+            Metric::G(g) => {
+                s.gauges.insert(name.clone(), g.value());
+            }
+            Metric::H(h) => {
+                s.hists.insert(
+                    name.clone(),
+                    HistSnapshot {
+                        edges: h.edges.clone(),
+                        counts: h.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+                        count: h.count(),
+                        sum: h.sum(),
+                    },
+                );
+            }
+        }
+    }
+    s
+}
+
+impl MetricsSnapshot {
+    /// Fold `other` into `self`: counters and histogram buckets add
+    /// (same-edge histograms only — a histogram whose edges differ is
+    /// replaced by `other`'s, since summing across axes is meaningless);
+    /// gauges are last-write-wins (`other` wins).
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.hists {
+            match self.hists.get_mut(k) {
+                Some(mine) if mine.edges == h.edges => {
+                    for (a, b) in mine.counts.iter_mut().zip(&h.counts) {
+                        *a += b;
+                    }
+                    mine.count += h.count;
+                    mine.sum += h.sum;
+                }
+                _ => {
+                    self.hists.insert(k.clone(), h.clone());
+                }
+            }
+        }
+    }
+
+    /// The canonical `{"type":"metrics", ...}` document — the single
+    /// encoder behind the serve `metrics` RPC, the periodic stream/file
+    /// metrics event, and the `--metrics-out` dump (wire format == file
+    /// format). No timestamps: snapshots of the same stage are stably
+    /// comparable.
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect(),
+        );
+        let gauges =
+            Json::Obj(self.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect());
+        let hists = Json::Obj(
+            self.hists
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("edges", Json::arr_f64(&h.edges)),
+                            (
+                                "counts",
+                                Json::Arr(h.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+                            ),
+                            ("count", Json::Num(h.count as f64)),
+                            ("sum", Json::Num(h.sum)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("type", Json::Str("metrics".into())),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", hists),
+        ])
+    }
+
+    /// The `k` phase histograms (`phase.*`) with the largest cumulative
+    /// host seconds, as `(phase name, total seconds)` descending — the
+    /// done-line / status-doc host-time breakdown.
+    pub fn top_phases(&self, k: usize) -> Vec<(String, f64)> {
+        let mut v: Vec<(String, f64)> = self
+            .hists
+            .iter()
+            .filter(|(name, _)| name.starts_with("phase."))
+            .map(|(name, h)| (name["phase.".len()..].to_string(), h.sum))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        v.truncate(k);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// Tests that toggle the global enabled flag serialize on this.
+    fn flag_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn edge_families_are_deterministic_and_ascending() {
+        for edges in [seconds_edges(), unit_edges(), count_edges()] {
+            assert!(edges.windows(2).all(|w| w[0] < w[1]));
+        }
+        assert_eq!(seconds_edges()[0], 1e-6);
+        assert_eq!(seconds_edges().len(), 28);
+        assert_eq!(seconds_edges()[27], 1e-6 * f64::powi(2.0, 27));
+        assert_eq!(unit_edges().first(), Some(&0.05));
+        assert_eq!(unit_edges().last(), Some(&1.0));
+        assert_eq!(count_edges()[0], 1.0);
+        assert_eq!(count_edges()[24], (1u64 << 24) as f64);
+        // Two calls return the same (cached) axis.
+        assert_eq!(seconds_edges().as_ptr(), seconds_edges().as_ptr());
+    }
+
+    #[test]
+    fn histogram_buckets_values_at_their_first_covering_edge() {
+        let _g = flag_lock();
+        set_enabled(true);
+        let h = Histogram::new(&[1.0, 2.0, 4.0]);
+        for (v, want) in [(0.5, 0), (1.0, 0), (1.5, 1), (2.0, 1), (3.9, 2), (4.0, 2), (5.0, 3)] {
+            let before = h.counts[want].load(Ordering::Relaxed);
+            h.record(v);
+            assert_eq!(h.counts[want].load(Ordering::Relaxed), before + 1, "value {v}");
+        }
+        assert_eq!(h.count(), 7);
+        assert!((h.sum() - (0.5 + 1.0 + 1.5 + 2.0 + 3.9 + 4.0 + 5.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_sum_across_stripes_and_threads() {
+        let _g = flag_lock();
+        set_enabled(true);
+        let c = counter("test.stripes");
+        let before = c.value();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.incr();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.value() - before, 4000);
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        let _g = flag_lock();
+        set_enabled(false);
+        let c = counter("test.disabled");
+        let h = histogram("test.disabled_h", seconds_edges());
+        let g = gauge("test.disabled_g");
+        let (c0, h0, g0) = (c.value(), h.count(), g.value());
+        c.add(5);
+        h.record(1.0);
+        g.set(9.0);
+        drop(span("test.disabled_h"));
+        assert_eq!(c.value(), c0);
+        assert_eq!(h.count(), h0);
+        assert_eq!(g.value(), g0);
+        set_enabled(true);
+    }
+
+    #[test]
+    fn span_records_elapsed_seconds() {
+        let _g = flag_lock();
+        set_enabled(true);
+        let h = histogram("phase.test_span", seconds_edges());
+        let before = h.count();
+        drop(span("phase.test_span"));
+        assert_eq!(h.count(), before + 1);
+        assert!(h.sum() >= 0.0);
+    }
+
+    #[test]
+    fn snapshot_merge_sums_counts_and_keeps_latest_gauge() {
+        let mut a = MetricsSnapshot::default();
+        a.counters.insert("c".into(), 3);
+        a.gauges.insert("g".into(), 1.0);
+        a.hists.insert(
+            "h".into(),
+            HistSnapshot { edges: vec![1.0, 2.0], counts: vec![1, 0, 2], count: 3, sum: 6.5 },
+        );
+        let mut b = MetricsSnapshot::default();
+        b.counters.insert("c".into(), 4);
+        b.counters.insert("d".into(), 1);
+        b.gauges.insert("g".into(), 2.5);
+        b.hists.insert(
+            "h".into(),
+            HistSnapshot { edges: vec![1.0, 2.0], counts: vec![0, 5, 1], count: 6, sum: 9.0 },
+        );
+        a.merge(&b);
+        assert_eq!(a.counters["c"], 7);
+        assert_eq!(a.counters["d"], 1);
+        assert_eq!(a.gauges["g"], 2.5);
+        assert_eq!(a.hists["h"].counts, vec![1, 5, 3]);
+        assert_eq!(a.hists["h"].count, 9);
+        assert!((a.hists["h"].sum - 15.5).abs() < 1e-12);
+        // Mismatched axes are replaced, never summed.
+        let mut c = MetricsSnapshot::default();
+        c.hists.insert(
+            "h".into(),
+            HistSnapshot { edges: vec![10.0], counts: vec![1, 1], count: 2, sum: 11.0 },
+        );
+        a.merge(&c);
+        assert_eq!(a.hists["h"].edges, vec![10.0]);
+        assert_eq!(a.hists["h"].count, 2);
+    }
+
+    #[test]
+    fn snapshot_doc_is_the_canonical_metrics_event() {
+        let _g = flag_lock();
+        set_enabled(true);
+        counter("test.doc").incr();
+        gauge("test.doc_g").set(0.5);
+        histogram("test.doc_h", &[1.0]).record(0.25);
+        let doc = snapshot().to_json();
+        assert_eq!(doc.get("type").unwrap().as_str().unwrap(), "metrics");
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert!(back.get("counters").unwrap().get("test.doc").is_some());
+        assert!(back.get("gauges").unwrap().get("test.doc_g").is_some());
+        let h = back.get("histograms").unwrap().get("test.doc_h").unwrap();
+        assert_eq!(h.req("edges").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(h.req("counts").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn top_phases_ranks_by_cumulative_seconds() {
+        let mut s = MetricsSnapshot::default();
+        for (name, sum) in [("phase.a", 1.0), ("phase.b", 5.0), ("phase.c", 3.0)] {
+            s.hists.insert(
+                name.into(),
+                HistSnapshot { edges: vec![1.0], counts: vec![1, 0], count: 1, sum },
+            );
+        }
+        s.hists.insert(
+            "other.h".into(),
+            HistSnapshot { edges: vec![1.0], counts: vec![1, 0], count: 1, sum: 99.0 },
+        );
+        let top = s.top_phases(2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].0, "b");
+        assert_eq!(top[1].0, "c");
+    }
+}

@@ -6,19 +6,23 @@
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
-/// Log severity, ordered.
+/// Log severity, ordered. `Off` is a *setting*, not a message level:
+/// `set_level(Level::Off)` (or `CODEDFEDL_LOG=off`) silences everything,
+/// including the `ConsoleObserver` round lines and the serve banner.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
-    Error = 0,
-    Warn = 1,
-    Info = 2,
-    Debug = 3,
-    Trace = 4,
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
 impl Level {
     pub fn parse(s: &str) -> Option<Level> {
         match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(Level::Off),
             "error" => Some(Level::Error),
             "warn" => Some(Level::Warn),
             "info" => Some(Level::Info),
@@ -30,6 +34,7 @@ impl Level {
 
     fn tag(self) -> &'static str {
         match self {
+            Level::Off => "OFF  ",
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
@@ -58,9 +63,10 @@ pub fn init_from_env() {
     let _ = START.get_or_init(Instant::now);
 }
 
-/// Whether `level` is currently enabled.
+/// Whether `level` is currently enabled. `Level::Off` is never enabled:
+/// it exists only as the all-silent setting.
 pub fn enabled(level: Level) -> bool {
-    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+    level != Level::Off && level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
 }
 
 /// Log one line (use the macros instead).
@@ -109,6 +115,7 @@ mod tests {
     fn level_parsing() {
         assert_eq!(Level::parse("info"), Some(Level::Info));
         assert_eq!(Level::parse("TRACE"), Some(Level::Trace));
+        assert_eq!(Level::parse("off"), Some(Level::Off));
         assert_eq!(Level::parse("nope"), None);
     }
 
@@ -118,6 +125,9 @@ mod tests {
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error), "off silences everything");
+        assert!(!enabled(Level::Off), "Off is a setting, not a message level");
         set_level(Level::Info); // restore default for other tests
     }
 }

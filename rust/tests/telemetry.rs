@@ -1,0 +1,220 @@
+//! Telemetry neutrality and export gates.
+//!
+//! * toggling telemetry recording on/off leaves the deterministic event
+//!   stream and the final model **bitwise identical**, on both the flat
+//!   and the hierarchical engine, at every `(threads, shards)` in
+//!   {1,2}² — the observe-only rule, regression-gated;
+//! * `scenario.metrics_every = N` emits canonical `"type": "metrics"`
+//!   docs through `RoundObserver::on_metrics` without perturbing the
+//!   event stream or the model;
+//! * histogram bucket edges are fixed at registration and partition
+//!   values at their first covering edge (public-API view of the
+//!   snapshot shape);
+//! * snapshot merge sums counters and same-axis histogram buckets,
+//!   last-write-wins gauges, and replaces mismatched axes.
+
+use std::sync::{Mutex, MutexGuard};
+
+use anyhow::Result;
+use codedfedl::config::Scheme;
+use codedfedl::mathx::linalg::Matrix;
+use codedfedl::mathx::par::Parallelism;
+use codedfedl::metrics::EvalRecord;
+use codedfedl::runtime::backend::NativeBackend;
+use codedfedl::scenario::{
+    ChurnEvent, ControlEvent, EpochEvent, EventLog, RoundEvent, RoundObserver, ScenarioBuilder,
+};
+use codedfedl::telemetry::{self, HistSnapshot, MetricsSnapshot};
+use codedfedl::util::json::Json;
+
+/// Tests that toggle the process-global enabled flag serialize on this
+/// (the cargo test harness runs tests of one binary concurrently).
+fn flag_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// 16-client tiny coded scenario, small enough to run the whole
+/// parallelism grid twice per engine.
+fn builder(hier: bool, par: Parallelism) -> ScenarioBuilder {
+    let mut b = ScenarioBuilder::from_preset("tiny")
+        .unwrap()
+        .scheme(Scheme::Coded)
+        .epochs(2)
+        .population(16)
+        .steps_per_epoch(2)
+        .parallelism(par);
+    if hier {
+        b = b.hierarchical(true);
+    }
+    b.set("backend", "native").unwrap();
+    b
+}
+
+fn run(b: ScenarioBuilder) -> (Matrix, Vec<String>) {
+    let mut session = b.build_with_backend(Box::new(NativeBackend)).unwrap();
+    let mut log = EventLog::new();
+    session.run_observed(&mut log).unwrap();
+    (session.beta().clone(), log.lines)
+}
+
+fn bits(m: &Matrix) -> Vec<u32> {
+    m.data().iter().map(|f| f.to_bits()).collect()
+}
+
+#[test]
+fn telemetry_toggle_is_bitwise_neutral_on_both_engines() {
+    let _g = flag_lock();
+    let was = telemetry::enabled();
+    for hier in [false, true] {
+        // Reference: telemetry off, sequential.
+        telemetry::set_enabled(false);
+        let (beta_off, lines_off) = run(builder(hier, Parallelism::new(1, 1)));
+        // Telemetry on must reproduce it bitwise at every grid point.
+        telemetry::set_enabled(true);
+        for (threads, shards) in [(1, 1), (2, 1), (1, 2), (2, 2)] {
+            let (beta_on, lines_on) = run(builder(hier, Parallelism::new(threads, shards)));
+            let tag = format!("hier={hier} threads={threads} shards={shards}");
+            assert_eq!(
+                bits(&beta_on),
+                bits(&beta_off),
+                "{tag}: telemetry perturbed the final model"
+            );
+            assert_eq!(lines_on, lines_off, "{tag}: telemetry perturbed the event stream");
+        }
+    }
+    // The gate must not be vacuous: the enabled runs actually recorded.
+    let snap = telemetry::snapshot();
+    assert!(
+        snap.hists
+            .iter()
+            .any(|(name, h)| name.starts_with("phase.") && h.count > 0),
+        "telemetry-on runs recorded no phase timings"
+    );
+    telemetry::set_enabled(was);
+}
+
+/// Forwards events to an [`EventLog`] and collects metrics docs on the
+/// side, so one run yields both the deterministic stream and the
+/// telemetry emissions.
+#[derive(Default)]
+struct MetricsTap {
+    log: EventLog,
+    docs: Vec<Json>,
+}
+
+impl RoundObserver for MetricsTap {
+    fn on_round(&mut self, ev: &RoundEvent) -> Result<()> {
+        self.log.on_round(ev)
+    }
+    fn on_eval(&mut self, ev: &EvalRecord) -> Result<()> {
+        self.log.on_eval(ev)
+    }
+    fn on_epoch(&mut self, ev: &EpochEvent) -> Result<()> {
+        self.log.on_epoch(ev)
+    }
+    fn on_churn(&mut self, ev: &ChurnEvent) -> Result<()> {
+        self.log.on_churn(ev)
+    }
+    fn on_control(&mut self, ev: &ControlEvent) -> Result<()> {
+        self.log.on_control(ev)
+    }
+    fn on_metrics(&mut self, doc: &Json) -> Result<()> {
+        self.docs.push(doc.clone());
+        Ok(())
+    }
+}
+
+#[test]
+fn metrics_every_emits_canonical_docs_without_perturbing_the_stream() {
+    let _g = flag_lock();
+    let was = telemetry::enabled();
+    telemetry::set_enabled(true);
+    // Reference run with the periodic emission off.
+    let (beta_plain, lines_plain) = run(builder(false, Parallelism::new(1, 1)));
+    // Same scenario, emitting every 2 global steps (4 steps total).
+    let mut session = builder(false, Parallelism::new(1, 1))
+        .metrics_every(2)
+        .build_with_backend(Box::new(NativeBackend))
+        .unwrap();
+    let mut tap = MetricsTap::default();
+    session.run_observed(&mut tap).unwrap();
+    assert!(!tap.docs.is_empty(), "metrics_every=2 never emitted a metrics doc");
+    for doc in &tap.docs {
+        assert_eq!(doc.req("type").unwrap().as_str().unwrap(), "metrics");
+        for key in ["counters", "gauges", "histograms"] {
+            assert!(doc.get(key).is_some(), "metrics doc missing '{key}'");
+        }
+        // Round-trips through the canonical sorted-key emitter.
+        assert_eq!(Json::parse(&doc.to_string()).unwrap().to_string(), doc.to_string());
+    }
+    assert_eq!(
+        bits(session.beta()),
+        bits(&beta_plain),
+        "periodic metrics emission perturbed the final model"
+    );
+    assert_eq!(
+        tap.log.lines, lines_plain,
+        "metrics docs leaked into the deterministic event stream"
+    );
+    telemetry::set_enabled(was);
+}
+
+#[test]
+fn histogram_bucket_edges_partition_at_first_covering_edge() {
+    let _g = flag_lock();
+    let was = telemetry::enabled();
+    telemetry::set_enabled(true);
+    let name = "test.it_bucket_edges";
+    let h = telemetry::histogram(name, &[1.0, 2.0, 4.0]);
+    for v in [0.5, 1.0, 1.5, 2.0, 3.9, 4.0, 5.0] {
+        h.record(v);
+    }
+    // Registration fixed the axis: a later caller with different edges
+    // gets the existing histogram, never a re-negotiated one.
+    let again = telemetry::histogram(name, &[9.0]);
+    assert_eq!(again.edges(), &[1.0, 2.0, 4.0]);
+    let snap = telemetry::snapshot();
+    let hs = &snap.hists[name];
+    assert_eq!(hs.edges, vec![1.0, 2.0, 4.0]);
+    // Bucket i counts values <= edges[i]; the last bucket is overflow.
+    assert_eq!(hs.counts, vec![2, 2, 2, 1]);
+    assert_eq!(hs.count, 7);
+    assert!((hs.sum - 17.9).abs() < 1e-9);
+    telemetry::set_enabled(was);
+}
+
+#[test]
+fn snapshot_merge_adds_counts_and_replaces_mismatched_axes() {
+    let mut a = MetricsSnapshot::default();
+    a.counters.insert("c".into(), 3);
+    a.gauges.insert("g".into(), 1.0);
+    a.hists.insert(
+        "h".into(),
+        HistSnapshot { edges: vec![1.0, 2.0], counts: vec![1, 0, 2], count: 3, sum: 6.5 },
+    );
+    let mut b = MetricsSnapshot::default();
+    b.counters.insert("c".into(), 4);
+    b.counters.insert("d".into(), 1);
+    b.gauges.insert("g".into(), 2.5);
+    b.hists.insert(
+        "h".into(),
+        HistSnapshot { edges: vec![1.0, 2.0], counts: vec![0, 5, 1], count: 6, sum: 9.0 },
+    );
+    a.merge(&b);
+    assert_eq!(a.counters["c"], 7);
+    assert_eq!(a.counters["d"], 1);
+    assert_eq!(a.gauges["g"], 2.5);
+    assert_eq!(a.hists["h"].counts, vec![1, 5, 3]);
+    assert_eq!(a.hists["h"].count, 9);
+    assert!((a.hists["h"].sum - 15.5).abs() < 1e-12);
+    // A histogram whose axis differs is replaced, never summed.
+    let mut c = MetricsSnapshot::default();
+    c.hists.insert(
+        "h".into(),
+        HistSnapshot { edges: vec![10.0], counts: vec![1, 1], count: 2, sum: 11.0 },
+    );
+    a.merge(&c);
+    assert_eq!(a.hists["h"].edges, vec![10.0]);
+    assert_eq!(a.hists["h"].count, 2);
+}
